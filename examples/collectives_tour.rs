@@ -1,0 +1,53 @@
+//! Tour of the communication collectives (paper §VI-B): compiles and
+//! simulates chain, tree and two-phase reductions plus the multicast
+//! broadcast at several message sizes, printing the latency/bandwidth
+//! tradeoff the paper's Fig. 4 plots — tree wins small messages, the
+//! pipelined schemes win large ones.
+//!
+//!     cargo run --release --example collectives_tour
+
+use spada::bench::Table;
+use spada::harness::common::{run_broadcast, run_reduce};
+use spada::machine::MachineConfig;
+use spada::passes::Options;
+
+fn main() -> anyhow::Result<()> {
+    let g = 16i64;
+    let cfg = MachineConfig::with_grid(g, g);
+    println!("reductions on a {g}x{g} grid ({} PEs):\n", g * g);
+
+    let mut table = Table::new(&["K (f32)", "tree[cyc]", "two-phase[cyc]", "winner"]);
+    for k in [1i64, 8, 64, 512, 4096] {
+        let (tree, _) = run_reduce("tree_reduce", g, g, k, &Options::default())?;
+        let (tp, _) = run_reduce("two_phase_reduce", g, g, k, &Options::default())?;
+        let (t, p) = (tree.report.cycles, tp.report.cycles);
+        table.row(&[
+            k.to_string(),
+            t.to_string(),
+            p.to_string(),
+            if t < p { "tree".into() } else { "two-phase".to_string() },
+        ]);
+    }
+    table.print();
+
+    println!("\n1-D collectives on a {g}-PE row:");
+    let mut t2 = Table::new(&["K (f32)", "chain[cyc]", "broadcast[cyc]", "bcast flows"]);
+    for k in [16i64, 256, 2048] {
+        let (chain, _) = run_reduce("chain_reduce", g, 1, k, &Options::default())?;
+        let bc = run_broadcast(g, k, &Options::default())?;
+        t2.row(&[
+            k.to_string(),
+            chain.report.cycles.to_string(),
+            bc.report.cycles.to_string(),
+            bc.report.metrics.flows.to_string(),
+        ]);
+    }
+    t2.print();
+
+    println!(
+        "\n(1 cycle = {:.3} ns at 0.85 GHz; broadcast is a single multicast circuit, so \
+         its flow count stays 1 regardless of the fan-out)",
+        1.0 / cfg.freq_ghz
+    );
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! Quickstart: compile a SpaDA kernel from source text and simulate it.
+//!
+//! Shows the whole public API in ~60 lines: parse → instantiate →
+//! compile (checkerboard routing, task graph, vectorization) → load into
+//! the WSE-2 simulator → run → read results + cycle counts.
+//!
+//!     cargo run --release --example quickstart
+
+use spada::csl;
+use spada::machine::{MachineConfig, Simulator};
+use spada::passes::Options;
+use spada::sem::instantiate;
+use spada::spada::parse_kernel;
+
+fn main() -> anyhow::Result<()> {
+    // A 4-PE pipeline that doubles a vector and forwards it east.
+    let src = r#"
+kernel @relay<K, N>(stream<f32>[1] readonly v_in, stream<f32>[1] writeonly v_out) {
+  place i16 i, i16 j in [0:N, 0] { f32[K] buf }
+  phase {
+    compute i32 i, i32 j in [0, 0] { await receive(buf, v_in[0]) }
+  }
+  phase {
+    dataflow i32 i, i32 j in [0:N, 0] {
+      stream<f32> fwd = relative_stream(1, 0)
+    }
+    // Block order defines per-PE statement order: middle PEs must
+    // receive before they double and forward.
+    compute i32 i, i32 j in [1:N, 0] {
+      await receive(buf, fwd)
+    }
+    compute i32 i, i32 j in [0:N-1, 0] {
+      map i32 k in [0:K] { buf[k] = 2.0 * buf[k] }
+      await send(buf, fwd)
+    }
+  }
+  phase {
+    compute i32 i, i32 j in [N-1, 0] {
+      map i32 k in [0:K] { buf[k] = 2.0 * buf[k] }
+      await send(buf, v_out[0])
+    }
+  }
+}
+"#;
+    // Hmm: each hop doubles before sending, so PE N-1 receives the value
+    // doubled N-1 times and doubles once more: out = in * 2^N.
+    let (k, n) = (16i64, 4i64);
+    let kernel = parse_kernel(src)?;
+    let prog = instantiate(&kernel, &[("K".to_string(), k), ("N".to_string(), n)].into())?;
+    let cfg = MachineConfig::with_grid(n, 1);
+    let compiled = csl::compile(&prog, &cfg, &Options::default())?;
+    println!(
+        "compiled: {} PE classes, {} colors, {} logical tasks, {} lines of CSL",
+        compiled.stats.classes,
+        compiled.stats.colors_used,
+        compiled.stats.logical_tasks,
+        compiled.csl_loc()
+    );
+
+    let mut sim = Simulator::new(cfg.clone(), compiled.machine)?;
+    let input: Vec<f32> = (0..k).map(|i| i as f32).collect();
+    sim.set_input("v_in", &input)?;
+    let report = sim.run()?;
+    let out = sim.get_output("v_out")?;
+
+    let scale = 2f32.powi(n as i32);
+    for (i, (o, inp)) in out.iter().zip(&input).enumerate() {
+        assert_eq!(*o, inp * scale, "element {i}");
+    }
+    println!(
+        "relay over {n} PEs: out = in * 2^{n} verified; {} cycles = {:.2} us at 0.85 GHz",
+        report.cycles,
+        report.runtime_us(&cfg)
+    );
+    Ok(())
+}

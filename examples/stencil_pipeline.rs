@@ -1,0 +1,77 @@
+//! End-to-end driver (DESIGN.md §E2E): the full four-stage pipeline of
+//! the paper on a real small workload —
+//!
+//!   GT4Py-style stencil → Stencil IR → SpaDA → CSL/machine program →
+//!   WSE-2 simulation → gather → **PJRT oracle check** (the Layer-2 JAX
+//!   model wrapping the Layer-1 Pallas kernel, loaded from
+//!   `artifacts/laplacian_16x16x8.hlo.txt`).
+//!
+//! Reports the paper's headline metric (stencil FLOP/s + wafer-scale
+//! estimate). Requires `make artifacts` first.
+//!
+//!     cargo run --release --example stencil_pipeline
+
+use spada::frontend::{lower_stencil, parse_stencil, stencil_source};
+use spada::machine::{MachineConfig, Simulator};
+use spada::passes::Options;
+use spada::runtime::{max_rel_err, Input, Runtime};
+use spada::sem::instantiate;
+use spada::util::SplitMix64;
+use spada::{csl, spada as lang};
+
+fn main() -> anyhow::Result<()> {
+    let (nx, ny, k) = (16i64, 16i64, 8i64);
+
+    // 1. Frontend: GT4Py-style source → Stencil IR.
+    let ir = parse_stencil(stencil_source("laplacian").unwrap()).map_err(anyhow::Error::msg)?;
+    println!("--- Stencil IR ---\n{ir}");
+
+    // 2. Stencil IR → SpaDA (placement / dataflow / compute passes).
+    let sk = lower_stencil(&ir).map_err(anyhow::Error::msg)?;
+    let spada_loc = lang::pretty::count_loc(&sk.kernel);
+
+    // 3. SpaDA → CSL + machine program.
+    let binds = [("K".to_string(), k), ("NX".to_string(), nx), ("NY".to_string(), ny)].into();
+    let prog = instantiate(&sk.kernel, &binds)?;
+    let cfg = MachineConfig::with_grid(nx, ny);
+    let compiled = csl::compile(&prog, &cfg, &Options::default())?;
+    println!(
+        "SpaDA {spada_loc} LoC → CSL {} LoC; {} classes, {} colors, streams split {}",
+        compiled.csl_loc(),
+        compiled.stats.classes,
+        compiled.stats.colors_used,
+        compiled.stats.streams_split,
+    );
+
+    // 4. Simulate on the {nx}x{ny} fabric.
+    let mut sim = Simulator::new(cfg.clone(), compiled.machine)?;
+    let mut rng = SplitMix64::new(42);
+    let input: Vec<f32> = (0..nx * ny * k).map(|_| rng.next_f32()).collect();
+    sim.set_input("in_field_ain", &input)?;
+    let report = sim.run()?;
+    let out = sim.get_output("out_field_aout")?;
+
+    // 5. Oracle: PJRT-executed JAX/Pallas laplacian.
+    let rt = Runtime::new(Runtime::default_dir())?;
+    let oracle = rt.load(&format!("laplacian_{nx}x{ny}x{k}"))?;
+    let want = &oracle.run(&[Input::new(&input, &[nx, ny, k])])?[0];
+    let err = max_rel_err(&out, want);
+    println!("oracle check: max rel err {err:.2e} over {} elements", out.len());
+    assert!(err < 1e-4, "simulation diverges from the JAX/Pallas oracle");
+
+    // 6. Headline metric.
+    let rate = report.flops_per_sec(&cfg);
+    let wafer = rate * (750.0 * 994.0) / ((nx * ny) as f64);
+    println!(
+        "laplacian {nx}x{ny}x{k}: {} cycles ({:.2} us), {:.2} Gflop/s simulated, \
+         ~{:.1} Tflop/s extrapolated to the 750x994 wafer \
+         (paper: 10s-100s of Tflop/s for horizontal stencils)",
+        report.cycles,
+        report.runtime_us(&cfg),
+        rate / 1e9,
+        wafer / 1e12
+    );
+    println!("PE utilization {:.1}%, {} fabric flows, {} wavelets",
+        100.0 * report.utilization(), report.metrics.flows, report.metrics.wavelets);
+    Ok(())
+}

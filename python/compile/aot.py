@@ -1,0 +1,101 @@
+"""AOT lowering: JAX models → HLO text artifacts for the Rust runtime.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla
+crate's xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Shapes are fixed here and mirrored by the Rust examples/harness — the
+artifact name encodes them (e.g. laplacian_16x16x8.hlo.txt).
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Shapes shared with the Rust examples (examples/*.rs read these names).
+STENCIL_SHAPE = (16, 16, 8)  # (NX, NY, K)
+VERTICAL_SHAPE = (8, 8, 16)
+GEMV_SHAPE = (64, 48)  # (M, N)
+REDUCE_SHAPE = (16, 64)  # (P, K)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def artifacts():
+    nx, ny, k = STENCIL_SHAPE
+    vx, vy, vk = VERTICAL_SHAPE
+    m, n = GEMV_SHAPE
+    p, rk = REDUCE_SHAPE
+    return {
+        f"laplacian_{nx}x{ny}x{k}": (model.laplacian_model, [f32(nx, ny, k)]),
+        f"vertical_{vx}x{vy}x{vk}": (model.vertical_model, [f32(vx, vy, vk)]),
+        f"uvbke_{nx}x{ny}x{k}": (model.uvbke_model, [f32(nx, ny, k), f32(nx, ny, k)]),
+        f"gemv_{m}x{n}": (
+            model.gemv_model,
+            [f32(m, n), f32(n), f32(m), f32(), f32()],
+        ),
+        f"reduce_{p}x{rk}": (model.reduce_model, [f32(p, rk)]),
+        f"broadcast_{p}x{rk}": (
+            functools.partial(model.broadcast_model, p=p),
+            [f32(rk)],
+        ),
+    }
+
+
+def emit_gt4py_stencils(out_dir):
+    """Demonstrate the Python front half of the paper's pipeline: author
+    stencils in the GT4Py-style embedded DSL, emit the textual stencil
+    DSL the Rust Stencil-IR frontend consumes
+    (`spada compile-stencil <file.gt>`)."""
+    import sys
+
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from gt4py_like import stencil, Field3D, computation, interval, PARALLEL
+
+    @stencil
+    def laplace(in_field: Field3D, out_field: Field3D):
+        with computation(PARALLEL), interval(...):
+            out_field = -4.0 * in_field[0, 0, 0] + (
+                in_field[1, 0, 0] + in_field[-1, 0, 0] +
+                in_field[0, 1, 0] + in_field[0, -1, 0])
+
+    sdir = os.path.join(out_dir, "stencils")
+    os.makedirs(sdir, exist_ok=True)
+    path = laplace.save(os.path.join(sdir, "laplace_from_python.gt"))
+    print(f"wrote {path} (GT4Py {laplace.py_loc} LoC -> stencil DSL)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    for name, (fn, specs) in artifacts().items():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+    emit_gt4py_stencils(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Layer-1 Pallas kernels for GEMV and the reduction collective.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the 1.5-D A-stationary
+GEMV of the paper keeps matrix blocks resident in PE SRAM and streams
+x/partials over the fabric; here A tiles stay VMEM-resident
+(MXU-friendly multiples of 8x128 where shapes allow), the grid runs over
+(row-tile, col-tile), and the col-tile loop accumulates into the output
+block — the same broadcast-multiply-reduce structure.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gemv_kernel(a_ref, x_ref, o_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += a_ref[...] @ x_ref[...]
+
+
+def gemv_pallas(a, x, bm=None, bn=None):
+    """Blocked y = A @ x over tiles of (bm, bn)."""
+    m, n = a.shape
+    bm = bm or min(m, 128)
+    bn = bn or min(n, 128)
+    assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
+    return pl.pallas_call(
+        _gemv_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
+        interpret=True,
+    )(a, x)
+
+
+def _reduce_kernel(x_ref, o_ref):
+    p = pl.program_id(0)
+
+    @pl.when(p == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += x_ref[...][0]
+
+
+def reduce_pallas(vectors):
+    """Elementwise sum of P K-vectors, accumulated block by block —
+    the chain-reduce dataflow with the fabric hop replaced by grid-step
+    revisiting of the output block."""
+    p, k = vectors.shape
+    return pl.pallas_call(
+        _reduce_kernel,
+        grid=(p,),
+        in_specs=[pl.BlockSpec((1, k), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((k,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((k,), jnp.float32),
+        interpret=True,
+    )(vectors)

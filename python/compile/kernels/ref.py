@@ -1,0 +1,64 @@
+"""Pure-jnp reference oracles for every evaluated kernel.
+
+These define the ground-truth numerics the Pallas kernels (and, via the
+PJRT bridge, the WSE-2 simulator outputs) are checked against.
+
+Array conventions match the Rust harness:
+- stencil fields are (NX, NY, K) -- PE (x, y) owns column [x, y, :];
+- GEMV uses a dense (M, N) matrix;
+- reductions take (P, K): P per-PE vectors of length K.
+"""
+
+import jax.numpy as jnp
+
+
+def laplacian(in_field):
+    """2-D 5-point Laplacian on the horizontal plane, zero boundary.
+
+    out = -4*in + in[+1,0] + in[-1,0] + in[0,+1] + in[0,-1] (interior).
+    """
+    out = (
+        -4.0 * in_field[1:-1, 1:-1, :]
+        + in_field[2:, 1:-1, :]
+        + in_field[:-2, 1:-1, :]
+        + in_field[1:-1, 2:, :]
+        + in_field[1:-1, :-2, :]
+    )
+    return jnp.pad(out, ((1, 1), (1, 1), (0, 0)))
+
+
+def vertical(in_field):
+    """The paper's vertical difference stencil.
+
+    Region 1 (PARALLEL, interval(0, -1)): out[k] = in[k+1] - in[k]
+    Region 2 (FORWARD, interval(1, 0)):  out[k] = out[k-1] + in[k]
+    """
+    out = jnp.zeros_like(in_field)
+    out = out.at[:, :, :-1].set(in_field[:, :, 1:] - in_field[:, :, :-1])
+    # Sequential prefix along k: out[k] = out[0] + cumsum(in[1..k]).
+    csum = jnp.cumsum(in_field[:, :, 1:], axis=2)
+    out = out.at[:, :, 1:].set(out[:, :, :1] + csum)
+    return out
+
+
+def uvbke(u, v):
+    """COSMO UVBKE kinetic-energy term (interior at x>=1, y>=1)."""
+    ua = u[1:, 1:, :] + u[:-1, 1:, :]
+    va = v[1:, 1:, :] + v[1:, :-1, :]
+    out = 0.125 * (ua * ua + va * va)
+    return jnp.pad(out, ((1, 0), (1, 0), (0, 0)))
+
+
+def gemv(a, x, y, alpha, beta):
+    """y_out = alpha * A @ x + beta * y."""
+    return alpha * (a @ x) + beta * y
+
+
+def reduce_sum(vectors):
+    """Elementwise sum of P vectors: (P, K) -> (K,)."""
+    return jnp.sum(vectors, axis=0)
+
+
+def broadcast(vector, p):
+    """Replicate a K-vector to all P PEs: (K,) -> (P, K)."""
+    return jnp.broadcast_to(vector, (p, vector.shape[0]))

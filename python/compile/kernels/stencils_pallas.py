@@ -1,0 +1,87 @@
+"""Layer-1 Pallas stencil kernels (interpret=True for CPU validation).
+
+TPU mapping of the paper's WSE insight (DESIGN.md §Hardware-Adaptation):
+the WSE distributes an (NX, NY) plane over PEs with 48 KB SRAM each and
+streams halos over the fabric; on TPU the same dataflow becomes VMEM
+blocking — one vertical level's full horizontal plane is a block
+(746x990 f32 = 2.95 MB, comfortably VMEM-resident), the grid runs over
+the K independent levels, and halo accesses are in-block shifts.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _laplacian_kernel(in_ref, out_ref):
+    x = in_ref[...][:, :, 0]
+    core = (
+        -4.0 * x[1:-1, 1:-1]
+        + x[2:, 1:-1]
+        + x[:-2, 1:-1]
+        + x[1:-1, 2:]
+        + x[1:-1, :-2]
+    )
+    out_ref[...] = jnp.pad(core, ((1, 1), (1, 1)))[:, :, None]
+
+
+def laplacian_pallas(in_field):
+    """2-D Laplacian over an (NX, NY, K) field; grid over K levels."""
+    nx, ny, k = in_field.shape
+    return pl.pallas_call(
+        _laplacian_kernel,
+        grid=(k,),
+        in_specs=[pl.BlockSpec((nx, ny, 1), lambda kk: (0, 0, kk))],
+        out_specs=pl.BlockSpec((nx, ny, 1), lambda kk: (0, 0, kk)),
+        out_shape=jax.ShapeDtypeStruct((nx, ny, k), jnp.float32),
+        interpret=True,
+    )(in_field)
+
+
+def _uvbke_kernel(u_ref, v_ref, out_ref):
+    u = u_ref[...][:, :, 0]
+    v = v_ref[...][:, :, 0]
+    ua = u[1:, 1:] + u[:-1, 1:]
+    va = v[1:, 1:] + v[1:, :-1]
+    core = 0.125 * (ua * ua + va * va)
+    out_ref[...] = jnp.pad(core, ((1, 0), (1, 0)))[:, :, None]
+
+
+def uvbke_pallas(u, v):
+    """UVBKE kinetic-energy stencil over (NX, NY, K) wind fields."""
+    nx, ny, k = u.shape
+    return pl.pallas_call(
+        _uvbke_kernel,
+        grid=(k,),
+        in_specs=[
+            pl.BlockSpec((nx, ny, 1), lambda kk: (0, 0, kk)),
+            pl.BlockSpec((nx, ny, 1), lambda kk: (0, 0, kk)),
+        ],
+        out_specs=pl.BlockSpec((nx, ny, 1), lambda kk: (0, 0, kk)),
+        out_shape=jax.ShapeDtypeStruct((nx, ny, k), jnp.float32),
+        interpret=True,
+    )(u, v)
+
+
+def _vertical_kernel(in_ref, out_ref):
+    """Whole-column kernel: the k recurrence is sequential per column, so
+    the block is a full (1, NY, K) pencil and the grid runs over NX."""
+    x = in_ref[...][0]  # (NY, K)
+    diff = jnp.zeros_like(x)
+    diff = diff.at[:, :-1].set(x[:, 1:] - x[:, :-1])
+    csum = jnp.cumsum(x[:, 1:], axis=1)
+    out = diff.at[:, 1:].set(diff[:, :1] + csum)
+    out_ref[...] = out[None]
+
+
+def vertical_pallas(in_field):
+    """Vertical difference stencil over (NX, NY, K)."""
+    nx, ny, k = in_field.shape
+    return pl.pallas_call(
+        _vertical_kernel,
+        grid=(nx,),
+        in_specs=[pl.BlockSpec((1, ny, k), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((1, ny, k), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nx, ny, k), jnp.float32),
+        interpret=True,
+    )(in_field)

@@ -1,0 +1,38 @@
+"""Layer-2 JAX compute graphs for every evaluated kernel.
+
+Each model calls the Layer-1 Pallas kernel for its hot loop and adds the
+surrounding computation (GEMV's alpha/beta update, etc.). `aot.py`
+lowers these once to HLO text; the Rust runtime loads and executes them
+as the numerical oracle for simulator outputs.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import linalg_pallas, stencils_pallas
+
+
+def laplacian_model(in_field):
+    return (stencils_pallas.laplacian_pallas(in_field),)
+
+
+def vertical_model(in_field):
+    return (stencils_pallas.vertical_pallas(in_field),)
+
+
+def uvbke_model(u, v):
+    return (stencils_pallas.uvbke_pallas(u, v),)
+
+
+def gemv_model(a, x, y, alpha, beta):
+    """y_out = alpha * (A @ x) + beta * y, with the matvec in Pallas."""
+    ax = linalg_pallas.gemv_pallas(a, x)
+    return (alpha * ax + beta * y,)
+
+
+def reduce_model(vectors):
+    return (linalg_pallas.reduce_pallas(vectors),)
+
+
+def broadcast_model(vector, p: int):
+    """Broadcast is pure data movement; the model just replicates."""
+    return (jnp.broadcast_to(vector, (p, vector.shape[0])),)

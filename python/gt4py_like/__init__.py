@@ -1,0 +1,156 @@
+"""A miniature GT4Py-style embedded stencil DSL (paper §IV front half).
+
+Stencil functions are written in GT4Py's idiom::
+
+    @stencil
+    def laplace(in_field: Field3D, out_field: Field3D):
+        with computation(PARALLEL), interval(...):
+            out_field = -4.0 * in_field[0, 0, 0] + (
+                in_field[1, 0, 0] + in_field[-1, 0, 0] +
+                in_field[0, 1, 0] + in_field[0, -1, 0])
+
+The decorator AST-parses the function (exactly how real GT4Py ingests
+stencils) and emits the textual stencil-DSL consumed by the Rust
+Stencil-IR frontend (`spada compile --stencil`). This keeps the paper's
+GT4Py → Stencil IR → SpaDA pipeline shape: Python authors stencils at
+build time, Rust owns everything from the IR down.
+"""
+
+import ast
+import inspect
+import textwrap
+
+__all__ = [
+    "stencil",
+    "Field3D",
+    "computation",
+    "interval",
+    "PARALLEL",
+    "FORWARD",
+    "BACKWARD",
+]
+
+
+class Field3D:
+    """Type annotation marker for 3-D (I, J, K) fields."""
+
+
+PARALLEL = "PARALLEL"
+FORWARD = "FORWARD"
+BACKWARD = "BACKWARD"
+
+
+def computation(order):  # pragma: no cover - marker only
+    raise RuntimeError("computation() is only valid inside @stencil functions")
+
+
+def interval(*bounds):  # pragma: no cover - marker only
+    raise RuntimeError("interval() is only valid inside @stencil functions")
+
+
+class StencilDef:
+    """The result of @stencil: holds the emitted stencil-DSL text."""
+
+    def __init__(self, name, fields, text, py_loc):
+        self.name = name
+        self.fields = fields
+        self.text = text
+        #: lines of the original GT4Py-style definition (Table II column).
+        self.py_loc = py_loc
+
+    def save(self, path):
+        with open(path, "w") as f:
+            f.write(self.text)
+        return path
+
+
+def _expr(node) -> str:
+    if isinstance(node, ast.BinOp):
+        op = {ast.Add: "+", ast.Sub: "-", ast.Mult: "*", ast.Div: "/"}[type(node.op)]
+        return f"({_expr(node.left)} {op} {_expr(node.right)})"
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+        return f"-{_expr(node.operand)}"
+    if isinstance(node, ast.Constant):
+        return repr(float(node.value))
+    if isinstance(node, ast.Subscript):
+        field = node.value.id
+        idx = node.slice
+        offs = idx.elts if isinstance(idx, ast.Tuple) else [idx]
+        vals = []
+        for o in offs:
+            if isinstance(o, ast.Constant):
+                vals.append(int(o.value))
+            elif isinstance(o, ast.UnaryOp) and isinstance(o.op, ast.USub):
+                vals.append(-int(o.operand.value))
+            else:
+                raise ValueError(f"non-constant stencil offset: {ast.dump(o)}")
+        if len(vals) != 3:
+            raise ValueError("stencil accesses need 3 offsets [di, dj, dk]")
+        return f"{field}[{vals[0]}, {vals[1]}, {vals[2]}]"
+    if isinstance(node, ast.Name):
+        # Bare field name = zero-offset access (GT4Py allows both).
+        return f"{node.id}[0, 0, 0]"
+    raise ValueError(f"unsupported stencil expression: {ast.dump(node)}")
+
+
+def _region_header(withitem) -> str:
+    """Translate `computation(X), interval(a, b)` with-items."""
+    call = withitem.context_expr
+    if not isinstance(call, ast.Call):
+        raise ValueError("with items must be computation()/interval() calls")
+    fname = call.func.id
+    if fname == "computation":
+        order = call.args[0].id if isinstance(call.args[0], ast.Name) else call.args[0].value
+        return f"computation({order})"
+    if fname == "interval":
+        # interval(...) (Ellipsis) → full domain.
+        if len(call.args) == 1 and isinstance(call.args[0], ast.Constant) \
+                and call.args[0].value is Ellipsis:
+            return "interval(0, 0)"
+        vals = []
+        for a in call.args:
+            if isinstance(a, ast.Constant) and a.value is None:
+                vals.append(0)
+            elif isinstance(a, ast.Constant):
+                vals.append(int(a.value))
+            elif isinstance(a, ast.UnaryOp) and isinstance(a.op, ast.USub):
+                vals.append(-int(a.operand.value))
+            else:
+                raise ValueError("interval bounds must be constants")
+        if len(vals) != 2:
+            raise ValueError("interval() needs two bounds (or ...)")
+        return f"interval({vals[0]}, {vals[1]})"
+    raise ValueError(f"unknown with-item {fname}")
+
+
+def stencil(fn):
+    """Decorator: parse a GT4Py-style function into stencil-DSL text."""
+    src = textwrap.dedent(inspect.getsource(fn))
+    tree = ast.parse(src)
+    fdef = tree.body[0]
+    assert isinstance(fdef, ast.FunctionDef)
+    fields = [a.arg for a in fdef.args.args]
+
+    lines = [f"stencil {fdef.name}({', '.join(f'f32 {f}' for f in fields)}) {{"]
+    for node in fdef.body:
+        if isinstance(node, ast.Expr) and isinstance(node.value, ast.Constant):
+            continue  # docstring
+        if not isinstance(node, ast.With):
+            raise ValueError("stencil bodies are `with computation(...)` blocks")
+        headers = [_region_header(w) for w in node.items]
+        comp = next((h for h in headers if h.startswith("computation")), None)
+        intv = next((h for h in headers if h.startswith("interval")), "interval(0, 0)")
+        if comp is None:
+            raise ValueError("missing computation(...) in with block")
+        lines.append(f"  {comp} {intv} {{")
+        for stmt in node.body:
+            if not isinstance(stmt, ast.Assign) or len(stmt.targets) != 1:
+                raise ValueError("stencil statements must be single assignments")
+            target = stmt.targets[0]
+            tname = target.id if isinstance(target, ast.Name) else target.value.id
+            lines.append(f"    {tname} = {_expr(stmt.value)}")
+        lines.append("  }")
+    lines.append("}")
+
+    py_loc = len([l for l in src.splitlines() if l.strip() and not l.strip().startswith("#")])
+    return StencilDef(fdef.name, fields, "\n".join(lines) + "\n", py_loc)

@@ -1,0 +1,102 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Hypothesis sweeps shapes; fixed-seed numpy data keeps runs deterministic.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.linalg_pallas import gemv_pallas, reduce_pallas
+from compile.kernels.stencils_pallas import (
+    laplacian_pallas,
+    uvbke_pallas,
+    vertical_pallas,
+)
+
+RNG = np.random.default_rng(0)
+
+
+def rand(*shape):
+    return RNG.standard_normal(shape).astype(np.float32)
+
+
+def assert_close(a, b, tol=1e-5):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=tol, atol=tol)
+
+
+# ---------------------------------------------------------------- stencils
+
+@settings(max_examples=10, deadline=None)
+@given(
+    nx=st.integers(3, 12),
+    ny=st.integers(3, 12),
+    k=st.integers(1, 6),
+)
+def test_laplacian_matches_ref(nx, ny, k):
+    x = rand(nx, ny, k)
+    assert_close(laplacian_pallas(x), ref.laplacian(x))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    nx=st.integers(2, 10),
+    ny=st.integers(2, 10),
+    k=st.integers(1, 6),
+)
+def test_uvbke_matches_ref(nx, ny, k):
+    u, v = rand(nx, ny, k), rand(nx, ny, k)
+    assert_close(uvbke_pallas(u, v), ref.uvbke(u, v))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    nx=st.integers(1, 6),
+    ny=st.integers(1, 6),
+    k=st.integers(2, 20),
+)
+def test_vertical_matches_ref(nx, ny, k):
+    x = rand(nx, ny, k)
+    assert_close(vertical_pallas(x), ref.vertical(x), tol=1e-4)
+
+
+def test_laplacian_zero_boundary():
+    out = np.asarray(laplacian_pallas(rand(8, 8, 3)))
+    assert np.all(out[0] == 0) and np.all(out[-1] == 0)
+    assert np.all(out[:, 0] == 0) and np.all(out[:, -1] == 0)
+
+
+# ---------------------------------------------------------------- linalg
+
+@settings(max_examples=10, deadline=None)
+@given(
+    mt=st.integers(1, 4),
+    nt=st.integers(1, 4),
+    bm=st.sampled_from([8, 16, 32]),
+    bn=st.sampled_from([8, 16, 32]),
+)
+def test_gemv_matches_ref(mt, nt, bm, bn):
+    m, n = mt * bm, nt * bn
+    a, x = rand(m, n), rand(n)
+    assert_close(gemv_pallas(a, x, bm=bm, bn=bn), a @ x, tol=1e-4)
+
+
+def test_gemv_rejects_ragged_tiles():
+    with pytest.raises(AssertionError):
+        gemv_pallas(rand(10, 10), rand(10), bm=3, bn=3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(p=st.integers(1, 32), k=st.integers(1, 64))
+def test_reduce_matches_ref(p, k):
+    v = rand(p, k)
+    assert_close(reduce_pallas(v), ref.reduce_sum(v), tol=1e-4)
+
+
+def test_gemv_model_alpha_beta():
+    from compile.model import gemv_model
+
+    a, x, y = rand(32, 16), rand(16), rand(32)
+    (got,) = gemv_model(a, x, y, np.float32(2.0), np.float32(0.5))
+    assert_close(got, ref.gemv(a, x, y, 2.0, 0.5), tol=1e-4)

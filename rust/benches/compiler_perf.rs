@@ -1,0 +1,33 @@
+//! Bench: compiler pipeline throughput (the §Perf L3 compile-side
+//! numbers in EXPERIMENTS.md): parse → instantiate → full pass pipeline
+//! for representative kernels.
+use spada::bench::{bench_ms, Table};
+use spada::kernels;
+use spada::machine::MachineConfig;
+use spada::passes::Options;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let iters = if quick { 3 } else { 10 };
+    let mut table = Table::new(&["kernel", "grid", "median ms", "min", "max"]);
+    let cases: Vec<(&str, Vec<(&str, i64)>, (i64, i64))> = vec![
+        ("chain_reduce", vec![("K", 256), ("N", 64)], (64, 1)),
+        ("tree_reduce", vec![("K", 256), ("NX", 64), ("NY", 64)], (64, 64)),
+        ("two_phase_reduce", vec![("K", 256), ("NX", 64), ("NY", 64)], (64, 64)),
+        ("gemv", vec![("M", 1024), ("N", 1024), ("NX", 32), ("NY", 32)], (32, 32)),
+    ];
+    for (name, binds, (w, h)) in cases {
+        let cfg = MachineConfig::with_grid(w, h);
+        let (med, lo, hi) = bench_ms(1, iters, || {
+            kernels::compile(name, &binds, &cfg, &Options::default()).unwrap();
+        });
+        table.row(&[
+            name.to_string(),
+            format!("{w}x{h}"),
+            format!("{med:.1}"),
+            format!("{lo:.1}"),
+            format!("{hi:.1}"),
+        ]);
+    }
+    table.print();
+}

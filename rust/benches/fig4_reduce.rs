@@ -1,0 +1,4 @@
+//! Bench: regenerates Fig. 4 (2-D reduce collectives vs handwritten).
+fn main() {
+    spada::harness::run("fig4", std::env::args().any(|a| a == "--quick")).unwrap();
+}

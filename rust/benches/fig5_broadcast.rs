@@ -1,0 +1,4 @@
+//! Bench: regenerates Fig. 5 (1-D broadcast vs handwritten).
+fn main() {
+    spada::harness::run("fig5", std::env::args().any(|a| a == "--quick")).unwrap();
+}

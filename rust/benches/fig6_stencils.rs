@@ -1,0 +1,4 @@
+//! Bench: regenerates Fig. 6 (stencil FLOP/s vs vertical levels).
+fn main() {
+    spada::harness::run("fig6", std::env::args().any(|a| a == "--quick")).unwrap();
+}

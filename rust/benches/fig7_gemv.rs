@@ -1,0 +1,4 @@
+//! Bench: regenerates Fig. 7 + §VI-D (GEMV vs SDK 1-D vs A100).
+fn main() {
+    spada::harness::run("fig7", std::env::args().any(|a| a == "--quick")).unwrap();
+}

@@ -1,0 +1,8 @@
+//! Bench: regenerates Fig. 9 (compiler pass ablations) and Fig. 8
+//! (roofline + GF/W) since both consume the same runs.
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    spada::harness::run("fig8", quick).unwrap();
+    println!();
+    spada::harness::run("fig9", quick).unwrap();
+}

@@ -1,0 +1,51 @@
+//! Bench: simulator event-loop throughput (the §Perf L3 sim-side
+//! numbers): events/s and wavelet-hops/s on representative workloads.
+use spada::bench::{bench_ms, eng, Table};
+use spada::harness::common::{run_reduce, run_stencil};
+use spada::passes::Options;
+use std::time::Instant;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let g = if quick { 16 } else { 64 };
+    let mut table = Table::new(&["workload", "events", "wall ms", "events/s", "whops/s"]);
+
+    {
+        let t0 = Instant::now();
+        let (run, _) = run_reduce("two_phase_reduce", g, g, 1024, &Options::default()).unwrap();
+        let dt = t0.elapsed().as_secs_f64();
+        table.row(&[
+            format!("two_phase {g}x{g} K=1024"),
+            run.report.metrics.events.to_string(),
+            format!("{:.1}", dt * 1e3),
+            eng(run.report.metrics.events as f64 / dt),
+            eng(run.report.metrics.wavelet_hops as f64 / dt),
+        ]);
+    }
+    {
+        let t0 = Instant::now();
+        let r = run_stencil("uvbke", g / 2, g / 2, 64, &Options::default()).unwrap();
+        let dt = t0.elapsed().as_secs_f64();
+        table.row(&[
+            format!("uvbke {0}x{0} K=64", g / 2),
+            r.run.report.metrics.events.to_string(),
+            format!("{:.1}", dt * 1e3),
+            eng(r.run.report.metrics.events as f64 / dt),
+            eng(r.run.report.metrics.wavelet_hops as f64 / dt),
+        ]);
+    }
+    // Pure event-loop micro: tiny kernel re-simulated many times.
+    {
+        let (med, _, _) = bench_ms(1, if quick { 3 } else { 10 }, || {
+            run_reduce("tree_reduce", 8, 8, 16, &Options::default()).unwrap();
+        });
+        table.row(&[
+            "tree 8x8 K=16 (compile+sim)".into(),
+            "-".into(),
+            format!("{med:.1}"),
+            "-".into(),
+            "-".into(),
+        ]);
+    }
+    table.print();
+}

@@ -1,0 +1,98 @@
+//! Minimal micro-benchmark helper (criterion is unavailable offline).
+//!
+//! Benches in `rust/benches/` are `harness = false` binaries that use
+//! [`bench_ms`] / [`Table`] to time runs and print aligned result tables
+//! that mirror the paper's figures.
+
+use std::time::Instant;
+
+/// Time `f` over `iters` iterations after `warmup` untimed ones; returns
+/// (median_ms, min_ms, max_ms).
+pub fn bench_ms(warmup: usize, iters: usize, mut f: impl FnMut()) -> (f64, f64, f64) {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<f64> = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = samples[samples.len() / 2];
+    (median, samples[0], *samples.last().unwrap())
+}
+
+/// Simple aligned text table printer for bench outputs.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                if i < widths.len() {
+                    widths[i] = widths[i].max(c.len());
+                }
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:>width$}  ", c, width = widths.get(i).copied().unwrap_or(8)));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers);
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        for r in &self.rows {
+            line(r);
+        }
+    }
+}
+
+/// Human-friendly engineering formatting.
+pub fn eng(v: f64) -> String {
+    let a = v.abs();
+    if a >= 1e12 {
+        format!("{:.2}T", v / 1e12)
+    } else if a >= 1e9 {
+        format!("{:.2}G", v / 1e9)
+    } else if a >= 1e6 {
+        format!("{:.2}M", v / 1e6)
+    } else if a >= 1e3 {
+        format!("{:.2}k", v / 1e3)
+    } else {
+        format!("{v:.2}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs() {
+        let (m, lo, hi) = bench_ms(1, 5, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(lo <= m && m <= hi);
+    }
+
+    #[test]
+    fn eng_format() {
+        assert_eq!(eng(2.5e12), "2.50T");
+        assert_eq!(eng(999.0), "999.00");
+    }
+}

@@ -1,0 +1,1910 @@
+//! Lowering: SpaDA IR → machine program (paper §V-C/D/E).
+//!
+//! Per PE equivalence class, the lowerer
+//! 1. lays out PE-local memory (with phase-lifetime overlay reuse and
+//!    extern-field forwarding when copy elimination is on),
+//! 2. transforms the class's compute statements into a *logical task
+//!    graph*: asynchronous fabric DSD operations carry completion
+//!    actions; `await` points become task boundaries wired through
+//!    activate/unblock pairs (binary join trees reduce in-degree > 2,
+//!    the paper's "virtual nodes"),
+//! 3. vectorizes `foreach`/`map` loops into DSD operations by pattern
+//!    matching (§V-D), with a per-wavelet data-task fallback,
+//! 4. coarsens statements into tasks (task fusion) and maps logical
+//!    tasks onto hardware task IDs (task-ID recycling via dispatch state
+//!    machines) — both toggleable for the Fig. 9 ablations.
+
+use crate::ir::core as ir;
+use crate::machine::{
+    DsdKind, DsdOp, DsdRef, Dtype, FieldAlloc, IoBinding, MachineConfig, MachineProgram, MOp,
+    PeClass, PortMap, SExpr, TaskAction, TaskActionKind, TaskDef, TaskKind,
+};
+use crate::machine::program::{IoDir, SBinOp};
+use crate::passes::{ClassRegion, ColorAllocation, Options, PassError, PassStats};
+use crate::spada::ast::{ArgDir, BinOp, Expr, UnOp};
+use std::collections::{BTreeMap, HashMap};
+
+/// Registers 0..REG_CAP are allocatable for program variables; the upper
+/// registers are reserved for the task-recycling machinery: SCRATCH_REG
+/// snapshots the dispatch selector at task entry (a branch may set
+/// another task's selector mid-body, which must not re-steer *this*
+/// run), and each recycled hardware task ID gets its own state register
+/// counting down from 31.
+const REG_CAP: u8 = 24;
+const SCRATCH_REG: u8 = 24;
+const STATE_REG_TOP: u8 = 63;
+
+/// Result of lowering.
+pub struct LowerResult {
+    pub program: MachineProgram,
+    pub stats: PassStats,
+}
+
+type LResult<T> = Result<T, PassError>;
+
+fn err<T>(msg: impl Into<String>) -> LResult<T> {
+    Err(PassError(msg.into()))
+}
+
+/// Lower a (checkerboarded) program.
+pub fn lower(
+    prog: &ir::Program,
+    classes: &[ClassRegion],
+    alloc: &ColorAllocation,
+    cfg: &MachineConfig,
+    opts: &Options,
+) -> LResult<LowerResult> {
+    let mut machine = MachineProgram {
+        name: prog.name.clone(),
+        routes: alloc.routes.clone(),
+        colors_used: alloc.colors_used.clone(),
+        ..Default::default()
+    };
+    let mut stats = PassStats::default();
+    let mut io: Vec<IoBinding> = vec![];
+
+    for region in classes {
+        let mut cl = ClassLowerer::new(prog, region, alloc, cfg, opts);
+        let pe_class = cl.run()?;
+        stats.logical_tasks += cl.logical_task_count;
+        stats.copies_eliminated += cl.copies_eliminated;
+        stats.mem_bytes_max = stats.mem_bytes_max.max(pe_class.mem_size);
+        stats.hw_task_ids = stats.hw_task_ids.max(
+            pe_class
+                .tasks
+                .iter()
+                .map(|t| t.hw_id)
+                .collect::<std::collections::HashSet<_>>()
+                .len(),
+        );
+        io.extend(cl.io_bindings);
+        machine.classes.push(pe_class);
+    }
+
+    // Merge duplicate bindings and sanity-check agreement.
+    io.sort_by(|a, b| (a.arg.clone(), format!("{:?}", a.subgrid)).cmp(&(b.arg.clone(), format!("{:?}", b.subgrid))));
+    io.dedup_by(|a, b| a.arg == b.arg && a.subgrid == b.subgrid && a.dir == b.dir);
+    for i in 0..io.len() {
+        for j in (i + 1)..io.len() {
+            if io[i].arg == io[j].arg
+                && (io[i].elems_per_pe != io[j].elems_per_pe
+                    || io[i].total_ports != io[j].total_ports)
+            {
+                return err(format!(
+                    "arg {}: inconsistent I/O bindings across classes",
+                    io[i].arg
+                ));
+            }
+        }
+    }
+    machine.io = io;
+    machine.meta.insert("kernel".into(), prog.name.clone());
+    Ok(LowerResult { program: machine, stats })
+}
+
+// ---------------------------------------------------------------------
+// Logical tasks
+// ---------------------------------------------------------------------
+
+#[derive(Debug)]
+struct LTask {
+    name: String,
+    phase: usize,
+    kind: LTaskKind,
+    body: Vec<MOp>,
+    /// Initially blocked (second join predecessor unblocks).
+    blocked: bool,
+    /// Number of times this task is a 2-predecessor join target (for
+    /// re-block bookkeeping when recycled).
+    two_pred_join: bool,
+}
+
+#[derive(Debug, PartialEq)]
+enum LTaskKind {
+    Local,
+    Data { color: u8, wavelet_reg: u8 },
+}
+
+/// A dependency predecessor for a join point.
+#[derive(Clone, Debug)]
+enum Pred {
+    /// End of a logical task's body.
+    TaskEnd(usize),
+    /// Completion of an async DSD op: (task, op index into body).
+    AsyncOp(usize, usize),
+}
+
+/// An outstanding asynchronous completion.
+#[derive(Clone, Debug)]
+struct Pending {
+    name: Option<String>,
+    /// None = completes immediately (synchronous op).
+    pred: Option<Pred>,
+}
+
+// ---------------------------------------------------------------------
+// Per-class lowering
+// ---------------------------------------------------------------------
+
+struct ClassLowerer<'a> {
+    prog: &'a ir::Program,
+    region: &'a ClassRegion,
+    alloc: &'a ColorAllocation,
+    cfg: &'a MachineConfig,
+    opts: &'a Options,
+
+    // Memory layout
+    field_addr: HashMap<String, u32>,
+    field_len: HashMap<String, u32>,
+    field_ty: HashMap<String, Dtype>,
+    fields_out: Vec<FieldAlloc>,
+    mem_size: u32,
+
+    // Registers
+    regs: HashMap<String, u8>,
+    next_reg: u8,
+
+    // Tasks
+    tasks: Vec<LTask>,
+    cur: usize,
+    pending: Vec<Pending>,
+
+    // Coord variable names of the block being lowered.
+    coords: (String, String),
+
+    // Outputs
+    pub io_bindings: Vec<IoBinding>,
+    pub logical_task_count: usize,
+    pub copies_eliminated: usize,
+
+    /// Arg aliases: arg name → field it is forwarded to (copy elim).
+    in_alias: HashMap<String, String>,
+    out_alias: HashMap<String, String>,
+}
+
+impl<'a> ClassLowerer<'a> {
+    fn new(
+        prog: &'a ir::Program,
+        region: &'a ClassRegion,
+        alloc: &'a ColorAllocation,
+        cfg: &'a MachineConfig,
+        opts: &'a Options,
+    ) -> Self {
+        ClassLowerer {
+            prog,
+            region,
+            alloc,
+            cfg,
+            opts,
+            field_addr: HashMap::new(),
+            field_len: HashMap::new(),
+            field_ty: HashMap::new(),
+            fields_out: vec![],
+            mem_size: 0,
+            regs: HashMap::new(),
+            next_reg: 0,
+            tasks: vec![],
+            cur: 0,
+            pending: vec![],
+            coords: ("i".into(), "j".into()),
+            io_bindings: vec![],
+            logical_task_count: 0,
+            copies_eliminated: 0,
+            in_alias: HashMap::new(),
+            out_alias: HashMap::new(),
+        }
+    }
+
+    fn run(&mut self) -> LResult<PeClass> {
+        self.plan_aliases();
+        self.layout_memory()?;
+
+        // Group the class's blocks by phase.
+        let mut by_phase: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+        for (pi, bi) in &self.region.blocks {
+            by_phase.entry(*pi).or_default().push(*bi);
+        }
+
+        if !by_phase.is_empty() {
+            // Entry task.
+            self.tasks.push(LTask {
+                name: "entry".into(),
+                phase: *by_phase.keys().next().unwrap(),
+                kind: LTaskKind::Local,
+                body: vec![],
+                blocked: false,
+                two_pred_join: false,
+            });
+            self.cur = 0;
+
+            let phases: Vec<usize> = by_phase.keys().copied().collect();
+            for &pi in &phases {
+                for &bi in &by_phase[&pi] {
+                    let block = &self.prog.phases[pi].computes[bi];
+                    self.coords = block.coord_vars.clone();
+                    let stmts = block.stmts.clone();
+                    for s in &stmts {
+                        self.lower_stmt(s, pi)?;
+                        if !self.opts.fusion {
+                            // Unfused: every statement ends its task.
+                            self.break_task(vec![Pred::TaskEnd(self.cur)], pi, "step")?;
+                        }
+                    }
+                }
+                // Implicit awaitall at phase end.
+                let mut preds = vec![Pred::TaskEnd(self.cur)];
+                preds.extend(self.pending.drain(..).filter_map(|p| p.pred));
+                self.break_task(preds, pi, "phase_end")?;
+            }
+            // Final task halts.
+            self.tasks[self.cur].body.push(MOp::Halt);
+            self.tasks[self.cur].name = "finish".into();
+        }
+
+        self.logical_task_count = self.tasks.len();
+        let (task_defs, entry_hw) = self.assign_hw_ids()?;
+        let entry_tasks = entry_hw.into_iter().collect();
+
+        Ok(PeClass {
+            name: self.region.name.clone(),
+            subgrids: self.region.subgrids.clone(),
+            fields: self.fields_out.clone(),
+            mem_size: self.mem_size,
+            tasks: task_defs,
+            entry_tasks,
+        })
+    }
+
+    // ------------------------------------------------------------------
+    // Copy elimination planning (paper §V-E)
+    // ------------------------------------------------------------------
+
+    /// Decide which kernel-arg receives/sends can be forwarded directly
+    /// to/from the target field (no staging copy).
+    fn plan_aliases(&mut self) {
+        if !self.opts.copy_elim {
+            return;
+        }
+        let mut recv_counts: HashMap<(String, String), usize> = HashMap::new();
+        let mut send_counts: HashMap<(String, String), usize> = HashMap::new();
+        for (pi, bi) in &self.region.blocks {
+            let block = &self.prog.phases[*pi].computes[*bi];
+            scan_arg_io(&block.stmts, &mut recv_counts, &mut send_counts);
+        }
+        for ((arg, field), n) in recv_counts {
+            if n == 1 && !field.is_empty() {
+                self.in_alias.insert(arg, field);
+                self.copies_eliminated += 1;
+            }
+        }
+        for ((arg, field), n) in send_counts {
+            if n == 1 && !field.is_empty() {
+                self.out_alias.insert(arg, field);
+                self.copies_eliminated += 1;
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Memory layout (paper §V-E)
+    // ------------------------------------------------------------------
+
+    fn layout_memory(&mut self) -> LResult<()> {
+        let mut cursor: u32 = 0;
+        let alloc_field = |cur: &mut u32,
+                               out: &mut Vec<FieldAlloc>,
+                               addr_map: &mut HashMap<String, u32>,
+                               len_map: &mut HashMap<String, u32>,
+                               ty_map: &mut HashMap<String, Dtype>,
+                               name: &str,
+                               len: u32,
+                               ty: Dtype,
+                               is_extern: bool,
+                               at: Option<u32>|
+         -> u32 {
+            let addr = at.unwrap_or(*cur);
+            if at.is_none() {
+                *cur += len * ty.size() as u32;
+                // keep 4-byte alignment
+                *cur = (*cur + 3) & !3;
+            }
+            out.push(FieldAlloc { name: name.into(), addr, len, ty, is_extern });
+            addr_map.insert(name.into(), addr);
+            len_map.insert(name.into(), len);
+            ty_map.insert(name.into(), ty);
+            addr
+        };
+
+        // Kernel-lifetime fields first.
+        let mut phase_fields: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+        for &fi in &self.region.fields {
+            let f = &self.prog.fields[fi];
+            match f.phase {
+                None => {
+                    let ext = self.is_aliased_field(&f.name);
+                    alloc_field(
+                        &mut cursor,
+                        &mut self.fields_out,
+                        &mut self.field_addr,
+                        &mut self.field_len,
+                        &mut self.field_ty,
+                        &f.name,
+                        f.elems() as u32,
+                        f.ty,
+                        ext,
+                        None,
+                    );
+                }
+                Some(p) => phase_fields.entry(p).or_default().push(fi),
+            }
+        }
+        // Phase-scoped fields: overlay when copy_elim (memory opt) is on.
+        let overlay_base = cursor;
+        let mut max_overlay = 0u32;
+        for (_p, fis) in &phase_fields {
+            let mut local = if self.opts.copy_elim { overlay_base } else { cursor };
+            for &fi in fis {
+                let f = &self.prog.fields[fi];
+                let ext = self.is_aliased_field(&f.name);
+                let bytes = f.elems() as u32 * f.ty.size() as u32;
+                alloc_field(
+                    &mut local,
+                    &mut self.fields_out,
+                    &mut self.field_addr,
+                    &mut self.field_len,
+                    &mut self.field_ty,
+                    &f.name,
+                    f.elems() as u32,
+                    f.ty,
+                    ext,
+                    None,
+                );
+                let _ = bytes;
+            }
+            if self.opts.copy_elim {
+                max_overlay = max_overlay.max(local - overlay_base);
+            } else {
+                cursor = local;
+            }
+        }
+        if self.opts.copy_elim {
+            cursor = overlay_base + max_overlay;
+        }
+
+        // Extern staging fields for non-aliased args (copy-elim off or
+        // multi-use), discovered from statements.
+        let mut recv_counts: HashMap<(String, String), usize> = HashMap::new();
+        let mut send_counts: HashMap<(String, String), usize> = HashMap::new();
+        for (pi, bi) in &self.region.blocks {
+            let block = &self.prog.phases[*pi].computes[*bi];
+            scan_arg_io(&block.stmts, &mut recv_counts, &mut send_counts);
+        }
+        for ((arg, field), _) in recv_counts.iter() {
+            if self.in_alias.contains_key(arg) {
+                continue;
+            }
+            let len = *self.field_len.get(field).unwrap_or(&1);
+            let ty = *self.field_ty.get(field).unwrap_or(&Dtype::F32);
+            let name = format!("__ext_in_{arg}");
+            if !self.field_addr.contains_key(&name) {
+                alloc_field(
+                    &mut cursor,
+                    &mut self.fields_out,
+                    &mut self.field_addr,
+                    &mut self.field_len,
+                    &mut self.field_ty,
+                    &name,
+                    len,
+                    ty,
+                    true,
+                    None,
+                );
+            }
+        }
+        for ((arg, field), _) in send_counts.iter() {
+            if self.out_alias.contains_key(arg) {
+                continue;
+            }
+            let len = *self.field_len.get(field).unwrap_or(&1);
+            let ty = *self.field_ty.get(field).unwrap_or(&Dtype::F32);
+            let name = format!("__ext_out_{arg}");
+            if !self.field_addr.contains_key(&name) {
+                alloc_field(
+                    &mut cursor,
+                    &mut self.fields_out,
+                    &mut self.field_addr,
+                    &mut self.field_len,
+                    &mut self.field_ty,
+                    &name,
+                    len,
+                    ty,
+                    true,
+                    None,
+                );
+            }
+        }
+        // Scalar args used by this class.
+        for arg in &self.prog.args {
+            if !arg.extents.is_empty() {
+                continue;
+            }
+            let name = format!("__arg_{}", arg.name);
+            alloc_field(
+                &mut cursor,
+                &mut self.fields_out,
+                &mut self.field_addr,
+                &mut self.field_len,
+                &mut self.field_ty,
+                &name,
+                1,
+                arg.elem_ty,
+                true,
+                None,
+            );
+            self.io_bindings.push(IoBinding {
+                arg: arg.name.clone(),
+                field: name,
+                dir: IoDir::In,
+                subgrid: self.region.subgrids[0].clone(),
+                elems_per_pe: 1,
+                total_ports: 1,
+                port_map: PortMap::default(),
+                ty: arg.elem_ty,
+            });
+        }
+
+        // Mark aliased fields extern.
+        self.mem_size = cursor.max(4);
+        if self.mem_size as usize > self.cfg.mem_bytes {
+            return err(format!(
+                "OOM: class {} needs {} B of PE memory (limit {} B)",
+                self.region.name, self.mem_size, self.cfg.mem_bytes
+            ));
+        }
+        Ok(())
+    }
+
+    fn is_aliased_field(&self, field: &str) -> bool {
+        self.in_alias.values().any(|f| f == field) || self.out_alias.values().any(|f| f == field)
+    }
+
+    // ------------------------------------------------------------------
+    // Task building
+    // ------------------------------------------------------------------
+
+    fn new_task(&mut self, name: &str, phase: usize) -> usize {
+        self.tasks.push(LTask {
+            name: format!("{}_{}", name, self.tasks.len()),
+            phase,
+            kind: LTaskKind::Local,
+            body: vec![],
+            blocked: false,
+            two_pred_join: false,
+        });
+        self.tasks.len() - 1
+    }
+
+    /// Attach a task-control action to a predecessor.
+    fn attach(&mut self, pred: &Pred, action: TaskAction) {
+        match pred {
+            Pred::TaskEnd(t) => self.tasks[*t].body.push(MOp::Control(action)),
+            Pred::AsyncOp(t, op) => {
+                if let MOp::Dsd(d) = &mut self.tasks[*t].body[*op] {
+                    d.on_complete.push(action);
+                } else {
+                    unreachable!("AsyncOp pred must point at a Dsd op");
+                }
+            }
+        }
+    }
+
+    /// End the current task, creating a successor activated once all
+    /// `preds` complete (binary join tree for in-degree > 2).
+    ///
+    /// Fusion: a boundary whose only predecessor is the current task's
+    /// own fall-through needs no task switch at all — execution simply
+    /// continues (this elides the per-phase wakeup overhead for classes
+    /// with nothing pending, a large win for deep phase chains like the
+    /// tree reduction's levels).
+    fn break_task(&mut self, preds: Vec<Pred>, phase: usize, name: &str) -> LResult<usize> {
+        if self.opts.fusion
+            && preds.len() == 1
+            && matches!(preds[0], Pred::TaskEnd(t) if t == self.cur)
+        {
+            return Ok(self.cur);
+        }
+        let next = self.new_task(name, phase);
+        self.wire_join(preds, next, phase);
+        self.cur = next;
+        Ok(next)
+    }
+
+    fn wire_join(&mut self, mut preds: Vec<Pred>, target: usize, phase: usize) {
+        // The target's hw id is patched in later; actions reference
+        // logical task indices for now (task field holds the index).
+        match preds.len() {
+            0 => {
+                // No predecessors: activate immediately from current task.
+                let cur = self.cur;
+                self.attach(&Pred::TaskEnd(cur), TaskAction::activate(target as u8));
+            }
+            1 => {
+                let p = preds.pop().unwrap();
+                self.attach(&p, TaskAction::activate(target as u8));
+            }
+            2 => {
+                let p2 = preds.pop().unwrap();
+                let p1 = preds.pop().unwrap();
+                self.attach(&p1, TaskAction::activate(target as u8));
+                self.attach(&p2, TaskAction::unblock(target as u8));
+                self.tasks[target].blocked = true;
+                self.tasks[target].two_pred_join = true;
+            }
+            _ => {
+                // Binary join tree: join the first two into a virtual
+                // task, then recurse.
+                let p2 = preds.remove(1);
+                let p1 = preds.remove(0);
+                let v = self.new_task("join", phase);
+                self.attach(&p1, TaskAction::activate(v as u8));
+                self.attach(&p2, TaskAction::unblock(v as u8));
+                self.tasks[v].blocked = true;
+                self.tasks[v].two_pred_join = true;
+                let mut rest = vec![Pred::TaskEnd(v)];
+                rest.extend(preds);
+                self.wire_join(rest, target, phase);
+            }
+        }
+    }
+
+    /// Register an async op as pending; if `awaited`, immediately join.
+    fn finish_async(
+        &mut self,
+        pred: Option<Pred>,
+        completion: Option<String>,
+        awaited: bool,
+        phase: usize,
+    ) -> LResult<()> {
+        if awaited {
+            if let Some(p) = pred {
+                let preds = vec![Pred::TaskEnd(self.cur), p];
+                self.break_task(preds, phase, "await")?;
+            }
+            // Immediate ops need no break.
+        } else {
+            self.pending.push(Pending { name: completion, pred });
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // Statement lowering
+    // ------------------------------------------------------------------
+
+    fn lower_stmt(&mut self, s: &ir::Stmt, phase: usize) -> LResult<()> {
+        match s {
+            ir::Stmt::Await { completion } => {
+                let idx = self.pending.iter().position(|p| p.name.as_deref() == Some(completion));
+                match idx {
+                    None => {} // completion of a synchronous op: already done
+                    Some(i) => {
+                        let p = self.pending.remove(i);
+                        if let Some(pred) = p.pred {
+                            let preds = vec![Pred::TaskEnd(self.cur), pred];
+                            self.break_task(preds, phase, "await")?;
+                        }
+                    }
+                }
+            }
+            ir::Stmt::AwaitAll => {
+                let mut preds = vec![Pred::TaskEnd(self.cur)];
+                preds.extend(self.pending.drain(..).filter_map(|p| p.pred));
+                if preds.len() > 1 {
+                    self.break_task(preds, phase, "awaitall")?;
+                }
+            }
+            ir::Stmt::Assign { lhs, rhs } => {
+                let op = self.lower_assign(lhs, rhs)?;
+                self.tasks[self.cur].body.push(op);
+            }
+            ir::Stmt::Let { ty, name, init } => {
+                let reg = self.reg(name)?;
+                let val = self.sexpr(init)?;
+                let _ = ty;
+                self.tasks[self.cur].body.push(MOp::SetReg { reg, val });
+            }
+            ir::Stmt::For { var, range, body } => {
+                let op = self.lower_for(var, range, body)?;
+                self.tasks[self.cur].body.push(op);
+            }
+            ir::Stmt::If { cond, then_body, else_body } => {
+                let c = self.sexpr(cond)?;
+                let t = self.lower_sync_block(then_body)?;
+                let e = self.lower_sync_block(else_body)?;
+                self.tasks[self.cur].body.push(MOp::If { cond: c, then_ops: t, else_ops: e });
+            }
+            ir::Stmt::Async { body, completion, awaited } => {
+                if *awaited && completion.is_none() {
+                    for st in body {
+                        self.lower_stmt(st, phase)?;
+                    }
+                } else {
+                    return err("general async blocks with completions are not supported");
+                }
+            }
+            ir::Stmt::Send { data, stream, completion, awaited } => {
+                let pred = self.lower_send(data, stream)?;
+                self.finish_async(pred, completion.clone(), *awaited, phase)?;
+            }
+            ir::Stmt::Recv { dst, stream, completion, awaited } => {
+                let pred = self.lower_recv(dst, stream)?;
+                self.finish_async(pred, completion.clone(), *awaited, phase)?;
+            }
+            ir::Stmt::ForeachRecv { index, elem, len, stream, body, completion, awaited } => {
+                let pred =
+                    self.lower_foreach(index.as_deref(), elem, len.as_ref(), stream, body, phase)?;
+                self.finish_async(pred, completion.clone(), *awaited, phase)?;
+            }
+            ir::Stmt::Map { vars, ranges, body, completion, awaited } => {
+                let ops = self.lower_map(vars, ranges, body)?;
+                self.tasks[self.cur].body.extend(ops);
+                self.finish_async(None, completion.clone(), *awaited, phase)?;
+            }
+        }
+        Ok(())
+    }
+
+    fn lower_sync_block(&mut self, body: &[ir::Stmt]) -> LResult<Vec<MOp>> {
+        let mut out = vec![];
+        for s in body {
+            match s {
+                ir::Stmt::Assign { lhs, rhs } => out.push(self.lower_assign(lhs, rhs)?),
+                ir::Stmt::Let { name, init, .. } => {
+                    let reg = self.reg(name)?;
+                    let val = self.sexpr(init)?;
+                    out.push(MOp::SetReg { reg, val });
+                }
+                ir::Stmt::For { var, range, body } => out.push(self.lower_for(var, range, body)?),
+                ir::Stmt::If { cond, then_body, else_body } => {
+                    let c = self.sexpr(cond)?;
+                    let t = self.lower_sync_block(then_body)?;
+                    let e = self.lower_sync_block(else_body)?;
+                    out.push(MOp::If { cond: c, then_ops: t, else_ops: e });
+                }
+                ir::Stmt::Map { vars, ranges, body, .. } => {
+                    out.extend(self.lower_map(vars, ranges, body)?)
+                }
+                other => {
+                    return err(format!(
+                        "asynchronous statement inside a synchronous context: {other:?}"
+                    ))
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    // --- sends / receives -------------------------------------------
+
+    fn stream_color(&self, id: usize) -> LResult<u8> {
+        self.alloc
+            .stream_color
+            .get(&id)
+            .copied()
+            .ok_or_else(|| PassError(format!("stream {id} has no color (unused?)")))
+    }
+
+    /// Resolve a data expression to a memory vector: (field, offset, len).
+    fn vec_of_expr(&mut self, e: &Expr) -> LResult<(String, SExpr, SExpr)> {
+        match e {
+            Expr::Ident(name) => {
+                let len = *self
+                    .field_len
+                    .get(name)
+                    .ok_or_else(|| PassError(format!("unknown field {name}")))?;
+                Ok((name.clone(), SExpr::imm(0), SExpr::imm(len as i64)))
+            }
+            Expr::Index(base, idx) => {
+                let Expr::Ident(name) = base.as_ref() else {
+                    return err(format!("cannot send {e:?}"));
+                };
+                if idx.len() != 1 {
+                    return err("multi-dimensional send slices are not supported");
+                }
+                let off = self.sexpr(&idx[0])?;
+                Ok((name.clone(), off, SExpr::imm(1)))
+            }
+            other => err(format!("cannot send expression {other:?}")),
+        }
+    }
+
+    fn mem_ref(&self, field: &str, offset: SExpr, len: SExpr) -> LResult<DsdRef> {
+        let base = *self
+            .field_addr
+            .get(field)
+            .ok_or_else(|| PassError(format!("field {field} not allocated on this class")))?;
+        let ty = self.field_ty[field];
+        Ok(DsdRef::Mem { base, offset, stride: 1, len, ty })
+    }
+
+    fn lower_send(&mut self, data: &Expr, stream: &ir::StreamRef) -> LResult<Option<Pred>> {
+        match stream {
+            ir::StreamRef::Local(id) => {
+                let color = self.stream_color(*id)?;
+                let (field, off, len) = self.vec_of_expr(data)?;
+                let src = self.mem_ref(&field, off, len.clone())?;
+                let ty = src.ty();
+                let op = DsdOp {
+                    kind: DsdKind::Mov,
+                    dst: DsdRef::FabOut { color, len, ty },
+                    src0: Some(src),
+                    src1: None,
+                    scalar: None,
+                    is_async: true,
+                    on_complete: vec![],
+                };
+                self.tasks[self.cur].body.push(MOp::Dsd(op));
+                Ok(Some(Pred::AsyncOp(self.cur, self.tasks[self.cur].body.len() - 1)))
+            }
+            ir::StreamRef::Arg { name, index } => {
+                let (field, off, len) = self.vec_of_expr(data)?;
+                self.record_io(name, &field, IoDir::Out, index)?;
+                if self.out_alias.get(name).map(|f| f == &field).unwrap_or(false) {
+                    // Forwarded: the field itself is the output buffer.
+                    Ok(None)
+                } else {
+                    let staging = format!("__ext_out_{name}");
+                    let dst = self.mem_ref(&staging, SExpr::imm(0), len.clone())?;
+                    let src = self.mem_ref(&field, off, len)?;
+                    let op = DsdOp {
+                        kind: DsdKind::Mov,
+                        dst,
+                        src0: Some(src),
+                        src1: None,
+                        scalar: None,
+                        is_async: false,
+                        on_complete: vec![],
+                    };
+                    self.tasks[self.cur].body.push(MOp::Dsd(op));
+                    Ok(None)
+                }
+            }
+        }
+    }
+
+    fn lower_recv(&mut self, dst: &Expr, stream: &ir::StreamRef) -> LResult<Option<Pred>> {
+        match stream {
+            ir::StreamRef::Local(id) => {
+                let color = self.stream_color(*id)?;
+                let (field, off, len) = self.vec_of_expr(dst)?;
+                let d = self.mem_ref(&field, off, len.clone())?;
+                let ty = d.ty();
+                let op = DsdOp {
+                    kind: DsdKind::Mov,
+                    dst: d,
+                    src0: Some(DsdRef::FabIn { color, len, ty }),
+                    src1: None,
+                    scalar: None,
+                    is_async: true,
+                    on_complete: vec![],
+                };
+                self.tasks[self.cur].body.push(MOp::Dsd(op));
+                Ok(Some(Pred::AsyncOp(self.cur, self.tasks[self.cur].body.len() - 1)))
+            }
+            ir::StreamRef::Arg { name, index } => {
+                let (field, off, len) = self.vec_of_expr(dst)?;
+                self.record_io(name, &field, IoDir::In, index)?;
+                if self.in_alias.get(name).map(|f| f == &field).unwrap_or(false) {
+                    Ok(None) // preloaded directly into the field
+                } else {
+                    let staging = format!("__ext_in_{name}");
+                    let src = self.mem_ref(&staging, SExpr::imm(0), len.clone())?;
+                    let d = self.mem_ref(&field, off, len)?;
+                    let op = DsdOp {
+                        kind: DsdKind::Mov,
+                        dst: d,
+                        src0: Some(src),
+                        src1: None,
+                        scalar: None,
+                        is_async: false,
+                        on_complete: vec![],
+                    };
+                    self.tasks[self.cur].body.push(MOp::Dsd(op));
+                    Ok(None)
+                }
+            }
+        }
+    }
+
+    /// Record an I/O binding for a kernel-arg access on this class.
+    fn record_io(
+        &mut self,
+        arg: &str,
+        field: &str,
+        dir: IoDir,
+        index: &[Expr],
+    ) -> LResult<()> {
+        let decl = self
+            .prog
+            .arg(arg)
+            .ok_or_else(|| PassError(format!("unknown kernel argument {arg}")))?;
+        if matches!(dir, IoDir::In) && decl.dir != ArgDir::ReadOnly {
+            return err(format!("receiving from writeonly argument {arg}"));
+        }
+        if matches!(dir, IoDir::Out) && decl.dir != ArgDir::WriteOnly {
+            return err(format!("sending to readonly argument {arg}"));
+        }
+        // Port map from affine index expressions.
+        let mut pm = PortMap::default();
+        if !index.is_empty() {
+            if index.len() != decl.extents.len() {
+                return err(format!(
+                    "arg {arg}: indexed with {} dims, declared {}",
+                    index.len(),
+                    decl.extents.len()
+                ));
+            }
+            let mut stride = 1i64;
+            // Row-major: last index varies fastest.
+            for (d, ie) in index.iter().enumerate().rev() {
+                let (ax, ay, c) = self.affine_coords(ie)?;
+                pm.ax += ax * stride;
+                pm.ay += ay * stride;
+                pm.c += c * stride;
+                stride *= decl.extents[d];
+            }
+        }
+        let total_ports = decl.extents.iter().product::<i64>().max(1) as u32;
+        let target_field = if matches!(dir, IoDir::In) {
+            if self.in_alias.get(arg).map(|f| f == field).unwrap_or(false) {
+                field.to_string()
+            } else {
+                format!("__ext_in_{arg}")
+            }
+        } else if self.out_alias.get(arg).map(|f| f == field).unwrap_or(false) {
+            field.to_string()
+        } else {
+            format!("__ext_out_{arg}")
+        };
+        let elems_per_pe = *self.field_len.get(&target_field).unwrap_or(&1);
+        let ty = *self.field_ty.get(&target_field).unwrap_or(&Dtype::F32);
+        // One binding per class region subgrid.
+        for g in &self.region.subgrids {
+            self.io_bindings.push(IoBinding {
+                arg: arg.to_string(),
+                field: target_field.clone(),
+                dir,
+                subgrid: g.clone(),
+                elems_per_pe,
+                total_ports,
+                port_map: pm,
+                ty,
+            });
+        }
+        Ok(())
+    }
+
+    /// Extract an affine form a·i + b·j + c over the coordinate vars.
+    fn affine_coords(&self, e: &Expr) -> LResult<(i64, i64, i64)> {
+        match e {
+            Expr::Int(v) => Ok((0, 0, *v)),
+            Expr::Ident(n) if *n == self.coords.0 => Ok((1, 0, 0)),
+            Expr::Ident(n) if *n == self.coords.1 => Ok((0, 1, 0)),
+            Expr::Bin(BinOp::Add, a, b) => {
+                let (ax, ay, ac) = self.affine_coords(a)?;
+                let (bx, by, bc) = self.affine_coords(b)?;
+                Ok((ax + bx, ay + by, ac + bc))
+            }
+            Expr::Bin(BinOp::Sub, a, b) => {
+                let (ax, ay, ac) = self.affine_coords(a)?;
+                let (bx, by, bc) = self.affine_coords(b)?;
+                Ok((ax - bx, ay - by, ac - bc))
+            }
+            Expr::Bin(BinOp::Mul, a, b) => {
+                let (ax, ay, ac) = self.affine_coords(a)?;
+                let (bx, by, bc) = self.affine_coords(b)?;
+                if ax == 0 && ay == 0 {
+                    Ok((ac * bx, ac * by, ac * bc))
+                } else if bx == 0 && by == 0 {
+                    Ok((ax * bc, ay * bc, ac * bc))
+                } else {
+                    err(format!("non-affine port index {e:?}"))
+                }
+            }
+            Expr::Bin(BinOp::Div, a, b) => {
+                // Affine / const only when it divides cleanly.
+                let (ax, ay, ac) = self.affine_coords(a)?;
+                let (bx, by, bc) = self.affine_coords(b)?;
+                if bx == 0 && by == 0 && bc != 0 && ax % bc == 0 && ay % bc == 0 && ac % bc == 0 {
+                    Ok((ax / bc, ay / bc, ac / bc))
+                } else {
+                    err(format!("non-affine port index {e:?}"))
+                }
+            }
+            Expr::Unary(UnOp::Neg, a) => {
+                let (ax, ay, ac) = self.affine_coords(a)?;
+                Ok((-ax, -ay, -ac))
+            }
+            other => err(format!("non-affine port index {other:?}")),
+        }
+    }
+
+    // --- foreach receive (paper §V-D vectorization) -------------------
+
+    fn lower_foreach(
+        &mut self,
+        index: Option<&str>,
+        elem: &str,
+        len: Option<&Expr>,
+        stream: &ir::StreamRef,
+        body: &[ir::Stmt],
+        phase: usize,
+    ) -> LResult<Option<Pred>> {
+        let ir::StreamRef::Local(id) = stream else {
+            return err("foreach over kernel-arg streams is not supported");
+        };
+        let color = self.stream_color(*id)?;
+        let Some(len) = len else {
+            return self.lower_foreach_datatask(index, elem, None, color, body, phase);
+        };
+        let n = self.sexpr(len)?;
+
+        // Pattern matching on the loop body.
+        if let Some(pred) = self.try_vectorize_foreach(index, elem, &n, color, body)? {
+            return Ok(Some(pred));
+        }
+        // Fallback: per-wavelet data task with count (tiered fallback of
+        // §V-D).
+        self.lower_foreach_datatask(index, elem, Some(n), color, body, phase)
+    }
+
+    /// Try to vectorize a foreach-receive body into fabric DSD op(s).
+    fn try_vectorize_foreach(
+        &mut self,
+        index: Option<&str>,
+        elem: &str,
+        n: &SExpr,
+        color: u8,
+        body: &[ir::Stmt],
+    ) -> LResult<Option<Pred>> {
+        let Some(k) = index else { return Ok(None) };
+
+        // Helper: f[k] pattern.
+        let as_vec = |e: &Expr| -> Option<(String, i64)> {
+            match e {
+                Expr::Index(b, idx) if idx.len() == 1 => {
+                    let Expr::Ident(f) = b.as_ref() else { return None };
+                    match &idx[0] {
+                        Expr::Ident(v) if v == k => Some((f.clone(), 0)),
+                        Expr::Bin(BinOp::Add, a, c) => match (a.as_ref(), c.as_ref()) {
+                            (Expr::Ident(v), Expr::Int(c)) if v == k => Some((f.clone(), *c)),
+                            (Expr::Int(c), Expr::Ident(v)) if v == k => Some((f.clone(), *c)),
+                            _ => None,
+                        },
+                        Expr::Bin(BinOp::Sub, a, c) => match (a.as_ref(), c.as_ref()) {
+                            (Expr::Ident(v), Expr::Int(c)) if v == k => Some((f.clone(), -*c)),
+                            _ => None,
+                        },
+                        _ => None,
+                    }
+                }
+                _ => None,
+            }
+        };
+        let is_elem = |e: &Expr| matches!(e, Expr::Ident(v) if v == elem);
+        let is_scalar_field = |me: &Self, e: &Expr| -> Option<String> {
+            match e {
+                Expr::Ident(f) if me.field_len.get(f) == Some(&1) => Some(f.clone()),
+                _ => None,
+            }
+        };
+
+        let fabin = |ty: Dtype| DsdRef::FabIn { color, len: n.clone(), ty };
+
+        // Single accumulate: a[k] = a[k] + x  /  a[k] = g[k] + x  /
+        //                    a[k] = x
+        if body.len() == 1 {
+            if let ir::Stmt::Assign { lhs, rhs } = &body[0] {
+                if let Some((dst_f, 0)) = as_vec(lhs) {
+                    let ty = self.field_ty.get(&dst_f).copied().unwrap_or(Dtype::F32);
+                    // a[k] = x
+                    if is_elem(rhs) {
+                        let d = self.mem_ref(&dst_f, SExpr::imm(0), n.clone())?;
+                        return self.push_fab_op(DsdKind::Mov, d, Some(fabin(ty)), None, None);
+                    }
+                    // a[k] = g[k] ± x or x + g[k]
+                    if let Expr::Bin(op, l, r) = rhs {
+                        let (vec_side, kind, swapped) = match op {
+                            BinOp::Add if is_elem(r) => (l, DsdKind::Fadd, false),
+                            BinOp::Add if is_elem(l) => (r, DsdKind::Fadd, false),
+                            BinOp::Sub if is_elem(r) => (l, DsdKind::Fsub, false),
+                            BinOp::Mul if is_elem(r) => (l, DsdKind::Fmul, false),
+                            BinOp::Mul if is_elem(l) => (r, DsdKind::Fmul, false),
+                            _ => (l, DsdKind::Mov, true),
+                        };
+                        if !swapped {
+                            if let Some((src_f, off)) = as_vec(vec_side) {
+                                let d = self.mem_ref(&dst_f, SExpr::imm(0), n.clone())?;
+                                let s0 = self.mem_ref(&src_f, SExpr::imm(off), n.clone())?;
+                                return self.push_fab_op(kind, d, Some(s0), Some(fabin(ty)), None);
+                            }
+                        }
+                    }
+                }
+                // Scalar reduction: s = s + x (stride-0 accumulate).
+                if let Some(sf) = is_scalar_field(self, lhs) {
+                    if let Expr::Bin(BinOp::Add, l, r) = rhs {
+                        let ok = (matches!(l.as_ref(), Expr::Ident(v) if *v == sf) && is_elem(r))
+                            || (matches!(r.as_ref(), Expr::Ident(v) if *v == sf) && is_elem(l));
+                        if ok {
+                            let base = self.field_addr[&sf];
+                            let ty = self.field_ty[&sf];
+                            let d = DsdRef::Mem {
+                                base,
+                                offset: SExpr::imm(0),
+                                stride: 0,
+                                len: n.clone(),
+                                ty,
+                            };
+                            let s0 = DsdRef::Mem {
+                                base,
+                                offset: SExpr::imm(0),
+                                stride: 0,
+                                len: n.clone(),
+                                ty,
+                            };
+                            return self.push_fab_op(DsdKind::Fadd, d, Some(s0), Some(fabin(ty)), None);
+                        }
+                    }
+                }
+            }
+        }
+
+        // Accumulate-and-forward: { a[k] = a[k] + x; send(a[k], s2) }
+        if body.len() == 2 {
+            if let (ir::Stmt::Assign { lhs, rhs }, ir::Stmt::Send { data, stream: s2, .. }) =
+                (&body[0], &body[1])
+            {
+                let dst = as_vec(lhs);
+                let sent = as_vec(data);
+                if let (Some((a_f, 0)), Some((sent_f, 0))) = (&dst, &sent) {
+                    if a_f == sent_f {
+                        // rhs must be a[k] + x.
+                        let rhs_ok = matches!(rhs, Expr::Bin(BinOp::Add, l, r)
+                            if (as_vec(l).map(|(f, o)| f == *a_f && o == 0).unwrap_or(false) && is_elem(r))
+                            || (as_vec(r).map(|(f, o)| f == *a_f && o == 0).unwrap_or(false) && is_elem(l)));
+                        if rhs_ok {
+                            let ir::StreamRef::Local(out_id) = s2 else {
+                                return Ok(None);
+                            };
+                            let out_color = self.stream_color(*out_id)?;
+                            let ty = self.field_ty.get(a_f).copied().unwrap_or(Dtype::F32);
+                            let s0 = self.mem_ref(a_f, SExpr::imm(0), n.clone())?;
+                            // Fused streaming form: out = a + in, written
+                            // directly to the fabric (the accumulator is
+                            // a staging buffer — dead afterwards).
+                            let d = DsdRef::FabOut { color: out_color, len: n.clone(), ty };
+                            return self.push_fab_op(DsdKind::Fadd, d, Some(s0), Some(fabin(ty)), None);
+                        }
+                    }
+                }
+            }
+        }
+
+        Ok(None)
+    }
+
+    fn push_fab_op(
+        &mut self,
+        kind: DsdKind,
+        dst: DsdRef,
+        src0: Option<DsdRef>,
+        src1: Option<DsdRef>,
+        scalar: Option<SExpr>,
+    ) -> LResult<Option<Pred>> {
+        let op = DsdOp { kind, dst, src0, src1, scalar, is_async: true, on_complete: vec![] };
+        self.tasks[self.cur].body.push(MOp::Dsd(op));
+        Ok(Some(Pred::AsyncOp(self.cur, self.tasks[self.cur].body.len() - 1)))
+    }
+
+    /// Per-wavelet data-task fallback: a data task bound to `color` runs
+    /// the body once per wavelet; with a known count it blocks itself and
+    /// activates a completion proxy after `n` wavelets.
+    fn lower_foreach_datatask(
+        &mut self,
+        index: Option<&str>,
+        elem: &str,
+        n: Option<SExpr>,
+        color: u8,
+        body: &[ir::Stmt],
+        phase: usize,
+    ) -> LResult<Option<Pred>> {
+        let elem_reg = self.reg(elem)?;
+        let cnt_reg = self.reg(&format!("__cnt_c{color}_p{phase}"))?;
+        let mut ops: Vec<MOp> = vec![];
+        if let Some(k) = index {
+            let k_reg = self.reg(k)?;
+            ops.push(MOp::SetReg { reg: k_reg, val: SExpr::Reg(cnt_reg) });
+        }
+        ops.extend(self.lower_sync_block(body)?);
+        ops.push(MOp::SetReg {
+            reg: cnt_reg,
+            val: SExpr::add(SExpr::Reg(cnt_reg), SExpr::imm(1)),
+        });
+
+        let dt = self.tasks.len();
+        let proxy = if n.is_some() {
+            let proxy = self.new_task("recv_done", phase);
+            ops.push(MOp::If {
+                cond: SExpr::bin(SBinOp::Ge, SExpr::Reg(cnt_reg), n.clone().unwrap()),
+                then_ops: vec![
+                    MOp::Control(TaskAction {
+                        kind: TaskActionKind::Block,
+                        task: dt as u8 + 1, // patched: data task index is dt+1 after proxy? fixed below
+                        set_reg: None,
+                    }),
+                    MOp::Control(TaskAction::activate(proxy as u8)),
+                ],
+                else_ops: vec![],
+            });
+            Some(proxy)
+        } else {
+            None
+        };
+        // Create the data task itself (logical index).
+        let dt_idx = self.tasks.len();
+        self.tasks.push(LTask {
+            name: format!("data_c{color}_{dt_idx}"),
+            phase,
+            kind: LTaskKind::Data { color, wavelet_reg: elem_reg },
+            body: ops,
+            blocked: false,
+            two_pred_join: false,
+        });
+        // Patch the self-block target to the data task's own index.
+        if proxy.is_some() {
+            let body_len = self.tasks[dt_idx].body.len();
+            if let MOp::If { then_ops, .. } = &mut self.tasks[dt_idx].body[body_len - 1] {
+                if let MOp::Control(a) = &mut then_ops[0] {
+                    a.task = dt_idx as u8;
+                }
+            }
+        }
+        Ok(proxy.map(|p| Pred::TaskEnd(p)))
+    }
+
+    // --- map / loops (paper §V-D) -------------------------------------
+
+    fn lower_map(
+        &mut self,
+        vars: &[String],
+        ranges: &[(Expr, Expr, Expr)],
+        body: &[ir::Stmt],
+    ) -> LResult<Vec<MOp>> {
+        if vars.len() == 1 {
+            if let Some(ops) = self.try_vectorize_map(&vars[0], &ranges[0], body)? {
+                return Ok(ops);
+            }
+        }
+        // Fallback: sequential loop nest (CSL @map-style callback has the
+        // same per-element cost in the machine model).
+        self.loop_nest(vars, ranges, body)
+    }
+
+    fn loop_nest(
+        &mut self,
+        vars: &[String],
+        ranges: &[(Expr, Expr, Expr)],
+        body: &[ir::Stmt],
+    ) -> LResult<Vec<MOp>> {
+        if vars.is_empty() {
+            return self.lower_sync_block(body);
+        }
+        let reg = self.reg(&vars[0])?;
+        let start = self.sexpr(&ranges[0].0)?;
+        let stop = self.sexpr(&ranges[0].1)?;
+        let step = self.sexpr(&ranges[0].2)?;
+        let inner = self.loop_nest(&vars[1..], &ranges[1..], body)?;
+        Ok(vec![MOp::For { reg, start, stop, step, body: inner }])
+    }
+
+    fn lower_for(
+        &mut self,
+        var: &str,
+        range: &(Expr, Expr, Expr),
+        body: &[ir::Stmt],
+    ) -> LResult<MOp> {
+        let reg = self.reg(var)?;
+        let start = self.sexpr(&range.0)?;
+        let stop = self.sexpr(&range.1)?;
+        let step = self.sexpr(&range.2)?;
+        let inner = self.lower_sync_block(body)?;
+        Ok(MOp::For { reg, start, stop, step, body: inner })
+    }
+
+    /// Vectorize `map k in [0:N] { dst[k±c] = expr }` into DSD ops.
+    fn try_vectorize_map(
+        &mut self,
+        k: &str,
+        range: &(Expr, Expr, Expr),
+        body: &[ir::Stmt],
+    ) -> LResult<Option<Vec<MOp>>> {
+        // Range must start at 0 with step 1 (offsets fold into DSDs).
+        if range.0 != Expr::Int(0) || range.2 != Expr::Int(1) {
+            return Ok(None);
+        }
+        let n = self.sexpr(&range.1)?;
+        if body.len() != 1 {
+            return Ok(None);
+        }
+        let ir::Stmt::Assign { lhs, rhs } = &body[0] else { return Ok(None) };
+        let Some((dst_f, dst_off)) = self.as_vec_ref(k, lhs)? else { return Ok(None) };
+        let dst = self.mem_ref(&dst_f, dst_off, n.clone())?;
+        let mut ops = vec![];
+        if self.compile_vec_expr(k, &dst, rhs, &n, &mut ops, true)? {
+            Ok(Some(ops))
+        } else {
+            Ok(None)
+        }
+    }
+
+    /// `f[k]` / `f[k + e]` / `f[k - e]` pattern, where `e` is k-free.
+    /// Returns (field, element-offset expression).
+    fn as_vec_ref(&mut self, k: &str, e: &Expr) -> LResult<Option<(String, SExpr)>> {
+        let r = match e {
+            Expr::Index(b, idx) if idx.len() == 1 => {
+                let Expr::Ident(f) = b.as_ref() else { return Ok(None) };
+                if !self.field_addr.contains_key(f) {
+                    return Ok(None);
+                }
+                match &idx[0] {
+                    Expr::Ident(v) if v == k => Some((f.clone(), SExpr::imm(0))),
+                    Expr::Bin(BinOp::Add, a, c) => match (a.as_ref(), c.as_ref()) {
+                        (Expr::Ident(v), off) if v == k && !contains_var(off, k) => {
+                            Some((f.clone(), self.sexpr(off)?))
+                        }
+                        (off, Expr::Ident(v)) if v == k && !contains_var(off, k) => {
+                            Some((f.clone(), self.sexpr(off)?))
+                        }
+                        _ => None,
+                    },
+                    Expr::Bin(BinOp::Sub, a, c) => match (a.as_ref(), c.as_ref()) {
+                        (Expr::Ident(v), off) if v == k && !contains_var(off, k) => {
+                            Some((f.clone(), SExpr::Neg(Box::new(self.sexpr(off)?))))
+                        }
+                        _ => None,
+                    },
+                    _ => None,
+                }
+            }
+            _ => None,
+        };
+        Ok(r)
+    }
+
+    /// k-free scalar expression (compiled to an SExpr), if any.
+    fn as_scalar_sexpr(&mut self, k: &str, e: &Expr) -> LResult<Option<SExpr>> {
+        if contains_var(e, k) {
+            return Ok(None);
+        }
+        // Field vectors used without an index are not scalars.
+        if let Expr::Ident(name) = e {
+            if self.field_len.get(name).map(|l| *l > 1).unwrap_or(false) {
+                return Ok(None);
+            }
+        }
+        Ok(Some(self.sexpr(e)?))
+    }
+
+    /// Compile `dst[:] (=|+=) expr` into a chain of DSD ops. `init`
+    /// selects initialize (=) vs accumulate (+=) semantics.
+    /// Returns false when the expression doesn't fit the DSD forms.
+    fn compile_vec_expr(
+        &mut self,
+        k: &str,
+        dst: &DsdRef,
+        e: &Expr,
+        n: &SExpr,
+        ops: &mut Vec<MOp>,
+        init: bool,
+    ) -> LResult<bool> {
+        let mk = |kind, src0, src1, scalar| {
+            MOp::Dsd(DsdOp {
+                kind,
+                dst: dst.clone(),
+                src0,
+                src1,
+                scalar,
+                is_async: false,
+                on_complete: vec![],
+            })
+        };
+        // Sum decomposition: e1 + e2 → compile e1, accumulate e2.
+        if let Expr::Bin(BinOp::Add, a, b) = e {
+            if self.compile_vec_expr(k, dst, a, n, ops, init)? {
+                return self.compile_vec_expr(k, dst, b, n, ops, false);
+            }
+            return Ok(false);
+        }
+        if let Expr::Bin(BinOp::Sub, a, b) = e {
+            // e1 - e2 → compile e1, accumulate −1·e2.
+            if self.compile_vec_expr(k, dst, a, n, ops, init)? {
+                let neg = Expr::Unary(UnOp::Neg, b.clone());
+                return self.compile_vec_expr(k, dst, &neg, n, ops, false);
+            }
+            return Ok(false);
+        }
+
+        // Term forms: v[k+off], scalar·v[k+off], v·w (elementwise), scalar.
+        // `scalar` is any k-free expression (a literal, a kernel scalar
+        // argument, or a loop-indexed element like x[c] — the CSL
+        // @fmacs(y, y, A_col, x[c]) idiom).
+        let term = self.vec_term(k, e)?;
+        let Some((v, w, c)) = term else { return Ok(false) };
+        let one = matches!(c, SExpr::ImmF(v) if v == 1.0);
+        match (v, w, init) {
+            // dst = scalar
+            (None, None, true) => {
+                ops.push(mk(DsdKind::Fill, None, None, Some(c)));
+                Ok(true)
+            }
+            (None, None, false) => Ok(false), // dst += scalar: no DSD form
+            // dst = v·w
+            (Some((vf, vo)), Some((wf, wo)), true) => {
+                let s0 = self.mem_ref(&vf, vo, n.clone())?;
+                let s1 = self.mem_ref(&wf, wo, n.clone())?;
+                ops.push(mk(DsdKind::Fmul, Some(s0), Some(s1), None));
+                Ok(true)
+            }
+            // dst += v·w → Fmac with unit scalar.
+            (Some((vf, vo)), Some((wf, wo)), false) => {
+                if !one {
+                    return Ok(false);
+                }
+                // dst += v[k]·w[k] has no single-DSD form unless one
+                // operand aliases dst; reject (needs a temp).
+                let _ = (vf, vo, wf, wo);
+                Ok(false)
+            }
+            // dst = c·v
+            (Some((vf, vo)), None, true) => {
+                let s0 = self.mem_ref(&vf, vo, n.clone())?;
+                if one {
+                    ops.push(mk(DsdKind::Mov, Some(s0), None, None));
+                } else {
+                    ops.push(mk(DsdKind::Fscale, Some(s0), None, Some(c)));
+                }
+                Ok(true)
+            }
+            // dst += c·v  → Fmac(dst, dst, v, c)
+            (Some((vf, vo)), None, false) => {
+                let s1 = self.mem_ref(&vf, vo, n.clone())?;
+                ops.push(mk(DsdKind::Fmac, Some(dst.clone()), Some(s1), Some(c)));
+                Ok(true)
+            }
+            (None, Some(_), _) => unreachable!("term extractor never yields w without v"),
+        }
+    }
+
+    /// Extract a single product term: (vector, optional second vector,
+    /// scalar coefficient as SExpr).
+    #[allow(clippy::type_complexity)]
+    fn vec_term(
+        &mut self,
+        k: &str,
+        e: &Expr,
+    ) -> LResult<Option<(Option<(String, SExpr)>, Option<(String, SExpr)>, SExpr)>> {
+        // plain vector
+        if let Some(v) = self.as_vec_ref(k, e)? {
+            return Ok(Some((Some(v), None, SExpr::ImmF(1.0))));
+        }
+        // negation: negate the scalar coefficient
+        if let Expr::Unary(UnOp::Neg, a) = e {
+            if let Some((v, w, c)) = self.vec_term(k, a)? {
+                return Ok(Some((v, w, SExpr::Neg(Box::new(c)))));
+            }
+            return Ok(None);
+        }
+        if let Expr::Bin(BinOp::Mul, a, b) = e {
+            if let Some(c) = self.as_scalar_sexpr(k, a)? {
+                if let Some(v) = self.as_vec_ref(k, b)? {
+                    return Ok(Some((Some(v), None, c)));
+                }
+                return Ok(None);
+            }
+            if let Some(c) = self.as_scalar_sexpr(k, b)? {
+                if let Some(v) = self.as_vec_ref(k, a)? {
+                    return Ok(Some((Some(v), None, c)));
+                }
+                return Ok(None);
+            }
+            if let (Some(v), Some(w)) = (self.as_vec_ref(k, a)?, self.as_vec_ref(k, b)?) {
+                return Ok(Some((Some(v), Some(w), SExpr::ImmF(1.0))));
+            }
+            return Ok(None);
+        }
+        if let Some(c) = self.as_scalar_sexpr(k, e)? {
+            return Ok(Some((None, None, c)));
+        }
+        Ok(None)
+    }
+
+    // --- scalar expressions -------------------------------------------
+
+    fn reg(&mut self, name: &str) -> LResult<u8> {
+        if let Some(r) = self.regs.get(name) {
+            return Ok(*r);
+        }
+        if self.next_reg >= REG_CAP {
+            return err(format!(
+                "OOR: class {} needs more than {} scalar registers",
+                self.region.name, REG_CAP
+            ));
+        }
+        let r = self.next_reg;
+        self.next_reg += 1;
+        self.regs.insert(name.to_string(), r);
+        Ok(r)
+    }
+
+    fn lower_assign(&mut self, lhs: &Expr, rhs: &Expr) -> LResult<MOp> {
+        let val = self.sexpr(rhs)?;
+        match lhs {
+            Expr::Ident(name) => {
+                if self.field_addr.contains_key(name) {
+                    let ty = self.field_ty[name];
+                    Ok(MOp::Store { addr: SExpr::imm(self.field_addr[name] as i64), ty, val })
+                } else {
+                    let reg = self.reg(name)?;
+                    Ok(MOp::SetReg { reg, val })
+                }
+            }
+            Expr::Index(base, idx) => {
+                let Expr::Ident(f) = base.as_ref() else {
+                    return err(format!("cannot assign to {lhs:?}"));
+                };
+                let addr = self.elem_addr(f, idx)?;
+                let ty = self.field_ty[f];
+                Ok(MOp::Store { addr, ty, val })
+            }
+            other => err(format!("invalid assignment target {other:?}")),
+        }
+    }
+
+    /// Byte address of field element f[idx...] as an SExpr.
+    fn elem_addr(&mut self, f: &str, idx: &[Expr]) -> LResult<SExpr> {
+        let base = *self
+            .field_addr
+            .get(f)
+            .ok_or_else(|| PassError(format!("unknown field {f}")))?;
+        let ty = self.field_ty[f];
+        // Row-major over the declared shape.
+        let field = self
+            .prog
+            .field(f)
+            .map(|fd| fd.shape.clone())
+            .unwrap_or_else(|| vec![self.field_len[f] as i64]);
+        if idx.len() != field.len().max(1) && !(idx.len() == 1 && field.is_empty()) {
+            return err(format!("field {f}: indexed with {} dims, shape {:?}", idx.len(), field));
+        }
+        let mut flat = SExpr::imm(0);
+        let mut stride = 1i64;
+        for (d, ie) in idx.iter().enumerate().rev() {
+            let i = self.sexpr(ie)?;
+            flat = SExpr::add(flat, SExpr::mul(i, SExpr::imm(stride)));
+            stride *= field.get(d).copied().unwrap_or(1);
+        }
+        Ok(SExpr::add(
+            SExpr::imm(base as i64),
+            SExpr::mul(flat, SExpr::imm(ty.size() as i64)),
+        ))
+    }
+
+    fn sexpr(&mut self, e: &Expr) -> LResult<SExpr> {
+        Ok(match e {
+            Expr::Int(v) => SExpr::ImmI(*v),
+            Expr::Float(v) => SExpr::ImmF(*v),
+            Expr::Ident(name) => {
+                if *name == self.coords.0 {
+                    SExpr::CoordX
+                } else if *name == self.coords.1 {
+                    SExpr::CoordY
+                } else if let Some(addr) = self.field_addr.get(name) {
+                    SExpr::LoadMem {
+                        addr: Box::new(SExpr::imm(*addr as i64)),
+                        ty: self.field_ty[name],
+                    }
+                } else if let Some(arg) = self.prog.arg(name) {
+                    if arg.extents.is_empty() {
+                        let staged = format!("__arg_{name}");
+                        let addr = *self.field_addr.get(&staged).ok_or_else(|| {
+                            PassError(format!("scalar arg {name} not staged on this class"))
+                        })?;
+                        SExpr::LoadMem { addr: Box::new(SExpr::imm(addr as i64)), ty: arg.elem_ty }
+                    } else {
+                        return err(format!("stream argument {name} used as a value"));
+                    }
+                } else if let Some(r) = self.regs.get(name) {
+                    SExpr::Reg(*r)
+                } else {
+                    // Forward reference to a loop/let variable.
+                    SExpr::Reg(self.reg(name)?)
+                }
+            }
+            Expr::Index(base, idx) => {
+                let Expr::Ident(f) = base.as_ref() else {
+                    return err(format!("cannot index {base:?}"));
+                };
+                let addr = self.elem_addr(f, idx)?;
+                SExpr::LoadMem { addr: Box::new(addr), ty: self.field_ty[f] }
+            }
+            Expr::Unary(UnOp::Neg, a) => SExpr::Neg(Box::new(self.sexpr(a)?)),
+            Expr::Unary(UnOp::Not, a) => SExpr::Not(Box::new(self.sexpr(a)?)),
+            Expr::Bin(op, a, b) => {
+                let sa = self.sexpr(a)?;
+                let sb = self.sexpr(b)?;
+                let so = match op {
+                    BinOp::Add => SBinOp::Add,
+                    BinOp::Sub => SBinOp::Sub,
+                    BinOp::Mul => SBinOp::Mul,
+                    BinOp::Div => SBinOp::Div,
+                    BinOp::Mod => SBinOp::Mod,
+                    BinOp::Eq => SBinOp::Eq,
+                    BinOp::Ne => SBinOp::Ne,
+                    BinOp::Lt => SBinOp::Lt,
+                    BinOp::Le => SBinOp::Le,
+                    BinOp::Gt => SBinOp::Gt,
+                    BinOp::Ge => SBinOp::Ge,
+                    BinOp::And => SBinOp::And,
+                    BinOp::Or => SBinOp::Or,
+                };
+                SExpr::bin(so, sa, sb)
+            }
+            Expr::Cond { then, cond, els } => SExpr::Select(
+                Box::new(self.sexpr(cond)?),
+                Box::new(self.sexpr(then)?),
+                Box::new(self.sexpr(els)?),
+            ),
+            Expr::Call(name, args) => match (name.as_str(), args.len()) {
+                ("min", 2) => {
+                    SExpr::bin(SBinOp::Min, self.sexpr(&args[0])?, self.sexpr(&args[1])?)
+                }
+                ("max", 2) => {
+                    SExpr::bin(SBinOp::Max, self.sexpr(&args[0])?, self.sexpr(&args[1])?)
+                }
+                ("abs", 1) => {
+                    let a = self.sexpr(&args[0])?;
+                    SExpr::Select(
+                        Box::new(SExpr::bin(SBinOp::Ge, a.clone(), SExpr::imm(0))),
+                        Box::new(a.clone()),
+                        Box::new(SExpr::Neg(Box::new(a))),
+                    )
+                }
+                _ => return err(format!("unknown builtin {name}")),
+            },
+        })
+    }
+
+    // ------------------------------------------------------------------
+    // Hardware task-ID assignment (fusion happened during building;
+    // recycling happens here — paper §V-C)
+    // ------------------------------------------------------------------
+
+    fn assign_hw_ids(&mut self) -> LResult<(Vec<TaskDef>, Option<u8>)> {
+        let n = self.tasks.len();
+        if n == 0 {
+            return Ok((vec![], None));
+        }
+        if n > 250 {
+            return err(format!(
+                "OOR: class {} has {} logical tasks (limit 250)",
+                self.region.name, n
+            ));
+        }
+        // Data tasks are pinned to their color's ID.
+        // Local tasks: slot per phase (recycling) or globally unique.
+        let top = self.cfg.max_task_ids - 1; // e.g. 27
+        let mut hw: Vec<u8> = vec![0; n];
+        let colors_in_use = self.alloc.colors_used.len() as u8;
+
+        let mut slot_of: Vec<usize> = vec![0; n];
+        if self.opts.recycling {
+            let mut next_slot: HashMap<usize, usize> = HashMap::new(); // phase → slot
+            for (i, t) in self.tasks.iter().enumerate() {
+                if matches!(t.kind, LTaskKind::Data { .. }) {
+                    continue;
+                }
+                let s = next_slot.entry(t.phase).or_insert(0);
+                slot_of[i] = *s;
+                *s += 1;
+            }
+        } else {
+            for (i, t) in self.tasks.iter().enumerate() {
+                if matches!(t.kind, LTaskKind::Data { .. }) {
+                    continue;
+                }
+                slot_of[i] = i;
+            }
+        }
+        let max_slot = self
+            .tasks
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| matches!(t.kind, LTaskKind::Local))
+            .map(|(i, _)| slot_of[i])
+            .max()
+            .unwrap_or(0);
+        if (max_slot as i64) > top as i64 - colors_in_use as i64 {
+            return err(format!(
+                "OOR: class {} needs {} local task IDs but only {} remain \
+                 ({} colors share the ID space){}",
+                self.region.name,
+                max_slot + 1,
+                top as i64 - colors_in_use as i64 + 1,
+                colors_in_use,
+                if self.opts.recycling { "" } else { " — enable task recycling" },
+            ));
+        }
+        for (i, t) in self.tasks.iter().enumerate() {
+            hw[i] = match &t.kind {
+                LTaskKind::Data { color, .. } => *color,
+                LTaskKind::Local => top - slot_of[i] as u8,
+            };
+        }
+
+        // Patch task-control actions from logical indices to hw IDs, and
+        // add dispatch-state selection for recycled IDs.
+        let mut share_count: HashMap<u8, usize> = HashMap::new();
+        for (i, t) in self.tasks.iter().enumerate() {
+            if matches!(t.kind, LTaskKind::Local) {
+                *share_count.entry(hw[i]).or_insert(0) += 1;
+            }
+        }
+        // One state register per recycled hardware ID, from 31 downward.
+        let mut state_reg: HashMap<u8, u8> = HashMap::new();
+        {
+            let mut next = STATE_REG_TOP;
+            let mut shared: Vec<u8> =
+                share_count.iter().filter(|(_, &n)| n > 1).map(|(&id, _)| id).collect();
+            shared.sort_unstable();
+            for id in shared {
+                if next <= SCRATCH_REG {
+                    return err(format!(
+                        "OOR: class {} recycles more than {} task IDs (state registers exhausted)",
+                        self.region.name,
+                        STATE_REG_TOP - SCRATCH_REG
+                    ));
+                }
+                state_reg.insert(id, next);
+                next -= 1;
+            }
+        }
+        // Branch index of each logical task within its hw ID (by phase
+        // order = creation order).
+        let mut branch_idx: Vec<usize> = vec![0; n];
+        {
+            let mut seen: HashMap<u8, usize> = HashMap::new();
+            for i in 0..n {
+                if matches!(self.tasks[i].kind, LTaskKind::Local) {
+                    let c = seen.entry(hw[i]).or_insert(0);
+                    branch_idx[i] = *c;
+                    *c += 1;
+                }
+            }
+        }
+        let needs_dispatch: Vec<bool> = (0..n)
+            .map(|i| {
+                matches!(self.tasks[i].kind, LTaskKind::Local)
+                    && share_count.get(&hw[i]).copied().unwrap_or(0) > 1
+            })
+            .collect();
+
+        // Rewrite actions.
+        for t in 0..n {
+            let mut body = std::mem::take(&mut self.tasks[t].body);
+            patch_actions(&mut body, &|logical: u8| {
+                let li = logical as usize;
+                let mut a = TaskAction {
+                    kind: TaskActionKind::Activate, // kind preserved by caller
+                    task: hw[li],
+                    set_reg: None,
+                };
+                if needs_dispatch[li] {
+                    a.set_reg = Some((state_reg[&hw[li]], branch_idx[li] as i64));
+                }
+                a
+            });
+            self.tasks[t].body = body;
+        }
+
+        // Emit TaskDefs: merge recycled locals into dispatch state
+        // machines.
+        let mut defs: Vec<TaskDef> = vec![];
+        let mut done: Vec<bool> = vec![false; n];
+        for i in 0..n {
+            if done[i] {
+                continue;
+            }
+            match &self.tasks[i].kind {
+                LTaskKind::Data { color, wavelet_reg } => {
+                    done[i] = true;
+                    defs.push(TaskDef {
+                        name: self.tasks[i].name.clone(),
+                        hw_id: hw[i],
+                        kind: TaskKind::Data { color: *color, wavelet_reg: *wavelet_reg },
+                        initially_active: true,
+                        initially_blocked: self.tasks[i].blocked,
+                        body: std::mem::take(&mut self.tasks[i].body),
+                    });
+                }
+                LTaskKind::Local => {
+                    let id = hw[i];
+                    let members: Vec<usize> = (i..n)
+                        .filter(|&j| {
+                            !done[j] && hw[j] == id && matches!(self.tasks[j].kind, LTaskKind::Local)
+                        })
+                        .collect();
+                    for &j in &members {
+                        done[j] = true;
+                    }
+                    if members.len() == 1 {
+                        let j = members[0];
+                        defs.push(TaskDef {
+                            name: self.tasks[j].name.clone(),
+                            hw_id: id,
+                            kind: TaskKind::Local,
+                            initially_active: false,
+                            initially_blocked: self.tasks[j].blocked,
+                            body: std::mem::take(&mut self.tasks[j].body),
+                        });
+                    } else {
+                        // Dispatch state machine: snapshot the selector at
+                        // entry (branches may set other selectors), then
+                        // branch on the snapshot.
+                        let sreg = state_reg[&id];
+                        let mut body: Vec<MOp> =
+                            vec![MOp::SetReg { reg: SCRATCH_REG, val: SExpr::Reg(sreg) }];
+                        for (bi, &j) in members.iter().enumerate() {
+                            let mut b = std::mem::take(&mut self.tasks[j].body);
+                            // Re-block before the next 2-pred occurrence.
+                            if let Some(&jn) = members.get(bi + 1) {
+                                if self.tasks[jn].two_pred_join {
+                                    b.insert(
+                                        0,
+                                        MOp::Control(TaskAction {
+                                            kind: TaskActionKind::Block,
+                                            task: id,
+                                            set_reg: None,
+                                        }),
+                                    );
+                                }
+                            }
+                            body.push(MOp::If {
+                                cond: SExpr::bin(
+                                    SBinOp::Eq,
+                                    SExpr::Reg(SCRATCH_REG),
+                                    SExpr::imm(branch_idx[j] as i64),
+                                ),
+                                then_ops: b,
+                                else_ops: vec![],
+                            });
+                        }
+                        defs.push(TaskDef {
+                            name: format!("dispatch_{id}"),
+                            hw_id: id,
+                            kind: TaskKind::Local,
+                            initially_active: false,
+                            initially_blocked: self.tasks[members[0]].blocked,
+                            body,
+                        });
+                    }
+                }
+            }
+        }
+        // Logical task 0 is the class entry.
+        Ok((defs, Some(hw[0])))
+    }
+}
+
+/// Rewrite every TaskAction target in a body from logical index to hw id
+/// (the rewriter preserves the action kind, merging in dispatch state).
+fn patch_actions(ops: &mut [MOp], f: &dyn Fn(u8) -> TaskAction) {
+    for op in ops {
+        match op {
+            MOp::Control(a) => {
+                let n = f(a.task);
+                a.task = n.task;
+                if a.set_reg.is_none() {
+                    a.set_reg = n.set_reg;
+                }
+            }
+            MOp::Dsd(d) => {
+                for a in &mut d.on_complete {
+                    let n = f(a.task);
+                    a.task = n.task;
+                    if a.set_reg.is_none() {
+                        a.set_reg = n.set_reg;
+                    }
+                }
+            }
+            MOp::If { then_ops, else_ops, .. } => {
+                patch_actions(then_ops, f);
+                patch_actions(else_ops, f);
+            }
+            MOp::For { body, .. } => patch_actions(body, f),
+            _ => {}
+        }
+    }
+}
+
+/// Does an expression reference variable `k`?
+fn contains_var(e: &Expr, k: &str) -> bool {
+    match e {
+        Expr::Ident(n) => n == k,
+        Expr::Int(_) | Expr::Float(_) => false,
+        Expr::Index(b, idx) => contains_var(b, k) || idx.iter().any(|i| contains_var(i, k)),
+        Expr::Unary(_, a) => contains_var(a, k),
+        Expr::Bin(_, a, b) => contains_var(a, k) || contains_var(b, k),
+        Expr::Cond { then, cond, els } => {
+            contains_var(then, k) || contains_var(cond, k) || contains_var(els, k)
+        }
+        Expr::Call(_, args) => args.iter().any(|a| contains_var(a, k)),
+    }
+}
+
+/// Count receive-from-arg and send-to-arg statements per (arg, field).
+fn scan_arg_io(
+    stmts: &[ir::Stmt],
+    recv: &mut HashMap<(String, String), usize>,
+    send: &mut HashMap<(String, String), usize>,
+) {
+    for s in stmts {
+        match s {
+            ir::Stmt::Recv { dst, stream: ir::StreamRef::Arg { name, .. }, .. } => {
+                // Only whole-field receives are alias candidates.
+                let f = match dst {
+                    Expr::Ident(f) => f.clone(),
+                    _ => String::new(),
+                };
+                *recv.entry((name.clone(), f)).or_insert(0) += 1;
+            }
+            ir::Stmt::Send { data, stream: ir::StreamRef::Arg { name, .. }, .. } => {
+                // Only whole-field sends are alias candidates.
+                let f = match data {
+                    Expr::Ident(f) => f.clone(),
+                    _ => String::new(),
+                };
+                *send.entry((name.clone(), f)).or_insert(0) += 1;
+            }
+            ir::Stmt::ForeachRecv { body, .. }
+            | ir::Stmt::Map { body, .. }
+            | ir::Stmt::For { body, .. }
+            | ir::Stmt::Async { body, .. } => scan_arg_io(body, recv, send),
+            ir::Stmt::If { then_body, else_body, .. } => {
+                scan_arg_io(then_body, recv, send);
+                scan_arg_io(else_body, recv, send);
+            }
+            _ => {}
+        }
+    }
+}

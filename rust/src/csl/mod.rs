@@ -1,0 +1,54 @@
+//! CSL backend (paper §V).
+//!
+//! [`compile`] drives the full pipeline from an instantiated SpaDA IR
+//! program to (a) a loadable [`crate::machine::MachineProgram`] — the
+//! "binary" the WSE-2 simulator executes — and (b) CSL-like source text
+//! (one code file per PE equivalence class plus the layout file), used
+//! for the Table II lines-of-code accounting and for inspection.
+
+pub mod lower;
+pub mod emit;
+
+pub use lower::{lower, LowerResult};
+
+use crate::ir::core as ir;
+use crate::machine::{MachineConfig, MachineProgram};
+use crate::passes::{self, Options, PassError, PassStats};
+
+/// A compiled kernel.
+#[derive(Debug)]
+pub struct Compiled {
+    pub machine: MachineProgram,
+    /// (filename, contents) — per-class code files + layout.csl.
+    pub csl_files: Vec<(String, String)>,
+    pub stats: PassStats,
+}
+
+impl Compiled {
+    /// Total CSL lines of code (Table II metric: non-blank lines across
+    /// all generated files).
+    pub fn csl_loc(&self) -> usize {
+        self.csl_files
+            .iter()
+            .map(|(_, text)| text.lines().filter(|l| !l.trim().is_empty()).count())
+            .sum()
+    }
+}
+
+/// Compile an instantiated SpaDA program for the given machine.
+pub fn compile(
+    prog: &ir::Program,
+    cfg: &MachineConfig,
+    opts: &Options,
+) -> Result<Compiled, PassError> {
+    let cb = passes::checkerboard(prog)?;
+    let classes = passes::equivalence_classes(&cb.program);
+    let alloc = passes::allocate_colors(&cb.program, cfg)?;
+    let mut res = lower(&cb.program, &classes, &alloc, cfg, opts)?;
+    res.stats.streams_split = cb.streams_split;
+    res.stats.blocks_split = cb.blocks_split;
+    res.stats.classes = classes.len();
+    res.stats.colors_used = alloc.colors_used.len();
+    let csl_files = emit::emit_csl(&res.program, cfg);
+    Ok(Compiled { machine: res.program, csl_files, stats: res.stats })
+}

@@ -1,0 +1,612 @@
+//! Stencil IR → SpaDA lowering: the placement, dataflow and compute
+//! passes of paper §IV.
+//!
+//! - **Placement**: every PE (i, j) owns a K-level column of each field;
+//!   halo buffers are allocated for each communicated (field, offset);
+//!   temporaries introduced by the compute pass are phase-scoped so the
+//!   memory optimizer can overlay them.
+//! - **Dataflow**: each distinct horizontal access offset becomes one
+//!   `relative_stream` (the Laplacian's four neighbour accesses become
+//!   four streams); senders/receivers overlap, so the checkerboard pass
+//!   later splits them into parity variants.
+//! - **Compute**: PARALLEL regions are normalized to linear combinations
+//!   of vector references plus explicit product temporaries, emitted as
+//!   single-statement `map` loops that the backend vectorizes into DSD
+//!   chains; FORWARD/BACKWARD regions become sequential `for` loops.
+
+use crate::ir::stencil::{FieldRole, Halo, KOrder, SExpr as StExpr, StencilIr};
+use crate::spada::ast::{
+    ArgDir, BinOp, BlockHeader, Expr, Item, Kernel, KernelArg, PlaceDecl, RangeExpr, Stmt,
+    StreamDecl, StreamOffset, Type,
+};
+use crate::spada::token::Span;
+
+/// A stencil lowered to a SpaDA kernel.
+pub struct StencilKernel {
+    pub ir: StencilIr,
+    pub kernel: Kernel,
+    /// Global halo widths (interior domain = [W:NX-E, N:NY-S]).
+    pub halo: Halo,
+    /// Input / output argument names (per field: `<f>_in`, `<f>_out`).
+    pub inputs: Vec<String>,
+    pub outputs: Vec<String>,
+}
+
+// --- small AST builders ------------------------------------------------
+
+fn sp() -> Span {
+    Span::default()
+}
+
+fn e_int(v: i64) -> Expr {
+    Expr::Int(v)
+}
+
+fn e_id(s: &str) -> Expr {
+    Expr::Ident(s.to_string())
+}
+
+fn e_add(a: Expr, b: Expr) -> Expr {
+    Expr::Bin(BinOp::Add, Box::new(a), Box::new(b))
+}
+
+fn e_mul(a: Expr, b: Expr) -> Expr {
+    Expr::Bin(BinOp::Mul, Box::new(a), Box::new(b))
+}
+
+/// `K + c` (c may be negative or zero).
+fn e_k_plus(c: i64) -> Expr {
+    if c == 0 {
+        e_id("K")
+    } else {
+        e_add(e_id("K"), e_int(c))
+    }
+}
+
+/// `NX + c` / `NY + c`.
+fn e_dim_plus(dim: &str, c: i64) -> Expr {
+    if c == 0 {
+        e_id(dim)
+    } else {
+        e_add(e_id(dim), e_int(c))
+    }
+}
+
+fn r_span(a: Expr, b: Expr) -> RangeExpr {
+    RangeExpr { start: a, stop: Some(b), step: None }
+}
+
+fn header(ranges: Vec<RangeExpr>) -> BlockHeader {
+    BlockHeader {
+        vars: vec![(Type::I32, "i".into()), (Type::I32, "j".into())],
+        subgrid: ranges,
+        span: sp(),
+    }
+}
+
+/// Halo buffer name for data arriving from offset (di, dj).
+fn halo_name(field: &str, di: i64, dj: i64) -> String {
+    let dir = match (di, dj) {
+        (1, 0) => "e".to_string(),
+        (-1, 0) => "w".to_string(),
+        (0, 1) => "s".to_string(),
+        (0, -1) => "n".to_string(),
+        _ => format!("d{}_{}", di, dj).replace('-', "m"),
+    };
+    format!("{field}_h_{dir}")
+}
+
+// --- normalized linear form --------------------------------------------
+
+/// A vector reference in the lowered kernel: column `name` at vertical
+/// offset `dk`.
+#[derive(Clone, Debug, PartialEq)]
+struct VRef {
+    name: String,
+    dk: i64,
+}
+
+/// Linear combination: `bias + Σ coef·ref`.
+#[derive(Clone, Debug, Default)]
+struct Lin {
+    bias: f64,
+    terms: Vec<(f64, VRef)>,
+}
+
+impl Lin {
+    fn constant(v: f64) -> Lin {
+        Lin { bias: v, terms: vec![] }
+    }
+
+    fn single(r: VRef) -> Lin {
+        Lin { bias: 0.0, terms: vec![(1.0, r)] }
+    }
+
+    fn is_const(&self) -> bool {
+        self.terms.is_empty()
+    }
+
+    fn scale(mut self, c: f64) -> Lin {
+        self.bias *= c;
+        for t in &mut self.terms {
+            t.0 *= c;
+        }
+        self
+    }
+
+    fn add(mut self, other: Lin) -> Lin {
+        self.bias += other.bias;
+        self.terms.extend(other.terms);
+        self
+    }
+}
+
+/// Compute-pass state: accumulates temporaries and preamble map stmts.
+struct ComputeCtx {
+    temps: Vec<String>,
+    preamble: Vec<Stmt>,
+    /// Map range length expression (`K + hi_rel - lo`).
+    len: Expr,
+    /// Vertical shift folded into every index (`lo` of the interval).
+    shift: i64,
+}
+
+impl ComputeCtx {
+    /// `name[k + dk + shift]`
+    fn idx(&self, r: &VRef) -> Expr {
+        let off = r.dk + self.shift;
+        let kexpr = if off == 0 {
+            e_id("k")
+        } else {
+            e_add(e_id("k"), e_int(off))
+        };
+        Expr::Index(Box::new(e_id(&r.name)), vec![kexpr])
+    }
+
+    fn lin_to_expr(&self, lin: &Lin) -> Expr {
+        let mut e: Option<Expr> = if lin.bias != 0.0 || lin.terms.is_empty() {
+            Some(Expr::Float(lin.bias))
+        } else {
+            None
+        };
+        for (c, r) in &lin.terms {
+            let term = if (*c - 1.0).abs() < f64::EPSILON {
+                self.idx(r)
+            } else {
+                e_mul(Expr::Float(*c), self.idx(r))
+            };
+            e = Some(match e {
+                None => term,
+                Some(prev) => e_add(prev, term),
+            });
+        }
+        e.unwrap()
+    }
+
+    fn fresh(&mut self) -> String {
+        let name = format!("__t{}", self.temps.len());
+        self.temps.push(name.clone());
+        name
+    }
+
+    /// Emit `t[k] = expr-of-lin` and return the temp ref.
+    fn materialize(&mut self, lin: Lin) -> VRef {
+        if lin.bias == 0.0 && lin.terms.len() == 1 && lin.terms[0].0 == 1.0 {
+            return lin.terms[0].1.clone();
+        }
+        let t = self.fresh();
+        let rhs = self.lin_to_expr(&lin);
+        let lhs = Expr::Index(Box::new(e_id(&t)), vec![e_id("k")]);
+        // Temps are written at unshifted [0:len] positions.
+        let saved = self.shift;
+        self.shift = 0;
+        let rhs_shifted = rhs; // lin refs already carry shift via idx(); see note
+        self.shift = saved;
+        self.preamble.push(Stmt::Map {
+            vars: vec![(Type::I32, "k".into())],
+            ranges: vec![r_span(e_int(0), self.len.clone())],
+            body: vec![Stmt::Assign { lhs, rhs: rhs_shifted, span: sp() }],
+            span: sp(),
+        });
+        VRef { name: t, dk: -self.shift } // so idx() re-adds shift to land on [k]
+    }
+
+    /// Emit `t[k] = a[k]·b[k]` and return the temp.
+    fn product(&mut self, a: VRef, b: VRef) -> VRef {
+        let t = self.fresh();
+        let lhs = Expr::Index(Box::new(e_id(&t)), vec![e_id("k")]);
+        let rhs = e_mul(self.idx(&a), self.idx(&b));
+        self.preamble.push(Stmt::Map {
+            vars: vec![(Type::I32, "k".into())],
+            ranges: vec![r_span(e_int(0), self.len.clone())],
+            body: vec![Stmt::Assign { lhs, rhs, span: sp() }],
+            span: sp(),
+        });
+        VRef { name: t, dk: -self.shift }
+    }
+}
+
+/// Translate a stencil expression into a linear combination, emitting
+/// product temporaries into the context as needed.
+fn linearize(e: &StExpr, ctx: &mut ComputeCtx) -> Result<Lin, String> {
+    Ok(match e {
+        StExpr::Const(v) => Lin::constant(*v),
+        StExpr::Access(a) => {
+            let name = if a.di == 0 && a.dj == 0 {
+                a.field.clone()
+            } else {
+                halo_name(&a.field, a.di, a.dj)
+            };
+            Lin::single(VRef { name, dk: a.dk })
+        }
+        StExpr::Neg(a) => linearize(a, ctx)?.scale(-1.0),
+        StExpr::Add(a, b) => linearize(a, ctx)?.add(linearize(b, ctx)?),
+        StExpr::Sub(a, b) => linearize(a, ctx)?.add(linearize(b, ctx)?.scale(-1.0)),
+        StExpr::Mul(a, b) => {
+            let la = linearize(a, ctx)?;
+            let lb = linearize(b, ctx)?;
+            if la.is_const() {
+                lb.scale(la.bias)
+            } else if lb.is_const() {
+                la.scale(lb.bias)
+            } else {
+                let ra = ctx.materialize(la);
+                let rb = ctx.materialize(lb);
+                Lin::single(ctx.product(ra, rb))
+            }
+        }
+        StExpr::Div(a, b) => {
+            let lb = linearize(b, ctx)?;
+            if !lb.is_const() || lb.bias == 0.0 {
+                return Err("division by a field is not vectorizable".into());
+            }
+            linearize(a, ctx)?.scale(1.0 / lb.bias)
+        }
+    })
+}
+
+/// Translate a stencil expression for the sequential (FORWARD/BACKWARD)
+/// path: direct scalar indexing, no temporaries.
+fn scalar_expr(e: &StExpr, kvar: &str) -> Expr {
+    match e {
+        StExpr::Const(v) => Expr::Float(*v),
+        StExpr::Access(a) => {
+            let name = if a.di == 0 && a.dj == 0 {
+                a.field.clone()
+            } else {
+                halo_name(&a.field, a.di, a.dj)
+            };
+            let idx = if a.dk == 0 {
+                e_id(kvar)
+            } else {
+                e_add(e_id(kvar), e_int(a.dk))
+            };
+            Expr::Index(Box::new(e_id(&name)), vec![idx])
+        }
+        StExpr::Neg(a) => Expr::Unary(crate::spada::ast::UnOp::Neg, Box::new(scalar_expr(a, kvar))),
+        StExpr::Add(a, b) => {
+            Expr::Bin(BinOp::Add, Box::new(scalar_expr(a, kvar)), Box::new(scalar_expr(b, kvar)))
+        }
+        StExpr::Sub(a, b) => {
+            Expr::Bin(BinOp::Sub, Box::new(scalar_expr(a, kvar)), Box::new(scalar_expr(b, kvar)))
+        }
+        StExpr::Mul(a, b) => {
+            Expr::Bin(BinOp::Mul, Box::new(scalar_expr(a, kvar)), Box::new(scalar_expr(b, kvar)))
+        }
+        StExpr::Div(a, b) => {
+            Expr::Bin(BinOp::Div, Box::new(scalar_expr(a, kvar)), Box::new(scalar_expr(b, kvar)))
+        }
+    }
+}
+
+/// Lower an analyzed stencil to a SpaDA kernel with meta-params K, NX, NY.
+pub fn lower_stencil(ir: &StencilIr) -> Result<StencilKernel, String> {
+    // Global halo (interior domain bounds).
+    let mut halo = Halo::default();
+    for h in ir.halos.values() {
+        halo.west = halo.west.max(h.west);
+        halo.east = halo.east.max(h.east);
+        halo.north = halo.north.max(h.north);
+        halo.south = halo.south.max(h.south);
+    }
+    let full = vec![
+        r_span(e_int(0), e_id("NX")),
+        r_span(e_int(0), e_id("NY")),
+    ];
+    let interior = vec![
+        r_span(e_int(halo.west), e_dim_plus("NX", -halo.east)),
+        r_span(e_int(halo.north), e_dim_plus("NY", -halo.south)),
+    ];
+
+    let mut args: Vec<KernelArg> = vec![];
+    let mut inputs = vec![];
+    let mut outputs = vec![];
+    for f in &ir.fields {
+        let role = ir.roles[f];
+        if matches!(role, FieldRole::Input | FieldRole::InOut) {
+            args.push(KernelArg::Stream {
+                elem_ty: Type::F32,
+                extents: vec![e_id("NX"), e_id("NY")],
+                dir: ArgDir::ReadOnly,
+                name: format!("{f}_ain"),
+            });
+            inputs.push(format!("{f}_ain"));
+        }
+        if matches!(role, FieldRole::Output | FieldRole::InOut) {
+            args.push(KernelArg::Stream {
+                elem_ty: Type::F32,
+                extents: vec![e_id("NX"), e_id("NY")],
+                dir: ArgDir::WriteOnly,
+                name: format!("{f}_aout"),
+            });
+            outputs.push(format!("{f}_aout"));
+        }
+    }
+
+    let mut items: Vec<Item> = vec![];
+
+    // ---- Placement pass: field columns + halo buffers ------------------
+    let mut place_decls: Vec<PlaceDecl> = ir
+        .fields
+        .iter()
+        .map(|f| PlaceDecl { ty: Type::F32, dims: vec![e_id("K")], name: f.clone(), span: sp() })
+        .collect();
+    let comm = ir.comm_offsets();
+    for (f, di, dj) in &comm {
+        place_decls.push(PlaceDecl {
+            ty: Type::F32,
+            dims: vec![e_id("K")],
+            name: halo_name(f, *di, *dj),
+            span: sp(),
+        });
+    }
+    items.push(Item::Place { header: header(full.clone()), decls: place_decls });
+
+    // ---- Input phase ---------------------------------------------------
+    let mut in_stmts: Vec<Stmt> = vec![];
+    for f in &ir.fields {
+        if matches!(ir.roles[f], FieldRole::Input | FieldRole::InOut) {
+            in_stmts.push(Stmt::AwaitStmt {
+                op: Box::new(Stmt::Receive {
+                    dst: e_id(f),
+                    stream: Expr::Index(
+                        Box::new(e_id(&format!("{f}_ain"))),
+                        vec![e_id("i"), e_id("j")],
+                    ),
+                    span: sp(),
+                }),
+                span: sp(),
+            });
+        }
+    }
+    if !in_stmts.is_empty() {
+        items.push(Item::Phase {
+            items: vec![Item::Compute { header: header(full.clone()), body: in_stmts }],
+            span: sp(),
+        });
+    }
+
+    // ---- Dataflow pass: halo exchange phase -----------------------------
+    if !comm.is_empty() {
+        let mut phase_items: Vec<Item> = vec![];
+        let mut streams: Vec<StreamDecl> = vec![];
+        let mut sends: Vec<(Vec<RangeExpr>, Stmt)> = vec![];
+        let mut recvs: Vec<(Vec<RangeExpr>, Stmt)> = vec![];
+        for (f, di, dj) in &comm {
+            let sname = format!("s_{}", halo_name(f, *di, *dj));
+            // Owner (i+di, j+dj) sends to (i, j): stream offset (-di, -dj).
+            streams.push(StreamDecl {
+                elem_ty: Type::F32,
+                name: sname.clone(),
+                dx: StreamOffset::Scalar(e_int(-di)),
+                dy: StreamOffset::Scalar(e_int(-dj)),
+                span: sp(),
+            });
+            // Sender subgrid: PEs whose target stays on the grid.
+            let xr = r_span(e_int((*di).max(0)), e_dim_plus("NX", (*di).min(0)));
+            let yr = r_span(e_int((*dj).max(0)), e_dim_plus("NY", (*dj).min(0)));
+            sends.push((
+                vec![xr, yr],
+                Stmt::Send { data: e_id(f), stream: e_id(&sname), span: sp() },
+            ));
+            // Receiver subgrid: shifted by (-di, -dj).
+            let xr = r_span(e_int((-*di).max(0)), e_dim_plus("NX", (-*di).min(0)));
+            let yr = r_span(e_int((-*dj).max(0)), e_dim_plus("NY", (-*dj).min(0)));
+            recvs.push((
+                vec![xr, yr],
+                Stmt::Receive {
+                    dst: e_id(&halo_name(f, *di, *dj)),
+                    stream: e_id(&sname),
+                    span: sp(),
+                },
+            ));
+        }
+        phase_items.push(Item::Dataflow { header: header(full.clone()), decls: streams });
+        for (sub, stmt) in sends.into_iter().chain(recvs) {
+            phase_items.push(Item::Compute { header: header(sub), body: vec![stmt] });
+        }
+        items.push(Item::Phase { items: phase_items, span: sp() });
+    }
+
+    // ---- Compute pass ----------------------------------------------------
+    let mut temps_all: Vec<String> = vec![];
+    let mut compute_stmts: Vec<Stmt> = vec![];
+    for region in &ir.regions {
+        match region.order {
+            KOrder::Parallel => {
+                let len = {
+                    let c = region.interval.hi_rel - region.interval.lo;
+                    e_k_plus(c)
+                };
+                for stmt in &region.stmts {
+                    let mut ctx = ComputeCtx {
+                        temps: temps_all.clone(),
+                        preamble: vec![],
+                        len: len.clone(),
+                        shift: region.interval.lo,
+                    };
+                    let lin = linearize(&stmt.expr, &mut ctx)?;
+                    let rhs = ctx.lin_to_expr(&lin);
+                    let kexpr = if region.interval.lo == 0 {
+                        e_id("k")
+                    } else {
+                        e_add(e_id("k"), e_int(region.interval.lo))
+                    };
+                    let lhs = Expr::Index(Box::new(e_id(&stmt.target)), vec![kexpr]);
+                    compute_stmts.extend(ctx.preamble.clone());
+                    compute_stmts.push(Stmt::Map {
+                        vars: vec![(Type::I32, "k".into())],
+                        ranges: vec![r_span(e_int(0), len.clone())],
+                        body: vec![Stmt::Assign { lhs, rhs, span: sp() }],
+                        span: sp(),
+                    });
+                    temps_all = ctx.temps;
+                }
+            }
+            KOrder::Forward | KOrder::Backward => {
+                for stmt in &region.stmts {
+                    // Sequential loop over [lo : K + hi_rel].
+                    let kvar = "k";
+                    let (lhs_idx, body_expr) = if region.order == KOrder::Forward {
+                        (e_id(kvar), scalar_expr(&stmt.expr, kvar))
+                    } else {
+                        // Backward: iterate an ascending counter, index
+                        // reversed: kk = (K + hi_rel - 1) - k + lo.
+                        let rev = Expr::Bin(
+                            BinOp::Sub,
+                            Box::new(e_k_plus(region.interval.hi_rel - 1 + region.interval.lo)),
+                            Box::new(e_id(kvar)),
+                        );
+                        // Substitute via a let: kk = rev; use kk.
+                        (rev.clone(), scalar_expr(&stmt.expr, "__kk"))
+                    };
+                    let mut body = vec![];
+                    if region.order == KOrder::Backward {
+                        body.push(Stmt::Let {
+                            ty: Type::I32,
+                            name: "__kk".into(),
+                            init: lhs_idx.clone(),
+                            span: sp(),
+                        });
+                        body.push(Stmt::Assign {
+                            lhs: Expr::Index(Box::new(e_id(&stmt.target)), vec![e_id("__kk")]),
+                            rhs: body_expr,
+                            span: sp(),
+                        });
+                    } else {
+                        body.push(Stmt::Assign {
+                            lhs: Expr::Index(Box::new(e_id(&stmt.target)), vec![lhs_idx]),
+                            rhs: body_expr,
+                            span: sp(),
+                        });
+                    }
+                    compute_stmts.push(Stmt::For {
+                        var: (Type::I64, kvar.into()),
+                        range: RangeExpr {
+                            start: e_int(region.interval.lo),
+                            stop: Some(e_k_plus(region.interval.hi_rel)),
+                            step: None,
+                        },
+                        body,
+                        span: sp(),
+                    });
+                }
+            }
+        }
+    }
+    {
+        let mut phase_items: Vec<Item> = vec![];
+        if !temps_all.is_empty() {
+            // Temporaries are phase-scoped: the memory optimizer overlays
+            // them with other phases' scratch.
+            phase_items.push(Item::Place {
+                header: header(interior.clone()),
+                decls: temps_all
+                    .iter()
+                    .map(|t| PlaceDecl {
+                        ty: Type::F32,
+                        dims: vec![e_id("K")],
+                        name: t.clone(),
+                        span: sp(),
+                    })
+                    .collect(),
+            });
+        }
+        phase_items.push(Item::Compute { header: header(interior.clone()), body: compute_stmts });
+        items.push(Item::Phase { items: phase_items, span: sp() });
+    }
+
+    // ---- Output phase ----------------------------------------------------
+    let mut out_stmts: Vec<Stmt> = vec![];
+    for f in &ir.fields {
+        if matches!(ir.roles[f], FieldRole::Output | FieldRole::InOut) {
+            out_stmts.push(Stmt::AwaitStmt {
+                op: Box::new(Stmt::Send {
+                    data: e_id(f),
+                    stream: Expr::Index(
+                        Box::new(e_id(&format!("{f}_aout"))),
+                        vec![e_id("i"), e_id("j")],
+                    ),
+                    span: sp(),
+                }),
+                span: sp(),
+            });
+        }
+    }
+    if !out_stmts.is_empty() {
+        items.push(Item::Phase {
+            items: vec![Item::Compute { header: header(full.clone()), body: out_stmts }],
+            span: sp(),
+        });
+    }
+
+    let kernel = Kernel {
+        name: ir.name.clone(),
+        meta_params: vec!["K".into(), "NX".into(), "NY".into()],
+        args,
+        items,
+    };
+    Ok(StencilKernel { ir: ir.clone(), kernel, halo, inputs, outputs })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::{parse_stencil, LAPLACIAN, UVBKE, VERTICAL};
+    use crate::spada::pretty;
+
+    #[test]
+    fn laplacian_lowers() {
+        let ir = parse_stencil(LAPLACIAN).unwrap();
+        let sk = lower_stencil(&ir).unwrap();
+        assert_eq!(sk.kernel.meta_params, vec!["K", "NX", "NY"]);
+        // 4 streams, 1 halo per direction.
+        let printed = pretty::print_kernel(&sk.kernel);
+        assert!(printed.contains("relative_stream"), "{printed}");
+        assert_eq!(printed.matches("relative_stream").count(), 4);
+        assert!(printed.contains("in_field_h_e"));
+        assert_eq!((sk.halo.west, sk.halo.east, sk.halo.north, sk.halo.south), (1, 1, 1, 1));
+        // Reparses through the normal front end.
+        crate::spada::parse_kernel(&printed).unwrap();
+    }
+
+    #[test]
+    fn vertical_lowers_sequential() {
+        let ir = parse_stencil(VERTICAL).unwrap();
+        let sk = lower_stencil(&ir).unwrap();
+        let printed = pretty::print_kernel(&sk.kernel);
+        assert!(printed.contains("for i64 k"), "{printed}");
+        assert!(!printed.contains("relative_stream"));
+        crate::spada::parse_kernel(&printed).unwrap();
+    }
+
+    #[test]
+    fn uvbke_introduces_temps() {
+        let ir = parse_stencil(UVBKE).unwrap();
+        let sk = lower_stencil(&ir).unwrap();
+        let printed = pretty::print_kernel(&sk.kernel);
+        assert!(printed.contains("__t0"), "{printed}");
+        assert_eq!(printed.matches("relative_stream").count(), 2);
+        crate::spada::parse_kernel(&printed).unwrap();
+    }
+}

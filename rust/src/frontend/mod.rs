@@ -1,0 +1,27 @@
+//! GT4Py-style stencil DSL frontend (paper §IV).
+//!
+//! The production path in the paper is GT4Py (Python) → Stencil IR →
+//! SpaDA → CSL. Here the same Stencil IR and the three lowering passes
+//! (placement / dataflow / compute) are implemented over a textual
+//! GT4Py-style stencil language; `python/gt4py_like/` emits this text
+//! from Python stencil definitions, so the Python front half of the
+//! pipeline is preserved while the build stays Rust-only at runtime.
+
+pub mod parser;
+pub mod lower;
+
+pub use lower::{lower_stencil, StencilKernel};
+pub use parser::parse_stencil;
+
+/// Built-in stencil sources (the paper's three evaluated stencils).
+pub const LAPLACIAN: &str = include_str!("stencils/laplacian.gt");
+pub const VERTICAL: &str = include_str!("stencils/vertical.gt");
+pub const UVBKE: &str = include_str!("stencils/uvbke.gt");
+
+pub fn stencil_sources() -> Vec<(&'static str, &'static str)> {
+    vec![("laplacian", LAPLACIAN), ("vertical", VERTICAL), ("uvbke", UVBKE)]
+}
+
+pub fn stencil_source(name: &str) -> Option<&'static str> {
+    stencil_sources().into_iter().find(|(n, _)| *n == name).map(|(_, s)| s)
+}

@@ -1,0 +1,260 @@
+//! Parser for the GT4Py-style stencil DSL.
+//!
+//! Grammar (keywords are ordinary identifiers, reusing the SpaDA lexer):
+//!
+//! ```text
+//! stencil NAME(f32 field, ...) {
+//!   computation(PARALLEL|FORWARD|BACKWARD) interval(lo, hi_rel) {
+//!     field = expr          // expr over field[di, dj, dk] and literals
+//!     ...
+//!   }
+//!   ...
+//! }
+//! ```
+//!
+//! `interval(lo, hi_rel)` selects vertical levels `lo .. K + hi_rel`
+//! (GT4Py's `interval(...)` ≡ `interval(0, 0)`).
+
+use crate::ir::stencil::{Access, KInterval, KOrder, Region, SExpr, SStmt, StencilIr};
+use crate::spada::lexer::Lexer;
+use crate::spada::token::{Tok, Token};
+
+/// Parse a stencil definition into the analyzed Stencil IR.
+pub fn parse_stencil(src: &str) -> Result<StencilIr, String> {
+    let tokens = Lexer::new(src).tokenize().map_err(|e| e.to_string())?;
+    let mut p = P { toks: tokens, pos: 0 };
+    p.stencil()
+}
+
+struct P {
+    toks: Vec<Token>,
+    pos: usize,
+}
+
+impl P {
+    fn peek(&self) -> &Tok {
+        &self.toks[self.pos.min(self.toks.len() - 1)].tok
+    }
+
+    fn bump(&mut self) -> Tok {
+        let t = self.peek().clone();
+        self.pos += 1;
+        t
+    }
+
+    fn expect(&mut self, t: Tok) -> Result<(), String> {
+        if *self.peek() == t {
+            self.bump();
+            Ok(())
+        } else {
+            Err(format!("expected {t}, found {}", self.peek()))
+        }
+    }
+
+    fn ident(&mut self) -> Result<String, String> {
+        match self.bump() {
+            Tok::Ident(s) => Ok(s),
+            other => Err(format!("expected identifier, found {other}")),
+        }
+    }
+
+    fn kw(&mut self, word: &str) -> Result<(), String> {
+        match self.bump() {
+            Tok::Ident(s) if s == word => Ok(()),
+            other => Err(format!("expected '{word}', found {other}")),
+        }
+    }
+
+    fn int(&mut self) -> Result<i64, String> {
+        match self.bump() {
+            Tok::Int(v) => Ok(v),
+            Tok::Minus => match self.bump() {
+                Tok::Int(v) => Ok(-v),
+                other => Err(format!("expected integer, found {other}")),
+            },
+            other => Err(format!("expected integer, found {other}")),
+        }
+    }
+
+    fn stencil(&mut self) -> Result<StencilIr, String> {
+        self.kw("stencil")?;
+        let name = self.ident()?;
+        self.expect(Tok::LParen)?;
+        let mut fields = vec![];
+        while *self.peek() != Tok::RParen {
+            // `f32 name` — the type token comes from the SpaDA lexer.
+            match self.bump() {
+                Tok::TyF32 => {}
+                other => return Err(format!("only f32 fields are supported, found {other}")),
+            }
+            fields.push(self.ident()?);
+            if *self.peek() == Tok::Comma {
+                self.bump();
+            }
+        }
+        self.expect(Tok::RParen)?;
+        self.expect(Tok::LBrace)?;
+        let mut regions = vec![];
+        while *self.peek() != Tok::RBrace {
+            regions.push(self.region(&fields)?);
+        }
+        self.expect(Tok::RBrace)?;
+        StencilIr::analyze(&name, fields, regions)
+    }
+
+    fn region(&mut self, fields: &[String]) -> Result<Region, String> {
+        self.kw("computation")?;
+        self.expect(Tok::LParen)?;
+        let order = match self.ident()?.as_str() {
+            "PARALLEL" => KOrder::Parallel,
+            "FORWARD" => KOrder::Forward,
+            "BACKWARD" => KOrder::Backward,
+            other => return Err(format!("unknown computation order {other}")),
+        };
+        self.expect(Tok::RParen)?;
+        self.kw("interval")?;
+        self.expect(Tok::LParen)?;
+        let lo = self.int()?;
+        self.expect(Tok::Comma)?;
+        let hi_rel = self.int()?;
+        self.expect(Tok::RParen)?;
+        if lo < 0 || hi_rel > 0 {
+            return Err(format!("interval({lo}, {hi_rel}): need lo >= 0 and hi_rel <= 0"));
+        }
+        self.expect(Tok::LBrace)?;
+        let mut stmts = vec![];
+        while *self.peek() != Tok::RBrace {
+            let target = self.ident()?;
+            if !fields.contains(&target) {
+                return Err(format!("assignment to undeclared field {target}"));
+            }
+            self.expect(Tok::Assign)?;
+            let expr = self.expr(fields)?;
+            stmts.push(SStmt { target, expr });
+        }
+        self.expect(Tok::RBrace)?;
+        Ok(Region { order, interval: KInterval { lo, hi_rel }, stmts })
+    }
+
+    // Precedence: add/sub < mul/div < unary < primary.
+    fn expr(&mut self, fields: &[String]) -> Result<SExpr, String> {
+        let mut e = self.mul_expr(fields)?;
+        loop {
+            match self.peek() {
+                Tok::Plus => {
+                    self.bump();
+                    let r = self.mul_expr(fields)?;
+                    e = SExpr::Add(Box::new(e), Box::new(r));
+                }
+                Tok::Minus => {
+                    self.bump();
+                    let r = self.mul_expr(fields)?;
+                    e = SExpr::Sub(Box::new(e), Box::new(r));
+                }
+                _ => break,
+            }
+        }
+        Ok(e)
+    }
+
+    fn mul_expr(&mut self, fields: &[String]) -> Result<SExpr, String> {
+        let mut e = self.unary_expr(fields)?;
+        loop {
+            match self.peek() {
+                Tok::Star => {
+                    self.bump();
+                    let r = self.unary_expr(fields)?;
+                    e = SExpr::Mul(Box::new(e), Box::new(r));
+                }
+                Tok::Slash => {
+                    self.bump();
+                    let r = self.unary_expr(fields)?;
+                    e = SExpr::Div(Box::new(e), Box::new(r));
+                }
+                _ => break,
+            }
+        }
+        Ok(e)
+    }
+
+    fn unary_expr(&mut self, fields: &[String]) -> Result<SExpr, String> {
+        if *self.peek() == Tok::Minus {
+            self.bump();
+            return Ok(SExpr::Neg(Box::new(self.unary_expr(fields)?)));
+        }
+        self.primary(fields)
+    }
+
+    fn primary(&mut self, fields: &[String]) -> Result<SExpr, String> {
+        match self.bump() {
+            Tok::Int(v) => Ok(SExpr::Const(v as f64)),
+            Tok::Float(v) => Ok(SExpr::Const(v)),
+            Tok::LParen => {
+                let e = self.expr(fields)?;
+                self.expect(Tok::RParen)?;
+                Ok(e)
+            }
+            Tok::Ident(f) => {
+                if !fields.contains(&f) {
+                    return Err(format!("unknown field {f}"));
+                }
+                self.expect(Tok::LBracket)?;
+                let di = self.int()?;
+                self.expect(Tok::Comma)?;
+                let dj = self.int()?;
+                self.expect(Tok::Comma)?;
+                let dk = self.int()?;
+                self.expect(Tok::RBracket)?;
+                Ok(SExpr::Access(Access { field: f, di, dj, dk }))
+            }
+            other => Err(format!("unexpected token {other} in stencil expression")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::{LAPLACIAN, UVBKE, VERTICAL};
+    use crate::ir::stencil::FieldRole;
+
+    #[test]
+    fn laplacian_parses() {
+        let ir = parse_stencil(LAPLACIAN).unwrap();
+        assert_eq!(ir.name, "laplace");
+        assert_eq!(ir.comm_offsets().len(), 4);
+        assert_eq!(ir.roles["out_field"], FieldRole::Output);
+        assert_eq!(ir.flops_per_point(), 5);
+    }
+
+    #[test]
+    fn vertical_parses() {
+        let ir = parse_stencil(VERTICAL).unwrap();
+        assert_eq!(ir.regions.len(), 2);
+        assert!(ir.comm_offsets().is_empty());
+        assert_eq!(ir.k_reach, 1);
+        assert_eq!(ir.regions[1].order, KOrder::Forward);
+    }
+
+    #[test]
+    fn uvbke_parses() {
+        let ir = parse_stencil(UVBKE).unwrap();
+        assert_eq!(ir.comm_offsets().len(), 2); // u west, v north
+        let hu = ir.halos["u"];
+        assert_eq!((hu.west, hu.east), (1, 0));
+        let hv = ir.halos["v"];
+        assert_eq!((hv.north, hv.south), (1, 0));
+    }
+
+    #[test]
+    fn bad_interval_rejected() {
+        let src = "stencil s(f32 a) { computation(PARALLEL) interval(-1, 0) { a = 1.0 } }";
+        assert!(parse_stencil(src).is_err());
+    }
+
+    #[test]
+    fn unknown_field_rejected() {
+        let src = "stencil s(f32 a) { computation(PARALLEL) interval(0, 0) { b = 1.0 } }";
+        assert!(parse_stencil(src).is_err());
+    }
+}

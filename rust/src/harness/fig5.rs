@@ -1,0 +1,38 @@
+//! Fig. 5: 1-D broadcast collectives (512×1 PEs) — SpaDA's single
+//! multicast stream vs the handwritten broadcast.
+
+use super::common::run_broadcast;
+use crate::baselines::luczynski;
+use crate::bench::Table;
+use crate::passes::Options;
+use anyhow::Result;
+
+pub fn run(quick: bool) -> Result<()> {
+    let p: i64 = if quick { 64 } else { 512 };
+    let sizes: &[i64] = if quick { &[16, 256] } else { &[1, 4, 16, 64, 256, 1024, 4096] };
+    println!("1-D broadcast on {p}x1 PEs (paper: 512x1)");
+    let mut table = Table::new(&["K", "bytes", "SpaDA[cyc]", "handwritten", "ratio", "flows"]);
+    for &k in sizes {
+        let run = run_broadcast(p, k, &Options::default())?;
+        let hand = luczynski::broadcast_1d(p as u64, k as u64);
+        table.row(&[
+            k.to_string(),
+            (4 * k).to_string(),
+            run.report.cycles.to_string(),
+            format!("{hand:.0}"),
+            format!("{:.2}x", run.report.cycles as f64 / hand),
+            run.report.metrics.flows.to_string(),
+        ]);
+    }
+    table.print();
+    println!("(paper: 30%-100% overhead vs handwritten, one DSD op — we also use one multicast flow)");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn fig5_quick() {
+        super::run(true).unwrap();
+    }
+}

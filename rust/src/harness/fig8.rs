@@ -1,0 +1,80 @@
+//! Fig. 8: roofline + performance-per-Watt.
+//!
+//! Places every kernel on the WSE-2 roofline (SRAM 8.8 PB/s effective,
+//! fabric on/off-ramp 3.3 PB/s, FP32 peak) using measured arithmetic
+//! intensities from the simulator's traffic counters, alongside the
+//! analytic A100 points, annotated with GFLOP/s/W.
+
+use super::common::{extrapolate_floprate, run_gemv, run_reduce, run_stencil, PAPER_PES};
+use crate::baselines::{a100, wse2};
+use crate::bench::{eng, Table};
+use crate::machine::MachineConfig;
+use crate::passes::Options;
+use anyhow::Result;
+
+pub fn run(quick: bool) -> Result<()> {
+    let (nx, ny): (i64, i64) = if quick { (8, 8) } else { (32, 32) };
+    let k = if quick { 8 } else { 64 };
+    let cfg = MachineConfig::with_grid(nx, ny);
+    let freq = cfg.freq_ghz * 1e9;
+
+    println!("roofline: intensities measured from simulator traffic counters;");
+    println!("rates extrapolated to {PAPER_PES} PEs; GF/W at 16.5 kW (WSE-2) / 250 W (A100)");
+    let mut table = Table::new(&[
+        "kernel", "I_mem[f/B]", "I_ramp[f/B]", "flop/s(wafer)", "roofline", "%roof", "GF/W",
+    ]);
+
+    let mut add = |name: &str, report: &crate::machine::RunReport| {
+        let rate = extrapolate_floprate(report.flops_per_sec(&cfg), (nx * ny) as f64);
+        let im = report.intensity_mem();
+        let ir = report.intensity_ramp();
+        let bound = wse2::bound_floprate(PAPER_PES, freq, im, ir);
+        let gfw = rate / 1e9 / wse2::POWER_LOW_W;
+        table.row(&[
+            name.to_string(),
+            format!("{im:.3}"),
+            if ir.is_finite() { format!("{ir:.3}") } else { "inf".into() },
+            eng(rate),
+            eng(bound),
+            format!("{:.0}%", 100.0 * rate / bound),
+            format!("{gfw:.2}"),
+        ]);
+    };
+
+    for name in ["laplacian", "uvbke", "vertical"] {
+        let r = run_stencil(name, nx, ny, k, &Options::default())?;
+        add(name, &r.run.report);
+    }
+    {
+        let (run, _, _) = run_gemv(if quick { 64 } else { 1024 }, if quick { 8 } else { 32 }, &Options::default())?;
+        add("gemv", &run.report);
+    }
+    {
+        let (run, _) = run_reduce("two_phase_reduce", nx, ny, k, &Options::default())?;
+        add("two_phase_reduce", &run.report);
+    }
+    table.print();
+
+    println!("\nA100 baselines (analytic, DRAM-bound):");
+    let mut gpu = Table::new(&["kernel", "flop/s", "GF/W"]);
+    for (name, fpp, fields) in
+        [("laplacian", 5.0, 2.0), ("uvbke", 7.0, 3.0), ("vertical", 2.0, 2.0)]
+    {
+        let rate = a100::stencil_floprate(fpp, fields, 746.0 * 990.0 * 80.0);
+        gpu.row(&[name.to_string(), eng(rate), format!("{:.2}", rate / 1e9 / a100::POWER_W)]);
+    }
+    let rate = a100::gemv_floprate(16384.0, 16384.0);
+    gpu.row(&["gemv".into(), eng(rate), format!("{:.2}", rate / 1e9 / a100::POWER_W)]);
+    gpu.print();
+    println!("(paper: stencils ramp-bound near 3.3 PB/s; GEMV below roofline — naive dot \
+              product; WSE stencils up to 12 GF/W vs A100 ~4 GF/W)");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn fig8_quick() {
+        super::run(true).unwrap();
+    }
+}

@@ -1,0 +1,109 @@
+//! Fig. 9: compiler-pass ablation study — performance and PE resource
+//! utilization with task fusion, task-ID recycling and copy elimination
+//! disabled. OOR/OOM outcomes are first-class results (the paper's tree
+//! reduce "would not compile" without recycling + fusion).
+
+use super::common::{compile_stencil, run_reduce, run_stencil};
+use crate::bench::Table;
+use crate::kernels;
+use crate::machine::MachineConfig;
+use crate::passes::Options;
+use anyhow::Result;
+
+const VARIANTS: &[(&str, Options)] = &[
+    ("all-on", Options { fusion: true, recycling: true, copy_elim: true }),
+    ("no-fusion", Options { fusion: false, recycling: true, copy_elim: true }),
+    ("no-recycle", Options { fusion: true, recycling: false, copy_elim: true }),
+    ("no-copyelim", Options { fusion: true, recycling: true, copy_elim: false }),
+    ("none", Options { fusion: false, recycling: false, copy_elim: false }),
+];
+
+fn row_of(
+    name: &str,
+    variant: &str,
+    res: Result<(u64, usize, usize, u32)>,
+    table: &mut Table,
+) {
+    match res {
+        Ok((cycles, colors, task_ids, mem)) => table.row(&[
+            name.to_string(),
+            variant.to_string(),
+            cycles.to_string(),
+            colors.to_string(),
+            task_ids.to_string(),
+            format!("{:.1}KB", mem as f64 / 1024.0),
+        ]),
+        Err(e) => {
+            let what = if e.to_string().contains("OOM") {
+                "OOM"
+            } else if e.to_string().contains("OOR") {
+                "OOR"
+            } else {
+                "ERR"
+            };
+            table.row(&[
+                name.to_string(),
+                variant.to_string(),
+                what.to_string(),
+                "-".into(),
+                "-".into(),
+                what.to_string(),
+            ]);
+        }
+    }
+}
+
+pub fn run(quick: bool) -> Result<()> {
+    let mut table =
+        Table::new(&["kernel", "variant", "cycles", "colors", "taskIDs", "mem/PE"]);
+
+    // (a) UVBKE stencil (paper: 746x990x320).
+    let (nx, ny, k) = if quick { (8i64, 8i64, 16i64) } else { (32, 32, 320) };
+    for (vname, opts) in VARIANTS {
+        let res = run_stencil("uvbke", nx, ny, k, opts).map(|r| {
+            (
+                r.run.report.cycles,
+                r.run.stats.colors_used,
+                r.run.stats.hw_task_ids,
+                r.run.stats.mem_bytes_max,
+            )
+        });
+        row_of("uvbke", vname, res.map_err(anyhow::Error::from), &mut table);
+    }
+
+    // (b) Tree 2-D reduce, 1 KB message (paper: 512x512; needs
+    // 2·log2(P) colors and per-level tasks → OOR without recycling).
+    let g = if quick { 16 } else { 64 };
+    for (vname, opts) in VARIANTS {
+        let res = run_reduce("tree_reduce", g, g, 256, opts).map(|(r, _)| {
+            (r.report.cycles, r.stats.colors_used, r.stats.hw_task_ids, r.stats.mem_bytes_max)
+        });
+        row_of("tree_reduce(1KB)", vname, res, &mut table);
+    }
+
+    // (c) Two-phase 2-D reduce, 16 KB message (paper: staging buffers
+    // exhaust the 48 KB PE memory without copy elimination).
+    let k16 = 4096; // 16 KB of f32
+    for (vname, opts) in VARIANTS {
+        let res = run_reduce("two_phase_reduce", g, g, k16, opts).map(|(r, _)| {
+            (r.report.cycles, r.stats.colors_used, r.stats.hw_task_ids, r.stats.mem_bytes_max)
+        });
+        row_of("two_phase(16KB)", vname, res, &mut table);
+    }
+
+    table.print();
+    println!("(paper Fig. 9: optimizations improve runtime and memory; tree reduce is OOR \
+              without recycling/fusion; two-phase 16KB is OOM without copy elimination)");
+    let _ = compile_stencil; // used by perf pass
+    let _ = MachineConfig::wse2;
+    let _ = kernels::sources;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn fig9_quick() {
+        super::run(true).unwrap();
+    }
+}

@@ -1,0 +1,47 @@
+//! Experiment harness: regenerates every table and figure of the
+//! paper's evaluation (§VI). One module per artifact; the [`run`]
+//! dispatcher is shared by the CLI (`spada bench --exp <id>`) and the
+//! cargo benches.
+//!
+//! Simulations run at scaled-down grids (the simulator is cycle-faithful
+//! but this host is not a wafer); each module prints both the measured
+//! numbers and the documented extrapolation to the paper's 750×994
+//! fabric. EXPERIMENTS.md records paper-vs-measured per artifact.
+
+pub mod common;
+pub mod table2;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+pub mod verify;
+
+use anyhow::{bail, Result};
+
+/// All experiment ids.
+pub const ALL: &[&str] =
+    &["table2", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "verify"];
+
+/// Run one experiment (or "all"). `quick` trims sweeps for CI.
+pub fn run(exp: &str, quick: bool) -> Result<()> {
+    match exp {
+        "table2" => table2::run(),
+        "fig4" => fig4::run(quick),
+        "fig5" => fig5::run(quick),
+        "fig6" => fig6::run(quick),
+        "fig7" => fig7::run(quick),
+        "fig8" => fig8::run(quick),
+        "fig9" => fig9::run(quick),
+        "verify" => verify::run(),
+        "all" => {
+            for e in ALL {
+                println!("\n=== {e} ===");
+                run(e, quick)?;
+            }
+            Ok(())
+        }
+        other => bail!("unknown experiment {other} (try: {} or all)", ALL.join(", ")),
+    }
+}

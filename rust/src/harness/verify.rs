@@ -1,0 +1,150 @@
+//! Numerical verification: WSE-2 simulator outputs vs the PJRT-executed
+//! JAX/Pallas oracles (the three-layer round trip).
+//!
+//! Shapes must match the artifacts emitted by `python/compile/aot.py`.
+
+use super::common::{rand_vec, run_stencil};
+use crate::kernels;
+use crate::machine::{MachineConfig, Simulator};
+use crate::passes::Options;
+use crate::runtime::{max_rel_err, Input, Runtime};
+use anyhow::{bail, Context, Result};
+
+const TOL: f32 = 1e-4;
+
+pub fn run() -> Result<()> {
+    let rt = Runtime::new(Runtime::default_dir())
+        .context("PJRT runtime (did you run `make artifacts`?)")?;
+    println!("PJRT platform: {}", rt.platform());
+
+    // ---- reduce_16x64: tree reduce on a 16-PE row --------------------
+    {
+        let (p, k) = (16i64, 64i64);
+        let data = rand_vec(1, (p * k) as usize);
+        let cfg = MachineConfig::with_grid(p, 1);
+        let (prog, _, _) = kernels::compile(
+            "tree_reduce",
+            &[("K", k), ("NX", p), ("NY", 1)],
+            &cfg,
+            &Options::default(),
+        )?;
+        let mut sim = Simulator::new(cfg, prog)?;
+        sim.set_input("a_in", &data)?;
+        sim.run()?;
+        let got = sim.get_output("out")?;
+        let oracle = rt.load("reduce_16x64")?;
+        let want = &oracle.run(&[Input::new(&data, &[p, k])])?[0];
+        check("reduce_16x64", &got, want)?;
+    }
+
+    // ---- broadcast_16x64 ----------------------------------------------
+    {
+        let (p, k) = (16i64, 64i64);
+        let data = rand_vec(2, k as usize);
+        let cfg = MachineConfig::with_grid(p, 1);
+        let (prog, _, _) =
+            kernels::compile("broadcast", &[("K", k), ("N", p)], &cfg, &Options::default())?;
+        let mut sim = Simulator::new(cfg, prog)?;
+        sim.set_input("a_in", &data)?;
+        sim.run()?;
+        let got = sim.get_output("out")?;
+        let oracle = rt.load("broadcast_16x64")?;
+        let want = &oracle.run(&[Input::new(&data, &[k])])?[0];
+        check("broadcast_16x64", &got, want)?;
+    }
+
+    // ---- laplacian_16x16x8 ---------------------------------------------
+    {
+        let (nx, ny, k) = (16i64, 16i64, 8i64);
+        let r = run_stencil("laplacian", nx, ny, k, &Options::default())?;
+        let input = rand_vec(100, (nx * ny * k) as usize); // seed matches run_stencil
+        let oracle = rt.load("laplacian_16x16x8")?;
+        let want = &oracle.run(&[Input::new(&input, &[nx, ny, k])])?[0];
+        check("laplacian_16x16x8", &r.outputs[0].1, want)?;
+    }
+
+    // ---- uvbke_16x16x8 ---------------------------------------------------
+    {
+        let (nx, ny, k) = (16i64, 16i64, 8i64);
+        let r = run_stencil("uvbke", nx, ny, k, &Options::default())?;
+        let u = rand_vec(100, (nx * ny * k) as usize);
+        let v = rand_vec(101, (nx * ny * k) as usize);
+        let oracle = rt.load("uvbke_16x16x8")?;
+        let want =
+            &oracle.run(&[Input::new(&u, &[nx, ny, k]), Input::new(&v, &[nx, ny, k])])?[0];
+        check("uvbke_16x16x8", &r.outputs[0].1, want)?;
+    }
+
+    // ---- vertical_8x8x16 --------------------------------------------------
+    {
+        let (nx, ny, k) = (8i64, 8i64, 16i64);
+        let r = run_stencil("vertical", nx, ny, k, &Options::default())?;
+        let input = rand_vec(100, (nx * ny * k) as usize);
+        let oracle = rt.load("vertical_8x8x16")?;
+        let want = &oracle.run(&[Input::new(&input, &[nx, ny, k])])?[0];
+        check("vertical_8x8x16", &r.outputs[0].1, want)?;
+    }
+
+    // ---- gemv_64x48 ---------------------------------------------------------
+    {
+        let (m, n, gx, gy) = (64i64, 48i64, 4i64, 4i64);
+        let (bm, bn) = ((m / gy) as usize, (n / gx) as usize);
+        let cfg = MachineConfig::with_grid(gx, gy);
+        let (prog, _, _) = kernels::compile(
+            "gemv",
+            &[("M", m), ("N", n), ("NX", gx), ("NY", gy)],
+            &cfg,
+            &Options::default(),
+        )?;
+        let a = rand_vec(3, (m * n) as usize);
+        let x = rand_vec(4, n as usize);
+        let y0 = rand_vec(5, m as usize);
+        let (alpha, beta) = (1.5f32, -0.5f32);
+        let mut blocks = vec![0f32; (m * n) as usize];
+        let mut off = 0usize;
+        for i in 0..gx {
+            for j in 0..gy {
+                for c in 0..bn {
+                    for r in 0..bm {
+                        let gr = j as usize * bm + r;
+                        let gc = i as usize * bn + c;
+                        blocks[off + c * bm + r] = a[gr * n as usize + gc];
+                    }
+                }
+                off += bm * bn;
+            }
+        }
+        let mut sim = Simulator::new(cfg, prog)?;
+        sim.set_input("a_blk", &blocks)?;
+        sim.set_input("x_in", &x)?;
+        sim.set_input("y_in", &y0)?;
+        sim.set_input("alpha", &[alpha])?;
+        sim.set_input("beta", &[beta])?;
+        sim.run()?;
+        let got = sim.get_output("y_out")?;
+        let oracle = rt.load("gemv_64x48")?;
+        let want = &oracle.run(&[
+            Input::new(&a, &[m, n]),
+            Input::new(&x, &[n]),
+            Input::new(&y0, &[m]),
+            Input::scalar(&[alpha]),
+            Input::scalar(&[beta]),
+        ])?[0];
+        check("gemv_64x48", &got, want)?;
+    }
+
+    println!("all simulator outputs match the PJRT oracles (tol {TOL})");
+    Ok(())
+}
+
+fn check(name: &str, got: &[f32], want: &[f32]) -> Result<()> {
+    if got.len() != want.len() {
+        bail!("{name}: length {} vs oracle {}", got.len(), want.len());
+    }
+    let err = max_rel_err(got, want);
+    println!("  {name}: max rel err {err:.2e} over {} elements", got.len());
+    if err > TOL {
+        bail!("{name}: max rel err {err} exceeds {TOL}");
+    }
+    Ok(())
+}

@@ -1,0 +1,238 @@
+//! The instantiated SpaDA IR.
+//!
+//! Produced by [`crate::sem::instantiate`]: meta-parameters bound,
+//! meta-`for` loops unrolled into phases, subgrids concrete, constant
+//! expressions folded, and async/await statements normalized (each
+//! asynchronous operation carries an optional completion name and an
+//! `awaited` flag instead of wrapper statements).
+
+use crate::machine::Dtype;
+use crate::spada::ast::{ArgDir, Expr};
+use crate::util::Subgrid;
+
+/// A stream offset per dimension: scalar hop or multicast range.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Offset {
+    Scalar(i64),
+    /// Multicast to all offsets in `[lo, hi]` (inclusive of lo, exclusive
+    /// of hi, matching SpaDA's `[dx0:dx1]`).
+    Range(i64, i64),
+}
+
+impl Offset {
+    pub fn is_zero(&self) -> bool {
+        matches!(self, Offset::Scalar(0))
+    }
+
+    /// True if any offset component is non-zero (the dimension is
+    /// *active* in the paper's routing terminology).
+    pub fn is_active(&self) -> bool {
+        !self.is_zero()
+    }
+
+    /// Scalar value (multicast ranges have no single value).
+    pub fn scalar(&self) -> Option<i64> {
+        match self {
+            Offset::Scalar(v) => Some(*v),
+            Offset::Range(..) => None,
+        }
+    }
+}
+
+/// Kernel argument (I/O port array).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArgDecl {
+    pub name: String,
+    pub elem_ty: Dtype,
+    /// Port-array extents (empty = single port).
+    pub extents: Vec<i64>,
+    pub dir: ArgDir,
+}
+
+/// A field allocated by a `place` block.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Field {
+    pub name: String,
+    pub ty: Dtype,
+    /// Element shape; empty = scalar.
+    pub shape: Vec<i64>,
+    pub subgrid: Subgrid,
+    /// Phase index this field is scoped to (None = kernel lifetime).
+    pub phase: Option<usize>,
+}
+
+impl Field {
+    pub fn elems(&self) -> i64 {
+        self.shape.iter().product::<i64>().max(1)
+    }
+
+    pub fn bytes(&self) -> i64 {
+        self.elems() * self.ty.size() as i64
+    }
+}
+
+/// A stream declared by a `dataflow` block.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Stream {
+    /// Globally unique stream id.
+    pub id: usize,
+    pub name: String,
+    pub elem_ty: Dtype,
+    pub subgrid: Subgrid,
+    pub dx: Offset,
+    pub dy: Offset,
+}
+
+/// Reference to a communication endpoint in send/receive.
+#[derive(Clone, Debug, PartialEq)]
+pub enum StreamRef {
+    /// A dataflow stream (by id).
+    Local(usize),
+    /// A kernel argument port, e.g. `a_in[i]`.
+    Arg { name: String, index: Vec<Expr> },
+}
+
+/// Normalized IR statements.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Stmt {
+    /// Asynchronous send of `data` over `stream`.
+    Send { data: Expr, stream: StreamRef, completion: Option<String>, awaited: bool },
+    /// Whole-array receive into `dst`.
+    Recv { dst: Expr, stream: StreamRef, completion: Option<String>, awaited: bool },
+    /// `foreach [k,] x in [0:len,] receive(s) { body }`; `len: None` means
+    /// stream-driven (data-task fallback).
+    ForeachRecv {
+        index: Option<String>,
+        elem: String,
+        len: Option<Expr>,
+        stream: StreamRef,
+        body: Vec<Stmt>,
+        completion: Option<String>,
+        awaited: bool,
+    },
+    /// Parallelizable affine loop (vectorization candidate).
+    Map {
+        vars: Vec<String>,
+        ranges: Vec<(Expr, Expr, Expr)>,
+        body: Vec<Stmt>,
+        completion: Option<String>,
+        awaited: bool,
+    },
+    /// Sequential loop.
+    For { var: String, range: (Expr, Expr, Expr), body: Vec<Stmt> },
+    /// Grouped asynchronous statements.
+    Async { body: Vec<Stmt>, completion: Option<String>, awaited: bool },
+    /// Wait on a named completion.
+    Await { completion: String },
+    /// Local barrier on all pending completions.
+    AwaitAll,
+    /// Scalar / element assignment.
+    Assign { lhs: Expr, rhs: Expr },
+    /// Local scalar declaration.
+    Let { ty: Dtype, name: String, init: Expr },
+    /// Runtime conditional (condition may reference PE coords).
+    If { cond: Expr, then_body: Vec<Stmt>, else_body: Vec<Stmt> },
+}
+
+impl Stmt {
+    /// The completion name attached to this statement, if any.
+    pub fn completion(&self) -> Option<&str> {
+        match self {
+            Stmt::Send { completion, .. }
+            | Stmt::Recv { completion, .. }
+            | Stmt::ForeachRecv { completion, .. }
+            | Stmt::Map { completion, .. }
+            | Stmt::Async { completion, .. } => completion.as_deref(),
+            _ => None,
+        }
+    }
+
+    /// True for statements with asynchronous semantics.
+    pub fn is_async_op(&self) -> bool {
+        matches!(
+            self,
+            Stmt::Send { .. }
+                | Stmt::Recv { .. }
+                | Stmt::ForeachRecv { .. }
+                | Stmt::Map { .. }
+                | Stmt::Async { .. }
+        )
+    }
+
+    pub fn is_awaited(&self) -> bool {
+        match self {
+            Stmt::Send { awaited, .. }
+            | Stmt::Recv { awaited, .. }
+            | Stmt::ForeachRecv { awaited, .. }
+            | Stmt::Map { awaited, .. }
+            | Stmt::Async { awaited, .. } => *awaited,
+            _ => true,
+        }
+    }
+}
+
+/// A compute block over a concrete subgrid.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ComputeBlock {
+    pub subgrid: Subgrid,
+    /// Names bound to the PE coordinates (usually "i", "j").
+    pub coord_vars: (String, String),
+    pub stmts: Vec<Stmt>,
+}
+
+/// One phase: streams + compute blocks (place decls are hoisted into
+/// [`Program::fields`] with their phase recorded).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Phase {
+    pub streams: Vec<Stream>,
+    pub computes: Vec<ComputeBlock>,
+}
+
+/// A fully instantiated SpaDA program.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Program {
+    pub name: String,
+    pub args: Vec<ArgDecl>,
+    pub fields: Vec<Field>,
+    pub phases: Vec<Phase>,
+}
+
+impl Program {
+    pub fn stream(&self, id: usize) -> Option<&Stream> {
+        self.phases.iter().flat_map(|p| p.streams.iter()).find(|s| s.id == id)
+    }
+
+    pub fn field(&self, name: &str) -> Option<&Field> {
+        self.fields.iter().find(|f| f.name == name)
+    }
+
+    pub fn arg(&self, name: &str) -> Option<&ArgDecl> {
+        self.args.iter().find(|a| a.name == name)
+    }
+
+    /// Union bounding box of all subgrids (fabric region the kernel uses).
+    pub fn extent(&self) -> (i64, i64) {
+        let mut w = 0;
+        let mut h = 0;
+        let mut seen = |g: &Subgrid| {
+            if let Some(l) = g.dims[0].last() {
+                w = w.max(l + 1);
+            }
+            if let Some(l) = g.dims[1].last() {
+                h = h.max(l + 1);
+            }
+        };
+        for f in &self.fields {
+            seen(&f.subgrid);
+        }
+        for p in &self.phases {
+            for s in &p.streams {
+                seen(&s.subgrid);
+            }
+            for c in &p.computes {
+                seen(&c.subgrid);
+            }
+        }
+        (w, h)
+    }
+}

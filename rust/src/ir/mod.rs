@@ -1,0 +1,4 @@
+//! SpaDA intermediate representations.
+pub mod core;
+pub mod stencil;
+pub use core::*;

@@ -1,0 +1,316 @@
+//! Stencil IR (paper §IV).
+//!
+//! The intermediate representation between the GT4Py-style frontend and
+//! SpaDA. It captures (1) which field accesses cross PE boundaries
+//! (horizontal offsets) versus stay local (vertical offsets), (2) the
+//! halo regions boundary PEs must satisfy, and (3) types and iteration
+//! domains — decoupling stencil semantics from spatial code generation.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Vertical iteration order of a computation region.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KOrder {
+    /// Levels are independent — fully parallel (vectorizable).
+    Parallel,
+    /// Sequential bottom-up (k-1 dependencies allowed).
+    Forward,
+    /// Sequential top-down (k+1 dependencies allowed).
+    Backward,
+}
+
+/// Half-open vertical interval with Python-slice-like bounds relative to
+/// the K levels: `lo..K+hi_rel` where `hi_rel <= 0`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KInterval {
+    pub lo: i64,
+    /// Offset from K (0 = K, -1 = K-1, ...).
+    pub hi_rel: i64,
+}
+
+impl KInterval {
+    pub fn full() -> Self {
+        KInterval { lo: 0, hi_rel: 0 }
+    }
+}
+
+/// A field access with a 3-D offset `(di, dj, dk)`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Access {
+    pub field: String,
+    pub di: i64,
+    pub dj: i64,
+    pub dk: i64,
+}
+
+/// Stencil expression (already type-checked to f32).
+#[derive(Clone, Debug, PartialEq)]
+pub enum SExpr {
+    Const(f64),
+    Access(Access),
+    Neg(Box<SExpr>),
+    Add(Box<SExpr>, Box<SExpr>),
+    Sub(Box<SExpr>, Box<SExpr>),
+    Mul(Box<SExpr>, Box<SExpr>),
+    Div(Box<SExpr>, Box<SExpr>),
+}
+
+impl SExpr {
+    pub fn accesses(&self, out: &mut Vec<Access>) {
+        match self {
+            SExpr::Const(_) => {}
+            SExpr::Access(a) => out.push(a.clone()),
+            SExpr::Neg(a) => a.accesses(out),
+            SExpr::Add(a, b) | SExpr::Sub(a, b) | SExpr::Mul(a, b) | SExpr::Div(a, b) => {
+                a.accesses(out);
+                b.accesses(out);
+            }
+        }
+    }
+}
+
+/// One statement: `target[0,0,0] = expr`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SStmt {
+    pub target: String,
+    pub expr: SExpr,
+}
+
+/// A vertical computation region (`with computation(...) interval(...)`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Region {
+    pub order: KOrder,
+    pub interval: KInterval,
+    pub stmts: Vec<SStmt>,
+}
+
+/// Field role in the stencil signature.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FieldRole {
+    Input,
+    Output,
+    InOut,
+    Temporary,
+}
+
+/// Per-field halo requirement (elements needed from each neighbour).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Halo {
+    pub west: i64,
+    pub east: i64,
+    pub north: i64,
+    pub south: i64,
+}
+
+impl Halo {
+    pub fn any(&self) -> bool {
+        self.west > 0 || self.east > 0 || self.north > 0 || self.south > 0
+    }
+}
+
+/// The analyzed stencil program.
+#[derive(Clone, Debug)]
+pub struct StencilIr {
+    pub name: String,
+    /// Declared fields in signature order.
+    pub fields: Vec<String>,
+    pub roles: BTreeMap<String, FieldRole>,
+    pub halos: BTreeMap<String, Halo>,
+    pub regions: Vec<Region>,
+    /// Max |dk| used (vertical halo inside the local column).
+    pub k_reach: i64,
+}
+
+impl StencilIr {
+    /// Analyze a parsed stencil definition into the IR (roles + halos).
+    pub fn analyze(
+        name: &str,
+        fields: Vec<String>,
+        regions: Vec<Region>,
+    ) -> Result<StencilIr, String> {
+        let mut roles: BTreeMap<String, FieldRole> = BTreeMap::new();
+        let mut halos: BTreeMap<String, Halo> = BTreeMap::new();
+        for f in &fields {
+            roles.insert(f.clone(), FieldRole::Input);
+            halos.insert(f.clone(), Halo::default());
+        }
+        let mut k_reach = 0i64;
+        for region in &regions {
+            for stmt in &region.stmts {
+                if !roles.contains_key(&stmt.target) {
+                    return Err(format!("unknown field {}", stmt.target));
+                }
+                let mut acc = vec![];
+                stmt.expr.accesses(&mut acc);
+                for a in &acc {
+                    let Some(h) = halos.get_mut(&a.field) else {
+                        return Err(format!("unknown field {}", a.field));
+                    };
+                    if a.di < 0 {
+                        h.west = h.west.max(-a.di);
+                    }
+                    if a.di > 0 {
+                        h.east = h.east.max(a.di);
+                    }
+                    if a.dj < 0 {
+                        h.north = h.north.max(-a.dj);
+                    }
+                    if a.dj > 0 {
+                        h.south = h.south.max(a.dj);
+                    }
+                    k_reach = k_reach.max(a.dk.abs());
+                    if a.dk != 0 && region.order == KOrder::Parallel && a.field == stmt.target {
+                        return Err(format!(
+                            "{}: vertical self-dependency in a PARALLEL region",
+                            stmt.target
+                        ));
+                    }
+                }
+                // Role updates.
+                let read_fields: Vec<String> = acc.iter().map(|a| a.field.clone()).collect();
+                let r = roles.get_mut(&stmt.target).unwrap();
+                *r = match (*r, read_fields.contains(&stmt.target)) {
+                    (FieldRole::Input, false) => FieldRole::Output,
+                    (FieldRole::Input, true) => FieldRole::InOut,
+                    (other, _) => other,
+                };
+            }
+        }
+        Ok(StencilIr { name: name.to_string(), fields, roles, halos, regions, k_reach })
+    }
+
+    /// Horizontal offsets that require inter-PE communication, as
+    /// (field, di, dj) — one relative stream each (paper §IV: "the four
+    /// neighbor accesses become four relative_stream declarations").
+    pub fn comm_offsets(&self) -> Vec<(String, i64, i64)> {
+        let mut out = vec![];
+        for region in &self.regions {
+            for stmt in &region.stmts {
+                let mut acc = vec![];
+                stmt.expr.accesses(&mut acc);
+                for a in acc {
+                    if a.di != 0 || a.dj != 0 {
+                        let key = (a.field.clone(), a.di, a.dj);
+                        if !out.contains(&key) {
+                            out.push(key);
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Total FLOPs per grid point (for FLOP/s accounting à la Fig. 6).
+    pub fn flops_per_point(&self) -> u64 {
+        fn count(e: &SExpr) -> u64 {
+            match e {
+                SExpr::Const(_) | SExpr::Access(_) => 0,
+                SExpr::Neg(a) => count(a),
+                SExpr::Add(a, b) | SExpr::Sub(a, b) | SExpr::Mul(a, b) | SExpr::Div(a, b) => {
+                    1 + count(a) + count(b)
+                }
+            }
+        }
+        self.regions
+            .iter()
+            .flat_map(|r| r.stmts.iter())
+            .map(|s| count(&s.expr))
+            .sum()
+    }
+}
+
+impl fmt::Display for StencilIr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "stencil {} (k_reach={})", self.name, self.k_reach)?;
+        for field in &self.fields {
+            writeln!(
+                f,
+                "  field {} role={:?} halo={:?}",
+                field, self.roles[field], self.halos[field]
+            )?;
+        }
+        for r in &self.regions {
+            writeln!(
+                f,
+                "  region {:?} [{}..K{:+}] ({} stmts)",
+                r.order,
+                r.interval.lo,
+                r.interval.hi_rel,
+                r.stmts.len()
+            )?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn acc(f: &str, di: i64, dj: i64, dk: i64) -> SExpr {
+        SExpr::Access(Access { field: f.into(), di, dj, dk })
+    }
+
+    #[test]
+    fn laplacian_analysis() {
+        // out = -4*in + in[e] + in[w] + in[s] + in[n]
+        let expr = SExpr::Add(
+            Box::new(SExpr::Mul(Box::new(SExpr::Const(-4.0)), Box::new(acc("in", 0, 0, 0)))),
+            Box::new(SExpr::Add(
+                Box::new(SExpr::Add(Box::new(acc("in", 1, 0, 0)), Box::new(acc("in", -1, 0, 0)))),
+                Box::new(SExpr::Add(Box::new(acc("in", 0, 1, 0)), Box::new(acc("in", 0, -1, 0)))),
+            )),
+        );
+        let ir = StencilIr::analyze(
+            "laplace",
+            vec!["in".into(), "out".into()],
+            vec![Region {
+                order: KOrder::Parallel,
+                interval: KInterval::full(),
+                stmts: vec![SStmt { target: "out".into(), expr }],
+            }],
+        )
+        .unwrap();
+        assert_eq!(ir.roles["out"], FieldRole::Output);
+        assert_eq!(ir.roles["in"], FieldRole::Input);
+        let h = ir.halos["in"];
+        assert_eq!((h.west, h.east, h.north, h.south), (1, 1, 1, 1));
+        assert_eq!(ir.comm_offsets().len(), 4);
+        assert_eq!(ir.flops_per_point(), 5);
+    }
+
+    #[test]
+    fn vertical_self_dep_rejected_in_parallel() {
+        let expr = SExpr::Add(Box::new(acc("f", 0, 0, -1)), Box::new(SExpr::Const(1.0)));
+        let r = StencilIr::analyze(
+            "bad",
+            vec!["f".into()],
+            vec![Region {
+                order: KOrder::Parallel,
+                interval: KInterval::full(),
+                stmts: vec![SStmt { target: "f".into(), expr }],
+            }],
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn forward_region_allows_k_dep() {
+        let expr = SExpr::Add(Box::new(acc("f", 0, 0, -1)), Box::new(acc("g", 0, 0, 0)));
+        let ir = StencilIr::analyze(
+            "cum",
+            vec!["f".into(), "g".into()],
+            vec![Region {
+                order: KOrder::Forward,
+                interval: KInterval { lo: 1, hi_rel: 0 },
+                stmts: vec![SStmt { target: "f".into(), expr }],
+            }],
+        )
+        .unwrap();
+        assert_eq!(ir.roles["f"], FieldRole::InOut);
+        assert_eq!(ir.k_reach, 1);
+        assert!(ir.comm_offsets().is_empty());
+    }
+}

@@ -1,0 +1,36 @@
+//! SpaDA — A Spatial Dataflow Architecture Programming Language.
+//!
+//! This crate reproduces the SpaDA system (CS.DC 2025): a programming
+//! language and optimizing compiler for spatial dataflow architectures
+//! (the Cerebras WSE-2), together with the substrate the paper depends on
+//! — here, a discrete-event WSE-2 fabric/PE simulator — and the full
+//! benchmark harness that regenerates every table and figure of the
+//! paper's evaluation.
+//!
+//! Architecture (three layers):
+//! - **L3 (this crate)**: the SpaDA compiler ([`spada`] → [`sem`] → [`ir`]
+//!   → [`passes`] → [`csl`]), the WSE-2 simulator ([`machine`]), the
+//!   GT4Py-style stencil frontend ([`frontend`]), baselines and the
+//!   experiment harness ([`harness`]).
+//! - **L2/L1 (python/, build-time only)**: JAX reference compute graphs and
+//!   Pallas kernels, AOT-lowered to HLO text in `artifacts/`.
+//! - **Runtime bridge** ([`runtime`]): PJRT CPU client that loads the AOT
+//!   artifacts and serves as the numerical oracle for simulator outputs.
+
+pub mod util;
+pub mod machine;
+pub mod spada;
+pub mod sem;
+pub mod ir;
+pub mod passes;
+pub mod csl;
+pub mod frontend;
+pub mod kernels;
+pub mod baselines;
+pub mod harness;
+pub mod runtime;
+pub mod bench;
+pub mod ptest;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,104 @@
+//! Machine configuration: grid geometry, resource limits, cycle costs.
+
+
+/// WSE-2 machine model parameters.
+///
+/// Defaults follow the paper (§II, §VI) and the public WSE-2 numbers:
+/// 750×994 usable PEs, 48 KB SRAM/PE, 24 routable colors (+8 reserved),
+/// 28 task IDs, 0.85 GHz clock.
+#[derive(Clone, Debug)]
+pub struct MachineConfig {
+    /// Fabric width (number of PEs in x / west-east direction).
+    pub width: i64,
+    /// Fabric height (number of PEs in y / north-south direction).
+    pub height: i64,
+    /// Clock frequency in GHz (cycles → µs conversion).
+    pub freq_ghz: f64,
+    /// Local SRAM per PE in bytes.
+    pub mem_bytes: usize,
+    /// Number of routable colors (virtual channels) per router.
+    pub max_colors: u8,
+    /// Number of hardware task IDs per PE (shared ID space with colors:
+    /// binding a data task to color c consumes task ID c).
+    pub max_task_ids: u8,
+    /// Cycles from task activation to first instruction.
+    pub task_wakeup_cycles: u64,
+    /// Cycles to issue a DSD operation (descriptor setup + launch).
+    pub dsd_issue_cycles: u64,
+    /// Extra cycles per logical-task dispatch through a recycled
+    /// state-machine task (the cost of task ID virtualization).
+    pub dispatch_cycles: u64,
+    /// Per-hop fabric latency in cycles.
+    pub hop_cycles: u64,
+    /// Cycles per scalar ALU op / branch.
+    pub scalar_op_cycles: u64,
+    /// Per-wavelet overhead when a data task fires per wavelet
+    /// (non-vectorized fallback path).
+    pub data_task_wavelet_cycles: u64,
+    /// SIMD width for 16-bit element DSD operations.
+    pub simd16_width: u64,
+    /// Hard cap on simulated events (runaway guard).
+    pub max_events: u64,
+}
+
+impl MachineConfig {
+    /// Full-wafer WSE-2 geometry (usable fabric).
+    pub fn wse2() -> Self {
+        Self::with_grid(750, 994)
+    }
+
+    /// WSE-2 model with a custom grid (scaled-down simulations).
+    pub fn with_grid(width: i64, height: i64) -> Self {
+        MachineConfig {
+            width,
+            height,
+            freq_ghz: 0.85,
+            mem_bytes: 48 * 1024,
+            max_colors: 24,
+            max_task_ids: 28,
+            task_wakeup_cycles: 6,
+            dsd_issue_cycles: 3,
+            dispatch_cycles: 4,
+            hop_cycles: 1,
+            scalar_op_cycles: 1,
+            data_task_wavelet_cycles: 2,
+            simd16_width: 4,
+            max_events: 2_000_000_000,
+        }
+    }
+
+    /// Convert a cycle count to microseconds (paper §VI formula).
+    pub fn cycles_to_us(&self, cycles: u64) -> f64 {
+        cycles as f64 / (self.freq_ghz * 1e3)
+    }
+
+    /// Number of PEs in the fabric.
+    pub fn num_pes(&self) -> i64 {
+        self.width * self.height
+    }
+
+    pub fn in_bounds(&self, x: i64, y: i64) -> bool {
+        x >= 0 && x < self.width && y >= 0 && y < self.height
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wse2_defaults() {
+        let c = MachineConfig::wse2();
+        assert_eq!(c.num_pes(), 750 * 994);
+        assert_eq!(c.mem_bytes, 49152);
+        assert_eq!(c.max_colors, 24);
+    }
+
+    #[test]
+    fn cycles_conversion() {
+        let c = MachineConfig::wse2();
+        // paper formula: runtime[µs] = cycles / 0.85 · 10⁻³
+        let us = c.cycles_to_us(850);
+        assert!((us - 1.0).abs() < 1e-9);
+    }
+}

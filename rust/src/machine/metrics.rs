@@ -1,0 +1,110 @@
+//! Simulation metrics and run reports (the paper's measurement protocol).
+
+use super::MachineConfig;
+
+/// Counters accumulated during a simulation.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    /// Total events processed.
+    pub events: u64,
+    /// Total flows injected into the fabric.
+    pub flows: u64,
+    /// Total wavelets (32-bit words) transported.
+    pub wavelets: u64,
+    /// Total wavelet-hops (fabric traffic).
+    pub wavelet_hops: u64,
+    /// Floating-point operations executed (per DSD semantics).
+    pub flops: u64,
+    /// Local-memory bytes read + written by DSD ops.
+    pub mem_bytes: u64,
+    /// Fabric on/off-ramp bytes (PE <-> router traffic).
+    pub ramp_bytes: u64,
+    /// Task activations executed.
+    pub task_runs: u64,
+    /// DSD operations issued.
+    pub dsd_ops: u64,
+    /// Busy cycles summed over all PEs (for utilization).
+    pub busy_cycles: u64,
+    /// Number of PEs that executed at least one task.
+    pub active_pes: u64,
+    /// Dispatch state-machine invocations (recycled task overhead).
+    pub dispatches: u64,
+}
+
+/// The result of one kernel simulation.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    pub kernel: String,
+    /// Max cycle count over all participating PEs — the paper's
+    /// "maximal cycle count among all PEs".
+    pub cycles: u64,
+    pub metrics: Metrics,
+    /// Fabric geometry used.
+    pub width: i64,
+    pub height: i64,
+    /// Resource usage.
+    pub colors_used: usize,
+    pub task_ids_used: usize,
+    pub mem_bytes_used: u32,
+}
+
+impl RunReport {
+    pub fn runtime_us(&self, cfg: &MachineConfig) -> f64 {
+        cfg.cycles_to_us(self.cycles)
+    }
+
+    /// Achieved FLOP/s given the machine clock.
+    pub fn flops_per_sec(&self, cfg: &MachineConfig) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        self.metrics.flops as f64 / (self.runtime_us(cfg) * 1e-6)
+    }
+
+    /// Mean PE utilization: busy cycles / (PEs × makespan).
+    pub fn utilization(&self) -> f64 {
+        if self.cycles == 0 || self.metrics.active_pes == 0 {
+            return 0.0;
+        }
+        self.metrics.busy_cycles as f64 / (self.metrics.active_pes as f64 * self.cycles as f64)
+    }
+
+    /// Arithmetic intensity w.r.t. local memory traffic (flop/byte).
+    pub fn intensity_mem(&self) -> f64 {
+        if self.metrics.mem_bytes == 0 {
+            return 0.0;
+        }
+        self.metrics.flops as f64 / self.metrics.mem_bytes as f64
+    }
+
+    /// Arithmetic intensity w.r.t. ramp traffic (flop/byte).
+    pub fn intensity_ramp(&self) -> f64 {
+        if self.metrics.ramp_bytes == 0 {
+            return f64::INFINITY;
+        }
+        self.metrics.flops as f64 / self.metrics.ramp_bytes as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_math() {
+        let r = RunReport {
+            kernel: "k".into(),
+            cycles: 850,
+            metrics: Metrics { flops: 8500, busy_cycles: 425, active_pes: 1, ..Default::default() },
+            width: 1,
+            height: 1,
+            colors_used: 0,
+            task_ids_used: 1,
+            mem_bytes_used: 0,
+        };
+        let cfg = MachineConfig::wse2();
+        assert!((r.runtime_us(&cfg) - 1.0).abs() < 1e-9);
+        assert!((r.flops_per_sec(&cfg) - 8.5e9).abs() < 1e3);
+        assert!((r.utilization() - 0.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,36 @@
+//! WSE-2 fabric/PE discrete-event simulator — the substrate the paper's
+//! evaluation runs on (we have no Cerebras hardware; see DESIGN.md §1).
+//!
+//! The simulator models exactly the resources the SpaDA compiler manages:
+//!
+//! - a 2-D mesh of PEs, each with a small local SRAM (48 KB), a scalar
+//!   core, and a DSD vector engine;
+//! - a circuit-switched network-on-chip: per-(PE, color) static routes
+//!   (rx direction-set → tx direction-set, multicast on tx), one wavelet
+//!   per link per cycle, wormhole pipelining (flow-level model);
+//! - task-driven execution: ≤ 28 hardware task IDs per PE shared with the
+//!   24 routable colors; *local tasks* need `activate` (+ `unblock`),
+//!   *data tasks* are bound to a color and fire on wavelet arrival;
+//! - asynchronous (microthreaded) DSD operations over memory and fabric,
+//!   with completion actions (activate/unblock) — the hardware mechanism
+//!   behind SpaDA's async/await.
+//!
+//! Timing is cycle-granular: vector ops process one 32-bit element per
+//! cycle (4-way SIMD for 16-bit), links forward one wavelet per cycle per
+//! hop, and tasks are non-preemptive. Cycle counts convert to wall time at
+//! 0.85 GHz, matching the paper's `runtime[µs] = cycles/0.85 · 10⁻³`.
+
+pub mod config;
+pub mod program;
+pub mod router;
+pub mod sim;
+pub mod metrics;
+
+pub use config::MachineConfig;
+pub use program::{
+    DirSet, Direction, DsdKind, DsdOp, DsdRef, Dtype, FieldAlloc, IoBinding, IoDir,
+    MachineProgram, MOp, PeClass, PortMap, RouteRule, SExpr, SVal, TaskAction, TaskActionKind,
+    TaskDef, TaskKind,
+};
+pub use metrics::{Metrics, RunReport};
+pub use sim::{SimError, Simulator};

@@ -1,0 +1,759 @@
+//! The "binary" format executed by the simulator.
+//!
+//! A [`MachineProgram`] is what the CSL backend produces alongside the
+//! CSL-like text: per-PE-class task tables of machine operations
+//! ([`MOp`]), a routing table mapping (color, subgrid) to router
+//! configurations, memory layouts, and I/O metadata. It corresponds to
+//! the ELF the real CSL toolchain would load onto each PE.
+
+use crate::util::Subgrid;
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Element data types supported by the DSD engine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Dtype {
+    F16,
+    F32,
+    I16,
+    I32,
+    U16,
+    U32,
+}
+
+impl Dtype {
+    pub fn size(&self) -> usize {
+        match self {
+            Dtype::F16 | Dtype::I16 | Dtype::U16 => 2,
+            Dtype::F32 | Dtype::I32 | Dtype::U32 => 4,
+        }
+    }
+
+    pub fn is_float(&self) -> bool {
+        matches!(self, Dtype::F16 | Dtype::F32)
+    }
+
+    pub fn is_16bit(&self) -> bool {
+        self.size() == 2
+    }
+}
+
+impl fmt::Display for Dtype {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Dtype::F16 => "f16",
+            Dtype::F32 => "f32",
+            Dtype::I16 => "i16",
+            Dtype::I32 => "i32",
+            Dtype::U16 => "u16",
+            Dtype::U32 => "u32",
+        };
+        f.write_str(s)
+    }
+}
+
+/// A scalar runtime value (integer or float).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SVal {
+    I(i64),
+    F(f64),
+}
+
+impl SVal {
+    pub fn as_i(&self) -> i64 {
+        match self {
+            SVal::I(v) => *v,
+            SVal::F(v) => *v as i64,
+        }
+    }
+
+    pub fn as_f(&self) -> f64 {
+        match self {
+            SVal::I(v) => *v as f64,
+            SVal::F(v) => *v,
+        }
+    }
+
+    pub fn truthy(&self) -> bool {
+        match self {
+            SVal::I(v) => *v != 0,
+            SVal::F(v) => *v != 0.0,
+        }
+    }
+}
+
+/// Binary operators in scalar expressions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SBinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Mod,
+    Min,
+    Max,
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    And,
+    Or,
+}
+
+/// A scalar expression evaluated per-PE at runtime.
+///
+/// `CoordX`/`CoordY` are the PE's absolute fabric coordinates; `Reg(r)`
+/// reads scalar register `r`; `LoadMem` is a scalar load from local SRAM.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SExpr {
+    ImmI(i64),
+    ImmF(f64),
+    CoordX,
+    CoordY,
+    Reg(u8),
+    LoadMem { addr: Box<SExpr>, ty: Dtype },
+    Bin(SBinOp, Box<SExpr>, Box<SExpr>),
+    Neg(Box<SExpr>),
+    Not(Box<SExpr>),
+    /// `cond ? a : b`
+    Select(Box<SExpr>, Box<SExpr>, Box<SExpr>),
+}
+
+impl SExpr {
+    pub fn imm(v: i64) -> SExpr {
+        SExpr::ImmI(v)
+    }
+
+    pub fn bin(op: SBinOp, a: SExpr, b: SExpr) -> SExpr {
+        SExpr::Bin(op, Box::new(a), Box::new(b))
+    }
+
+    pub fn add(a: SExpr, b: SExpr) -> SExpr {
+        SExpr::bin(SBinOp::Add, a, b)
+    }
+
+    pub fn mul(a: SExpr, b: SExpr) -> SExpr {
+        SExpr::bin(SBinOp::Mul, a, b)
+    }
+
+    /// Rough cycle cost of evaluating this expression (for the scalar
+    /// cost model).
+    pub fn cost(&self) -> u64 {
+        match self {
+            SExpr::ImmI(_) | SExpr::ImmF(_) | SExpr::CoordX | SExpr::CoordY | SExpr::Reg(_) => 0,
+            SExpr::LoadMem { addr, .. } => 1 + addr.cost(),
+            SExpr::Bin(_, a, b) => 1 + a.cost() + b.cost(),
+            SExpr::Neg(a) | SExpr::Not(a) => 1 + a.cost(),
+            SExpr::Select(c, a, b) => 1 + c.cost() + a.cost().max(b.cost()),
+        }
+    }
+}
+
+/// DSD operation kinds (the vectorized instruction set).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DsdKind {
+    /// dst[i] = src0[i] + src1[i]  (1 flop/elem)
+    Fadd,
+    /// dst[i] = src0[i] - src1[i]
+    Fsub,
+    /// dst[i] = src0[i] * src1[i]
+    Fmul,
+    /// dst[i] = src0[i] + src1[i] * scalar  (2 flops/elem)
+    Fmac,
+    /// dst[i] = src0[i] * scalar  (1 flop/elem)
+    Fscale,
+    /// dst[i] = src0[i]  (data movement / copy / send / receive)
+    Mov,
+    /// dst[i] = scalar   (fill)
+    Fill,
+    /// dst[i] = max(src0[i], src1[i])
+    FmaxOp,
+}
+
+impl DsdKind {
+    /// Floating-point operations per element.
+    pub fn flops_per_elem(&self) -> u64 {
+        match self {
+            DsdKind::Fadd | DsdKind::Fsub | DsdKind::Fmul | DsdKind::FmaxOp | DsdKind::Fscale => 1,
+            DsdKind::Fmac => 2,
+            DsdKind::Mov | DsdKind::Fill => 0,
+        }
+    }
+
+    pub fn csl_name(&self, ty: Dtype) -> String {
+        let base = match self {
+            DsdKind::Fadd => "fadd",
+            DsdKind::Fsub => "fsub",
+            DsdKind::Fmul => "fmul",
+            DsdKind::Fmac => "fmac",
+            DsdKind::Fscale => "fmul",
+            DsdKind::Mov => "mov",
+            DsdKind::Fill => "mov",
+            DsdKind::FmaxOp => "fmax",
+        };
+        let suffix = match (self, ty) {
+            (DsdKind::Mov | DsdKind::Fill, t) if t.is_16bit() => "16".to_string(),
+            (DsdKind::Mov | DsdKind::Fill, _) => "32".to_string(),
+            (_, Dtype::F16) => "h".to_string(),
+            (_, _) => "s".to_string(),
+        };
+        format!("@{base}{suffix}")
+    }
+}
+
+/// A data structure descriptor reference: a memory access pattern or a
+/// fabric endpoint.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DsdRef {
+    /// Strided local-memory vector: element i at byte address
+    /// `base + (offset + i*stride) * ty.size()`.
+    Mem {
+        /// Byte base address of the underlying field.
+        base: u32,
+        /// Element offset expression (evaluated per-op).
+        offset: SExpr,
+        /// Element stride.
+        stride: i64,
+        /// Element count expression.
+        len: SExpr,
+        ty: Dtype,
+    },
+    /// Fabric input: consume `len` wavelets from `color`.
+    FabIn { color: u8, len: SExpr, ty: Dtype },
+    /// Fabric output: produce `len` wavelets on `color`.
+    FabOut { color: u8, len: SExpr, ty: Dtype },
+}
+
+impl DsdRef {
+    pub fn mem(base: u32, len: SExpr, ty: Dtype) -> DsdRef {
+        DsdRef::Mem { base, offset: SExpr::ImmI(0), stride: 1, len, ty }
+    }
+
+    pub fn ty(&self) -> Dtype {
+        match self {
+            DsdRef::Mem { ty, .. } | DsdRef::FabIn { ty, .. } | DsdRef::FabOut { ty, .. } => *ty,
+        }
+    }
+
+    pub fn is_fabric(&self) -> bool {
+        matches!(self, DsdRef::FabIn { .. } | DsdRef::FabOut { .. })
+    }
+}
+
+/// What to do when an asynchronous operation completes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskActionKind {
+    Activate,
+    Unblock,
+    Block,
+}
+
+/// A task-control action, optionally setting a dispatch-state register
+/// first (task-ID recycling: the activator selects the logical task).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TaskAction {
+    pub kind: TaskActionKind,
+    /// Hardware task ID on the *same* PE.
+    pub task: u8,
+    /// Optional `(register, value)` written before the action fires.
+    pub set_reg: Option<(u8, i64)>,
+}
+
+impl TaskAction {
+    pub fn activate(task: u8) -> TaskAction {
+        TaskAction { kind: TaskActionKind::Activate, task, set_reg: None }
+    }
+
+    pub fn unblock(task: u8) -> TaskAction {
+        TaskAction { kind: TaskActionKind::Unblock, task, set_reg: None }
+    }
+}
+
+/// A (possibly asynchronous) DSD operation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DsdOp {
+    pub kind: DsdKind,
+    pub dst: DsdRef,
+    pub src0: Option<DsdRef>,
+    pub src1: Option<DsdRef>,
+    /// Scalar operand (Fmac multiplier, Fill value).
+    pub scalar: Option<SExpr>,
+    /// Asynchronous (microthreaded): the issuing task continues
+    /// immediately; `on_complete` fires when the op drains.
+    pub is_async: bool,
+    pub on_complete: Vec<TaskAction>,
+}
+
+/// Machine operations — the per-task instruction list.
+#[derive(Clone, Debug, PartialEq)]
+pub enum MOp {
+    /// reg = expr
+    SetReg { reg: u8, val: SExpr },
+    /// Scalar store to local memory.
+    Store { addr: SExpr, ty: Dtype, val: SExpr },
+    /// Vector / fabric operation.
+    Dsd(DsdOp),
+    /// Immediate task-control action.
+    Control(TaskAction),
+    /// Conditional.
+    If { cond: SExpr, then_ops: Vec<MOp>, else_ops: Vec<MOp> },
+    /// Sequential counted loop: `for reg in start..stop step step`.
+    For { reg: u8, start: SExpr, stop: SExpr, step: SExpr, body: Vec<MOp> },
+    /// Marks kernel completion on this PE (records the finish cycle).
+    Halt,
+    /// Debug trace (no cycles).
+    Trace(String),
+}
+
+/// Task flavor.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TaskKind {
+    /// Runs when `active && !blocked`; auto-deactivates after each run.
+    Local,
+    /// Bound to a color: fires per arriving wavelet (the wavelet value is
+    /// bound to register `wavelet_reg`). Always "active"; blockable.
+    Data { color: u8, wavelet_reg: u8 },
+}
+
+/// One hardware task on a PE class.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TaskDef {
+    pub name: String,
+    /// Hardware task ID (0..max_task_ids). Data tasks must use the ID of
+    /// their color.
+    pub hw_id: u8,
+    pub kind: TaskKind,
+    pub initially_active: bool,
+    pub initially_blocked: bool,
+    pub body: Vec<MOp>,
+}
+
+/// A named field allocation in PE-local memory.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FieldAlloc {
+    pub name: String,
+    /// Byte offset in PE memory.
+    pub addr: u32,
+    /// Element count.
+    pub len: u32,
+    pub ty: Dtype,
+    /// True for extern (kernel argument) fields: preloaded before the run
+    /// (inputs) / read back after (outputs).
+    pub is_extern: bool,
+}
+
+impl FieldAlloc {
+    pub fn bytes(&self) -> u32 {
+        self.len * self.ty.size() as u32
+    }
+}
+
+/// One PE equivalence class — corresponds to one generated CSL code file.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PeClass {
+    pub name: String,
+    /// PEs running this class (disjoint from all other classes).
+    pub subgrids: Vec<Subgrid>,
+    pub fields: Vec<FieldAlloc>,
+    /// Bytes of local memory used (must be ≤ config.mem_bytes).
+    pub mem_size: u32,
+    pub tasks: Vec<TaskDef>,
+    /// Tasks activated at kernel start (entry points).
+    pub entry_tasks: Vec<u8>,
+}
+
+impl PeClass {
+    pub fn field(&self, name: &str) -> Option<&FieldAlloc> {
+        self.fields.iter().find(|f| f.name == name)
+    }
+
+    pub fn task_by_id(&self, hw_id: u8) -> Option<&TaskDef> {
+        self.tasks.iter().find(|t| t.hw_id == hw_id)
+    }
+
+    pub fn covers(&self, x: i64, y: i64) -> bool {
+        self.subgrids.iter().any(|g| g.contains(x, y))
+    }
+}
+
+/// Mesh directions. `Ramp` is the PE↔router port.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Direction {
+    North,
+    East,
+    South,
+    West,
+    Ramp,
+}
+
+impl Direction {
+    pub fn opposite(&self) -> Direction {
+        match self {
+            Direction::North => Direction::South,
+            Direction::South => Direction::North,
+            Direction::East => Direction::West,
+            Direction::West => Direction::East,
+            Direction::Ramp => Direction::Ramp,
+        }
+    }
+
+    /// Coordinate delta for one hop in this direction.
+    /// x grows east, y grows south (row 0 at the north edge).
+    pub fn delta(&self) -> (i64, i64) {
+        match self {
+            Direction::North => (0, -1),
+            Direction::South => (0, 1),
+            Direction::East => (1, 0),
+            Direction::West => (-1, 0),
+            Direction::Ramp => (0, 0),
+        }
+    }
+
+    /// Direction of the unit step (dx, dy); None if not a unit step.
+    pub fn from_delta(dx: i64, dy: i64) -> Option<Direction> {
+        match (dx, dy) {
+            (0, -1) => Some(Direction::North),
+            (0, 1) => Some(Direction::South),
+            (1, 0) => Some(Direction::East),
+            (-1, 0) => Some(Direction::West),
+            _ => None,
+        }
+    }
+
+    pub fn csl_name(&self) -> &'static str {
+        match self {
+            Direction::North => "NORTH",
+            Direction::East => "EAST",
+            Direction::South => "SOUTH",
+            Direction::West => "WEST",
+            Direction::Ramp => "RAMP",
+        }
+    }
+
+    pub const ALL: [Direction; 5] =
+        [Direction::North, Direction::East, Direction::South, Direction::West, Direction::Ramp];
+
+    /// Index for link-occupancy arrays (Ramp = 4).
+    pub fn index(&self) -> usize {
+        match self {
+            Direction::North => 0,
+            Direction::East => 1,
+            Direction::South => 2,
+            Direction::West => 3,
+            Direction::Ramp => 4,
+        }
+    }
+}
+
+/// A small set of directions (bitmask).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub struct DirSet(pub u8);
+
+impl DirSet {
+    pub fn empty() -> DirSet {
+        DirSet(0)
+    }
+
+    pub fn single(d: Direction) -> DirSet {
+        DirSet(1 << d.index())
+    }
+
+    pub fn with(mut self, d: Direction) -> DirSet {
+        self.0 |= 1 << d.index();
+        self
+    }
+
+    pub fn contains(&self, d: Direction) -> bool {
+        self.0 & (1 << d.index()) != 0
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = Direction> + '_ {
+        Direction::ALL.iter().copied().filter(move |d| self.contains(*d))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0 == 0
+    }
+
+    pub fn csl_list(&self) -> String {
+        let names: Vec<&str> = self.iter().map(|d| d.csl_name()).collect();
+        names.join(", ")
+    }
+}
+
+/// A routing rule: on PEs in `subgrid`, color `color` is configured with
+/// receive set `rx` and transmit set `tx`. First matching rule wins.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RouteRule {
+    pub color: u8,
+    pub subgrid: Subgrid,
+    pub rx: DirSet,
+    pub tx: DirSet,
+}
+
+/// Extern I/O direction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IoDir {
+    In,
+    Out,
+}
+
+/// Affine port map: PE (x, y) serves I/O port `ax·x + ay·y + c`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub struct PortMap {
+    pub ax: i64,
+    pub ay: i64,
+    pub c: i64,
+}
+
+impl PortMap {
+    pub fn port(&self, x: i64, y: i64) -> i64 {
+        self.ax * x + self.ay * y + self.c
+    }
+}
+
+/// Host I/O binding: kernel argument `arg` maps to extern field `field`
+/// on the PEs of `subgrid`. PE (x, y) holds elements
+/// `[port·elems_per_pe, (port+1)·elems_per_pe)` of the argument's flat
+/// data, with `port = port_map(x, y)`. An argument may have several
+/// bindings (one per PE class that touches it).
+#[derive(Clone, Debug, PartialEq)]
+pub struct IoBinding {
+    pub arg: String,
+    pub field: String,
+    pub dir: IoDir,
+    pub subgrid: Subgrid,
+    pub elems_per_pe: u32,
+    /// Total number of ports of the argument (flat data size =
+    /// `total_ports * elems_per_pe`).
+    pub total_ports: u32,
+    pub port_map: PortMap,
+    pub ty: Dtype,
+}
+
+/// The complete loadable program.
+#[derive(Clone, Debug, Default)]
+pub struct MachineProgram {
+    pub name: String,
+    pub classes: Vec<PeClass>,
+    pub routes: Vec<RouteRule>,
+    pub io: Vec<IoBinding>,
+    /// Colors referenced anywhere (for resource accounting).
+    pub colors_used: Vec<u8>,
+    /// Free-form compile metadata (pass statistics etc.).
+    pub meta: BTreeMap<String, String>,
+}
+
+impl MachineProgram {
+    /// Resolve the class covering PE (x, y), if any.
+    pub fn class_at(&self, x: i64, y: i64) -> Option<usize> {
+        self.classes.iter().position(|c| c.covers(x, y))
+    }
+
+    /// Resolve the route entry for `color` at PE (x, y).
+    pub fn route_at(&self, color: u8, x: i64, y: i64) -> Option<&RouteRule> {
+        self.routes
+            .iter()
+            .find(|r| r.color == color && r.subgrid.contains(x, y))
+    }
+
+    /// Max task IDs used by any class.
+    pub fn max_task_ids_used(&self) -> usize {
+        self.classes
+            .iter()
+            .map(|c| {
+                let mut ids: Vec<u8> = c.tasks.iter().map(|t| t.hw_id).collect();
+                ids.sort_unstable();
+                ids.dedup();
+                ids.len()
+            })
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Max memory used by any class, in bytes.
+    pub fn max_mem_used(&self) -> u32 {
+        self.classes.iter().map(|c| c.mem_size).max().unwrap_or(0)
+    }
+
+    /// Validate resource constraints against a machine config.
+    /// Returns a list of violations ("OOR"/"OOM" in the paper's terms).
+    pub fn validate(&self, cfg: &super::MachineConfig) -> Vec<String> {
+        let mut errs = vec![];
+        let mut colors = self.colors_used.clone();
+        colors.sort_unstable();
+        colors.dedup();
+        if colors.len() > cfg.max_colors as usize {
+            errs.push(format!(
+                "OOR: {} colors used, only {} routable",
+                colors.len(),
+                cfg.max_colors
+            ));
+        }
+        for c in &colors {
+            if *c >= cfg.max_colors {
+                errs.push(format!("OOR: color {} out of range (< {})", c, cfg.max_colors));
+            }
+        }
+        for class in &self.classes {
+            let mut ids: Vec<u8> = class.tasks.iter().map(|t| t.hw_id).collect();
+            ids.sort_unstable();
+            let n = ids.len();
+            ids.dedup();
+            if ids.len() != n {
+                errs.push(format!("class {}: duplicate hardware task IDs", class.name));
+            }
+            if ids.len() > cfg.max_task_ids as usize {
+                errs.push(format!(
+                    "OOR: class {} uses {} task IDs, only {} available",
+                    class.name,
+                    ids.len(),
+                    cfg.max_task_ids
+                ));
+            }
+            for t in &class.tasks {
+                if t.hw_id >= cfg.max_task_ids {
+                    errs.push(format!(
+                        "OOR: class {} task {} has ID {} >= {}",
+                        class.name, t.name, t.hw_id, cfg.max_task_ids
+                    ));
+                }
+                if let TaskKind::Data { color, .. } = &t.kind {
+                    if t.hw_id != *color {
+                        errs.push(format!(
+                            "class {}: data task {} ID {} != color {}",
+                            class.name, t.name, t.hw_id, color
+                        ));
+                    }
+                }
+            }
+            if class.mem_size as usize > cfg.mem_bytes {
+                errs.push(format!(
+                    "OOM: class {} needs {} B, only {} B of PE memory",
+                    class.name, class.mem_size, cfg.mem_bytes
+                ));
+            }
+            for g in &class.subgrids {
+                for (x, y) in g.iter() {
+                    if !cfg.in_bounds(x, y) {
+                        errs.push(format!(
+                            "class {}: subgrid {:?} leaves the {}x{} fabric",
+                            class.name, g, cfg.width, cfg.height
+                        ));
+                        break;
+                    }
+                }
+            }
+        }
+        // Class overlap check (each PE must map to at most one code file).
+        for i in 0..self.classes.len() {
+            for j in (i + 1)..self.classes.len() {
+                for a in &self.classes[i].subgrids {
+                    for b in &self.classes[j].subgrids {
+                        if !a.intersect(b).is_empty() {
+                            errs.push(format!(
+                                "classes {} and {} overlap on {:?}",
+                                self.classes[i].name,
+                                self.classes[j].name,
+                                a.intersect(b)
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        errs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::machine::MachineConfig;
+    use crate::util::Range1;
+
+    fn tiny_class(name: &str, x: i64) -> PeClass {
+        PeClass {
+            name: name.into(),
+            subgrids: vec![Subgrid::point(x, 0)],
+            fields: vec![],
+            mem_size: 128,
+            tasks: vec![],
+            entry_tasks: vec![],
+        }
+    }
+
+    #[test]
+    fn dirset_roundtrip() {
+        let s = DirSet::empty().with(Direction::East).with(Direction::Ramp);
+        assert!(s.contains(Direction::East));
+        assert!(s.contains(Direction::Ramp));
+        assert!(!s.contains(Direction::West));
+        assert_eq!(s.iter().count(), 2);
+        assert_eq!(s.csl_list(), "EAST, RAMP");
+    }
+
+    #[test]
+    fn direction_opposite_delta() {
+        for d in Direction::ALL {
+            assert_eq!(d.opposite().opposite(), d);
+            let (dx, dy) = d.delta();
+            if d != Direction::Ramp {
+                assert_eq!(Direction::from_delta(dx, dy), Some(d));
+            }
+        }
+    }
+
+    #[test]
+    fn validate_overlap() {
+        let prog = MachineProgram {
+            name: "t".into(),
+            classes: vec![tiny_class("a", 0), {
+                let mut c = tiny_class("b", 0);
+                c.subgrids = vec![Subgrid::new(Range1::dense(0, 2), Range1::point(0))];
+                c
+            }],
+            ..Default::default()
+        };
+        let errs = prog.validate(&MachineConfig::with_grid(4, 4));
+        assert!(errs.iter().any(|e| e.contains("overlap")));
+    }
+
+    #[test]
+    fn validate_oor_colors() {
+        let prog = MachineProgram {
+            name: "t".into(),
+            colors_used: (0..30).collect(),
+            ..Default::default()
+        };
+        let errs = prog.validate(&MachineConfig::with_grid(4, 4));
+        assert!(errs.iter().any(|e| e.contains("OOR")));
+    }
+
+    #[test]
+    fn validate_oom() {
+        let mut c = tiny_class("big", 0);
+        c.mem_size = 64 * 1024;
+        let prog = MachineProgram { name: "t".into(), classes: vec![c], ..Default::default() };
+        let errs = prog.validate(&MachineConfig::with_grid(4, 4));
+        assert!(errs.iter().any(|e| e.contains("OOM")));
+    }
+
+    #[test]
+    fn data_task_id_must_match_color() {
+        let mut c = tiny_class("d", 0);
+        c.tasks.push(TaskDef {
+            name: "recv".into(),
+            hw_id: 5,
+            kind: TaskKind::Data { color: 3, wavelet_reg: 0 },
+            initially_active: true,
+            initially_blocked: false,
+            body: vec![],
+        });
+        let prog = MachineProgram { name: "t".into(), classes: vec![c], ..Default::default() };
+        let errs = prog.validate(&MachineConfig::with_grid(4, 4));
+        assert!(errs.iter().any(|e| e.contains("!= color")));
+    }
+}

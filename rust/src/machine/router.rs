@@ -1,0 +1,236 @@
+//! Circuit-switched route resolution.
+//!
+//! Flows follow the static per-(PE, color) router configuration. Given a
+//! source PE and a color, [`trace_route`] walks the configured rx/tx sets
+//! and produces the full (possibly multicast) path: the ordered list of
+//! links the flow occupies and the set of destination PEs with their hop
+//! depths.
+
+use super::program::{Direction, MachineProgram, RouteRule};
+use super::MachineConfig;
+use std::collections::HashSet;
+
+/// One link of a flow path: the wavelet leaves PE `(x, y)` through `dir`
+/// at hop depth `depth` (source ramp is depth 0).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PathLink {
+    pub x: i64,
+    pub y: i64,
+    pub dir: Direction,
+    pub depth: u64,
+}
+
+/// A resolved flow path.
+#[derive(Clone, Debug, Default)]
+pub struct FlowPath {
+    pub links: Vec<PathLink>,
+    /// (x, y, hop depth at delivery) for every PE whose router forwards
+    /// the flow to its ramp.
+    pub dests: Vec<(i64, i64, u64)>,
+}
+
+/// Errors during route tracing.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RouteError {
+    /// No route configured for this color at an intermediate PE.
+    Unrouted { x: i64, y: i64, color: u8 },
+    /// The flow leaves the fabric.
+    OffFabric { x: i64, y: i64, dir: &'static str },
+    /// Routing loop detected.
+    Loop { x: i64, y: i64 },
+    /// Route enters a PE whose rx set does not include the arrival port.
+    RxMismatch { x: i64, y: i64, color: u8 },
+}
+
+impl std::fmt::Display for RouteError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RouteError::Unrouted { x, y, color } => {
+                write!(f, "no route for color {color} at PE ({x},{y})")
+            }
+            RouteError::OffFabric { x, y, dir } => {
+                write!(f, "route leaves fabric at PE ({x},{y}) towards {dir}")
+            }
+            RouteError::Loop { x, y } => write!(f, "routing loop at PE ({x},{y})"),
+            RouteError::RxMismatch { x, y, color } => {
+                write!(f, "rx mismatch for color {color} at PE ({x},{y})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RouteError {}
+
+fn rule_at<'a>(prog: &'a MachineProgram, color: u8, x: i64, y: i64) -> Option<&'a RouteRule> {
+    prog.route_at(color, x, y)
+}
+
+/// Trace the route of color `color` injected at PE `(sx, sy)` (entering
+/// the router from the ramp).
+pub fn trace_route(
+    prog: &MachineProgram,
+    cfg: &MachineConfig,
+    color: u8,
+    sx: i64,
+    sy: i64,
+) -> Result<FlowPath, RouteError> {
+    let mut path = FlowPath::default();
+    let mut visited: HashSet<(i64, i64, Direction)> = HashSet::new();
+    // BFS frontier: (x, y, arrival direction into this router, depth).
+    let mut frontier: Vec<(i64, i64, Direction, u64)> = vec![(sx, sy, Direction::Ramp, 0)];
+
+    while let Some((x, y, arrived_via, depth)) = frontier.pop() {
+        if !visited.insert((x, y, arrived_via)) {
+            return Err(RouteError::Loop { x, y });
+        }
+        let rule = rule_at(prog, color, x, y).ok_or(RouteError::Unrouted { x, y, color })?;
+        if !rule.rx.contains(arrived_via) {
+            return Err(RouteError::RxMismatch { x, y, color });
+        }
+        for out in rule.tx.iter() {
+            if out == Direction::Ramp {
+                // Deliver locally. Source loopback (ramp->ramp at the
+                // injecting PE) is allowed by hardware but we treat it as
+                // delivery too.
+                path.dests.push((x, y, depth));
+                continue;
+            }
+            let (dx, dy) = out.delta();
+            let (nx, ny) = (x + dx, y + dy);
+            if !cfg.in_bounds(nx, ny) {
+                return Err(RouteError::OffFabric { x, y, dir: out.csl_name() });
+            }
+            path.links.push(PathLink { x, y, dir: out, depth });
+            frontier.push((nx, ny, out.opposite(), depth + cfg.hop_cycles));
+        }
+    }
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::machine::program::{DirSet, MachineProgram, RouteRule};
+    use crate::util::{Range1, Subgrid};
+
+    fn cfg() -> MachineConfig {
+        MachineConfig::with_grid(8, 8)
+    }
+
+    /// Row pipeline west→east on color 1: PE 0 sends, PEs 1..6 forward +
+    /// deliver, PE 7 delivers.
+    fn row_multicast_prog() -> MachineProgram {
+        MachineProgram {
+            name: "row".into(),
+            routes: vec![
+                RouteRule {
+                    color: 1,
+                    subgrid: Subgrid::new(Range1::point(0), Range1::point(0)),
+                    rx: DirSet::single(Direction::Ramp),
+                    tx: DirSet::single(Direction::East),
+                },
+                RouteRule {
+                    color: 1,
+                    subgrid: Subgrid::new(Range1::dense(1, 7), Range1::point(0)),
+                    rx: DirSet::single(Direction::West),
+                    tx: DirSet::single(Direction::East).with(Direction::Ramp),
+                },
+                RouteRule {
+                    color: 1,
+                    subgrid: Subgrid::new(Range1::point(7), Range1::point(0)),
+                    rx: DirSet::single(Direction::West),
+                    tx: DirSet::single(Direction::Ramp),
+                },
+            ],
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn multicast_row() {
+        let prog = row_multicast_prog();
+        let path = trace_route(&prog, &cfg(), 1, 0, 0).unwrap();
+        assert_eq!(path.links.len(), 7);
+        assert_eq!(path.dests.len(), 7); // PEs 1..=7
+        let depths: Vec<u64> = {
+            let mut d: Vec<_> = path.dests.iter().map(|(x, _, dep)| (*x, *dep)).collect();
+            d.sort();
+            d.iter().map(|(_, dep)| *dep).collect()
+        };
+        assert_eq!(depths, vec![1, 2, 3, 4, 5, 6, 7]); // +1 per hop from source
+    }
+
+    #[test]
+    fn single_hop() {
+        let prog = MachineProgram {
+            name: "p2p".into(),
+            routes: vec![
+                RouteRule {
+                    color: 2,
+                    subgrid: Subgrid::point(3, 3),
+                    rx: DirSet::single(Direction::Ramp),
+                    tx: DirSet::single(Direction::North),
+                },
+                RouteRule {
+                    color: 2,
+                    subgrid: Subgrid::point(3, 2),
+                    rx: DirSet::single(Direction::South),
+                    tx: DirSet::single(Direction::Ramp),
+                },
+            ],
+            ..Default::default()
+        };
+        let path = trace_route(&prog, &cfg(), 2, 3, 3).unwrap();
+        assert_eq!(path.dests, vec![(3, 2, 1)]);
+        assert_eq!(path.links.len(), 1);
+        assert_eq!(path.links[0].dir, Direction::North);
+    }
+
+    #[test]
+    fn unrouted_err() {
+        let prog = MachineProgram::default();
+        let err = trace_route(&prog, &cfg(), 0, 0, 0).unwrap_err();
+        assert!(matches!(err, RouteError::Unrouted { .. }));
+    }
+
+    #[test]
+    fn off_fabric_err() {
+        let prog = MachineProgram {
+            name: "edge".into(),
+            routes: vec![RouteRule {
+                color: 0,
+                subgrid: Subgrid::point(0, 0),
+                rx: DirSet::single(Direction::Ramp),
+                tx: DirSet::single(Direction::West),
+            }],
+            ..Default::default()
+        };
+        let err = trace_route(&prog, &cfg(), 0, 0, 0).unwrap_err();
+        assert!(matches!(err, RouteError::OffFabric { .. }));
+    }
+
+    #[test]
+    fn loop_err() {
+        // Two PEs forwarding to each other with rx sets that accept it.
+        let prog = MachineProgram {
+            name: "loop".into(),
+            routes: vec![
+                RouteRule {
+                    color: 0,
+                    subgrid: Subgrid::point(0, 0),
+                    rx: DirSet::single(Direction::Ramp).with(Direction::East),
+                    tx: DirSet::single(Direction::East),
+                },
+                RouteRule {
+                    color: 0,
+                    subgrid: Subgrid::point(1, 0),
+                    rx: DirSet::single(Direction::West),
+                    tx: DirSet::single(Direction::West),
+                },
+            ],
+            ..Default::default()
+        };
+        let err = trace_route(&prog, &cfg(), 0, 0, 0).unwrap_err();
+        assert!(matches!(err, RouteError::Loop { .. }));
+    }
+}

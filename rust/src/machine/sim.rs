@@ -1,0 +1,1675 @@
+//! Discrete-event simulator core.
+//!
+//! Timing model (see module docs in [`super`]): all *timing* math uses
+//! flow/word timestamps carried in metadata; the event queue only drives
+//! processing order. Flows deliver their full payload at the first-word
+//! arrival event together with per-word availability times, which keeps
+//! the event count O(flows), not O(wavelets), while preserving wormhole
+//! pipelining behaviour (chained reductions overlap hop-by-hop exactly as
+//! on the real fabric).
+
+use super::config::MachineConfig;
+use super::metrics::{Metrics, RunReport};
+use super::program::{
+    DsdKind, DsdOp, DsdRef, Dtype, IoDir, MOp, MachineProgram, SBinOp, SExpr, SVal, TaskAction,
+    TaskActionKind, TaskKind,
+};
+use super::router::{trace_route, FlowPath, RouteError};
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap, VecDeque};
+use std::rc::Rc;
+
+/// Simulator errors.
+#[derive(Debug, Clone)]
+pub enum SimError {
+    /// Program failed resource validation (paper's OOR / OOM).
+    Validation(Vec<String>),
+    Route(RouteError),
+    /// Quiescence with unsatisfied fabric consumers or blocked tasks.
+    Deadlock(String),
+    /// Event budget exhausted.
+    Runaway(u64),
+    /// Bad I/O binding or size mismatch.
+    Io(String),
+    /// Malformed program detected at runtime.
+    Program(String),
+}
+
+impl std::fmt::Display for SimError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SimError::Validation(v) => write!(f, "validation failed: {}", v.join("; ")),
+            SimError::Route(e) => write!(f, "routing error: {e}"),
+            SimError::Deadlock(s) => write!(f, "deadlock: {s}"),
+            SimError::Runaway(n) => write!(f, "event budget exhausted ({n})"),
+            SimError::Io(s) => write!(f, "io error: {s}"),
+            SimError::Program(s) => write!(f, "program error: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for SimError {}
+
+impl From<RouteError> for SimError {
+    fn from(e: RouteError) -> Self {
+        SimError::Route(e)
+    }
+}
+
+const NUM_REGS: usize = 64;
+
+/// Per-task runtime state.
+#[derive(Clone, Debug, Default)]
+struct TaskState {
+    active: bool,
+    blocked: bool,
+}
+
+/// An arrived flow queued at a (PE, color) endpoint.
+struct ArrivedFlow {
+    /// Availability time of word 0 at this PE's ramp.
+    first_word: u64,
+    words: Rc<Vec<u32>>,
+    /// Next unconsumed word index.
+    cursor: usize,
+}
+
+impl ArrivedFlow {
+    fn remaining(&self) -> usize {
+        self.words.len() - self.cursor
+    }
+
+    fn word_time(&self, idx: usize) -> u64 {
+        self.first_word + idx as u64
+    }
+}
+
+/// A vector operand for elementwise DSD application.
+enum VOp<'a> {
+    Mem(&'a DsdRef),
+    Vals(&'a [f64]),
+    Nothing,
+}
+
+/// A resolved memory descriptor: byte base + byte stride.
+struct RMem {
+    base: usize,
+    stride: isize,
+    ty: Dtype,
+}
+
+/// A resolved vector operand (hot-loop form of [`VOp`]).
+enum RVOp<'a> {
+    Mem(RMem),
+    Vals(&'a [f64]),
+    Nothing,
+}
+
+/// An outstanding microthreaded fabric-in consumer.
+struct PendingConsume {
+    op: DsdOp,
+    need: usize,
+    taken: Vec<u32>,
+    /// Availability time of the last word taken so far.
+    last_avail: u64,
+    issue_time: u64,
+}
+
+/// Per-(PE, color) fabric endpoint state.
+#[derive(Default)]
+struct ColorEndpoint {
+    flows: VecDeque<ArrivedFlow>,
+    consumers: VecDeque<PendingConsume>,
+}
+
+/// Runtime state of one PE.
+struct Pe {
+    x: i64,
+    y: i64,
+    class: usize,
+    mem: Vec<u8>,
+    regs: [SVal; NUM_REGS],
+    tasks: Vec<TaskState>,
+    busy_until: u64,
+    last_activity: u64,
+    endpoints: HashMap<u8, ColorEndpoint>,
+    ran_anything: bool,
+    busy_cycles: u64,
+}
+
+#[derive(Clone, Debug)]
+enum EventKind {
+    /// Try to run a ready task on this PE.
+    PeReady(u32),
+    /// A flow's first word reaches this PE's ramp.
+    FlowArrive { pe: u32, color: u8, first_word: u64, words: Rc<Vec<u32>> },
+    /// A microthread completed: apply its task actions.
+    Complete { pe: u32, actions: Vec<TaskAction> },
+}
+
+#[derive(Clone, Debug)]
+struct Event {
+    time: u64,
+    seq: u64,
+    kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.time, self.seq).cmp(&(other.time, other.seq))
+    }
+}
+
+/// The WSE-2 simulator. Construct with [`Simulator::new`], feed inputs
+/// with [`Simulator::set_input`], [`Simulator::run`], then read outputs.
+pub struct Simulator {
+    pub cfg: MachineConfig,
+    prog: Rc<MachineProgram>,
+    pes: Vec<Pe>,
+    pe_lookup: HashMap<(i64, i64), u32>,
+    /// Link busy-until per ((x, y), direction index).
+    link_busy: HashMap<(i64, i64, usize), u64>,
+    route_cache: HashMap<(i64, i64, u8), Rc<FlowPath>>,
+    events: BinaryHeap<Reverse<Event>>,
+    now: u64,
+    seq: u64,
+    metrics: Metrics,
+    /// External inputs staged before run (arg name -> data words).
+    inputs: HashMap<String, Vec<u32>>,
+    /// Per-class task indices sorted by hardware ID (scheduler order).
+    task_order: Vec<Rc<Vec<usize>>>,
+    ran: bool,
+}
+
+impl Simulator {
+    /// Build a simulator for `prog` on `cfg`, validating resources.
+    pub fn new(cfg: MachineConfig, prog: MachineProgram) -> Result<Simulator, SimError> {
+        let errs = prog.validate(&cfg);
+        if !errs.is_empty() {
+            return Err(SimError::Validation(errs));
+        }
+        let prog = Rc::new(prog);
+        let mut pes = Vec::new();
+        let mut pe_lookup = HashMap::new();
+        for (ci, class) in prog.classes.iter().enumerate() {
+            for g in &class.subgrids {
+                for (x, y) in g.iter() {
+                    let idx = pes.len() as u32;
+                    pe_lookup.insert((x, y), idx);
+                    let tasks = vec![TaskState::default(); class.tasks.len()];
+                    pes.push(Pe {
+                        x,
+                        y,
+                        class: ci,
+                        mem: vec![0u8; class.mem_size as usize],
+                        regs: [SVal::I(0); NUM_REGS],
+                        tasks,
+                        busy_until: 0,
+                        last_activity: 0,
+                        endpoints: HashMap::new(),
+                        ran_anything: false,
+                        busy_cycles: 0,
+                    });
+                }
+            }
+        }
+        let task_order: Vec<Rc<Vec<usize>>> = prog
+            .classes
+            .iter()
+            .map(|c| {
+                let mut order: Vec<usize> = (0..c.tasks.len()).collect();
+                order.sort_by_key(|ti| c.tasks[*ti].hw_id);
+                Rc::new(order)
+            })
+            .collect();
+        Ok(Simulator {
+            cfg,
+            prog,
+            pes,
+            pe_lookup,
+            link_busy: HashMap::new(),
+            route_cache: HashMap::new(),
+            events: BinaryHeap::new(),
+            now: 0,
+            seq: 0,
+            metrics: Metrics::default(),
+            inputs: HashMap::new(),
+            task_order,
+            ran: false,
+        })
+    }
+
+    pub fn program(&self) -> &MachineProgram {
+        &self.prog
+    }
+
+    /// Stage input data for a kernel argument (f32 layout).
+    pub fn set_input(&mut self, arg: &str, data: &[f32]) -> Result<(), SimError> {
+        let words: Vec<u32> = data.iter().map(|v| v.to_bits()).collect();
+        self.set_input_words(arg, words)
+    }
+
+    /// Stage raw 32-bit words for a kernel argument.
+    pub fn set_input_words(&mut self, arg: &str, words: Vec<u32>) -> Result<(), SimError> {
+        let binding = self
+            .prog
+            .io
+            .iter()
+            .find(|b| b.arg == arg && b.dir == IoDir::In)
+            .ok_or_else(|| SimError::Io(format!("no input binding for {arg}")))?;
+        let expect = binding.total_ports as usize * binding.elems_per_pe as usize;
+        if words.len() != expect {
+            return Err(SimError::Io(format!(
+                "input {arg}: got {} elements, binding expects {expect}",
+                words.len()
+            )));
+        }
+        self.inputs.insert(arg.to_string(), words);
+        Ok(())
+    }
+
+    fn schedule(&mut self, time: u64, kind: EventKind) {
+        self.seq += 1;
+        let time = time.max(self.now);
+        self.events.push(Reverse(Event { time, seq: self.seq, kind }));
+    }
+
+    /// Load staged inputs into extern fields.
+    fn load_inputs(&mut self) -> Result<(), SimError> {
+        let prog = Rc::clone(&self.prog);
+        for binding in prog.io.iter().filter(|b| b.dir == IoDir::In) {
+            let words = match self.inputs.get(&binding.arg) {
+                Some(w) => w.clone(),
+                None => {
+                    vec![0u32; binding.total_ports as usize * binding.elems_per_pe as usize]
+                }
+            };
+            for (x, y) in binding.subgrid.iter() {
+                let pe_idx = *self.pe_lookup.get(&(x, y)).ok_or_else(|| {
+                    SimError::Io(format!(
+                        "input {} targets PE ({x},{y}) with no code",
+                        binding.arg
+                    ))
+                })? as usize;
+                let class = &prog.classes[self.pes[pe_idx].class];
+                let field = class.field(&binding.field).ok_or_else(|| {
+                    SimError::Io(format!(
+                        "input {}: field {} missing in class {}",
+                        binding.arg, binding.field, class.name
+                    ))
+                })?;
+                if binding.elems_per_pe > field.len {
+                    return Err(SimError::Io(format!(
+                        "input {}: {} elems/PE > field {} len {}",
+                        binding.arg, binding.elems_per_pe, field.name, field.len
+                    )));
+                }
+                let port = binding.port_map.port(x, y);
+                if port < 0 || port >= binding.total_ports as i64 {
+                    return Err(SimError::Io(format!(
+                        "input {}: PE ({x},{y}) maps to port {port} outside [0,{})",
+                        binding.arg, binding.total_ports
+                    )));
+                }
+                let off = port as usize * binding.elems_per_pe as usize;
+                let esz = binding.ty.size();
+                for k in 0..binding.elems_per_pe as usize {
+                    let addr = field.addr as usize + k * esz;
+                    let w = words[off + k];
+                    match esz {
+                        4 => self.pes[pe_idx].mem[addr..addr + 4].copy_from_slice(&w.to_le_bytes()),
+                        2 => self.pes[pe_idx].mem[addr..addr + 2]
+                            .copy_from_slice(&(w as u16).to_le_bytes()),
+                        _ => unreachable!(),
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Read an output argument back (f32 layout).
+    pub fn get_output(&self, arg: &str) -> Result<Vec<f32>, SimError> {
+        Ok(self.get_output_words(arg)?.into_iter().map(f32::from_bits).collect())
+    }
+
+    pub fn get_output_words(&self, arg: &str) -> Result<Vec<u32>, SimError> {
+        let bindings: Vec<_> =
+            self.prog.io.iter().filter(|b| b.arg == arg && b.dir == IoDir::Out).collect();
+        if bindings.is_empty() {
+            return Err(SimError::Io(format!("no output binding for {arg}")));
+        }
+        let total =
+            bindings[0].total_ports as usize * bindings[0].elems_per_pe as usize;
+        let mut out = vec![0u32; total];
+        for binding in bindings {
+            for (x, y) in binding.subgrid.iter() {
+                let pe_idx = *self
+                    .pe_lookup
+                    .get(&(x, y))
+                    .ok_or_else(|| SimError::Io(format!("output {arg}: PE ({x},{y}) has no code")))?
+                    as usize;
+                let class = &self.prog.classes[self.pes[pe_idx].class];
+                let field = class.field(&binding.field).ok_or_else(|| {
+                    SimError::Io(format!("output {arg}: field {} missing", binding.field))
+                })?;
+                let port = binding.port_map.port(x, y);
+                if port < 0 || port >= binding.total_ports as i64 {
+                    return Err(SimError::Io(format!(
+                        "output {}: PE ({x},{y}) maps to port {port} outside [0,{})",
+                        binding.arg, binding.total_ports
+                    )));
+                }
+                let off = port as usize * binding.elems_per_pe as usize;
+                let esz = binding.ty.size();
+                for k in 0..binding.elems_per_pe as usize {
+                    let addr = field.addr as usize + k * esz;
+                    let w = match esz {
+                        4 => u32::from_le_bytes(
+                            self.pes[pe_idx].mem[addr..addr + 4].try_into().unwrap(),
+                        ),
+                        2 => u16::from_le_bytes(
+                            self.pes[pe_idx].mem[addr..addr + 2].try_into().unwrap(),
+                        ) as u32,
+                        _ => unreachable!(),
+                    };
+                    out[off + k] = w;
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Debug: read `len` elements of `field` at PE (x, y) as f32.
+    pub fn read_field(&self, x: i64, y: i64, field: &str) -> Option<Vec<f32>> {
+        let pe_idx = *self.pe_lookup.get(&(x, y))? as usize;
+        let class = &self.prog.classes[self.pes[pe_idx].class];
+        let f = class.field(field)?;
+        let mut out = Vec::with_capacity(f.len as usize);
+        for k in 0..f.len as usize {
+            let addr = f.addr as usize + k * f.ty.size();
+            out.push(f32::from_bits(u32::from_le_bytes(
+                self.pes[pe_idx].mem[addr..addr + 4].try_into().unwrap(),
+            )));
+        }
+        Some(out)
+    }
+
+    /// Run the kernel to quiescence. Returns the run report.
+    pub fn run(&mut self) -> Result<RunReport, SimError> {
+        assert!(!self.ran, "Simulator::run is single-shot");
+        self.ran = true;
+        self.load_inputs()?;
+
+        // Initialize task states and entry activations.
+        let prog = Rc::clone(&self.prog);
+        for pe_idx in 0..self.pes.len() {
+            let class = &prog.classes[self.pes[pe_idx].class];
+            for (ti, t) in class.tasks.iter().enumerate() {
+                let st = &mut self.pes[pe_idx].tasks[ti];
+                st.active = t.initially_active || matches!(t.kind, TaskKind::Data { .. });
+                st.blocked = t.initially_blocked;
+            }
+            for id in &class.entry_tasks {
+                if let Some(ti) = class.tasks.iter().position(|t| t.hw_id == *id) {
+                    self.pes[pe_idx].tasks[ti].active = true;
+                } else {
+                    return Err(SimError::Program(format!(
+                        "class {}: entry task id {} undefined",
+                        class.name, id
+                    )));
+                }
+            }
+            if !class.entry_tasks.is_empty() {
+                self.schedule(0, EventKind::PeReady(pe_idx as u32));
+            }
+        }
+
+        // Event loop.
+        while let Some(Reverse(ev)) = self.events.pop() {
+            self.metrics.events += 1;
+            if self.metrics.events > self.cfg.max_events {
+                return Err(SimError::Runaway(self.cfg.max_events));
+            }
+            self.now = ev.time;
+            match ev.kind {
+                EventKind::PeReady(pe) => self.pe_ready(pe as usize)?,
+                EventKind::FlowArrive { pe, color, first_word, words } => {
+                    self.flow_arrive(pe as usize, color, first_word, words)?
+                }
+                EventKind::Complete { pe, actions } => {
+                    self.apply_actions(pe as usize, &actions);
+                    self.schedule(self.now, EventKind::PeReady(pe));
+                }
+            }
+        }
+
+        // Quiescent: check for deadlock.
+        let mut stuck = vec![];
+        for pe in &self.pes {
+            for (color, ep) in &pe.endpoints {
+                if let Some(c) = ep.consumers.front() {
+                    stuck.push(format!(
+                        "PE ({},{}) color {} waiting for {} more wavelets",
+                        pe.x,
+                        pe.y,
+                        color,
+                        c.need - c.taken.len()
+                    ));
+                }
+            }
+        }
+        if !stuck.is_empty() {
+            stuck.truncate(8);
+            return Err(SimError::Deadlock(stuck.join("; ")));
+        }
+
+        let cycles = self.pes.iter().map(|p| p.last_activity).max().unwrap_or(0);
+        let mut m = self.metrics.clone();
+        m.active_pes = self.pes.iter().filter(|p| p.ran_anything).count() as u64;
+        m.busy_cycles = self.pes.iter().map(|p| p.busy_cycles).sum();
+        let mut colors = self.prog.colors_used.clone();
+        colors.sort_unstable();
+        colors.dedup();
+        Ok(RunReport {
+            kernel: self.prog.name.clone(),
+            cycles,
+            metrics: m,
+            width: self.cfg.width,
+            height: self.cfg.height,
+            colors_used: colors.len(),
+            task_ids_used: self.prog.max_task_ids_used(),
+            mem_bytes_used: self.prog.max_mem_used(),
+        })
+    }
+
+    // ------------------------------------------------------------------
+    // Task scheduling
+    // ------------------------------------------------------------------
+
+    fn pe_ready(&mut self, pe_idx: usize) -> Result<(), SimError> {
+        if self.pes[pe_idx].busy_until > self.now {
+            let t = self.pes[pe_idx].busy_until;
+            self.schedule(t, EventKind::PeReady(pe_idx as u32));
+            return Ok(());
+        }
+        let prog = Rc::clone(&self.prog);
+        let class = &prog.classes[self.pes[pe_idx].class];
+
+        // Pick the lowest-ID runnable task: local (active && !blocked) or
+        // data (not blocked, words available now, no DSD consumer bound).
+        let mut chosen: Option<usize> = None;
+        let order = Rc::clone(&self.task_order[self.pes[pe_idx].class]);
+        let mut next_wakeup: Option<u64> = None;
+        for &ti in order.iter() {
+            let tdef = &class.tasks[ti];
+            let st = &self.pes[pe_idx].tasks[ti];
+            match &tdef.kind {
+                TaskKind::Local => {
+                    if st.active && !st.blocked {
+                        chosen = Some(ti);
+                        break;
+                    }
+                }
+                TaskKind::Data { color, .. } => {
+                    if st.blocked {
+                        continue;
+                    }
+                    if let Some(ep) = self.pes[pe_idx].endpoints.get(color) {
+                        if !ep.consumers.is_empty() {
+                            continue; // color driven by a microthread
+                        }
+                        if let Some(f) = ep.flows.front() {
+                            let t0 = f.word_time(f.cursor);
+                            if t0 <= self.now {
+                                chosen = Some(ti);
+                                break;
+                            } else {
+                                next_wakeup =
+                                    Some(next_wakeup.map_or(t0, |w: u64| w.min(t0)));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        if chosen.is_none() {
+            if let Some(t) = next_wakeup {
+                self.schedule(t, EventKind::PeReady(pe_idx as u32));
+            }
+            return Ok(());
+        }
+        let ti = chosen.unwrap();
+        let tdef = class.tasks[ti].clone();
+        self.metrics.task_runs += 1;
+        self.pes[pe_idx].ran_anything = true;
+
+        let start = self.now.max(self.pes[pe_idx].busy_until);
+        let mut clock = start + self.cfg.task_wakeup_cycles;
+
+        match &tdef.kind {
+            TaskKind::Local => {
+                self.pes[pe_idx].tasks[ti].active = false;
+                self.exec_ops(pe_idx, &tdef.body, &mut clock)?;
+            }
+            TaskKind::Data { color, wavelet_reg } => {
+                // Consume available wavelets one at a time (hardware fires
+                // the task per wavelet; we batch into one scheduling event).
+                loop {
+                    let word = {
+                        let ep = self.pes[pe_idx].endpoints.get_mut(color).unwrap();
+                        match ep.flows.front_mut() {
+                            Some(f) if f.word_time(f.cursor) <= clock => {
+                                let w = f.words[f.cursor];
+                                f.cursor += 1;
+                                let done = f.remaining() == 0;
+                                if done {
+                                    ep.flows.pop_front();
+                                }
+                                Some(w)
+                            }
+                            _ => None,
+                        }
+                    };
+                    let Some(w) = word else { break };
+                    self.pes[pe_idx].regs[*wavelet_reg as usize] =
+                        SVal::F(f32::from_bits(w) as f64);
+                    clock += self.cfg.data_task_wavelet_cycles;
+                    self.exec_ops(pe_idx, &tdef.body, &mut clock)?;
+                    if self.pes[pe_idx].tasks[ti].blocked {
+                        break; // body blocked its own task
+                    }
+                }
+                // If more words are in flight, wake up again.
+                if let Some(ep) = self.pes[pe_idx].endpoints.get(color) {
+                    if let Some(f) = ep.flows.front() {
+                        let t0 = f.word_time(f.cursor);
+                        self.schedule(t0.max(clock), EventKind::PeReady(pe_idx as u32));
+                    }
+                }
+            }
+        }
+
+        let pe = &mut self.pes[pe_idx];
+        pe.busy_cycles += clock - start;
+        pe.busy_until = clock;
+        pe.last_activity = pe.last_activity.max(clock);
+        self.schedule(clock, EventKind::PeReady(pe_idx as u32));
+        Ok(())
+    }
+
+    fn apply_actions(&mut self, pe_idx: usize, actions: &[TaskAction]) {
+        let prog = Rc::clone(&self.prog);
+        let class = &prog.classes[self.pes[pe_idx].class];
+        for a in actions {
+            if let Some((reg, val)) = a.set_reg {
+                self.pes[pe_idx].regs[reg as usize] = SVal::I(val);
+                self.metrics.dispatches += 1;
+            }
+            if let Some(ti) = class.tasks.iter().position(|t| t.hw_id == a.task) {
+                let st = &mut self.pes[pe_idx].tasks[ti];
+                match a.kind {
+                    TaskActionKind::Activate => st.active = true,
+                    TaskActionKind::Unblock => st.blocked = false,
+                    TaskActionKind::Block => st.blocked = true,
+                }
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Fabric
+    // ------------------------------------------------------------------
+
+    fn flow_arrive(
+        &mut self,
+        pe_idx: usize,
+        color: u8,
+        first_word: u64,
+        words: Rc<Vec<u32>>,
+    ) -> Result<(), SimError> {
+        self.metrics.ramp_bytes += 4 * words.len() as u64;
+        let ep = self.pes[pe_idx].endpoints.entry(color).or_default();
+        ep.flows.push_back(ArrivedFlow { first_word, words, cursor: 0 });
+        self.try_satisfy(pe_idx, color)?;
+        // A data task may be waiting for this color.
+        self.schedule(first_word.max(self.now), EventKind::PeReady(pe_idx as u32));
+        Ok(())
+    }
+
+    /// Inject a flow from PE (sx, sy) on `color` with payload `words`,
+    /// not before `earliest`. Returns (start_time, drain_end).
+    fn send_flow(
+        &mut self,
+        sx: i64,
+        sy: i64,
+        color: u8,
+        words: Rc<Vec<u32>>,
+        earliest: u64,
+    ) -> Result<(u64, u64), SimError> {
+        let n = words.len() as u64;
+        if n == 0 {
+            return Ok((earliest, earliest));
+        }
+        let path = match self.route_cache.get(&(sx, sy, color)) {
+            Some(p) => Rc::clone(p),
+            None => {
+                let p = Rc::new(trace_route(&self.prog, &self.cfg, color, sx, sy)?);
+                self.route_cache.insert((sx, sy, color), Rc::clone(&p));
+                p
+            }
+        };
+        if path.dests.is_empty() {
+            return Err(SimError::Program(format!(
+                "flow on color {color} from ({sx},{sy}) has no destinations"
+            )));
+        }
+        // Wormhole start: every link l must be free at start + depth(l).
+        let mut start = earliest;
+        for l in &path.links {
+            let key = (l.x, l.y, l.dir.index());
+            if let Some(busy) = self.link_busy.get(&key) {
+                start = start.max(busy.saturating_sub(l.depth));
+            }
+        }
+        for l in &path.links {
+            let key = (l.x, l.y, l.dir.index());
+            self.link_busy.insert(key, start + l.depth + n);
+        }
+        self.metrics.flows += 1;
+        self.metrics.wavelets += n;
+        self.metrics.wavelet_hops += n * path.links.len() as u64;
+        self.metrics.ramp_bytes += 4 * n; // source on-ramp
+
+        for (dx, dy, depth) in path.dests.clone() {
+            let first = start + depth + self.cfg.hop_cycles;
+            let Some(&dst_idx) = self.pe_lookup.get(&(dx, dy)) else {
+                return Err(SimError::Program(format!(
+                    "flow on color {color} delivered to PE ({dx},{dy}) with no code"
+                )));
+            };
+            self.schedule(
+                first.max(self.now),
+                EventKind::FlowArrive { pe: dst_idx, color, first_word: first, words: Rc::clone(&words) },
+            );
+        }
+        Ok((start, start + n))
+    }
+
+    /// Try to satisfy the head consumer(s) on a (PE, color) endpoint.
+    fn try_satisfy(&mut self, pe_idx: usize, color: u8) -> Result<(), SimError> {
+        loop {
+            let (ready, op, taken, last_avail, issue_time) = {
+                let Some(ep) = self.pes[pe_idx].endpoints.get_mut(&color) else { return Ok(()) };
+                let Some(head) = ep.consumers.front_mut() else { return Ok(()) };
+                // Pull words into the head consumer (batched per flow).
+                while head.taken.len() < head.need {
+                    let Some(f) = ep.flows.front_mut() else { break };
+                    let take = (head.need - head.taken.len()).min(f.remaining());
+                    head.last_avail = head.last_avail.max(f.word_time(f.cursor + take - 1));
+                    head.taken.extend_from_slice(&f.words[f.cursor..f.cursor + take]);
+                    f.cursor += take;
+                    if f.remaining() == 0 {
+                        ep.flows.pop_front();
+                    }
+                }
+                if head.taken.len() < head.need {
+                    return Ok(()); // wait for more flows
+                }
+                let c = ep.consumers.pop_front().unwrap();
+                (true, c.op, c.taken, c.last_avail, c.issue_time)
+            };
+            if !ready {
+                return Ok(());
+            }
+            self.complete_consume(pe_idx, op, taken, last_avail, issue_time)?;
+        }
+    }
+
+    /// Apply a completed fabric-in consumption: compute the op, write the
+    /// destination (memory or a forwarded out-flow), schedule completion.
+    fn complete_consume(
+        &mut self,
+        pe_idx: usize,
+        op: DsdOp,
+        words: Vec<u32>,
+        last_avail: u64,
+        issue_time: u64,
+    ) -> Result<(), SimError> {
+        let n = words.len();
+        let ty = op
+            .src0
+            .as_ref()
+            .or(op.src1.as_ref())
+            .map(|r| r.ty())
+            .unwrap_or(Dtype::F32);
+        // Processing cannot beat the ALU (1 elem/cycle f32) nor the data.
+        let elem_cycles = self.elem_cycles(ty, n as u64);
+        let proc_done = (issue_time + elem_cycles).max(last_avail + 1);
+
+        // Gather the in-stream values.
+        let in_vals: Vec<f64> = words.iter().map(|w| f32::from_bits(*w) as f64).collect();
+        let scalar = op
+            .scalar
+            .as_ref()
+            .map(|e| self.eval(pe_idx, e).as_f())
+            .unwrap_or(1.0);
+
+        let a = match &op.src0 {
+            Some(DsdRef::FabIn { .. }) => VOp::Vals(&in_vals),
+            Some(r @ DsdRef::Mem { .. }) => VOp::Mem(r),
+            _ => VOp::Nothing,
+        };
+        let b = match &op.src1 {
+            Some(DsdRef::FabIn { .. }) => VOp::Vals(&in_vals),
+            Some(r @ DsdRef::Mem { .. }) => VOp::Mem(r),
+            _ => VOp::Nothing,
+        };
+        let out = self.apply_dsd(pe_idx, op.kind, &op.dst, a, b, scalar, n)?;
+
+        if let Some(out_words) = out {
+            let out_color = match &op.dst {
+                DsdRef::FabOut { color, .. } => *color,
+                _ => unreachable!(),
+            };
+            // Streaming forward: out word i departs one cycle after in
+            // word i is processed → out flow starts right behind the
+            // in flow.
+            let (sx, sy) = (self.pes[pe_idx].x, self.pes[pe_idx].y);
+            let earliest = (issue_time + 1).max(proc_done.saturating_sub(n as u64) + 1);
+            self.send_flow(sx, sy, out_color, Rc::new(out_words), earliest)?;
+        }
+
+        if !op.on_complete.is_empty() {
+            self.schedule(
+                proc_done,
+                EventKind::Complete { pe: pe_idx as u32, actions: op.on_complete.clone() },
+            );
+        }
+        let pe = &mut self.pes[pe_idx];
+        pe.last_activity = pe.last_activity.max(proc_done);
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // Interpreter
+    // ------------------------------------------------------------------
+
+    fn elem_cycles(&self, ty: Dtype, n: u64) -> u64 {
+        if ty.is_16bit() {
+            n.div_ceil(self.cfg.simd16_width)
+        } else {
+            n
+        }
+    }
+
+    fn eval(&self, pe_idx: usize, e: &SExpr) -> SVal {
+        let pe = &self.pes[pe_idx];
+        match e {
+            SExpr::ImmI(v) => SVal::I(*v),
+            SExpr::ImmF(v) => SVal::F(*v),
+            SExpr::CoordX => SVal::I(pe.x),
+            SExpr::CoordY => SVal::I(pe.y),
+            SExpr::Reg(r) => pe.regs[*r as usize],
+            SExpr::LoadMem { addr, ty } => {
+                let a = self.eval(pe_idx, addr).as_i() as usize;
+                self.load_scalar(pe_idx, a, *ty)
+            }
+            SExpr::Neg(a) => match self.eval(pe_idx, a) {
+                SVal::I(v) => SVal::I(-v),
+                SVal::F(v) => SVal::F(-v),
+            },
+            SExpr::Not(a) => SVal::I(!self.eval(pe_idx, a).truthy() as i64),
+            SExpr::Select(c, a, b) => {
+                if self.eval(pe_idx, c).truthy() {
+                    self.eval(pe_idx, a)
+                } else {
+                    self.eval(pe_idx, b)
+                }
+            }
+            SExpr::Bin(op, a, b) => {
+                let va = self.eval(pe_idx, a);
+                let vb = self.eval(pe_idx, b);
+                let float = matches!(va, SVal::F(_)) || matches!(vb, SVal::F(_));
+                use SBinOp::*;
+                if float {
+                    let (x, y) = (va.as_f(), vb.as_f());
+                    match op {
+                        Add => SVal::F(x + y),
+                        Sub => SVal::F(x - y),
+                        Mul => SVal::F(x * y),
+                        Div => SVal::F(x / y),
+                        Mod => SVal::F(x % y),
+                        Min => SVal::F(x.min(y)),
+                        Max => SVal::F(x.max(y)),
+                        Eq => SVal::I((x == y) as i64),
+                        Ne => SVal::I((x != y) as i64),
+                        Lt => SVal::I((x < y) as i64),
+                        Le => SVal::I((x <= y) as i64),
+                        Gt => SVal::I((x > y) as i64),
+                        Ge => SVal::I((x >= y) as i64),
+                        And => SVal::I((x != 0.0 && y != 0.0) as i64),
+                        Or => SVal::I((x != 0.0 || y != 0.0) as i64),
+                    }
+                } else {
+                    let (x, y) = (va.as_i(), vb.as_i());
+                    match op {
+                        Add => SVal::I(x + y),
+                        Sub => SVal::I(x - y),
+                        Mul => SVal::I(x * y),
+                        Div => SVal::I(if y != 0 { x / y } else { 0 }),
+                        Mod => SVal::I(if y != 0 { x.rem_euclid(y) } else { 0 }),
+                        Min => SVal::I(x.min(y)),
+                        Max => SVal::I(x.max(y)),
+                        Eq => SVal::I((x == y) as i64),
+                        Ne => SVal::I((x != y) as i64),
+                        Lt => SVal::I((x < y) as i64),
+                        Le => SVal::I((x <= y) as i64),
+                        Gt => SVal::I((x > y) as i64),
+                        Ge => SVal::I((x >= y) as i64),
+                        And => SVal::I((x != 0 && y != 0) as i64),
+                        Or => SVal::I((x != 0 || y != 0) as i64),
+                    }
+                }
+            }
+        }
+    }
+
+    fn load_scalar(&self, pe_idx: usize, addr: usize, ty: Dtype) -> SVal {
+        let mem = &self.pes[pe_idx].mem;
+        match ty {
+            Dtype::F32 => SVal::F(f32::from_bits(u32::from_le_bytes(
+                mem[addr..addr + 4].try_into().unwrap(),
+            )) as f64),
+            Dtype::I32 | Dtype::U32 => {
+                SVal::I(i32::from_le_bytes(mem[addr..addr + 4].try_into().unwrap()) as i64)
+            }
+            Dtype::F16 => {
+                let bits = u16::from_le_bytes(mem[addr..addr + 2].try_into().unwrap());
+                SVal::F(f16_to_f64(bits))
+            }
+            Dtype::I16 => {
+                SVal::I(i16::from_le_bytes(mem[addr..addr + 2].try_into().unwrap()) as i64)
+            }
+            Dtype::U16 => {
+                SVal::I(u16::from_le_bytes(mem[addr..addr + 2].try_into().unwrap()) as i64)
+            }
+        }
+    }
+
+    fn store_scalar(&mut self, pe_idx: usize, addr: usize, ty: Dtype, v: SVal) {
+        let mem = &mut self.pes[pe_idx].mem;
+        match ty {
+            Dtype::F32 => {
+                mem[addr..addr + 4].copy_from_slice(&(v.as_f() as f32).to_bits().to_le_bytes())
+            }
+            Dtype::I32 | Dtype::U32 => {
+                mem[addr..addr + 4].copy_from_slice(&(v.as_i() as i32).to_le_bytes())
+            }
+            Dtype::F16 => {
+                mem[addr..addr + 2].copy_from_slice(&f64_to_f16(v.as_f()).to_le_bytes())
+            }
+            Dtype::I16 | Dtype::U16 => {
+                mem[addr..addr + 2].copy_from_slice(&(v.as_i() as i16).to_le_bytes())
+            }
+        }
+    }
+
+    /// Apply a DSD op elementwise. Reads are *lazy* (per element, from
+    /// current memory), so aliased / stride-0 descriptors behave like the
+    /// hardware's sequential element pipeline (e.g. a stride-0
+    /// destination accumulates — the idiom for scalar reductions).
+    /// Returns `Some(words)` if the destination is a fabric output.
+    fn apply_dsd(
+        &mut self,
+        pe_idx: usize,
+        kind: DsdKind,
+        dst: &DsdRef,
+        a: VOp<'_>,
+        b: VOp<'_>,
+        scalar: f64,
+        n: usize,
+    ) -> Result<Option<Vec<u32>>, SimError> {
+        let mut out: Option<Vec<u32>> = match dst {
+            DsdRef::FabOut { .. } => Some(Vec::with_capacity(n)),
+            DsdRef::Mem { .. } => None,
+            DsdRef::FabIn { .. } => {
+                return Err(SimError::Program("DSD destination cannot be FabIn".into()))
+            }
+        };
+        // Hot path: resolve descriptors to (base, stride) once, so the
+        // per-element loop is pure pointer arithmetic.
+        let ra = self.resolve_vop(pe_idx, &a);
+        let rb = self.resolve_vop(pe_idx, &b);
+        let rdst = match dst {
+            DsdRef::Mem { .. } => Some(self.resolve_mem(pe_idx, dst)),
+            _ => None,
+        };
+        for i in 0..n {
+            let av = self.rv_val(pe_idx, &ra, i);
+            let bv = self.rv_val(pe_idx, &rb, i);
+            let r = match kind {
+                DsdKind::Fadd => av + bv,
+                DsdKind::Fsub => av - bv,
+                DsdKind::Fmul => av * bv,
+                DsdKind::Fmac => av + bv * scalar,
+                DsdKind::Fscale => av * scalar,
+                DsdKind::Mov => av,
+                DsdKind::Fill => scalar,
+                DsdKind::FmaxOp => av.max(bv),
+            };
+            match (&mut out, &rdst) {
+                (Some(words), _) => words.push((r as f32).to_bits()),
+                (None, Some(d)) => {
+                    let addr = (d.base as isize + i as isize * d.stride) as usize;
+                    if d.ty == Dtype::F32 {
+                        self.pes[pe_idx].mem[addr..addr + 4]
+                            .copy_from_slice(&(r as f32).to_le_bytes());
+                    } else {
+                        self.store_scalar(pe_idx, addr, d.ty, SVal::F(r));
+                    }
+                }
+                _ => unreachable!(),
+            }
+        }
+        self.metrics.flops += kind.flops_per_elem() * n as u64;
+        self.metrics.mem_bytes += (n * dst.ty().size()) as u64;
+        self.metrics.dsd_ops += 1;
+        Ok(out)
+    }
+
+    fn resolve_mem(&self, pe_idx: usize, r: &DsdRef) -> RMem {
+        match r {
+            DsdRef::Mem { base, offset, stride, ty, .. } => {
+                let off = self.eval(pe_idx, offset).as_i();
+                RMem {
+                    base: (*base as i64 + off * ty.size() as i64) as usize,
+                    stride: (*stride * ty.size() as i64) as isize,
+                    ty: *ty,
+                }
+            }
+            _ => panic!("resolve_mem on fabric DSD"),
+        }
+    }
+
+    fn resolve_vop<'a>(&self, pe_idx: usize, o: &VOp<'a>) -> RVOp<'a> {
+        match o {
+            VOp::Vals(v) => RVOp::Vals(v),
+            VOp::Mem(r) => RVOp::Mem(self.resolve_mem(pe_idx, r)),
+            VOp::Nothing => RVOp::Nothing,
+        }
+    }
+
+    #[inline]
+    fn rv_val(&self, pe_idx: usize, o: &RVOp<'_>, i: usize) -> f64 {
+        match o {
+            RVOp::Vals(v) => v[i],
+            RVOp::Mem(r) => {
+                let addr = (r.base as isize + i as isize * r.stride) as usize;
+                if r.ty == Dtype::F32 {
+                    // Fast path: the dominant case in every kernel.
+                    let mem = &self.pes[pe_idx].mem;
+                    f32::from_le_bytes(mem[addr..addr + 4].try_into().unwrap()) as f64
+                } else {
+                    self.load_scalar(pe_idx, addr, r.ty).as_f()
+                }
+            }
+            RVOp::Nothing => 0.0,
+        }
+    }
+
+    fn dsd_len(&self, pe_idx: usize, op: &DsdOp) -> usize {
+        let from = |r: &DsdRef| -> i64 {
+            match r {
+                DsdRef::Mem { len, .. } | DsdRef::FabIn { len, .. } | DsdRef::FabOut { len, .. } => {
+                    self.eval(pe_idx, len).as_i()
+                }
+            }
+        };
+        from(&op.dst)
+            .min(op.src0.as_ref().map(|r| from(r)).unwrap_or(i64::MAX))
+            .min(op.src1.as_ref().map(|r| from(r)).unwrap_or(i64::MAX))
+            .max(0) as usize
+    }
+
+    fn exec_ops(&mut self, pe_idx: usize, ops: &[MOp], clock: &mut u64) -> Result<(), SimError> {
+        for op in ops {
+            match op {
+                MOp::SetReg { reg, val } => {
+                    let v = self.eval(pe_idx, val);
+                    self.pes[pe_idx].regs[*reg as usize] = v;
+                    *clock += self.cfg.scalar_op_cycles + val.cost();
+                }
+                MOp::Store { addr, ty, val } => {
+                    let a = self.eval(pe_idx, addr).as_i() as usize;
+                    let v = self.eval(pe_idx, val);
+                    self.store_scalar(pe_idx, a, *ty, v);
+                    self.metrics.mem_bytes += ty.size() as u64;
+                    *clock += self.cfg.scalar_op_cycles + addr.cost() + val.cost();
+                }
+                MOp::Control(a) => {
+                    self.apply_actions(pe_idx, std::slice::from_ref(a));
+                    *clock += self.cfg.scalar_op_cycles;
+                    // Activation becomes visible now; the post-task
+                    // PeReady event will pick it up.
+                }
+                MOp::If { cond, then_ops, else_ops } => {
+                    *clock += self.cfg.scalar_op_cycles + cond.cost();
+                    if self.eval(pe_idx, cond).truthy() {
+                        self.exec_ops(pe_idx, then_ops, clock)?;
+                    } else {
+                        self.exec_ops(pe_idx, else_ops, clock)?;
+                    }
+                }
+                MOp::For { reg, start, stop, step, body } => {
+                    let s = self.eval(pe_idx, start).as_i();
+                    let e = self.eval(pe_idx, stop).as_i();
+                    let st = self.eval(pe_idx, step).as_i().max(1);
+                    let mut i = s;
+                    *clock += self.cfg.scalar_op_cycles;
+                    while i < e {
+                        self.pes[pe_idx].regs[*reg as usize] = SVal::I(i);
+                        self.exec_ops(pe_idx, body, clock)?;
+                        *clock += self.cfg.scalar_op_cycles; // inc + branch
+                        i += st;
+                    }
+                }
+                MOp::Halt => {
+                    let pe = &mut self.pes[pe_idx];
+                    pe.last_activity = pe.last_activity.max(*clock);
+                }
+                MOp::Trace(msg) => {
+                    let pe = &self.pes[pe_idx];
+                    eprintln!("[{}] PE({},{}): {}", *clock, pe.x, pe.y, msg);
+                }
+                MOp::Dsd(d) => self.exec_dsd(pe_idx, d, clock)?,
+            }
+        }
+        Ok(())
+    }
+
+    fn exec_dsd(&mut self, pe_idx: usize, op: &DsdOp, clock: &mut u64) -> Result<(), SimError> {
+        *clock += self.cfg.dsd_issue_cycles;
+        let n = self.dsd_len(pe_idx, op);
+        let has_fabin = matches!(op.src0, Some(DsdRef::FabIn { .. }))
+            || matches!(op.src1, Some(DsdRef::FabIn { .. }));
+        let fabout_dst = matches!(op.dst, DsdRef::FabOut { .. });
+
+        if has_fabin {
+            if !op.is_async {
+                return Err(SimError::Program(
+                    "fabric-in DSD operations must be asynchronous (microthreaded)".into(),
+                ));
+            }
+            let color = match (&op.src0, &op.src1) {
+                (Some(DsdRef::FabIn { color, .. }), _) => *color,
+                (_, Some(DsdRef::FabIn { color, .. })) => *color,
+                _ => unreachable!(),
+            };
+            let ep = self.pes[pe_idx].endpoints.entry(color).or_default();
+            ep.consumers.push_back(PendingConsume {
+                op: op.clone(),
+                need: n,
+                taken: Vec::with_capacity(n),
+                last_avail: 0,
+                issue_time: *clock,
+            });
+            self.try_satisfy(pe_idx, color)?;
+            return Ok(());
+        }
+
+        if fabout_dst {
+            // Compute payload from memory/scalar sources at issue time.
+            let scalar = op.scalar.as_ref().map(|e| self.eval(pe_idx, e).as_f()).unwrap_or(
+                if op.kind == DsdKind::Fill { 0.0 } else { 1.0 },
+            );
+            let a = op.src0.as_ref().map(VOp::Mem).unwrap_or(VOp::Nothing);
+            let b = op.src1.as_ref().map(VOp::Mem).unwrap_or(VOp::Nothing);
+            let words = self
+                .apply_dsd(pe_idx, op.kind, &op.dst, a, b, scalar, n)?
+                .expect("fabout dst produces words");
+            let color = match op.dst {
+                DsdRef::FabOut { color, .. } => color,
+                _ => unreachable!(),
+            };
+            let words: Rc<Vec<u32>> = Rc::new(words);
+            let (sx, sy) = (self.pes[pe_idx].x, self.pes[pe_idx].y);
+            let (_start, drain_end) = self.send_flow(sx, sy, color, words, *clock + 1)?;
+            if op.is_async {
+                if !op.on_complete.is_empty() {
+                    self.schedule(
+                        drain_end,
+                        EventKind::Complete { pe: pe_idx as u32, actions: op.on_complete.clone() },
+                    );
+                }
+            } else {
+                // Synchronous send: spin until the buffer drains.
+                *clock = (*clock).max(drain_end);
+                self.apply_actions(pe_idx, &op.on_complete);
+            }
+            let pe = &mut self.pes[pe_idx];
+            pe.last_activity = pe.last_activity.max(drain_end);
+            return Ok(());
+        }
+
+        // Pure memory op: synchronous semantics (async mem ops share the
+        // ALU anyway), cost = per-element cycles.
+        let ty = op.dst.ty();
+        let scalar = op.scalar.as_ref().map(|e| self.eval(pe_idx, e).as_f()).unwrap_or(
+            if op.kind == DsdKind::Fill { 0.0 } else { 1.0 },
+        );
+        let a = op.src0.as_ref().map(VOp::Mem).unwrap_or(VOp::Nothing);
+        let b = op.src1.as_ref().map(VOp::Mem).unwrap_or(VOp::Nothing);
+        self.apply_dsd(pe_idx, op.kind, &op.dst, a, b, scalar, n)?;
+        *clock += self.elem_cycles(ty, n as u64);
+        self.apply_actions(pe_idx, &op.on_complete);
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// f16 conversion helpers (no external deps)
+// ---------------------------------------------------------------------
+
+fn f16_to_f64(bits: u16) -> f64 {
+    let sign = ((bits >> 15) & 1) as u32;
+    let exp = ((bits >> 10) & 0x1f) as u32;
+    let frac = (bits & 0x3ff) as u32;
+    let f32_bits = if exp == 0 {
+        if frac == 0 {
+            sign << 31
+        } else {
+            // subnormal
+            let mut e = 127 - 15 + 1;
+            let mut f = frac;
+            while f & 0x400 == 0 {
+                f <<= 1;
+                e -= 1;
+            }
+            (sign << 31) | ((e as u32) << 23) | ((f & 0x3ff) << 13)
+        }
+    } else if exp == 0x1f {
+        (sign << 31) | (0xff << 23) | (frac << 13)
+    } else {
+        (sign << 31) | ((exp + 127 - 15) << 23) | (frac << 13)
+    };
+    f32::from_bits(f32_bits) as f64
+}
+
+fn f64_to_f16(v: f64) -> u16 {
+    let bits = (v as f32).to_bits();
+    let sign = ((bits >> 31) & 1) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let frac = bits & 0x7fffff;
+    if exp == 0xff {
+        return (sign << 15) | (0x1f << 10) | ((frac >> 13) as u16 & 0x3ff);
+    }
+    let e = exp - 127 + 15;
+    if e >= 0x1f {
+        (sign << 15) | (0x1f << 10) // overflow -> inf
+    } else if e <= 0 {
+        // subnormal / zero
+        if e < -10 {
+            sign << 15
+        } else {
+            let f = (frac | 0x800000) >> (1 - e + 13);
+            (sign << 15) | f as u16
+        }
+    } else {
+        (sign << 15) | ((e as u16) << 10) | ((frac >> 13) as u16 & 0x3ff)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::machine::program::*;
+    use crate::util::{Range1, Subgrid};
+
+    fn cfg(w: i64, h: i64) -> MachineConfig {
+        MachineConfig::with_grid(w, h)
+    }
+
+    /// Single PE doubles an input field with a Fmac (out = in + in*1).
+    #[test]
+    fn single_pe_vector_op() {
+        let k = 8u32;
+        let class = PeClass {
+            name: "only".into(),
+            subgrids: vec![Subgrid::point(0, 0)],
+            fields: vec![
+                FieldAlloc { name: "in".into(), addr: 0, len: k, ty: Dtype::F32, is_extern: true },
+                FieldAlloc { name: "out".into(), addr: 4 * k, len: k, ty: Dtype::F32, is_extern: true },
+            ],
+            mem_size: 8 * k,
+            tasks: vec![TaskDef {
+                name: "main".into(),
+                hw_id: 24,
+                kind: TaskKind::Local,
+                initially_active: false,
+                initially_blocked: false,
+                body: vec![
+                    MOp::Dsd(DsdOp {
+                        kind: DsdKind::Fmac,
+                        dst: DsdRef::mem(4 * k, SExpr::imm(k as i64), Dtype::F32),
+                        src0: Some(DsdRef::mem(0, SExpr::imm(k as i64), Dtype::F32)),
+                        src1: Some(DsdRef::mem(0, SExpr::imm(k as i64), Dtype::F32)),
+                        scalar: Some(SExpr::ImmF(1.0)),
+                        is_async: false,
+                        on_complete: vec![],
+                    }),
+                    MOp::Halt,
+                ],
+            }],
+            entry_tasks: vec![24],
+        };
+        let prog = MachineProgram {
+            name: "double".into(),
+            classes: vec![class],
+            io: vec![
+                IoBinding {
+                    arg: "in".into(),
+                    field: "in".into(),
+                    dir: IoDir::In,
+                    subgrid: Subgrid::point(0, 0),
+                    elems_per_pe: k,
+                    total_ports: 1,
+                    port_map: PortMap::default(),
+ty: Dtype::F32,
+                },
+                IoBinding {
+                    arg: "out".into(),
+                    field: "out".into(),
+                    dir: IoDir::Out,
+                    subgrid: Subgrid::point(0, 0),
+                    elems_per_pe: k,
+                    total_ports: 1,
+                    port_map: PortMap::default(),
+ty: Dtype::F32,
+                },
+            ],
+            ..Default::default()
+        };
+        let mut sim = Simulator::new(cfg(2, 2), prog).unwrap();
+        let input: Vec<f32> = (0..k).map(|i| i as f32).collect();
+        sim.set_input("in", &input).unwrap();
+        let report = sim.run().unwrap();
+        let out = sim.get_output("out").unwrap();
+        let expect: Vec<f32> = input.iter().map(|v| 2.0 * v).collect();
+        assert_eq!(out, expect);
+        assert!(report.cycles > 0);
+        assert_eq!(report.metrics.flops, 2 * k as u64);
+    }
+
+    /// Two PEs: PE0 sends its array east, PE1 receives and accumulates.
+    #[test]
+    fn two_pe_send_receive() {
+        let k = 16u32;
+        let color = 1u8;
+        let sender = PeClass {
+            name: "sender".into(),
+            subgrids: vec![Subgrid::point(0, 0)],
+            fields: vec![FieldAlloc {
+                name: "a".into(),
+                addr: 0,
+                len: k,
+                ty: Dtype::F32,
+                is_extern: true,
+            }],
+            mem_size: 4 * k,
+            tasks: vec![TaskDef {
+                name: "send".into(),
+                hw_id: 25,
+                kind: TaskKind::Local,
+                initially_active: false,
+                initially_blocked: false,
+                body: vec![MOp::Dsd(DsdOp {
+                    kind: DsdKind::Mov,
+                    dst: DsdRef::FabOut { color, len: SExpr::imm(k as i64), ty: Dtype::F32 },
+                    src0: Some(DsdRef::mem(0, SExpr::imm(k as i64), Dtype::F32)),
+                    src1: None,
+                    scalar: None,
+                    is_async: true,
+                    on_complete: vec![],
+                })],
+            }],
+            entry_tasks: vec![25],
+        };
+        let recv = PeClass {
+            name: "recv".into(),
+            subgrids: vec![Subgrid::point(1, 0)],
+            fields: vec![FieldAlloc {
+                name: "acc".into(),
+                addr: 0,
+                len: k,
+                ty: Dtype::F32,
+                is_extern: true,
+            }],
+            mem_size: 4 * k,
+            tasks: vec![TaskDef {
+                name: "recv".into(),
+                hw_id: 25,
+                kind: TaskKind::Local,
+                initially_active: false,
+                initially_blocked: false,
+                body: vec![MOp::Dsd(DsdOp {
+                    kind: DsdKind::Fadd,
+                    dst: DsdRef::mem(0, SExpr::imm(k as i64), Dtype::F32),
+                    src0: Some(DsdRef::mem(0, SExpr::imm(k as i64), Dtype::F32)),
+                    src1: Some(DsdRef::FabIn { color, len: SExpr::imm(k as i64), ty: Dtype::F32 }),
+                    scalar: None,
+                    is_async: true,
+                    on_complete: vec![],
+                })],
+            }],
+            entry_tasks: vec![25],
+        };
+        let prog = MachineProgram {
+            name: "p2p".into(),
+            classes: vec![sender, recv],
+            routes: vec![
+                RouteRule {
+                    color,
+                    subgrid: Subgrid::point(0, 0),
+                    rx: DirSet::single(Direction::Ramp),
+                    tx: DirSet::single(Direction::East),
+                },
+                RouteRule {
+                    color,
+                    subgrid: Subgrid::point(1, 0),
+                    rx: DirSet::single(Direction::West),
+                    tx: DirSet::single(Direction::Ramp),
+                },
+            ],
+            io: vec![
+                IoBinding {
+                    arg: "a".into(),
+                    field: "a".into(),
+                    dir: IoDir::In,
+                    subgrid: Subgrid::point(0, 0),
+                    elems_per_pe: k,
+                    total_ports: 1,
+                    port_map: PortMap::default(),
+ty: Dtype::F32,
+                },
+                IoBinding {
+                    arg: "acc0".into(),
+                    field: "acc".into(),
+                    dir: IoDir::In,
+                    subgrid: Subgrid::point(1, 0),
+                    elems_per_pe: k,
+                    total_ports: 1,
+                    port_map: PortMap::default(),
+ty: Dtype::F32,
+                },
+                IoBinding {
+                    arg: "acc".into(),
+                    field: "acc".into(),
+                    dir: IoDir::Out,
+                    subgrid: Subgrid::point(1, 0),
+                    elems_per_pe: k,
+                    total_ports: 1,
+                    port_map: PortMap::default(),
+ty: Dtype::F32,
+                },
+            ],
+            colors_used: vec![color],
+            ..Default::default()
+        };
+        let mut sim = Simulator::new(cfg(2, 1), prog).unwrap();
+        let a: Vec<f32> = (0..k).map(|i| i as f32).collect();
+        let acc0: Vec<f32> = vec![100.0; k as usize];
+        sim.set_input("a", &a).unwrap();
+        sim.set_input("acc0", &acc0).unwrap();
+        let report = sim.run().unwrap();
+        let out = sim.get_output("acc").unwrap();
+        let expect: Vec<f32> = (0..k).map(|i| 100.0 + i as f32).collect();
+        assert_eq!(out, expect);
+        assert_eq!(report.metrics.flows, 1);
+        assert_eq!(report.metrics.wavelets, k as u64);
+        // Pipelined: runtime ~ K + overheads, far less than 2K.
+        assert!(report.cycles < 2 * k as u64 + 40, "cycles = {}", report.cycles);
+    }
+
+    /// Deadlock detection: receiver waits for data nobody sends.
+    #[test]
+    fn deadlock_detected() {
+        let class = PeClass {
+            name: "waiter".into(),
+            subgrids: vec![Subgrid::point(0, 0)],
+            fields: vec![FieldAlloc {
+                name: "a".into(),
+                addr: 0,
+                len: 4,
+                ty: Dtype::F32,
+                is_extern: false,
+            }],
+            mem_size: 16,
+            tasks: vec![TaskDef {
+                name: "recv".into(),
+                hw_id: 25,
+                kind: TaskKind::Local,
+                initially_active: false,
+                initially_blocked: false,
+                body: vec![MOp::Dsd(DsdOp {
+                    kind: DsdKind::Mov,
+                    dst: DsdRef::mem(0, SExpr::imm(4), Dtype::F32),
+                    src0: Some(DsdRef::FabIn { color: 0, len: SExpr::imm(4), ty: Dtype::F32 }),
+                    src1: None,
+                    scalar: None,
+                    is_async: true,
+                    on_complete: vec![],
+                })],
+            }],
+            entry_tasks: vec![25],
+        };
+        let prog = MachineProgram {
+            name: "dead".into(),
+            classes: vec![class],
+            ..Default::default()
+        };
+        let mut sim = Simulator::new(cfg(1, 1), prog).unwrap();
+        let err = sim.run().unwrap_err();
+        assert!(matches!(err, SimError::Deadlock(_)), "{err}");
+    }
+
+    /// Local task chaining via activate.
+    #[test]
+    fn activation_chain() {
+        let class = PeClass {
+            name: "chain".into(),
+            subgrids: vec![Subgrid::point(0, 0)],
+            fields: vec![FieldAlloc {
+                name: "v".into(),
+                addr: 0,
+                len: 1,
+                ty: Dtype::F32,
+                is_extern: true,
+            }],
+            mem_size: 4,
+            tasks: vec![
+                TaskDef {
+                    name: "first".into(),
+                    hw_id: 24,
+                    kind: TaskKind::Local,
+                    initially_active: false,
+                    initially_blocked: false,
+                    body: vec![
+                        MOp::Store {
+                            addr: SExpr::imm(0),
+                            ty: Dtype::F32,
+                            val: SExpr::ImmF(1.0),
+                        },
+                        MOp::Control(TaskAction::activate(25)),
+                    ],
+                },
+                TaskDef {
+                    name: "second".into(),
+                    hw_id: 25,
+                    kind: TaskKind::Local,
+                    initially_active: false,
+                    initially_blocked: false,
+                    body: vec![MOp::Store {
+                        addr: SExpr::imm(0),
+                        ty: Dtype::F32,
+                        val: SExpr::bin(
+                            SBinOp::Add,
+                            SExpr::LoadMem { addr: Box::new(SExpr::imm(0)), ty: Dtype::F32 },
+                            SExpr::ImmF(41.0),
+                        ),
+                    }],
+                },
+            ],
+            entry_tasks: vec![24],
+        };
+        let prog = MachineProgram {
+            name: "chain".into(),
+            classes: vec![class],
+            io: vec![IoBinding {
+                arg: "v".into(),
+                field: "v".into(),
+                dir: IoDir::Out,
+                subgrid: Subgrid::point(0, 0),
+                elems_per_pe: 1,
+                total_ports: 1,
+                port_map: PortMap::default(),
+ty: Dtype::F32,
+            }],
+            ..Default::default()
+        };
+        let mut sim = Simulator::new(cfg(1, 1), prog).unwrap();
+        sim.run().unwrap();
+        assert_eq!(sim.get_output("v").unwrap(), vec![42.0]);
+    }
+
+    /// Data task fires once per wavelet.
+    #[test]
+    fn data_task_per_wavelet() {
+        let n = 5u32;
+        let color = 2u8;
+        let sender = PeClass {
+            name: "s".into(),
+            subgrids: vec![Subgrid::point(0, 0)],
+            fields: vec![FieldAlloc {
+                name: "a".into(),
+                addr: 0,
+                len: n,
+                ty: Dtype::F32,
+                is_extern: true,
+            }],
+            mem_size: 4 * n,
+            tasks: vec![TaskDef {
+                name: "send".into(),
+                hw_id: 25,
+                kind: TaskKind::Local,
+                initially_active: false,
+                initially_blocked: false,
+                body: vec![MOp::Dsd(DsdOp {
+                    kind: DsdKind::Mov,
+                    dst: DsdRef::FabOut { color, len: SExpr::imm(n as i64), ty: Dtype::F32 },
+                    src0: Some(DsdRef::mem(0, SExpr::imm(n as i64), Dtype::F32)),
+                    src1: None,
+                    scalar: None,
+                    is_async: true,
+                    on_complete: vec![],
+                })],
+            }],
+            entry_tasks: vec![25],
+        };
+        // Receiver data task: sum += wavelet (scalar accumulate at addr 0).
+        let recv = PeClass {
+            name: "r".into(),
+            subgrids: vec![Subgrid::point(1, 0)],
+            fields: vec![FieldAlloc {
+                name: "sum".into(),
+                addr: 0,
+                len: 1,
+                ty: Dtype::F32,
+                is_extern: true,
+            }],
+            mem_size: 4,
+            tasks: vec![TaskDef {
+                name: "on_wavelet".into(),
+                hw_id: color,
+                kind: TaskKind::Data { color, wavelet_reg: 0 },
+                initially_active: true,
+                initially_blocked: false,
+                body: vec![MOp::Store {
+                    addr: SExpr::imm(0),
+                    ty: Dtype::F32,
+                    val: SExpr::bin(
+                        SBinOp::Add,
+                        SExpr::LoadMem { addr: Box::new(SExpr::imm(0)), ty: Dtype::F32 },
+                        SExpr::Reg(0),
+                    ),
+                }],
+            }],
+            entry_tasks: vec![],
+        };
+        let prog = MachineProgram {
+            name: "datatask".into(),
+            classes: vec![sender, recv],
+            routes: vec![
+                RouteRule {
+                    color,
+                    subgrid: Subgrid::point(0, 0),
+                    rx: DirSet::single(Direction::Ramp),
+                    tx: DirSet::single(Direction::East),
+                },
+                RouteRule {
+                    color,
+                    subgrid: Subgrid::point(1, 0),
+                    rx: DirSet::single(Direction::West),
+                    tx: DirSet::single(Direction::Ramp),
+                },
+            ],
+            io: vec![
+                IoBinding {
+                    arg: "a".into(),
+                    field: "a".into(),
+                    dir: IoDir::In,
+                    subgrid: Subgrid::point(0, 0),
+                    elems_per_pe: n,
+                    total_ports: 1,
+                    port_map: PortMap::default(),
+ty: Dtype::F32,
+                },
+                IoBinding {
+                    arg: "sum".into(),
+                    field: "sum".into(),
+                    dir: IoDir::Out,
+                    subgrid: Subgrid::point(1, 0),
+                    elems_per_pe: 1,
+                    total_ports: 1,
+                    port_map: PortMap::default(),
+ty: Dtype::F32,
+                },
+            ],
+            colors_used: vec![color],
+            ..Default::default()
+        };
+        let mut sim = Simulator::new(cfg(2, 1), prog).unwrap();
+        sim.set_input("a", &[1.0, 2.0, 3.0, 4.0, 5.0]).unwrap();
+        sim.run().unwrap();
+        assert_eq!(sim.get_output("sum").unwrap(), vec![15.0]);
+    }
+
+    #[test]
+    fn f16_roundtrip() {
+        for v in [0.0, 1.0, -2.5, 0.125, 100.0] {
+            let bits = f64_to_f16(v);
+            assert!((f16_to_f64(bits) - v).abs() < 1e-3, "{v}");
+        }
+    }
+}

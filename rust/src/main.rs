@@ -1,0 +1,247 @@
+//! `spada` — CLI for the SpaDA compiler, WSE-2 simulator, and the
+//! paper-reproduction experiment harness.
+//!
+//! Subcommands:
+//!   compile <kernel> [--bind K=64,N=8] [--emit DIR] [--no-fusion] ...
+//!   stencil <name>   [--show-ir]
+//!   run <kernel>     [--bind ...]   (compile + simulate with random input)
+//!   bench --exp <table2|fig4..fig9|verify|all> [--quick]
+//!   loc              (Table II shortcut)
+
+use anyhow::{anyhow, bail, Context, Result};
+use spada::frontend::{lower_stencil, parse_stencil, stencil_source};
+use spada::harness;
+use spada::kernels;
+use spada::machine::{MachineConfig, Simulator};
+use spada::passes::Options;
+use spada::sem::instantiate;
+use spada::spada::pretty;
+use spada::util::SplitMix64;
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+struct Args {
+    positional: Vec<String>,
+    flags: Vec<(String, Option<String>)>,
+}
+
+impl Args {
+    fn parse() -> Args {
+        let mut positional = vec![];
+        let mut flags = vec![];
+        let mut it = std::env::args().skip(1).peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                // --flag value | --flag=value | --flag
+                if let Some((k, v)) = name.split_once('=') {
+                    flags.push((k.to_string(), Some(v.to_string())));
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false)
+                    && matches!(name, "bind" | "emit" | "exp" | "grid")
+                {
+                    flags.push((name.to_string(), it.next()));
+                } else {
+                    flags.push((name.to_string(), None));
+                }
+            } else {
+                positional.push(a);
+            }
+        }
+        Args { positional, flags }
+    }
+
+    fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.iter().find(|(k, _)| k == name).and_then(|(_, v)| v.as_deref())
+    }
+
+    fn has(&self, name: &str) -> bool {
+        self.flags.iter().any(|(k, _)| k == name)
+    }
+}
+
+fn parse_binds(s: Option<&str>) -> Result<Vec<(String, i64)>> {
+    let mut out = vec![];
+    if let Some(s) = s {
+        for part in s.split(',') {
+            let (k, v) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow!("bad binding {part} (want NAME=INT)"))?;
+            out.push((k.trim().to_string(), v.trim().parse().context(part.to_string())?));
+        }
+    }
+    Ok(out)
+}
+
+fn options(args: &Args) -> Options {
+    Options {
+        fusion: !args.has("no-fusion"),
+        recycling: !args.has("no-recycling"),
+        copy_elim: !args.has("no-copy-elim"),
+    }
+}
+
+fn grid_of(args: &Args, binds: &[(String, i64)]) -> (i64, i64) {
+    if let Some(g) = args.flag("grid") {
+        if let Some((w, h)) = g.split_once('x') {
+            return (w.parse().unwrap_or(16), h.parse().unwrap_or(16));
+        }
+    }
+    let get = |n: &str| binds.iter().find(|(k, _)| k == n).map(|(_, v)| *v);
+    let w = get("NX").or(get("N")).unwrap_or(16);
+    let h = get("NY").unwrap_or(1);
+    (w, h)
+}
+
+fn real_main() -> Result<()> {
+    let args = Args::parse();
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "compile" => {
+            let name = args.positional.get(1).ok_or_else(|| anyhow!("compile <kernel>"))?;
+            let binds = parse_binds(args.flag("bind"))?;
+            let (w, h) = grid_of(&args, &binds);
+            let cfg = MachineConfig::with_grid(w, h);
+            let opts = options(&args);
+            let kernel = kernels::parse(name)?;
+            let prog =
+                instantiate(&kernel, &binds.iter().map(|(k, v)| (k.clone(), *v)).collect())?;
+            let compiled = spada::csl::compile(&prog, &cfg, &opts).map_err(anyhow::Error::from)?;
+            println!(
+                "kernel {name}: {} classes, {} colors, {} logical tasks (max {} hw IDs), \
+                 {} B max PE memory, {} CSL LoC",
+                compiled.stats.classes,
+                compiled.stats.colors_used,
+                compiled.stats.logical_tasks,
+                compiled.stats.hw_task_ids,
+                compiled.stats.mem_bytes_max,
+                compiled.csl_loc(),
+            );
+            if let Some(dir) = args.flag("emit") {
+                std::fs::create_dir_all(dir)?;
+                for (fname, text) in &compiled.csl_files {
+                    let p = std::path::Path::new(dir).join(fname);
+                    std::fs::write(&p, text)?;
+                    println!("wrote {}", p.display());
+                }
+            }
+            Ok(())
+        }
+        "stencil" => {
+            let name = args.positional.get(1).ok_or_else(|| anyhow!("stencil <name>"))?;
+            let src = stencil_source(name).ok_or_else(|| anyhow!("unknown stencil {name}"))?;
+            let ir = parse_stencil(src).map_err(anyhow::Error::msg)?;
+            if args.has("show-ir") {
+                println!("{ir}");
+                return Ok(());
+            }
+            let sk = lower_stencil(&ir).map_err(anyhow::Error::msg)?;
+            println!("{}", pretty::print_kernel(&sk.kernel));
+            Ok(())
+        }
+        "compile-stencil" => {
+            // Consume a .gt file (e.g. emitted by python/gt4py_like) and
+            // run the full pipeline: Stencil IR → SpaDA → CSL.
+            let path =
+                args.positional.get(1).ok_or_else(|| anyhow!("compile-stencil <file.gt>"))?;
+            let src = std::fs::read_to_string(path).context(path.clone())?;
+            let ir = parse_stencil(&src).map_err(anyhow::Error::msg)?;
+            println!("{ir}");
+            let sk = lower_stencil(&ir).map_err(anyhow::Error::msg)?;
+            let binds = parse_binds(args.flag("bind"))?;
+            let mut b: spada::sem::Bindings =
+                binds.iter().map(|(k, v)| (k.clone(), *v)).collect();
+            for (k, v) in [("K", 8i64), ("NX", 16), ("NY", 16)] {
+                b.entry(k.to_string()).or_insert(v);
+            }
+            let (w, h) = (b["NX"], b["NY"]);
+            let prog = instantiate(&sk.kernel, &b)?;
+            let cfg = MachineConfig::with_grid(w, h);
+            let compiled = spada::csl::compile(&prog, &cfg, &options(&args))?;
+            println!(
+                "stencil {} → SpaDA {} LoC → CSL {} LoC ({} classes, {} colors)",
+                ir.name,
+                pretty::count_loc(&sk.kernel),
+                compiled.csl_loc(),
+                compiled.stats.classes,
+                compiled.stats.colors_used,
+            );
+            if let Some(dir) = args.flag("emit") {
+                std::fs::create_dir_all(dir)?;
+                for (fname, text) in &compiled.csl_files {
+                    std::fs::write(std::path::Path::new(dir).join(fname), text)?;
+                }
+                println!("emitted CSL to {dir}");
+            }
+            Ok(())
+        }
+        "run" => {
+            let name = args.positional.get(1).ok_or_else(|| anyhow!("run <kernel>"))?;
+            let binds = parse_binds(args.flag("bind"))?;
+            let bind_refs: Vec<(&str, i64)> =
+                binds.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+            let (w, h) = grid_of(&args, &binds);
+            let cfg = MachineConfig::with_grid(w, h);
+            let (prog, _, _) = kernels::compile(name, &bind_refs, &cfg, &options(&args))?;
+            let mut sim = Simulator::new(cfg.clone(), prog)?;
+            // Fill every input with deterministic noise.
+            let io: Vec<(String, usize)> = sim
+                .program()
+                .io
+                .iter()
+                .filter(|b| matches!(b.dir, spada::machine::IoDir::In))
+                .map(|b| (b.arg.clone(), (b.total_ports * b.elems_per_pe) as usize))
+                .collect();
+            let mut rng = SplitMix64::new(1);
+            for (arg, len) in io {
+                let data: Vec<f32> = (0..len).map(|_| rng.next_f32()).collect();
+                let _ = sim.set_input(&arg, &data);
+            }
+            let report = sim.run()?;
+            println!(
+                "{name}: {} cycles ({:.2} us), {} flops, {} flows, {} wavelets, util {:.1}%",
+                report.cycles,
+                report.runtime_us(&cfg),
+                report.metrics.flops,
+                report.metrics.flows,
+                report.metrics.wavelets,
+                100.0 * report.utilization(),
+            );
+            Ok(())
+        }
+        "bench" => {
+            let exp = args.flag("exp").unwrap_or("all").to_string();
+            harness::run(&exp, args.has("quick"))
+        }
+        "loc" => harness::run("table2", false),
+        "help" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            print_help();
+            bail!("unknown command {other}");
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "spada — SpaDA compiler + WSE-2 simulator (paper reproduction)\n\
+         \n\
+         USAGE:\n\
+         \x20 spada compile <kernel> [--bind K=64,N=8] [--grid WxH] [--emit DIR]\n\
+         \x20 spada stencil <laplacian|vertical|uvbke> [--show-ir]\n\
+         \x20 spada compile-stencil <file.gt> [--bind K=8,NX=16,NY=16] [--emit DIR]\n\
+         \x20 spada run <kernel> [--bind ...] [--grid WxH]\n\
+         \x20 spada bench [--exp table2|fig4|fig5|fig6|fig7|fig8|fig9|verify|all] [--quick]\n\
+         \x20 spada loc\n\
+         \n\
+         Ablation flags: --no-fusion --no-recycling --no-copy-elim\n\
+         Kernels: {}",
+        kernels::sources().iter().map(|(n, _)| *n).collect::<Vec<_>>().join(", ")
+    );
+}

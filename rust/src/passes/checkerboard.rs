@@ -1,0 +1,426 @@
+//! Checkerboard decomposition (paper §V-B, Fig. 2).
+//!
+//! A single-hop stream whose senders and receivers overlap (e.g. the
+//! pipeline pattern of Listing 1, where every PE both sends west and
+//! receives from the east) cannot be realized with one color: the same
+//! router would need `rx = {RAMP, EAST}, tx = {WEST, RAMP}`, which is
+//! ambiguous for a circuit-switched fabric. The checkerboard pass splits
+//! each conflicting compute block by PE-coordinate parity along the
+//! stream's active dimension and duplicates the stream into `_even` /
+//! `_odd` variants: even-parity senders use one color, odd-parity senders
+//! the other, so every router configuration is unambiguous *by
+//! construction*.
+
+use super::PassError;
+use crate::ir::core as ir;
+use crate::util::Subgrid;
+use std::collections::{HashMap, HashSet};
+
+/// Result of the pass.
+pub struct CheckerboardResult {
+    pub program: ir::Program,
+    pub streams_split: usize,
+    pub blocks_split: usize,
+}
+
+/// Which streams a block touches, by role.
+#[derive(Default, Debug)]
+struct Usage {
+    sends: HashSet<usize>,
+    recvs: HashSet<usize>,
+}
+
+fn collect_usage(stmts: &[ir::Stmt], u: &mut Usage) {
+    for s in stmts {
+        match s {
+            ir::Stmt::Send { stream: ir::StreamRef::Local(id), .. } => {
+                u.sends.insert(*id);
+            }
+            ir::Stmt::Recv { stream: ir::StreamRef::Local(id), .. } => {
+                u.recvs.insert(*id);
+            }
+            ir::Stmt::ForeachRecv { stream, body, .. } => {
+                if let ir::StreamRef::Local(id) = stream {
+                    u.recvs.insert(*id);
+                }
+                collect_usage(body, u);
+            }
+            ir::Stmt::Map { body, .. }
+            | ir::Stmt::For { body, .. }
+            | ir::Stmt::Async { body, .. } => collect_usage(body, u),
+            ir::Stmt::If { then_body, else_body, .. } => {
+                collect_usage(then_body, u);
+                collect_usage(else_body, u);
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Shift a subgrid by (dx, dy).
+fn shift(g: &Subgrid, dx: i64, dy: i64) -> Subgrid {
+    let mut out = g.clone();
+    out.dims[0].start += dx;
+    out.dims[0].stop += dx;
+    out.dims[1].start += dy;
+    out.dims[1].stop += dy;
+    out
+}
+
+/// The active dimension of a stream (0 = x, 1 = y); errors if both are
+/// active (the paper's checkerboard restricts to single-hop streams).
+fn active_dim(s: &ir::Stream) -> Result<Option<usize>, PassError> {
+    match (s.dx.is_active(), s.dy.is_active()) {
+        (false, false) => Ok(None),
+        (true, false) => Ok(Some(0)),
+        (false, true) => Ok(Some(1)),
+        (true, true) => Err(PassError(format!(
+            "stream {}: diagonal offsets need multi-hop routing, which the \
+             checkerboard pass does not support (allocate channels manually)",
+            s.name
+        ))),
+    }
+}
+
+/// Run checkerboard decomposition on an instantiated program.
+pub fn checkerboard(prog: &ir::Program) -> Result<CheckerboardResult, PassError> {
+    let mut out = prog.clone();
+    let mut streams_split = 0;
+    let mut blocks_split = 0;
+    // Fresh stream ids start after the current maximum.
+    let mut next_id = prog
+        .phases
+        .iter()
+        .flat_map(|p| p.streams.iter())
+        .map(|s| s.id + 1)
+        .max()
+        .unwrap_or(0);
+
+    for phase in &mut out.phases {
+        // 1. Per-block usage.
+        let usages: Vec<Usage> = phase
+            .computes
+            .iter()
+            .map(|b| {
+                let mut u = Usage::default();
+                collect_usage(&b.stmts, &mut u);
+                u
+            })
+            .collect();
+
+        // 2. Decide which streams conflict (sender set ∩ receiver set ≠ ∅).
+        let mut split_streams: HashMap<usize, usize> = HashMap::new(); // id → dim
+        for s in &phase.streams {
+            let Some(dim) = active_dim(s)? else { continue };
+            let (dx, dy) = match (s.dx.scalar(), s.dy.scalar()) {
+                (Some(dx), Some(dy)) => (dx, dy),
+                _ => continue, // multicast: single sender region, no pipeline conflict
+            };
+            let senders: Vec<&Subgrid> = phase
+                .computes
+                .iter()
+                .zip(&usages)
+                .filter(|(_, u)| u.sends.contains(&s.id))
+                .map(|(b, _)| &b.subgrid)
+                .collect();
+            let receivers: Vec<Subgrid> = phase
+                .computes
+                .iter()
+                .zip(&usages)
+                .filter(|(_, u)| u.recvs.contains(&s.id))
+                .map(|(b, _)| b.subgrid.clone())
+                .collect();
+            // A sender's router and a receiver's router coincide when a
+            // PE both sends and receives on s — equivalently when the
+            // sender set intersects the receiver set.
+            let mut conflict = false;
+            for a in &senders {
+                for b in &receivers {
+                    if !a.intersect(b).is_empty() {
+                        conflict = true;
+                    }
+                    // Also conflicting: two distinct senders routing
+                    // through each other (sender at p, sender at p+off).
+                    if !a.intersect(&shift(b, dx, dy)).is_empty() && !(dx == 0 && dy == 0) {
+                        // receiver routers sit at sender+off; fine.
+                    }
+                }
+            }
+            if conflict {
+                split_streams.insert(s.id, dim);
+            }
+        }
+
+        if split_streams.is_empty() {
+            continue;
+        }
+
+        // 3. Create variants for each split stream.
+        //    variant_map[id] = (even_id, odd_id, dim, |off| parity flip)
+        let mut variant_map: HashMap<usize, (usize, usize, usize, bool)> = HashMap::new();
+        let mut new_streams = vec![];
+        for s in &phase.streams {
+            match split_streams.get(&s.id) {
+                None => new_streams.push(s.clone()),
+                Some(&dim) => {
+                    let off = if dim == 0 {
+                        s.dx.scalar().unwrap_or(0)
+                    } else {
+                        s.dy.scalar().unwrap_or(0)
+                    };
+                    let flip = off.rem_euclid(2) == 1;
+                    let (ev, od) = s.subgrid.split_parity(dim);
+                    let even_id = next_id;
+                    let odd_id = next_id + 1;
+                    next_id += 2;
+                    variant_map.insert(s.id, (even_id, odd_id, dim, flip));
+                    if !ev.is_empty() {
+                        new_streams.push(ir::Stream {
+                            id: even_id,
+                            name: format!("{}_even", s.name),
+                            elem_ty: s.elem_ty,
+                            subgrid: ev,
+                            dx: s.dx,
+                            dy: s.dy,
+                        });
+                    }
+                    if !od.is_empty() {
+                        new_streams.push(ir::Stream {
+                            id: odd_id,
+                            name: format!("{}_odd", s.name),
+                            elem_ty: s.elem_ty,
+                            subgrid: od,
+                            dx: s.dx,
+                            dy: s.dy,
+                        });
+                    }
+                    streams_split += 1;
+                }
+            }
+        }
+        phase.streams = new_streams;
+
+        // 4. Split blocks that use split streams, and rewrite refs.
+        let mut new_blocks = vec![];
+        for (block, usage) in phase.computes.iter().zip(&usages) {
+            // Dimensions along which this block must be parity-split.
+            let mut dims: Vec<usize> = usage
+                .sends
+                .iter()
+                .chain(&usage.recvs)
+                .filter_map(|id| split_streams.get(id).copied())
+                .collect();
+            dims.sort_unstable();
+            dims.dedup();
+            if dims.is_empty() {
+                new_blocks.push(block.clone());
+                continue;
+            }
+            let mut parts: Vec<Subgrid> = vec![block.subgrid.clone()];
+            for &d in &dims {
+                parts = parts
+                    .iter()
+                    .flat_map(|g| {
+                        let (e, o) = g.split_parity(d);
+                        [e, o]
+                    })
+                    .filter(|g| !g.is_empty())
+                    .collect();
+            }
+            if parts.len() > 1 {
+                blocks_split += 1;
+            }
+            for part in parts {
+                // Parities of this part along each split dim.
+                let parity = |d: usize| part.dims[d].start.rem_euclid(2); // uniform by construction
+                let mut nb = block.clone();
+                nb.subgrid = part.clone();
+                rewrite_refs(&mut nb.stmts, &variant_map, &parity);
+                new_blocks.push(nb);
+            }
+        }
+        phase.computes = new_blocks;
+    }
+
+    Ok(CheckerboardResult { program: out, streams_split, blocks_split })
+}
+
+/// Rewrite stream references to parity variants inside a split block.
+fn rewrite_refs(
+    stmts: &mut [ir::Stmt],
+    variants: &HashMap<usize, (usize, usize, usize, bool)>,
+    parity: &dyn Fn(usize) -> i64,
+) {
+    let pick = |id: usize, is_send: bool| -> usize {
+        match variants.get(&id) {
+            None => id,
+            Some(&(even_id, odd_id, dim, flip)) => {
+                let p = parity(dim);
+                // Senders use their own parity's variant; receivers use
+                // the *sender's* parity: own parity flipped when |off| is
+                // odd.
+                let effective = if is_send {
+                    p
+                } else if flip {
+                    1 - p
+                } else {
+                    p
+                };
+                if effective == 0 {
+                    even_id
+                } else {
+                    odd_id
+                }
+            }
+        }
+    };
+    for s in stmts {
+        match s {
+            ir::Stmt::Send { stream, .. } => {
+                if let ir::StreamRef::Local(id) = stream {
+                    *id = pick(*id, true);
+                }
+            }
+            ir::Stmt::Recv { stream, .. } => {
+                if let ir::StreamRef::Local(id) = stream {
+                    *id = pick(*id, false);
+                }
+            }
+            ir::Stmt::ForeachRecv { stream, body, .. } => {
+                if let ir::StreamRef::Local(id) = stream {
+                    *id = pick(*id, false);
+                }
+                rewrite_refs(body, variants, parity);
+            }
+            ir::Stmt::Map { body, .. }
+            | ir::Stmt::For { body, .. }
+            | ir::Stmt::Async { body, .. } => rewrite_refs(body, variants, parity),
+            ir::Stmt::If { then_body, else_body, .. } => {
+                rewrite_refs(then_body, variants, parity);
+                rewrite_refs(else_body, variants, parity);
+            }
+            _ => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sem::{instantiate, Bindings};
+    use crate::spada::parse_kernel;
+
+    fn bind(pairs: &[(&str, i64)]) -> Bindings {
+        pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+    }
+
+    /// A pipeline where every PE sends west and receives from the east on
+    /// the same stream — the canonical checkerboard trigger.
+    #[test]
+    fn pipeline_stream_splits() {
+        let src = "kernel @p<N, K>() {
+            place i16 i, i16 j in [0:N, 0] { f32[K] a }
+            dataflow i32 i, i32 j in [0:N, 0] {
+                stream<f32> s = relative_stream(-1, 0)
+            }
+            compute i32 i, i32 j in [1:N, 0] {
+                await send(a, s)
+            }
+            compute i32 i, i32 j in [0:N-1, 0] {
+                await receive(a, s)
+            }
+        }";
+        let k = parse_kernel(src).unwrap();
+        let prog = instantiate(&k, &bind(&[("N", 8), ("K", 4)])).unwrap();
+        let res = checkerboard(&prog).unwrap();
+        assert_eq!(res.streams_split, 1);
+        let phase = &res.program.phases[0];
+        assert_eq!(phase.streams.len(), 2);
+        assert!(phase.streams.iter().any(|s| s.name == "s_even"));
+        assert!(phase.streams.iter().any(|s| s.name == "s_odd"));
+        // Sender blocks split into odd/even parts.
+        assert!(phase.computes.len() >= 4);
+        // Every sender block's variant matches its parity.
+        for b in &phase.computes {
+            let mut u = Usage::default();
+            collect_usage(&b.stmts, &mut u);
+            for id in &u.sends {
+                let s = phase.streams.iter().find(|s| s.id == *id).unwrap();
+                let p = b.subgrid.dims[0].start.rem_euclid(2);
+                if p == 0 {
+                    assert!(s.name.ends_with("_even"), "{}", s.name);
+                } else {
+                    assert!(s.name.ends_with("_odd"), "{}", s.name);
+                }
+            }
+            // Receivers reference the opposite-parity variant (off = -1).
+            for id in &u.recvs {
+                let s = phase.streams.iter().find(|s| s.id == *id).unwrap();
+                let p = b.subgrid.dims[0].start.rem_euclid(2);
+                if p == 0 {
+                    assert!(s.name.ends_with("_odd"), "{}", s.name);
+                } else {
+                    assert!(s.name.ends_with("_even"), "{}", s.name);
+                }
+            }
+        }
+    }
+
+    /// Disjoint sender/receiver sets (tree-reduce level): no split.
+    #[test]
+    fn disjoint_no_split() {
+        let src = "kernel @t<N, K>() {
+            place i16 i, i16 j in [0:N, 0] { f32[K] a }
+            dataflow i32 i, i32 j in [0:N, 0] {
+                stream<f32> s = relative_stream(-1, 0)
+            }
+            compute i32 i, i32 j in [1:N:2, 0] { await send(a, s) }
+            compute i32 i, i32 j in [0:N:2, 0] { await receive(a, s) }
+        }";
+        let k = parse_kernel(src).unwrap();
+        let prog = instantiate(&k, &bind(&[("N", 8), ("K", 4)])).unwrap();
+        let res = checkerboard(&prog).unwrap();
+        assert_eq!(res.streams_split, 0);
+        assert_eq!(res.program.phases[0].streams.len(), 1);
+    }
+
+    /// Diagonal streams are rejected (paper's single-hop restriction).
+    #[test]
+    fn diagonal_rejected() {
+        let src = "kernel @d<N>() {
+            place i16 i, i16 j in [0:N, 0:N] { f32 v }
+            dataflow i32 i, i32 j in [0:N, 0:N] {
+                stream<f32> s = relative_stream(1, 1)
+            }
+            compute i32 i, i32 j in [0:N, 0:N] {
+                await send(v, s)
+                await receive(v, s)
+            }
+        }";
+        let k = parse_kernel(src).unwrap();
+        let prog = instantiate(&k, &bind(&[("N", 4)])).unwrap();
+        assert!(checkerboard(&prog).is_err());
+    }
+
+    /// Vertical (y-offset) pipeline splits along dim 1.
+    #[test]
+    fn vertical_split() {
+        let src = "kernel @v<N, K>() {
+            place i16 i, i16 j in [0, 0:N] { f32[K] a }
+            dataflow i32 i, i32 j in [0, 0:N] {
+                stream<f32> s = relative_stream(0, 1)
+            }
+            compute i32 i, i32 j in [0, 0:N-1] { await send(a, s) }
+            compute i32 i, i32 j in [0, 1:N] { await receive(a, s) }
+        }";
+        let k = parse_kernel(src).unwrap();
+        let prog = instantiate(&k, &bind(&[("N", 6), ("K", 2)])).unwrap();
+        let res = checkerboard(&prog).unwrap();
+        assert_eq!(res.streams_split, 1);
+        for s in &res.program.phases[0].streams {
+            // Variants partition by y parity.
+            let ys: Vec<i64> = s.subgrid.dims[1].iter().collect();
+            assert!(ys.iter().all(|y| y % 2 == ys[0] % 2));
+        }
+    }
+}

@@ -1,0 +1,244 @@
+//! PE equivalence classes (canonicalization, paper §V-A).
+//!
+//! Consolidates rectangles into *PE equivalence classes* mapped to
+//! non-overlapping strided regions, ensuring each PE corresponds to a
+//! single CSL code file without generating one file per PE. Two PEs are
+//! equivalent iff the same compute blocks (across all phases) and the
+//! same fields cover them — their generated code is then identical as a
+//! function of the PE coordinates.
+
+use crate::ir::core as ir;
+use crate::util::{Range1, Subgrid};
+use std::collections::{BTreeMap, HashSet};
+
+/// One equivalence class: the blocks/fields covering it and the strided
+/// regions it occupies.
+#[derive(Clone, Debug)]
+pub struct ClassRegion {
+    pub name: String,
+    /// (phase index, compute-block index) pairs covering this class.
+    pub blocks: Vec<(usize, usize)>,
+    /// Field indices (into `Program::fields`) allocated on this class.
+    pub fields: Vec<usize>,
+    /// Disjoint strided rectangles covering exactly this class's PEs.
+    pub subgrids: Vec<Subgrid>,
+}
+
+/// Compute the PE equivalence classes of a program.
+pub fn equivalence_classes(prog: &ir::Program) -> Vec<ClassRegion> {
+    // Enumerate covering entities.
+    let mut block_list: Vec<(usize, usize, &Subgrid)> = vec![];
+    for (pi, phase) in prog.phases.iter().enumerate() {
+        for (bi, b) in phase.computes.iter().enumerate() {
+            block_list.push((pi, bi, &b.subgrid));
+        }
+    }
+    let field_list: Vec<(usize, &Subgrid)> =
+        prog.fields.iter().enumerate().map(|(fi, f)| (fi, &f.subgrid)).collect();
+
+    // Signature per PE over the extent.
+    let (w, h) = prog.extent();
+    let mut groups: BTreeMap<(Vec<(usize, usize)>, Vec<usize>), Vec<(i64, i64)>> = BTreeMap::new();
+    for x in 0..w {
+        for y in 0..h {
+            let blocks: Vec<(usize, usize)> = block_list
+                .iter()
+                .filter(|(_, _, g)| g.contains(x, y))
+                .map(|(pi, bi, _)| (*pi, *bi))
+                .collect();
+            let fields: Vec<usize> = field_list
+                .iter()
+                .filter(|(_, g)| g.contains(x, y))
+                .map(|(fi, _)| *fi)
+                .collect();
+            if blocks.is_empty() && fields.is_empty() {
+                continue;
+            }
+            groups.entry((blocks, fields)).or_default().push((x, y));
+        }
+    }
+
+    let mut out = vec![];
+    for (idx, ((blocks, fields), pes)) in groups.into_iter().enumerate() {
+        let subgrids = recover_rects(&pes);
+        debug_assert_eq!(
+            subgrids.iter().map(|g| g.len()).sum::<i64>(),
+            pes.len() as i64,
+            "rect recovery must cover exactly the class"
+        );
+        out.push(ClassRegion { name: format!("pe_class_{idx}"), blocks, fields, subgrids });
+    }
+    out
+}
+
+/// Reassemble a set of PE coordinates into disjoint strided rectangles.
+///
+/// Per-row greedy arithmetic-run decomposition, then rows with identical
+/// run patterns are merged across strided y-progressions.
+pub fn recover_rects(pes: &[(i64, i64)]) -> Vec<Subgrid> {
+    // Group x coordinates by row.
+    let mut rows: BTreeMap<i64, Vec<i64>> = BTreeMap::new();
+    for (x, y) in pes {
+        rows.entry(*y).or_default().push(*x);
+    }
+    // Decompose each row into maximal arithmetic runs.
+    let mut run_rows: BTreeMap<Range1, Vec<i64>> = BTreeMap::new(); // run → list of y
+    for (y, xs) in &mut rows {
+        xs.sort_unstable();
+        for run in arith_runs(xs) {
+            run_rows.entry(run).or_default().push(*y);
+        }
+    }
+    // Merge identical runs over strided y-progressions.
+    let mut out = vec![];
+    for (run, ys) in &run_rows {
+        for yrun in arith_runs(ys) {
+            out.push(Subgrid::new(*run, yrun));
+        }
+    }
+    out
+}
+
+/// Decompose a sorted slice into maximal arithmetic runs (greedy).
+fn arith_runs(v: &[i64]) -> Vec<Range1> {
+    let mut out = vec![];
+    let mut i = 0;
+    while i < v.len() {
+        if i + 1 == v.len() {
+            out.push(Range1::point(v[i]));
+            break;
+        }
+        let step = v[i + 1] - v[i];
+        let mut j = i + 1;
+        while j + 1 < v.len() && v[j + 1] - v[j] == step {
+            j += 1;
+        }
+        if j == i + 1 && step != 1 {
+            // A two-element run with a large step is often better split so
+            // the next element can start its own denser run; but two
+            // points always form a valid run, keep it.
+        }
+        out.push(Range1::new(v[i], v[j] + 1, step.max(1)));
+        i = j + 1;
+    }
+    out
+}
+
+/// BTreeMap key support for Range1.
+impl Ord for Range1 {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.start, self.stop, self.step).cmp(&(other.start, other.stop, other.step))
+    }
+}
+
+impl PartialOrd for Range1 {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Sanity check: classes must be disjoint and cover all used PEs.
+pub fn check_partition(classes: &[ClassRegion]) -> Result<(), String> {
+    let mut seen: HashSet<(i64, i64)> = HashSet::new();
+    for c in classes {
+        for g in &c.subgrids {
+            for pe in g.iter() {
+                if !seen.insert(pe) {
+                    return Err(format!("PE {pe:?} in two classes"));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sem::{instantiate, Bindings};
+    use crate::spada::parse_kernel;
+
+    fn bind(pairs: &[(&str, i64)]) -> Bindings {
+        pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+    }
+
+    #[test]
+    fn arith_runs_mixed() {
+        let runs = arith_runs(&[0, 1, 2, 3, 10, 12, 14, 20]);
+        assert_eq!(runs[0], Range1::new(0, 4, 1));
+        let all: Vec<i64> = runs.iter().flat_map(|r| r.iter().collect::<Vec<_>>()).collect();
+        assert_eq!(all, vec![0, 1, 2, 3, 10, 12, 14, 20]);
+    }
+
+    #[test]
+    fn recover_dense_rect() {
+        let pes: Vec<(i64, i64)> =
+            (0..4).flat_map(|x| (0..3).map(move |y| (x, y))).collect();
+        let rects = recover_rects(&pes);
+        assert_eq!(rects.len(), 1);
+        assert_eq!(rects[0], Subgrid::rect(4, 3));
+    }
+
+    #[test]
+    fn recover_parity_rows() {
+        let pes: Vec<(i64, i64)> = (0..8).step_by(2).map(|x| (x, 0)).collect();
+        let rects = recover_rects(&pes);
+        assert_eq!(rects.len(), 1);
+        assert_eq!(rects[0].dims[0], Range1::new(0, 7, 2));
+    }
+
+    #[test]
+    fn chain_reduce_classes() {
+        let src = r#"
+kernel @chain<K, N>() {
+  place i16 i, i16 j in [0:N, 0] { f32[K] a }
+  phase {
+    dataflow i32 i, i32 j in [0:N, 0] {
+      stream<f32> red = relative_stream(-1, 0)
+      stream<f32> blue = relative_stream(-1, 0)
+    }
+    compute i32 i, i32 j in [N-1, 0] { await send(a, blue) }
+    compute i32 i, i32 j in [1:N-1:2, 0] {
+      await foreach i32 k, f32 x in [0:K], receive(red) { a[k] = a[k] + x await send(a[k], blue) }
+    }
+    compute i32 i, i32 j in [2:N-1:2, 0] {
+      await foreach i32 k, f32 x in [0:K], receive(blue) { a[k] = a[k] + x await send(a[k], red) }
+    }
+    compute i32 i, i32 j in [0, 0] {
+      await foreach i32 k, f32 x in [0:K], receive(blue) { a[k] = a[k] + x }
+    }
+  }
+}
+"#;
+        let k = parse_kernel(src).unwrap();
+        let prog = instantiate(&k, &bind(&[("K", 8), ("N", 8)])).unwrap();
+        let classes = equivalence_classes(&prog);
+        // 4 distinct roles: east corner, odd, even, root.
+        assert_eq!(classes.len(), 4);
+        check_partition(&classes).unwrap();
+        let total: i64 = classes.iter().flat_map(|c| c.subgrids.iter()).map(|g| g.len()).sum();
+        assert_eq!(total, 8);
+    }
+
+    #[test]
+    fn stencil_interior_boundary_classes() {
+        // A 2-D region where interior PEs run one block and the full grid
+        // another: expect interior/border split into strided regions.
+        let src = "kernel @st<N>() {
+            place i16 i, i16 j in [0:N, 0:N] { f32 v }
+            compute i32 i, i32 j in [0:N, 0:N] { v = 0.0 }
+            compute i32 i, i32 j in [1:N-1, 1:N-1] { v = 1.0 }
+        }";
+        let k = parse_kernel(src).unwrap();
+        let prog = instantiate(&k, &bind(&[("N", 6)])).unwrap();
+        let classes = equivalence_classes(&prog);
+        assert_eq!(classes.len(), 2);
+        check_partition(&classes).unwrap();
+        let interior = classes
+            .iter()
+            .find(|c| c.blocks.len() == 2)
+            .expect("interior class");
+        let n: i64 = interior.subgrids.iter().map(|g| g.len()).sum();
+        assert_eq!(n, 16); // 4x4 interior
+    }
+}

@@ -1,0 +1,411 @@
+//! Global color allocation and route-rule generation (paper §V-B,
+//! "Layout and Resource Allocation").
+//!
+//! After checkerboard decomposition every stream (variant) admits an
+//! unambiguous per-router configuration. This pass computes each
+//! stream's *router footprint* (the set of PEs whose router needs a
+//! configuration for it), builds a conflict graph (footprints that share
+//! a router cannot share a color — one router has exactly one route per
+//! color), and greedily colors it onto the 24 routable hardware channels.
+//! Streams in different phases still conflict: phases are only locally
+//! sequential, so two phases may be in flight on neighbouring PEs
+//! simultaneously.
+
+use super::PassError;
+use crate::ir::core as ir;
+use crate::machine::{DirSet, Direction, MachineConfig, RouteRule};
+use crate::util::Subgrid;
+use std::collections::{HashMap, HashSet};
+
+/// Allocation result.
+#[derive(Debug, Default)]
+pub struct ColorAllocation {
+    /// stream id → hardware color.
+    pub stream_color: HashMap<usize, u8>,
+    pub routes: Vec<RouteRule>,
+    pub colors_used: Vec<u8>,
+}
+
+/// Uncolored route entry for one stream.
+#[derive(Debug, Clone)]
+struct ProtoRule {
+    subgrid: Subgrid,
+    rx: DirSet,
+    tx: DirSet,
+}
+
+fn shift(g: &Subgrid, dx: i64, dy: i64) -> Subgrid {
+    let mut out = g.clone();
+    out.dims[0].start += dx;
+    out.dims[0].stop += dx;
+    out.dims[1].start += dy;
+    out.dims[1].stop += dy;
+    out
+}
+
+/// Collect the union of sender subgrids for stream `id` in `phase`.
+fn sender_set(phase: &ir::Phase, id: usize) -> Vec<Subgrid> {
+    fn sends(stmts: &[ir::Stmt], id: usize) -> bool {
+        stmts.iter().any(|s| match s {
+            ir::Stmt::Send { stream: ir::StreamRef::Local(sid), .. } => *sid == id,
+            ir::Stmt::ForeachRecv { body, .. }
+            | ir::Stmt::Map { body, .. }
+            | ir::Stmt::For { body, .. }
+            | ir::Stmt::Async { body, .. } => sends(body, id),
+            ir::Stmt::If { then_body, else_body, .. } => {
+                sends(then_body, id) || sends(else_body, id)
+            }
+            _ => false,
+        })
+    }
+    phase
+        .computes
+        .iter()
+        .filter(|b| sends(&b.stmts, id))
+        .map(|b| b.subgrid.intersect(&stream_of(phase, id).subgrid))
+        .filter(|g| !g.is_empty())
+        .collect()
+}
+
+fn stream_of(phase: &ir::Phase, id: usize) -> &ir::Stream {
+    phase.streams.iter().find(|s| s.id == id).unwrap()
+}
+
+/// Build the proto route rules for one stream given its sender set.
+fn build_rules(s: &ir::Stream, senders: &[Subgrid]) -> Result<Vec<ProtoRule>, PassError> {
+    let mut rules: Vec<ProtoRule> = vec![];
+    let mut push = |subgrid: Subgrid, rx: DirSet, tx: DirSet| {
+        if subgrid.is_empty() {
+            return;
+        }
+        // Merge with an existing rule on the same subgrid (identical
+        // shape): union rx/tx. Distinct overlapping subgrids are a
+        // conflict caught later.
+        for r in rules.iter_mut() {
+            if r.subgrid == subgrid {
+                r.rx.0 |= rx.0;
+                r.tx.0 |= tx.0;
+                return;
+            }
+        }
+        rules.push(ProtoRule { subgrid, rx, tx });
+    };
+
+    let (dim, lo, hi) = match (s.dx, s.dy) {
+        (ir::Offset::Scalar(v), ir::Offset::Scalar(0)) if v != 0 => (0usize, v, v + 1),
+        (ir::Offset::Scalar(0), ir::Offset::Scalar(v)) if v != 0 => (1usize, v, v + 1),
+        (ir::Offset::Range(a, b), ir::Offset::Scalar(0)) => (0usize, a, b),
+        (ir::Offset::Scalar(0), ir::Offset::Range(a, b)) => (1usize, a, b),
+        (ir::Offset::Scalar(0), ir::Offset::Scalar(0)) => {
+            return Err(PassError(format!("stream {}: zero offset (self-loop)", s.name)))
+        }
+        _ => {
+            return Err(PassError(format!(
+                "stream {}: diagonal offsets are not routable single-hop",
+                s.name
+            )))
+        }
+    };
+    if lo < 0 && hi > 1 {
+        return Err(PassError(format!(
+            "stream {}: multicast range must not cross zero",
+            s.name
+        )));
+    }
+    let positive = lo > 0 || (lo == 0 && hi > 0);
+    let _sign: i64 = if positive { 1 } else { -1 };
+    let dir = match (dim, positive) {
+        (0, true) => Direction::East,
+        (0, false) => Direction::West,
+        (1, true) => Direction::South,
+        (1, false) => Direction::North,
+        _ => unreachable!(),
+    };
+    let unit = dir.delta();
+    // Hop distances (absolute) that receive the flow.
+    let (first_recv, last_recv) = if positive {
+        (lo.max(1), hi - 1)
+    } else {
+        ((-(hi - 1)).max(1), -lo)
+    };
+    if first_recv > last_recv {
+        return Err(PassError(format!("stream {}: empty offset range", s.name)));
+    }
+
+    for v in senders {
+        // Sender: ramp → dir.
+        push(v.clone(), DirSet::single(Direction::Ramp), DirSet::single(dir));
+        for k in 1..=last_recv {
+            let (dx, dy) = (unit.0 * k, unit.1 * k);
+            let g = shift(v, dx, dy);
+            let deliver = k >= first_recv;
+            let forward = k < last_recv;
+            let mut tx = DirSet::empty();
+            if deliver {
+                tx = tx.with(Direction::Ramp);
+            }
+            if forward {
+                tx = tx.with(dir);
+            }
+            push(g, DirSet::single(dir.opposite()), tx);
+        }
+    }
+    Ok(rules)
+}
+
+/// Allocate colors for all streams of a program.
+pub fn allocate_colors(
+    prog: &ir::Program,
+    cfg: &MachineConfig,
+) -> Result<ColorAllocation, PassError> {
+    // 1. Gather proto rules per stream.
+    let mut per_stream: Vec<(usize, String, Vec<ProtoRule>)> = vec![];
+    for phase in &prog.phases {
+        for s in &phase.streams {
+            let senders = sender_set(phase, s.id);
+            if senders.is_empty() {
+                continue; // declared but never used
+            }
+            let rules = build_rules(s, &senders)?;
+            // Bounds check.
+            for r in &rules {
+                let gx = &r.subgrid.dims[0];
+                let gy = &r.subgrid.dims[1];
+                if gx.start < 0
+                    || gy.start < 0
+                    || gx.last().unwrap_or(0) >= cfg.width
+                    || gy.last().unwrap_or(0) >= cfg.height
+                {
+                    return Err(PassError(format!(
+                        "stream {}: route {:?} leaves the {}x{} fabric",
+                        s.name, r.subgrid, cfg.width, cfg.height
+                    )));
+                }
+            }
+            // Self-conflict check: a stream's own rules must not place two
+            // *different* configurations on one router.
+            for i in 0..rules.len() {
+                for j in (i + 1)..rules.len() {
+                    if !rules[i].subgrid.intersect(&rules[j].subgrid).is_empty() {
+                        return Err(PassError(format!(
+                            "stream {}: ambiguous router configuration on {:?} \
+                             (needs checkerboard decomposition)",
+                            s.name,
+                            rules[i].subgrid.intersect(&rules[j].subgrid)
+                        )));
+                    }
+                }
+            }
+            per_stream.push((s.id, s.name.clone(), rules));
+        }
+    }
+
+    // 2. Conflict graph: footprints sharing any router.
+    let n = per_stream.len();
+    let mut adj: Vec<HashSet<usize>> = vec![HashSet::new(); n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let conflict = per_stream[i].2.iter().any(|a| {
+                per_stream[j].2.iter().any(|b| !a.subgrid.intersect(&b.subgrid).is_empty())
+            });
+            if conflict {
+                adj[i].insert(j);
+                adj[j].insert(i);
+            }
+        }
+    }
+
+    // 3. Greedy coloring, highest degree first (Welsh–Powell).
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by_key(|&i| std::cmp::Reverse(adj[i].len()));
+    let mut color_of: Vec<Option<u8>> = vec![None; n];
+    for &i in &order {
+        let used: HashSet<u8> =
+            adj[i].iter().filter_map(|&j| color_of[j]).collect();
+        let c = (0..cfg.max_colors).find(|c| !used.contains(c));
+        match c {
+            Some(c) => color_of[i] = Some(c),
+            None => {
+                return Err(PassError(format!(
+                    "OOR: stream {} needs a {}th color, only {} routable channels",
+                    per_stream[i].1,
+                    used.len() + 1,
+                    cfg.max_colors
+                )))
+            }
+        }
+    }
+
+    // 4. Emit colored route rules.
+    let mut out = ColorAllocation::default();
+    for (i, (id, _, rules)) in per_stream.iter().enumerate() {
+        let color = color_of[i].unwrap();
+        out.stream_color.insert(*id, color);
+        for r in rules {
+            out.routes.push(RouteRule {
+                color,
+                subgrid: r.subgrid.clone(),
+                rx: r.rx,
+                tx: r.tx,
+            });
+        }
+    }
+    let mut used: Vec<u8> = out.stream_color.values().copied().collect();
+    used.sort_unstable();
+    used.dedup();
+    out.colors_used = used;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::passes::checkerboard::checkerboard;
+    use crate::sem::{instantiate, Bindings};
+    use crate::spada::parse_kernel;
+
+    fn bind(pairs: &[(&str, i64)]) -> Bindings {
+        pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+    }
+
+    fn cfg() -> MachineConfig {
+        MachineConfig::with_grid(16, 16)
+    }
+
+    fn compile_streams(src: &str, binds: &[(&str, i64)]) -> (ir::Program, ColorAllocation) {
+        let k = parse_kernel(src).unwrap();
+        let prog = instantiate(&k, &bind(binds)).unwrap();
+        let prog = checkerboard(&prog).unwrap().program;
+        let alloc = allocate_colors(&prog, &cfg()).unwrap();
+        (prog, alloc)
+    }
+
+    #[test]
+    fn chain_pipeline_uses_distinct_colors() {
+        let src = "kernel @p<N, K>() {
+            place i16 i, i16 j in [0:N, 0] { f32[K] a }
+            dataflow i32 i, i32 j in [0:N, 0] {
+                stream<f32> s = relative_stream(-1, 0)
+            }
+            compute i32 i, i32 j in [1:N, 0] { await send(a, s) }
+            compute i32 i, i32 j in [0:N-1, 0] { await receive(a, s) }
+        }";
+        let (prog, alloc) = compile_streams(src, &[("N", 8), ("K", 4)]);
+        // Two variants (even/odd senders) with overlapping footprints →
+        // two colors.
+        assert_eq!(alloc.colors_used.len(), 2);
+        // Every variant got a color; route rules exist for sender and
+        // receiver sides.
+        let n_streams = prog.phases[0].streams.len();
+        assert_eq!(alloc.stream_color.len(), n_streams);
+        assert!(alloc.routes.len() >= 2 * n_streams);
+    }
+
+    #[test]
+    fn multicast_row_routes() {
+        let src = "kernel @b<N, K>() {
+            place i16 i, i16 j in [0:N, 0] { f32[K] a }
+            dataflow i32 i, i32 j in [0:1, 0] {
+                stream<f32> bc = relative_stream([1:N], 0)
+            }
+            compute i32 i, i32 j in [0, 0] { await send(a, bc) }
+            compute i32 i, i32 j in [1:N, 0] { await receive(a, bc) }
+        }";
+        let (_, alloc) = compile_streams(src, &[("N", 8), ("K", 4)]);
+        assert_eq!(alloc.colors_used.len(), 1);
+        let color = alloc.colors_used[0];
+        // Sender rule at PE0, middle rules forward+deliver, last delivers.
+        let sender = alloc
+            .routes
+            .iter()
+            .find(|r| r.subgrid.contains(0, 0))
+            .unwrap();
+        assert!(sender.rx.contains(Direction::Ramp));
+        assert!(sender.tx.contains(Direction::East));
+        let last = alloc.routes.iter().find(|r| r.subgrid.contains(7, 0)).unwrap();
+        assert!(last.tx.contains(Direction::Ramp));
+        assert!(!last.tx.contains(Direction::East));
+        let mid = alloc.routes.iter().find(|r| r.subgrid.contains(3, 0)).unwrap();
+        assert!(mid.tx.contains(Direction::Ramp));
+        assert!(mid.tx.contains(Direction::East));
+        assert_eq!(sender.color, color);
+    }
+
+    #[test]
+    fn disjoint_streams_share_colors() {
+        // Two streams on disjoint rows can share one color.
+        let src = "kernel @d<N>() {
+            place i16 i, i16 j in [0:N, 0:2] { f32 v }
+            dataflow i32 i, i32 j in [0:2, 0] {
+                stream<f32> s1 = relative_stream(1, 0)
+            }
+            dataflow i32 i, i32 j in [0:2, 1] {
+                stream<f32> s2 = relative_stream(1, 0)
+            }
+            compute i32 i, i32 j in [0, 0] { await send(v, s1) }
+            compute i32 i, i32 j in [1, 0] { await receive(v, s1) }
+            compute i32 i, i32 j in [0, 1] { await send(v, s2) }
+            compute i32 i, i32 j in [1, 1] { await receive(v, s2) }
+        }";
+        let (_, alloc) = compile_streams(src, &[("N", 4)]);
+        assert_eq!(alloc.colors_used.len(), 1, "{:?}", alloc.stream_color);
+    }
+
+    #[test]
+    fn cross_phase_streams_conflict() {
+        // Same footprint in two phases → distinct colors (phases are
+        // asynchronous across PEs).
+        let src = "kernel @x<N>() {
+            place i16 i, i16 j in [0:N, 0] { f32 v }
+            phase {
+                dataflow i32 i, i32 j in [0:N, 0] { stream<f32> s1 = relative_stream(1, 0) }
+                compute i32 i, i32 j in [0, 0] { await send(v, s1) }
+                compute i32 i, i32 j in [1, 0] { await receive(v, s1) }
+            }
+            phase {
+                dataflow i32 i, i32 j in [0:N, 0] { stream<f32> s2 = relative_stream(1, 0) }
+                compute i32 i, i32 j in [0, 0] { await send(v, s2) }
+                compute i32 i, i32 j in [1, 0] { await receive(v, s2) }
+            }
+        }";
+        let (_, alloc) = compile_streams(src, &[("N", 4)]);
+        assert_eq!(alloc.colors_used.len(), 2);
+    }
+
+    #[test]
+    fn color_exhaustion_is_oor() {
+        // 30 overlapping streams in one phase on the same row → OOR.
+        let mut decls = String::new();
+        let mut sends = String::new();
+        for i in 0..30 {
+            decls.push_str(&format!("stream<f32> s{i} = relative_stream(1, 0)\n"));
+            sends.push_str(&format!("send(v, s{i})\n"));
+        }
+        let src = format!(
+            "kernel @o<N>() {{
+                place i16 i, i16 j in [0:N, 0] {{ f32 v }}
+                dataflow i32 i, i32 j in [0:N, 0] {{ {decls} }}
+                compute i32 i, i32 j in [0, 0] {{ {sends} awaitall }}
+            }}"
+        );
+        let k = parse_kernel(&src).unwrap();
+        let prog = instantiate(&k, &bind(&[("N", 4)])).unwrap();
+        let prog = checkerboard(&prog).unwrap().program;
+        let err = allocate_colors(&prog, &cfg()).unwrap_err();
+        assert!(err.0.contains("OOR"), "{}", err.0);
+    }
+
+    #[test]
+    fn off_fabric_route_rejected() {
+        let src = "kernel @e<N>() {
+            place i16 i, i16 j in [0:N, 0] { f32 v }
+            dataflow i32 i, i32 j in [0:N, 0] { stream<f32> s = relative_stream(-1, 0) }
+            compute i32 i, i32 j in [0, 0] { await send(v, s) }
+        }";
+        let k = parse_kernel(src).unwrap();
+        let prog = instantiate(&k, &bind(&[("N", 4)])).unwrap();
+        let prog = checkerboard(&prog).unwrap().program;
+        let err = allocate_colors(&prog, &cfg()).unwrap_err();
+        assert!(err.0.contains("leaves"), "{}", err.0);
+    }
+}

@@ -1,0 +1,76 @@
+//! Optimizing compiler passes (paper §V).
+//!
+//! Pipeline order:
+//! 1. [`checkerboard`] — conflict-free routing decomposition (§V-B):
+//!    splits compute blocks by PE-coordinate parity and duplicates
+//!    streams into even/odd variants so no router carries an ambiguous
+//!    configuration.
+//! 2. [`classes`] — PE equivalence classes (§V-A canonicalization):
+//!    partitions the fabric into maximal strided regions whose PEs run
+//!    identical code (one CSL file per class, not per PE).
+//! 3. [`colors`] — global color allocation + route-rule generation:
+//!    conflict-graph coloring of stream variants onto the 24 routable
+//!    hardware channels.
+//!
+//! Task fusion, task-ID recycling and copy elimination operate on the
+//! per-class lowering and live in [`crate::csl::lower`]; they are toggled
+//! by [`Options`] for the Fig. 9 ablations.
+
+pub mod checkerboard;
+pub mod classes;
+pub mod colors;
+
+pub use checkerboard::checkerboard;
+pub use classes::{equivalence_classes, ClassRegion};
+pub use colors::{allocate_colors, ColorAllocation};
+
+/// Compilation options (ablation knobs, Fig. 9).
+#[derive(Clone, Copy, Debug)]
+pub struct Options {
+    /// Task fusion: coarsen chains of statements into single CSL tasks.
+    pub fusion: bool,
+    /// Task-ID recycling: map multiple logical tasks onto one hardware
+    /// task ID via dispatch state machines.
+    pub recycling: bool,
+    /// Copy elimination: forward single-producer/single-consumer staging
+    /// fields (incl. extern I/O fields) and reuse phase-scoped memory.
+    pub copy_elim: bool,
+}
+
+impl Default for Options {
+    fn default() -> Self {
+        Options { fusion: true, recycling: true, copy_elim: true }
+    }
+}
+
+impl Options {
+    pub fn none() -> Self {
+        Options { fusion: false, recycling: false, copy_elim: false }
+    }
+}
+
+/// Pass error (compile-time failure, including OOR conditions).
+#[derive(Debug, Clone)]
+pub struct PassError(pub String);
+
+impl std::fmt::Display for PassError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "pass error: {}", self.0)
+    }
+}
+
+impl std::error::Error for PassError {}
+
+/// Statistics reported by the pipeline (used by the Fig. 9 harness).
+#[derive(Debug, Clone, Default)]
+pub struct PassStats {
+    pub streams_split: usize,
+    pub blocks_split: usize,
+    pub classes: usize,
+    pub colors_used: usize,
+    pub logical_tasks: usize,
+    pub hw_task_ids: usize,
+    pub fused_tasks: usize,
+    pub copies_eliminated: usize,
+    pub mem_bytes_max: u32,
+}

@@ -1,0 +1,55 @@
+//! Minimal property-testing helper (proptest is unavailable offline).
+//!
+//! [`run_prop`] drives a property over `cases` random inputs generated
+//! from a [`SplitMix64`] seed; on failure it reports the seed and case
+//! index so the exact input reproduces deterministically.
+
+use crate::util::SplitMix64;
+
+/// Run `prop` over `cases` random cases. `gen` builds an input from the
+/// RNG; `prop` returns Err(description) on violation.
+pub fn run_prop<T: std::fmt::Debug>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut SplitMix64) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut rng = SplitMix64::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property {name} failed (seed={seed}, case={case}):\n  input: {input:?}\n  {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_valid_property() {
+        run_prop(
+            "abs-nonneg",
+            42,
+            100,
+            |r| r.next_f32(),
+            |x| {
+                if x.abs() >= 0.0 {
+                    Ok(())
+                } else {
+                    Err("negative abs".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property always-fails failed")]
+    fn reports_failures() {
+        run_prop("always-fails", 1, 10, |r| r.next_u64(), |_| Err("nope".into()));
+    }
+}

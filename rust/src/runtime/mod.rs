@@ -1,0 +1,170 @@
+//! PJRT runtime bridge — the numerical oracle.
+//!
+//! Loads the HLO-text artifacts produced by `python/compile/aot.py`
+//! (Layer-2 JAX models wrapping Layer-1 Pallas kernels), compiles them on
+//! the PJRT CPU client via the `xla` crate, and executes them with
+//! concrete inputs. The harness compares WSE-2 simulator outputs against
+//! these executions — Python never runs at simulation time.
+
+use anyhow::{anyhow, Result};
+use std::path::{Path, PathBuf};
+
+/// A loaded, compiled AOT artifact.
+pub struct Oracle {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+/// Shared PJRT CPU client (one per process).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifact_dir: PathBuf,
+}
+
+impl Runtime {
+    /// Create a CPU runtime reading artifacts from `dir`.
+    pub fn new(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
+        Ok(Runtime { client, artifact_dir: dir.as_ref().to_path_buf() })
+    }
+
+    /// Default artifact directory relative to the repo root.
+    pub fn default_dir() -> PathBuf {
+        // Works from the repo root (cargo run / cargo test).
+        PathBuf::from("artifacts")
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile `<name>.hlo.txt`.
+    pub fn load(&self, name: &str) -> Result<Oracle> {
+        let path = self.artifact_dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        Ok(Oracle { exe, name: name.to_string() })
+    }
+}
+
+/// A concrete f32 input tensor.
+pub struct Input<'a> {
+    pub data: &'a [f32],
+    pub dims: Vec<i64>,
+}
+
+impl<'a> Input<'a> {
+    pub fn new(data: &'a [f32], dims: &[i64]) -> Input<'a> {
+        assert_eq!(
+            data.len() as i64,
+            dims.iter().product::<i64>().max(1),
+            "data/dims mismatch"
+        );
+        Input { data, dims: dims.to_vec() }
+    }
+
+    /// Scalar input.
+    pub fn scalar(v: &'a [f32]) -> Input<'a> {
+        Input { data: v, dims: vec![] }
+    }
+}
+
+impl Oracle {
+    /// Execute with f32 inputs; returns the flattened f32 outputs of the
+    /// result tuple.
+    pub fn run(&self, inputs: &[Input<'_>]) -> Result<Vec<Vec<f32>>> {
+        let mut lits = Vec::with_capacity(inputs.len());
+        for inp in inputs {
+            let lit = xla::Literal::vec1(inp.data);
+            let lit = if inp.dims.is_empty() {
+                // 0-d scalar: reshape from [1].
+                lit.reshape(&[]).map_err(|e| anyhow!("scalar reshape: {e:?}"))?
+            } else {
+                lit.reshape(&inp.dims)
+                    .map_err(|e| anyhow!("reshape to {:?}: {e:?}", inp.dims))?
+            };
+            lits.push(lit);
+        }
+        let mut result = self
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.name))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {}: {e:?}", self.name))?;
+        // aot.py lowers with return_tuple=True.
+        let elems = result
+            .decompose_tuple()
+            .map_err(|e| anyhow!("tuple {}: {e:?}", self.name))?;
+        let mut out = Vec::with_capacity(elems.len());
+        for e in elems {
+            out.push(e.to_vec::<f32>().map_err(|err| anyhow!("to_vec: {err:?}"))?);
+        }
+        Ok(out)
+    }
+}
+
+/// Max |a-b| relative error helper used across the harness.
+pub fn max_rel_err(got: &[f32], want: &[f32]) -> f32 {
+    got.iter()
+        .zip(want)
+        .map(|(g, w)| (g - w).abs() / (1.0 + w.abs()))
+        .fold(0.0f32, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = Runtime::default_dir();
+        if !dir.join("reduce_16x64.hlo.txt").exists() {
+            eprintln!("artifacts not built; skipping PJRT test");
+            return None;
+        }
+        Some(Runtime::new(dir).expect("pjrt cpu client"))
+    }
+
+    #[test]
+    fn reduce_oracle_runs() {
+        let Some(rt) = runtime() else { return };
+        let oracle = rt.load("reduce_16x64").unwrap();
+        let data: Vec<f32> = (0..16 * 64).map(|i| (i % 7) as f32).collect();
+        let out = oracle.run(&[Input::new(&data, &[16, 64])]).unwrap();
+        assert_eq!(out[0].len(), 64);
+        let want: Vec<f32> = (0..64)
+            .map(|k| (0..16).map(|p| ((p * 64 + k) % 7) as f32).sum())
+            .collect();
+        assert!(max_rel_err(&out[0], &want) < 1e-5);
+    }
+
+    #[test]
+    fn gemv_oracle_runs() {
+        let Some(rt) = runtime() else { return };
+        let oracle = rt.load("gemv_64x48").unwrap();
+        let a: Vec<f32> = (0..64 * 48).map(|i| ((i % 13) as f32) * 0.1).collect();
+        let x: Vec<f32> = (0..48).map(|i| (i % 5) as f32).collect();
+        let y: Vec<f32> = vec![1.0; 64];
+        let out = oracle
+            .run(&[
+                Input::new(&a, &[64, 48]),
+                Input::new(&x, &[48]),
+                Input::new(&y, &[64]),
+                Input::scalar(&[2.0]),
+                Input::scalar(&[0.5]),
+            ])
+            .unwrap();
+        let want: Vec<f32> = (0..64)
+            .map(|r| {
+                let dot: f32 =
+                    (0..48).map(|c| ((r * 48 + c) % 13) as f32 * 0.1 * ((c % 5) as f32)).sum();
+                2.0 * dot + 0.5
+            })
+            .collect();
+        assert!(max_rel_err(&out[0], &want) < 1e-4, "{:?}", &out[0][..4]);
+    }
+}

@@ -1,0 +1,170 @@
+//! Constant expression evaluation and folding over the AST.
+
+use crate::spada::ast::{BinOp, Expr, UnOp};
+use std::collections::HashMap;
+
+/// Compile-time environment: meta-parameters and unrolled meta-for vars.
+pub type Env = HashMap<String, i64>;
+
+/// Evaluate an expression to a compile-time integer, if possible.
+pub fn eval_int(e: &Expr, env: &Env) -> Option<i64> {
+    Some(match e {
+        Expr::Int(v) => *v,
+        Expr::Float(_) => return None,
+        Expr::Ident(s) => *env.get(s)?,
+        Expr::Unary(UnOp::Neg, a) => -eval_int(a, env)?,
+        Expr::Unary(UnOp::Not, a) => (eval_int(a, env)? == 0) as i64,
+        Expr::Bin(op, a, b) => {
+            let x = eval_int(a, env)?;
+            let y = eval_int(b, env)?;
+            match op {
+                BinOp::Add => x + y,
+                BinOp::Sub => x - y,
+                BinOp::Mul => x * y,
+                BinOp::Div => {
+                    if y == 0 {
+                        return None;
+                    }
+                    x / y
+                }
+                BinOp::Mod => {
+                    if y == 0 {
+                        return None;
+                    }
+                    x.rem_euclid(y)
+                }
+                BinOp::Eq => (x == y) as i64,
+                BinOp::Ne => (x != y) as i64,
+                BinOp::Lt => (x < y) as i64,
+                BinOp::Le => (x <= y) as i64,
+                BinOp::Gt => (x > y) as i64,
+                BinOp::Ge => (x >= y) as i64,
+                BinOp::And => (x != 0 && y != 0) as i64,
+                BinOp::Or => (x != 0 || y != 0) as i64,
+            }
+        }
+        Expr::Cond { then, cond, els } => {
+            if eval_int(cond, env)? != 0 {
+                eval_int(then, env)?
+            } else {
+                eval_int(els, env)?
+            }
+        }
+        Expr::Call(name, args) => match (name.as_str(), args.len()) {
+            ("min", 2) => eval_int(&args[0], env)?.min(eval_int(&args[1], env)?),
+            ("max", 2) => eval_int(&args[0], env)?.max(eval_int(&args[1], env)?),
+            ("abs", 1) => eval_int(&args[0], env)?.abs(),
+            ("log2", 1) => {
+                let v = eval_int(&args[0], env)?;
+                if v <= 0 {
+                    return None;
+                }
+                63 - v.leading_zeros() as i64
+            }
+            ("pow2", 1) => 1i64 << eval_int(&args[0], env)?.clamp(0, 62),
+            _ => return None,
+        },
+        Expr::Index(..) => return None,
+    })
+}
+
+/// Fold constants: substitute env vars, evaluate const subtrees, resolve
+/// const conditionals. Non-const parts (PE coords, field refs) survive.
+pub fn fold(e: &Expr, env: &Env) -> Expr {
+    if let Some(v) = eval_int(e, env) {
+        return Expr::Int(v);
+    }
+    match e {
+        Expr::Ident(s) => match env.get(s) {
+            Some(v) => Expr::Int(*v),
+            None => e.clone(),
+        },
+        Expr::Unary(op, a) => Expr::Unary(*op, Box::new(fold(a, env))),
+        Expr::Bin(op, a, b) => Expr::Bin(*op, Box::new(fold(a, env)), Box::new(fold(b, env))),
+        Expr::Cond { then, cond, els } => {
+            // Resolve conditionals with a constant condition even when the
+            // branches are not const (e.g. stream selection).
+            match eval_int(cond, env) {
+                Some(v) if v != 0 => fold(then, env),
+                Some(_) => fold(els, env),
+                None => Expr::Cond {
+                    then: Box::new(fold(then, env)),
+                    cond: Box::new(fold(cond, env)),
+                    els: Box::new(fold(els, env)),
+                },
+            }
+        }
+        Expr::Index(b, idx) => Expr::Index(
+            Box::new(fold(b, env)),
+            idx.iter().map(|i| fold(i, env)).collect(),
+        ),
+        Expr::Call(name, args) => {
+            Expr::Call(name.clone(), args.iter().map(|a| fold(a, env)).collect())
+        }
+        _ => e.clone(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spada::parser::parse_kernel;
+    use crate::spada::ast::Item;
+
+    fn env(pairs: &[(&str, i64)]) -> Env {
+        pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+    }
+
+    fn parse_expr(src: &str) -> Expr {
+        // Parse via a small kernel wrapper (assign statement).
+        let k = parse_kernel(&format!(
+            "kernel @t() {{ compute i32 i, i32 j in [0,0] {{ x = {src} }} }}"
+        ))
+        .unwrap();
+        match &k.items[0] {
+            Item::Compute { body, .. } => match &body[0] {
+                crate::spada::ast::Stmt::Assign { rhs, .. } => rhs.clone(),
+                _ => panic!(),
+            },
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn arithmetic() {
+        let e = parse_expr("(K - 1) % 2 == 0");
+        assert_eq!(eval_int(&e, &env(&[("K", 5)])), Some(1));
+        assert_eq!(eval_int(&e, &env(&[("K", 6)])), Some(0));
+    }
+
+    #[test]
+    fn builtins() {
+        assert_eq!(eval_int(&parse_expr("log2(8)"), &env(&[])), Some(3));
+        assert_eq!(eval_int(&parse_expr("pow2(4)"), &env(&[])), Some(16));
+        assert_eq!(eval_int(&parse_expr("min(3, max(1, 2))"), &env(&[])), Some(2));
+    }
+
+    #[test]
+    fn non_const_survives_fold() {
+        let e = parse_expr("a[i] + K");
+        let f = fold(&e, &env(&[("K", 7)]));
+        match f {
+            Expr::Bin(BinOp::Add, _, b) => assert_eq!(*b, Expr::Int(7)),
+            _ => panic!("{f:?}"),
+        }
+    }
+
+    #[test]
+    fn const_ternary_resolves() {
+        let e = parse_expr("red if (N - 1) % 2 == 0 else blue");
+        let f = fold(&e, &env(&[("N", 5)]));
+        assert_eq!(f, Expr::Ident("red".into()));
+        let f = fold(&e, &env(&[("N", 6)]));
+        assert_eq!(f, Expr::Ident("blue".into()));
+    }
+
+    #[test]
+    fn div_by_zero_is_nonconst() {
+        assert_eq!(eval_int(&parse_expr("1 / 0"), &env(&[])), None);
+    }
+}

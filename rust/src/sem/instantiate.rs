@@ -1,0 +1,691 @@
+//! Kernel instantiation: AST → IR.
+//!
+//! Binds meta-parameters, unrolls meta-`for` loops into phases, resolves
+//! subgrids to concrete strided rectangles, folds constants (including
+//! compile-time stream selection ternaries), normalizes await/completion
+//! structure, and performs the semantic checks of §III.
+
+use super::eval::{eval_int, fold, Env};
+use crate::ir::core as ir;
+use crate::spada::ast::{self, ArgDir, Expr, Item, Kernel, RangeExpr, StreamOffset};
+use crate::util::{Range1, Subgrid};
+use std::collections::{HashMap, HashSet};
+
+/// Meta-parameter bindings for instantiation.
+pub type Bindings = HashMap<String, i64>;
+
+/// Semantic error.
+#[derive(Debug, Clone)]
+pub struct SemError(pub String);
+
+impl std::fmt::Display for SemError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "semantic error: {}", self.0)
+    }
+}
+
+impl std::error::Error for SemError {}
+
+type SResult<T> = Result<T, SemError>;
+
+fn err<T>(msg: impl Into<String>) -> SResult<T> {
+    Err(SemError(msg.into()))
+}
+
+/// Instantiate `kernel` with the given meta-parameter bindings.
+pub fn instantiate(kernel: &Kernel, bindings: &Bindings) -> SResult<ir::Program> {
+    for p in &kernel.meta_params {
+        if !bindings.contains_key(p) {
+            return err(format!("meta-parameter {p} not bound"));
+        }
+    }
+    let mut env: Env = bindings.clone();
+    // Argument extents may reference meta params; resolve args first.
+    let mut args = vec![];
+    for a in &kernel.args {
+        match a {
+            ast::KernelArg::Stream { elem_ty, extents, dir, name } => {
+                let mut ext = vec![];
+                for e in extents {
+                    ext.push(
+                        eval_int(e, &env)
+                            .ok_or_else(|| SemError(format!("arg {name}: non-const extent")))?,
+                    );
+                }
+                args.push(ir::ArgDecl {
+                    name: name.clone(),
+                    elem_ty: elem_ty.dtype(),
+                    extents: ext,
+                    dir: *dir,
+                });
+            }
+            ast::KernelArg::Scalar { ty, name } => {
+                args.push(ir::ArgDecl {
+                    name: name.clone(),
+                    elem_ty: ty.dtype(),
+                    extents: vec![],
+                    dir: ArgDir::ReadOnly,
+                });
+            }
+        }
+    }
+
+    let mut inst = Instantiator {
+        env: &mut env,
+        fields: vec![],
+        phases: vec![],
+        stream_count: 0,
+        pending: ir::Phase::default(),
+        pending_used: false,
+        arg_names: kernel.args.iter().map(|a| a.name().to_string()).collect(),
+        cur_streams: HashMap::new(),
+    };
+    inst.items(&kernel.items)?;
+    inst.flush_pending();
+
+    let prog = ir::Program {
+        name: kernel.name.clone(),
+        args,
+        fields: inst.fields,
+        phases: inst.phases,
+    };
+    check_program(&prog)?;
+    Ok(prog)
+}
+
+struct Instantiator<'e> {
+    env: &'e mut Env,
+    fields: Vec<ir::Field>,
+    phases: Vec<ir::Phase>,
+    stream_count: usize,
+    /// Implicit phase accumulating top-level dataflow/compute blocks.
+    pending: ir::Phase,
+    pending_used: bool,
+    arg_names: HashSet<String>,
+    /// Stream name table of the phase currently being built.
+    cur_streams: HashMap<String, usize>,
+}
+
+impl<'e> Instantiator<'e> {
+    fn flush_pending(&mut self) {
+        if self.pending_used {
+            let p = std::mem::take(&mut self.pending);
+            self.phases.push(p);
+            self.pending_used = false;
+            self.cur_streams.clear();
+        }
+    }
+
+    fn items(&mut self, items: &[Item]) -> SResult<()> {
+        for item in items {
+            match item {
+                Item::Place { header, decls } => {
+                    let subgrid = self.subgrid(&header.subgrid)?;
+                    // Top-level place → kernel-lifetime fields; phase-local
+                    // place is handled inside Item::Phase.
+                    let phase_tag = None;
+                    self.place(decls, &subgrid, phase_tag)?;
+                }
+                Item::Dataflow { header, decls } => {
+                    let subgrid = self.subgrid(&header.subgrid)?;
+                    self.dataflow(decls, &subgrid)?;
+                    self.pending_used = true;
+                }
+                Item::Compute { header, body } => {
+                    let subgrid = self.subgrid(&header.subgrid)?;
+                    let cb = self.compute(header, body, &subgrid)?;
+                    self.pending.computes.push(cb);
+                    self.pending_used = true;
+                }
+                Item::Phase { items, .. } => {
+                    self.flush_pending();
+                    let phase_idx = self.phases.len();
+                    for inner in items {
+                        match inner {
+                            Item::Place { header, decls } => {
+                                let subgrid = self.subgrid(&header.subgrid)?;
+                                self.place(decls, &subgrid, Some(phase_idx))?;
+                            }
+                            Item::Dataflow { header, decls } => {
+                                let subgrid = self.subgrid(&header.subgrid)?;
+                                self.dataflow(decls, &subgrid)?;
+                                self.pending_used = true;
+                            }
+                            Item::Compute { header, body } => {
+                                let subgrid = self.subgrid(&header.subgrid)?;
+                                let cb = self.compute(header, body, &subgrid)?;
+                                self.pending.computes.push(cb);
+                                self.pending_used = true;
+                            }
+                            Item::Phase { .. } | Item::MetaFor { .. } => {
+                                return err("nested phases / meta-for inside phase not supported")
+                            }
+                        }
+                    }
+                    self.pending_used = true; // even an empty phase counts
+                    self.flush_pending();
+                }
+                Item::MetaFor { var, range, body, .. } => {
+                    self.flush_pending();
+                    let (start, stop, step) = self.const_range(range)?;
+                    let mut v = start;
+                    while v < stop {
+                        let shadow = self.env.insert(var.1.clone(), v);
+                        self.items(body)?;
+                        self.flush_pending();
+                        match shadow {
+                            Some(old) => {
+                                self.env.insert(var.1.clone(), old);
+                            }
+                            None => {
+                                self.env.remove(&var.1);
+                            }
+                        }
+                        v += step;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn const_range(&self, r: &RangeExpr) -> SResult<(i64, i64, i64)> {
+        let start = eval_int(&r.start, self.env)
+            .ok_or_else(|| SemError("non-const range start".into()))?;
+        let stop = match &r.stop {
+            Some(e) => {
+                eval_int(e, self.env).ok_or_else(|| SemError("non-const range stop".into()))?
+            }
+            None => start + 1,
+        };
+        let step = match &r.step {
+            Some(e) => {
+                eval_int(e, self.env).ok_or_else(|| SemError("non-const range step".into()))?
+            }
+            None => 1,
+        };
+        if step < 1 {
+            return err(format!("range step must be >= 1, got {step}"));
+        }
+        Ok((start, stop, step))
+    }
+
+    fn subgrid(&self, ranges: &[RangeExpr]) -> SResult<Subgrid> {
+        if ranges.len() != 2 {
+            return err(format!("subgrids must be 2-D, got {} dims", ranges.len()));
+        }
+        let (s0, e0, t0) = self.const_range(&ranges[0])?;
+        let (s1, e1, t1) = self.const_range(&ranges[1])?;
+        if s0 < 0 || s1 < 0 {
+            return err("subgrid coordinates must be non-negative");
+        }
+        Ok(Subgrid::new(Range1::new(s0, e0, t0), Range1::new(s1, e1, t1)))
+    }
+
+    fn place(
+        &mut self,
+        decls: &[ast::PlaceDecl],
+        subgrid: &Subgrid,
+        phase: Option<usize>,
+    ) -> SResult<()> {
+        for d in decls {
+            if self.fields.iter().any(|f| f.name == d.name && f.phase == phase) {
+                return err(format!("duplicate field {}", d.name));
+            }
+            let mut shape = vec![];
+            for dim in &d.dims {
+                let v = eval_int(dim, self.env)
+                    .ok_or_else(|| SemError(format!("field {}: non-const dim", d.name)))?;
+                if v <= 0 {
+                    return err(format!("field {}: dimension {v} must be positive", d.name));
+                }
+                shape.push(v);
+            }
+            self.fields.push(ir::Field {
+                name: d.name.clone(),
+                ty: d.ty.dtype(),
+                shape,
+                subgrid: subgrid.clone(),
+                phase,
+            });
+        }
+        Ok(())
+    }
+
+    fn dataflow(&mut self, decls: &[ast::StreamDecl], subgrid: &Subgrid) -> SResult<()> {
+        for d in decls {
+            let dx = self.offset(&d.dx, &d.name)?;
+            let dy = self.offset(&d.dy, &d.name)?;
+            if matches!(dx, ir::Offset::Range(..)) && matches!(dy, ir::Offset::Range(..)) {
+                return err(format!(
+                    "stream {}: multicast is only supported in a single cardinal direction",
+                    d.name
+                ));
+            }
+            let id = self.stream_count;
+            self.stream_count += 1;
+            self.cur_streams.insert(d.name.clone(), id);
+            self.pending.streams.push(ir::Stream {
+                id,
+                name: d.name.clone(),
+                elem_ty: d.elem_ty.dtype(),
+                subgrid: subgrid.clone(),
+                dx,
+                dy,
+            });
+        }
+        Ok(())
+    }
+
+    fn offset(&self, o: &StreamOffset, stream: &str) -> SResult<ir::Offset> {
+        match o {
+            StreamOffset::Scalar(e) => Ok(ir::Offset::Scalar(
+                eval_int(e, self.env)
+                    .ok_or_else(|| SemError(format!("stream {stream}: non-const offset")))?,
+            )),
+            StreamOffset::Range(a, b) => {
+                let lo = eval_int(a, self.env)
+                    .ok_or_else(|| SemError(format!("stream {stream}: non-const offset")))?;
+                let hi = eval_int(b, self.env)
+                    .ok_or_else(|| SemError(format!("stream {stream}: non-const offset")))?;
+                if lo >= hi {
+                    return err(format!("stream {stream}: empty multicast range [{lo}:{hi}]"));
+                }
+                Ok(ir::Offset::Range(lo, hi))
+            }
+        }
+    }
+
+    fn compute(
+        &mut self,
+        header: &ast::BlockHeader,
+        body: &[ast::Stmt],
+        subgrid: &Subgrid,
+    ) -> SResult<ir::ComputeBlock> {
+        if header.vars.len() != 2 {
+            return err("compute blocks need exactly two coordinate variables");
+        }
+        let coord_vars = (header.vars[0].1.clone(), header.vars[1].1.clone());
+        let mut completions: HashSet<String> = HashSet::new();
+        let stmts = self.stmts(body, &coord_vars, &mut completions)?;
+        Ok(ir::ComputeBlock { subgrid: subgrid.clone(), coord_vars, stmts })
+    }
+
+    fn stmts(
+        &mut self,
+        body: &[ast::Stmt],
+        coords: &(String, String),
+        completions: &mut HashSet<String>,
+    ) -> SResult<Vec<ir::Stmt>> {
+        let mut out = vec![];
+        for s in body {
+            out.push(self.stmt(s, coords, completions, None, false)?);
+        }
+        Ok(out)
+    }
+
+    fn stmt(
+        &mut self,
+        s: &ast::Stmt,
+        coords: &(String, String),
+        completions: &mut HashSet<String>,
+        completion: Option<String>,
+        awaited: bool,
+    ) -> SResult<ir::Stmt> {
+        Ok(match s {
+            ast::Stmt::AwaitStmt { op, .. } => {
+                return self.stmt(op, coords, completions, completion, true)
+            }
+            ast::Stmt::CompletionDecl { name, op, .. } => {
+                if !completions.insert(name.clone()) {
+                    return err(format!("duplicate completion {name}"));
+                }
+                return self.stmt(op, coords, completions, Some(name.clone()), awaited);
+            }
+            ast::Stmt::AwaitName { name, .. } => {
+                if !completions.contains(name) {
+                    return err(format!("await on undeclared completion {name}"));
+                }
+                ir::Stmt::Await { completion: name.clone() }
+            }
+            ast::Stmt::AwaitAll { .. } => ir::Stmt::AwaitAll,
+            ast::Stmt::Send { data, stream, .. } => {
+                let data = fold(data, self.env);
+                let sref = self.stream_ref(stream)?;
+                self.check_arg_dir(&sref, ArgDir::WriteOnly, "send")?;
+                ir::Stmt::Send { data, stream: sref, completion, awaited }
+            }
+            ast::Stmt::Receive { dst, stream, .. } => {
+                let dst = fold(dst, self.env);
+                let sref = self.stream_ref(stream)?;
+                self.check_arg_dir(&sref, ArgDir::ReadOnly, "receive")?;
+                ir::Stmt::Recv { dst, stream: sref, completion, awaited }
+            }
+            ast::Stmt::ForeachRecv { index, elem, range, stream, body, .. } => {
+                let sref = self.stream_ref(stream)?;
+                self.check_arg_dir(&sref, ArgDir::ReadOnly, "foreach receive")?;
+                let len = match range {
+                    Some(r) => {
+                        let (st, sp, step) = (
+                            fold(&r.start, self.env),
+                            r.stop.as_ref().map(|e| fold(e, self.env)),
+                            r.step.as_ref().map(|e| fold(e, self.env)),
+                        );
+                        if st != Expr::Int(0)
+                            || step.is_some() && step != Some(Expr::Int(1))
+                        {
+                            return err("foreach receive ranges must be [0:N] with step 1");
+                        }
+                        Some(sp.ok_or_else(|| SemError("foreach needs a range stop".into()))?)
+                    }
+                    None => None,
+                };
+                let inner = self.stmts(body, coords, completions)?;
+                ir::Stmt::ForeachRecv {
+                    index: index.as_ref().map(|(_, n)| n.clone()),
+                    elem: elem.1.clone(),
+                    len,
+                    stream: sref,
+                    body: inner,
+                    completion,
+                    awaited,
+                }
+            }
+            ast::Stmt::Map { vars, ranges, body, .. } => {
+                if vars.len() != ranges.len() {
+                    return err("map: vars/ranges arity mismatch");
+                }
+                let rs: Vec<(Expr, Expr, Expr)> = ranges
+                    .iter()
+                    .map(|r| {
+                        (
+                            fold(&r.start, self.env),
+                            r.stop.as_ref().map(|e| fold(e, self.env)).unwrap_or(Expr::Int(1)),
+                            r.step.as_ref().map(|e| fold(e, self.env)).unwrap_or(Expr::Int(1)),
+                        )
+                    })
+                    .collect();
+                let inner = self.stmts(body, coords, completions)?;
+                ir::Stmt::Map {
+                    vars: vars.iter().map(|(_, n)| n.clone()).collect(),
+                    ranges: rs,
+                    body: inner,
+                    completion,
+                    awaited,
+                }
+            }
+            ast::Stmt::For { var, range, body, .. } => {
+                let r = (
+                    fold(&range.start, self.env),
+                    range.stop.as_ref().map(|e| fold(e, self.env)).unwrap_or(Expr::Int(1)),
+                    range.step.as_ref().map(|e| fold(e, self.env)).unwrap_or(Expr::Int(1)),
+                );
+                let inner = self.stmts(body, coords, completions)?;
+                ir::Stmt::For { var: var.1.clone(), range: r, body: inner }
+            }
+            ast::Stmt::Async { body, .. } => {
+                let inner = self.stmts(body, coords, completions)?;
+                ir::Stmt::Async { body: inner, completion, awaited }
+            }
+            ast::Stmt::Assign { lhs, rhs, .. } => ir::Stmt::Assign {
+                lhs: fold(lhs, self.env),
+                rhs: fold(rhs, self.env),
+            },
+            ast::Stmt::Let { ty, name, init, .. } => ir::Stmt::Let {
+                ty: ty.dtype(),
+                name: name.clone(),
+                init: fold(init, self.env),
+            },
+            ast::Stmt::If { cond, then_body, else_body, .. } => {
+                let c = fold(cond, self.env);
+                // Const conditions resolve at compile time.
+                if let Expr::Int(v) = c {
+                    let taken = if v != 0 { then_body } else { else_body };
+                    let inner = self.stmts(taken, coords, completions)?;
+                    return Ok(ir::Stmt::Async { body: inner, completion: None, awaited: true });
+                }
+                ir::Stmt::If {
+                    cond: c,
+                    then_body: self.stmts(then_body, coords, completions)?,
+                    else_body: self.stmts(else_body, coords, completions)?,
+                }
+            }
+        })
+    }
+
+    /// Resolve a (folded) stream expression to a StreamRef.
+    fn stream_ref(&self, e: &Expr) -> SResult<ir::StreamRef> {
+        let folded = fold(e, self.env);
+        match &folded {
+            Expr::Ident(name) => {
+                if let Some(id) = self.cur_streams.get(name) {
+                    Ok(ir::StreamRef::Local(*id))
+                } else if self.arg_names.contains(name) {
+                    Ok(ir::StreamRef::Arg { name: name.clone(), index: vec![] })
+                } else {
+                    err(format!("unknown stream {name}"))
+                }
+            }
+            Expr::Index(base, idx) => match base.as_ref() {
+                Expr::Ident(name) if self.arg_names.contains(name) => {
+                    Ok(ir::StreamRef::Arg { name: name.clone(), index: idx.clone() })
+                }
+                _ => err(format!("cannot index non-argument stream {folded:?}")),
+            },
+            Expr::Cond { .. } => err(
+                "stream selection condition must be compile-time constant \
+                 (split the compute block by subgrid instead)",
+            ),
+            other => err(format!("invalid stream expression {other:?}")),
+        }
+    }
+
+    fn check_arg_dir(&self, sref: &ir::StreamRef, want: ArgDir, what: &str) -> SResult<()> {
+        // Direction check only applies to kernel-arg ports; local stream
+        // direction is positional (send → +offset, receive → −offset).
+        let _ = (sref, want, what);
+        Ok(())
+    }
+}
+
+/// Whole-program checks after instantiation.
+fn check_program(prog: &ir::Program) -> SResult<()> {
+    // Stream send/receive usage must reference streams of the same phase.
+    for (pi, phase) in prog.phases.iter().enumerate() {
+        let ids: HashSet<usize> = phase.streams.iter().map(|s| s.id).collect();
+        let check_stmts = |stmts: &[ir::Stmt]| -> SResult<()> {
+            fn walk(s: &ir::Stmt, ids: &HashSet<usize>, pi: usize) -> SResult<()> {
+                let check_ref = |r: &ir::StreamRef| -> SResult<()> {
+                    if let ir::StreamRef::Local(id) = r {
+                        if !ids.contains(id) {
+                            return err(format!(
+                                "phase {pi}: stream id {id} not declared in this phase"
+                            ));
+                        }
+                    }
+                    Ok(())
+                };
+                match s {
+                    ir::Stmt::Send { stream, .. } | ir::Stmt::Recv { dst: _, stream, .. } => {
+                        check_ref(stream)
+                    }
+                    ir::Stmt::ForeachRecv { stream, body, .. } => {
+                        check_ref(stream)?;
+                        for st in body {
+                            walk(st, ids, pi)?;
+                        }
+                        Ok(())
+                    }
+                    ir::Stmt::Map { body, .. }
+                    | ir::Stmt::For { body, .. }
+                    | ir::Stmt::Async { body, .. } => {
+                        for st in body {
+                            walk(st, ids, pi)?;
+                        }
+                        Ok(())
+                    }
+                    ir::Stmt::If { then_body, else_body, .. } => {
+                        for st in then_body.iter().chain(else_body) {
+                            walk(st, ids, pi)?;
+                        }
+                        Ok(())
+                    }
+                    _ => Ok(()),
+                }
+            }
+            for st in stmts {
+                walk(st, &ids, pi)?;
+            }
+            Ok(())
+        };
+        for cb in &phase.computes {
+            check_stmts(&cb.stmts)?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::core::{Offset, Stmt, StreamRef};
+    use crate::spada::parse_kernel;
+
+    fn bind(pairs: &[(&str, i64)]) -> Bindings {
+        pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+    }
+
+    const CHAIN: &str = r#"
+kernel @chain_reduce<K, N>(stream<f32>[N] readonly a_in, stream<f32>[1] writeonly out) {
+  place i16 i, i16 j in [0:N, 0] { f32[K] a }
+  phase {
+    compute i32 i, i32 j in [0:N, 0] { await receive(a, a_in[i]) }
+  }
+  phase {
+    dataflow i32 i, i32 j in [0:N, 0] {
+      stream<f32> red = relative_stream(-1, 0)
+      stream<f32> blue = relative_stream(-1, 0)
+    }
+    compute i32 i, i32 j in [N-1, 0] {
+      await send(a, red if (N-1) % 2 == 0 else blue)
+    }
+    compute i32 i, i32 j in [1:N-1:2, 0] {
+      await foreach i32 k, f32 x in [0:K], receive(red) {
+        a[k] = a[k] + x
+        await send(a[k], blue)
+      }
+    }
+    compute i32 i, i32 j in [2:N-1:2, 0] {
+      await foreach i32 k, f32 x in [0:K], receive(blue) {
+        a[k] = a[k] + x
+        await send(a[k], red)
+      }
+    }
+    compute i32 i, i32 j in [0, 0] {
+      await foreach i32 k, f32 x in [0:K], receive(blue) { a[k] = a[k] + x }
+      await send(a, out[0])
+    }
+  }
+}
+"#;
+
+    #[test]
+    fn chain_reduce_instantiates() {
+        let k = parse_kernel(CHAIN).unwrap();
+        let prog = instantiate(&k, &bind(&[("K", 64), ("N", 8)])).unwrap();
+        assert_eq!(prog.phases.len(), 2);
+        assert_eq!(prog.fields.len(), 1);
+        assert_eq!(prog.fields[0].shape, vec![64]);
+        assert_eq!(prog.fields[0].subgrid.len(), 8);
+        let p2 = &prog.phases[1];
+        assert_eq!(p2.streams.len(), 2);
+        assert_eq!(p2.computes.len(), 4);
+        // East corner with N=8: (N-1)%2==1 → blue (stream id 1).
+        match &p2.computes[0].stmts[0] {
+            Stmt::Send { stream: StreamRef::Local(id), awaited, .. } => {
+                assert_eq!(*id, 1);
+                assert!(awaited);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(prog.extent(), (8, 1));
+    }
+
+    #[test]
+    fn meta_for_unrolls_phases() {
+        let src = "kernel @t<L>() { for i32 l in [0:L] { phase {
+            compute i32 i, i32 j in [0:pow2(l), 0] { awaitall }
+        } } }";
+        let k = parse_kernel(src).unwrap();
+        let prog = instantiate(&k, &bind(&[("L", 3)])).unwrap();
+        assert_eq!(prog.phases.len(), 3);
+        assert_eq!(prog.phases[2].computes[0].subgrid.len(), 4); // 2^2
+    }
+
+    #[test]
+    fn missing_binding_errors() {
+        let k = parse_kernel("kernel @t<K>() { }").unwrap();
+        assert!(instantiate(&k, &bind(&[])).is_err());
+    }
+
+    #[test]
+    fn unknown_stream_errors() {
+        let src = "kernel @t() { compute i32 i, i32 j in [0,0] { send(a, nosuch) } }";
+        let k = parse_kernel(src).unwrap();
+        assert!(instantiate(&k, &bind(&[])).is_err());
+    }
+
+    #[test]
+    fn nonconst_stream_select_errors() {
+        let src = "kernel @t<N>() {
+            dataflow i32 i, i32 j in [0:N, 0] {
+                stream<f32> red = relative_stream(-1, 0)
+                stream<f32> blue = relative_stream(-1, 0)
+            }
+            compute i32 i, i32 j in [0:N, 0] { send(a, red if i % 2 == 0 else blue) }
+        }";
+        let k = parse_kernel(src).unwrap();
+        let e = instantiate(&k, &bind(&[("N", 4)])).unwrap_err();
+        assert!(e.0.contains("compile-time"));
+    }
+
+    #[test]
+    fn multicast_stream() {
+        let src = "kernel @b<N>() {
+            dataflow i32 i, i32 j in [0:N, 0] {
+                stream<f32> bc = relative_stream([1:N], 0)
+            }
+            compute i32 i, i32 j in [0, 0] { awaitall }
+        }";
+        let k = parse_kernel(src).unwrap();
+        let prog = instantiate(&k, &bind(&[("N", 8)])).unwrap();
+        assert_eq!(prog.phases[0].streams[0].dx, Offset::Range(1, 8));
+        assert_eq!(prog.phases[0].streams[0].dy, Offset::Scalar(0));
+    }
+
+    #[test]
+    fn duplicate_completion_errors() {
+        let src = "kernel @t() { compute i32 i, i32 j in [0,0] {
+            completion c = async { }
+            completion c = async { }
+        } }";
+        let k = parse_kernel(src).unwrap();
+        assert!(instantiate(&k, &bind(&[])).is_err());
+    }
+
+    #[test]
+    fn const_if_resolves() {
+        let src = "kernel @t<N>() { compute i32 i, i32 j in [0,0] {
+            if N > 4 { x = 1 } else { x = 2 }
+        } }";
+        let k = parse_kernel(src).unwrap();
+        let prog = instantiate(&k, &bind(&[("N", 8)])).unwrap();
+        match &prog.phases[0].computes[0].stmts[0] {
+            Stmt::Async { body, .. } => match &body[0] {
+                Stmt::Assign { rhs, .. } => assert_eq!(*rhs, Expr::Int(1)),
+                other => panic!("{other:?}"),
+            },
+            other => panic!("{other:?}"),
+        }
+    }
+}

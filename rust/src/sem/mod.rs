@@ -1,0 +1,5 @@
+//! Semantic analysis: kernel instantiation, meta-for unrolling, const
+//! evaluation, subgrid resolution, and type/usage checking.
+pub mod eval;
+pub mod instantiate;
+pub use instantiate::{instantiate, Bindings, SemError};

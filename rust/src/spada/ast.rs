@@ -1,0 +1,254 @@
+//! SpaDA abstract syntax tree (paper §III, Table I).
+
+use super::token::Span;
+use crate::machine::Dtype;
+
+/// Scalar element types (surface syntax `f32`, `i16`, ...).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Type {
+    F16,
+    F32,
+    I16,
+    I32,
+    I64,
+    U16,
+    U32,
+}
+
+impl Type {
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            Type::F16 => Dtype::F16,
+            Type::F32 => Dtype::F32,
+            Type::I16 => Dtype::I16,
+            Type::I32 | Type::I64 => Dtype::I32,
+            Type::U16 => Dtype::U16,
+            Type::U32 => Dtype::U32,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Type::F16 => "f16",
+            Type::F32 => "f32",
+            Type::I16 => "i16",
+            Type::I32 => "i32",
+            Type::I64 => "i64",
+            Type::U16 => "u16",
+            Type::U32 => "u32",
+        }
+    }
+
+    pub fn is_float(&self) -> bool {
+        matches!(self, Type::F16 | Type::F32)
+    }
+}
+
+/// Binary operators.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Mod,
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    And,
+    Or,
+}
+
+/// Expressions.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Expr {
+    Int(i64),
+    Float(f64),
+    /// Identifier: meta-param, index var, field, stream, completion, arg.
+    Ident(String),
+    /// Indexing: `a[k]`, `a[i, j]`, `a_in[i]`.
+    Index(Box<Expr>, Vec<Expr>),
+    Unary(UnOp, Box<Expr>),
+    Bin(BinOp, Box<Expr>, Box<Expr>),
+    /// Python-style conditional: `a if cond else b`.
+    Cond { then: Box<Expr>, cond: Box<Expr>, els: Box<Expr> },
+    /// Builtin call, e.g. `min(a, b)`.
+    Call(String, Vec<Expr>),
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UnOp {
+    Neg,
+    Not,
+}
+
+impl Expr {
+    pub fn ident(s: &str) -> Expr {
+        Expr::Ident(s.to_string())
+    }
+}
+
+/// A range expression `[start : stop : step]` (any component may be an
+/// arbitrary expression; `stop`/`step` optional → point / step 1).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RangeExpr {
+    pub start: Expr,
+    pub stop: Option<Expr>,
+    pub step: Option<Expr>,
+}
+
+impl RangeExpr {
+    pub fn point(e: Expr) -> RangeExpr {
+        RangeExpr { start: e, stop: None, step: None }
+    }
+}
+
+/// Block header: `TYPE i, TYPE j in [r0, r1]`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BlockHeader {
+    pub vars: Vec<(Type, String)>,
+    pub subgrid: Vec<RangeExpr>,
+    pub span: Span,
+}
+
+/// A declaration inside a `place` block: `f32[K] a` or `f32 scal`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlaceDecl {
+    pub ty: Type,
+    /// Array dimensions; empty → scalar.
+    pub dims: Vec<Expr>,
+    pub name: String,
+    pub span: Span,
+}
+
+/// Stream offset: scalar `dx` or multicast range `[dx0:dx1]`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum StreamOffset {
+    Scalar(Expr),
+    Range(Expr, Expr),
+}
+
+/// A declaration inside a `dataflow` block:
+/// `stream<f32> s = relative_stream(dx, dy)`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StreamDecl {
+    pub elem_ty: Type,
+    pub name: String,
+    pub dx: StreamOffset,
+    pub dy: StreamOffset,
+    pub span: Span,
+}
+
+/// Kernel argument direction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArgDir {
+    ReadOnly,
+    WriteOnly,
+}
+
+/// Kernel argument: `stream<f32>[K] readonly a_in` — an array of host
+/// stream ports distributed over a subgrid, or `const i32 n` scalar.
+#[derive(Clone, Debug, PartialEq)]
+pub enum KernelArg {
+    Stream {
+        elem_ty: Type,
+        /// Port-grid extents (one per dimension of the port array).
+        extents: Vec<Expr>,
+        dir: ArgDir,
+        name: String,
+    },
+    Scalar {
+        ty: Type,
+        name: String,
+    },
+}
+
+impl KernelArg {
+    pub fn name(&self) -> &str {
+        match self {
+            KernelArg::Stream { name, .. } | KernelArg::Scalar { name, .. } => name,
+        }
+    }
+}
+
+/// Statements inside `compute` blocks.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Stmt {
+    /// `send(data, stream_expr)`
+    Send { data: Expr, stream: Expr, span: Span },
+    /// `receive(dst, stream_expr)` — whole-array receive.
+    Receive { dst: Expr, stream: Expr, span: Span },
+    /// `foreach [u16 k,] f32 x in [range,] receive(s) { body }`
+    ForeachRecv {
+        index: Option<(Type, String)>,
+        elem: (Type, String),
+        range: Option<RangeExpr>,
+        stream: Expr,
+        body: Vec<Stmt>,
+        span: Span,
+    },
+    /// `map i32 i in [I:J:K] { body }` — parallelizable affine loop.
+    Map { vars: Vec<(Type, String)>, ranges: Vec<RangeExpr>, body: Vec<Stmt>, span: Span },
+    /// `for i64 i in [I:J:K] { body }` — sequential loop.
+    For { var: (Type, String), range: RangeExpr, body: Vec<Stmt>, span: Span },
+    /// `async { body }`
+    Async { body: Vec<Stmt>, span: Span },
+    /// `completion c = <stmt>` — capture the async op's completion.
+    CompletionDecl { name: String, op: Box<Stmt>, span: Span },
+    /// `await <stmt>` — run op synchronously.
+    AwaitStmt { op: Box<Stmt>, span: Span },
+    /// `await c` — wait for a named completion.
+    AwaitName { name: String, span: Span },
+    /// `awaitall`
+    AwaitAll { span: Span },
+    /// `lhs = rhs` (lhs: scalar var or array element).
+    Assign { lhs: Expr, rhs: Expr, span: Span },
+    /// Local scalar declaration: `f32 t = expr`.
+    Let { ty: Type, name: String, init: Expr, span: Span },
+    /// Statement-level conditional.
+    If { cond: Expr, then_body: Vec<Stmt>, else_body: Vec<Stmt>, span: Span },
+}
+
+impl Stmt {
+    pub fn span(&self) -> Span {
+        match self {
+            Stmt::Send { span, .. }
+            | Stmt::Receive { span, .. }
+            | Stmt::ForeachRecv { span, .. }
+            | Stmt::Map { span, .. }
+            | Stmt::For { span, .. }
+            | Stmt::Async { span, .. }
+            | Stmt::CompletionDecl { span, .. }
+            | Stmt::AwaitStmt { span, .. }
+            | Stmt::AwaitName { span, .. }
+            | Stmt::AwaitAll { span }
+            | Stmt::Assign { span, .. }
+            | Stmt::Let { span, .. }
+            | Stmt::If { span, .. } => *span,
+        }
+    }
+}
+
+/// Top-level items inside a kernel or phase.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Item {
+    Place { header: BlockHeader, decls: Vec<PlaceDecl> },
+    Dataflow { header: BlockHeader, decls: Vec<StreamDecl> },
+    Compute { header: BlockHeader, body: Vec<Stmt> },
+    Phase { items: Vec<Item>, span: Span },
+    /// Meta-programming loop — unrolls into a series of phases.
+    MetaFor { var: (Type, String), range: RangeExpr, body: Vec<Item>, span: Span },
+}
+
+/// A complete kernel.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Kernel {
+    pub name: String,
+    /// Compile-time meta parameters `<K, N>`.
+    pub meta_params: Vec<String>,
+    pub args: Vec<KernelArg>,
+    pub items: Vec<Item>,
+}

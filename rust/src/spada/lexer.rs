@@ -1,0 +1,350 @@
+//! Hand-written lexer for SpaDA source text.
+
+use super::token::{Span, Tok, Token};
+
+/// Lexer error with position.
+#[derive(Debug, Clone)]
+pub struct LexError {
+    pub msg: String,
+    pub span: Span,
+}
+
+impl std::fmt::Display for LexError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "lex error at {}: {}", self.span, self.msg)
+    }
+}
+
+impl std::error::Error for LexError {}
+
+pub struct Lexer<'a> {
+    src: &'a [u8],
+    pos: usize,
+    line: u32,
+    col: u32,
+}
+
+impl<'a> Lexer<'a> {
+    pub fn new(src: &'a str) -> Self {
+        Lexer { src: src.as_bytes(), pos: 0, line: 1, col: 1 }
+    }
+
+    fn peek(&self) -> u8 {
+        *self.src.get(self.pos).unwrap_or(&0)
+    }
+
+    fn peek2(&self) -> u8 {
+        *self.src.get(self.pos + 1).unwrap_or(&0)
+    }
+
+    fn bump(&mut self) -> u8 {
+        let c = self.peek();
+        self.pos += 1;
+        if c == b'\n' {
+            self.line += 1;
+            self.col = 1;
+        } else {
+            self.col += 1;
+        }
+        c
+    }
+
+    fn span(&self) -> Span {
+        Span { line: self.line, col: self.col }
+    }
+
+    fn skip_ws_and_comments(&mut self) {
+        loop {
+            match self.peek() {
+                b' ' | b'\t' | b'\r' | b'\n' => {
+                    self.bump();
+                }
+                b'/' if self.peek2() == b'/' => {
+                    while self.peek() != b'\n' && self.peek() != 0 {
+                        self.bump();
+                    }
+                }
+                b'/' if self.peek2() == b'*' => {
+                    self.bump();
+                    self.bump();
+                    while !(self.peek() == b'*' && self.peek2() == b'/') && self.peek() != 0 {
+                        self.bump();
+                    }
+                    self.bump();
+                    self.bump();
+                }
+                _ => break,
+            }
+        }
+    }
+
+    /// Tokenize the whole input.
+    pub fn tokenize(mut self) -> Result<Vec<Token>, LexError> {
+        let mut out = Vec::new();
+        loop {
+            self.skip_ws_and_comments();
+            let span = self.span();
+            let c = self.peek();
+            if c == 0 {
+                out.push(Token { tok: Tok::Eof, span });
+                return Ok(out);
+            }
+            let tok = match c {
+                b'a'..=b'z' | b'A'..=b'Z' | b'_' => {
+                    let start = self.pos;
+                    while matches!(self.peek(), b'a'..=b'z' | b'A'..=b'Z' | b'0'..=b'9' | b'_') {
+                        self.bump();
+                    }
+                    let s = std::str::from_utf8(&self.src[start..self.pos]).unwrap();
+                    Tok::keyword(s).unwrap_or_else(|| Tok::Ident(s.to_string()))
+                }
+                b'0'..=b'9' => {
+                    let start = self.pos;
+                    let mut is_float = false;
+                    while self.peek().is_ascii_digit() {
+                        self.bump();
+                    }
+                    if self.peek() == b'.' && self.peek2().is_ascii_digit() {
+                        is_float = true;
+                        self.bump();
+                        while self.peek().is_ascii_digit() {
+                            self.bump();
+                        }
+                    }
+                    if matches!(self.peek(), b'e' | b'E') {
+                        is_float = true;
+                        self.bump();
+                        if matches!(self.peek(), b'+' | b'-') {
+                            self.bump();
+                        }
+                        while self.peek().is_ascii_digit() {
+                            self.bump();
+                        }
+                    }
+                    let s = std::str::from_utf8(&self.src[start..self.pos]).unwrap();
+                    if is_float {
+                        Tok::Float(s.parse().map_err(|e| LexError {
+                            msg: format!("bad float {s}: {e}"),
+                            span,
+                        })?)
+                    } else {
+                        Tok::Int(s.parse().map_err(|e| LexError {
+                            msg: format!("bad int {s}: {e}"),
+                            span,
+                        })?)
+                    }
+                }
+                b'@' => {
+                    self.bump();
+                    Tok::At
+                }
+                b'(' => {
+                    self.bump();
+                    Tok::LParen
+                }
+                b')' => {
+                    self.bump();
+                    Tok::RParen
+                }
+                b'[' => {
+                    self.bump();
+                    Tok::LBracket
+                }
+                b']' => {
+                    self.bump();
+                    Tok::RBracket
+                }
+                b'{' => {
+                    self.bump();
+                    Tok::LBrace
+                }
+                b'}' => {
+                    self.bump();
+                    Tok::RBrace
+                }
+                b'<' => {
+                    self.bump();
+                    if self.peek() == b'=' {
+                        self.bump();
+                        Tok::Le
+                    } else {
+                        Tok::Lt
+                    }
+                }
+                b'>' => {
+                    self.bump();
+                    if self.peek() == b'=' {
+                        self.bump();
+                        Tok::Ge
+                    } else {
+                        Tok::Gt
+                    }
+                }
+                b'=' => {
+                    self.bump();
+                    if self.peek() == b'=' {
+                        self.bump();
+                        Tok::EqEq
+                    } else {
+                        Tok::Assign
+                    }
+                }
+                b'!' => {
+                    self.bump();
+                    if self.peek() == b'=' {
+                        self.bump();
+                        Tok::Ne
+                    } else {
+                        Tok::Bang
+                    }
+                }
+                b'&' if self.peek2() == b'&' => {
+                    self.bump();
+                    self.bump();
+                    Tok::AndAnd
+                }
+                b'|' if self.peek2() == b'|' => {
+                    self.bump();
+                    self.bump();
+                    Tok::OrOr
+                }
+                b'+' => {
+                    self.bump();
+                    Tok::Plus
+                }
+                b'-' => {
+                    self.bump();
+                    Tok::Minus
+                }
+                b'*' => {
+                    self.bump();
+                    Tok::Star
+                }
+                b'/' => {
+                    self.bump();
+                    Tok::Slash
+                }
+                b'%' => {
+                    self.bump();
+                    Tok::Percent
+                }
+                b',' => {
+                    self.bump();
+                    Tok::Comma
+                }
+                b':' => {
+                    self.bump();
+                    Tok::Colon
+                }
+                b';' => {
+                    self.bump();
+                    Tok::Semicolon
+                }
+                other => {
+                    return Err(LexError {
+                        msg: format!("unexpected character {:?}", other as char),
+                        span,
+                    })
+                }
+            };
+            out.push(Token { tok, span });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(src: &str) -> Vec<Tok> {
+        Lexer::new(src).tokenize().unwrap().into_iter().map(|t| t.tok).collect()
+    }
+
+    #[test]
+    fn keywords_and_idents() {
+        let t = toks("kernel @foo place xyz f32");
+        assert_eq!(
+            t,
+            vec![
+                Tok::Kernel,
+                Tok::At,
+                Tok::Ident("foo".into()),
+                Tok::Place,
+                Tok::Ident("xyz".into()),
+                Tok::TyF32,
+                Tok::Eof
+            ]
+        );
+    }
+
+    #[test]
+    fn numbers() {
+        let t = toks("42 3.5 1e3 2.5e-2");
+        assert_eq!(
+            t,
+            vec![Tok::Int(42), Tok::Float(3.5), Tok::Float(1e3), Tok::Float(2.5e-2), Tok::Eof]
+        );
+    }
+
+    #[test]
+    fn operators() {
+        let t = toks("<= >= == != && || ! < > = + - * / %");
+        assert_eq!(
+            t,
+            vec![
+                Tok::Le,
+                Tok::Ge,
+                Tok::EqEq,
+                Tok::Ne,
+                Tok::AndAnd,
+                Tok::OrOr,
+                Tok::Bang,
+                Tok::Lt,
+                Tok::Gt,
+                Tok::Assign,
+                Tok::Plus,
+                Tok::Minus,
+                Tok::Star,
+                Tok::Slash,
+                Tok::Percent,
+                Tok::Eof
+            ]
+        );
+    }
+
+    #[test]
+    fn comments() {
+        let t = toks("a // line comment\n b /* block\n comment */ c");
+        assert_eq!(
+            t,
+            vec![
+                Tok::Ident("a".into()),
+                Tok::Ident("b".into()),
+                Tok::Ident("c".into()),
+                Tok::Eof
+            ]
+        );
+    }
+
+    #[test]
+    fn spans_track_lines() {
+        let tokens = Lexer::new("a\n  b").tokenize().unwrap();
+        assert_eq!(tokens[0].span.line, 1);
+        assert_eq!(tokens[1].span.line, 2);
+        assert_eq!(tokens[1].span.col, 3);
+    }
+
+    #[test]
+    fn listing1_snippet() {
+        let src = "stream<f32> red = relative_stream(-1, 0)";
+        let t = toks(src);
+        assert!(t.contains(&Tok::Stream));
+        assert!(t.contains(&Tok::RelativeStream));
+        assert!(t.contains(&Tok::Ident("red".into())));
+    }
+
+    #[test]
+    fn bad_char() {
+        assert!(Lexer::new("a $ b").tokenize().is_err());
+    }
+}

@@ -1,0 +1,18 @@
+//! The SpaDA language: lexer, AST, parser, pretty-printer.
+//!
+//! SpaDA (paper §III) programs are *kernels* made of phases; each phase
+//! contains `place` blocks (data allocation over PE subgrids), `dataflow`
+//! blocks (typed relative streams between PEs), and `compute` blocks
+//! (async/await computation driven by streams). Meta-programming `for`
+//! loops unroll into series of phases (e.g. the levels of a reduction
+//! tree).
+
+pub mod token;
+pub mod lexer;
+pub mod ast;
+pub mod parser;
+pub mod pretty;
+
+pub use ast::*;
+pub use lexer::Lexer;
+pub use parser::{parse_kernel, ParseError};

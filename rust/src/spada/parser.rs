@@ -1,0 +1,882 @@
+//! Recursive-descent parser for SpaDA.
+
+use super::ast::*;
+use super::lexer::Lexer;
+use super::token::{Span, Tok, Token};
+
+/// Parse error with source position.
+#[derive(Debug, Clone)]
+pub struct ParseError {
+    pub msg: String,
+    pub span: Span,
+}
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "parse error at {}: {}", self.span, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+type PResult<T> = Result<T, ParseError>;
+
+/// Parse a complete SpaDA kernel from source text.
+pub fn parse_kernel(src: &str) -> PResult<Kernel> {
+    let tokens = Lexer::new(src)
+        .tokenize()
+        .map_err(|e| ParseError { msg: e.msg, span: e.span })?;
+    Parser { tokens, pos: 0 }.kernel()
+}
+
+struct Parser {
+    tokens: Vec<Token>,
+    pos: usize,
+}
+
+impl Parser {
+    fn peek(&self) -> &Tok {
+        &self.tokens[self.pos.min(self.tokens.len() - 1)].tok
+    }
+
+    fn peek2(&self) -> &Tok {
+        &self.tokens[(self.pos + 1).min(self.tokens.len() - 1)].tok
+    }
+
+    fn span(&self) -> Span {
+        self.tokens[self.pos.min(self.tokens.len() - 1)].span
+    }
+
+    fn bump(&mut self) -> Tok {
+        let t = self.tokens[self.pos.min(self.tokens.len() - 1)].tok.clone();
+        self.pos += 1;
+        t
+    }
+
+    fn err<T>(&self, msg: impl Into<String>) -> PResult<T> {
+        Err(ParseError { msg: msg.into(), span: self.span() })
+    }
+
+    fn expect(&mut self, t: Tok) -> PResult<()> {
+        if *self.peek() == t {
+            self.bump();
+            Ok(())
+        } else {
+            self.err(format!("expected {t}, found {}", self.peek()))
+        }
+    }
+
+    fn eat(&mut self, t: Tok) -> bool {
+        if *self.peek() == t {
+            self.bump();
+            true
+        } else {
+            false
+        }
+    }
+
+    fn ident(&mut self) -> PResult<String> {
+        match self.peek().clone() {
+            Tok::Ident(s) => {
+                self.bump();
+                Ok(s)
+            }
+            other => self.err(format!("expected identifier, found {other}")),
+        }
+    }
+
+    fn ty(&mut self) -> PResult<Type> {
+        let t = match self.peek() {
+            Tok::TyF16 => Type::F16,
+            Tok::TyF32 => Type::F32,
+            Tok::TyI16 => Type::I16,
+            Tok::TyI32 => Type::I32,
+            Tok::TyI64 => Type::I64,
+            Tok::TyU16 => Type::U16,
+            Tok::TyU32 => Type::U32,
+            other => return self.err(format!("expected type, found {other}")),
+        };
+        self.bump();
+        Ok(t)
+    }
+
+    // ------------------------------------------------------------------
+    // Kernel header
+    // ------------------------------------------------------------------
+
+    fn kernel(&mut self) -> PResult<Kernel> {
+        self.expect(Tok::Kernel)?;
+        self.expect(Tok::At)?;
+        let name = self.ident()?;
+        let mut meta_params = vec![];
+        if self.eat(Tok::Lt) {
+            loop {
+                meta_params.push(self.ident()?);
+                if !self.eat(Tok::Comma) {
+                    break;
+                }
+            }
+            self.expect(Tok::Gt)?;
+        }
+        self.expect(Tok::LParen)?;
+        let mut args = vec![];
+        if *self.peek() != Tok::RParen {
+            loop {
+                args.push(self.kernel_arg()?);
+                if !self.eat(Tok::Comma) {
+                    break;
+                }
+            }
+        }
+        self.expect(Tok::RParen)?;
+        self.expect(Tok::LBrace)?;
+        let mut items = vec![];
+        while *self.peek() != Tok::RBrace {
+            items.push(self.item()?);
+        }
+        self.expect(Tok::RBrace)?;
+        Ok(Kernel { name, meta_params, args, items })
+    }
+
+    fn kernel_arg(&mut self) -> PResult<KernelArg> {
+        if self.eat(Tok::Const) {
+            let ty = self.ty()?;
+            let name = self.ident()?;
+            return Ok(KernelArg::Scalar { ty, name });
+        }
+        self.expect(Tok::Stream)?;
+        self.expect(Tok::Lt)?;
+        let elem_ty = self.ty()?;
+        self.expect(Tok::Gt)?;
+        let mut extents = vec![];
+        if self.eat(Tok::LBracket) {
+            loop {
+                extents.push(self.expr()?);
+                if !self.eat(Tok::Comma) {
+                    break;
+                }
+            }
+            self.expect(Tok::RBracket)?;
+        }
+        let dir = if self.eat(Tok::Readonly) {
+            ArgDir::ReadOnly
+        } else if self.eat(Tok::Writeonly) {
+            ArgDir::WriteOnly
+        } else {
+            return self.err("kernel stream argument needs readonly/writeonly");
+        };
+        let name = self.ident()?;
+        Ok(KernelArg::Stream { elem_ty, extents, dir, name })
+    }
+
+    // ------------------------------------------------------------------
+    // Items
+    // ------------------------------------------------------------------
+
+    fn item(&mut self) -> PResult<Item> {
+        let span = self.span();
+        match self.peek() {
+            Tok::Place => {
+                self.bump();
+                let header = self.block_header()?;
+                self.expect(Tok::LBrace)?;
+                let mut decls = vec![];
+                while *self.peek() != Tok::RBrace {
+                    decls.push(self.place_decl()?);
+                }
+                self.expect(Tok::RBrace)?;
+                Ok(Item::Place { header, decls })
+            }
+            Tok::Dataflow => {
+                self.bump();
+                let header = self.block_header()?;
+                self.expect(Tok::LBrace)?;
+                let mut decls = vec![];
+                while *self.peek() != Tok::RBrace {
+                    decls.push(self.stream_decl()?);
+                }
+                self.expect(Tok::RBrace)?;
+                Ok(Item::Dataflow { header, decls })
+            }
+            Tok::Compute => {
+                self.bump();
+                let header = self.block_header()?;
+                self.expect(Tok::LBrace)?;
+                let mut body = vec![];
+                while *self.peek() != Tok::RBrace {
+                    body.push(self.stmt()?);
+                }
+                self.expect(Tok::RBrace)?;
+                Ok(Item::Compute { header, body })
+            }
+            Tok::Phase => {
+                self.bump();
+                self.expect(Tok::LBrace)?;
+                let mut items = vec![];
+                while *self.peek() != Tok::RBrace {
+                    items.push(self.item()?);
+                }
+                self.expect(Tok::RBrace)?;
+                Ok(Item::Phase { items, span })
+            }
+            Tok::For => {
+                self.bump();
+                let ty = self.ty()?;
+                let var = self.ident()?;
+                self.expect(Tok::In)?;
+                self.expect(Tok::LBracket)?;
+                let range = self.range_expr()?;
+                self.expect(Tok::RBracket)?;
+                self.expect(Tok::LBrace)?;
+                let mut body = vec![];
+                while *self.peek() != Tok::RBrace {
+                    body.push(self.item()?);
+                }
+                self.expect(Tok::RBrace)?;
+                Ok(Item::MetaFor { var: (ty, var), range, body, span })
+            }
+            other => self.err(format!(
+                "expected place/dataflow/compute/phase/for, found {other}"
+            )),
+        }
+    }
+
+    /// `TYPE i, TYPE j in [r0, r1]`
+    fn block_header(&mut self) -> PResult<BlockHeader> {
+        let span = self.span();
+        let mut vars = vec![];
+        loop {
+            let ty = self.ty()?;
+            let name = self.ident()?;
+            vars.push((ty, name));
+            if !self.eat(Tok::Comma) {
+                break;
+            }
+        }
+        self.expect(Tok::In)?;
+        self.expect(Tok::LBracket)?;
+        let mut subgrid = vec![];
+        loop {
+            subgrid.push(self.range_expr()?);
+            if !self.eat(Tok::Comma) {
+                break;
+            }
+        }
+        self.expect(Tok::RBracket)?;
+        Ok(BlockHeader { vars, subgrid, span })
+    }
+
+    fn place_decl(&mut self) -> PResult<PlaceDecl> {
+        let span = self.span();
+        let ty = self.ty()?;
+        let mut dims = vec![];
+        if self.eat(Tok::LBracket) {
+            loop {
+                dims.push(self.expr()?);
+                if !self.eat(Tok::Comma) {
+                    break;
+                }
+            }
+            self.expect(Tok::RBracket)?;
+        }
+        let name = self.ident()?;
+        self.eat(Tok::Semicolon);
+        Ok(PlaceDecl { ty, dims, name, span })
+    }
+
+    fn stream_decl(&mut self) -> PResult<StreamDecl> {
+        let span = self.span();
+        self.expect(Tok::Stream)?;
+        self.expect(Tok::Lt)?;
+        let elem_ty = self.ty()?;
+        self.expect(Tok::Gt)?;
+        let name = self.ident()?;
+        self.expect(Tok::Assign)?;
+        self.expect(Tok::RelativeStream)?;
+        self.expect(Tok::LParen)?;
+        let dx = self.stream_offset()?;
+        self.expect(Tok::Comma)?;
+        let dy = self.stream_offset()?;
+        self.expect(Tok::RParen)?;
+        self.eat(Tok::Semicolon);
+        Ok(StreamDecl { elem_ty, name, dx, dy, span })
+    }
+
+    fn stream_offset(&mut self) -> PResult<StreamOffset> {
+        if self.eat(Tok::LBracket) {
+            let a = self.expr()?;
+            self.expect(Tok::Colon)?;
+            let b = self.expr()?;
+            self.expect(Tok::RBracket)?;
+            Ok(StreamOffset::Range(a, b))
+        } else {
+            Ok(StreamOffset::Scalar(self.expr()?))
+        }
+    }
+
+    fn range_expr(&mut self) -> PResult<RangeExpr> {
+        let start = self.expr()?;
+        if self.eat(Tok::Colon) {
+            let stop = self.expr()?;
+            let step = if self.eat(Tok::Colon) { Some(self.expr()?) } else { None };
+            Ok(RangeExpr { start, stop: Some(stop), step })
+        } else {
+            Ok(RangeExpr::point(start))
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Statements
+    // ------------------------------------------------------------------
+
+    fn stmt_block(&mut self) -> PResult<Vec<Stmt>> {
+        self.expect(Tok::LBrace)?;
+        let mut body = vec![];
+        while *self.peek() != Tok::RBrace {
+            body.push(self.stmt()?);
+        }
+        self.expect(Tok::RBrace)?;
+        Ok(body)
+    }
+
+    fn stmt(&mut self) -> PResult<Stmt> {
+        let span = self.span();
+        let s = match self.peek().clone() {
+            Tok::Await => {
+                self.bump();
+                // `await c` (named completion) vs `await <op-stmt>`.
+                if let Tok::Ident(name) = self.peek().clone() {
+                    // An identifier followed by something that isn't the
+                    // start of an op is a completion name.
+                    if !matches!(self.peek2(), Tok::LParen) {
+                        self.bump();
+                        self.eat(Tok::Semicolon);
+                        return Ok(Stmt::AwaitName { name, span });
+                    }
+                }
+                let op = self.stmt()?;
+                Stmt::AwaitStmt { op: Box::new(op), span }
+            }
+            Tok::Awaitall => {
+                self.bump();
+                self.eat(Tok::Semicolon);
+                Stmt::AwaitAll { span }
+            }
+            Tok::Completion => {
+                self.bump();
+                let name = self.ident()?;
+                self.expect(Tok::Assign)?;
+                let op = self.stmt()?;
+                Stmt::CompletionDecl { name, op: Box::new(op), span }
+            }
+            Tok::Send => {
+                self.bump();
+                self.expect(Tok::LParen)?;
+                let data = self.expr()?;
+                self.expect(Tok::Comma)?;
+                let stream = self.expr()?;
+                self.expect(Tok::RParen)?;
+                self.eat(Tok::Semicolon);
+                Stmt::Send { data, stream, span }
+            }
+            Tok::Receive => {
+                self.bump();
+                self.expect(Tok::LParen)?;
+                let dst = self.expr()?;
+                self.expect(Tok::Comma)?;
+                let stream = self.expr()?;
+                self.expect(Tok::RParen)?;
+                self.eat(Tok::Semicolon);
+                Stmt::Receive { dst, stream, span }
+            }
+            Tok::Foreach => {
+                self.bump();
+                let ty1 = self.ty()?;
+                let name1 = self.ident()?;
+                let (index, elem) = if self.eat(Tok::Comma) {
+                    let ty2 = self.ty()?;
+                    let name2 = self.ident()?;
+                    (Some((ty1, name1)), (ty2, name2))
+                } else {
+                    (None, (ty1, name1))
+                };
+                self.expect(Tok::In)?;
+                let range = if self.eat(Tok::LBracket) {
+                    let r = self.range_expr()?;
+                    self.expect(Tok::RBracket)?;
+                    self.expect(Tok::Comma)?;
+                    Some(r)
+                } else {
+                    None
+                };
+                self.expect(Tok::Receive)?;
+                self.expect(Tok::LParen)?;
+                let stream = self.expr()?;
+                self.expect(Tok::RParen)?;
+                let body = self.stmt_block()?;
+                Stmt::ForeachRecv { index, elem, range, stream, body, span }
+            }
+            Tok::Map => {
+                self.bump();
+                let mut vars = vec![];
+                loop {
+                    let ty = self.ty()?;
+                    let name = self.ident()?;
+                    vars.push((ty, name));
+                    if !self.eat(Tok::Comma) {
+                        break;
+                    }
+                }
+                self.expect(Tok::In)?;
+                self.expect(Tok::LBracket)?;
+                let mut ranges = vec![];
+                loop {
+                    ranges.push(self.range_expr()?);
+                    if !self.eat(Tok::Comma) {
+                        break;
+                    }
+                }
+                self.expect(Tok::RBracket)?;
+                let body = self.stmt_block()?;
+                Stmt::Map { vars, ranges, body, span }
+            }
+            Tok::For => {
+                self.bump();
+                let ty = self.ty()?;
+                let name = self.ident()?;
+                self.expect(Tok::In)?;
+                self.expect(Tok::LBracket)?;
+                let range = self.range_expr()?;
+                self.expect(Tok::RBracket)?;
+                let body = self.stmt_block()?;
+                Stmt::For { var: (ty, name), range, body, span }
+            }
+            Tok::Async => {
+                self.bump();
+                let body = self.stmt_block()?;
+                Stmt::Async { body, span }
+            }
+            Tok::If => {
+                self.bump();
+                let cond = self.expr()?;
+                let then_body = self.stmt_block()?;
+                let else_body = if self.eat(Tok::Else) { self.stmt_block()? } else { vec![] };
+                Stmt::If { cond, then_body, else_body, span }
+            }
+            t if t.is_type() => {
+                let ty = self.ty()?;
+                let name = self.ident()?;
+                self.expect(Tok::Assign)?;
+                let init = self.expr()?;
+                self.eat(Tok::Semicolon);
+                Stmt::Let { ty, name, init, span }
+            }
+            _ => {
+                // Assignment: expr = expr
+                let lhs = self.expr()?;
+                self.expect(Tok::Assign)?;
+                let rhs = self.expr()?;
+                self.eat(Tok::Semicolon);
+                Stmt::Assign { lhs, rhs, span }
+            }
+        };
+        Ok(s)
+    }
+
+    // ------------------------------------------------------------------
+    // Expressions (precedence climbing)
+    // ------------------------------------------------------------------
+
+    pub(crate) fn expr(&mut self) -> PResult<Expr> {
+        // Ternary: `a if cond else b` (right-assoc, lowest precedence).
+        let e = self.or_expr()?;
+        if self.eat(Tok::If) {
+            let cond = self.or_expr()?;
+            self.expect(Tok::Else)?;
+            let els = self.expr()?;
+            Ok(Expr::Cond { then: Box::new(e), cond: Box::new(cond), els: Box::new(els) })
+        } else {
+            Ok(e)
+        }
+    }
+
+    fn or_expr(&mut self) -> PResult<Expr> {
+        let mut e = self.and_expr()?;
+        while self.eat(Tok::OrOr) {
+            let r = self.and_expr()?;
+            e = Expr::Bin(BinOp::Or, Box::new(e), Box::new(r));
+        }
+        Ok(e)
+    }
+
+    fn and_expr(&mut self) -> PResult<Expr> {
+        let mut e = self.cmp_expr()?;
+        while self.eat(Tok::AndAnd) {
+            let r = self.cmp_expr()?;
+            e = Expr::Bin(BinOp::And, Box::new(e), Box::new(r));
+        }
+        Ok(e)
+    }
+
+    fn cmp_expr(&mut self) -> PResult<Expr> {
+        let e = self.add_expr()?;
+        let op = match self.peek() {
+            Tok::EqEq => BinOp::Eq,
+            Tok::Ne => BinOp::Ne,
+            Tok::Lt => BinOp::Lt,
+            Tok::Le => BinOp::Le,
+            Tok::Gt => BinOp::Gt,
+            Tok::Ge => BinOp::Ge,
+            _ => return Ok(e),
+        };
+        self.bump();
+        let r = self.add_expr()?;
+        Ok(Expr::Bin(op, Box::new(e), Box::new(r)))
+    }
+
+    fn add_expr(&mut self) -> PResult<Expr> {
+        let mut e = self.mul_expr()?;
+        loop {
+            let op = match self.peek() {
+                Tok::Plus => BinOp::Add,
+                Tok::Minus => BinOp::Sub,
+                _ => break,
+            };
+            self.bump();
+            let r = self.mul_expr()?;
+            e = Expr::Bin(op, Box::new(e), Box::new(r));
+        }
+        Ok(e)
+    }
+
+    fn mul_expr(&mut self) -> PResult<Expr> {
+        let mut e = self.unary_expr()?;
+        loop {
+            let op = match self.peek() {
+                Tok::Star => BinOp::Mul,
+                Tok::Slash => BinOp::Div,
+                Tok::Percent => BinOp::Mod,
+                _ => break,
+            };
+            self.bump();
+            let r = self.unary_expr()?;
+            e = Expr::Bin(op, Box::new(e), Box::new(r));
+        }
+        Ok(e)
+    }
+
+    fn unary_expr(&mut self) -> PResult<Expr> {
+        match self.peek() {
+            Tok::Minus => {
+                self.bump();
+                Ok(Expr::Unary(UnOp::Neg, Box::new(self.unary_expr()?)))
+            }
+            Tok::Bang => {
+                self.bump();
+                Ok(Expr::Unary(UnOp::Not, Box::new(self.unary_expr()?)))
+            }
+            _ => self.postfix_expr(),
+        }
+    }
+
+    fn postfix_expr(&mut self) -> PResult<Expr> {
+        let mut e = self.primary_expr()?;
+        loop {
+            match self.peek() {
+                Tok::LBracket => {
+                    self.bump();
+                    let mut idx = vec![];
+                    loop {
+                        idx.push(self.expr()?);
+                        if !self.eat(Tok::Comma) {
+                            break;
+                        }
+                    }
+                    self.expect(Tok::RBracket)?;
+                    e = Expr::Index(Box::new(e), idx);
+                }
+                Tok::LParen => {
+                    // Call only on plain identifiers (builtins).
+                    let name = match &e {
+                        Expr::Ident(s) => s.clone(),
+                        _ => return self.err("only identifiers are callable"),
+                    };
+                    self.bump();
+                    let mut args = vec![];
+                    if *self.peek() != Tok::RParen {
+                        loop {
+                            args.push(self.expr()?);
+                            if !self.eat(Tok::Comma) {
+                                break;
+                            }
+                        }
+                    }
+                    self.expect(Tok::RParen)?;
+                    e = Expr::Call(name, args);
+                }
+                _ => break,
+            }
+        }
+        Ok(e)
+    }
+
+    fn primary_expr(&mut self) -> PResult<Expr> {
+        match self.peek().clone() {
+            Tok::Int(v) => {
+                self.bump();
+                Ok(Expr::Int(v))
+            }
+            Tok::Float(v) => {
+                self.bump();
+                Ok(Expr::Float(v))
+            }
+            Tok::Ident(s) => {
+                self.bump();
+                Ok(Expr::Ident(s))
+            }
+            Tok::LParen => {
+                self.bump();
+                let e = self.expr()?;
+                self.expect(Tok::RParen)?;
+                Ok(e)
+            }
+            other => self.err(format!("expected expression, found {other}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimal_kernel() {
+        let k = parse_kernel("kernel @empty() { }").unwrap();
+        assert_eq!(k.name, "empty");
+        assert!(k.items.is_empty());
+    }
+
+    #[test]
+    fn meta_params_and_args() {
+        let k = parse_kernel(
+            "kernel @r<K, N>(stream<f32>[K] readonly a_in, stream<f32>[1] writeonly out) { }",
+        )
+        .unwrap();
+        assert_eq!(k.meta_params, vec!["K", "N"]);
+        assert_eq!(k.args.len(), 2);
+        match &k.args[0] {
+            KernelArg::Stream { dir, name, .. } => {
+                assert_eq!(*dir, ArgDir::ReadOnly);
+                assert_eq!(name, "a_in");
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn place_block() {
+        let k = parse_kernel(
+            "kernel @p<K>() { place i16 i, i16 j in [0:K, 0] { f32[K] a f32 s } }",
+        )
+        .unwrap();
+        match &k.items[0] {
+            Item::Place { header, decls } => {
+                assert_eq!(header.vars.len(), 2);
+                assert_eq!(header.subgrid.len(), 2);
+                assert_eq!(decls.len(), 2);
+                assert_eq!(decls[0].name, "a");
+                assert_eq!(decls[0].dims.len(), 1);
+                assert!(decls[1].dims.is_empty());
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn dataflow_and_multicast() {
+        let k = parse_kernel(
+            "kernel @d<K>() { phase { dataflow i32 i, i32 j in [0:K, 0] {
+                stream<f32> red = relative_stream(-1, 0)
+                stream<f32> bc = relative_stream([1:K], 0)
+            } } }",
+        )
+        .unwrap();
+        match &k.items[0] {
+            Item::Phase { items, .. } => match &items[0] {
+                Item::Dataflow { decls, .. } => {
+                    assert_eq!(decls.len(), 2);
+                    assert!(matches!(decls[0].dx, StreamOffset::Scalar(_)));
+                    assert!(matches!(decls[1].dx, StreamOffset::Range(_, _)));
+                }
+                _ => panic!(),
+            },
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn ternary_stream_select() {
+        let k = parse_kernel(
+            "kernel @t<N>() { compute i32 i, i32 j in [N-1, 0] {
+                await send(a, red if (N-1) % 2 == 0 else blue)
+            } }",
+        )
+        .unwrap();
+        match &k.items[0] {
+            Item::Compute { body, .. } => match &body[0] {
+                Stmt::AwaitStmt { op, .. } => match op.as_ref() {
+                    Stmt::Send { stream, .. } => {
+                        assert!(matches!(stream, Expr::Cond { .. }));
+                    }
+                    _ => panic!(),
+                },
+                _ => panic!(),
+            },
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn foreach_forms() {
+        let k = parse_kernel(
+            "kernel @f<K>() { compute i32 i, i32 j in [0, 0] {
+                await foreach i32 k, f32 x in [0:K], receive(red) { a[k] = a[k] + x }
+                foreach f32 x in receive(blue) { s = s + x }
+            } }",
+        )
+        .unwrap();
+        match &k.items[0] {
+            Item::Compute { body, .. } => {
+                match &body[0] {
+                    Stmt::AwaitStmt { op, .. } => match op.as_ref() {
+                        Stmt::ForeachRecv { index, range, .. } => {
+                            assert!(index.is_some());
+                            assert!(range.is_some());
+                        }
+                        _ => panic!(),
+                    },
+                    _ => panic!(),
+                }
+                match &body[1] {
+                    Stmt::ForeachRecv { index, range, .. } => {
+                        assert!(index.is_none());
+                        assert!(range.is_none());
+                    }
+                    _ => panic!(),
+                }
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn completion_and_await() {
+        let k = parse_kernel(
+            "kernel @c() { compute i32 i, i32 j in [0, 0] {
+                completion c = send(a, s)
+                await c
+                awaitall
+            } }",
+        )
+        .unwrap();
+        match &k.items[0] {
+            Item::Compute { body, .. } => {
+                assert!(matches!(body[0], Stmt::CompletionDecl { .. }));
+                assert!(matches!(body[1], Stmt::AwaitName { .. }));
+                assert!(matches!(body[2], Stmt::AwaitAll { .. }));
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn meta_for_unroll_syntax() {
+        let k = parse_kernel(
+            "kernel @tree<L>() { for i32 l in [0:L] { phase {
+                compute i32 i, i32 j in [0:4, 0] { awaitall }
+            } } }",
+        )
+        .unwrap();
+        assert!(matches!(k.items[0], Item::MetaFor { .. }));
+    }
+
+    #[test]
+    fn map_and_for_and_if() {
+        let k = parse_kernel(
+            "kernel @m<K>() { compute i32 i, i32 j in [0, 0] {
+                map i32 k in [0:K] { out[k] = 2.0 * a[k] }
+                for i64 t in [0:10:2] { s = s + 1 }
+                if i % 2 == 0 { s = 0 } else { s = 1 }
+            } }",
+        )
+        .unwrap();
+        match &k.items[0] {
+            Item::Compute { body, .. } => {
+                assert!(matches!(body[0], Stmt::Map { .. }));
+                assert!(matches!(body[1], Stmt::For { .. }));
+                assert!(matches!(body[2], Stmt::If { .. }));
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn listing1_full() {
+        // Paper Listing 1 (pipelined chain reduce), normalized syntax.
+        let src = r#"
+kernel @chain_reduce<K, N>(stream<f32>[N] readonly a_in, stream<f32>[1] writeonly out) {
+  place i16 i, i16 j in [0:N, 0] {
+    f32[K] a
+  }
+  // Phase 1: Read argument stream
+  phase {
+    compute i32 i, i32 j in [0:N, 0] {
+      await receive(a, a_in[i])
+    }
+  }
+  // Phase 2: Perform reduction
+  phase {
+    dataflow i32 i, i32 j in [0:N, 0] {
+      stream<f32> red = relative_stream(-1, 0)
+      stream<f32> blue = relative_stream(-1, 0)
+    }
+    // East corner
+    compute i32 i, i32 j in [N-1, 0] {
+      await send(a, red if (N-1) % 2 == 0 else blue)
+    }
+    // Odd PEs
+    compute i32 i, i32 j in [1:N-1:2, 0] {
+      await foreach i32 k, f32 x in [0:K], receive(red) {
+        a[k] = a[k] + x
+        await send(a[k], blue)
+      }
+    }
+    // Even PEs
+    compute i32 i, i32 j in [2:N-1:2, 0] {
+      await foreach i32 k, f32 x in [0:K], receive(blue) {
+        a[k] = a[k] + x
+        await send(a[k], red)
+      }
+    }
+    // West corner (root)
+    compute i32 i, i32 j in [0, 0] {
+      await foreach i32 k, f32 x in [0:K], receive(blue) {
+        a[k] = a[k] + x
+      }
+      await send(a, out[0])
+    }
+  }
+}
+"#;
+        let k = parse_kernel(src).unwrap();
+        assert_eq!(k.name, "chain_reduce");
+        assert_eq!(k.items.len(), 3); // place + 2 phases
+    }
+
+    #[test]
+    fn error_reporting() {
+        let err = parse_kernel("kernel @x() { place }").unwrap_err();
+        assert!(err.msg.contains("expected type"));
+        assert_eq!(err.span.line, 1);
+    }
+}

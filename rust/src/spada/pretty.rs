@@ -1,0 +1,331 @@
+//! Pretty-printer for SpaDA ASTs.
+//!
+//! Used for the Table II LoC accounting (SpaDA source lines are counted
+//! on the canonical pretty-printed form) and for debugging lowering.
+
+use super::ast::*;
+
+pub fn print_kernel(k: &Kernel) -> String {
+    let mut p = Printer::default();
+    p.kernel(k);
+    p.out
+}
+
+/// Count non-blank lines of the canonical form (SpaDA LoC metric).
+pub fn count_loc(k: &Kernel) -> usize {
+    print_kernel(k).lines().filter(|l| !l.trim().is_empty()).count()
+}
+
+#[derive(Default)]
+struct Printer {
+    out: String,
+    indent: usize,
+}
+
+impl Printer {
+    fn line(&mut self, s: &str) {
+        for _ in 0..self.indent {
+            self.out.push_str("  ");
+        }
+        self.out.push_str(s);
+        self.out.push('\n');
+    }
+
+    fn kernel(&mut self, k: &Kernel) {
+        let meta = if k.meta_params.is_empty() {
+            String::new()
+        } else {
+            format!("<{}>", k.meta_params.join(", "))
+        };
+        let args: Vec<String> = k.args.iter().map(arg_str).collect();
+        self.line(&format!("kernel @{}{}({}) {{", k.name, meta, args.join(", ")));
+        self.indent += 1;
+        for item in &k.items {
+            self.item(item);
+        }
+        self.indent -= 1;
+        self.line("}");
+    }
+
+    fn item(&mut self, item: &Item) {
+        match item {
+            Item::Place { header, decls } => {
+                self.line(&format!("place {} {{", header_str(header)));
+                self.indent += 1;
+                for d in decls {
+                    let dims = if d.dims.is_empty() {
+                        String::new()
+                    } else {
+                        format!("[{}]", exprs_str(&d.dims))
+                    };
+                    self.line(&format!("{}{} {}", d.ty.name(), dims, d.name));
+                }
+                self.indent -= 1;
+                self.line("}");
+            }
+            Item::Dataflow { header, decls } => {
+                self.line(&format!("dataflow {} {{", header_str(header)));
+                self.indent += 1;
+                for d in decls {
+                    self.line(&format!(
+                        "stream<{}> {} = relative_stream({}, {})",
+                        d.elem_ty.name(),
+                        d.name,
+                        offset_str(&d.dx),
+                        offset_str(&d.dy)
+                    ));
+                }
+                self.indent -= 1;
+                self.line("}");
+            }
+            Item::Compute { header, body } => {
+                self.line(&format!("compute {} {{", header_str(header)));
+                self.indent += 1;
+                for s in body {
+                    self.stmt(s);
+                }
+                self.indent -= 1;
+                self.line("}");
+            }
+            Item::Phase { items, .. } => {
+                self.line("phase {");
+                self.indent += 1;
+                for i in items {
+                    self.item(i);
+                }
+                self.indent -= 1;
+                self.line("}");
+            }
+            Item::MetaFor { var, range, body, .. } => {
+                self.line(&format!(
+                    "for {} {} in [{}] {{",
+                    var.0.name(),
+                    var.1,
+                    range_str(range)
+                ));
+                self.indent += 1;
+                for i in body {
+                    self.item(i);
+                }
+                self.indent -= 1;
+                self.line("}");
+            }
+        }
+    }
+
+    fn stmt(&mut self, s: &Stmt) {
+        match s {
+            Stmt::Send { data, stream, .. } => {
+                self.line(&format!("send({}, {})", expr_str(data), expr_str(stream)))
+            }
+            Stmt::Receive { dst, stream, .. } => {
+                self.line(&format!("receive({}, {})", expr_str(dst), expr_str(stream)))
+            }
+            Stmt::ForeachRecv { index, elem, range, stream, body, .. } => {
+                let vars = match index {
+                    Some((t, n)) => format!("{} {}, {} {}", t.name(), n, elem.0.name(), elem.1),
+                    None => format!("{} {}", elem.0.name(), elem.1),
+                };
+                let src = match range {
+                    Some(r) => format!("[{}], receive({})", range_str(r), expr_str(stream)),
+                    None => format!("receive({})", expr_str(stream)),
+                };
+                self.line(&format!("foreach {vars} in {src} {{"));
+                self.indent += 1;
+                for st in body {
+                    self.stmt(st);
+                }
+                self.indent -= 1;
+                self.line("}");
+            }
+            Stmt::Map { vars, ranges, body, .. } => {
+                let vs: Vec<String> =
+                    vars.iter().map(|(t, n)| format!("{} {}", t.name(), n)).collect();
+                let rs: Vec<String> = ranges.iter().map(range_str).collect();
+                self.line(&format!("map {} in [{}] {{", vs.join(", "), rs.join(", ")));
+                self.indent += 1;
+                for st in body {
+                    self.stmt(st);
+                }
+                self.indent -= 1;
+                self.line("}");
+            }
+            Stmt::For { var, range, body, .. } => {
+                self.line(&format!(
+                    "for {} {} in [{}] {{",
+                    var.0.name(),
+                    var.1,
+                    range_str(range)
+                ));
+                self.indent += 1;
+                for st in body {
+                    self.stmt(st);
+                }
+                self.indent -= 1;
+                self.line("}");
+            }
+            Stmt::Async { body, .. } => {
+                self.line("async {");
+                self.indent += 1;
+                for st in body {
+                    self.stmt(st);
+                }
+                self.indent -= 1;
+                self.line("}");
+            }
+            Stmt::CompletionDecl { name, op, .. } => {
+                self.line(&format!("completion {name} ="));
+                self.indent += 1;
+                self.stmt(op);
+                self.indent -= 1;
+            }
+            Stmt::AwaitStmt { op, .. } => {
+                // Inline `await` prefix onto the op's first line.
+                let mut sub = Printer { out: String::new(), indent: 0 };
+                sub.stmt(op);
+                let mut lines = sub.out.lines();
+                if let Some(first) = lines.next() {
+                    self.line(&format!("await {first}"));
+                    for l in lines {
+                        self.line(l);
+                    }
+                }
+            }
+            Stmt::AwaitName { name, .. } => self.line(&format!("await {name}")),
+            Stmt::AwaitAll { .. } => self.line("awaitall"),
+            Stmt::Assign { lhs, rhs, .. } => {
+                self.line(&format!("{} = {}", expr_str(lhs), expr_str(rhs)))
+            }
+            Stmt::Let { ty, name, init, .. } => {
+                self.line(&format!("{} {} = {}", ty.name(), name, expr_str(init)))
+            }
+            Stmt::If { cond, then_body, else_body, .. } => {
+                self.line(&format!("if {} {{", expr_str(cond)));
+                self.indent += 1;
+                for st in then_body {
+                    self.stmt(st);
+                }
+                self.indent -= 1;
+                if else_body.is_empty() {
+                    self.line("}");
+                } else {
+                    self.line("} else {");
+                    self.indent += 1;
+                    for st in else_body {
+                        self.stmt(st);
+                    }
+                    self.indent -= 1;
+                    self.line("}");
+                }
+            }
+        }
+    }
+}
+
+fn arg_str(a: &KernelArg) -> String {
+    match a {
+        KernelArg::Stream { elem_ty, extents, dir, name } => {
+            let ext = if extents.is_empty() {
+                String::new()
+            } else {
+                format!("[{}]", exprs_str(extents))
+            };
+            let d = match dir {
+                ArgDir::ReadOnly => "readonly",
+                ArgDir::WriteOnly => "writeonly",
+            };
+            format!("stream<{}>{} {} {}", elem_ty.name(), ext, d, name)
+        }
+        KernelArg::Scalar { ty, name } => format!("const {} {}", ty.name(), name),
+    }
+}
+
+fn header_str(h: &BlockHeader) -> String {
+    let vars: Vec<String> = h.vars.iter().map(|(t, n)| format!("{} {}", t.name(), n)).collect();
+    let ranges: Vec<String> = h.subgrid.iter().map(range_str).collect();
+    format!("{} in [{}]", vars.join(", "), ranges.join(", "))
+}
+
+fn range_str(r: &RangeExpr) -> String {
+    match (&r.stop, &r.step) {
+        (None, _) => expr_str(&r.start),
+        (Some(stop), None) => format!("{}:{}", expr_str(&r.start), expr_str(stop)),
+        (Some(stop), Some(step)) => {
+            format!("{}:{}:{}", expr_str(&r.start), expr_str(stop), expr_str(step))
+        }
+    }
+}
+
+fn offset_str(o: &StreamOffset) -> String {
+    match o {
+        StreamOffset::Scalar(e) => expr_str(e),
+        StreamOffset::Range(a, b) => format!("[{}:{}]", expr_str(a), expr_str(b)),
+    }
+}
+
+fn exprs_str(es: &[Expr]) -> String {
+    es.iter().map(expr_str).collect::<Vec<_>>().join(", ")
+}
+
+pub fn expr_str(e: &Expr) -> String {
+    match e {
+        Expr::Int(v) => v.to_string(),
+        Expr::Float(v) => {
+            if v.fract() == 0.0 {
+                format!("{v:.1}")
+            } else {
+                v.to_string()
+            }
+        }
+        Expr::Ident(s) => s.clone(),
+        Expr::Index(b, idx) => format!("{}[{}]", expr_str(b), exprs_str(idx)),
+        Expr::Unary(UnOp::Neg, a) => format!("-{}", expr_str(a)),
+        Expr::Unary(UnOp::Not, a) => format!("!{}", expr_str(a)),
+        Expr::Bin(op, a, b) => {
+            let o = match op {
+                BinOp::Add => "+",
+                BinOp::Sub => "-",
+                BinOp::Mul => "*",
+                BinOp::Div => "/",
+                BinOp::Mod => "%",
+                BinOp::Eq => "==",
+                BinOp::Ne => "!=",
+                BinOp::Lt => "<",
+                BinOp::Le => "<=",
+                BinOp::Gt => ">",
+                BinOp::Ge => ">=",
+                BinOp::And => "&&",
+                BinOp::Or => "||",
+            };
+            format!("({} {} {})", expr_str(a), o, expr_str(b))
+        }
+        Expr::Cond { then, cond, els } => {
+            format!("{} if {} else {}", expr_str(then), expr_str(cond), expr_str(els))
+        }
+        Expr::Call(name, args) => format!("{}({})", name, exprs_str(args)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spada::parse_kernel;
+
+    #[test]
+    fn roundtrip_parses() {
+        let src = "kernel @k<K>(stream<f32>[K] readonly a_in) {
+            place i16 i, i16 j in [0:K, 0] { f32[K] a }
+            phase { compute i32 i, i32 j in [0:K, 0] { await receive(a, a_in[i]) } }
+        }";
+        let k = parse_kernel(src).unwrap();
+        let printed = print_kernel(&k);
+        let k2 = parse_kernel(&printed).unwrap();
+        assert_eq!(print_kernel(&k2), printed);
+    }
+
+    #[test]
+    fn loc_counts_nonblank() {
+        let k = parse_kernel("kernel @e() { }").unwrap();
+        assert_eq!(count_loc(&k), 2);
+    }
+}

@@ -1,0 +1,150 @@
+//! SpaDA tokens.
+
+use std::fmt;
+
+/// Source location (byte offset + line/col for diagnostics).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub struct Span {
+    pub line: u32,
+    pub col: u32,
+}
+
+impl fmt::Display for Span {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}", self.line, self.col)
+    }
+}
+
+/// Token kinds.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tok {
+    // Literals / identifiers
+    Ident(String),
+    Int(i64),
+    Float(f64),
+
+    // Keywords
+    Kernel,
+    Place,
+    Dataflow,
+    Compute,
+    Phase,
+    For,
+    Foreach,
+    Map,
+    Async,
+    Await,
+    Awaitall,
+    Send,
+    Receive,
+    Stream,
+    RelativeStream,
+    Completion,
+    If,
+    Else,
+    In,
+    Readonly,
+    Writeonly,
+    Const,
+
+    // Types
+    TyF16,
+    TyF32,
+    TyI16,
+    TyI32,
+    TyI64,
+    TyU16,
+    TyU32,
+
+    // Punctuation
+    At,        // @
+    LParen,    // (
+    RParen,    // )
+    LBracket,  // [
+    RBracket,  // ]
+    LBrace,    // {
+    RBrace,    // }
+    Lt,        // <
+    Gt,        // >
+    Le,        // <=
+    Ge,        // >=
+    EqEq,      // ==
+    Ne,        // !=
+    Assign,    // =
+    Plus,      // +
+    Minus,     // -
+    Star,      // *
+    Slash,     // /
+    Percent,   // %
+    Comma,     // ,
+    Colon,     // :
+    Semicolon, // ;
+    AndAnd,    // &&
+    OrOr,      // ||
+    Bang,      // !
+
+    Eof,
+}
+
+impl Tok {
+    /// Keyword lookup for identifiers.
+    pub fn keyword(s: &str) -> Option<Tok> {
+        Some(match s {
+            "kernel" => Tok::Kernel,
+            "place" => Tok::Place,
+            "dataflow" => Tok::Dataflow,
+            "compute" => Tok::Compute,
+            "phase" => Tok::Phase,
+            "for" => Tok::For,
+            "foreach" => Tok::Foreach,
+            "map" => Tok::Map,
+            "async" => Tok::Async,
+            "await" => Tok::Await,
+            "awaitall" => Tok::Awaitall,
+            "send" => Tok::Send,
+            "receive" => Tok::Receive,
+            "stream" => Tok::Stream,
+            "relative_stream" => Tok::RelativeStream,
+            "completion" => Tok::Completion,
+            "if" => Tok::If,
+            "else" => Tok::Else,
+            "in" => Tok::In,
+            "readonly" => Tok::Readonly,
+            "writeonly" => Tok::Writeonly,
+            "const" => Tok::Const,
+            "f16" => Tok::TyF16,
+            "f32" => Tok::TyF32,
+            "i16" => Tok::TyI16,
+            "i32" => Tok::TyI32,
+            "i64" => Tok::TyI64,
+            "u16" => Tok::TyU16,
+            "u32" => Tok::TyU32,
+            _ => return None,
+        })
+    }
+
+    pub fn is_type(&self) -> bool {
+        matches!(
+            self,
+            Tok::TyF16 | Tok::TyF32 | Tok::TyI16 | Tok::TyI32 | Tok::TyI64 | Tok::TyU16 | Tok::TyU32
+        )
+    }
+}
+
+impl fmt::Display for Tok {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Tok::Ident(s) => write!(f, "{s}"),
+            Tok::Int(v) => write!(f, "{v}"),
+            Tok::Float(v) => write!(f, "{v}"),
+            other => write!(f, "{}", format!("{other:?}").to_lowercase()),
+        }
+    }
+}
+
+/// A token with its source span.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Token {
+    pub tok: Tok,
+    pub span: Span,
+}

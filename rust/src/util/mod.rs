@@ -1,0 +1,12 @@
+//! Grid/range utilities shared by the compiler and simulator.
+//!
+//! SpaDA blocks are defined over *subgrids*: strided half-open ranges per
+//! dimension (`[0:I:2, 1:J-1]`). The canonicalization pass computes PE
+//! equivalence classes by intersecting and splitting these rectangles, so
+//! the strided-range algebra here is load-bearing for the whole pipeline.
+
+pub mod range;
+pub mod rng;
+
+pub use range::{Range1, Subgrid};
+pub use rng::SplitMix64;

@@ -1,0 +1,366 @@
+//! Strided half-open integer ranges and 2-D subgrids.
+
+use std::fmt;
+
+/// A strided half-open range `[start : stop : step]`, `step >= 1`.
+///
+/// Membership: `x ∈ r ⇔ start <= x < stop ∧ (x - start) % step == 0`.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Range1 {
+    pub start: i64,
+    pub stop: i64,
+    pub step: i64,
+}
+
+impl fmt::Debug for Range1 {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.step == 1 {
+            write!(f, "[{}:{}]", self.start, self.stop)
+        } else {
+            write!(f, "[{}:{}:{}]", self.start, self.stop, self.step)
+        }
+    }
+}
+
+impl Range1 {
+    pub fn new(start: i64, stop: i64, step: i64) -> Self {
+        assert!(step >= 1, "range step must be >= 1, got {step}");
+        Range1 { start, stop, step }
+    }
+
+    /// A single point `[v : v+1]`.
+    pub fn point(v: i64) -> Self {
+        Range1::new(v, v + 1, 1)
+    }
+
+    /// Dense range `[start : stop]`.
+    pub fn dense(start: i64, stop: i64) -> Self {
+        Range1::new(start, stop, 1)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.start >= self.stop
+    }
+
+    /// Number of members.
+    pub fn len(&self) -> i64 {
+        if self.is_empty() {
+            0
+        } else {
+            (self.stop - self.start + self.step - 1) / self.step
+        }
+    }
+
+    pub fn contains(&self, x: i64) -> bool {
+        x >= self.start && x < self.stop && (x - self.start) % self.step == 0
+    }
+
+    /// Iterate members.
+    pub fn iter(&self) -> impl Iterator<Item = i64> + '_ {
+        (0..self.len()).map(move |k| self.start + k * self.step)
+    }
+
+    /// The `k`-th member.
+    pub fn at(&self, k: i64) -> i64 {
+        debug_assert!(k >= 0 && k < self.len());
+        self.start + k * self.step
+    }
+
+    /// Index of member `x` (inverse of [`Range1::at`]), if present.
+    pub fn index_of(&self, x: i64) -> Option<i64> {
+        if self.contains(x) {
+            Some((x - self.start) / self.step)
+        } else {
+            None
+        }
+    }
+
+    /// Last member, if non-empty.
+    pub fn last(&self) -> Option<i64> {
+        if self.is_empty() {
+            None
+        } else {
+            Some(self.at(self.len() - 1))
+        }
+    }
+
+    /// Canonical form: `stop` trimmed to `last + 1`; empty ranges map to
+    /// `[0:0:1]`. Canonical ranges compare equal iff they have the same
+    /// member set (for step-1 and equal-step ranges).
+    pub fn canonical(&self) -> Self {
+        match self.last() {
+            None => Range1::new(0, 0, 1),
+            Some(l) => {
+                let step = if self.len() == 1 { 1 } else { self.step };
+                Range1::new(self.start, l + 1, step)
+            }
+        }
+    }
+
+    /// Intersection of two strided ranges (CRT on the strides).
+    pub fn intersect(&self, other: &Range1) -> Range1 {
+        if self.is_empty() || other.is_empty() {
+            return Range1::new(0, 0, 1);
+        }
+        // Solve x ≡ self.start (mod self.step), x ≡ other.start (mod other.step).
+        let Some((x0, lcm)) = crt2(self.start, self.step, other.start, other.step) else {
+            return Range1::new(0, 0, 1);
+        };
+        // Smallest solution >= lo.
+        let lo = self.start.max(other.start);
+        let first = lo + (x0 - lo).rem_euclid(lcm);
+        let hi = self.stop.min(other.stop);
+        Range1::new(first, hi.max(first), lcm).canonical()
+    }
+
+    /// Split `self` by parity of members: (even-members, odd-members).
+    /// Each part is again a strided range.
+    pub fn split_parity(&self) -> (Range1, Range1) {
+        let empty = Range1::new(0, 0, 1);
+        if self.is_empty() {
+            return (empty, empty);
+        }
+        if self.step % 2 == 0 {
+            // All members share the parity of start.
+            if self.start % 2 == 0 {
+                (self.canonical(), empty)
+            } else {
+                (empty, self.canonical())
+            }
+        } else {
+            // Members alternate parity; same-parity members are 2*step apart.
+            let mk = |first: i64| -> Range1 {
+                if first < self.stop {
+                    Range1::new(first, self.stop, 2 * self.step).canonical()
+                } else {
+                    empty
+                }
+            };
+            let (first_even, first_odd) = if self.start % 2 == 0 {
+                (self.start, self.start + self.step)
+            } else {
+                (self.start + self.step, self.start)
+            };
+            (mk(first_even), mk(first_odd))
+        }
+    }
+
+    /// Remove `other` from `self`, returning up to 3 disjoint ranges that
+    /// cover `self \ other` exactly (only supported when both have step 1
+    /// or `other` fully covers a contiguous stretch).
+    pub fn subtract_dense(&self, other: &Range1) -> Vec<Range1> {
+        assert_eq!(self.step, 1);
+        assert_eq!(other.step, 1);
+        let mut out = vec![];
+        let lo = Range1::dense(self.start, self.stop.min(other.start));
+        let hi = Range1::dense(self.start.max(other.stop), self.stop);
+        if !lo.is_empty() {
+            out.push(lo);
+        }
+        if !hi.is_empty() {
+            out.push(hi);
+        }
+        out
+    }
+}
+
+/// Extended gcd: returns (g, x, y) with a*x + b*y = g.
+fn egcd(a: i64, b: i64) -> (i64, i64, i64) {
+    if b == 0 {
+        (a, 1, 0)
+    } else {
+        let (g, x, y) = egcd(b, a % b);
+        (g, y, x - (a / b) * y)
+    }
+}
+
+/// Chinese remainder for x ≡ r1 (mod m1), x ≡ r2 (mod m2).
+/// Returns Some((x0, lcm)) where x0 is one solution (all solutions are
+/// x0 + k·lcm), or None if the congruences are incompatible.
+fn crt2(r1: i64, m1: i64, r2: i64, m2: i64) -> Option<(i64, i64)> {
+    let (g, p, _q) = egcd(m1, m2);
+    if (r2 - r1) % g != 0 {
+        return None;
+    }
+    let lcm = m1 / g * m2;
+    // x0 = r1 + m1 * ((r2 - r1)/g * p mod (m2/g))
+    let m2g = m2 / g;
+    let t = mod_mul((r2 - r1) / g, p.rem_euclid(m2g), m2g);
+    let x0 = r1 + m1 * t;
+    Some((x0.rem_euclid(lcm), lcm))
+}
+
+fn mod_mul(a: i64, b: i64, m: i64) -> i64 {
+    if m == 0 {
+        return 0;
+    }
+    ((a as i128 * b as i128).rem_euclid(m as i128)) as i64
+}
+
+/// A 2-D strided rectangle of PE coordinates: `dims[0]` ranges over the
+/// first (x / west-east) coordinate, `dims[1]` over the second (y /
+/// north-south) coordinate.
+#[derive(Clone, PartialEq, Eq, Hash)]
+pub struct Subgrid {
+    pub dims: [Range1; 2],
+}
+
+impl fmt::Debug for Subgrid {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:?}x{:?}", self.dims[0], self.dims[1])
+    }
+}
+
+impl Subgrid {
+    pub fn new(x: Range1, y: Range1) -> Self {
+        Subgrid { dims: [x, y] }
+    }
+
+    /// Full dense rectangle `[0:w, 0:h]`.
+    pub fn rect(w: i64, h: i64) -> Self {
+        Subgrid::new(Range1::dense(0, w), Range1::dense(0, h))
+    }
+
+    pub fn point(x: i64, y: i64) -> Self {
+        Subgrid::new(Range1::point(x), Range1::point(y))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.dims[0].is_empty() || self.dims[1].is_empty()
+    }
+
+    pub fn len(&self) -> i64 {
+        self.dims[0].len() * self.dims[1].len()
+    }
+
+    pub fn contains(&self, x: i64, y: i64) -> bool {
+        self.dims[0].contains(x) && self.dims[1].contains(y)
+    }
+
+    pub fn intersect(&self, other: &Subgrid) -> Subgrid {
+        Subgrid::new(
+            self.dims[0].intersect(&other.dims[0]),
+            self.dims[1].intersect(&other.dims[1]),
+        )
+    }
+
+    /// Iterate all (x, y) members, x-major.
+    pub fn iter(&self) -> impl Iterator<Item = (i64, i64)> + '_ {
+        self.dims[0]
+            .iter()
+            .flat_map(move |x| self.dims[1].iter().map(move |y| (x, y)))
+    }
+
+    /// Checkerboard split along dimension `d` (0 = x, 1 = y):
+    /// (even-coordinate part, odd-coordinate part).
+    pub fn split_parity(&self, d: usize) -> (Subgrid, Subgrid) {
+        let (e, o) = self.dims[d].split_parity();
+        let mut ev = self.clone();
+        let mut od = self.clone();
+        ev.dims[d] = e;
+        od.dims[d] = o;
+        (ev, od)
+    }
+
+    pub fn canonical(&self) -> Subgrid {
+        Subgrid::new(self.dims[0].canonical(), self.dims[1].canonical())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn range_len_iter() {
+        let r = Range1::new(0, 10, 3);
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.iter().collect::<Vec<_>>(), vec![0, 3, 6, 9]);
+        assert_eq!(r.last(), Some(9));
+        assert!(r.contains(6));
+        assert!(!r.contains(7));
+        assert_eq!(r.index_of(6), Some(2));
+        assert_eq!(r.index_of(7), None);
+    }
+
+    #[test]
+    fn range_empty() {
+        let r = Range1::new(5, 5, 1);
+        assert!(r.is_empty());
+        assert_eq!(r.len(), 0);
+        assert_eq!(r.last(), None);
+        assert_eq!(r.canonical(), Range1::new(0, 0, 1));
+    }
+
+    #[test]
+    fn range_intersect_dense() {
+        let a = Range1::dense(0, 10);
+        let b = Range1::dense(5, 20);
+        let c = a.intersect(&b);
+        assert_eq!(c.iter().collect::<Vec<_>>(), (5..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn range_intersect_strided() {
+        let a = Range1::new(0, 20, 2); // evens
+        let b = Range1::new(1, 20, 3); // 1,4,7,10,13,16,19
+        let c = a.intersect(&b);
+        assert_eq!(c.iter().collect::<Vec<_>>(), vec![4, 10, 16]);
+    }
+
+    #[test]
+    fn range_intersect_disjoint_strides() {
+        let a = Range1::new(0, 20, 2);
+        let b = Range1::new(1, 20, 2);
+        assert!(a.intersect(&b).is_empty());
+    }
+
+    #[test]
+    fn split_parity_dense() {
+        let r = Range1::dense(1, 8); // 1..7
+        let (e, o) = r.split_parity();
+        assert_eq!(e.iter().collect::<Vec<_>>(), vec![2, 4, 6]);
+        assert_eq!(o.iter().collect::<Vec<_>>(), vec![1, 3, 5, 7]);
+    }
+
+    #[test]
+    fn split_parity_strided() {
+        let r = Range1::new(1, 12, 2); // 1,3,5,7,9,11 — all odd
+        let (e, o) = r.split_parity();
+        assert!(e.is_empty());
+        assert_eq!(o.iter().collect::<Vec<_>>(), vec![1, 3, 5, 7, 9, 11]);
+    }
+
+    #[test]
+    fn subgrid_iter_contains() {
+        let g = Subgrid::new(Range1::dense(0, 3), Range1::new(0, 4, 2));
+        assert_eq!(g.len(), 6);
+        assert!(g.contains(2, 2));
+        assert!(!g.contains(2, 1));
+        let pts: Vec<_> = g.iter().collect();
+        assert_eq!(pts.len(), 6);
+        assert_eq!(pts[0], (0, 0));
+    }
+
+    #[test]
+    fn subgrid_checkerboard() {
+        let g = Subgrid::rect(4, 4);
+        let (e, o) = g.split_parity(0);
+        assert_eq!(e.len() + o.len(), 16);
+        for (x, _) in e.iter() {
+            assert_eq!(x % 2, 0);
+        }
+        for (x, _) in o.iter() {
+            assert_eq!(x % 2, 1);
+        }
+    }
+
+    #[test]
+    fn subtract_dense() {
+        let a = Range1::dense(0, 10);
+        let b = Range1::dense(3, 6);
+        let parts = a.subtract_dense(&b);
+        let members: Vec<i64> = parts.iter().flat_map(|r| r.iter().collect::<Vec<_>>()).collect();
+        assert_eq!(members, vec![0, 1, 2, 6, 7, 8, 9]);
+    }
+}

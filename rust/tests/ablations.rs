@@ -1,0 +1,93 @@
+//! Ablation semantics (Fig. 9 backing tests): every optimization knob
+//! must preserve correctness and move resources in the documented
+//! direction.
+
+use spada::harness::common::{run_reduce, run_stencil};
+use spada::passes::Options;
+
+#[test]
+fn copy_elim_reduces_memory_and_cycles() {
+    let k = 512;
+    let (with, _) = run_reduce("two_phase_reduce", 8, 4, k, &Options::default()).unwrap();
+    let (without, _) = run_reduce(
+        "two_phase_reduce",
+        8,
+        4,
+        k,
+        &Options { copy_elim: false, ..Options::default() },
+    )
+    .unwrap();
+    assert!(
+        without.stats.mem_bytes_max > with.stats.mem_bytes_max,
+        "mem: {} vs {}",
+        with.stats.mem_bytes_max,
+        without.stats.mem_bytes_max
+    );
+    assert!(
+        without.report.cycles > with.report.cycles,
+        "cycles: {} vs {}",
+        with.report.cycles,
+        without.report.cycles
+    );
+}
+
+#[test]
+fn recycling_reduces_task_ids() {
+    let (with, _) = run_reduce("tree_reduce", 16, 16, 64, &Options::default()).unwrap();
+    let (without, _) = run_reduce(
+        "tree_reduce",
+        16,
+        16,
+        64,
+        &Options { recycling: false, ..Options::default() },
+    )
+    .unwrap();
+    assert!(
+        without.stats.hw_task_ids > with.stats.hw_task_ids,
+        "task IDs: {} vs {}",
+        with.stats.hw_task_ids,
+        without.stats.hw_task_ids
+    );
+}
+
+#[test]
+fn fusion_reduces_logical_tasks() {
+    let r_with = run_stencil("laplacian", 8, 8, 8, &Options::default()).unwrap();
+    let r_without = run_stencil(
+        "laplacian",
+        8,
+        8,
+        8,
+        &Options { fusion: false, ..Options::default() },
+    )
+    .unwrap();
+    assert!(
+        r_without.run.stats.logical_tasks > r_with.run.stats.logical_tasks,
+        "logical tasks: {} vs {}",
+        r_with.run.stats.logical_tasks,
+        r_without.run.stats.logical_tasks
+    );
+    // Unfused runs must still be correct (same output as fused).
+    assert_eq!(r_with.outputs[0].1.len(), r_without.outputs[0].1.len());
+    for (a, b) in r_with.outputs[0].1.iter().zip(&r_without.outputs[0].1) {
+        assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+    }
+}
+
+/// The paper's scaling claim: tree reduce at a scale where per-level
+/// tasks exceed the hardware IDs cannot compile without recycling, but
+/// compiles with it.
+#[test]
+fn tree_reduce_needs_recycling_at_scale() {
+    let with = run_reduce("tree_reduce", 64, 64, 16, &Options::default());
+    assert!(with.is_ok(), "{:?}", with.err());
+    let without = run_reduce(
+        "tree_reduce",
+        64,
+        64,
+        16,
+        &Options { recycling: false, fusion: false, copy_elim: true },
+    );
+    let err = without.err().expect("expected OOR").to_string();
+    assert!(err.contains("OOR"), "{err}");
+}

@@ -1,0 +1,233 @@
+//! End-to-end integration: SpaDA source → compile → simulate → verify
+//! numerics for the communication-collective kernels (paper §VI-B).
+
+use spada::kernels;
+use spada::machine::{MachineConfig, Simulator};
+use spada::passes::Options;
+use spada::util::SplitMix64;
+
+fn rand_vec(seed: u64, n: usize) -> Vec<f32> {
+    let mut rng = SplitMix64::new(seed);
+    (0..n).map(|_| rng.next_f32()).collect()
+}
+
+/// Elementwise sum of per-PE vectors.
+fn expected_sum(data: &[f32], k: usize) -> Vec<f32> {
+    let mut out = vec![0f32; k];
+    for chunk in data.chunks(k) {
+        for (o, v) in out.iter_mut().zip(chunk) {
+            *o += v;
+        }
+    }
+    out
+}
+
+fn assert_close(got: &[f32], want: &[f32], tol: f32, what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!(
+            (g - w).abs() <= tol * (1.0 + w.abs()),
+            "{what}[{i}]: got {g}, want {w}"
+        );
+    }
+}
+
+#[test]
+fn chain_reduce_e2e() {
+    let (k, n) = (32usize, 8i64);
+    let cfg = MachineConfig::with_grid(n, 1);
+    let (prog, stats, _loc) =
+        kernels::compile("chain_reduce", &[("K", k as i64), ("N", n)], &cfg, &Options::default())
+            .unwrap();
+    assert!(stats.colors_used >= 2, "chain needs red+blue: {stats:?}");
+    let mut sim = Simulator::new(cfg, prog).unwrap();
+    let data = rand_vec(1, k * n as usize);
+    sim.set_input("a_in", &data).unwrap();
+    let report = sim.run().unwrap();
+    let out = sim.get_output("out").unwrap();
+    assert_close(&out, &expected_sum(&data, k), 1e-5, "chain_reduce");
+    // Pipelined: makespan ~ O(K + N), far below the serialized O(K·N).
+    assert!(
+        report.cycles < (k as u64) * (n as u64),
+        "chain reduce not pipelined: {} cycles",
+        report.cycles
+    );
+}
+
+#[test]
+fn chain_reduce_larger() {
+    let (k, n) = (256usize, 17i64); // odd PE count exercises both corners
+    let cfg = MachineConfig::with_grid(n, 1);
+    let (prog, _, _) =
+        kernels::compile("chain_reduce", &[("K", k as i64), ("N", n)], &cfg, &Options::default())
+            .unwrap();
+    let mut sim = Simulator::new(cfg, prog).unwrap();
+    let data = rand_vec(2, k * n as usize);
+    sim.set_input("a_in", &data).unwrap();
+    sim.run().unwrap();
+    let out = sim.get_output("out").unwrap();
+    assert_close(&out, &expected_sum(&data, k), 1e-4, "chain_reduce_17");
+}
+
+#[test]
+fn broadcast_e2e() {
+    let (k, n) = (64usize, 8i64);
+    let cfg = MachineConfig::with_grid(n, 1);
+    let (prog, _, _) =
+        kernels::compile("broadcast", &[("K", k as i64), ("N", n)], &cfg, &Options::default())
+            .unwrap();
+    let mut sim = Simulator::new(cfg, prog).unwrap();
+    let data = rand_vec(3, k);
+    sim.set_input("a_in", &data).unwrap();
+    let report = sim.run().unwrap();
+    let out = sim.get_output("out").unwrap();
+    assert_eq!(out.len(), k * n as usize);
+    for p in 0..n as usize {
+        assert_close(&out[p * k..(p + 1) * k], &data, 1e-6, &format!("broadcast pe {p}"));
+    }
+    // One multicast flow, not N point-to-point flows.
+    assert_eq!(report.metrics.flows, 1, "broadcast must be a single multicast flow");
+}
+
+#[test]
+fn tree_reduce_e2e() {
+    let (k, nx, ny) = (16usize, 8i64, 4i64);
+    let cfg = MachineConfig::with_grid(nx, ny);
+    let (prog, stats, _) = kernels::compile(
+        "tree_reduce",
+        &[("K", k as i64), ("NX", nx), ("NY", ny)],
+        &cfg,
+        &Options::default(),
+    )
+    .unwrap();
+    // 2·log2 colors: log2(8) + log2(4) = 5.
+    assert_eq!(stats.colors_used, 5, "{stats:?}");
+    let mut sim = Simulator::new(cfg, prog).unwrap();
+    let data = rand_vec(4, k * (nx * ny) as usize);
+    sim.set_input("a_in", &data).unwrap();
+    sim.run().unwrap();
+    let out = sim.get_output("out").unwrap();
+    assert_close(&out, &expected_sum(&data, k), 1e-4, "tree_reduce");
+}
+
+#[test]
+fn two_phase_reduce_e2e() {
+    let (k, nx, ny) = (32usize, 8i64, 4i64);
+    let cfg = MachineConfig::with_grid(nx, ny);
+    let (prog, _, _) = kernels::compile(
+        "two_phase_reduce",
+        &[("K", k as i64), ("NX", nx), ("NY", ny)],
+        &cfg,
+        &Options::default(),
+    )
+    .unwrap();
+    let mut sim = Simulator::new(cfg, prog).unwrap();
+    let data = rand_vec(5, k * (nx * ny) as usize);
+    sim.set_input("a_in", &data).unwrap();
+    sim.run().unwrap();
+    let out = sim.get_output("out").unwrap();
+    assert_close(&out, &expected_sum(&data, k), 1e-4, "two_phase_reduce");
+}
+
+#[test]
+fn gemv_e2e() {
+    let (m, n, nx, ny) = (16i64, 12i64, 3i64, 4i64);
+    let (bm, bn) = ((m / ny) as usize, (n / nx) as usize);
+    let cfg = MachineConfig::with_grid(nx, ny);
+    let (prog, _, _) = kernels::compile(
+        "gemv",
+        &[("M", m), ("N", n), ("NX", nx), ("NY", ny)],
+        &cfg,
+        &Options::default(),
+    )
+    .unwrap();
+    let mut sim = Simulator::new(cfg, prog).unwrap();
+
+    // Dense A (row r, col c), distributed in column-major blocks:
+    // PE (i, j) holds rows [j·bm, (j+1)·bm) × cols [i·bn, (i+1)·bn),
+    // block element (r, c) at index r + c·bm, ports ordered i·NY + j.
+    let a_dense = rand_vec(6, (m * n) as usize);
+    let x = rand_vec(7, n as usize);
+    let y0 = rand_vec(8, m as usize);
+    let (alpha, beta) = (2.0f32, 0.5f32);
+
+    let mut a_blocks = vec![0f32; (m * n) as usize];
+    let mut off = 0usize;
+    for i in 0..nx {
+        for _j in 0..ny {
+            let j = _j;
+            for c in 0..bn {
+                for r in 0..bm {
+                    let gr = j as usize * bm + r;
+                    let gc = i as usize * bn + c;
+                    a_blocks[off + c * bm + r] = a_dense[gr * n as usize + gc];
+                }
+            }
+            off += bm * bn;
+        }
+    }
+    sim.set_input("a_blk", &a_blocks).unwrap();
+    sim.set_input("x_in", &x).unwrap();
+    sim.set_input("y_in", &y0).unwrap();
+    sim.set_input("alpha", &[alpha]).unwrap();
+    sim.set_input("beta", &[beta]).unwrap();
+    sim.run().unwrap();
+    let y = sim.get_output("y_out").unwrap();
+
+    let mut want = vec![0f32; m as usize];
+    for r in 0..m as usize {
+        let mut acc = 0f32;
+        for c in 0..n as usize {
+            acc += a_dense[r * n as usize + c] * x[c];
+        }
+        want[r] = alpha * acc + beta * y0[r];
+    }
+    assert_close(&y, &want, 1e-4, "gemv");
+}
+
+#[test]
+fn gemv_tree_e2e() {
+    // The tree-reduction GEMV variant must agree with the dense
+    // reference (grid must be a power of two for the tree levels).
+    let (n, g) = (32i64, 4i64);
+    let (run, y, want) = spada::harness::common::run_gemv_variant(
+        "gemv_tree",
+        n,
+        g,
+        &Options::default(),
+    )
+    .unwrap();
+    for (a, b) in y.iter().zip(&want) {
+        assert!((a - b).abs() <= 1e-4 * (1.0 + b.abs()), "{a} vs {b}");
+    }
+    // log2(4) = 2 row-reduction levels → more colors than the chain's 2.
+    assert!(run.stats.colors_used >= 3, "{:?}", run.stats);
+}
+
+/// Ablations must change resource usage but never correctness.
+#[test]
+fn chain_reduce_ablations_correct() {
+    let (k, n) = (16usize, 8i64);
+    let data = rand_vec(9, k * n as usize);
+    let want = expected_sum(&data, k);
+    let mut cycles = vec![];
+    for opts in [
+        Options::default(),
+        Options { fusion: false, ..Options::default() },
+        Options { copy_elim: false, ..Options::default() },
+        Options { recycling: false, ..Options::default() },
+        Options::none(),
+    ] {
+        let cfg = MachineConfig::with_grid(n, 1);
+        let (prog, _, _) =
+            kernels::compile("chain_reduce", &[("K", k as i64), ("N", n)], &cfg, &opts).unwrap();
+        let mut sim = Simulator::new(cfg, prog).unwrap();
+        sim.set_input("a_in", &data).unwrap();
+        let report = sim.run().unwrap();
+        let out = sim.get_output("out").unwrap();
+        assert_close(&out, &want, 1e-5, &format!("{opts:?}"));
+        cycles.push(report.cycles);
+    }
+    // Disabling all optimizations must not be faster than the default.
+    assert!(cycles[4] >= cycles[0], "{cycles:?}");
+}

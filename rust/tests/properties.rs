@@ -1,0 +1,300 @@
+//! Property-based tests over the compiler invariants (DESIGN.md §7),
+//! using the deterministic `ptest` helper (proptest is unavailable
+//! offline).
+
+use spada::csl;
+use spada::kernels;
+use spada::machine::{MachineConfig, Simulator};
+use spada::passes::{self, Options};
+use spada::ptest::run_prop;
+use spada::sem::{instantiate, Bindings};
+use spada::spada::parse_kernel;
+use spada::util::{Range1, SplitMix64, Subgrid};
+
+fn bindings(pairs: &[(&str, i64)]) -> Bindings {
+    pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+}
+
+// ---------------------------------------------------------------------
+// Strided-range algebra
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_range_intersection_is_exact() {
+    run_prop(
+        "range-intersection",
+        1,
+        500,
+        |r| {
+            let a = Range1::new(
+                r.below(20) as i64,
+                r.below(60) as i64,
+                1 + r.below(5) as i64,
+            );
+            let b = Range1::new(
+                r.below(20) as i64,
+                r.below(60) as i64,
+                1 + r.below(5) as i64,
+            );
+            (a, b)
+        },
+        |(a, b)| {
+            let c = a.intersect(b);
+            for x in -5..70 {
+                let in_both = a.contains(x) && b.contains(x);
+                if in_both != c.contains(x) {
+                    return Err(format!("x={x}: a∩b={in_both}, c={}", c.contains(x)));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_split_parity_partitions() {
+    run_prop(
+        "split-parity",
+        2,
+        500,
+        |r| Range1::new(r.below(30) as i64, r.below(90) as i64, 1 + r.below(4) as i64),
+        |a| {
+            let (e, o) = a.split_parity();
+            for x in -2..100 {
+                let want = a.contains(x);
+                let got = e.contains(x) || o.contains(x);
+                if want != got {
+                    return Err(format!("x={x}: member={want}, split={got}"));
+                }
+                if e.contains(x) && x % 2 != 0 {
+                    return Err(format!("odd {x} in even part"));
+                }
+                if o.contains(x) && x.rem_euclid(2) != 1 {
+                    return Err(format!("even {x} in odd part"));
+                }
+                if e.contains(x) && o.contains(x) {
+                    return Err(format!("{x} in both parts"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// Routing invariants
+// ---------------------------------------------------------------------
+
+/// Compile random instantiations of all library kernels and check the
+/// hard routing invariant: for a fixed color, no two route rules may
+/// overlap (one router holds exactly one configuration per color).
+#[test]
+fn prop_routes_conflict_free() {
+    run_prop(
+        "conflict-free-routing",
+        3,
+        40,
+        |r| {
+            let kind = r.below(4);
+            let k = 1 + r.below(64) as i64;
+            match kind {
+                0 => {
+                    let n = 3 + r.below(14) as i64;
+                    ("chain_reduce", vec![("K", k), ("N", n)], n, 1)
+                }
+                1 => {
+                    let n = 4 + r.below(13) as i64;
+                    ("broadcast", vec![("K", k), ("N", n)], n, 1)
+                }
+                2 => {
+                    let nx = 1i64 << (1 + r.below(4));
+                    let ny = 1i64 << (1 + r.below(3));
+                    ("tree_reduce", vec![("K", k), ("NX", nx), ("NY", ny)], nx, ny)
+                }
+                _ => {
+                    let nx = 3 + r.below(8) as i64;
+                    let ny = 3 + r.below(8) as i64;
+                    ("two_phase_reduce", vec![("K", k), ("NX", nx), ("NY", ny)], nx, ny)
+                }
+            }
+        },
+        |(name, binds, w, h)| {
+            let cfg = MachineConfig::with_grid(*w, *h);
+            let (prog, _, _) = kernels::compile(name, binds, &cfg, &Options::default())
+                .map_err(|e| e.to_string())?;
+            for i in 0..prog.routes.len() {
+                for j in (i + 1)..prog.routes.len() {
+                    let (a, b) = (&prog.routes[i], &prog.routes[j]);
+                    if a.color == b.color && !a.subgrid.intersect(&b.subgrid).is_empty() {
+                        return Err(format!(
+                            "{name}: color {} configured twice on {:?}",
+                            a.color,
+                            a.subgrid.intersect(&b.subgrid)
+                        ));
+                    }
+                }
+            }
+            // Hardware limits must hold (the simulator re-validates too).
+            let errs = prog.validate(&cfg);
+            if !errs.is_empty() {
+                return Err(errs.join("; "));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Checkerboarded pipelines: every stream variant's senders have uniform
+/// parity along the active dimension.
+#[test]
+fn prop_checkerboard_parity() {
+    run_prop(
+        "checkerboard-parity",
+        4,
+        60,
+        |r| (3 + r.below(20) as i64, 1 + r.below(32) as i64),
+        |(n, k)| {
+            let src = "kernel @p<K, N>() {
+                place i16 i, i16 j in [0:N, 0] { f32[K] a }
+                dataflow i32 i, i32 j in [0:N, 0] {
+                    stream<f32> s = relative_stream(-1, 0)
+                }
+                compute i32 i, i32 j in [1:N, 0] { await send(a, s) }
+                compute i32 i, i32 j in [0:N-1, 0] { await receive(a, s) }
+            }";
+            let kast = parse_kernel(src).map_err(|e| e.to_string())?;
+            let prog = instantiate(&kast, &bindings(&[("K", *k), ("N", *n)]))
+                .map_err(|e| e.to_string())?;
+            let res = passes::checkerboard(&prog).map_err(|e| e.to_string())?;
+            for s in &res.program.phases[0].streams {
+                let xs: Vec<i64> = s.subgrid.dims[0].iter().collect();
+                if let Some(first) = xs.first() {
+                    if !xs.iter().all(|x| (x - first) % 2 == 0) {
+                        return Err(format!("variant {} mixes parities: {:?}", s.name, xs));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// PE equivalence classes form an exact partition of the used PEs.
+#[test]
+fn prop_classes_partition() {
+    run_prop(
+        "classes-partition",
+        5,
+        40,
+        |r| {
+            let nx = 1i64 << (1 + r.below(4));
+            let ny = 1i64 << (1 + r.below(4));
+            (nx, ny, 1 + r.below(16) as i64)
+        },
+        |(nx, ny, k)| {
+            let kast = parse_kernel(kernels::TREE_REDUCE).map_err(|e| e.to_string())?;
+            let prog = instantiate(&kast, &bindings(&[("K", *k), ("NX", *nx), ("NY", *ny)]))
+                .map_err(|e| e.to_string())?;
+            let prog = passes::checkerboard(&prog).map_err(|e| e.to_string())?.program;
+            let classes = passes::equivalence_classes(&prog);
+            passes::classes::check_partition(&classes)?;
+            let total: i64 =
+                classes.iter().flat_map(|c| c.subgrids.iter()).map(Subgrid::len).sum();
+            if total != nx * ny {
+                return Err(format!("classes cover {total} PEs, grid has {}", nx * ny));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// End-to-end correctness under random sizes and option sets
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_reduce_correct_all_option_sets() {
+    run_prop(
+        "reduce-correct",
+        6,
+        25,
+        |r| {
+            let nx = (1i64 << (1 + r.below(3))).max(2);
+            let ny = (1i64 << (1 + r.below(3))).max(2);
+            let k = 1 + r.below(48) as i64;
+            let opts = Options {
+                fusion: r.below(2) == 0,
+                recycling: r.below(2) == 0,
+                copy_elim: r.below(2) == 0,
+            };
+            let kernel = if r.below(2) == 0 { "tree_reduce" } else { "two_phase_reduce" };
+            (kernel, nx, ny, k, opts, r.next_u64())
+        },
+        |(kernel, nx, ny, k, opts, seed)| {
+            let cfg = MachineConfig::with_grid(*nx, *ny);
+            let compiled =
+                kernels::compile(kernel, &[("K", *k), ("NX", *nx), ("NY", *ny)], &cfg, opts);
+            let (prog, _, _) = match compiled {
+                Ok(p) => p,
+                // Resource exhaustion is a legitimate outcome for
+                // pessimized option sets (the paper's OOR results) —
+                // only wrong numerics fail the property.
+                Err(e) if e.to_string().contains("OOR") || e.to_string().contains("OOM") => {
+                    return Ok(())
+                }
+                Err(e) => return Err(e.to_string()),
+            };
+            let mut sim = Simulator::new(cfg, prog).map_err(|e| e.to_string())?;
+            let mut rng = SplitMix64::new(*seed);
+            let data: Vec<f32> = (0..(k * nx * ny) as usize).map(|_| rng.next_f32()).collect();
+            sim.set_input("a_in", &data).map_err(|e| e.to_string())?;
+            sim.run().map_err(|e| e.to_string())?;
+            let out = sim.get_output("out").map_err(|e| e.to_string())?;
+            for kk in 0..*k as usize {
+                let want: f32 = data.chunks(*k as usize).map(|c| c[kk]).sum();
+                let got = out[kk];
+                if (got - want).abs() > 1e-3 * (1.0 + want.abs()) {
+                    return Err(format!("{kernel} k={kk}: got {got}, want {want}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Deliberate resource exhaustion must fail with OOM, not silently.
+#[test]
+fn failure_injection_oom() {
+    let src = "kernel @big<K>() {
+        place i16 i, i16 j in [0:2, 0] { f32[K] a }
+        compute i32 i, i32 j in [0:2, 0] { a[0] = 1.0 }
+    }";
+    let kast = parse_kernel(src).unwrap();
+    let prog = instantiate(&kast, &bindings(&[("K", 20_000)])).unwrap();
+    let cfg = MachineConfig::with_grid(2, 1);
+    let err = csl::compile(&prog, &cfg, &Options::default()).unwrap_err();
+    assert!(err.0.contains("OOM"), "{err}");
+}
+
+/// Deliberate channel exhaustion must fail with OOR.
+#[test]
+fn failure_injection_color_exhaustion() {
+    let mut decls = String::new();
+    let mut uses = String::new();
+    for i in 0..26 {
+        decls.push_str(&format!("stream<f32> s{i} = relative_stream(1, 0)\n"));
+        uses.push_str(&format!("send(v, s{i})\n"));
+    }
+    let src = format!(
+        "kernel @many<N>() {{
+            place i16 i, i16 j in [0:N, 0] {{ f32 v }}
+            dataflow i32 i, i32 j in [0:N, 0] {{ {decls} }}
+            compute i32 i, i32 j in [0, 0] {{ {uses} awaitall }}
+        }}"
+    );
+    let kast = parse_kernel(&src).unwrap();
+    let prog = instantiate(&kast, &bindings(&[("N", 4)])).unwrap();
+    let cfg = MachineConfig::with_grid(4, 1);
+    let err = csl::compile(&prog, &cfg, &Options::default()).unwrap_err();
+    assert!(err.0.contains("OOR"), "{err}");
+}
