@@ -1,0 +1,512 @@
+//! Deadlock verification: a monotone progress fixpoint over the
+//! wait-for structure of channel consumers, producers and task
+//! activations.
+//!
+//! The machine model's only blocking constructs are (a) asynchronous
+//! `FabIn` consumers, which complete when enough wavelets reach their
+//! (PE, color) endpoint, and (b) task activation/unblocking, driven by
+//! `Control` ops and async-op completions. The fixpoint optimistically
+//! propagates progress — a task that can start issues all its fabric
+//! ops, deliveries accumulate along traced flows, completions fire
+//! their actions — until nothing changes. Whatever is still waiting can
+//! *never* be satisfied (the abstraction over-approximates progress),
+//! so every leftover consumer is a genuine static deadlock: either
+//! starvation (no producer reaches the endpoint), a wavelet-count
+//! shortfall, or a circular wait, which is reported with the cycle
+//! spelled out PE by PE.
+
+use super::flowgraph::{eval_const, FlowGraph, Trigger};
+use super::{AnalysisReport, DiagKind, Diagnostic, Severity};
+use crate::machine::program::TaskActionKind;
+use crate::machine::MachineProgram;
+use std::collections::{HashMap, HashSet};
+
+/// Wavelets accumulated at one endpoint.
+#[derive(Clone, Copy, Debug, Default)]
+struct Delivered {
+    known: i64,
+    /// Some contribution had a statically unknown count.
+    unknown: bool,
+}
+
+impl Delivered {
+    fn any(&self) -> bool {
+        self.known > 0 || self.unknown
+    }
+
+    fn satisfies(&self, need: Option<i64>) -> bool {
+        match need {
+            _ if self.unknown => self.any(),
+            Some(n) => self.known >= n,
+            None => self.any(),
+        }
+    }
+}
+
+/// The whole fixpoint state, flattened over (PE, task).
+struct State<'g> {
+    graph: &'g FlowGraph,
+    /// Global task index base per PE.
+    base: Vec<usize>,
+    activated: Vec<bool>,
+    unblocked: Vec<bool>,
+    running: Vec<bool>,
+    consume_done: Vec<Vec<bool>>,
+    produce_issued: Vec<Vec<bool>>,
+    delivered: HashMap<(usize, u8), Delivered>,
+    /// hw id → task index, per class.
+    hw_map: Vec<HashMap<u8, usize>>,
+}
+
+impl<'g> State<'g> {
+    fn gid(&self, pi: usize, ti: usize) -> usize {
+        self.base[pi] + ti
+    }
+
+    fn model(&self, pi: usize, ti: usize) -> &super::flowgraph::TaskModel {
+        let (_, _, ci) = self.graph.pes[pi];
+        &self.graph.models[ci][ti]
+    }
+
+    fn data_received(&self, pi: usize, ti: usize) -> bool {
+        match self.model(pi, ti).data_color {
+            Some(c) => self.delivered.get(&(pi, c)).map(|d| d.any()).unwrap_or(false),
+            None => false,
+        }
+    }
+
+    /// Does this task execute its body at least once?
+    fn runs(&self, pi: usize, ti: usize) -> bool {
+        let m = self.model(pi, ti);
+        if m.data_color.is_some() {
+            self.data_received(pi, ti)
+        } else {
+            self.running[self.gid(pi, ti)]
+        }
+    }
+
+    fn trigger_fired(&self, pi: usize, ti: usize, trigger: Trigger) -> bool {
+        let g = self.gid(pi, ti);
+        match trigger {
+            Trigger::OnRun => self.runs(pi, ti),
+            Trigger::OnConsume(i) => self.consume_done[g][i],
+            Trigger::OnProduce(i) => self.produce_issued[g][i],
+            Trigger::OnWavelets(th) => {
+                let Some(c) = self.model(pi, ti).data_color else { return false };
+                self.delivered
+                    .get(&(pi, c))
+                    .map(|d| d.satisfies(th))
+                    .unwrap_or(false)
+            }
+        }
+    }
+}
+
+pub fn check_deadlock(prog: &MachineProgram, graph: &FlowGraph, report: &mut AnalysisReport) {
+    if graph.pes.is_empty() {
+        return;
+    }
+    let mut st = init_state(prog, graph);
+    run_fixpoint(&mut st);
+    report_stuck(prog, graph, &st, report);
+}
+
+fn init_state<'g>(prog: &MachineProgram, graph: &'g FlowGraph) -> State<'g> {
+    let mut base = Vec::with_capacity(graph.pes.len());
+    let mut total = 0usize;
+    for &(_, _, ci) in &graph.pes {
+        base.push(total);
+        total += graph.models[ci].len();
+    }
+    let hw_map: Vec<HashMap<u8, usize>> = graph
+        .models
+        .iter()
+        .map(|ms| ms.iter().enumerate().map(|(i, m)| (m.hw_id, i)).collect())
+        .collect();
+
+    let mut st = State {
+        graph,
+        base,
+        activated: vec![false; total],
+        unblocked: vec![false; total],
+        running: vec![false; total],
+        consume_done: vec![vec![]; total],
+        produce_issued: vec![vec![]; total],
+        delivered: HashMap::new(),
+        hw_map,
+    };
+    for (pi, &(_, _, ci)) in graph.pes.iter().enumerate() {
+        for (ti, m) in graph.models[ci].iter().enumerate() {
+            let g = st.gid(pi, ti);
+            st.activated[g] = m.initially_active;
+            st.unblocked[g] = !m.initially_blocked;
+            st.consume_done[g] = vec![false; m.consumes.len()];
+            st.produce_issued[g] = vec![false; m.produces.len()];
+        }
+        for hw in &prog.classes[ci].entry_tasks {
+            if let Some(&ti) = st.hw_map[ci].get(hw) {
+                let g = st.gid(pi, ti);
+                st.activated[g] = true;
+            }
+        }
+    }
+    st
+}
+
+fn run_fixpoint(st: &mut State<'_>) {
+    let npes = st.graph.pes.len();
+    loop {
+        let mut changed = false;
+        for pi in 0..npes {
+            let (x, y, ci) = st.graph.pes[pi];
+            let ntasks = st.graph.models[ci].len();
+            for ti in 0..ntasks {
+                let g = st.gid(pi, ti);
+                // Local tasks start once activated and unblocked.
+                let is_data = st.graph.models[ci][ti].data_color.is_some();
+                if !is_data && st.activated[g] && st.unblocked[g] && !st.running[g] {
+                    st.running[g] = true;
+                    changed = true;
+                }
+                if !st.runs(pi, ti) {
+                    continue;
+                }
+                // Issue produces: wavelets accumulate at every traced
+                // destination endpoint. Fused accumulate-and-forward ops
+                // only emit once their paired consume completes.
+                for oi in 0..st.graph.models[ci][ti].produces.len() {
+                    if st.produce_issued[g][oi] {
+                        continue;
+                    }
+                    let gate = st.graph.models[ci][ti].produces[oi].after_consume;
+                    if let Some(ci_gate) = gate {
+                        if !st.consume_done[g][ci_gate] {
+                            continue;
+                        }
+                    }
+                    st.produce_issued[g][oi] = true;
+                    changed = true;
+                    let p = &st.graph.models[ci][ti].produces[oi];
+                    let count = if is_data || p.conditional {
+                        None // per-wavelet or guarded: count unknown
+                    } else {
+                        let len = eval_const(&p.len, x, y);
+                        let trips =
+                            p.trips.as_ref().and_then(|t| eval_const(t, x, y));
+                        match (len, trips) {
+                            (Some(l), Some(t)) => Some(l * t),
+                            _ => None,
+                        }
+                    };
+                    if let Some(&fi) = st.graph.flow_lookup.get(&(x, y, p.color)) {
+                        if let Ok(path) = &st.graph.flows[fi].path {
+                            for (dx, dy, _) in &path.dests {
+                                if let Some(&di) = st.graph.pe_lookup.get(&(*dx, *dy)) {
+                                    let entry = st
+                                        .delivered
+                                        .entry((di, p.color))
+                                        .or_default();
+                                    match count {
+                                        Some(n) => entry.known += n,
+                                        None => entry.unknown = true,
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+                // Complete consumes whose endpoint is satisfied.
+                for coi in 0..st.graph.models[ci][ti].consumes.len() {
+                    if st.consume_done[g][coi] {
+                        continue;
+                    }
+                    let c = &st.graph.models[ci][ti].consumes[coi];
+                    let need = eval_const(&c.len, x, y);
+                    let ok = st
+                        .delivered
+                        .get(&(pi, c.color))
+                        .map(|d| d.satisfies(need))
+                        .unwrap_or(false);
+                    if ok {
+                        st.consume_done[g][coi] = true;
+                        changed = true;
+                    }
+                }
+            }
+        }
+        // Fire every satisfied action site.
+        for pi in 0..npes {
+            let (_, _, ci) = st.graph.pes[pi];
+            for ti in 0..st.graph.models[ci].len() {
+                let nacts = st.graph.models[ci][ti].actions.len();
+                for ai in 0..nacts {
+                    let site = st.graph.models[ci][ti].actions[ai].clone();
+                    if !st.trigger_fired(pi, ti, site.trigger) {
+                        continue;
+                    }
+                    if let Some(&target) = st.hw_map[ci].get(&site.action.task) {
+                        let tg = st.gid(pi, target);
+                        match site.action.kind {
+                            TaskActionKind::Activate => {
+                                if !st.activated[tg] {
+                                    st.activated[tg] = true;
+                                    changed = true;
+                                }
+                            }
+                            TaskActionKind::Unblock => {
+                                if !st.unblocked[tg] {
+                                    st.unblocked[tg] = true;
+                                    changed = true;
+                                }
+                            }
+                            // Blocking never *prevents* progress in the
+                            // optimistic abstraction.
+                            TaskActionKind::Block => {}
+                        }
+                    }
+                }
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+}
+
+/// A node in the blocked-why explanation walk.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+enum Why {
+    Consume(usize, usize, usize),
+    Task(usize, usize),
+}
+
+fn report_stuck(
+    prog: &MachineProgram,
+    graph: &FlowGraph,
+    st: &State<'_>,
+    report: &mut AnalysisReport,
+) {
+    for pi in 0..graph.pes.len() {
+        let (x, y, ci) = graph.pes[pi];
+        for ti in 0..graph.models[ci].len() {
+            if !st.runs(pi, ti) {
+                continue;
+            }
+            let g = st.gid(pi, ti);
+            let model = &graph.models[ci][ti];
+            for (coi, c) in model.consumes.iter().enumerate() {
+                if st.consume_done[g][coi] {
+                    continue;
+                }
+                let delivered = st.delivered.get(&(pi, c.color)).copied().unwrap_or_default();
+                if c.conditional && delivered.any() {
+                    // Guarded by a runtime branch and partially fed:
+                    // cannot statically prove it ever runs short.
+                    continue;
+                }
+                let task_name = format!("{}.{}", prog.classes[ci].name, model.name);
+                let all_flows = graph
+                    .deliveries
+                    .get(&(pi, c.color))
+                    .cloned()
+                    .unwrap_or_default();
+                if all_flows.is_empty() {
+                    // A consume behind a genuine runtime conditional may
+                    // never execute; without a disproof, only warn.
+                    let severity =
+                        if c.conditional { Severity::Warning } else { Severity::Error };
+                    report.push(Diagnostic {
+                        kind: DiagKind::Starvation,
+                        severity,
+                        pe: Some((x, y)),
+                        color: Some(c.color),
+                        task: Some(task_name),
+                        message: format!(
+                            "consumer waits on color {} but no flow ever delivers to this \
+                             PE (the simulator would report SimError::Deadlock here)",
+                            c.color
+                        ),
+                    });
+                    continue;
+                }
+                // Some producer exists — either it never issues
+                // (circular wait) or it under-delivers.
+                if let Some(cycle) = find_cycle(graph, st, pi, ti, coi) {
+                    report.push(Diagnostic {
+                        kind: DiagKind::Deadlock,
+                        severity: Severity::Error,
+                        pe: Some((x, y)),
+                        color: Some(c.color),
+                        task: Some(task_name),
+                        message: format!("circular wait: {}", cycle.join(" <- ")),
+                    });
+                } else {
+                    let need = eval_const(&c.len, x, y);
+                    let detail = match need {
+                        Some(n) => format!(
+                            "waiting for {} more wavelets",
+                            (n - delivered.known).max(1)
+                        ),
+                        None => "waiting for wavelets".to_string(),
+                    };
+                    report.push(Diagnostic {
+                        kind: DiagKind::Deadlock,
+                        severity: Severity::Error,
+                        pe: Some((x, y)),
+                        color: Some(c.color),
+                        task: Some(task_name),
+                        message: format!(
+                            "consumer can never be satisfied: {detail} on color {} \
+                             (producers deliver {} statically known wavelets)",
+                            c.color, delivered.known
+                        ),
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// Walk the blocked-because relation from a stuck consume, looking for
+/// a cycle back to itself. Returns the human-readable cycle on success.
+fn find_cycle(
+    graph: &FlowGraph,
+    st: &State<'_>,
+    pi: usize,
+    ti: usize,
+    coi: usize,
+) -> Option<Vec<String>> {
+    let start = Why::Consume(pi, ti, coi);
+    let mut stack: Vec<Why> = vec![];
+    let mut visited: HashSet<Why> = HashSet::new();
+    let mut labels: Vec<String> = vec![];
+
+    fn describe(graph: &FlowGraph, node: Why) -> String {
+        match node {
+            Why::Consume(pi, ti, coi) => {
+                let (x, y, ci) = graph.pes[pi];
+                let m = &graph.models[ci][ti];
+                format!(
+                    "PE ({x},{y}) task {} awaiting color {}",
+                    m.name, m.consumes[coi].color
+                )
+            }
+            Why::Task(pi, ti) => {
+                let (x, y, ci) = graph.pes[pi];
+                format!("PE ({x},{y}) task {} never starts", graph.models[ci][ti].name)
+            }
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn visit(
+        graph: &FlowGraph,
+        st: &State<'_>,
+        node: Why,
+        start: Why,
+        stack: &mut Vec<Why>,
+        visited: &mut HashSet<Why>,
+        labels: &mut Vec<String>,
+        depth: usize,
+    ) -> bool {
+        if depth > 64 {
+            return false;
+        }
+        if node == start && !stack.is_empty() {
+            return true; // closed the loop
+        }
+        if !visited.insert(node) {
+            return false;
+        }
+        stack.push(node);
+        labels.push(describe(graph, node));
+        let found = match node {
+            Why::Consume(pi, ti, coi) => {
+                let c = &graph.models[graph.pes[pi].2][ti].consumes[coi];
+                let flows = graph
+                    .deliveries
+                    .get(&(pi, c.color))
+                    .cloned()
+                    .unwrap_or_default();
+                let mut hit = false;
+                for fi in flows {
+                    for &(ppi, pti, poi) in &graph.flows[fi].producers {
+                        let pg = st.gid(ppi, pti);
+                        if st.produce_issued[pg][poi] {
+                            continue;
+                        }
+                        // Why didn't the producer emit? Either its task
+                        // never starts, or (fused form) its own consume
+                        // is stuck.
+                        let pmodel = &graph.models[graph.pes[ppi].2][pti];
+                        let next = match pmodel.produces[poi].after_consume {
+                            Some(gci) if !st.consume_done[pg][gci] => {
+                                Why::Consume(ppi, pti, gci)
+                            }
+                            _ => Why::Task(ppi, pti),
+                        };
+                        if visit(graph, st, next, start, stack, visited, labels, depth + 1)
+                        {
+                            hit = true;
+                            break;
+                        }
+                    }
+                    if hit {
+                        break;
+                    }
+                }
+                hit
+            }
+            Why::Task(pi, ti) => {
+                // The task never starts: follow the action sites that
+                // would have activated / unblocked it.
+                let (_, _, ci) = graph.pes[pi];
+                let hw = graph.models[ci][ti].hw_id;
+                let mut hit = false;
+                'outer: for (oti, om) in graph.models[ci].iter().enumerate() {
+                    for site in &om.actions {
+                        if site.action.task != hw {
+                            continue;
+                        }
+                        if st.trigger_fired(pi, oti, site.trigger) {
+                            continue; // this source fired; look elsewhere
+                        }
+                        let next = match site.trigger {
+                            Trigger::OnConsume(i) => Some(Why::Consume(pi, oti, i)),
+                            Trigger::OnRun | Trigger::OnProduce(_) => Some(Why::Task(pi, oti)),
+                            Trigger::OnWavelets(_) => None,
+                        };
+                        if let Some(next) = next {
+                            if visit(
+                                graph,
+                                st,
+                                next,
+                                start,
+                                stack,
+                                visited,
+                                labels,
+                                depth + 1,
+                            ) {
+                                hit = true;
+                                break 'outer;
+                            }
+                        }
+                    }
+                }
+                hit
+            }
+        };
+        if !found {
+            stack.pop();
+            labels.pop();
+        }
+        found
+    }
+
+    if visit(graph, st, start, start, &mut stack, &mut visited, &mut labels, 0) {
+        labels.push(describe(graph, start));
+        Some(labels)
+    } else {
+        None
+    }
+}

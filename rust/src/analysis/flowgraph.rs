@@ -1,0 +1,498 @@
+//! Explicit flow-graph construction over a lowered [`MachineProgram`].
+//!
+//! Walks every PE class's task bodies collecting the fabric events the
+//! checker reasons about — `FabOut` producers, `FabIn` consumers, task
+//! control actions and their triggers — then instantiates them per PE
+//! and traces each producer's route with the same geometry the
+//! simulator uses ([`crate::machine::router::trace_route`]).
+
+use crate::machine::program::{
+    DsdRef, MOp, SBinOp, SExpr, TaskAction, TaskKind,
+};
+use crate::machine::router::{trace_route, FlowPath, RouteError};
+use crate::machine::{MachineConfig, MachineProgram};
+use std::collections::HashMap;
+
+/// Const-evaluate an [`SExpr`] that depends only on immediates and the
+/// PE coordinates. `Reg`/`LoadMem` make the value statically unknown.
+pub fn eval_const(e: &SExpr, x: i64, y: i64) -> Option<i64> {
+    Some(match e {
+        SExpr::ImmI(v) => *v,
+        SExpr::ImmF(v) => *v as i64,
+        SExpr::CoordX => x,
+        SExpr::CoordY => y,
+        SExpr::Reg(_) | SExpr::LoadMem { .. } => return None,
+        SExpr::Neg(a) => -eval_const(a, x, y)?,
+        SExpr::Not(a) => (eval_const(a, x, y)? == 0) as i64,
+        SExpr::Select(c, a, b) => {
+            if eval_const(c, x, y)? != 0 {
+                eval_const(a, x, y)?
+            } else {
+                eval_const(b, x, y)?
+            }
+        }
+        SExpr::Bin(op, a, b) => {
+            let va = eval_const(a, x, y)?;
+            let vb = eval_const(b, x, y)?;
+            match op {
+                SBinOp::Add => va + vb,
+                SBinOp::Sub => va - vb,
+                SBinOp::Mul => va * vb,
+                SBinOp::Div => {
+                    if vb == 0 {
+                        return None;
+                    }
+                    va / vb
+                }
+                SBinOp::Mod => {
+                    if vb == 0 {
+                        return None;
+                    }
+                    va.rem_euclid(vb)
+                }
+                SBinOp::Min => va.min(vb),
+                SBinOp::Max => va.max(vb),
+                SBinOp::Eq => (va == vb) as i64,
+                SBinOp::Ne => (va != vb) as i64,
+                SBinOp::Lt => (va < vb) as i64,
+                SBinOp::Le => (va <= vb) as i64,
+                SBinOp::Gt => (va > vb) as i64,
+                SBinOp::Ge => (va >= vb) as i64,
+                SBinOp::And => (va != 0 && vb != 0) as i64,
+                SBinOp::Or => (va != 0 || vb != 0) as i64,
+            }
+        }
+    })
+}
+
+/// What makes a task-control action fire.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Trigger {
+    /// Fires whenever the owning (local) task runs.
+    OnRun,
+    /// Fires when the owning task's `consumes[i]` completes.
+    OnConsume(usize),
+    /// Fires when the owning task's `produces[i]` drains (producers
+    /// always drain — endpoint buffers are unbounded in this machine
+    /// model — so this is equivalent to "the produce issued").
+    OnProduce(usize),
+    /// Fires once the owning data task has received `threshold`
+    /// wavelets (`None` = any wavelet).
+    OnWavelets(Option<i64>),
+}
+
+/// A fabric producer (`FabOut` destination) in a task body.
+#[derive(Clone, Debug)]
+pub struct ProduceOp {
+    pub color: u8,
+    /// Per-issue wavelet count (evaluated per PE; `None` = unknown).
+    pub len: SExpr,
+    /// Trip-count multiplier from enclosing `For` loops (`None` when a
+    /// bound is not statically known).
+    pub trips: Option<SExpr>,
+    /// Inside a genuine runtime conditional (not a dispatch wrapper).
+    pub conditional: bool,
+    /// Fused accumulate-and-forward ops (`FabIn` source + `FabOut`
+    /// destination, the chain pipeline's streaming form) only emit
+    /// once the paired consume (index into `consumes`) completes.
+    pub after_consume: Option<usize>,
+}
+
+/// A fabric consumer (`FabIn` source) in a task body.
+#[derive(Clone, Debug)]
+pub struct ConsumeOp {
+    pub color: u8,
+    pub len: SExpr,
+    pub conditional: bool,
+    pub on_complete: Vec<TaskAction>,
+}
+
+/// A task-control action site with its firing trigger.
+#[derive(Clone, Debug)]
+pub struct ActionSite {
+    pub action: TaskAction,
+    pub trigger: Trigger,
+    pub conditional: bool,
+}
+
+/// The checker's view of one [`crate::machine::TaskDef`].
+#[derive(Clone, Debug, Default)]
+pub struct TaskModel {
+    pub name: String,
+    pub hw_id: u8,
+    /// `Some(color)` for data tasks.
+    pub data_color: Option<u8>,
+    pub initially_active: bool,
+    pub initially_blocked: bool,
+    pub consumes: Vec<ConsumeOp>,
+    pub produces: Vec<ProduceOp>,
+    pub actions: Vec<ActionSite>,
+}
+
+/// Dispatch-wrapper recognition: task-ID recycling guards each merged
+/// logical task with `if scratch_reg == branch`. Those branches all run
+/// over the task's lifetime, so the checker treats them as
+/// unconditional. Registers at/above 24 are reserved for the recycling
+/// machinery (see `csl::lower`).
+fn is_dispatch_guard(cond: &SExpr) -> bool {
+    matches!(
+        cond,
+        SExpr::Bin(SBinOp::Eq, a, b)
+            if matches!(a.as_ref(), SExpr::Reg(r) if *r >= 24)
+                && matches!(b.as_ref(), SExpr::ImmI(_))
+    )
+}
+
+/// Counted-foreach guard: the data-task fallback blocks itself and
+/// activates a completion proxy behind `if count_reg >= n`.
+fn wavelet_threshold(cond: &SExpr) -> Option<&SExpr> {
+    match cond {
+        SExpr::Bin(SBinOp::Ge, a, n) if matches!(a.as_ref(), SExpr::Reg(_)) => Some(n.as_ref()),
+        _ => None,
+    }
+}
+
+struct BodyWalker<'m> {
+    model: &'m mut TaskModel,
+    is_data_task: bool,
+}
+
+impl<'m> BodyWalker<'m> {
+    /// `conditional`: inside a genuine runtime `If`. `trips`: product of
+    /// enclosing `For` trip-count expressions (`None` = unknown).
+    /// `threshold`: wavelet-count guard context (data tasks).
+    fn walk(
+        &mut self,
+        ops: &[MOp],
+        conditional: bool,
+        trips: Option<SExpr>,
+        threshold: Option<&SExpr>,
+    ) {
+        for op in ops {
+            match op {
+                MOp::Control(a) => self.action(a.clone(), conditional, threshold),
+                MOp::Dsd(d) => {
+                    let consume_color = match (&d.src0, &d.src1) {
+                        (Some(DsdRef::FabIn { color, len, .. }), _)
+                        | (_, Some(DsdRef::FabIn { color, len, .. })) => {
+                            Some((*color, len.clone()))
+                        }
+                        _ => None,
+                    };
+                    let consume_idx = consume_color.map(|(color, len)| {
+                        self.model.consumes.push(ConsumeOp {
+                            color,
+                            len,
+                            conditional,
+                            on_complete: d.on_complete.clone(),
+                        });
+                        self.model.consumes.len() - 1
+                    });
+                    let produce_idx = if let DsdRef::FabOut { color, len, .. } = &d.dst {
+                        self.model.produces.push(ProduceOp {
+                            color: *color,
+                            len: len.clone(),
+                            trips: trips.clone(),
+                            conditional,
+                            after_consume: consume_idx,
+                        });
+                        Some(self.model.produces.len() - 1)
+                    } else {
+                        None
+                    };
+                    // Completion actions: a fused op completes when its
+                    // consume does; a pure send when it drains; a
+                    // memory-only op as soon as the body runs.
+                    match (consume_idx, produce_idx) {
+                        (Some(ci), _) => {
+                            for a in &d.on_complete {
+                                let trigger = if self.is_data_task {
+                                    Trigger::OnWavelets(None)
+                                } else {
+                                    Trigger::OnConsume(ci)
+                                };
+                                self.model.actions.push(ActionSite {
+                                    action: a.clone(),
+                                    trigger,
+                                    conditional,
+                                });
+                            }
+                        }
+                        (None, Some(pi)) => {
+                            for a in &d.on_complete {
+                                self.model.actions.push(ActionSite {
+                                    action: a.clone(),
+                                    trigger: Trigger::OnProduce(pi),
+                                    conditional,
+                                });
+                            }
+                        }
+                        (None, None) => {
+                            for a in &d.on_complete {
+                                self.action(a.clone(), conditional, threshold);
+                            }
+                        }
+                    }
+                }
+                MOp::If { cond, then_ops, else_ops } => {
+                    if is_dispatch_guard(cond) {
+                        self.walk(then_ops, conditional, trips.clone(), threshold);
+                        self.walk(else_ops, conditional, trips.clone(), threshold);
+                    } else if self.is_data_task {
+                        if let Some(n) = wavelet_threshold(cond) {
+                            self.walk(then_ops, conditional, trips.clone(), Some(n));
+                            self.walk(else_ops, conditional, trips.clone(), threshold);
+                        } else {
+                            self.walk(then_ops, true, trips.clone(), threshold);
+                            self.walk(else_ops, true, trips.clone(), threshold);
+                        }
+                    } else {
+                        self.walk(then_ops, true, trips.clone(), threshold);
+                        self.walk(else_ops, true, trips.clone(), threshold);
+                    }
+                }
+                MOp::For { start, stop, step, body, .. } => {
+                    // Trip count (stop - start) / step when step is a
+                    // positive constant-ish expression; conservatively
+                    // unknown otherwise.
+                    let count = trip_count(start, stop, step);
+                    let combined = match (trips.clone(), count) {
+                        (Some(t), Some(c)) => Some(SExpr::mul(t, c)),
+                        _ => None,
+                    };
+                    self.walk(body, conditional, combined, threshold);
+                }
+                _ => {}
+            }
+        }
+    }
+
+    fn action(&mut self, action: TaskAction, conditional: bool, threshold: Option<&SExpr>) {
+        let trigger = if self.is_data_task {
+            // Task models are shared by every PE of the class, so only a
+            // coordinate-independent threshold can be baked in; anything
+            // else degrades to "any wavelet" (may miss deadlocks, never
+            // invents them).
+            Trigger::OnWavelets(threshold.and_then(coord_free_const))
+        } else {
+            Trigger::OnRun
+        };
+        self.model.actions.push(ActionSite { action, trigger, conditional });
+    }
+}
+
+/// Evaluate an expression that must not depend on the PE coordinates
+/// (probed at two distinct coordinate points).
+fn coord_free_const(e: &SExpr) -> Option<i64> {
+    match (eval_const(e, 0, 0), eval_const(e, 7, 3)) {
+        (Some(a), Some(b)) if a == b => Some(a),
+        _ => None,
+    }
+}
+
+/// Symbolic trip count of a `For`: `ceil((stop - start) / step)` when
+/// the pieces are expressions; `None` when the step is dynamic.
+fn trip_count(start: &SExpr, stop: &SExpr, step: &SExpr) -> Option<SExpr> {
+    match step {
+        SExpr::ImmI(1) => Some(SExpr::bin(
+            SBinOp::Max,
+            SExpr::bin(SBinOp::Sub, stop.clone(), start.clone()),
+            SExpr::imm(0),
+        )),
+        SExpr::ImmI(s) if *s > 1 => {
+            let span = SExpr::bin(SBinOp::Sub, stop.clone(), start.clone());
+            let up = SExpr::bin(SBinOp::Add, span, SExpr::imm(s - 1));
+            Some(SExpr::bin(
+                SBinOp::Max,
+                SExpr::bin(SBinOp::Div, up, SExpr::imm(*s)),
+                SExpr::imm(0),
+            ))
+        }
+        _ => None,
+    }
+}
+
+/// Build the checker model of a task definition.
+pub fn model_task(def: &crate::machine::TaskDef) -> TaskModel {
+    let (data_color, initially_active) = match &def.kind {
+        TaskKind::Data { color, .. } => (Some(*color), true),
+        TaskKind::Local => (None, def.initially_active),
+    };
+    let mut model = TaskModel {
+        name: def.name.clone(),
+        hw_id: def.hw_id,
+        data_color,
+        initially_active,
+        initially_blocked: def.initially_blocked,
+        ..TaskModel::default()
+    };
+    let mut walker = BodyWalker { model: &mut model, is_data_task: data_color.is_some() };
+    walker.walk(&def.body, false, Some(SExpr::imm(1)), None);
+    model
+}
+
+/// One traced fabric flow: a (source PE, color) injection point and its
+/// resolved (possibly multicast) path.
+#[derive(Debug)]
+pub struct Flow {
+    pub src: (i64, i64),
+    pub color: u8,
+    /// Producing (pe index, task index) sites and their produce-op
+    /// indices within the task model.
+    pub producers: Vec<(usize, usize, usize)>,
+    pub path: Result<FlowPath, RouteError>,
+}
+
+/// The whole-program flow graph.
+pub struct FlowGraph {
+    /// PE list in class-major order: (x, y, class index).
+    pub pes: Vec<(i64, i64, usize)>,
+    pub pe_lookup: HashMap<(i64, i64), usize>,
+    /// Task models per class (indexed like `prog.classes[i].tasks`).
+    pub models: Vec<Vec<TaskModel>>,
+    /// Distinct traced flows, one per (source PE, color).
+    pub flows: Vec<Flow>,
+    pub flow_lookup: HashMap<(i64, i64, u8), usize>,
+    /// Deliveries: (pe index, color) → flow indices arriving there.
+    pub deliveries: HashMap<(usize, u8), Vec<usize>>,
+}
+
+impl FlowGraph {
+    pub fn build(prog: &MachineProgram, cfg: &MachineConfig) -> FlowGraph {
+        let mut pes = vec![];
+        let mut pe_lookup = HashMap::new();
+        for (ci, class) in prog.classes.iter().enumerate() {
+            for g in &class.subgrids {
+                for (x, y) in g.iter() {
+                    pe_lookup.entry((x, y)).or_insert_with(|| {
+                        pes.push((x, y, ci));
+                        pes.len() - 1
+                    });
+                }
+            }
+        }
+        let models: Vec<Vec<TaskModel>> = prog
+            .classes
+            .iter()
+            .map(|c| c.tasks.iter().map(model_task).collect())
+            .collect();
+
+        // Trace one flow per distinct (source PE, color).
+        let mut flows: Vec<Flow> = vec![];
+        let mut flow_lookup: HashMap<(i64, i64, u8), usize> = HashMap::new();
+        for (pi, &(x, y, ci)) in pes.iter().enumerate() {
+            for (ti, model) in models[ci].iter().enumerate() {
+                for (oi, p) in model.produces.iter().enumerate() {
+                    let key = (x, y, p.color);
+                    let fi = *flow_lookup.entry(key).or_insert_with(|| {
+                        flows.push(Flow {
+                            src: (x, y),
+                            color: p.color,
+                            producers: vec![],
+                            path: trace_route(prog, cfg, p.color, x, y),
+                        });
+                        flows.len() - 1
+                    });
+                    flows[fi].producers.push((pi, ti, oi));
+                }
+            }
+        }
+
+        let mut deliveries: HashMap<(usize, u8), Vec<usize>> = HashMap::new();
+        for (fi, flow) in flows.iter().enumerate() {
+            if let Ok(path) = &flow.path {
+                for (dx, dy, _) in &path.dests {
+                    if let Some(&pi) = pe_lookup.get(&(*dx, *dy)) {
+                        deliveries.entry((pi, flow.color)).or_default().push(fi);
+                    }
+                }
+            }
+        }
+
+        FlowGraph { pes, pe_lookup, models, flows, flow_lookup, deliveries }
+    }
+
+    /// All (pe index, color) endpoints with at least one fabric
+    /// consumer (DSD consume op or data task).
+    pub fn consumer_endpoints(&self) -> Vec<(usize, u8)> {
+        let mut out = vec![];
+        let mut seen = std::collections::HashSet::new();
+        for (pi, &(_, _, ci)) in self.pes.iter().enumerate() {
+            for model in &self.models[ci] {
+                for c in &model.consumes {
+                    if seen.insert((pi, c.color)) {
+                        out.push((pi, c.color));
+                    }
+                }
+                if let Some(c) = model.data_color {
+                    if seen.insert((pi, c)) {
+                        out.push((pi, c));
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::machine::program::{DsdKind, DsdOp, Dtype, TaskDef};
+
+    fn fab_out(color: u8, len: i64) -> MOp {
+        MOp::Dsd(DsdOp {
+            kind: DsdKind::Mov,
+            dst: DsdRef::FabOut { color, len: SExpr::imm(len), ty: Dtype::F32 },
+            src0: None,
+            src1: None,
+            scalar: None,
+            is_async: true,
+            on_complete: vec![],
+        })
+    }
+
+    #[test]
+    fn eval_const_coords_and_arith() {
+        let e = SExpr::add(SExpr::mul(SExpr::CoordX, SExpr::imm(4)), SExpr::CoordY);
+        assert_eq!(eval_const(&e, 3, 2), Some(14));
+        assert_eq!(eval_const(&SExpr::Reg(0), 0, 0), None);
+    }
+
+    #[test]
+    fn model_extracts_produce_and_dispatch_guard() {
+        let def = TaskDef {
+            name: "t".into(),
+            hw_id: 27,
+            kind: TaskKind::Local,
+            initially_active: false,
+            initially_blocked: false,
+            body: vec![MOp::If {
+                cond: SExpr::bin(SBinOp::Eq, SExpr::Reg(24), SExpr::imm(1)),
+                then_ops: vec![fab_out(3, 8)],
+                else_ops: vec![],
+            }],
+        };
+        let m = model_task(&def);
+        assert_eq!(m.produces.len(), 1);
+        assert!(!m.produces[0].conditional, "dispatch guard must not mark conditional");
+    }
+
+    #[test]
+    fn model_marks_runtime_conditionals() {
+        let def = TaskDef {
+            name: "t".into(),
+            hw_id: 27,
+            kind: TaskKind::Local,
+            initially_active: false,
+            initially_blocked: false,
+            body: vec![MOp::If {
+                cond: SExpr::bin(SBinOp::Eq, SExpr::CoordX, SExpr::imm(0)),
+                then_ops: vec![fab_out(3, 8)],
+                else_ops: vec![],
+            }],
+        };
+        let m = model_task(&def);
+        assert!(m.produces[0].conditional);
+    }
+}

@@ -1,0 +1,276 @@
+//! Static dataflow semantics checker (paper §III's correctness
+//! conditions, checked before lowering to hardware state).
+//!
+//! The SpaDA paper *defines* what makes a spatial dataflow program
+//! well-formed — unambiguous routing, race-free channel endpoints, and
+//! a deadlock-free wait structure — but in a compile-and-hope pipeline
+//! those properties only surface as runtime failures inside the
+//! discrete-event simulator (`SimError::Deadlock`, `RouteError`). This
+//! subsystem verifies them statically on the loadable
+//! [`MachineProgram`], after `sem::instantiate` + the `passes`/`csl`
+//! pipeline have produced concrete routes, colors and task tables:
+//!
+//! - [`flowgraph`] reconstructs the explicit flow graph: every fabric
+//!   producer/consumer endpoint per PE, with routed paths traced
+//!   through the same geometry as [`crate::machine::router::trace_route`]
+//!   and the color assignments produced by [`crate::passes::colors`];
+//! - [`routing`] checks **routing correctness**: route rules must be
+//!   unambiguous (one configuration per (router, color)), every flow
+//!   must trace to in-fabric destinations with code, and no two
+//!   distinct flows may share a (link, color) pair;
+//! - [`races`] detects **data races**: two writers delivering to the
+//!   same (PE, color) channel endpoint whose arrival order is not
+//!   sequenced by issue order on one core, and two PEs bound to the
+//!   same host output port;
+//! - [`deadlock`] runs a monotone progress fixpoint over the wait-for
+//!   graph of channel consumers/producers and task activations,
+//!   reporting starved consumers, wavelet-count shortfalls, and
+//!   circular waits (with the cycle spelled out).
+//!
+//! [`check`] runs in `kernels::compile` by default (opt out with
+//! [`crate::passes::Options::check`]); the `spada check` CLI subcommand
+//! verifies a `.spada` source without simulating; and the simulator
+//! cross-references the static verdict in its runtime deadlock message.
+//! The checker is O(program): PEs × task events, not simulated events.
+
+pub mod deadlock;
+pub mod flowgraph;
+pub mod races;
+pub mod routing;
+
+use crate::machine::{MachineConfig, MachineProgram};
+use crate::passes::Options;
+use crate::sem::Bindings;
+use std::fmt;
+
+/// How bad a finding is. `Error` findings fail `kernels::compile` and
+/// make `spada check` exit nonzero.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+/// The class of defect a diagnostic reports.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DiagKind {
+    /// A flow fails to trace: unrouted color, off-fabric hop, routing
+    /// loop, rx mismatch, or delivery to a PE without code.
+    RouteError,
+    /// Ambiguous router state: one (router, color) with two distinct
+    /// configurations, or two distinct flows sharing a (link, color).
+    RouteConflict,
+    /// Two unsequenced writers reach one channel endpoint or one host
+    /// output port.
+    DataRace,
+    /// A circular wait on the consumer/producer/activation graph.
+    Deadlock,
+    /// A consumer endpoint no flow can ever satisfy.
+    Starvation,
+    /// Resource-limit violation (the paper's OOR / OOM), surfaced from
+    /// `MachineProgram::validate`.
+    Resource,
+}
+
+impl fmt::Display for DiagKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            DiagKind::RouteError => "route-error",
+            DiagKind::RouteConflict => "route-conflict",
+            DiagKind::DataRace => "data-race",
+            DiagKind::Deadlock => "deadlock",
+            DiagKind::Starvation => "starvation",
+            DiagKind::Resource => "resource",
+        };
+        f.write_str(s)
+    }
+}
+
+/// One finding, located as precisely as the machine program allows.
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    pub kind: DiagKind,
+    pub severity: Severity,
+    /// PE coordinates the finding anchors to.
+    pub pe: Option<(i64, i64)>,
+    /// Hardware color (virtual channel) involved.
+    pub color: Option<u8>,
+    /// Task name (class-qualified) involved.
+    pub task: Option<String>,
+    pub message: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let sev = match self.severity {
+            Severity::Error => "error",
+            Severity::Warning => "warning",
+        };
+        write!(f, "{sev}[{}]", self.kind)?;
+        if let Some((x, y)) = self.pe {
+            write!(f, " at PE ({x},{y})")?;
+        }
+        if let Some(c) = self.color {
+            write!(f, " color {c}")?;
+        }
+        if let Some(t) = &self.task {
+            write!(f, " task {t}")?;
+        }
+        write!(f, ": {}", self.message)
+    }
+}
+
+/// The checker's verdict over one machine program.
+#[derive(Debug, Default)]
+pub struct AnalysisReport {
+    pub diagnostics: Vec<Diagnostic>,
+    /// Distinct fabric flows traced ((source PE, color) pairs).
+    pub flows: usize,
+    /// Distinct consumer endpoints ((PE, color) pairs).
+    pub endpoints: usize,
+    /// PEs covered by the program's classes.
+    pub pes_analyzed: usize,
+}
+
+impl AnalysisReport {
+    pub fn errors(&self) -> impl Iterator<Item = &Diagnostic> {
+        self.diagnostics.iter().filter(|d| d.severity == Severity::Error)
+    }
+
+    pub fn has_errors(&self) -> bool {
+        self.errors().next().is_some()
+    }
+
+    /// No findings at all — the acceptance bar for the paper kernels.
+    pub fn is_clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    pub fn has_kind(&self, kind: DiagKind) -> bool {
+        self.diagnostics.iter().any(|d| d.kind == kind)
+    }
+
+    pub(crate) fn push(&mut self, d: Diagnostic) {
+        self.diagnostics.push(d);
+    }
+}
+
+impl fmt::Display for AnalysisReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "static dataflow check: {} PEs, {} flows, {} endpoints",
+            self.pes_analyzed, self.flows, self.endpoints
+        )?;
+        if self.diagnostics.is_empty() {
+            write!(f, "no findings")
+        } else {
+            for (i, d) in self.diagnostics.iter().enumerate() {
+                if i > 0 {
+                    writeln!(f)?;
+                }
+                write!(f, "{d}")?;
+            }
+            Ok(())
+        }
+    }
+}
+
+/// Run every static check on a lowered machine program.
+pub fn check(prog: &MachineProgram, cfg: &MachineConfig) -> AnalysisReport {
+    let mut report = AnalysisReport::default();
+
+    // Resource limits first (OOR/OOM) — the cheapest class of failure.
+    for err in prog.validate(cfg) {
+        report.push(Diagnostic {
+            kind: DiagKind::Resource,
+            severity: Severity::Error,
+            pe: None,
+            color: None,
+            task: None,
+            message: err,
+        });
+    }
+
+    let graph = flowgraph::FlowGraph::build(prog, cfg);
+    report.flows = graph.flows.len();
+    report.endpoints = graph.consumer_endpoints().len();
+    report.pes_analyzed = graph.pes.len();
+
+    routing::check_routing(prog, cfg, &graph, &mut report);
+    races::check_races(prog, &graph, &mut report);
+    deadlock::check_deadlock(prog, &graph, &mut report);
+
+    report
+}
+
+/// Compile a SpaDA source text and statically check it — the engine
+/// behind the `spada check` CLI subcommand. Front-half pass failures
+/// (e.g. the color allocator's "ambiguous router configuration") are
+/// reported as located-as-possible diagnostics rather than opaque
+/// errors, so a bad program always yields an [`AnalysisReport`]; only
+/// parse/semantic errors (no program to check) return `Err`.
+pub fn check_source(
+    src: &str,
+    bindings: &Bindings,
+    cfg: &MachineConfig,
+    opts: &Options,
+) -> anyhow::Result<AnalysisReport> {
+    let kernel = crate::spada::parse_kernel(src).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let prog = crate::sem::instantiate(&kernel, bindings)?;
+    // Run the backend with checking disabled: `check` below IS the check
+    // (and we want a report even when compilation half-succeeds).
+    let opts = Options { check: false, ..*opts };
+    match crate::csl::compile(&prog, cfg, &opts) {
+        Ok(compiled) => Ok(check(&compiled.machine, cfg)),
+        Err(pass_err) => {
+            let msg = pass_err.0;
+            let kind = if msg.contains(crate::passes::colors::AMBIGUOUS_ROUTER) {
+                DiagKind::RouteConflict
+            } else if msg.contains("leaves the") {
+                DiagKind::RouteError
+            } else {
+                DiagKind::Resource
+            };
+            let mut report = AnalysisReport::default();
+            report.push(Diagnostic {
+                kind,
+                severity: Severity::Error,
+                pe: None,
+                color: None,
+                task: None,
+                message: msg,
+            });
+            Ok(report)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::machine::MachineConfig;
+
+    #[test]
+    fn empty_program_is_clean() {
+        let prog = MachineProgram::default();
+        let report = check(&prog, &MachineConfig::with_grid(4, 4));
+        assert!(report.is_clean(), "{report}");
+    }
+
+    #[test]
+    fn diagnostic_display_carries_location() {
+        let d = Diagnostic {
+            kind: DiagKind::Deadlock,
+            severity: Severity::Error,
+            pe: Some((3, 4)),
+            color: Some(7),
+            task: Some("waiter".into()),
+            message: "stuck".into(),
+        };
+        let s = d.to_string();
+        assert!(s.contains("PE (3,4)"), "{s}");
+        assert!(s.contains("color 7"), "{s}");
+        assert!(s.contains("deadlock"), "{s}");
+    }
+}

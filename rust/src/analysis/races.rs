@@ -1,0 +1,94 @@
+//! Data-race detection: unsequenced writers to one channel endpoint,
+//! and host-I/O port collisions.
+//!
+//! Arrival order on a (PE, color) endpoint is only defined when every
+//! wavelet is issued from one core (program order) — two distinct
+//! source PEs delivering to the same endpoint interleave
+//! nondeterministically, which the paper's semantics classifies as a
+//! data race regardless of the payload.
+
+use super::flowgraph::FlowGraph;
+use super::{AnalysisReport, DiagKind, Diagnostic, Severity};
+use crate::machine::{IoDir, MachineProgram};
+use std::collections::HashMap;
+
+pub fn check_races(prog: &MachineProgram, graph: &FlowGraph, report: &mut AnalysisReport) {
+    check_endpoint_races(graph, report);
+    check_output_port_collisions(prog, report);
+}
+
+/// Two flows from distinct source PEs delivering to one (PE, color)
+/// endpoint race: their wavelets interleave in link order, not program
+/// order.
+fn check_endpoint_races(graph: &FlowGraph, report: &mut AnalysisReport) {
+    let mut keys: Vec<_> = graph.deliveries.keys().copied().collect();
+    keys.sort_unstable();
+    for (pi, color) in keys {
+        let flows = &graph.deliveries[&(pi, color)];
+        let mut sources: Vec<(i64, i64)> =
+            flows.iter().map(|&fi| graph.flows[fi].src).collect();
+        sources.sort_unstable();
+        sources.dedup();
+        if sources.len() < 2 {
+            continue;
+        }
+        let (x, y, _) = graph.pes[pi];
+        report.push(Diagnostic {
+            kind: DiagKind::DataRace,
+            severity: Severity::Error,
+            pe: Some((x, y)),
+            color: Some(color),
+            task: None,
+            message: format!(
+                "endpoint receives from {} distinct source PEs ({}): arrival order is \
+                 unsequenced — a data race",
+                sources.len(),
+                sources
+                    .iter()
+                    .map(|(sx, sy)| format!("({sx},{sy})"))
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ),
+        });
+    }
+}
+
+/// Two PEs bound to the same port of one output argument overwrite each
+/// other in host memory — the host-side flavor of a two-writer race.
+fn check_output_port_collisions(prog: &MachineProgram, report: &mut AnalysisReport) {
+    let mut args: Vec<&str> = prog
+        .io
+        .iter()
+        .filter(|b| b.dir == IoDir::Out)
+        .map(|b| b.arg.as_str())
+        .collect();
+    args.sort_unstable();
+    args.dedup();
+    for arg in args {
+        let mut owner: HashMap<i64, (i64, i64)> = HashMap::new();
+        for binding in prog.io.iter().filter(|b| b.dir == IoDir::Out && b.arg == arg) {
+            for (x, y) in binding.subgrid.iter() {
+                let port = binding.port_map.port(x, y);
+                match owner.get(&port) {
+                    None => {
+                        owner.insert(port, (x, y));
+                    }
+                    Some(&(ox, oy)) if (ox, oy) != (x, y) => {
+                        report.push(Diagnostic {
+                            kind: DiagKind::DataRace,
+                            severity: Severity::Error,
+                            pe: Some((x, y)),
+                            color: None,
+                            task: None,
+                            message: format!(
+                                "output argument {arg} port {port} is written by both \
+                                 PE ({ox},{oy}) and PE ({x},{y})"
+                            ),
+                        });
+                    }
+                    Some(_) => {}
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,157 @@
+//! Routing-correctness checks (paper §V-B's invariant, verified rather
+//! than assumed): every flow must resolve to a well-formed circuit, and
+//! no router or link may carry an ambiguous configuration.
+
+use super::flowgraph::FlowGraph;
+use super::{AnalysisReport, DiagKind, Diagnostic, Severity};
+use crate::machine::{Direction, MachineConfig, MachineProgram};
+use std::collections::HashMap;
+
+pub fn check_routing(
+    prog: &MachineProgram,
+    cfg: &MachineConfig,
+    graph: &FlowGraph,
+    report: &mut AnalysisReport,
+) {
+    check_rule_ambiguity(prog, report);
+    check_flow_traces(prog, graph, report);
+    check_link_sharing(graph, report);
+    let _ = cfg;
+}
+
+/// One router holds exactly one configuration per color: two distinct
+/// route rules for the same color whose subgrids overlap are ambiguous.
+fn check_rule_ambiguity(prog: &MachineProgram, report: &mut AnalysisReport) {
+    for i in 0..prog.routes.len() {
+        for j in (i + 1)..prog.routes.len() {
+            let (a, b) = (&prog.routes[i], &prog.routes[j]);
+            if a.color != b.color {
+                continue;
+            }
+            let shared = a.subgrid.intersect(&b.subgrid);
+            if shared.is_empty() {
+                continue;
+            }
+            if a.rx == b.rx && a.tx == b.tx {
+                continue; // identical duplicate — harmless
+            }
+            let pe = shared.iter().next();
+            report.push(Diagnostic {
+                kind: DiagKind::RouteConflict,
+                severity: Severity::Error,
+                pe,
+                color: Some(a.color),
+                task: None,
+                message: format!(
+                    "color {} has two distinct router configurations on {:?} \
+                     (rule {:?}/{:?} vs {:?}/{:?})",
+                    a.color, shared, a.rx, a.tx, b.rx, b.tx
+                ),
+            });
+        }
+    }
+}
+
+/// Every producer's flow must trace cleanly and deliver to PEs that run
+/// code.
+fn check_flow_traces(prog: &MachineProgram, graph: &FlowGraph, report: &mut AnalysisReport) {
+    for flow in &graph.flows {
+        match &flow.path {
+            Err(e) => report.push(Diagnostic {
+                kind: DiagKind::RouteError,
+                severity: Severity::Error,
+                pe: Some(flow.src),
+                color: Some(flow.color),
+                task: producer_name(graph, flow),
+                message: format!("flow cannot be routed: {e}"),
+            }),
+            Ok(path) => {
+                if path.dests.is_empty() {
+                    report.push(Diagnostic {
+                        kind: DiagKind::RouteError,
+                        severity: Severity::Error,
+                        pe: Some(flow.src),
+                        color: Some(flow.color),
+                        task: producer_name(graph, flow),
+                        message: "flow has no destinations (no router forwards it to a ramp)"
+                            .into(),
+                    });
+                }
+                for (dx, dy, _) in &path.dests {
+                    if prog.class_at(*dx, *dy).is_none() {
+                        report.push(Diagnostic {
+                            kind: DiagKind::RouteError,
+                            severity: Severity::Error,
+                            pe: Some((*dx, *dy)),
+                            color: Some(flow.color),
+                            task: None,
+                            message: format!(
+                                "flow from PE ({},{}) delivers to PE ({dx},{dy}), \
+                                 which runs no code",
+                                flow.src.0, flow.src.1
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Two distinct flows sharing a (link, color) merge ambiguously: the
+/// circuit-switched router cannot tell their wavelets apart. (Distinct
+/// colors on one physical link merely serialize — that is legal.)
+fn check_link_sharing(graph: &FlowGraph, report: &mut AnalysisReport) {
+    let mut occupancy: HashMap<(i64, i64, Direction, u8), Vec<usize>> = HashMap::new();
+    for (fi, flow) in graph.flows.iter().enumerate() {
+        if let Ok(path) = &flow.path {
+            for link in &path.links {
+                occupancy
+                    .entry((link.x, link.y, link.dir, flow.color))
+                    .or_default()
+                    .push(fi);
+            }
+        }
+    }
+    let mut keys: Vec<_> = occupancy.keys().copied().collect();
+    keys.sort_by_key(|(x, y, d, c)| (*x, *y, d.index(), *c));
+    let mut reported: std::collections::HashSet<(usize, usize)> = Default::default();
+    for key in keys {
+        let flows = &occupancy[&key];
+        if flows.len() < 2 {
+            continue;
+        }
+        let (x, y, dir, color) = key;
+        for w in flows.windows(2) {
+            let pair = (w[0].min(w[1]), w[0].max(w[1]));
+            if pair.0 == pair.1 || !reported.insert(pair) {
+                continue;
+            }
+            let a = &graph.flows[pair.0];
+            let b = &graph.flows[pair.1];
+            report.push(Diagnostic {
+                kind: DiagKind::RouteConflict,
+                severity: Severity::Error,
+                pe: Some((x, y)),
+                color: Some(color),
+                task: None,
+                message: format!(
+                    "flows from PE ({},{}) and PE ({},{}) share link ({x},{y})→{} on \
+                     color {color}: ambiguous circuit merge",
+                    a.src.0,
+                    a.src.1,
+                    b.src.0,
+                    b.src.1,
+                    dir.csl_name()
+                ),
+            });
+        }
+    }
+}
+
+fn producer_name(graph: &FlowGraph, flow: &super::flowgraph::Flow) -> Option<String> {
+    flow.producers.first().map(|&(pi, ti, _)| {
+        let (_, _, ci) = graph.pes[pi];
+        graph.models[ci][ti].name.clone()
+    })
+}

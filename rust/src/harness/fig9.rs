@@ -11,11 +11,11 @@ use crate::passes::Options;
 use anyhow::Result;
 
 const VARIANTS: &[(&str, Options)] = &[
-    ("all-on", Options { fusion: true, recycling: true, copy_elim: true }),
-    ("no-fusion", Options { fusion: false, recycling: true, copy_elim: true }),
-    ("no-recycle", Options { fusion: true, recycling: false, copy_elim: true }),
-    ("no-copyelim", Options { fusion: true, recycling: true, copy_elim: false }),
-    ("none", Options { fusion: false, recycling: false, copy_elim: false }),
+    ("all-on", Options { fusion: true, recycling: true, copy_elim: true, check: true }),
+    ("no-fusion", Options { fusion: false, recycling: true, copy_elim: true, check: true }),
+    ("no-recycle", Options { fusion: true, recycling: false, copy_elim: true, check: true }),
+    ("no-copyelim", Options { fusion: true, recycling: true, copy_elim: false, check: true }),
+    ("none", Options { fusion: false, recycling: false, copy_elim: false, check: true }),
 ];
 
 fn row_of(

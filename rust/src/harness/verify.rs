@@ -8,13 +8,23 @@ use crate::kernels;
 use crate::machine::{MachineConfig, Simulator};
 use crate::passes::Options;
 use crate::runtime::{max_rel_err, Input, Runtime};
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 
 const TOL: f32 = 1e-4;
 
 pub fn run() -> Result<()> {
-    let rt = Runtime::new(Runtime::default_dir())
-        .context("PJRT runtime (did you run `make artifacts`?)")?;
+    let rt = match Runtime::new(Runtime::default_dir()) {
+        Ok(rt) => rt,
+        Err(e) if !cfg!(feature = "pjrt") => {
+            // The stub runtime cannot verify anything: the `pjrt`
+            // feature (and `make artifacts`) is optional for the
+            // Rust-only build, so skip rather than fail.
+            println!("verify skipped: {e:#}");
+            return Ok(());
+        }
+        // A pjrt-enabled build with a broken client is a real failure.
+        Err(e) => return Err(e.context("PJRT runtime (did you run `make artifacts`?)")),
+    };
     println!("PJRT platform: {}", rt.platform());
 
     // ---- reduce_16x64: tree reduce on a 16-PE row --------------------

@@ -49,6 +49,11 @@ pub fn spada_loc(name: &str) -> Result<usize> {
 }
 
 /// Convenience: parse + instantiate + compile a kernel.
+///
+/// Unless [`Options::check`] is off, the compiled machine program is
+/// verified by the static dataflow semantics checker
+/// ([`crate::analysis::check`]) — routing correctness, data races,
+/// deadlock freedom — before it is handed back ("verify, then lower").
 pub fn compile(
     name: &str,
     binds: &[(&str, i64)],
@@ -59,6 +64,12 @@ pub fn compile(
     let bindings: Bindings = binds.iter().map(|(k, v)| (k.to_string(), *v)).collect();
     let prog = instantiate(&kernel, &bindings).context(name.to_string())?;
     let compiled = crate::csl::compile(&prog, cfg, opts).map_err(|e| anyhow!("{name}: {e}"))?;
+    if opts.check {
+        let report = crate::analysis::check(&compiled.machine, cfg);
+        if report.has_errors() {
+            return Err(anyhow!("{name}: static dataflow check failed\n{report}"));
+        }
+    }
     let loc = compiled.csl_loc();
     Ok((compiled.machine, compiled.stats, loc))
 }

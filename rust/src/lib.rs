@@ -9,9 +9,11 @@
 //!
 //! Architecture (three layers):
 //! - **L3 (this crate)**: the SpaDA compiler ([`spada`] → [`sem`] → [`ir`]
-//!   → [`passes`] → [`csl`]), the WSE-2 simulator ([`machine`]), the
-//!   GT4Py-style stencil frontend ([`frontend`]), baselines and the
-//!   experiment harness ([`harness`]).
+//!   → [`passes`] → [`csl`]), the static dataflow semantics checker
+//!   ([`analysis`]: routing correctness, data-race and deadlock
+//!   verification between lowering and execution), the WSE-2 simulator
+//!   ([`machine`]), the GT4Py-style stencil frontend ([`frontend`]),
+//!   baselines and the experiment harness ([`harness`]).
 //! - **L2/L1 (python/, build-time only)**: JAX reference compute graphs and
 //!   Pallas kernels, AOT-lowered to HLO text in `artifacts/`.
 //! - **Runtime bridge** ([`runtime`]): PJRT CPU client that loads the AOT
@@ -24,6 +26,7 @@ pub mod sem;
 pub mod ir;
 pub mod passes;
 pub mod csl;
+pub mod analysis;
 pub mod frontend;
 pub mod kernels;
 pub mod baselines;

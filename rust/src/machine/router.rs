@@ -209,6 +209,110 @@ mod tests {
         assert!(matches!(err, RouteError::OffFabric { .. }));
     }
 
+    /// A route that turns at the grid corner: south→north into (0,0),
+    /// then east along the top row. Exercises rx/tx handoff when the
+    /// turn happens on the fabric boundary.
+    #[test]
+    fn grid_boundary_turn() {
+        let prog = MachineProgram {
+            name: "turn".into(),
+            routes: vec![
+                RouteRule {
+                    color: 4,
+                    subgrid: Subgrid::point(0, 1),
+                    rx: DirSet::single(Direction::Ramp),
+                    tx: DirSet::single(Direction::North),
+                },
+                RouteRule {
+                    color: 4,
+                    subgrid: Subgrid::point(0, 0),
+                    rx: DirSet::single(Direction::South),
+                    tx: DirSet::single(Direction::East),
+                },
+                RouteRule {
+                    color: 4,
+                    subgrid: Subgrid::point(1, 0),
+                    rx: DirSet::single(Direction::West),
+                    tx: DirSet::single(Direction::Ramp),
+                },
+            ],
+            ..Default::default()
+        };
+        let path = trace_route(&prog, &cfg(), 4, 0, 1).unwrap();
+        assert_eq!(path.dests, vec![(1, 0, 2)]);
+        assert_eq!(path.links.len(), 2);
+        assert_eq!(path.links.iter().filter(|l| l.dir == Direction::North).count(), 1);
+        assert_eq!(path.links.iter().filter(|l| l.dir == Direction::East).count(), 1);
+    }
+
+    /// A router forking one flow into three directions (multicast tx
+    /// set), including a local ramp delivery at the fork PE itself.
+    #[test]
+    fn fork_multicast_with_loopback() {
+        let prog = MachineProgram {
+            name: "fork".into(),
+            routes: vec![
+                RouteRule {
+                    color: 5,
+                    subgrid: Subgrid::point(1, 1),
+                    rx: DirSet::single(Direction::Ramp),
+                    tx: DirSet::single(Direction::North)
+                        .with(Direction::South)
+                        .with(Direction::Ramp),
+                },
+                RouteRule {
+                    color: 5,
+                    subgrid: Subgrid::point(1, 0),
+                    rx: DirSet::single(Direction::South),
+                    tx: DirSet::single(Direction::Ramp),
+                },
+                RouteRule {
+                    color: 5,
+                    subgrid: Subgrid::point(1, 2),
+                    rx: DirSet::single(Direction::North),
+                    tx: DirSet::single(Direction::Ramp),
+                },
+            ],
+            ..Default::default()
+        };
+        let path = trace_route(&prog, &cfg(), 5, 1, 1).unwrap();
+        let mut dests = path.dests.clone();
+        dests.sort();
+        assert_eq!(dests, vec![(1, 0, 1), (1, 1, 0), (1, 2, 1)]);
+        assert_eq!(path.links.len(), 2);
+    }
+
+    /// Two distinct colors may legally traverse the same physical link:
+    /// each traces independently (they serialize at runtime; only
+    /// same-color sharing is ambiguous, which `analysis` flags).
+    #[test]
+    fn overlapping_paths_on_distinct_colors() {
+        let mk = |color: u8| {
+            vec![
+                RouteRule {
+                    color,
+                    subgrid: Subgrid::point(0, 0),
+                    rx: DirSet::single(Direction::Ramp),
+                    tx: DirSet::single(Direction::East),
+                },
+                RouteRule {
+                    color,
+                    subgrid: Subgrid::point(1, 0),
+                    rx: DirSet::single(Direction::West),
+                    tx: DirSet::single(Direction::Ramp),
+                },
+            ]
+        };
+        let mut routes = mk(6);
+        routes.extend(mk(7));
+        let prog = MachineProgram { name: "share".into(), routes, ..Default::default() };
+        for color in [6u8, 7u8] {
+            let path = trace_route(&prog, &cfg(), color, 0, 0).unwrap();
+            assert_eq!(path.dests, vec![(1, 0, 1)]);
+            assert_eq!(path.links[0].dir, Direction::East);
+        }
+    }
+
     #[test]
     fn loop_err() {
         // Two PEs forwarding to each other with rx sets that accept it.

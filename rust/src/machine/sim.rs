@@ -472,7 +472,34 @@ impl Simulator {
         }
         if !stuck.is_empty() {
             stuck.truncate(8);
-            return Err(SimError::Deadlock(stuck.join("; ")));
+            // Cross-reference the static dataflow checker: if the
+            // analysis flags this program too, the deadlock was knowable
+            // before execution (run `spada check`); otherwise it is a
+            // genuinely dynamic schedule artifact.
+            let verdict = {
+                let report = crate::analysis::check(&self.prog, &self.cfg);
+                let statics: Vec<String> = report
+                    .errors()
+                    .filter(|d| {
+                        matches!(
+                            d.kind,
+                            crate::analysis::DiagKind::Deadlock
+                                | crate::analysis::DiagKind::Starvation
+                        )
+                    })
+                    .take(2)
+                    .map(|d| d.to_string())
+                    .collect();
+                if statics.is_empty() {
+                    "static check found no deadlock (dynamic-only)".to_string()
+                } else {
+                    format!(
+                        "confirmed by static analysis (`spada check`): {}",
+                        statics.join("; ")
+                    )
+                }
+            };
+            return Err(SimError::Deadlock(format!("{}; {}", stuck.join("; "), verdict)));
         }
 
         let cycles = self.pes.iter().map(|p| p.last_activity).max().unwrap_or(0);

@@ -4,6 +4,8 @@
 //! Subcommands:
 //!   compile <kernel> [--bind K=64,N=8] [--emit DIR] [--no-fusion] ...
 //!   stencil <name>   [--show-ir]
+//!   check <kernel|file.spada> [--bind ...] [--grid WxH]
+//!                    (static dataflow verification, no simulation)
 //!   run <kernel>     [--bind ...]   (compile + simulate with random input)
 //!   bench --exp <table2|fig4..fig9|verify|all> [--quick]
 //!   loc              (Table II shortcut)
@@ -81,6 +83,7 @@ fn options(args: &Args) -> Options {
         fusion: !args.has("no-fusion"),
         recycling: !args.has("no-recycling"),
         copy_elim: !args.has("no-copy-elim"),
+        check: !args.has("no-check"),
     }
 }
 
@@ -212,6 +215,48 @@ fn real_main() -> Result<()> {
             );
             Ok(())
         }
+        "check" => {
+            // Statically verify a SpaDA program (library kernel name or
+            // path to a .spada file) without simulating: routing
+            // correctness, data races, deadlocks. Exits nonzero on any
+            // error finding.
+            let target =
+                args.positional.get(1).ok_or_else(|| anyhow!("check <kernel|file.spada>"))?;
+            let src: String = if std::path::Path::new(target).exists() {
+                std::fs::read_to_string(target).context(target.clone())?
+            } else {
+                kernels::source(target)?.to_string()
+            };
+            let kernel = spada::spada::parse_kernel(&src).map_err(|e| anyhow!("{e}"))?;
+            let mut binds: spada::sem::Bindings =
+                parse_binds(args.flag("bind"))?.into_iter().collect();
+            for p in &kernel.meta_params {
+                binds.entry(p.clone()).or_insert(8);
+            }
+            let prog = instantiate(&kernel, &binds)?;
+            let (w, h) = match args.flag("grid").and_then(|g| g.split_once('x')) {
+                Some((w, h)) => (w.parse().unwrap_or(16), h.parse().unwrap_or(16)),
+                None => {
+                    let (w, h) = prog.extent();
+                    (w.max(1), h.max(1))
+                }
+            };
+            let cfg = MachineConfig::with_grid(w, h);
+            let report = spada::analysis::check_source(&src, &binds, &cfg, &options(&args))?;
+            println!("{report}");
+            if report.has_errors() {
+                bail!(
+                    "{}: {} static error finding(s)",
+                    target,
+                    report.errors().count()
+                );
+            }
+            println!(
+                "{target}: statically verified on a {w}x{h} fabric — routing, race and \
+                 deadlock checks passed"
+            );
+            Ok(())
+        }
         "bench" => {
             let exp = args.flag("exp").unwrap_or("all").to_string();
             harness::run(&exp, args.has("quick"))
@@ -236,11 +281,12 @@ fn print_help() {
          \x20 spada compile <kernel> [--bind K=64,N=8] [--grid WxH] [--emit DIR]\n\
          \x20 spada stencil <laplacian|vertical|uvbke> [--show-ir]\n\
          \x20 spada compile-stencil <file.gt> [--bind K=8,NX=16,NY=16] [--emit DIR]\n\
+         \x20 spada check <kernel|file.spada> [--bind ...] [--grid WxH]\n\
          \x20 spada run <kernel> [--bind ...] [--grid WxH]\n\
          \x20 spada bench [--exp table2|fig4|fig5|fig6|fig7|fig8|fig9|verify|all] [--quick]\n\
          \x20 spada loc\n\
          \n\
-         Ablation flags: --no-fusion --no-recycling --no-copy-elim\n\
+         Ablation flags: --no-fusion --no-recycling --no-copy-elim --no-check\n\
          Kernels: {}",
         kernels::sources().iter().map(|(n, _)| *n).collect::<Vec<_>>().join(", ")
     );

@@ -17,6 +17,11 @@ use crate::machine::{DirSet, Direction, MachineConfig, RouteRule};
 use crate::util::Subgrid;
 use std::collections::{HashMap, HashSet};
 
+/// Marker for ambiguous-router-configuration failures; shared with
+/// [`crate::analysis::check_source`] so diagnostics classify pass
+/// errors without re-deriving the message text.
+pub const AMBIGUOUS_ROUTER: &str = "ambiguous router configuration";
+
 /// Allocation result.
 #[derive(Debug, Default)]
 pub struct ColorAllocation {
@@ -188,7 +193,7 @@ pub fn allocate_colors(
                 for j in (i + 1)..rules.len() {
                     if !rules[i].subgrid.intersect(&rules[j].subgrid).is_empty() {
                         return Err(PassError(format!(
-                            "stream {}: ambiguous router configuration on {:?} \
+                            "stream {}: {AMBIGUOUS_ROUTER} on {:?} \
                              (needs checkerboard decomposition)",
                             s.name,
                             rules[i].subgrid.intersect(&rules[j].subgrid)
@@ -393,6 +398,63 @@ mod tests {
         let prog = checkerboard(&prog).unwrap().program;
         let err = allocate_colors(&prog, &cfg()).unwrap_err();
         assert!(err.0.contains("OOR"), "{}", err.0);
+    }
+
+    /// Mutually-conflicting streams up to exactly the hardware budget
+    /// (24 routable channels) must color; one more is OOR.
+    #[test]
+    fn color_budget_boundary() {
+        let build = |count: usize| {
+            let mut decls = String::new();
+            let mut sends = String::new();
+            for i in 0..count {
+                decls.push_str(&format!("stream<f32> s{i} = relative_stream(1, 0)\n"));
+                sends.push_str(&format!("send(v, s{i})\n"));
+            }
+            let src = format!(
+                "kernel @budget<N>() {{
+                    place i16 i, i16 j in [0:N, 0] {{ f32 v }}
+                    dataflow i32 i, i32 j in [0:N, 0] {{ {decls} }}
+                    compute i32 i, i32 j in [0, 0] {{ {sends} awaitall }}
+                }}"
+            );
+            let k = parse_kernel(&src).unwrap();
+            let prog = instantiate(&k, &bind(&[("N", 4)])).unwrap();
+            checkerboard(&prog).unwrap().program
+        };
+        // Exactly 24 overlapping streams fit the budget, each with its
+        // own channel.
+        let alloc = allocate_colors(&build(24), &cfg()).unwrap();
+        assert_eq!(alloc.colors_used.len(), 24);
+        assert!(alloc.colors_used.iter().all(|c| *c < 24));
+        // The 25th conflicting stream exhausts the channels.
+        let err = allocate_colors(&build(25), &cfg()).unwrap_err();
+        assert!(err.0.contains("OOR"), "{}", err.0);
+        assert!(err.0.contains("24"), "message names the budget: {}", err.0);
+    }
+
+    /// The budget tracks the machine config, not a hard-coded 24.
+    #[test]
+    fn color_budget_follows_config() {
+        let src = "kernel @two<N>() {
+            place i16 i, i16 j in [0:N, 0] { f32 v }
+            dataflow i32 i, i32 j in [0:N, 0] {
+                stream<f32> s0 = relative_stream(1, 0)
+                stream<f32> s1 = relative_stream(1, 0)
+            }
+            compute i32 i, i32 j in [0, 0] { send(v, s0) send(v, s1) awaitall }
+        }";
+        let k = parse_kernel(src).unwrap();
+        let prog = instantiate(&k, &bind(&[("N", 4)])).unwrap();
+        let prog = checkerboard(&prog).unwrap().program;
+        let mut tiny = cfg();
+        tiny.max_colors = 1;
+        let err = allocate_colors(&prog, &tiny).unwrap_err();
+        assert!(err.0.contains("OOR"), "{}", err.0);
+        let mut two = cfg();
+        two.max_colors = 2;
+        let alloc = allocate_colors(&prog, &two).unwrap();
+        assert_eq!(alloc.colors_used.len(), 2);
     }
 
     #[test]

@@ -24,7 +24,8 @@ pub use checkerboard::checkerboard;
 pub use classes::{equivalence_classes, ClassRegion};
 pub use colors::{allocate_colors, ColorAllocation};
 
-/// Compilation options (ablation knobs, Fig. 9).
+/// Compilation options (ablation knobs, Fig. 9, plus the static
+/// checker toggle).
 #[derive(Clone, Copy, Debug)]
 pub struct Options {
     /// Task fusion: coarsen chains of statements into single CSL tasks.
@@ -35,17 +36,24 @@ pub struct Options {
     /// Copy elimination: forward single-producer/single-consumer staging
     /// fields (incl. extern I/O fields) and reuse phase-scoped memory.
     pub copy_elim: bool,
+    /// Run the static dataflow semantics checker
+    /// ([`crate::analysis::check`]) after lowering; error findings fail
+    /// the compile. On by default ("verify, then lower"); opt out for
+    /// raw pipeline benchmarking.
+    pub check: bool,
 }
 
 impl Default for Options {
     fn default() -> Self {
-        Options { fusion: true, recycling: true, copy_elim: true }
+        Options { fusion: true, recycling: true, copy_elim: true, check: true }
     }
 }
 
 impl Options {
+    /// All codegen optimizations off (Fig. 9's "none" ablation). The
+    /// static checker is not an optimization and stays on.
     pub fn none() -> Self {
-        Options { fusion: false, recycling: false, copy_elim: false }
+        Options { fusion: false, recycling: false, copy_elim: false, check: true }
     }
 }
 

@@ -5,51 +5,22 @@
 //! the PJRT CPU client via the `xla` crate, and executes them with
 //! concrete inputs. The harness compares WSE-2 simulator outputs against
 //! these executions — Python never runs at simulation time.
+//!
+//! The `xla` crate is not available in offline builds, so the PJRT
+//! client is gated behind the `pjrt` cargo feature. The default build
+//! ships an API-compatible stub whose [`Runtime::new`] reports the
+//! oracle as unavailable; callers (the `verify` harness, the
+//! `stencil_pipeline` example) degrade gracefully.
 
 use anyhow::{anyhow, Result};
 use std::path::{Path, PathBuf};
 
-/// A loaded, compiled AOT artifact.
-pub struct Oracle {
-    exe: xla::PjRtLoadedExecutable,
-    pub name: String,
-}
-
-/// Shared PJRT CPU client (one per process).
-pub struct Runtime {
-    client: xla::PjRtClient,
-    artifact_dir: PathBuf,
-}
-
-impl Runtime {
-    /// Create a CPU runtime reading artifacts from `dir`.
-    pub fn new(dir: impl AsRef<Path>) -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
-        Ok(Runtime { client, artifact_dir: dir.as_ref().to_path_buf() })
-    }
-
-    /// Default artifact directory relative to the repo root.
-    pub fn default_dir() -> PathBuf {
-        // Works from the repo root (cargo run / cargo test).
-        PathBuf::from("artifacts")
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load and compile `<name>.hlo.txt`.
-    pub fn load(&self, name: &str) -> Result<Oracle> {
-        let path = self.artifact_dir.join(format!("{name}.hlo.txt"));
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
-        Ok(Oracle { exe, name: name.to_string() })
-    }
+/// Max |a-b| relative error helper used across the harness.
+pub fn max_rel_err(got: &[f32], want: &[f32]) -> f32 {
+    got.iter()
+        .zip(want)
+        .map(|(g, w)| (g - w).abs() / (1.0 + w.abs()))
+        .fold(0.0f32, f32::max)
 }
 
 /// A concrete f32 input tensor.
@@ -74,49 +45,141 @@ impl<'a> Input<'a> {
     }
 }
 
-impl Oracle {
-    /// Execute with f32 inputs; returns the flattened f32 outputs of the
-    /// result tuple.
-    pub fn run(&self, inputs: &[Input<'_>]) -> Result<Vec<Vec<f32>>> {
-        let mut lits = Vec::with_capacity(inputs.len());
-        for inp in inputs {
-            let lit = xla::Literal::vec1(inp.data);
-            let lit = if inp.dims.is_empty() {
-                // 0-d scalar: reshape from [1].
-                lit.reshape(&[]).map_err(|e| anyhow!("scalar reshape: {e:?}"))?
-            } else {
-                lit.reshape(&inp.dims)
-                    .map_err(|e| anyhow!("reshape to {:?}: {e:?}", inp.dims))?
-            };
-            lits.push(lit);
+// ---------------------------------------------------------------------
+// Real PJRT client (requires the vendored `xla` crate).
+// ---------------------------------------------------------------------
+
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    use super::*;
+
+    /// A loaded, compiled AOT artifact.
+    pub struct Oracle {
+        exe: xla::PjRtLoadedExecutable,
+        pub name: String,
+    }
+
+    /// Shared PJRT CPU client (one per process).
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        artifact_dir: PathBuf,
+    }
+
+    impl Runtime {
+        /// Create a CPU runtime reading artifacts from `dir`.
+        pub fn new(dir: impl AsRef<Path>) -> Result<Runtime> {
+            let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
+            Ok(Runtime { client, artifact_dir: dir.as_ref().to_path_buf() })
         }
-        let mut result = self
-            .exe
-            .execute::<xla::Literal>(&lits)
-            .map_err(|e| anyhow!("execute {}: {e:?}", self.name))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch {}: {e:?}", self.name))?;
-        // aot.py lowers with return_tuple=True.
-        let elems = result
-            .decompose_tuple()
-            .map_err(|e| anyhow!("tuple {}: {e:?}", self.name))?;
-        let mut out = Vec::with_capacity(elems.len());
-        for e in elems {
-            out.push(e.to_vec::<f32>().map_err(|err| anyhow!("to_vec: {err:?}"))?);
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
         }
-        Ok(out)
+
+        /// Load and compile `<name>.hlo.txt`.
+        pub fn load(&self, name: &str) -> Result<Oracle> {
+            let path = self.artifact_dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+            Ok(Oracle { exe, name: name.to_string() })
+        }
+    }
+
+    impl Oracle {
+        /// Execute with f32 inputs; returns the flattened f32 outputs of
+        /// the result tuple.
+        pub fn run(&self, inputs: &[Input<'_>]) -> Result<Vec<Vec<f32>>> {
+            let mut lits = Vec::with_capacity(inputs.len());
+            for inp in inputs {
+                let lit = xla::Literal::vec1(inp.data);
+                let lit = if inp.dims.is_empty() {
+                    // 0-d scalar: reshape from [1].
+                    lit.reshape(&[]).map_err(|e| anyhow!("scalar reshape: {e:?}"))?
+                } else {
+                    lit.reshape(&inp.dims)
+                        .map_err(|e| anyhow!("reshape to {:?}: {e:?}", inp.dims))?
+                };
+                lits.push(lit);
+            }
+            let mut result = self
+                .exe
+                .execute::<xla::Literal>(&lits)
+                .map_err(|e| anyhow!("execute {}: {e:?}", self.name))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetch {}: {e:?}", self.name))?;
+            // aot.py lowers with return_tuple=True.
+            let elems = result
+                .decompose_tuple()
+                .map_err(|e| anyhow!("tuple {}: {e:?}", self.name))?;
+            let mut out = Vec::with_capacity(elems.len());
+            for e in elems {
+                out.push(e.to_vec::<f32>().map_err(|err| anyhow!("to_vec: {err:?}"))?);
+            }
+            Ok(out)
+        }
     }
 }
 
-/// Max |a-b| relative error helper used across the harness.
-pub fn max_rel_err(got: &[f32], want: &[f32]) -> f32 {
-    got.iter()
-        .zip(want)
-        .map(|(g, w)| (g - w).abs() / (1.0 + w.abs()))
-        .fold(0.0f32, f32::max)
+// ---------------------------------------------------------------------
+// Offline stub: same API, reports the oracle as unavailable.
+// ---------------------------------------------------------------------
+
+#[cfg(not(feature = "pjrt"))]
+mod pjrt_impl {
+    use super::*;
+
+    /// Stub oracle (never constructed — [`Runtime::new`] fails first).
+    pub struct Oracle {
+        pub name: String,
+    }
+
+    /// Stub PJRT runtime: construction reports the missing backend.
+    pub struct Runtime {
+        #[allow(dead_code)]
+        artifact_dir: PathBuf,
+    }
+
+    impl Runtime {
+        pub fn new(dir: impl AsRef<Path>) -> Result<Runtime> {
+            let _ = dir.as_ref();
+            Err(anyhow!(
+                "PJRT runtime unavailable: built without the `pjrt` feature \
+                 (vendor the `xla` crate and build with `--features pjrt`)"
+            ))
+        }
+
+        pub fn platform(&self) -> String {
+            "unavailable".to_string()
+        }
+
+        pub fn load(&self, name: &str) -> Result<Oracle> {
+            Err(anyhow!("PJRT runtime unavailable: cannot load oracle {name}"))
+        }
+    }
+
+    impl Oracle {
+        pub fn run(&self, _inputs: &[Input<'_>]) -> Result<Vec<Vec<f32>>> {
+            Err(anyhow!("PJRT runtime unavailable: cannot execute oracle {}", self.name))
+        }
+    }
 }
 
-#[cfg(test)]
+pub use pjrt_impl::{Oracle, Runtime};
+
+impl Runtime {
+    /// Default artifact directory relative to the repo root.
+    pub fn default_dir() -> PathBuf {
+        // Works from the repo root (cargo run / cargo test).
+        PathBuf::from("artifacts")
+    }
+}
+
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     use super::*;
 
@@ -166,5 +229,26 @@ mod tests {
             })
             .collect();
         assert!(max_rel_err(&out[0], &want) < 1e-4, "{:?}", &out[0][..4]);
+    }
+
+    #[test]
+    fn max_rel_err_zero_on_equal() {
+        assert_eq!(max_rel_err(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+    }
+}
+
+#[cfg(all(test, not(feature = "pjrt")))]
+mod stub_tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_unavailable() {
+        let err = Runtime::new(Runtime::default_dir()).err().expect("stub must fail");
+        assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+
+    #[test]
+    fn max_rel_err_zero_on_equal() {
+        assert_eq!(max_rel_err(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
     }
 }

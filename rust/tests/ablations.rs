@@ -86,7 +86,7 @@ fn tree_reduce_needs_recycling_at_scale() {
         64,
         64,
         16,
-        &Options { recycling: false, fusion: false, copy_elim: true },
+        &Options { recycling: false, fusion: false, copy_elim: true, check: true },
     );
     let err = without.err().expect("expected OOR").to_string();
     assert!(err.contains("OOR"), "{err}");

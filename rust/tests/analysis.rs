@@ -1,0 +1,318 @@
+//! Static dataflow semantics checker: negative fixtures (route
+//! conflict, two-writer race, circular-wait deadlock, starvation) must
+//! be flagged with the right diagnostic kind, and every paper kernel
+//! (fig4–fig9, table2) must pass the checker with zero findings.
+
+use spada::analysis::{self, DiagKind};
+use spada::machine::program::*;
+use spada::machine::MachineConfig;
+use spada::passes::Options;
+use spada::sem::Bindings;
+use spada::util::Subgrid;
+
+fn binds(pairs: &[(&str, i64)]) -> Bindings {
+    pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+}
+
+// ---------------------------------------------------------------------
+// Hand-written machine-program fixtures
+// ---------------------------------------------------------------------
+
+fn fab_out(color: u8, len: i64, on_complete: Vec<TaskAction>) -> MOp {
+    MOp::Dsd(DsdOp {
+        kind: DsdKind::Mov,
+        dst: DsdRef::FabOut { color, len: SExpr::imm(len), ty: Dtype::F32 },
+        src0: Some(DsdRef::mem(0, SExpr::imm(len), Dtype::F32)),
+        src1: None,
+        scalar: None,
+        is_async: true,
+        on_complete,
+    })
+}
+
+fn fab_in(color: u8, len: i64, on_complete: Vec<TaskAction>) -> MOp {
+    MOp::Dsd(DsdOp {
+        kind: DsdKind::Mov,
+        dst: DsdRef::mem(0, SExpr::imm(len), Dtype::F32),
+        src0: Some(DsdRef::FabIn { color, len: SExpr::imm(len), ty: Dtype::F32 }),
+        src1: None,
+        scalar: None,
+        is_async: true,
+        on_complete,
+    })
+}
+
+fn local_task(name: &str, hw_id: u8, active: bool, body: Vec<MOp>) -> TaskDef {
+    TaskDef {
+        name: name.into(),
+        hw_id,
+        kind: TaskKind::Local,
+        initially_active: active,
+        initially_blocked: false,
+        body,
+    }
+}
+
+fn class_at(name: &str, x: i64, tasks: Vec<TaskDef>, entry: Vec<u8>) -> PeClass {
+    PeClass {
+        name: name.into(),
+        subgrids: vec![Subgrid::point(x, 0)],
+        fields: vec![FieldAlloc {
+            name: "buf".into(),
+            addr: 0,
+            len: 64,
+            ty: Dtype::F32,
+            is_extern: false,
+        }],
+        mem_size: 256,
+        tasks,
+        entry_tasks: entry,
+    }
+}
+
+fn route(color: u8, x: i64, rx: DirSet, tx: DirSet) -> RouteRule {
+    RouteRule { color, subgrid: Subgrid::point(x, 0), rx, tx }
+}
+
+/// (a) Two flows injected on the *same color* share a physical link:
+/// the router cannot tell their wavelets apart.
+#[test]
+fn machine_fixture_route_conflict() {
+    let c = 3u8;
+    let prog = MachineProgram {
+        name: "linkshare".into(),
+        classes: vec![
+            class_at("src0", 0, vec![local_task("s0", 27, true, vec![fab_out(c, 8, vec![])])], vec![27]),
+            class_at("src1", 1, vec![local_task("s1", 27, true, vec![fab_out(c, 8, vec![])])], vec![27]),
+            class_at("dst", 2, vec![local_task("d", 27, true, vec![fab_in(c, 16, vec![])])], vec![27]),
+        ],
+        routes: vec![
+            route(c, 0, DirSet::single(Direction::Ramp), DirSet::single(Direction::East)),
+            route(
+                c,
+                1,
+                DirSet::single(Direction::West).with(Direction::Ramp),
+                DirSet::single(Direction::East),
+            ),
+            route(c, 2, DirSet::single(Direction::West), DirSet::single(Direction::Ramp)),
+        ],
+        colors_used: vec![c],
+        ..Default::default()
+    };
+    let report = analysis::check(&prog, &MachineConfig::with_grid(4, 1));
+    assert!(report.has_kind(DiagKind::RouteConflict), "{report}");
+    assert!(report.has_errors());
+}
+
+/// (b) Two writers from distinct PEs deliver to one endpoint over
+/// disjoint links: no routing conflict, but an arrival-order race.
+#[test]
+fn machine_fixture_two_writer_race() {
+    let c = 5u8;
+    let prog = MachineProgram {
+        name: "race".into(),
+        classes: vec![
+            class_at("west", 0, vec![local_task("w", 27, true, vec![fab_out(c, 8, vec![])])], vec![27]),
+            class_at("mid", 1, vec![local_task("m", 27, true, vec![fab_in(c, 16, vec![])])], vec![27]),
+            class_at("east", 2, vec![local_task("e", 27, true, vec![fab_out(c, 8, vec![])])], vec![27]),
+        ],
+        routes: vec![
+            route(c, 0, DirSet::single(Direction::Ramp), DirSet::single(Direction::East)),
+            route(c, 2, DirSet::single(Direction::Ramp), DirSet::single(Direction::West)),
+            route(
+                c,
+                1,
+                DirSet::single(Direction::West).with(Direction::East),
+                DirSet::single(Direction::Ramp),
+            ),
+        ],
+        colors_used: vec![c],
+        ..Default::default()
+    };
+    let report = analysis::check(&prog, &MachineConfig::with_grid(4, 1));
+    assert!(report.has_kind(DiagKind::DataRace), "{report}");
+    assert!(
+        !report.has_kind(DiagKind::RouteConflict),
+        "disjoint links must not be a route conflict: {report}"
+    );
+}
+
+/// (c) Circular wait: each PE's sender is gated on its own receive
+/// completing, and the two receives wait on each other's senders.
+#[test]
+fn machine_fixture_circular_deadlock() {
+    let (c_ab, c_ba) = (1u8, 2u8);
+    let mk = |name: &str, x: i64, recv_color: u8, send_color: u8| {
+        class_at(
+            name,
+            x,
+            vec![
+                local_task(
+                    "recv",
+                    27,
+                    true,
+                    vec![fab_in(recv_color, 8, vec![TaskAction::activate(26)])],
+                ),
+                local_task("send", 26, false, vec![fab_out(send_color, 8, vec![])]),
+            ],
+            vec![27],
+        )
+    };
+    let prog = MachineProgram {
+        name: "cycle".into(),
+        classes: vec![mk("a", 0, c_ba, c_ab), mk("b", 1, c_ab, c_ba)],
+        routes: vec![
+            // a → b on c_ab.
+            route(c_ab, 0, DirSet::single(Direction::Ramp), DirSet::single(Direction::East)),
+            route(c_ab, 1, DirSet::single(Direction::West), DirSet::single(Direction::Ramp)),
+            // b → a on c_ba.
+            route(c_ba, 1, DirSet::single(Direction::Ramp), DirSet::single(Direction::West)),
+            route(c_ba, 0, DirSet::single(Direction::East), DirSet::single(Direction::Ramp)),
+        ],
+        colors_used: vec![c_ab, c_ba],
+        ..Default::default()
+    };
+    let report = analysis::check(&prog, &MachineConfig::with_grid(2, 1));
+    assert!(report.has_kind(DiagKind::Deadlock), "{report}");
+    let msg = report
+        .diagnostics
+        .iter()
+        .find(|d| d.kind == DiagKind::Deadlock)
+        .unwrap()
+        .message
+        .clone();
+    assert!(msg.contains("circular wait"), "{msg}");
+}
+
+/// A consumer no flow ever reaches is starvation (the static analogue
+/// of the simulator's quiescence deadlock).
+#[test]
+fn machine_fixture_starvation() {
+    let prog = MachineProgram {
+        name: "starve".into(),
+        classes: vec![class_at(
+            "waiter",
+            0,
+            vec![local_task("w", 27, true, vec![fab_in(9, 8, vec![])])],
+            vec![27],
+        )],
+        colors_used: vec![9],
+        ..Default::default()
+    };
+    let report = analysis::check(&prog, &MachineConfig::with_grid(1, 1));
+    assert!(report.has_kind(DiagKind::Starvation), "{report}");
+}
+
+// ---------------------------------------------------------------------
+// SpaDA-source fixtures (the `spada check` CLI path)
+// ---------------------------------------------------------------------
+
+const ROUTE_CONFLICT: &str = include_str!("../fixtures/route_conflict.spada");
+const RACE_TWO_WRITERS: &str = include_str!("../fixtures/race_two_writers.spada");
+const DEADLOCK_CYCLE: &str = include_str!("../fixtures/deadlock_cycle.spada");
+
+fn check_fixture(src: &str, b: &[(&str, i64)], w: i64, h: i64) -> analysis::AnalysisReport {
+    analysis::check_source(src, &binds(b), &MachineConfig::with_grid(w, h), &Options::default())
+        .expect("fixture must reach the checker")
+}
+
+#[test]
+fn spada_fixture_route_conflict() {
+    let report = check_fixture(ROUTE_CONFLICT, &[("K", 8), ("N", 8)], 8, 1);
+    assert!(report.has_errors(), "{report}");
+    assert!(report.has_kind(DiagKind::RouteConflict), "{report}");
+}
+
+#[test]
+fn spada_fixture_race_two_writers() {
+    let report = check_fixture(RACE_TWO_WRITERS, &[("K", 8)], 2, 1);
+    assert!(report.has_errors(), "{report}");
+    assert!(report.has_kind(DiagKind::DataRace), "{report}");
+}
+
+#[test]
+fn spada_fixture_deadlock_cycle() {
+    let report = check_fixture(DEADLOCK_CYCLE, &[("K", 8)], 2, 1);
+    assert!(report.has_errors(), "{report}");
+    assert!(report.has_kind(DiagKind::Deadlock), "{report}");
+    let d = report.diagnostics.iter().find(|d| d.kind == DiagKind::Deadlock).unwrap();
+    assert!(d.message.contains("circular wait"), "{}", d.message);
+    assert!(d.pe.is_some(), "deadlock diagnostics must be located");
+}
+
+// ---------------------------------------------------------------------
+// All paper kernels must pass the checker with zero findings
+// ---------------------------------------------------------------------
+
+#[test]
+fn paper_kernels_check_clean() {
+    let cases: Vec<(&str, Vec<(&str, i64)>, (i64, i64))> = vec![
+        ("broadcast", vec![("K", 32), ("N", 8)], (8, 1)),
+        ("chain_reduce", vec![("K", 32), ("N", 8)], (8, 1)),
+        ("chain_reduce", vec![("K", 16), ("N", 7)], (7, 1)), // odd row
+        ("tree_reduce", vec![("K", 16), ("NX", 8), ("NY", 4)], (8, 4)),
+        ("two_phase_reduce", vec![("K", 16), ("NX", 8), ("NY", 4)], (8, 4)),
+        ("two_phase_reduce", vec![("K", 8), ("NX", 5), ("NY", 3)], (5, 3)),
+        ("gemv", vec![("M", 16), ("N", 16), ("NX", 4), ("NY", 4)], (4, 4)),
+        ("gemv_tree", vec![("M", 16), ("N", 16), ("NX", 4), ("NY", 4)], (4, 4)),
+    ];
+    for (name, b, (w, h)) in cases {
+        let cfg = MachineConfig::with_grid(w, h);
+        let opts = Options { check: false, ..Options::default() };
+        let (prog, _, _) = spada::kernels::compile(name, &b, &cfg, &opts)
+            .unwrap_or_else(|e| panic!("{name}: {e:#}"));
+        let report = analysis::check(&prog, &cfg);
+        assert!(
+            report.is_clean(),
+            "{name} {b:?} must have zero findings:\n{report}"
+        );
+    }
+}
+
+#[test]
+fn paper_stencils_check_clean() {
+    for (name, nx, ny, k) in
+        [("laplacian", 6i64, 5i64, 4i64), ("vertical", 3, 3, 8), ("uvbke", 5, 6, 3)]
+    {
+        let (_, prog, _, _) = spada::harness::common::compile_stencil(
+            name,
+            nx,
+            ny,
+            k,
+            &Options::default(),
+        )
+        .unwrap_or_else(|e| panic!("{name}: {e:#}"));
+        let cfg = MachineConfig::with_grid(nx, ny);
+        let report = analysis::check(&prog, &cfg);
+        assert!(report.is_clean(), "{name} must have zero findings:\n{report}");
+    }
+}
+
+/// Compiling through `kernels::compile` with checking on (the default)
+/// must succeed for the paper kernels and fail for a program the
+/// checker rejects.
+#[test]
+fn compile_runs_checker_by_default() {
+    let cfg = MachineConfig::with_grid(8, 1);
+    spada::kernels::compile("chain_reduce", &[("K", 8), ("N", 8)], &cfg, &Options::default())
+        .expect("clean kernel must compile with checking on");
+}
+
+/// The ablation option sets keep the kernels clean too (the checker
+/// runs on every `kernels::compile` in the test suite).
+#[test]
+fn checker_clean_across_ablations() {
+    for opts in [
+        Options::none(),
+        Options { fusion: false, ..Options::default() },
+        Options { recycling: false, ..Options::default() },
+        Options { copy_elim: false, ..Options::default() },
+    ] {
+        let cfg = MachineConfig::with_grid(8, 1);
+        let (prog, _, _) =
+            spada::kernels::compile("chain_reduce", &[("K", 8), ("N", 8)], &cfg, &opts)
+                .unwrap_or_else(|e| panic!("{opts:?}: {e:#}"));
+        let report = analysis::check(&prog, &cfg);
+        assert!(report.is_clean(), "{opts:?}:\n{report}");
+    }
+}

@@ -226,6 +226,7 @@ fn prop_reduce_correct_all_option_sets() {
                 fusion: r.below(2) == 0,
                 recycling: r.below(2) == 0,
                 copy_elim: r.below(2) == 0,
+                check: true,
             };
             let kernel = if r.below(2) == 0 { "tree_reduce" } else { "two_phase_reduce" };
             (kernel, nx, ny, k, opts, r.next_u64())
