@@ -1,0 +1,12 @@
+//! Bench: flat-memory simulator scaling sweep (the six paper kernels,
+//! 4×4 → 128×128 grids). Thin wrapper over `harness::sim_scaling` —
+//! the same sweep the `spada bench --exp sim` CLI subcommand runs —
+//! so `cargo bench --bench sim_scaling` and CI produce the identical
+//! `BENCH_sim.json` artifact.
+//!
+//! Pass `--quick` to stop the sweep at 16×16.
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    spada::harness::sim_scaling::run(quick).unwrap();
+}

@@ -2,10 +2,14 @@
 //!
 //! Walks every PE class's task bodies collecting the fabric events the
 //! checker reasons about — `FabOut` producers, `FabIn` consumers, task
-//! control actions and their triggers — then instantiates them per PE
-//! and traces each producer's route with the same geometry the
-//! simulator uses ([`crate::machine::router::trace_route`]).
+//! control actions and their triggers — then instantiates them per PE.
+//! Producer routes are read from the shared precompiled
+//! [`crate::machine::plan::RoutingPlan`] — the *same* plan the
+//! simulator executes from — so the static checker and the runtime can
+//! never disagree about route geometry (and the checker gets the
+//! trace-once speedup for free).
 
+use crate::machine::plan::RoutingPlan;
 use crate::machine::program::{
     DsdRef, MOp, SBinOp, SExpr, TaskAction, TaskKind,
 };
@@ -170,7 +174,7 @@ impl<'m> BodyWalker<'m> {
     ) {
         for op in ops {
             match op {
-                MOp::Control(a) => self.action(a.clone(), conditional, threshold),
+                MOp::Control(a) => self.action(*a, conditional, threshold),
                 MOp::Dsd(d) => {
                     let consume_color = match (&d.src0, &d.src1) {
                         (Some(DsdRef::FabIn { color, len, .. }), _)
@@ -212,7 +216,7 @@ impl<'m> BodyWalker<'m> {
                                     Trigger::OnConsume(ci)
                                 };
                                 self.model.actions.push(ActionSite {
-                                    action: a.clone(),
+                                    action: *a,
                                     trigger,
                                     conditional,
                                 });
@@ -221,7 +225,7 @@ impl<'m> BodyWalker<'m> {
                         (None, Some(pi)) => {
                             for a in &d.on_complete {
                                 self.model.actions.push(ActionSite {
-                                    action: a.clone(),
+                                    action: *a,
                                     trigger: Trigger::OnProduce(pi),
                                     conditional,
                                 });
@@ -229,7 +233,7 @@ impl<'m> BodyWalker<'m> {
                         }
                         (None, None) => {
                             for a in &d.on_complete {
-                                self.action(a.clone(), conditional, threshold);
+                                self.action(*a, conditional, threshold);
                             }
                         }
                     }
@@ -359,6 +363,11 @@ pub struct FlowGraph {
 
 impl FlowGraph {
     pub fn build(prog: &MachineProgram, cfg: &MachineConfig) -> FlowGraph {
+        // Precompile the same routing plan the simulator runs from: one
+        // trace per (source PE, color), shared by both consumers. The
+        // routes-only build skips task-body compilation the checker
+        // never reads.
+        let plan = RoutingPlan::build_routes(prog, cfg);
         let mut pes = vec![];
         let mut pe_lookup = HashMap::new();
         for (ci, class) in prog.classes.iter().enumerate() {
@@ -377,7 +386,9 @@ impl FlowGraph {
             .map(|c| c.tasks.iter().map(model_task).collect())
             .collect();
 
-        // Trace one flow per distinct (source PE, color).
+        // One flow per distinct (source PE, color); paths come from the
+        // precompiled plan (falling back to a direct trace only for
+        // out-of-fabric sources, which the plan does not enumerate).
         let mut flows: Vec<Flow> = vec![];
         let mut flow_lookup: HashMap<(i64, i64, u8), usize> = HashMap::new();
         for (pi, &(x, y, ci)) in pes.iter().enumerate() {
@@ -385,11 +396,15 @@ impl FlowGraph {
                 for (oi, p) in model.produces.iter().enumerate() {
                     let key = (x, y, p.color);
                     let fi = *flow_lookup.entry(key).or_insert_with(|| {
+                        let path = match plan.path(x, y, p.color) {
+                            Some(r) => r.clone(),
+                            None => trace_route(prog, cfg, p.color, x, y),
+                        };
                         flows.push(Flow {
                             src: (x, y),
                             color: p.color,
                             producers: vec![],
-                            path: trace_route(prog, cfg, p.color, x, y),
+                            path,
                         });
                         flows.len() - 1
                     });

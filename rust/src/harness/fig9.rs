@@ -9,6 +9,7 @@ use crate::kernels;
 use crate::machine::MachineConfig;
 use crate::passes::Options;
 use anyhow::Result;
+use std::time::Instant;
 
 const VARIANTS: &[(&str, Options)] = &[
     ("all-on", Options { fusion: true, recycling: true, copy_elim: true, check: true }),
@@ -22,6 +23,7 @@ fn row_of(
     name: &str,
     variant: &str,
     res: Result<(u64, usize, usize, u32)>,
+    wall_ms: f64,
     table: &mut Table,
 ) {
     match res {
@@ -32,6 +34,7 @@ fn row_of(
             colors.to_string(),
             task_ids.to_string(),
             format!("{:.1}KB", mem as f64 / 1024.0),
+            format!("{wall_ms:.1}"),
         ]),
         Err(e) => {
             let what = if e.to_string().contains("OOM") {
@@ -48,6 +51,7 @@ fn row_of(
                 "-".into(),
                 "-".into(),
                 what.to_string(),
+                format!("{wall_ms:.1}"),
             ]);
         }
     }
@@ -55,11 +59,12 @@ fn row_of(
 
 pub fn run(quick: bool) -> Result<()> {
     let mut table =
-        Table::new(&["kernel", "variant", "cycles", "colors", "taskIDs", "mem/PE"]);
+        Table::new(&["kernel", "variant", "cycles", "colors", "taskIDs", "mem/PE", "wall ms"]);
 
     // (a) UVBKE stencil (paper: 746x990x320).
     let (nx, ny, k) = if quick { (8i64, 8i64, 16i64) } else { (32, 32, 320) };
     for (vname, opts) in VARIANTS {
+        let t0 = Instant::now();
         let res = run_stencil("uvbke", nx, ny, k, opts).map(|r| {
             (
                 r.run.report.cycles,
@@ -68,27 +73,32 @@ pub fn run(quick: bool) -> Result<()> {
                 r.run.stats.mem_bytes_max,
             )
         });
-        row_of("uvbke", vname, res.map_err(anyhow::Error::from), &mut table);
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        row_of("uvbke", vname, res.map_err(anyhow::Error::from), wall_ms, &mut table);
     }
 
     // (b) Tree 2-D reduce, 1 KB message (paper: 512x512; needs
     // 2·log2(P) colors and per-level tasks → OOR without recycling).
     let g = if quick { 16 } else { 64 };
     for (vname, opts) in VARIANTS {
+        let t0 = Instant::now();
         let res = run_reduce("tree_reduce", g, g, 256, opts).map(|(r, _)| {
             (r.report.cycles, r.stats.colors_used, r.stats.hw_task_ids, r.stats.mem_bytes_max)
         });
-        row_of("tree_reduce(1KB)", vname, res, &mut table);
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        row_of("tree_reduce(1KB)", vname, res, wall_ms, &mut table);
     }
 
     // (c) Two-phase 2-D reduce, 16 KB message (paper: staging buffers
     // exhaust the 48 KB PE memory without copy elimination).
     let k16 = 4096; // 16 KB of f32
     for (vname, opts) in VARIANTS {
+        let t0 = Instant::now();
         let res = run_reduce("two_phase_reduce", g, g, k16, opts).map(|(r, _)| {
             (r.report.cycles, r.stats.colors_used, r.stats.hw_task_ids, r.stats.mem_bytes_max)
         });
-        row_of("two_phase(16KB)", vname, res, &mut table);
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        row_of("two_phase(16KB)", vname, res, wall_ms, &mut table);
     }
 
     table.print();

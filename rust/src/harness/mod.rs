@@ -16,13 +16,14 @@ pub mod fig6;
 pub mod fig7;
 pub mod fig8;
 pub mod fig9;
+pub mod sim_scaling;
 pub mod verify;
 
 use anyhow::{bail, Result};
 
 /// All experiment ids.
 pub const ALL: &[&str] =
-    &["table2", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "verify"];
+    &["table2", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "sim", "verify"];
 
 /// Run one experiment (or "all"). `quick` trims sweeps for CI.
 pub fn run(exp: &str, quick: bool) -> Result<()> {
@@ -34,6 +35,7 @@ pub fn run(exp: &str, quick: bool) -> Result<()> {
         "fig7" => fig7::run(quick),
         "fig8" => fig8::run(quick),
         "fig9" => fig9::run(quick),
+        "sim" => sim_scaling::run(quick),
         "verify" => verify::run(),
         "all" => {
             for e in ALL {

@@ -1,0 +1,176 @@
+//! `spada bench --exp sim` — reproducible simulator scaling sweep.
+//!
+//! Runs the six paper kernels across growing fabric sizes (4×4 up to
+//! 128×128 in the full sweep; `--quick` stops at 16) and records, per
+//! run, the simulated cycle count, host wall time, event count and
+//! event-loop throughput. Results are printed as a table and written to
+//! `BENCH_sim.json` in the working directory so CI can archive the perf
+//! trajectory PR over PR — this is the baseline artifact every future
+//! simulator-performance change is measured against.
+//!
+//! `wall_ms` is **end-to-end** (parse + compile + plan build + I/O
+//! staging + simulate), matching what a user of `spada run` pays. At
+//! the small grids compile time dominates; the large-grid rows are the
+//! ones to read for event-loop throughput, and compiler-side changes
+//! will move the small-grid rows — compare like with like.
+
+use super::common::{run_broadcast, run_gemv_variant, run_reduce};
+use crate::bench::{eng, Table};
+use crate::machine::RunReport;
+use crate::passes::Options;
+use anyhow::{Context, Result};
+use std::time::Instant;
+
+/// Output file, relative to the working directory.
+pub const OUT_FILE: &str = "BENCH_sim.json";
+
+/// One measured (kernel, grid) point.
+pub struct ScalePoint {
+    pub kernel: &'static str,
+    pub grid: String,
+    pub pes: i64,
+    pub cycles: u64,
+    pub events: u64,
+    pub wavelets: u64,
+    pub wall_ms: f64,
+    pub events_per_sec: f64,
+}
+
+impl ScalePoint {
+    fn of(kernel: &'static str, grid: String, pes: i64, report: &RunReport, wall_s: f64) -> Self {
+        ScalePoint {
+            kernel,
+            grid,
+            pes,
+            cycles: report.cycles,
+            events: report.metrics.events,
+            wavelets: report.metrics.wavelets,
+            wall_ms: wall_s * 1e3,
+            events_per_sec: report.events_per_sec(wall_s),
+        }
+    }
+}
+
+/// The sweep itself (separated from [`run`] so tests can exercise it
+/// without touching the filesystem).
+pub fn sweep(quick: bool) -> Result<Vec<ScalePoint>> {
+    let opts = Options::default();
+    let grids: &[i64] = if quick { &[4, 8, 16] } else { &[4, 8, 16, 32, 64, 128] };
+    let k = 64i64;
+    let mut points = vec![];
+    for &g in grids {
+        {
+            let t0 = Instant::now();
+            let (run, _) = run_reduce("chain_reduce", g, 1, k, &opts)
+                .with_context(|| format!("chain_reduce {g}x1"))?;
+            points.push(ScalePoint::of(
+                "chain_reduce",
+                format!("{g}x1"),
+                g,
+                &run.report,
+                t0.elapsed().as_secs_f64(),
+            ));
+        }
+        {
+            let t0 = Instant::now();
+            let run = run_broadcast(g, k, &opts).with_context(|| format!("broadcast {g}x1"))?;
+            points.push(ScalePoint::of(
+                "broadcast",
+                format!("{g}x1"),
+                g,
+                &run.report,
+                t0.elapsed().as_secs_f64(),
+            ));
+        }
+        for kernel in ["tree_reduce", "two_phase_reduce"] {
+            let t0 = Instant::now();
+            let (run, _) =
+                run_reduce(kernel, g, g, k, &opts).with_context(|| format!("{kernel} {g}x{g}"))?;
+            points.push(ScalePoint::of(
+                kernel,
+                format!("{g}x{g}"),
+                g * g,
+                &run.report,
+                t0.elapsed().as_secs_f64(),
+            ));
+        }
+        for kernel in ["gemv", "gemv_tree"] {
+            let t0 = Instant::now();
+            let n = 2 * g; // 2×2 blocks per PE keeps the sweep tractable
+            let (run, _, _) = run_gemv_variant(kernel, n, g, &opts)
+                .with_context(|| format!("{kernel} {g}x{g}"))?;
+            points.push(ScalePoint::of(
+                kernel,
+                format!("{g}x{g}"),
+                g * g,
+                &run.report,
+                t0.elapsed().as_secs_f64(),
+            ));
+        }
+    }
+    Ok(points)
+}
+
+fn json_of(points: &[ScalePoint], quick: bool) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"bench\": \"sim_scaling\",\n");
+    s.push_str(&format!("  \"quick\": {quick},\n"));
+    s.push_str("  \"runs\": [\n");
+    for (i, p) in points.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"kernel\": \"{}\", \"grid\": \"{}\", \"pes\": {}, \"cycles\": {}, \
+             \"events\": {}, \"wavelets\": {}, \"wall_ms\": {:.3}, \"events_per_sec\": {:.1}}}{}\n",
+            p.kernel,
+            p.grid,
+            p.pes,
+            p.cycles,
+            p.events,
+            p.wavelets,
+            p.wall_ms,
+            p.events_per_sec,
+            if i + 1 == points.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+pub fn run(quick: bool) -> Result<()> {
+    let points = sweep(quick)?;
+    let mut table = Table::new(&["kernel", "grid", "PEs", "cycles", "events", "wall ms", "events/s"]);
+    for p in &points {
+        table.row(&[
+            p.kernel.to_string(),
+            p.grid.clone(),
+            p.pes.to_string(),
+            p.cycles.to_string(),
+            p.events.to_string(),
+            format!("{:.1}", p.wall_ms),
+            eng(p.events_per_sec),
+        ]);
+    }
+    table.print();
+    std::fs::write(OUT_FILE, json_of(&points, quick)).context(OUT_FILE)?;
+    println!("wrote {OUT_FILE} ({} runs)", points.len());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_sweep_covers_all_kernels() {
+        let points = sweep(true).unwrap();
+        // 3 grids × 6 kernels.
+        assert_eq!(points.len(), 18);
+        for p in &points {
+            assert!(p.cycles > 0, "{} {} ran zero cycles", p.kernel, p.grid);
+            assert!(p.events > 0, "{} {} processed zero events", p.kernel, p.grid);
+        }
+        let json = json_of(&points, true);
+        assert!(json.contains("\"bench\": \"sim_scaling\""));
+        assert!(json.contains("\"kernel\": \"gemv_tree\""));
+    }
+}

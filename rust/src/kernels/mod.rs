@@ -64,14 +64,19 @@ pub fn compile(
     let bindings: Bindings = binds.iter().map(|(k, v)| (k.to_string(), *v)).collect();
     let prog = instantiate(&kernel, &bindings).context(name.to_string())?;
     let compiled = crate::csl::compile(&prog, cfg, opts).map_err(|e| anyhow!("{name}: {e}"))?;
+    let loc = compiled.csl_loc();
+    let mut machine = compiled.machine;
     if opts.check {
-        let report = crate::analysis::check(&compiled.machine, cfg);
+        let report = crate::analysis::check(&machine, cfg);
         if report.has_errors() {
             return Err(anyhow!("{name}: static dataflow check failed\n{report}"));
         }
+        // Record the verdict so the simulator's runtime-deadlock path
+        // can cite the compile-time check instead of re-running the
+        // whole analysis.
+        machine.meta.insert("static_check".into(), "clean".into());
     }
-    let loc = compiled.csl_loc();
-    Ok((compiled.machine, compiled.stats, loc))
+    Ok((machine, compiled.stats, loc))
 }
 
 #[cfg(test)]

@@ -80,6 +80,17 @@ impl MachineConfig {
     pub fn in_bounds(&self, x: i64, y: i64) -> bool {
         x >= 0 && x < self.width && y >= 0 && y < self.height
     }
+
+    /// Number of grid cells — the size of dense row-major PE tables
+    /// (`machine::plan` indexes them as `y * width + x`).
+    pub fn grid_cells(&self) -> usize {
+        (self.width.max(0) * self.height.max(0)) as usize
+    }
+
+    /// Dense link-occupancy slots: one per (cell, direction incl. ramp).
+    pub fn link_slots(&self) -> usize {
+        self.grid_cells() * 5
+    }
 }
 
 #[cfg(test)]

@@ -61,6 +61,15 @@ impl RunReport {
         self.metrics.flops as f64 / (self.runtime_us(cfg) * 1e-6)
     }
 
+    /// Simulated events per wall-clock second — the simulator-side
+    /// throughput metric tracked by `spada bench --exp sim`.
+    pub fn events_per_sec(&self, wall_s: f64) -> f64 {
+        if wall_s <= 0.0 {
+            return 0.0;
+        }
+        self.metrics.events as f64 / wall_s
+    }
+
     /// Mean PE utilization: busy cycles / (PEs × makespan).
     pub fn utilization(&self) -> f64 {
         if self.cycles == 0 || self.metrics.active_pes == 0 {

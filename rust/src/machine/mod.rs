@@ -21,12 +21,14 @@
 //! 0.85 GHz, matching the paper's `runtime[µs] = cycles/0.85 · 10⁻³`.
 
 pub mod config;
+pub mod plan;
 pub mod program;
 pub mod router;
 pub mod sim;
 pub mod metrics;
 
 pub use config::MachineConfig;
+pub use plan::RoutingPlan;
 pub use program::{
     DirSet, Direction, DsdKind, DsdOp, DsdRef, Dtype, FieldAlloc, IoBinding, IoDir,
     MachineProgram, MOp, PeClass, PortMap, RouteRule, SExpr, SVal, TaskAction, TaskActionKind,

@@ -1,0 +1,758 @@
+//! Precompiled routing and execution plans — the compile-time half of
+//! the flat-memory simulator core.
+//!
+//! The WSE-2 hardware resolves *nothing* at runtime: routes are burned
+//! into router registers, task tables into sequencer state, and colors
+//! into fixed virtual-channel slots before the first wavelet moves.
+//! [`RoutingPlan`] mirrors that split for the simulator: everything
+//! that is a pure function of the loaded [`MachineProgram`] and the
+//! [`MachineConfig`] is resolved once at `Simulator::new` time, so the
+//! event loop is pure dense-array arithmetic:
+//!
+//! - **Dense geometry.** `pe_at` maps row-major grid cells to PE
+//!   indices (replacing a `HashMap<(i64,i64),u32>`), and every flow's
+//!   links are pre-flattened to indices into a dense link-occupancy
+//!   array (`(y·width + x)·5 + direction`).
+//! - **Precompiled flows.** For every (source PE, color) pair that any
+//!   task can inject on, the full multicast path is traced via
+//!   [`trace_route`] up front: link indices with hop depths, and
+//!   destination PEs resolved to (PE index, endpoint slot, depth)
+//!   triples. Route errors are stored per flow and surfaced only if the
+//!   flow is actually sent, preserving the lazy-trace semantics of the
+//!   original simulator (a guarded producer on an edge PE that never
+//!   fires must not fail the whole run).
+//! - **Color→slot tables.** Each PE class gets a compact endpoint slot
+//!   per color it consumes or receives (colors are ≤ 24 per the
+//!   hardware budget), so endpoint access is two array indexes instead
+//!   of a `HashMap<u8, _>` probe.
+//! - **Compiled task bodies.** Task bodies are lowered to [`POp`]s:
+//!   completion-action lists are interned into one action table
+//!   (`EventKind::Complete` carries a `u32` id, keeping heap events
+//!   `Copy`), action targets are pre-resolved from hardware task IDs to
+//!   task indices, and fabric-in operations reference a per-class
+//!   consume-template table so issuing a microthread never clones the
+//!   operation.
+//!
+//! The static checker ([`crate::analysis::flowgraph`]) builds the same
+//! plan and reads paths out of it, so the simulator and the checker
+//! share one route-resolution code path by construction.
+
+use super::config::MachineConfig;
+use super::program::{
+    DsdKind, DsdOp, DsdRef, Dtype, MOp, MachineProgram, SExpr, TaskAction, TaskActionKind,
+    TaskKind,
+};
+use super::router::{trace_route, FlowPath, RouteError};
+use std::collections::BTreeSet;
+
+/// Sentinel for "no entry" in `u32` index tables.
+pub const NONE_U32: u32 = u32::MAX;
+/// Sentinel for "no endpoint slot".
+pub const SLOT_NONE: u8 = u8::MAX;
+/// Sentinel for "no task".
+pub const TASK_NONE: u16 = u16::MAX;
+/// The interned id of the empty completion-action list.
+pub const ACTIONS_EMPTY: u32 = 0;
+
+/// A pre-resolved task-control action: like
+/// [`crate::machine::TaskAction`] but with the hardware task ID already
+/// resolved to a task index in its class (or [`TASK_NONE`] when the ID
+/// names no task — matching the original silently-ignored semantics).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PAction {
+    pub kind: TaskActionKind,
+    pub task_ix: u16,
+    pub set_reg: Option<(u8, i64)>,
+}
+
+/// A compiled DSD operation: same payload as [`DsdOp`], plus the
+/// plan-resolved pieces the hot loop needs without lookups.
+#[derive(Clone, Debug)]
+pub struct PDsd {
+    pub kind: DsdKind,
+    pub dst: DsdRef,
+    pub src0: Option<DsdRef>,
+    pub src1: Option<DsdRef>,
+    pub scalar: Option<SExpr>,
+    pub is_async: bool,
+    /// Interned completion-action list ([`ACTIONS_EMPTY`] = none).
+    pub actions: u32,
+    /// Endpoint slot of the fabric-in operand ([`SLOT_NONE`] = no
+    /// fabric-in source).
+    pub fab_slot: u8,
+    /// Index into the class's consume-template table (valid iff
+    /// `fab_slot != SLOT_NONE`).
+    pub consume_ix: u32,
+}
+
+/// Compiled machine operations — [`MOp`] with plan-resolved actions.
+#[derive(Clone, Debug)]
+pub enum POp {
+    SetReg { reg: u8, val: SExpr },
+    Store { addr: SExpr, ty: Dtype, val: SExpr },
+    Dsd(PDsd),
+    Control(PAction),
+    If { cond: SExpr, then_ops: Vec<POp>, else_ops: Vec<POp> },
+    For { reg: u8, start: SExpr, stop: SExpr, step: SExpr, body: Vec<POp> },
+    Halt,
+    Trace(String),
+}
+
+/// Compiled task flavor (data-task colors resolved to endpoint slots).
+#[derive(Clone, Copy, Debug)]
+pub enum PTaskKind {
+    Local,
+    Data { slot: u8, wavelet_reg: u8 },
+}
+
+/// One compiled task.
+#[derive(Clone, Debug)]
+pub struct PTask {
+    pub kind: PTaskKind,
+    pub initially_active: bool,
+    pub initially_blocked: bool,
+    pub body: Vec<POp>,
+}
+
+/// Per-class compile results.
+#[derive(Clone, Debug, Default)]
+pub struct ClassPlan {
+    /// color → endpoint slot (len = `RoutingPlan::ncolors`).
+    pub color_slot: Vec<u8>,
+    /// endpoint slot → color.
+    pub slot_color: Vec<u8>,
+    /// endpoint slot → data-task index bound to that color.
+    pub data_task_of_slot: Vec<u16>,
+    /// hardware task ID → task index (len 256; first definition wins,
+    /// matching the original linear `position()` resolution).
+    pub task_by_id: Vec<u16>,
+    /// Task indices sorted by hardware ID — the scheduler scan order.
+    pub order: Vec<u16>,
+    /// task index → rank in `order` (bit position in the ready mask).
+    pub rank_of: Vec<u8>,
+    /// Resolved entry-task indices.
+    pub entry: Vec<u16>,
+    /// Compiled tasks, parallel to `prog.classes[ci].tasks`.
+    pub tasks: Vec<PTask>,
+    /// Fabric-in consume templates referenced by [`PDsd::consume_ix`].
+    pub consumes: Vec<PDsd>,
+}
+
+/// Why a planned flow cannot be sent (surfaced only on first use).
+#[derive(Clone, Debug)]
+pub enum FlowError {
+    Route(RouteError),
+    NoDest,
+    NoCode { x: i64, y: i64 },
+}
+
+/// One pre-traced (source PE, color) flow.
+#[derive(Clone, Debug)]
+pub struct PlannedFlow {
+    pub src: (i64, i64),
+    pub color: u8,
+    /// Raw trace result — shared verbatim with the static checker.
+    pub trace: Result<FlowPath, RouteError>,
+    /// Set when sending on this flow must fail.
+    pub error: Option<FlowError>,
+    /// (dense link index, hop depth) per occupied link.
+    pub links: Vec<(u32, u64)>,
+    /// (destination PE index, destination endpoint slot, hop depth).
+    pub dests: Vec<(u32, u8, u64)>,
+}
+
+/// One planned PE.
+#[derive(Clone, Copy, Debug)]
+pub struct PlanPe {
+    pub x: i64,
+    pub y: i64,
+    pub class: usize,
+}
+
+/// The complete precompiled plan for one (program, machine) pair.
+pub struct RoutingPlan {
+    pub width: i64,
+    pub height: i64,
+    /// Color-table dimension (≥ `cfg.max_colors`, covering every color
+    /// the program references, even out-of-range ones).
+    pub ncolors: usize,
+    /// Row-major (y·width + x) → PE index ([`NONE_U32`] = no code).
+    pub pe_at: Vec<u32>,
+    /// PE list in class-major order (the simulator's PE indexing).
+    pub pes: Vec<PlanPe>,
+    /// (pe index · ncolors + color) → index into `flows`.
+    pub flow_of: Vec<u32>,
+    pub flows: Vec<PlannedFlow>,
+    pub classes: Vec<ClassPlan>,
+    /// Interned completion-action lists; id [`ACTIONS_EMPTY`] is `[]`.
+    pub actions: Vec<Vec<PAction>>,
+    /// Count of distinct colors referenced (the run-report metric,
+    /// precomputed instead of clone+sort+dedup per run).
+    pub colors_used: usize,
+    /// Defects that make the program unrunnable (the simulator rejects
+    /// them at construction; the static checker reports its own).
+    pub build_errors: Vec<String>,
+}
+
+/// Per-class color usage discovered by scanning task bodies.
+#[derive(Default)]
+struct ClassColors {
+    produced: BTreeSet<u8>,
+    consumed: BTreeSet<u8>,
+}
+
+fn scan_colors(ops: &[MOp], colors: &mut ClassColors) {
+    for op in ops {
+        match op {
+            MOp::Dsd(d) => {
+                if let DsdRef::FabOut { color, .. } = &d.dst {
+                    colors.produced.insert(*color);
+                }
+                for s in [&d.src0, &d.src1] {
+                    if let Some(DsdRef::FabIn { color, .. }) = s {
+                        colors.consumed.insert(*color);
+                    }
+                }
+            }
+            MOp::If { then_ops, else_ops, .. } => {
+                scan_colors(then_ops, colors);
+                scan_colors(else_ops, colors);
+            }
+            MOp::For { body, .. } => scan_colors(body, colors),
+            _ => {}
+        }
+    }
+}
+
+/// Body compiler state shared across one class.
+struct BodyCompiler<'a> {
+    color_slot: &'a [u8],
+    task_by_id: &'a [u16],
+    actions: &'a mut Vec<Vec<PAction>>,
+    consumes: &'a mut Vec<PDsd>,
+}
+
+impl<'a> BodyCompiler<'a> {
+    fn resolve_action(&self, a: &TaskAction) -> PAction {
+        PAction { kind: a.kind, task_ix: self.task_by_id[a.task as usize], set_reg: a.set_reg }
+    }
+
+    fn intern(&mut self, list: Vec<PAction>) -> u32 {
+        if let Some(i) = self.actions.iter().position(|l| *l == list) {
+            i as u32
+        } else {
+            self.actions.push(list);
+            (self.actions.len() - 1) as u32
+        }
+    }
+
+    fn compile_dsd(&mut self, d: &DsdOp) -> PDsd {
+        let resolved: Vec<PAction> = d.on_complete.iter().map(|a| self.resolve_action(a)).collect();
+        let actions = self.intern(resolved);
+        let fab_slot = match (&d.src0, &d.src1) {
+            (Some(DsdRef::FabIn { color, .. }), _) | (_, Some(DsdRef::FabIn { color, .. })) => {
+                self.color_slot[*color as usize]
+            }
+            _ => SLOT_NONE,
+        };
+        let mut p = PDsd {
+            kind: d.kind,
+            dst: d.dst.clone(),
+            src0: d.src0.clone(),
+            src1: d.src1.clone(),
+            scalar: d.scalar.clone(),
+            is_async: d.is_async,
+            actions,
+            fab_slot,
+            consume_ix: NONE_U32,
+        };
+        if fab_slot != SLOT_NONE {
+            p.consume_ix = self.consumes.len() as u32;
+            self.consumes.push(p.clone());
+        }
+        p
+    }
+
+    fn compile_ops(&mut self, ops: &[MOp]) -> Vec<POp> {
+        ops.iter()
+            .map(|op| match op {
+                MOp::SetReg { reg, val } => POp::SetReg { reg: *reg, val: val.clone() },
+                MOp::Store { addr, ty, val } => {
+                    POp::Store { addr: addr.clone(), ty: *ty, val: val.clone() }
+                }
+                MOp::Dsd(d) => POp::Dsd(self.compile_dsd(d)),
+                MOp::Control(a) => POp::Control(self.resolve_action(a)),
+                MOp::If { cond, then_ops, else_ops } => POp::If {
+                    cond: cond.clone(),
+                    then_ops: self.compile_ops(then_ops),
+                    else_ops: self.compile_ops(else_ops),
+                },
+                MOp::For { reg, start, stop, step, body } => POp::For {
+                    reg: *reg,
+                    start: start.clone(),
+                    stop: stop.clone(),
+                    step: step.clone(),
+                    body: self.compile_ops(body),
+                },
+                MOp::Halt => POp::Halt,
+                MOp::Trace(s) => POp::Trace(s.clone()),
+            })
+            .collect()
+    }
+}
+
+impl RoutingPlan {
+    /// Build the full plan. Never fails: defects that make the program
+    /// unrunnable are collected in `build_errors` (the simulator turns
+    /// the first into a [`crate::machine::SimError`]; the static
+    /// checker reports its own diagnostics and ignores them).
+    pub fn build(prog: &MachineProgram, cfg: &MachineConfig) -> RoutingPlan {
+        Self::build_inner(prog, cfg, true)
+    }
+
+    /// Routes-and-slots-only plan: skips task-body compilation (action
+    /// interning, consume templates, `POp` trees). The static checker
+    /// only needs the traced paths, so it uses this cheaper build.
+    pub fn build_routes(prog: &MachineProgram, cfg: &MachineConfig) -> RoutingPlan {
+        Self::build_inner(prog, cfg, false)
+    }
+
+    fn build_inner(prog: &MachineProgram, cfg: &MachineConfig, compile_bodies: bool) -> RoutingPlan {
+        let (width, height) = (cfg.width, cfg.height);
+        let mut build_errors: Vec<String> = vec![];
+
+        // --- PE enumeration: identical order to the simulator's ---
+        let cells = cfg.grid_cells();
+        let mut pe_at = vec![NONE_U32; cells];
+        let mut pes: Vec<PlanPe> = vec![];
+        for (ci, class) in prog.classes.iter().enumerate() {
+            for g in &class.subgrids {
+                for (x, y) in g.iter() {
+                    if !cfg.in_bounds(x, y) {
+                        continue; // out-of-fabric: a validation error
+                    }
+                    let cell = (y * width + x) as usize;
+                    if pe_at[cell] != NONE_U32 {
+                        continue; // class overlap: a validation error
+                    }
+                    pe_at[cell] = pes.len() as u32;
+                    pes.push(PlanPe { x, y, class: ci });
+                }
+            }
+        }
+
+        // --- color dimension + per-class produced/consumed sets ---
+        let mut maxc: u16 = cfg.max_colors as u16;
+        for r in &prog.routes {
+            maxc = maxc.max(r.color as u16 + 1);
+        }
+        for c in &prog.colors_used {
+            maxc = maxc.max(*c as u16 + 1);
+        }
+        let mut scans: Vec<ClassColors> = Vec::with_capacity(prog.classes.len());
+        for class in &prog.classes {
+            let mut colors = ClassColors::default();
+            for t in &class.tasks {
+                if let TaskKind::Data { color, .. } = &t.kind {
+                    colors.consumed.insert(*color);
+                }
+                scan_colors(&t.body, &mut colors);
+            }
+            for c in colors.produced.iter().chain(colors.consumed.iter()) {
+                maxc = maxc.max(*c as u16 + 1);
+            }
+            scans.push(colors);
+        }
+        let ncolors = maxc as usize;
+
+        // --- trace every (source PE, produced color) flow once ---
+        let mut flow_of = vec![NONE_U32; pes.len() * ncolors];
+        let mut flows: Vec<PlannedFlow> = vec![];
+        let mut delivered: Vec<BTreeSet<u8>> = vec![BTreeSet::new(); prog.classes.len()];
+        for (pi, pe) in pes.iter().enumerate() {
+            for &color in &scans[pe.class].produced {
+                let key = pi * ncolors + color as usize;
+                if flow_of[key] != NONE_U32 {
+                    continue;
+                }
+                let trace = trace_route(prog, cfg, color, pe.x, pe.y);
+                let mut flow = PlannedFlow {
+                    src: (pe.x, pe.y),
+                    color,
+                    trace,
+                    error: None,
+                    links: vec![],
+                    dests: vec![],
+                };
+                match &flow.trace {
+                    Err(e) => flow.error = Some(FlowError::Route(e.clone())),
+                    Ok(path) => {
+                        if path.dests.is_empty() {
+                            flow.error = Some(FlowError::NoDest);
+                        }
+                        for (dx, dy, depth) in &path.dests {
+                            if flow.error.is_some() {
+                                break;
+                            }
+                            let cell = (dy * width + dx) as usize;
+                            let dst = if cfg.in_bounds(*dx, *dy) { pe_at[cell] } else { NONE_U32 };
+                            if dst == NONE_U32 {
+                                flow.error = Some(FlowError::NoCode { x: *dx, y: *dy });
+                                break;
+                            }
+                            delivered[pes[dst as usize].class].insert(color);
+                            // Destination slot resolved after slot assignment.
+                            flow.dests.push((dst, SLOT_NONE, *depth));
+                        }
+                        if flow.error.is_none() {
+                            flow.links = path
+                                .links
+                                .iter()
+                                .map(|l| {
+                                    (((l.y * width + l.x) * 5) as u32 + l.dir.index() as u32, l.depth)
+                                })
+                                .collect();
+                        } else {
+                            flow.dests.clear();
+                        }
+                    }
+                }
+                flow_of[key] = flows.len() as u32;
+                flows.push(flow);
+            }
+        }
+
+        // --- per-class slot tables + task tables + compiled bodies ---
+        let mut actions: Vec<Vec<PAction>> = vec![vec![]]; // id 0 = empty
+        let mut classes: Vec<ClassPlan> = Vec::with_capacity(prog.classes.len());
+        for (ci, class) in prog.classes.iter().enumerate() {
+            let mut cp = ClassPlan::default();
+
+            // Endpoint slots: every color the class consumes or receives.
+            let mut endpoint_colors: BTreeSet<u8> = scans[ci].consumed.clone();
+            endpoint_colors.extend(delivered[ci].iter().copied());
+            if endpoint_colors.len() >= SLOT_NONE as usize {
+                build_errors.push(format!(
+                    "class {}: {} endpoint colors exceed the plan's slot budget",
+                    class.name,
+                    endpoint_colors.len()
+                ));
+                // Keep `classes` index-parallel to `prog.classes`; the
+                // build error stops the simulator from ever running it.
+                classes.push(ClassPlan::default());
+                continue;
+            }
+            cp.color_slot = vec![SLOT_NONE; ncolors];
+            for (slot, color) in endpoint_colors.iter().enumerate() {
+                cp.color_slot[*color as usize] = slot as u8;
+                cp.slot_color.push(*color);
+            }
+            cp.data_task_of_slot = vec![TASK_NONE; cp.slot_color.len()];
+
+            // Task tables.
+            cp.task_by_id = vec![TASK_NONE; 256];
+            for (ti, t) in class.tasks.iter().enumerate() {
+                if cp.task_by_id[t.hw_id as usize] == TASK_NONE {
+                    cp.task_by_id[t.hw_id as usize] = ti as u16;
+                }
+            }
+            let mut order: Vec<u16> = (0..class.tasks.len() as u16).collect();
+            order.sort_by_key(|ti| class.tasks[*ti as usize].hw_id);
+            cp.rank_of = vec![0u8; class.tasks.len()];
+            for (rank, ti) in order.iter().enumerate() {
+                cp.rank_of[*ti as usize] = rank as u8;
+            }
+            cp.order = order;
+            for id in &class.entry_tasks {
+                let ti = cp.task_by_id[*id as usize];
+                if ti == TASK_NONE {
+                    build_errors
+                        .push(format!("class {}: entry task id {} undefined", class.name, id));
+                } else {
+                    cp.entry.push(ti);
+                }
+            }
+
+            // The scheduler's ready mask is a u32 over scheduler ranks.
+            // Post-validation this cannot trip (hardware task IDs are
+            // unique and < 28), but guard it so an unvalidated program
+            // can never alias two tasks onto one bit.
+            let mask_ok = class.tasks.len() <= 32;
+            if compile_bodies && !mask_ok {
+                build_errors.push(format!(
+                    "class {}: {} tasks exceed the 32-task scheduler mask",
+                    class.name,
+                    class.tasks.len()
+                ));
+            }
+
+            // Compile bodies.
+            let mut consumes: Vec<PDsd> = vec![];
+            if compile_bodies && mask_ok {
+                for (ti, t) in class.tasks.iter().enumerate() {
+                    let kind = match &t.kind {
+                        TaskKind::Local => PTaskKind::Local,
+                        TaskKind::Data { color, wavelet_reg } => {
+                            let slot = cp.color_slot[*color as usize];
+                            // One data task per color is guaranteed by
+                            // validation (data task ID == color, IDs
+                            // unique); first-wins matches the original
+                            // linear scan for unvalidated programs.
+                            if cp.data_task_of_slot[slot as usize] == TASK_NONE {
+                                cp.data_task_of_slot[slot as usize] = ti as u16;
+                            }
+                            PTaskKind::Data { slot, wavelet_reg: *wavelet_reg }
+                        }
+                    };
+                    let body = {
+                        let mut bc = BodyCompiler {
+                            color_slot: &cp.color_slot,
+                            task_by_id: &cp.task_by_id,
+                            actions: &mut actions,
+                            consumes: &mut consumes,
+                        };
+                        bc.compile_ops(&t.body)
+                    };
+                    cp.tasks.push(PTask {
+                        kind,
+                        initially_active: t.initially_active,
+                        initially_blocked: t.initially_blocked,
+                        body,
+                    });
+                }
+            }
+            cp.consumes = consumes;
+            classes.push(cp);
+        }
+
+        // --- resolve destination endpoint slots (needs slot tables) ---
+        for flow in &mut flows {
+            for d in &mut flow.dests {
+                let ci = pes[d.0 as usize].class;
+                let slots = &classes[ci].color_slot;
+                d.1 = slots.get(flow.color as usize).copied().unwrap_or(SLOT_NONE);
+            }
+        }
+
+        RoutingPlan {
+            width,
+            height,
+            ncolors,
+            pe_at,
+            pes,
+            flow_of,
+            flows,
+            classes,
+            actions,
+            colors_used: prog.distinct_colors().len(),
+            build_errors,
+        }
+    }
+
+    /// Dense PE lookup.
+    pub fn pe_index(&self, x: i64, y: i64) -> Option<usize> {
+        if x < 0 || x >= self.width || y < 0 || y >= self.height {
+            return None;
+        }
+        let v = self.pe_at[(y * self.width + x) as usize];
+        if v == NONE_U32 {
+            None
+        } else {
+            Some(v as usize)
+        }
+    }
+
+    /// Flow index for a (PE index, color) injection point, if planned.
+    pub fn flow_index(&self, pe: usize, color: u8) -> Option<usize> {
+        let v = self.flow_of[pe * self.ncolors + color as usize];
+        if v == NONE_U32 {
+            None
+        } else {
+            Some(v as usize)
+        }
+    }
+
+    /// The traced path for a flow injected at `(x, y)` on `color`, if
+    /// any task there can produce it — the shared route source for the
+    /// static checker.
+    pub fn path(&self, x: i64, y: i64, color: u8) -> Option<&Result<FlowPath, RouteError>> {
+        let pi = self.pe_index(x, y)?;
+        self.flow_index(pi, color).map(|fi| &self.flows[fi].trace)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::machine::program::{
+        DirSet, Direction, FieldAlloc, PeClass, RouteRule, TaskDef,
+    };
+    use crate::util::Subgrid;
+
+    fn send_recv_prog(color: u8) -> MachineProgram {
+        let sender = PeClass {
+            name: "sender".into(),
+            subgrids: vec![Subgrid::point(0, 0)],
+            fields: vec![FieldAlloc {
+                name: "a".into(),
+                addr: 0,
+                len: 4,
+                ty: Dtype::F32,
+                is_extern: false,
+            }],
+            mem_size: 16,
+            tasks: vec![TaskDef {
+                name: "send".into(),
+                hw_id: 25,
+                kind: TaskKind::Local,
+                initially_active: false,
+                initially_blocked: false,
+                body: vec![MOp::Dsd(DsdOp {
+                    kind: DsdKind::Mov,
+                    dst: DsdRef::FabOut { color, len: SExpr::imm(4), ty: Dtype::F32 },
+                    src0: Some(DsdRef::mem(0, SExpr::imm(4), Dtype::F32)),
+                    src1: None,
+                    scalar: None,
+                    is_async: true,
+                    on_complete: vec![TaskAction::activate(26)],
+                })],
+            }],
+            entry_tasks: vec![25],
+        };
+        let recv = PeClass {
+            name: "recv".into(),
+            subgrids: vec![Subgrid::point(1, 0)],
+            fields: vec![FieldAlloc {
+                name: "b".into(),
+                addr: 0,
+                len: 4,
+                ty: Dtype::F32,
+                is_extern: false,
+            }],
+            mem_size: 16,
+            tasks: vec![TaskDef {
+                name: "recv".into(),
+                hw_id: 25,
+                kind: TaskKind::Local,
+                initially_active: false,
+                initially_blocked: false,
+                body: vec![MOp::Dsd(DsdOp {
+                    kind: DsdKind::Mov,
+                    dst: DsdRef::mem(0, SExpr::imm(4), Dtype::F32),
+                    src0: Some(DsdRef::FabIn { color, len: SExpr::imm(4), ty: Dtype::F32 }),
+                    src1: None,
+                    scalar: None,
+                    is_async: true,
+                    on_complete: vec![TaskAction::activate(26)],
+                })],
+            }],
+            entry_tasks: vec![25],
+        };
+        MachineProgram {
+            name: "plan_test".into(),
+            classes: vec![sender, recv],
+            routes: vec![
+                RouteRule {
+                    color,
+                    subgrid: Subgrid::point(0, 0),
+                    rx: DirSet::single(Direction::Ramp),
+                    tx: DirSet::single(Direction::East),
+                },
+                RouteRule {
+                    color,
+                    subgrid: Subgrid::point(1, 0),
+                    rx: DirSet::single(Direction::West),
+                    tx: DirSet::single(Direction::Ramp),
+                },
+            ],
+            colors_used: vec![color],
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn plan_precompiles_flow_and_slots() {
+        let prog = send_recv_prog(3);
+        let cfg = MachineConfig::with_grid(2, 1);
+        let plan = RoutingPlan::build(&prog, &cfg);
+        assert!(plan.build_errors.is_empty(), "{:?}", plan.build_errors);
+        assert_eq!(plan.pes.len(), 2);
+        let src = plan.pe_index(0, 0).unwrap();
+        let dst = plan.pe_index(1, 0).unwrap();
+        let fi = plan.flow_index(src, 3).expect("sender flow planned");
+        let flow = &plan.flows[fi];
+        assert!(flow.error.is_none());
+        assert_eq!(flow.links.len(), 1);
+        assert_eq!(flow.dests.len(), 1);
+        assert_eq!(flow.dests[0].0 as usize, dst);
+        // The receiver class has exactly one endpoint slot, for color 3.
+        let recv_class = plan.pes[dst].class;
+        let cp = &plan.classes[recv_class];
+        assert_eq!(cp.slot_color, vec![3]);
+        assert_eq!(cp.color_slot[3], 0);
+        assert_eq!(flow.dests[0].1, 0);
+        // Consume template registered for the receiver's fabric-in op.
+        assert_eq!(cp.consumes.len(), 1);
+        assert_eq!(cp.consumes[0].fab_slot, 0);
+    }
+
+    #[test]
+    fn plan_interns_action_lists() {
+        let prog = send_recv_prog(1);
+        let cfg = MachineConfig::with_grid(2, 1);
+        let plan = RoutingPlan::build(&prog, &cfg);
+        // Id 0 is the reserved empty list; both classes' on_complete
+        // lists resolve to [activate(26)] with task 26 undefined →
+        // task_ix = TASK_NONE, identical content → one interned entry.
+        assert!(plan.actions[ACTIONS_EMPTY as usize].is_empty());
+        assert_eq!(plan.actions.len(), 2);
+        assert_eq!(plan.actions[1].len(), 1);
+        assert_eq!(plan.actions[1][0].task_ix, TASK_NONE);
+    }
+
+    #[test]
+    fn plan_stores_route_errors_lazily() {
+        // Producer with no routes: the flow is planned but erroneous;
+        // building must still succeed (lazy error surfacing).
+        let mut prog = send_recv_prog(2);
+        prog.routes.clear();
+        let cfg = MachineConfig::with_grid(2, 1);
+        let plan = RoutingPlan::build(&prog, &cfg);
+        assert!(plan.build_errors.is_empty());
+        let src = plan.pe_index(0, 0).unwrap();
+        let fi = plan.flow_index(src, 2).unwrap();
+        assert!(matches!(plan.flows[fi].error, Some(FlowError::Route(_))));
+        assert!(plan.flows[fi].trace.is_err());
+    }
+
+    #[test]
+    fn plan_entry_task_resolution() {
+        let mut prog = send_recv_prog(1);
+        prog.classes[0].entry_tasks = vec![9]; // undefined id
+        let cfg = MachineConfig::with_grid(2, 1);
+        let plan = RoutingPlan::build(&prog, &cfg);
+        assert!(plan.build_errors.iter().any(|e| e.contains("entry task id 9")));
+    }
+
+    #[test]
+    fn scheduler_order_follows_hw_ids() {
+        let mut prog = send_recv_prog(1);
+        // Add a second, lower-ID task to the sender class.
+        prog.classes[0].tasks.push(TaskDef {
+            name: "early".into(),
+            hw_id: 10,
+            kind: TaskKind::Local,
+            initially_active: true,
+            initially_blocked: false,
+            body: vec![],
+        });
+        let cfg = MachineConfig::with_grid(2, 1);
+        let plan = RoutingPlan::build(&prog, &cfg);
+        let cp = &plan.classes[0];
+        assert_eq!(cp.order, vec![1, 0]); // hw 10 before hw 25
+        assert_eq!(cp.rank_of[1], 0);
+        assert_eq!(cp.rank_of[0], 1);
+        assert_eq!(cp.task_by_id[10], 1);
+        assert_eq!(cp.task_by_id[25], 0);
+    }
+}

@@ -252,7 +252,7 @@ pub enum TaskActionKind {
 
 /// A task-control action, optionally setting a dispatch-state register
 /// first (task-ID recycling: the activator selects the logical task).
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct TaskAction {
     pub kind: TaskActionKind,
     /// Hardware task ID on the *same* PE.
@@ -559,6 +559,14 @@ impl MachineProgram {
             .find(|r| r.color == color && r.subgrid.contains(x, y))
     }
 
+    /// Distinct colors referenced by the program, sorted ascending.
+    pub fn distinct_colors(&self) -> Vec<u8> {
+        let mut colors = self.colors_used.clone();
+        colors.sort_unstable();
+        colors.dedup();
+        colors
+    }
+
     /// Max task IDs used by any class.
     pub fn max_task_ids_used(&self) -> usize {
         self.classes
@@ -582,9 +590,7 @@ impl MachineProgram {
     /// Returns a list of violations ("OOR"/"OOM" in the paper's terms).
     pub fn validate(&self, cfg: &super::MachineConfig) -> Vec<String> {
         let mut errs = vec![];
-        let mut colors = self.colors_used.clone();
-        colors.sort_unstable();
-        colors.dedup();
+        let colors = self.distinct_colors();
         if colors.len() > cfg.max_colors as usize {
             errs.push(format!(
                 "OOR: {} colors used, only {} routable",

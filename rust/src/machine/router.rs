@@ -5,6 +5,13 @@
 //! and produces the full (possibly multicast) path: the ordered list of
 //! links the flow occupies and the set of destination PEs with their hop
 //! depths.
+//!
+//! This is the single source of truth for route geometry. It runs only
+//! at setup time: [`crate::machine::plan::RoutingPlan`] traces every
+//! (source PE, color) pair once when a program is loaded, and both the
+//! simulator's event loop and the static checker
+//! ([`crate::analysis::flowgraph`]) consume those precompiled paths, so
+//! the two can never disagree about where a flow goes.
 
 use super::program::{Direction, MachineProgram, RouteRule};
 use super::MachineConfig;

@@ -7,14 +7,24 @@
 //! the event count O(flows), not O(wavelets), while preserving wormhole
 //! pipelining behaviour (chained reductions overlap hop-by-hop exactly as
 //! on the real fabric).
+//!
+//! The runtime is *flat-memory*: every lookup the event loop needs is
+//! resolved at [`Simulator::new`] time by [`super::plan::RoutingPlan`]
+//! — dense row-major PE and link-occupancy arrays, pre-traced multicast
+//! routes, per-class color→endpoint-slot tables, and compiled task
+//! bodies with interned completion actions. Event-heap entries are
+//! `Copy` (flow payloads live in an indexed pool), so processing an
+//! event performs no hash lookups and no per-event heap allocation.
 
 use super::config::MachineConfig;
 use super::metrics::{Metrics, RunReport};
-use super::program::{
-    DsdKind, DsdOp, DsdRef, Dtype, IoDir, MOp, MachineProgram, SBinOp, SExpr, SVal, TaskAction,
-    TaskActionKind, TaskKind,
+use super::plan::{
+    FlowError, PAction, PDsd, POp, PTaskKind, RoutingPlan, ACTIONS_EMPTY, SLOT_NONE, TASK_NONE,
 };
-use super::router::{trace_route, FlowPath, RouteError};
+use super::program::{
+    DsdKind, DsdRef, Dtype, IoDir, MachineProgram, SBinOp, SExpr, SVal, TaskActionKind,
+};
+use super::router::RouteError;
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap, VecDeque};
 use std::rc::Rc;
@@ -105,9 +115,12 @@ enum RVOp<'a> {
     Nothing,
 }
 
-/// An outstanding microthreaded fabric-in consumer.
+/// An outstanding microthreaded fabric-in consumer. The operation is a
+/// plan-time consume template referenced by index — issuing a
+/// microthread clones nothing.
 struct PendingConsume {
-    op: DsdOp,
+    /// Index into the class's [`RoutingPlan`] consume-template table.
+    consume_ix: u32,
     need: usize,
     taken: Vec<u32>,
     /// Availability time of the last word taken so far.
@@ -115,11 +128,21 @@ struct PendingConsume {
     issue_time: u64,
 }
 
-/// Per-(PE, color) fabric endpoint state.
+/// Per-(PE, endpoint slot) fabric endpoint state.
 #[derive(Default)]
 struct ColorEndpoint {
     flows: VecDeque<ArrivedFlow>,
     consumers: VecDeque<PendingConsume>,
+}
+
+/// One pooled flow payload. The pool slot releases its reference after
+/// the last destination's `FlowArrive` event is processed, so payload
+/// memory is freed once every endpoint holds (or has drained) its own
+/// `Rc` — matching the pre-pool lifetime.
+struct FlowPayload {
+    words: Option<Rc<Vec<u32>>>,
+    /// `FlowArrive` events still outstanding for this payload.
+    pending: u32,
 }
 
 /// Runtime state of one PE.
@@ -130,24 +153,32 @@ struct Pe {
     mem: Vec<u8>,
     regs: [SVal; NUM_REGS],
     tasks: Vec<TaskState>,
+    /// Bit r (scheduler-rank order) set = the task at `order[r]` is
+    /// potentially runnable: local tasks exactly (active && !blocked),
+    /// data tasks when unblocked with queued flows and no microthread
+    /// bound. Maintained by [`Simulator::refresh_task_bit`]; lets the
+    /// scheduler skip quiescent tasks without re-inspection.
+    ready: u32,
     busy_until: u64,
     last_activity: u64,
-    endpoints: HashMap<u8, ColorEndpoint>,
+    /// Dense endpoint table, indexed by the class's color→slot map.
+    endpoints: Vec<ColorEndpoint>,
     ran_anything: bool,
     busy_cycles: u64,
 }
 
-#[derive(Clone, Debug)]
+#[derive(Clone, Copy, Debug)]
 enum EventKind {
     /// Try to run a ready task on this PE.
     PeReady(u32),
-    /// A flow's first word reaches this PE's ramp.
-    FlowArrive { pe: u32, color: u8, first_word: u64, words: Rc<Vec<u32>> },
-    /// A microthread completed: apply its task actions.
-    Complete { pe: u32, actions: Vec<TaskAction> },
+    /// A flow's first word reaches this PE's ramp. The payload is an
+    /// index into the simulator's flow-payload pool.
+    FlowArrive { pe: u32, slot: u8, first_word: u64, payload: u32 },
+    /// A microthread completed: apply the interned action list.
+    Complete { pe: u32, actions: u32 },
 }
 
-#[derive(Clone, Debug)]
+#[derive(Clone, Copy, Debug)]
 struct Event {
     time: u64,
     seq: u64,
@@ -176,82 +207,90 @@ impl Ord for Event {
 pub struct Simulator {
     pub cfg: MachineConfig,
     prog: Rc<MachineProgram>,
+    /// Everything resolvable before the first event (see `machine::plan`).
+    plan: Rc<RoutingPlan>,
     pes: Vec<Pe>,
-    pe_lookup: HashMap<(i64, i64), u32>,
-    /// Link busy-until per ((x, y), direction index).
-    link_busy: HashMap<(i64, i64, usize), u64>,
-    route_cache: HashMap<(i64, i64, u8), Rc<FlowPath>>,
+    /// Link busy-until, dense: `(y·width + x)·5 + direction index`.
+    link_busy: Vec<u64>,
+    /// Flow payload pool; `FlowArrive` events reference entries by index
+    /// so heap entries stay `Copy`.
+    payloads: Vec<FlowPayload>,
+    /// Pool slots whose arrivals all drained — recycled by `send_flow`
+    /// so the pool stays O(in-flight flows), not O(total flows).
+    free_payloads: Vec<u32>,
     events: BinaryHeap<Reverse<Event>>,
     now: u64,
     seq: u64,
     metrics: Metrics,
     /// External inputs staged before run (arg name -> data words).
     inputs: HashMap<String, Vec<u32>>,
-    /// Per-class task indices sorted by hardware ID (scheduler order).
-    task_order: Vec<Rc<Vec<usize>>>,
     ran: bool,
 }
 
 impl Simulator {
-    /// Build a simulator for `prog` on `cfg`, validating resources.
+    /// Build a simulator for `prog` on `cfg`: validate resources, then
+    /// precompile the routing/execution plan (all routes traced, task
+    /// tables resolved, bodies compiled) so [`Simulator::run`] does no
+    /// per-event resolution work.
     pub fn new(cfg: MachineConfig, prog: MachineProgram) -> Result<Simulator, SimError> {
         let errs = prog.validate(&cfg);
         if !errs.is_empty() {
             return Err(SimError::Validation(errs));
         }
-        let prog = Rc::new(prog);
-        let mut pes = Vec::new();
-        let mut pe_lookup = HashMap::new();
-        for (ci, class) in prog.classes.iter().enumerate() {
-            for g in &class.subgrids {
-                for (x, y) in g.iter() {
-                    let idx = pes.len() as u32;
-                    pe_lookup.insert((x, y), idx);
-                    let tasks = vec![TaskState::default(); class.tasks.len()];
-                    pes.push(Pe {
-                        x,
-                        y,
-                        class: ci,
-                        mem: vec![0u8; class.mem_size as usize],
-                        regs: [SVal::I(0); NUM_REGS],
-                        tasks,
-                        busy_until: 0,
-                        last_activity: 0,
-                        endpoints: HashMap::new(),
-                        ran_anything: false,
-                        busy_cycles: 0,
-                    });
-                }
-            }
+        let plan = RoutingPlan::build(&prog, &cfg);
+        if let Some(e) = plan.build_errors.first() {
+            return Err(SimError::Program(e.clone()));
         }
-        let task_order: Vec<Rc<Vec<usize>>> = prog
-            .classes
-            .iter()
-            .map(|c| {
-                let mut order: Vec<usize> = (0..c.tasks.len()).collect();
-                order.sort_by_key(|ti| c.tasks[*ti].hw_id);
-                Rc::new(order)
-            })
-            .collect();
+        let prog = Rc::new(prog);
+        let mut pes = Vec::with_capacity(plan.pes.len());
+        for p in &plan.pes {
+            let class = &prog.classes[p.class];
+            let nslots = plan.classes[p.class].slot_color.len();
+            pes.push(Pe {
+                x: p.x,
+                y: p.y,
+                class: p.class,
+                mem: vec![0u8; class.mem_size as usize],
+                regs: [SVal::I(0); NUM_REGS],
+                tasks: vec![TaskState::default(); class.tasks.len()],
+                ready: 0,
+                busy_until: 0,
+                last_activity: 0,
+                endpoints: (0..nslots).map(|_| ColorEndpoint::default()).collect(),
+                ran_anything: false,
+                busy_cycles: 0,
+            });
+        }
+        let link_busy = vec![0u64; cfg.link_slots()];
         Ok(Simulator {
             cfg,
             prog,
+            plan: Rc::new(plan),
             pes,
-            pe_lookup,
-            link_busy: HashMap::new(),
-            route_cache: HashMap::new(),
-            events: BinaryHeap::new(),
+            link_busy,
+            payloads: Vec::new(),
+            free_payloads: Vec::new(),
+            events: BinaryHeap::with_capacity(1024),
             now: 0,
             seq: 0,
             metrics: Metrics::default(),
             inputs: HashMap::new(),
-            task_order,
             ran: false,
         })
     }
 
     pub fn program(&self) -> &MachineProgram {
         &self.prog
+    }
+
+    /// The precompiled routing/execution plan.
+    pub fn plan(&self) -> &RoutingPlan {
+        &self.plan
+    }
+
+    /// Dense PE lookup (row-major grid table).
+    fn pe_index(&self, x: i64, y: i64) -> Option<usize> {
+        self.plan.pe_index(x, y)
     }
 
     /// Stage input data for a kernel argument (f32 layout).
@@ -296,12 +335,12 @@ impl Simulator {
                 }
             };
             for (x, y) in binding.subgrid.iter() {
-                let pe_idx = *self.pe_lookup.get(&(x, y)).ok_or_else(|| {
+                let pe_idx = self.pe_index(x, y).ok_or_else(|| {
                     SimError::Io(format!(
                         "input {} targets PE ({x},{y}) with no code",
                         binding.arg
                     ))
-                })? as usize;
+                })?;
                 let class = &prog.classes[self.pes[pe_idx].class];
                 let field = class.field(&binding.field).ok_or_else(|| {
                     SimError::Io(format!(
@@ -355,11 +394,9 @@ impl Simulator {
         let mut out = vec![0u32; total];
         for binding in bindings {
             for (x, y) in binding.subgrid.iter() {
-                let pe_idx = *self
-                    .pe_lookup
-                    .get(&(x, y))
-                    .ok_or_else(|| SimError::Io(format!("output {arg}: PE ({x},{y}) has no code")))?
-                    as usize;
+                let pe_idx = self
+                    .pe_index(x, y)
+                    .ok_or_else(|| SimError::Io(format!("output {arg}: PE ({x},{y}) has no code")))?;
                 let class = &self.prog.classes[self.pes[pe_idx].class];
                 let field = class.field(&binding.field).ok_or_else(|| {
                     SimError::Io(format!("output {arg}: field {} missing", binding.field))
@@ -393,7 +430,7 @@ impl Simulator {
 
     /// Debug: read `len` elements of `field` at PE (x, y) as f32.
     pub fn read_field(&self, x: i64, y: i64, field: &str) -> Option<Vec<f32>> {
-        let pe_idx = *self.pe_lookup.get(&(x, y))? as usize;
+        let pe_idx = self.pe_index(x, y)?;
         let class = &self.prog.classes[self.pes[pe_idx].class];
         let f = class.field(field)?;
         let mut out = Vec::with_capacity(f.len as usize);
@@ -413,30 +450,27 @@ impl Simulator {
         self.load_inputs()?;
 
         // Initialize task states and entry activations.
-        let prog = Rc::clone(&self.prog);
+        let plan = Rc::clone(&self.plan);
         for pe_idx in 0..self.pes.len() {
-            let class = &prog.classes[self.pes[pe_idx].class];
-            for (ti, t) in class.tasks.iter().enumerate() {
+            let cp = &plan.classes[self.pes[pe_idx].class];
+            for (ti, t) in cp.tasks.iter().enumerate() {
                 let st = &mut self.pes[pe_idx].tasks[ti];
-                st.active = t.initially_active || matches!(t.kind, TaskKind::Data { .. });
+                st.active = t.initially_active || matches!(t.kind, PTaskKind::Data { .. });
                 st.blocked = t.initially_blocked;
             }
-            for id in &class.entry_tasks {
-                if let Some(ti) = class.tasks.iter().position(|t| t.hw_id == *id) {
-                    self.pes[pe_idx].tasks[ti].active = true;
-                } else {
-                    return Err(SimError::Program(format!(
-                        "class {}: entry task id {} undefined",
-                        class.name, id
-                    )));
-                }
+            for &ti in &cp.entry {
+                self.pes[pe_idx].tasks[ti as usize].active = true;
             }
-            if !class.entry_tasks.is_empty() {
+            for ti in 0..cp.tasks.len() {
+                self.refresh_task_bit(pe_idx, ti);
+            }
+            if !cp.entry.is_empty() {
                 self.schedule(0, EventKind::PeReady(pe_idx as u32));
             }
         }
 
-        // Event loop.
+        // Event loop: pure dense-array arithmetic; every event variant
+        // is `Copy` and all routing/action state is preresolved.
         while let Some(Reverse(ev)) = self.events.pop() {
             self.metrics.events += 1;
             if self.metrics.events > self.cfg.max_events {
@@ -445,11 +479,11 @@ impl Simulator {
             self.now = ev.time;
             match ev.kind {
                 EventKind::PeReady(pe) => self.pe_ready(pe as usize)?,
-                EventKind::FlowArrive { pe, color, first_word, words } => {
-                    self.flow_arrive(pe as usize, color, first_word, words)?
+                EventKind::FlowArrive { pe, slot, first_word, payload } => {
+                    self.flow_arrive(pe as usize, slot, first_word, payload)?
                 }
                 EventKind::Complete { pe, actions } => {
-                    self.apply_actions(pe as usize, &actions);
+                    self.apply_actions_id(pe as usize, actions);
                     self.schedule(self.now, EventKind::PeReady(pe));
                 }
             }
@@ -458,13 +492,14 @@ impl Simulator {
         // Quiescent: check for deadlock.
         let mut stuck = vec![];
         for pe in &self.pes {
-            for (color, ep) in &pe.endpoints {
+            let cp = &plan.classes[pe.class];
+            for (slot, ep) in pe.endpoints.iter().enumerate() {
                 if let Some(c) = ep.consumers.front() {
                     stuck.push(format!(
                         "PE ({},{}) color {} waiting for {} more wavelets",
                         pe.x,
                         pe.y,
-                        color,
+                        cp.slot_color[slot],
                         c.need - c.taken.len()
                     ));
                 }
@@ -472,50 +507,53 @@ impl Simulator {
         }
         if !stuck.is_empty() {
             stuck.truncate(8);
-            // Cross-reference the static dataflow checker: if the
-            // analysis flags this program too, the deadlock was knowable
-            // before execution (run `spada check`); otherwise it is a
-            // genuinely dynamic schedule artifact.
-            let verdict = {
-                let report = crate::analysis::check(&self.prog, &self.cfg);
-                let statics: Vec<String> = report
-                    .errors()
-                    .filter(|d| {
-                        matches!(
-                            d.kind,
-                            crate::analysis::DiagKind::Deadlock
-                                | crate::analysis::DiagKind::Starvation
+            // Cross-reference the static dataflow checker. When the
+            // compiler already ran the checker (Options::check) the
+            // stored verdict is reused instead of re-running the full
+            // analysis here.
+            let verdict = match self.prog.meta.get("static_check").map(String::as_str) {
+                Some("clean") => {
+                    "static check passed at compile time: no static deadlock (dynamic-only)"
+                        .to_string()
+                }
+                _ => {
+                    let report = crate::analysis::check(&self.prog, &self.cfg);
+                    let statics: Vec<String> = report
+                        .errors()
+                        .filter(|d| {
+                            matches!(
+                                d.kind,
+                                crate::analysis::DiagKind::Deadlock
+                                    | crate::analysis::DiagKind::Starvation
+                            )
+                        })
+                        .take(2)
+                        .map(|d| d.to_string())
+                        .collect();
+                    if statics.is_empty() {
+                        "static check found no deadlock (dynamic-only)".to_string()
+                    } else {
+                        format!(
+                            "confirmed by static analysis (`spada check`): {}",
+                            statics.join("; ")
                         )
-                    })
-                    .take(2)
-                    .map(|d| d.to_string())
-                    .collect();
-                if statics.is_empty() {
-                    "static check found no deadlock (dynamic-only)".to_string()
-                } else {
-                    format!(
-                        "confirmed by static analysis (`spada check`): {}",
-                        statics.join("; ")
-                    )
+                    }
                 }
             };
             return Err(SimError::Deadlock(format!("{}; {}", stuck.join("; "), verdict)));
         }
 
         let cycles = self.pes.iter().map(|p| p.last_activity).max().unwrap_or(0);
-        let mut m = self.metrics.clone();
+        let mut m = std::mem::take(&mut self.metrics);
         m.active_pes = self.pes.iter().filter(|p| p.ran_anything).count() as u64;
         m.busy_cycles = self.pes.iter().map(|p| p.busy_cycles).sum();
-        let mut colors = self.prog.colors_used.clone();
-        colors.sort_unstable();
-        colors.dedup();
         Ok(RunReport {
             kernel: self.prog.name.clone(),
             cycles,
             metrics: m,
             width: self.cfg.width,
             height: self.cfg.height,
-            colors_used: colors.len(),
+            colors_used: plan.colors_used,
             task_ids_used: self.prog.max_task_ids_used(),
             mem_bytes_used: self.prog.max_mem_used(),
         })
@@ -531,71 +569,62 @@ impl Simulator {
             self.schedule(t, EventKind::PeReady(pe_idx as u32));
             return Ok(());
         }
-        let prog = Rc::clone(&self.prog);
-        let class = &prog.classes[self.pes[pe_idx].class];
+        let plan = Rc::clone(&self.plan);
+        let cp = &plan.classes[self.pes[pe_idx].class];
 
-        // Pick the lowest-ID runnable task: local (active && !blocked) or
-        // data (not blocked, words available now, no DSD consumer bound).
+        // Pick the lowest-hardware-ID runnable task by walking the set
+        // bits of the ready mask in rank order: quiescent tasks are
+        // never re-inspected. Local bits are exact; data bits still
+        // need the (time-dependent) head-word availability check.
         let mut chosen: Option<usize> = None;
-        let order = Rc::clone(&self.task_order[self.pes[pe_idx].class]);
         let mut next_wakeup: Option<u64> = None;
-        for &ti in order.iter() {
-            let tdef = &class.tasks[ti];
-            let st = &self.pes[pe_idx].tasks[ti];
-            match &tdef.kind {
-                TaskKind::Local => {
-                    if st.active && !st.blocked {
-                        chosen = Some(ti);
-                        break;
-                    }
+        let mut mask = self.pes[pe_idx].ready;
+        while mask != 0 {
+            let rank = mask.trailing_zeros() as usize;
+            mask &= mask - 1;
+            let ti = cp.order[rank] as usize;
+            match cp.tasks[ti].kind {
+                PTaskKind::Local => {
+                    chosen = Some(ti);
+                    break;
                 }
-                TaskKind::Data { color, .. } => {
-                    if st.blocked {
-                        continue;
-                    }
-                    if let Some(ep) = self.pes[pe_idx].endpoints.get(color) {
-                        if !ep.consumers.is_empty() {
-                            continue; // color driven by a microthread
-                        }
-                        if let Some(f) = ep.flows.front() {
-                            let t0 = f.word_time(f.cursor);
-                            if t0 <= self.now {
-                                chosen = Some(ti);
-                                break;
-                            } else {
-                                next_wakeup =
-                                    Some(next_wakeup.map_or(t0, |w: u64| w.min(t0)));
-                            }
+                PTaskKind::Data { slot, .. } => {
+                    if let Some(f) = self.pes[pe_idx].endpoints[slot as usize].flows.front() {
+                        let t0 = f.word_time(f.cursor);
+                        if t0 <= self.now {
+                            chosen = Some(ti);
+                            break;
+                        } else {
+                            next_wakeup = Some(next_wakeup.map_or(t0, |w: u64| w.min(t0)));
                         }
                     }
                 }
             }
         }
-        if chosen.is_none() {
+        let Some(ti) = chosen else {
             if let Some(t) = next_wakeup {
                 self.schedule(t, EventKind::PeReady(pe_idx as u32));
             }
             return Ok(());
-        }
-        let ti = chosen.unwrap();
-        let tdef = class.tasks[ti].clone();
+        };
         self.metrics.task_runs += 1;
         self.pes[pe_idx].ran_anything = true;
 
         let start = self.now.max(self.pes[pe_idx].busy_until);
         let mut clock = start + self.cfg.task_wakeup_cycles;
 
-        match &tdef.kind {
-            TaskKind::Local => {
+        match cp.tasks[ti].kind {
+            PTaskKind::Local => {
                 self.pes[pe_idx].tasks[ti].active = false;
-                self.exec_ops(pe_idx, &tdef.body, &mut clock)?;
+                self.refresh_task_bit(pe_idx, ti);
+                self.exec_ops(pe_idx, &cp.tasks[ti].body, &mut clock)?;
             }
-            TaskKind::Data { color, wavelet_reg } => {
+            PTaskKind::Data { slot, wavelet_reg } => {
                 // Consume available wavelets one at a time (hardware fires
                 // the task per wavelet; we batch into one scheduling event).
                 loop {
                     let word = {
-                        let ep = self.pes[pe_idx].endpoints.get_mut(color).unwrap();
+                        let ep = &mut self.pes[pe_idx].endpoints[slot as usize];
                         match ep.flows.front_mut() {
                             Some(f) if f.word_time(f.cursor) <= clock => {
                                 let w = f.words[f.cursor];
@@ -610,21 +639,20 @@ impl Simulator {
                         }
                     };
                     let Some(w) = word else { break };
-                    self.pes[pe_idx].regs[*wavelet_reg as usize] =
+                    self.pes[pe_idx].regs[wavelet_reg as usize] =
                         SVal::F(f32::from_bits(w) as f64);
                     clock += self.cfg.data_task_wavelet_cycles;
-                    self.exec_ops(pe_idx, &tdef.body, &mut clock)?;
+                    self.exec_ops(pe_idx, &cp.tasks[ti].body, &mut clock)?;
                     if self.pes[pe_idx].tasks[ti].blocked {
                         break; // body blocked its own task
                     }
                 }
                 // If more words are in flight, wake up again.
-                if let Some(ep) = self.pes[pe_idx].endpoints.get(color) {
-                    if let Some(f) = ep.flows.front() {
-                        let t0 = f.word_time(f.cursor);
-                        self.schedule(t0.max(clock), EventKind::PeReady(pe_idx as u32));
-                    }
+                if let Some(f) = self.pes[pe_idx].endpoints[slot as usize].flows.front() {
+                    let t0 = f.word_time(f.cursor);
+                    self.schedule(t0.max(clock), EventKind::PeReady(pe_idx as u32));
                 }
+                self.refresh_task_bit(pe_idx, ti);
             }
         }
 
@@ -636,22 +664,66 @@ impl Simulator {
         Ok(())
     }
 
-    fn apply_actions(&mut self, pe_idx: usize, actions: &[TaskAction]) {
-        let prog = Rc::clone(&self.prog);
-        let class = &prog.classes[self.pes[pe_idx].class];
-        for a in actions {
-            if let Some((reg, val)) = a.set_reg {
-                self.pes[pe_idx].regs[reg as usize] = SVal::I(val);
-                self.metrics.dispatches += 1;
-            }
-            if let Some(ti) = class.tasks.iter().position(|t| t.hw_id == a.task) {
-                let st = &mut self.pes[pe_idx].tasks[ti];
-                match a.kind {
-                    TaskActionKind::Activate => st.active = true,
-                    TaskActionKind::Unblock => st.blocked = false,
-                    TaskActionKind::Block => st.blocked = true,
+    /// Recompute one task's ready-mask bit from its actual state. Every
+    /// state transition that can change runnability funnels through
+    /// here, so the bit is always consistent with the predicate.
+    fn refresh_task_bit(&mut self, pe_idx: usize, ti: usize) {
+        let plan = Rc::clone(&self.plan);
+        let cp = &plan.classes[self.pes[pe_idx].class];
+        let runnable = {
+            let pe = &self.pes[pe_idx];
+            let st = &pe.tasks[ti];
+            match cp.tasks[ti].kind {
+                PTaskKind::Local => st.active && !st.blocked,
+                PTaskKind::Data { slot, .. } => {
+                    let ep = &pe.endpoints[slot as usize];
+                    !st.blocked && ep.consumers.is_empty() && !ep.flows.is_empty()
                 }
             }
+        };
+        let bit = 1u32 << cp.rank_of[ti];
+        let pe = &mut self.pes[pe_idx];
+        if runnable {
+            pe.ready |= bit;
+        } else {
+            pe.ready &= !bit;
+        }
+    }
+
+    /// Refresh the ready bit of the data task bound to an endpoint slot
+    /// (if any) after the endpoint's queues changed.
+    fn refresh_data_bit(&mut self, pe_idx: usize, slot: u8) {
+        let ti = self.plan.classes[self.pes[pe_idx].class].data_task_of_slot[slot as usize];
+        if ti != TASK_NONE {
+            self.refresh_task_bit(pe_idx, ti as usize);
+        }
+    }
+
+    /// Apply an interned completion-action list.
+    fn apply_actions_id(&mut self, pe_idx: usize, actions: u32) {
+        if actions == ACTIONS_EMPTY {
+            return;
+        }
+        let plan = Rc::clone(&self.plan);
+        for a in &plan.actions[actions as usize] {
+            self.apply_paction(pe_idx, a);
+        }
+    }
+
+    fn apply_paction(&mut self, pe_idx: usize, a: &PAction) {
+        if let Some((reg, val)) = a.set_reg {
+            self.pes[pe_idx].regs[reg as usize] = SVal::I(val);
+            self.metrics.dispatches += 1;
+        }
+        if a.task_ix != TASK_NONE {
+            let ti = a.task_ix as usize;
+            let st = &mut self.pes[pe_idx].tasks[ti];
+            match a.kind {
+                TaskActionKind::Activate => st.active = true,
+                TaskActionKind::Unblock => st.blocked = false,
+                TaskActionKind::Block => st.blocked = true,
+            }
+            self.refresh_task_bit(pe_idx, ti);
         }
     }
 
@@ -662,25 +734,40 @@ impl Simulator {
     fn flow_arrive(
         &mut self,
         pe_idx: usize,
-        color: u8,
+        slot: u8,
         first_word: u64,
-        words: Rc<Vec<u32>>,
+        payload: u32,
     ) -> Result<(), SimError> {
+        let words = {
+            let p = &mut self.payloads[payload as usize];
+            let words = Rc::clone(p.words.as_ref().expect("payload already released"));
+            p.pending -= 1;
+            if p.pending == 0 {
+                // Last arrival: the endpoints own the data now; the pool
+                // slot is free for the next flow.
+                p.words = None;
+                self.free_payloads.push(payload);
+            }
+            words
+        };
         self.metrics.ramp_bytes += 4 * words.len() as u64;
-        let ep = self.pes[pe_idx].endpoints.entry(color).or_default();
-        ep.flows.push_back(ArrivedFlow { first_word, words, cursor: 0 });
-        self.try_satisfy(pe_idx, color)?;
+        self.pes[pe_idx].endpoints[slot as usize]
+            .flows
+            .push_back(ArrivedFlow { first_word, words, cursor: 0 });
+        self.try_satisfy(pe_idx, slot)?;
         // A data task may be waiting for this color.
         self.schedule(first_word.max(self.now), EventKind::PeReady(pe_idx as u32));
         Ok(())
     }
 
-    /// Inject a flow from PE (sx, sy) on `color` with payload `words`,
-    /// not before `earliest`. Returns (start_time, drain_end).
+    /// Inject a flow from PE `src_pe` on `color` with payload `words`,
+    /// not before `earliest`. Returns (start_time, drain_end). The route
+    /// (links, destinations, endpoint slots) was precompiled at
+    /// construction; route errors stored in the plan surface here, on
+    /// first use, exactly as the lazily-traced simulator did.
     fn send_flow(
         &mut self,
-        sx: i64,
-        sy: i64,
+        src_pe: usize,
         color: u8,
         words: Rc<Vec<u32>>,
         earliest: u64,
@@ -689,57 +776,66 @@ impl Simulator {
         if n == 0 {
             return Ok((earliest, earliest));
         }
-        let path = match self.route_cache.get(&(sx, sy, color)) {
-            Some(p) => Rc::clone(p),
-            None => {
-                let p = Rc::new(trace_route(&self.prog, &self.cfg, color, sx, sy)?);
-                self.route_cache.insert((sx, sy, color), Rc::clone(&p));
-                p
-            }
-        };
-        if path.dests.is_empty() {
+        let plan = Rc::clone(&self.plan);
+        let (sx, sy) = (self.pes[src_pe].x, self.pes[src_pe].y);
+        let Some(fi) = plan.flow_index(src_pe, color) else {
             return Err(SimError::Program(format!(
-                "flow on color {color} from ({sx},{sy}) has no destinations"
+                "flow on color {color} from ({sx},{sy}) has no precompiled route"
             )));
+        };
+        let flow = &plan.flows[fi];
+        if let Some(err) = &flow.error {
+            return Err(match err {
+                FlowError::Route(e) => SimError::Route(e.clone()),
+                FlowError::NoDest => SimError::Program(format!(
+                    "flow on color {color} from ({sx},{sy}) has no destinations"
+                )),
+                FlowError::NoCode { x, y } => SimError::Program(format!(
+                    "flow on color {color} delivered to PE ({x},{y}) with no code"
+                )),
+            });
         }
         // Wormhole start: every link l must be free at start + depth(l).
         let mut start = earliest;
-        for l in &path.links {
-            let key = (l.x, l.y, l.dir.index());
-            if let Some(busy) = self.link_busy.get(&key) {
-                start = start.max(busy.saturating_sub(l.depth));
-            }
+        for &(li, depth) in &flow.links {
+            let busy = self.link_busy[li as usize];
+            start = start.max(busy.saturating_sub(depth));
         }
-        for l in &path.links {
-            let key = (l.x, l.y, l.dir.index());
-            self.link_busy.insert(key, start + l.depth + n);
+        for &(li, depth) in &flow.links {
+            self.link_busy[li as usize] = start + depth + n;
         }
         self.metrics.flows += 1;
         self.metrics.wavelets += n;
-        self.metrics.wavelet_hops += n * path.links.len() as u64;
+        self.metrics.wavelet_hops += n * flow.links.len() as u64;
         self.metrics.ramp_bytes += 4 * n; // source on-ramp
 
-        for (dx, dy, depth) in path.dests.clone() {
+        let entry = FlowPayload { words: Some(words), pending: flow.dests.len() as u32 };
+        let payload = match self.free_payloads.pop() {
+            Some(ix) => {
+                self.payloads[ix as usize] = entry;
+                ix
+            }
+            None => {
+                self.payloads.push(entry);
+                (self.payloads.len() - 1) as u32
+            }
+        };
+        for &(dst, slot, depth) in &flow.dests {
             let first = start + depth + self.cfg.hop_cycles;
-            let Some(&dst_idx) = self.pe_lookup.get(&(dx, dy)) else {
-                return Err(SimError::Program(format!(
-                    "flow on color {color} delivered to PE ({dx},{dy}) with no code"
-                )));
-            };
             self.schedule(
                 first.max(self.now),
-                EventKind::FlowArrive { pe: dst_idx, color, first_word: first, words: Rc::clone(&words) },
+                EventKind::FlowArrive { pe: dst, slot, first_word: first, payload },
             );
         }
         Ok((start, start + n))
     }
 
-    /// Try to satisfy the head consumer(s) on a (PE, color) endpoint.
-    fn try_satisfy(&mut self, pe_idx: usize, color: u8) -> Result<(), SimError> {
+    /// Try to satisfy the head consumer(s) on a (PE, slot) endpoint.
+    fn try_satisfy(&mut self, pe_idx: usize, slot: u8) -> Result<(), SimError> {
         loop {
-            let (ready, op, taken, last_avail, issue_time) = {
-                let Some(ep) = self.pes[pe_idx].endpoints.get_mut(&color) else { return Ok(()) };
-                let Some(head) = ep.consumers.front_mut() else { return Ok(()) };
+            let popped = {
+                let ep = &mut self.pes[pe_idx].endpoints[slot as usize];
+                let Some(head) = ep.consumers.front_mut() else { break };
                 // Pull words into the head consumer (batched per flow).
                 while head.taken.len() < head.need {
                     let Some(f) = ep.flows.front_mut() else { break };
@@ -752,76 +848,70 @@ impl Simulator {
                     }
                 }
                 if head.taken.len() < head.need {
-                    return Ok(()); // wait for more flows
+                    break; // wait for more flows
                 }
-                let c = ep.consumers.pop_front().unwrap();
-                (true, c.op, c.taken, c.last_avail, c.issue_time)
+                ep.consumers.pop_front().unwrap()
             };
-            if !ready {
-                return Ok(());
-            }
-            self.complete_consume(pe_idx, op, taken, last_avail, issue_time)?;
+            self.complete_consume(pe_idx, popped)?;
         }
+        self.refresh_data_bit(pe_idx, slot);
+        Ok(())
     }
 
     /// Apply a completed fabric-in consumption: compute the op, write the
     /// destination (memory or a forwarded out-flow), schedule completion.
-    fn complete_consume(
-        &mut self,
-        pe_idx: usize,
-        op: DsdOp,
-        words: Vec<u32>,
-        last_avail: u64,
-        issue_time: u64,
-    ) -> Result<(), SimError> {
+    /// The operation is read from the plan's consume-template table.
+    fn complete_consume(&mut self, pe_idx: usize, c: PendingConsume) -> Result<(), SimError> {
+        let plan = Rc::clone(&self.plan);
+        let tmpl = &plan.classes[self.pes[pe_idx].class].consumes[c.consume_ix as usize];
+        let words = c.taken;
         let n = words.len();
-        let ty = op
+        let ty = tmpl
             .src0
             .as_ref()
-            .or(op.src1.as_ref())
+            .or(tmpl.src1.as_ref())
             .map(|r| r.ty())
             .unwrap_or(Dtype::F32);
         // Processing cannot beat the ALU (1 elem/cycle f32) nor the data.
         let elem_cycles = self.elem_cycles(ty, n as u64);
-        let proc_done = (issue_time + elem_cycles).max(last_avail + 1);
+        let proc_done = (c.issue_time + elem_cycles).max(c.last_avail + 1);
 
         // Gather the in-stream values.
         let in_vals: Vec<f64> = words.iter().map(|w| f32::from_bits(*w) as f64).collect();
-        let scalar = op
+        let scalar = tmpl
             .scalar
             .as_ref()
             .map(|e| self.eval(pe_idx, e).as_f())
             .unwrap_or(1.0);
 
-        let a = match &op.src0 {
+        let a = match &tmpl.src0 {
             Some(DsdRef::FabIn { .. }) => VOp::Vals(&in_vals),
             Some(r @ DsdRef::Mem { .. }) => VOp::Mem(r),
             _ => VOp::Nothing,
         };
-        let b = match &op.src1 {
+        let b = match &tmpl.src1 {
             Some(DsdRef::FabIn { .. }) => VOp::Vals(&in_vals),
             Some(r @ DsdRef::Mem { .. }) => VOp::Mem(r),
             _ => VOp::Nothing,
         };
-        let out = self.apply_dsd(pe_idx, op.kind, &op.dst, a, b, scalar, n)?;
+        let out = self.apply_dsd(pe_idx, tmpl.kind, &tmpl.dst, a, b, scalar, n)?;
 
         if let Some(out_words) = out {
-            let out_color = match &op.dst {
+            let out_color = match &tmpl.dst {
                 DsdRef::FabOut { color, .. } => *color,
                 _ => unreachable!(),
             };
             // Streaming forward: out word i departs one cycle after in
             // word i is processed → out flow starts right behind the
             // in flow.
-            let (sx, sy) = (self.pes[pe_idx].x, self.pes[pe_idx].y);
-            let earliest = (issue_time + 1).max(proc_done.saturating_sub(n as u64) + 1);
-            self.send_flow(sx, sy, out_color, Rc::new(out_words), earliest)?;
+            let earliest = (c.issue_time + 1).max(proc_done.saturating_sub(n as u64) + 1);
+            self.send_flow(pe_idx, out_color, Rc::new(out_words), earliest)?;
         }
 
-        if !op.on_complete.is_empty() {
+        if tmpl.actions != ACTIONS_EMPTY {
             self.schedule(
                 proc_done,
-                EventKind::Complete { pe: pe_idx as u32, actions: op.on_complete.clone() },
+                EventKind::Complete { pe: pe_idx as u32, actions: tmpl.actions },
             );
         }
         let pe = &mut self.pes[pe_idx];
@@ -1056,7 +1146,7 @@ impl Simulator {
         }
     }
 
-    fn dsd_len(&self, pe_idx: usize, op: &DsdOp) -> usize {
+    fn dsd_len(&self, pe_idx: usize, op: &PDsd) -> usize {
         let from = |r: &DsdRef| -> i64 {
             match r {
                 DsdRef::Mem { len, .. } | DsdRef::FabIn { len, .. } | DsdRef::FabOut { len, .. } => {
@@ -1070,28 +1160,28 @@ impl Simulator {
             .max(0) as usize
     }
 
-    fn exec_ops(&mut self, pe_idx: usize, ops: &[MOp], clock: &mut u64) -> Result<(), SimError> {
+    fn exec_ops(&mut self, pe_idx: usize, ops: &[POp], clock: &mut u64) -> Result<(), SimError> {
         for op in ops {
             match op {
-                MOp::SetReg { reg, val } => {
+                POp::SetReg { reg, val } => {
                     let v = self.eval(pe_idx, val);
                     self.pes[pe_idx].regs[*reg as usize] = v;
                     *clock += self.cfg.scalar_op_cycles + val.cost();
                 }
-                MOp::Store { addr, ty, val } => {
+                POp::Store { addr, ty, val } => {
                     let a = self.eval(pe_idx, addr).as_i() as usize;
                     let v = self.eval(pe_idx, val);
                     self.store_scalar(pe_idx, a, *ty, v);
                     self.metrics.mem_bytes += ty.size() as u64;
                     *clock += self.cfg.scalar_op_cycles + addr.cost() + val.cost();
                 }
-                MOp::Control(a) => {
-                    self.apply_actions(pe_idx, std::slice::from_ref(a));
+                POp::Control(a) => {
+                    self.apply_paction(pe_idx, a);
                     *clock += self.cfg.scalar_op_cycles;
                     // Activation becomes visible now; the post-task
                     // PeReady event will pick it up.
                 }
-                MOp::If { cond, then_ops, else_ops } => {
+                POp::If { cond, then_ops, else_ops } => {
                     *clock += self.cfg.scalar_op_cycles + cond.cost();
                     if self.eval(pe_idx, cond).truthy() {
                         self.exec_ops(pe_idx, then_ops, clock)?;
@@ -1099,7 +1189,7 @@ impl Simulator {
                         self.exec_ops(pe_idx, else_ops, clock)?;
                     }
                 }
-                MOp::For { reg, start, stop, step, body } => {
+                POp::For { reg, start, stop, step, body } => {
                     let s = self.eval(pe_idx, start).as_i();
                     let e = self.eval(pe_idx, stop).as_i();
                     let st = self.eval(pe_idx, step).as_i().max(1);
@@ -1112,47 +1202,41 @@ impl Simulator {
                         i += st;
                     }
                 }
-                MOp::Halt => {
+                POp::Halt => {
                     let pe = &mut self.pes[pe_idx];
                     pe.last_activity = pe.last_activity.max(*clock);
                 }
-                MOp::Trace(msg) => {
+                POp::Trace(msg) => {
                     let pe = &self.pes[pe_idx];
                     eprintln!("[{}] PE({},{}): {}", *clock, pe.x, pe.y, msg);
                 }
-                MOp::Dsd(d) => self.exec_dsd(pe_idx, d, clock)?,
+                POp::Dsd(d) => self.exec_dsd(pe_idx, d, clock)?,
             }
         }
         Ok(())
     }
 
-    fn exec_dsd(&mut self, pe_idx: usize, op: &DsdOp, clock: &mut u64) -> Result<(), SimError> {
+    fn exec_dsd(&mut self, pe_idx: usize, op: &PDsd, clock: &mut u64) -> Result<(), SimError> {
         *clock += self.cfg.dsd_issue_cycles;
         let n = self.dsd_len(pe_idx, op);
-        let has_fabin = matches!(op.src0, Some(DsdRef::FabIn { .. }))
-            || matches!(op.src1, Some(DsdRef::FabIn { .. }));
         let fabout_dst = matches!(op.dst, DsdRef::FabOut { .. });
 
-        if has_fabin {
+        if op.fab_slot != SLOT_NONE {
             if !op.is_async {
                 return Err(SimError::Program(
                     "fabric-in DSD operations must be asynchronous (microthreaded)".into(),
                 ));
             }
-            let color = match (&op.src0, &op.src1) {
-                (Some(DsdRef::FabIn { color, .. }), _) => *color,
-                (_, Some(DsdRef::FabIn { color, .. })) => *color,
-                _ => unreachable!(),
-            };
-            let ep = self.pes[pe_idx].endpoints.entry(color).or_default();
-            ep.consumers.push_back(PendingConsume {
-                op: op.clone(),
-                need: n,
-                taken: Vec::with_capacity(n),
-                last_avail: 0,
-                issue_time: *clock,
-            });
-            self.try_satisfy(pe_idx, color)?;
+            self.pes[pe_idx].endpoints[op.fab_slot as usize].consumers.push_back(
+                PendingConsume {
+                    consume_ix: op.consume_ix,
+                    need: n,
+                    taken: Vec::with_capacity(n),
+                    last_avail: 0,
+                    issue_time: *clock,
+                },
+            );
+            self.try_satisfy(pe_idx, op.fab_slot)?;
             return Ok(());
         }
 
@@ -1166,24 +1250,22 @@ impl Simulator {
             let words = self
                 .apply_dsd(pe_idx, op.kind, &op.dst, a, b, scalar, n)?
                 .expect("fabout dst produces words");
-            let color = match op.dst {
-                DsdRef::FabOut { color, .. } => color,
+            let color = match &op.dst {
+                DsdRef::FabOut { color, .. } => *color,
                 _ => unreachable!(),
             };
-            let words: Rc<Vec<u32>> = Rc::new(words);
-            let (sx, sy) = (self.pes[pe_idx].x, self.pes[pe_idx].y);
-            let (_start, drain_end) = self.send_flow(sx, sy, color, words, *clock + 1)?;
+            let (_start, drain_end) = self.send_flow(pe_idx, color, Rc::new(words), *clock + 1)?;
             if op.is_async {
-                if !op.on_complete.is_empty() {
+                if op.actions != ACTIONS_EMPTY {
                     self.schedule(
                         drain_end,
-                        EventKind::Complete { pe: pe_idx as u32, actions: op.on_complete.clone() },
+                        EventKind::Complete { pe: pe_idx as u32, actions: op.actions },
                     );
                 }
             } else {
                 // Synchronous send: spin until the buffer drains.
                 *clock = (*clock).max(drain_end);
-                self.apply_actions(pe_idx, &op.on_complete);
+                self.apply_actions_id(pe_idx, op.actions);
             }
             let pe = &mut self.pes[pe_idx];
             pe.last_activity = pe.last_activity.max(drain_end);
@@ -1200,7 +1282,7 @@ impl Simulator {
         let b = op.src1.as_ref().map(VOp::Mem).unwrap_or(VOp::Nothing);
         self.apply_dsd(pe_idx, op.kind, &op.dst, a, b, scalar, n)?;
         *clock += self.elem_cycles(ty, n as u64);
-        self.apply_actions(pe_idx, &op.on_complete);
+        self.apply_actions_id(pe_idx, op.actions);
         Ok(())
     }
 }

@@ -283,7 +283,8 @@ fn print_help() {
          \x20 spada compile-stencil <file.gt> [--bind K=8,NX=16,NY=16] [--emit DIR]\n\
          \x20 spada check <kernel|file.spada> [--bind ...] [--grid WxH]\n\
          \x20 spada run <kernel> [--bind ...] [--grid WxH]\n\
-         \x20 spada bench [--exp table2|fig4|fig5|fig6|fig7|fig8|fig9|verify|all] [--quick]\n\
+         \x20 spada bench [--exp table2|fig4|fig5|fig6|fig7|fig8|fig9|sim|verify|all] [--quick]\n\
+         \x20   (--exp sim sweeps the six kernels 4x4..128x128 and writes BENCH_sim.json)\n\
          \x20 spada loc\n\
          \n\
          Ablation flags: --no-fusion --no-recycling --no-copy-elim --no-check\n\

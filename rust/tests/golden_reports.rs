@@ -1,0 +1,119 @@
+//! Golden run-report tests: simulator-semantics preservation.
+//!
+//! Every kernel's cycle-level behaviour (cycles, event count, busy
+//! cycles, task runs, flow/wavelet traffic, flops) is pinned in a
+//! snapshot under `tests/golden/`. A refactor of the simulator core
+//! must be cycle-identical: any drift in these fingerprints fails the
+//! suite. Snapshots are created on first run (so a fresh checkout
+//! bootstraps itself) and re-blessed explicitly with `SPADA_BLESS=1`
+//! after an *intended* semantic change.
+
+use spada::harness::common::{run_broadcast, run_gemv_variant, run_reduce};
+use spada::machine::RunReport;
+use spada::passes::Options;
+use std::path::PathBuf;
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden")
+}
+
+/// The cycle-identity fingerprint of one simulation.
+fn fingerprint(r: &RunReport) -> String {
+    format!(
+        "kernel={} grid={}x{} cycles={} events={} busy_cycles={} task_runs={} flows={} \
+         wavelets={} wavelet_hops={} flops={} dsd_ops={} active_pes={}\n",
+        r.kernel,
+        r.width,
+        r.height,
+        r.cycles,
+        r.metrics.events,
+        r.metrics.busy_cycles,
+        r.metrics.task_runs,
+        r.metrics.flows,
+        r.metrics.wavelets,
+        r.metrics.wavelet_hops,
+        r.metrics.flops,
+        r.metrics.dsd_ops,
+        r.metrics.active_pes,
+    )
+}
+
+fn check_golden(name: &str, report: &RunReport) {
+    let got = fingerprint(report);
+    let dir = golden_dir();
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!("{name}.golden"));
+    let bless = std::env::var("SPADA_BLESS").is_ok();
+    if bless || !path.exists() {
+        std::fs::write(&path, &got).unwrap();
+        return;
+    }
+    let want = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(
+        got, want,
+        "{name}: run report diverged from the golden snapshot at {}; the simulator is no \
+         longer cycle-identical. Re-bless with SPADA_BLESS=1 only for an intended semantic \
+         change.",
+        path.display()
+    );
+}
+
+#[test]
+fn golden_chain_reduce() {
+    let (run, _) = run_reduce("chain_reduce", 8, 1, 16, &Options::default()).unwrap();
+    check_golden("chain_reduce_8x1_k16", &run.report);
+}
+
+#[test]
+fn golden_broadcast() {
+    let run = run_broadcast(8, 16, &Options::default()).unwrap();
+    check_golden("broadcast_8x1_k16", &run.report);
+}
+
+#[test]
+fn golden_tree_reduce() {
+    let (run, _) = run_reduce("tree_reduce", 4, 4, 16, &Options::default()).unwrap();
+    check_golden("tree_reduce_4x4_k16", &run.report);
+}
+
+#[test]
+fn golden_two_phase_reduce() {
+    let (run, _) = run_reduce("two_phase_reduce", 4, 4, 16, &Options::default()).unwrap();
+    check_golden("two_phase_reduce_4x4_k16", &run.report);
+}
+
+#[test]
+fn golden_gemv() {
+    let (run, _, _) = run_gemv_variant("gemv", 16, 4, &Options::default()).unwrap();
+    check_golden("gemv_16_4x4", &run.report);
+}
+
+#[test]
+fn golden_gemv_tree() {
+    let (run, _, _) = run_gemv_variant("gemv_tree", 16, 4, &Options::default()).unwrap();
+    check_golden("gemv_tree_16_4x4", &run.report);
+}
+
+/// The discrete-event core is fully deterministic: two identical runs
+/// must produce bit-identical reports (the property the golden
+/// snapshots rest on).
+#[test]
+fn simulation_is_deterministic() {
+    let (a, _) = run_reduce("tree_reduce", 4, 4, 8, &Options::default()).unwrap();
+    let (b, _) = run_reduce("tree_reduce", 4, 4, 8, &Options::default()).unwrap();
+    assert_eq!(fingerprint(&a.report), fingerprint(&b.report));
+}
+
+/// GEMV against the dense reference — numeric (not just timing)
+/// preservation of the refactored core.
+#[test]
+fn gemv_matches_dense_reference() {
+    let (_, y, want) = run_gemv_variant("gemv", 16, 4, &Options::default()).unwrap();
+    assert_eq!(y.len(), want.len());
+    for (i, (a, b)) in y.iter().zip(&want).enumerate() {
+        assert!(
+            (a - b).abs() < 1e-3 * b.abs().max(1.0),
+            "y[{i}] = {a}, reference {b}"
+        );
+    }
+}

@@ -299,3 +299,137 @@ fn failure_injection_color_exhaustion() {
     let err = csl::compile(&prog, &cfg, &Options::default()).unwrap_err();
     assert!(err.0.contains("OOR"), "{err}");
 }
+
+// ---------------------------------------------------------------------
+// Precompiled routing plan vs. the reference tracer
+// ---------------------------------------------------------------------
+
+/// For random router configurations, every path the precompiled
+/// [`RoutingPlan`] stores must be identical (links, destinations, and
+/// errors) to what `machine::router::trace_route` computes directly —
+/// the invariant that lets the simulator and the static checker share
+/// one route resolution.
+#[test]
+fn prop_routing_plan_matches_trace_route() {
+    use spada::machine::plan::RoutingPlan;
+    use spada::machine::program::{
+        DirSet, Direction, DsdKind, DsdOp, DsdRef, Dtype, FieldAlloc, MOp, PeClass, RouteRule,
+        SExpr, TaskDef, TaskKind,
+    };
+    use spada::machine::{router::trace_route, MachineProgram};
+
+    fn dir_of(k: u64) -> Direction {
+        match k {
+            0 => Direction::North,
+            1 => Direction::East,
+            2 => Direction::South,
+            3 => Direction::West,
+            _ => Direction::Ramp,
+        }
+    }
+
+    run_prop(
+        "plan-vs-trace",
+        0xB10C,
+        60,
+        |r| {
+            let w = 2 + r.below(5) as i64;
+            let h = 2 + r.below(5) as i64;
+            let ncolors = 1 + r.below(3) as u8;
+            let mut routes = vec![];
+            for _ in 0..(1 + r.below(8)) {
+                let x0 = r.below(w as u64) as i64;
+                let x1 = x0 + r.below((w - x0) as u64) as i64;
+                let y0 = r.below(h as u64) as i64;
+                let y1 = y0 + r.below((h - y0) as u64) as i64;
+                routes.push(RouteRule {
+                    color: r.below(ncolors as u64) as u8,
+                    subgrid: Subgrid::new(Range1::dense(x0, x1 + 1), Range1::dense(y0, y1 + 1)),
+                    rx: DirSet::single(Direction::Ramp).with(dir_of(r.below(5))),
+                    tx: DirSet::single(dir_of(r.below(5))),
+                });
+            }
+            (w, h, ncolors, routes)
+        },
+        |(w, h, ncolors, routes)| {
+            // One class covering the whole grid, producing every color.
+            let body: Vec<MOp> = (0..*ncolors)
+                .map(|c| {
+                    MOp::Dsd(DsdOp {
+                        kind: DsdKind::Mov,
+                        dst: DsdRef::FabOut { color: c, len: SExpr::imm(4), ty: Dtype::F32 },
+                        src0: Some(DsdRef::mem(0, SExpr::imm(4), Dtype::F32)),
+                        src1: None,
+                        scalar: None,
+                        is_async: true,
+                        on_complete: vec![],
+                    })
+                })
+                .collect();
+            let class = PeClass {
+                name: "p".into(),
+                subgrids: vec![Subgrid::new(Range1::dense(0, *w), Range1::dense(0, *h))],
+                fields: vec![FieldAlloc {
+                    name: "a".into(),
+                    addr: 0,
+                    len: 4,
+                    ty: Dtype::F32,
+                    is_extern: false,
+                }],
+                mem_size: 16,
+                tasks: vec![TaskDef {
+                    name: "t".into(),
+                    hw_id: 24,
+                    kind: TaskKind::Local,
+                    initially_active: false,
+                    initially_blocked: false,
+                    body,
+                }],
+                entry_tasks: vec![],
+            };
+            let prog = MachineProgram {
+                name: "prop".into(),
+                classes: vec![class],
+                routes: routes.clone(),
+                ..Default::default()
+            };
+            let cfg = MachineConfig::with_grid(*w, *h);
+            let plan = RoutingPlan::build(&prog, &cfg);
+            for y in 0..*h {
+                for x in 0..*w {
+                    for color in 0..*ncolors {
+                        let want = trace_route(&prog, &cfg, color, x, y);
+                        let Some(got) = plan.path(x, y, color) else {
+                            return Err(format!("plan missing flow ({x},{y}) color {color}"));
+                        };
+                        match (&want, got) {
+                            (Ok(a), Ok(b)) => {
+                                if a.links != b.links || a.dests != b.dests {
+                                    return Err(format!(
+                                        "path mismatch at ({x},{y}) color {color}: \
+                                         {a:?} vs {b:?}"
+                                    ));
+                                }
+                            }
+                            (Err(a), Err(b)) => {
+                                if a != b {
+                                    return Err(format!(
+                                        "error mismatch at ({x},{y}) color {color}: \
+                                         {a:?} vs {b:?}"
+                                    ));
+                                }
+                            }
+                            (a, b) => {
+                                return Err(format!(
+                                    "verdict mismatch at ({x},{y}) color {color}: \
+                                     {a:?} vs {b:?}"
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
