@@ -6,7 +6,7 @@
 //!     cargo run --release --example gemv_solver
 
 use spada::kernels;
-use spada::machine::{MachineConfig, Simulator};
+use spada::machine::MachineConfig;
 use spada::passes::Options;
 use spada::util::SplitMix64;
 
@@ -37,13 +37,13 @@ fn main() -> anyhow::Result<()> {
     let mut total_cycles = 0u64;
     for iter in 0..25 {
         // One kernel launch = one compiled program instance.
-        let (prog, _, _) = kernels::compile(
+        let ck = kernels::compile(
             "gemv",
             &[("M", n), ("N", n), ("NX", g), ("NY", g)],
             &cfg,
             &Options::default(),
         )?;
-        let mut sim = Simulator::new(cfg.clone(), prog)?;
+        let mut sim = ck.simulator()?;
         sim.set_input("a_blk", &blocks)?;
         sim.set_input("x_in", &x)?;
         sim.set_input("y_in", &b)?;

@@ -3,11 +3,12 @@
 //! Walks every PE class's task bodies collecting the fabric events the
 //! checker reasons about — `FabOut` producers, `FabIn` consumers, task
 //! control actions and their triggers — then instantiates them per PE.
-//! Producer routes are read from the shared precompiled
-//! [`crate::machine::plan::RoutingPlan`] — the *same* plan the
-//! simulator executes from — so the static checker and the runtime can
-//! never disagree about route geometry (and the checker gets the
-//! trace-once speedup for free).
+//! Producer routes are read from the precompiled
+//! [`crate::machine::plan::RoutingPlan`] *instance passed in by the
+//! caller* — for a compiled kernel, the very plan the simulator will
+//! execute from (`kernels::compile` builds it once) — so the static
+//! checker and the runtime can never disagree about route geometry,
+//! and a checked run traces every route exactly once.
 
 use crate::machine::plan::RoutingPlan;
 use crate::machine::program::{
@@ -362,12 +363,10 @@ pub struct FlowGraph {
 }
 
 impl FlowGraph {
-    pub fn build(prog: &MachineProgram, cfg: &MachineConfig) -> FlowGraph {
-        // Precompile the same routing plan the simulator runs from: one
-        // trace per (source PE, color), shared by both consumers. The
-        // routes-only build skips task-body compilation the checker
-        // never reads.
-        let plan = RoutingPlan::build_routes(prog, cfg);
+    /// Build the checker's flow graph, reading every producer route out
+    /// of `plan` — the caller-supplied precompiled plan (one trace per
+    /// (source PE, color), shared with the simulator).
+    pub fn build(prog: &MachineProgram, cfg: &MachineConfig, plan: &RoutingPlan) -> FlowGraph {
         let mut pes = vec![];
         let mut pe_lookup = HashMap::new();
         for (ci, class) in prog.classes.iter().enumerate() {

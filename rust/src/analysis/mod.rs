@@ -27,18 +27,22 @@
 //!   reporting starved consumers, wavelet-count shortfalls, and
 //!   circular waits (with the cycle spelled out).
 //!
-//! [`check`] runs in `kernels::compile` by default (opt out with
-//! [`crate::passes::Options::check`]); the `spada check` CLI subcommand
-//! verifies a `.spada` source without simulating; and the simulator
-//! cross-references the static verdict in its runtime deadlock message.
-//! The checker is O(program): PEs × task events, not simulated events.
+//! [`check_with_plan`] runs in `kernels::compile` by default (opt out
+//! with [`crate::passes::Options::check`]) against the same
+//! [`crate::machine::RoutingPlan`] instance the compiled kernel ships
+//! to the simulator, so a checked run traces routes once; [`check`] is
+//! the standalone form that builds its own plan. The `spada check` CLI
+//! subcommand verifies a `.spada` source without simulating; and the
+//! simulator cross-references the static verdict in its runtime
+//! deadlock message. The checker is O(program): PEs × task events, not
+//! simulated events.
 
 pub mod deadlock;
 pub mod flowgraph;
 pub mod races;
 pub mod routing;
 
-use crate::machine::{MachineConfig, MachineProgram};
+use crate::machine::{MachineConfig, MachineProgram, RoutingPlan};
 use crate::passes::Options;
 use crate::sem::Bindings;
 use std::fmt;
@@ -176,8 +180,26 @@ impl fmt::Display for AnalysisReport {
     }
 }
 
-/// Run every static check on a lowered machine program.
+/// Run every static check on a lowered machine program, building a
+/// fresh [`RoutingPlan`] for it.
+///
+/// Prefer [`check_with_plan`] when a plan already exists (the
+/// `kernels::compile` pipeline and the simulator's runtime-deadlock
+/// path both hold one) — routes are then traced exactly once per
+/// compiled kernel.
 pub fn check(prog: &MachineProgram, cfg: &MachineConfig) -> AnalysisReport {
+    let plan = RoutingPlan::build(prog, cfg);
+    check_with_plan(prog, cfg, &plan)
+}
+
+/// Run every static check against an existing precompiled plan — the
+/// same instance the simulator executes from, so checker and runtime
+/// cannot disagree about route geometry.
+pub fn check_with_plan(
+    prog: &MachineProgram,
+    cfg: &MachineConfig,
+    plan: &RoutingPlan,
+) -> AnalysisReport {
     let mut report = AnalysisReport::default();
 
     // Resource limits first (OOR/OOM) — the cheapest class of failure.
@@ -192,7 +214,7 @@ pub fn check(prog: &MachineProgram, cfg: &MachineConfig) -> AnalysisReport {
         });
     }
 
-    let graph = flowgraph::FlowGraph::build(prog, cfg);
+    let graph = flowgraph::FlowGraph::build(prog, cfg, plan);
     report.flows = graph.flows.len();
     report.endpoints = graph.consumer_endpoints().len();
     report.pes_analyzed = graph.pes.len();

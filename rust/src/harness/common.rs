@@ -42,26 +42,26 @@ pub fn run_reduce(
         "tree_reduce" | "two_phase_reduce" => vec![("K", k), ("NX", px), ("NY", py)],
         other => return Err(anyhow!("not a reduce kernel: {other}")),
     };
-    let (prog, stats, csl_loc) = kernels::compile(kernel, &binds, &cfg, opts)?;
+    let ck = kernels::compile(kernel, &binds, &cfg, opts)?;
     let spada_loc = kernels::spada_loc(kernel)?;
     let pes = if kernel == "chain_reduce" { px } else { px * py };
-    let mut sim = Simulator::new(cfg, prog)?;
+    let mut sim = ck.simulator()?;
     let data = rand_vec(0xF16, (k * pes) as usize);
     sim.set_input("a_in", &data)?;
     let report = sim.run()?;
     let out = sim.get_output("out")?;
-    Ok((SimRun { report, stats, csl_loc, spada_loc }, out))
+    Ok((SimRun { report, stats: ck.stats, csl_loc: ck.csl_loc, spada_loc }, out))
 }
 
 /// Compile + run the 1-D broadcast.
 pub fn run_broadcast(p: i64, k: i64, opts: &Options) -> Result<SimRun> {
     let cfg = MachineConfig::with_grid(p, 1);
-    let (prog, stats, csl_loc) = kernels::compile("broadcast", &[("K", k), ("N", p)], &cfg, opts)?;
+    let ck = kernels::compile("broadcast", &[("K", k), ("N", p)], &cfg, opts)?;
     let spada_loc = kernels::spada_loc("broadcast")?;
-    let mut sim = Simulator::new(cfg, prog)?;
+    let mut sim = ck.simulator()?;
     sim.set_input("a_in", &rand_vec(7, k as usize))?;
     let report = sim.run()?;
-    Ok(SimRun { report, stats, csl_loc, spada_loc })
+    Ok(SimRun { report, stats: ck.stats, csl_loc: ck.csl_loc, spada_loc })
 }
 
 /// Compile a stencil through the GT4Py-style pipeline and run it.
@@ -128,11 +128,10 @@ pub fn run_gemv_variant(
     opts: &Options,
 ) -> Result<(SimRun, Vec<f32>, Vec<f32>)> {
     let cfg = MachineConfig::with_grid(g, g);
-    let (prog, stats, csl_loc) =
-        kernels::compile(kernel, &[("M", n), ("N", n), ("NX", g), ("NY", g)], &cfg, opts)?;
+    let ck = kernels::compile(kernel, &[("M", n), ("N", n), ("NX", g), ("NY", g)], &cfg, opts)?;
     let spada_loc = kernels::spada_loc(kernel)?;
     let (bm, bn) = ((n / g) as usize, (n / g) as usize);
-    let mut sim = Simulator::new(cfg, prog)?;
+    let mut sim = ck.simulator()?;
     let a_dense = rand_vec(21, (n * n) as usize);
     let x = rand_vec(22, n as usize);
     let y0 = rand_vec(23, n as usize);
@@ -163,7 +162,7 @@ pub fn run_gemv_variant(
     for r in 0..n as usize {
         want[r] = (0..n as usize).map(|c| a_dense[r * n as usize + c] * x[c]).sum();
     }
-    Ok((SimRun { report, stats, csl_loc, spada_loc }, y, want))
+    Ok((SimRun { report, stats: ck.stats, csl_loc: ck.csl_loc, spada_loc }, y, want))
 }
 
 /// Extrapolate a measured FLOP rate to the paper's fabric: per-PE work

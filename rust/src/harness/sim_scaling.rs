@@ -18,7 +18,8 @@ use super::common::{run_broadcast, run_gemv_variant, run_reduce};
 use crate::bench::{eng, Table};
 use crate::machine::RunReport;
 use crate::passes::Options;
-use anyhow::{Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
 use std::time::Instant;
 
 /// Output file, relative to the working directory.
@@ -156,6 +157,194 @@ pub fn run(quick: bool) -> Result<()> {
     Ok(())
 }
 
+// ---------------------------------------------------------------------
+// Bench-regression gate (`spada bench --compare <baseline>`)
+// ---------------------------------------------------------------------
+
+/// One parsed run row from a `BENCH_sim.json`-format file.
+#[derive(Clone, Debug)]
+pub struct BenchRun {
+    pub kernel: String,
+    pub grid: String,
+    pub events_per_sec: f64,
+}
+
+/// A parsed bench file.
+#[derive(Clone, Debug)]
+pub struct BenchFile {
+    /// Committed-but-unblessed baselines set `"placeholder": true`; the
+    /// gate reports and passes instead of comparing against fiction.
+    pub placeholder: bool,
+    pub runs: Vec<BenchRun>,
+}
+
+fn extract_str(line: &str, key: &str) -> Option<String> {
+    let tag = format!("\"{key}\": \"");
+    let start = line.find(&tag)? + tag.len();
+    let end = line[start..].find('"')?;
+    Some(line[start..start + end].to_string())
+}
+
+fn extract_num(line: &str, key: &str) -> Option<f64> {
+    fn numeric(c: char) -> bool {
+        c.is_ascii_digit() || matches!(c, '.' | '-' | '+' | 'e' | 'E')
+    }
+    let tag = format!("\"{key}\": ");
+    let start = line.find(&tag)? + tag.len();
+    let rest = &line[start..];
+    let end = rest.find(|c: char| !numeric(c)).unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+/// Parse the line-oriented JSON `json_of` emits (one run object per
+/// line). Deliberately tolerant: any line carrying a `"kernel"` field
+/// is a run row; everything else is metadata.
+pub fn parse_bench_json(text: &str) -> Result<BenchFile> {
+    let placeholder = text.contains("\"placeholder\": true");
+    let mut runs = vec![];
+    for line in text.lines() {
+        if !line.contains("\"kernel\"") {
+            continue;
+        }
+        let kernel = extract_str(line, "kernel")
+            .ok_or_else(|| anyhow!("bad run row (no kernel): {line}"))?;
+        let grid =
+            extract_str(line, "grid").ok_or_else(|| anyhow!("bad run row (no grid): {line}"))?;
+        let events_per_sec = extract_num(line, "events_per_sec")
+            .ok_or_else(|| anyhow!("bad run row (no events_per_sec): {line}"))?;
+        runs.push(BenchRun { kernel, grid, events_per_sec });
+    }
+    if runs.is_empty() {
+        bail!("no bench runs found (not a BENCH_sim.json-format file?)");
+    }
+    Ok(BenchFile { placeholder, runs })
+}
+
+/// Per-kernel comparison outcome (geometric-mean events/s over the
+/// grids present in both files).
+#[derive(Clone, Debug)]
+pub struct KernelDelta {
+    pub kernel: String,
+    pub matched_runs: usize,
+    pub base_eps: f64,
+    pub cur_eps: f64,
+    /// Relative change: `cur/base - 1` (negative = regression).
+    pub delta: f64,
+}
+
+fn geomean(v: &[f64]) -> f64 {
+    if v.is_empty() {
+        return 0.0;
+    }
+    (v.iter().map(|x| x.max(1e-12).ln()).sum::<f64>() / v.len() as f64).exp()
+}
+
+/// Baseline (kernel, grid) rows with no counterpart in the current
+/// file. A non-empty result fails the gate: a kernel silently dropped
+/// from the sweep must not read as "no regression".
+pub fn missing_rows(base: &BenchFile, cur: &BenchFile) -> Vec<String> {
+    let have: std::collections::BTreeSet<(&str, &str)> =
+        cur.runs.iter().map(|r| (r.kernel.as_str(), r.grid.as_str())).collect();
+    base.runs
+        .iter()
+        .filter(|r| !have.contains(&(r.kernel.as_str(), r.grid.as_str())))
+        .map(|r| format!("{} {}", r.kernel, r.grid))
+        .collect()
+}
+
+/// Compare two bench files per kernel. Pure (no I/O, no printing) so
+/// the gate logic is unit-testable.
+pub fn compare_runs(base: &BenchFile, cur: &BenchFile) -> Vec<KernelDelta> {
+    let mut base_by: BTreeMap<(&str, &str), f64> = BTreeMap::new();
+    for r in &base.runs {
+        base_by.insert((r.kernel.as_str(), r.grid.as_str()), r.events_per_sec);
+    }
+    let mut per_kernel: BTreeMap<&str, (Vec<f64>, Vec<f64>)> = BTreeMap::new();
+    for r in &cur.runs {
+        if let Some(&b) = base_by.get(&(r.kernel.as_str(), r.grid.as_str())) {
+            let e = per_kernel.entry(r.kernel.as_str()).or_default();
+            e.0.push(b);
+            e.1.push(r.events_per_sec);
+        }
+    }
+    per_kernel
+        .into_iter()
+        .map(|(kernel, (b, c))| {
+            let (base_eps, cur_eps) = (geomean(&b), geomean(&c));
+            KernelDelta {
+                kernel: kernel.to_string(),
+                matched_runs: b.len(),
+                base_eps,
+                cur_eps,
+                delta: if base_eps > 0.0 { cur_eps / base_eps - 1.0 } else { 0.0 },
+            }
+        })
+        .collect()
+}
+
+/// The CLI gate: parse both files, print the per-kernel delta table,
+/// and fail (`Err`) if any kernel's events/s dropped more than
+/// `threshold` (0.25 = 25%) below the baseline. A placeholder baseline
+/// passes with a notice — see ROADMAP.md for the blessing procedure.
+pub fn compare_files(baseline_path: &str, current_path: &str, threshold: f64) -> Result<()> {
+    let base_text = std::fs::read_to_string(baseline_path).context(baseline_path.to_string())?;
+    let base = parse_bench_json(&base_text).context(baseline_path.to_string())?;
+    let cur_text = std::fs::read_to_string(current_path).context(current_path.to_string())?;
+    let cur = parse_bench_json(&cur_text).context(current_path.to_string())?;
+    if base.placeholder {
+        println!(
+            "bench gate: baseline {baseline_path} is a placeholder (never blessed on this \
+             hardware); skipping the comparison. Bless it by copying a real {OUT_FILE} over \
+             it — see ROADMAP.md \"Performance\"."
+        );
+        return Ok(());
+    }
+    let deltas = compare_runs(&base, &cur);
+    if deltas.is_empty() {
+        bail!("bench gate: no (kernel, grid) rows in common between baseline and current");
+    }
+    let missing = missing_rows(&base, &cur);
+    if !missing.is_empty() {
+        bail!(
+            "bench gate: {} baseline row(s) missing from the current sweep ({}); a dropped \
+             kernel is not a passing kernel — re-bless {baseline_path} if this is intended",
+            missing.len(),
+            missing.join(", ")
+        );
+    }
+    let mut table =
+        Table::new(&["kernel", "runs", "base events/s", "now events/s", "delta", "verdict"]);
+    let mut regressed: Vec<String> = vec![];
+    for d in &deltas {
+        let fail = d.delta < -threshold;
+        table.row(&[
+            d.kernel.clone(),
+            d.matched_runs.to_string(),
+            eng(d.base_eps),
+            eng(d.cur_eps),
+            format!("{:+.1}%", 100.0 * d.delta),
+            if fail { "REGRESSED".into() } else { "ok".into() },
+        ]);
+        if fail {
+            regressed.push(format!("{} ({:+.1}%)", d.kernel, 100.0 * d.delta));
+        }
+    }
+    table.print();
+    if !regressed.is_empty() {
+        bail!(
+            "bench regression beyond {:.0}% on: {} (baseline {baseline_path})",
+            100.0 * threshold,
+            regressed.join(", ")
+        );
+    }
+    println!(
+        "bench gate: {} kernel(s) within {:.0}% of {baseline_path}",
+        deltas.len(),
+        100.0 * threshold
+    );
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -172,5 +361,69 @@ mod tests {
         let json = json_of(&points, true);
         assert!(json.contains("\"bench\": \"sim_scaling\""));
         assert!(json.contains("\"kernel\": \"gemv_tree\""));
+
+        // The gate's parser must round-trip the writer's format.
+        let parsed = parse_bench_json(&json).unwrap();
+        assert!(!parsed.placeholder);
+        assert_eq!(parsed.runs.len(), points.len());
+        for (r, p) in parsed.runs.iter().zip(&points) {
+            assert_eq!(r.kernel, p.kernel);
+            assert_eq!(r.grid, p.grid);
+            assert!((r.events_per_sec - p.events_per_sec).abs() <= 0.06 * (1.0 + p.events_per_sec));
+        }
+    }
+
+    fn file(rows: &[(&str, &str, f64)], placeholder: bool) -> BenchFile {
+        BenchFile {
+            placeholder,
+            runs: rows
+                .iter()
+                .map(|(k, g, e)| BenchRun {
+                    kernel: k.to_string(),
+                    grid: g.to_string(),
+                    events_per_sec: *e,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn compare_flags_only_kernels_beyond_threshold() {
+        let base = file(
+            &[("gemv", "8x8", 1000.0), ("gemv", "16x16", 2000.0), ("broadcast", "8x1", 500.0)],
+            false,
+        );
+        // gemv halves (≈ −50%), broadcast improves.
+        let cur = file(
+            &[("gemv", "8x8", 500.0), ("gemv", "16x16", 1000.0), ("broadcast", "8x1", 900.0)],
+            false,
+        );
+        let deltas = compare_runs(&base, &cur);
+        assert_eq!(deltas.len(), 2);
+        let gemv = deltas.iter().find(|d| d.kernel == "gemv").unwrap();
+        assert_eq!(gemv.matched_runs, 2);
+        assert!((gemv.delta + 0.5).abs() < 1e-9, "{gemv:?}");
+        assert!(gemv.delta < -0.25, "a 2x slowdown must trip the 25% gate");
+        let bc = deltas.iter().find(|d| d.kernel == "broadcast").unwrap();
+        assert!(bc.delta > 0.0);
+        // Unmatched rows are never compared against garbage, and rows
+        // that vanish from the current sweep are reported as missing.
+        let sparse = file(&[("gemv", "64x64", 1.0)], false);
+        assert!(compare_runs(&base, &sparse).is_empty());
+        let missing = missing_rows(&base, &sparse);
+        assert_eq!(missing.len(), 3, "{missing:?}");
+        assert!(missing.contains(&"broadcast 8x1".to_string()));
+        assert!(missing_rows(&base, &base).is_empty());
+    }
+
+    #[test]
+    fn parser_detects_placeholder_and_rejects_junk() {
+        let text = "{\n  \"placeholder\": true,\n  \"runs\": [\n    {\"kernel\": \"gemv\", \
+                    \"grid\": \"4x4\", \"events_per_sec\": 123.4}\n  ]\n}\n";
+        let f = parse_bench_json(text).unwrap();
+        assert!(f.placeholder);
+        assert_eq!(f.runs.len(), 1);
+        assert!((f.runs[0].events_per_sec - 123.4).abs() < 1e-9);
+        assert!(parse_bench_json("{}").is_err());
     }
 }

@@ -33,7 +33,7 @@ pub fn run() -> Result<()> {
 
     for (name, binds, (w, h)) in collective_rows() {
         let cfg = MachineConfig::with_grid(w, h);
-        let (_prog, _stats, csl_loc) = kernels::compile(name, &binds, &cfg, &Options::default())?;
+        let csl_loc = kernels::compile(name, &binds, &cfg, &Options::default())?.csl_loc;
         let spada = kernels::spada_loc(name)?;
         let ratio = csl_loc as f64 / spada as f64;
         ratios.push(ratio);

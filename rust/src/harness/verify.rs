@@ -5,7 +5,7 @@
 
 use super::common::{rand_vec, run_stencil};
 use crate::kernels;
-use crate::machine::{MachineConfig, Simulator};
+use crate::machine::MachineConfig;
 use crate::passes::Options;
 use crate::runtime::{max_rel_err, Input, Runtime};
 use anyhow::{bail, Result};
@@ -32,13 +32,13 @@ pub fn run() -> Result<()> {
         let (p, k) = (16i64, 64i64);
         let data = rand_vec(1, (p * k) as usize);
         let cfg = MachineConfig::with_grid(p, 1);
-        let (prog, _, _) = kernels::compile(
+        let ck = kernels::compile(
             "tree_reduce",
             &[("K", k), ("NX", p), ("NY", 1)],
             &cfg,
             &Options::default(),
         )?;
-        let mut sim = Simulator::new(cfg, prog)?;
+        let mut sim = ck.simulator()?;
         sim.set_input("a_in", &data)?;
         sim.run()?;
         let got = sim.get_output("out")?;
@@ -52,9 +52,8 @@ pub fn run() -> Result<()> {
         let (p, k) = (16i64, 64i64);
         let data = rand_vec(2, k as usize);
         let cfg = MachineConfig::with_grid(p, 1);
-        let (prog, _, _) =
-            kernels::compile("broadcast", &[("K", k), ("N", p)], &cfg, &Options::default())?;
-        let mut sim = Simulator::new(cfg, prog)?;
+        let ck = kernels::compile("broadcast", &[("K", k), ("N", p)], &cfg, &Options::default())?;
+        let mut sim = ck.simulator()?;
         sim.set_input("a_in", &data)?;
         sim.run()?;
         let got = sim.get_output("out")?;
@@ -100,7 +99,7 @@ pub fn run() -> Result<()> {
         let (m, n, gx, gy) = (64i64, 48i64, 4i64, 4i64);
         let (bm, bn) = ((m / gy) as usize, (n / gx) as usize);
         let cfg = MachineConfig::with_grid(gx, gy);
-        let (prog, _, _) = kernels::compile(
+        let ck = kernels::compile(
             "gemv",
             &[("M", m), ("N", n), ("NX", gx), ("NY", gy)],
             &cfg,
@@ -124,7 +123,7 @@ pub fn run() -> Result<()> {
                 off += bm * bn;
             }
         }
-        let mut sim = Simulator::new(cfg, prog)?;
+        let mut sim = ck.simulator()?;
         sim.set_input("a_blk", &blocks)?;
         sim.set_input("x_in", &x)?;
         sim.set_input("y_in", &y0)?;

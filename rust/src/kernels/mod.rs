@@ -4,11 +4,12 @@
 //! demand; [`KernelSpec`] couples the source with its meta-parameters so
 //! the harness, examples and tests share one entry point.
 
-use crate::machine::{MachineConfig, MachineProgram};
+use crate::machine::{MachineConfig, MachineProgram, RoutingPlan, SimError, Simulator};
 use crate::passes::{Options, PassStats};
 use crate::sem::{instantiate, Bindings};
 use crate::spada::{parse_kernel, pretty, Kernel};
 use anyhow::{anyhow, Context, Result};
+use std::sync::Arc;
 
 pub const CHAIN_REDUCE: &str = include_str!("spada/chain_reduce.spada");
 pub const BROADCAST: &str = include_str!("spada/broadcast.spada");
@@ -48,26 +49,59 @@ pub fn spada_loc(name: &str) -> Result<usize> {
     Ok(pretty::count_loc(&parse(name)?))
 }
 
+/// A fully compiled library kernel: the loadable machine program plus
+/// the one [`RoutingPlan`] built for it.
+///
+/// The plan is traced exactly once per compiled kernel and shared by
+/// every consumer: the static checker sees it inside [`compile`], the
+/// simulator executes from it via [`CompiledKernel::simulator`], and
+/// the harness/benches reuse it across runs of the same compilation.
+pub struct CompiledKernel {
+    pub machine: MachineProgram,
+    /// Machine config the kernel was compiled (and the plan built) for.
+    pub cfg: MachineConfig,
+    /// The shared precompiled routing/execution plan.
+    pub plan: Arc<RoutingPlan>,
+    pub stats: PassStats,
+    /// Generated CSL lines of code (Table II metric).
+    pub csl_loc: usize,
+}
+
+impl CompiledKernel {
+    /// Build a simulator that executes from the shared plan instance —
+    /// no route is re-traced. Each call yields a fresh single-shot
+    /// simulator over the same compilation.
+    pub fn simulator(&self) -> Result<Simulator, SimError> {
+        Simulator::with_plan(self.cfg.clone(), self.machine.clone(), Arc::clone(&self.plan))
+    }
+}
+
 /// Convenience: parse + instantiate + compile a kernel.
 ///
 /// Unless [`Options::check`] is off, the compiled machine program is
 /// verified by the static dataflow semantics checker
-/// ([`crate::analysis::check`]) — routing correctness, data races,
-/// deadlock freedom — before it is handed back ("verify, then lower").
+/// ([`crate::analysis::check_with_plan`]) — routing correctness, data
+/// races, deadlock freedom — before it is handed back ("verify, then
+/// lower"). The checker runs against the same [`RoutingPlan`] instance
+/// returned in the [`CompiledKernel`], so a checked-and-simulated run
+/// traces every route once, not twice.
 pub fn compile(
     name: &str,
     binds: &[(&str, i64)],
     cfg: &MachineConfig,
     opts: &Options,
-) -> Result<(MachineProgram, PassStats, usize)> {
+) -> Result<CompiledKernel> {
     let kernel = parse(name)?;
     let bindings: Bindings = binds.iter().map(|(k, v)| (k.to_string(), *v)).collect();
     let prog = instantiate(&kernel, &bindings).context(name.to_string())?;
     let compiled = crate::csl::compile(&prog, cfg, opts).map_err(|e| anyhow!("{name}: {e}"))?;
     let loc = compiled.csl_loc();
     let mut machine = compiled.machine;
+    // One plan per compiled kernel; the plan reads only classes/routes,
+    // so the meta updates below cannot invalidate it.
+    let plan = RoutingPlan::build(&machine, cfg);
     if opts.check {
-        let report = crate::analysis::check(&machine, cfg);
+        let report = crate::analysis::check_with_plan(&machine, cfg, &plan);
         if report.has_errors() {
             return Err(anyhow!("{name}: static dataflow check failed\n{report}"));
         }
@@ -76,7 +110,13 @@ pub fn compile(
         // whole analysis.
         machine.meta.insert("static_check".into(), "clean".into());
     }
-    Ok((machine, compiled.stats, loc))
+    Ok(CompiledKernel {
+        machine,
+        cfg: cfg.clone(),
+        plan: Arc::new(plan),
+        stats: compiled.stats,
+        csl_loc: loc,
+    })
 }
 
 #[cfg(test)]

@@ -3,7 +3,7 @@
 use super::MachineConfig;
 
 /// Counters accumulated during a simulation.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct Metrics {
     /// Total events processed.
     pub events: u64,
@@ -32,7 +32,7 @@ pub struct Metrics {
 }
 
 /// The result of one kernel simulation.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct RunReport {
     pub kernel: String,
     /// Max cycle count over all participating PEs — the paper's

@@ -26,6 +26,7 @@ pub mod program;
 pub mod router;
 pub mod sim;
 pub mod metrics;
+pub mod vecop;
 
 pub use config::MachineConfig;
 pub use plan::RoutingPlan;

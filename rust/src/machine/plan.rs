@@ -33,9 +33,13 @@
 //!   consume-template table so issuing a microthread never clones the
 //!   operation.
 //!
-//! The static checker ([`crate::analysis::flowgraph`]) builds the same
-//! plan and reads paths out of it, so the simulator and the checker
-//! share one route-resolution code path by construction.
+//! The static checker ([`crate::analysis::flowgraph`]) reads paths out
+//! of the *same instance* the simulator executes from: `kernels::compile`
+//! builds one plan per compiled kernel and threads it through the
+//! checker, the [`crate::kernels::CompiledKernel`] it returns, and
+//! [`crate::machine::Simulator::with_plan`] — so the simulator and the
+//! checker cannot disagree about route geometry, and a checked run
+//! traces every route exactly once.
 
 use super::config::MachineConfig;
 use super::program::{
@@ -43,6 +47,7 @@ use super::program::{
     TaskKind,
 };
 use super::router::{trace_route, FlowPath, RouteError};
+use super::vecop::{classify_vec, VecOp};
 use std::collections::BTreeSet;
 
 /// Sentinel for "no entry" in `u32` index tables.
@@ -83,6 +88,12 @@ pub struct PDsd {
     /// Index into the class's consume-template table (valid iff
     /// `fab_slot != SLOT_NONE`).
     pub consume_ix: u32,
+    /// Static batched-execution verdict (see [`crate::machine::vecop`]):
+    /// [`VecOp::Map`]/[`VecOp::Fold`] operations run as single slice
+    /// passes when the runtime admission check also passes; everything
+    /// else (and every inadmissible instance) takes the per-element
+    /// interpreter.
+    pub vec: VecOp,
 }
 
 /// Compiled machine operations — [`MOp`] with plan-resolved actions.
@@ -265,6 +276,7 @@ impl<'a> BodyCompiler<'a> {
             actions,
             fab_slot,
             consume_ix: NONE_U32,
+            vec: classify_vec(&d.dst, &d.src0, &d.src1),
         };
         if fab_slot != SLOT_NONE {
             p.consume_ix = self.consumes.len() as u32;
@@ -306,18 +318,14 @@ impl RoutingPlan {
     /// unrunnable are collected in `build_errors` (the simulator turns
     /// the first into a [`crate::machine::SimError`]; the static
     /// checker reports its own diagnostics and ignores them).
+    ///
+    /// One plan instance per compiled kernel: `kernels::compile` builds
+    /// it, hands the same instance to the static checker
+    /// ([`crate::analysis::check_with_plan`]), and returns it inside
+    /// [`crate::kernels::CompiledKernel`] for
+    /// [`crate::machine::Simulator::with_plan`] — routes are traced
+    /// exactly once per (program, machine) pair.
     pub fn build(prog: &MachineProgram, cfg: &MachineConfig) -> RoutingPlan {
-        Self::build_inner(prog, cfg, true)
-    }
-
-    /// Routes-and-slots-only plan: skips task-body compilation (action
-    /// interning, consume templates, `POp` trees). The static checker
-    /// only needs the traced paths, so it uses this cheaper build.
-    pub fn build_routes(prog: &MachineProgram, cfg: &MachineConfig) -> RoutingPlan {
-        Self::build_inner(prog, cfg, false)
-    }
-
-    fn build_inner(prog: &MachineProgram, cfg: &MachineConfig, compile_bodies: bool) -> RoutingPlan {
         let (width, height) = (cfg.width, cfg.height);
         let mut build_errors: Vec<String> = vec![];
 
@@ -478,7 +486,7 @@ impl RoutingPlan {
             // unique and < 28), but guard it so an unvalidated program
             // can never alias two tasks onto one bit.
             let mask_ok = class.tasks.len() <= 32;
-            if compile_bodies && !mask_ok {
+            if !mask_ok {
                 build_errors.push(format!(
                     "class {}: {} tasks exceed the 32-task scheduler mask",
                     class.name,
@@ -488,7 +496,7 @@ impl RoutingPlan {
 
             // Compile bodies.
             let mut consumes: Vec<PDsd> = vec![];
-            if compile_bodies && mask_ok {
+            if mask_ok {
                 for (ti, t) in class.tasks.iter().enumerate() {
                     let kind = match &t.kind {
                         TaskKind::Local => PTaskKind::Local,

@@ -15,6 +15,14 @@
 //! bodies with interned completion actions. Event-heap entries are
 //! `Copy` (flow payloads live in an indexed pool), so processing an
 //! event performs no hash lookups and no per-event heap allocation.
+//!
+//! DSD execution is *batched* where legal: the plan compiler marks
+//! contiguous-f32 operations ([`super::vecop`]) and the simulator runs
+//! them as single slice passes (one kernel per [`DsdKind`], plus a
+//! scalar-fold kernel for stride-0 accumulation), falling back to the
+//! per-element interpreter for aliased / strided / mixed-dtype
+//! descriptors. Both paths are bit-identical; `SPADA_NO_VEC=1` (or
+//! [`Simulator::set_vectorize`]) forces the interpreter everywhere.
 
 use super::config::MachineConfig;
 use super::metrics::{Metrics, RunReport};
@@ -25,9 +33,11 @@ use super::program::{
     DsdKind, DsdRef, Dtype, IoDir, MachineProgram, SBinOp, SExpr, SVal, TaskActionKind,
 };
 use super::router::RouteError;
+use super::vecop::{self, Span, VecOp};
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap, VecDeque};
 use std::rc::Rc;
+use std::sync::Arc;
 
 /// Simulator errors.
 #[derive(Debug, Clone)]
@@ -208,7 +218,9 @@ pub struct Simulator {
     pub cfg: MachineConfig,
     prog: Rc<MachineProgram>,
     /// Everything resolvable before the first event (see `machine::plan`).
-    plan: Rc<RoutingPlan>,
+    /// Shared with the compiler/checker when constructed via
+    /// [`Simulator::with_plan`] — one trace per compiled kernel.
+    plan: Arc<RoutingPlan>,
     pes: Vec<Pe>,
     /// Link busy-until, dense: `(y·width + x)·5 + direction index`.
     link_busy: Vec<u64>,
@@ -225,6 +237,16 @@ pub struct Simulator {
     /// External inputs staged before run (arg name -> data words).
     inputs: HashMap<String, Vec<u32>>,
     ran: bool,
+    /// Batched DSD execution enabled (default on; `SPADA_NO_VEC` in the
+    /// environment or [`Simulator::set_vectorize`] force the
+    /// per-element interpreter everywhere).
+    vec_enabled: bool,
+    /// DSD operations executed through the slice kernels (not a
+    /// [`Metrics`] field: metrics are bit-identical across modes).
+    vec_ops: u64,
+    /// Reusable slice-kernel operand buffers (no per-op allocation).
+    scratch_a: Vec<f64>,
+    scratch_b: Vec<f64>,
 }
 
 impl Simulator {
@@ -232,12 +254,34 @@ impl Simulator {
     /// precompile the routing/execution plan (all routes traced, task
     /// tables resolved, bodies compiled) so [`Simulator::run`] does no
     /// per-event resolution work.
+    ///
+    /// For a kernel compiled through [`crate::kernels::compile`], prefer
+    /// [`crate::kernels::CompiledKernel::simulator`], which reuses the
+    /// plan instance the compiler and checker already built instead of
+    /// re-tracing every route here.
     pub fn new(cfg: MachineConfig, prog: MachineProgram) -> Result<Simulator, SimError> {
+        let plan = Arc::new(RoutingPlan::build(&prog, &cfg));
+        Self::with_plan(cfg, prog, plan)
+    }
+
+    /// Build a simulator around an existing precompiled plan. The plan
+    /// must have been built from exactly this `(prog, cfg)` pair (the
+    /// geometry is cross-checked; the rest is the caller's contract).
+    pub fn with_plan(
+        cfg: MachineConfig,
+        prog: MachineProgram,
+        plan: Arc<RoutingPlan>,
+    ) -> Result<Simulator, SimError> {
         let errs = prog.validate(&cfg);
         if !errs.is_empty() {
             return Err(SimError::Validation(errs));
         }
-        let plan = RoutingPlan::build(&prog, &cfg);
+        if plan.width != cfg.width || plan.height != cfg.height {
+            return Err(SimError::Program(format!(
+                "routing plan was built for a {}x{} fabric, simulator config is {}x{}",
+                plan.width, plan.height, cfg.width, cfg.height
+            )));
+        }
         if let Some(e) = plan.build_errors.first() {
             return Err(SimError::Program(e.clone()));
         }
@@ -265,7 +309,7 @@ impl Simulator {
         Ok(Simulator {
             cfg,
             prog,
-            plan: Rc::new(plan),
+            plan,
             pes,
             link_busy,
             payloads: Vec::new(),
@@ -276,6 +320,10 @@ impl Simulator {
             metrics: Metrics::default(),
             inputs: HashMap::new(),
             ran: false,
+            vec_enabled: std::env::var_os("SPADA_NO_VEC").is_none(),
+            vec_ops: 0,
+            scratch_a: Vec::new(),
+            scratch_b: Vec::new(),
         })
     }
 
@@ -286,6 +334,25 @@ impl Simulator {
     /// The precompiled routing/execution plan.
     pub fn plan(&self) -> &RoutingPlan {
         &self.plan
+    }
+
+    /// Toggle the batched (slice-kernel) DSD engine. Defaults to on
+    /// unless `SPADA_NO_VEC` is set in the environment. Both modes are
+    /// bit-identical in outputs, metrics and cycle counts — the toggle
+    /// exists for the equivalence suite and for debugging.
+    pub fn set_vectorize(&mut self, on: bool) {
+        self.vec_enabled = on;
+    }
+
+    /// Whether the batched DSD engine is enabled.
+    pub fn vectorize_enabled(&self) -> bool {
+        self.vec_enabled
+    }
+
+    /// How many DSD operations ran through the slice kernels (0 when
+    /// vectorization is disabled or no operation was admitted).
+    pub fn vec_ops_executed(&self) -> u64 {
+        self.vec_ops
     }
 
     /// Dense PE lookup (row-major grid table).
@@ -450,7 +517,7 @@ impl Simulator {
         self.load_inputs()?;
 
         // Initialize task states and entry activations.
-        let plan = Rc::clone(&self.plan);
+        let plan = Arc::clone(&self.plan);
         for pe_idx in 0..self.pes.len() {
             let cp = &plan.classes[self.pes[pe_idx].class];
             for (ti, t) in cp.tasks.iter().enumerate() {
@@ -517,7 +584,8 @@ impl Simulator {
                         .to_string()
                 }
                 _ => {
-                    let report = crate::analysis::check(&self.prog, &self.cfg);
+                    let report =
+                        crate::analysis::check_with_plan(&self.prog, &self.cfg, &self.plan);
                     let statics: Vec<String> = report
                         .errors()
                         .filter(|d| {
@@ -569,7 +637,7 @@ impl Simulator {
             self.schedule(t, EventKind::PeReady(pe_idx as u32));
             return Ok(());
         }
-        let plan = Rc::clone(&self.plan);
+        let plan = Arc::clone(&self.plan);
         let cp = &plan.classes[self.pes[pe_idx].class];
 
         // Pick the lowest-hardware-ID runnable task by walking the set
@@ -668,7 +736,7 @@ impl Simulator {
     /// state transition that can change runnability funnels through
     /// here, so the bit is always consistent with the predicate.
     fn refresh_task_bit(&mut self, pe_idx: usize, ti: usize) {
-        let plan = Rc::clone(&self.plan);
+        let plan = Arc::clone(&self.plan);
         let cp = &plan.classes[self.pes[pe_idx].class];
         let runnable = {
             let pe = &self.pes[pe_idx];
@@ -704,7 +772,7 @@ impl Simulator {
         if actions == ACTIONS_EMPTY {
             return;
         }
-        let plan = Rc::clone(&self.plan);
+        let plan = Arc::clone(&self.plan);
         for a in &plan.actions[actions as usize] {
             self.apply_paction(pe_idx, a);
         }
@@ -776,7 +844,7 @@ impl Simulator {
         if n == 0 {
             return Ok((earliest, earliest));
         }
-        let plan = Rc::clone(&self.plan);
+        let plan = Arc::clone(&self.plan);
         let (sx, sy) = (self.pes[src_pe].x, self.pes[src_pe].y);
         let Some(fi) = plan.flow_index(src_pe, color) else {
             return Err(SimError::Program(format!(
@@ -862,7 +930,7 @@ impl Simulator {
     /// destination (memory or a forwarded out-flow), schedule completion.
     /// The operation is read from the plan's consume-template table.
     fn complete_consume(&mut self, pe_idx: usize, c: PendingConsume) -> Result<(), SimError> {
-        let plan = Rc::clone(&self.plan);
+        let plan = Arc::clone(&self.plan);
         let tmpl = &plan.classes[self.pes[pe_idx].class].consumes[c.consume_ix as usize];
         let words = c.taken;
         let n = words.len();
@@ -894,7 +962,7 @@ impl Simulator {
             Some(r @ DsdRef::Mem { .. }) => VOp::Mem(r),
             _ => VOp::Nothing,
         };
-        let out = self.apply_dsd(pe_idx, tmpl.kind, &tmpl.dst, a, b, scalar, n)?;
+        let out = self.apply_dsd(pe_idx, tmpl.kind, &tmpl.dst, a, b, scalar, n, tmpl.vec)?;
 
         if let Some(out_words) = out {
             let out_color = match &tmpl.dst {
@@ -1043,11 +1111,18 @@ impl Simulator {
         }
     }
 
-    /// Apply a DSD op elementwise. Reads are *lazy* (per element, from
-    /// current memory), so aliased / stride-0 descriptors behave like the
-    /// hardware's sequential element pipeline (e.g. a stride-0
+    /// Apply a DSD op. Statically eligible operations ([`VecOp::Map`] /
+    /// [`VecOp::Fold`], see [`crate::machine::vecop`]) that also pass
+    /// the runtime admission check (resolved operands in bounds and
+    /// non-overlapping) execute as one slice pass per operation;
+    /// everything else falls back to the lazy per-element loop, whose
+    /// reads (per element, from current memory) define the reference
+    /// semantics for aliased / strided descriptors (e.g. a stride-0
     /// destination accumulates — the idiom for scalar reductions).
+    /// Both paths are bit-identical in destination memory, emitted
+    /// fabric words, and metrics.
     /// Returns `Some(words)` if the destination is a fabric output.
+    #[allow(clippy::too_many_arguments)]
     fn apply_dsd(
         &mut self,
         pe_idx: usize,
@@ -1057,6 +1132,7 @@ impl Simulator {
         b: VOp<'_>,
         scalar: f64,
         n: usize,
+        vec: VecOp,
     ) -> Result<Option<Vec<u32>>, SimError> {
         let mut out: Option<Vec<u32>> = match dst {
             DsdRef::FabOut { .. } => Some(Vec::with_capacity(n)),
@@ -1073,37 +1149,142 @@ impl Simulator {
             DsdRef::Mem { .. } => Some(self.resolve_mem(pe_idx, dst)),
             _ => None,
         };
-        for i in 0..n {
-            let av = self.rv_val(pe_idx, &ra, i);
-            let bv = self.rv_val(pe_idx, &rb, i);
-            let r = match kind {
-                DsdKind::Fadd => av + bv,
-                DsdKind::Fsub => av - bv,
-                DsdKind::Fmul => av * bv,
-                DsdKind::Fmac => av + bv * scalar,
-                DsdKind::Fscale => av * scalar,
-                DsdKind::Mov => av,
-                DsdKind::Fill => scalar,
-                DsdKind::FmaxOp => av.max(bv),
-            };
-            match (&mut out, &rdst) {
-                (Some(words), _) => words.push((r as f32).to_bits()),
-                (None, Some(d)) => {
-                    let addr = (d.base as isize + i as isize * d.stride) as usize;
-                    if d.ty == Dtype::F32 {
-                        self.pes[pe_idx].mem[addr..addr + 4]
-                            .copy_from_slice(&(r as f32).to_le_bytes());
-                    } else {
-                        self.store_scalar(pe_idx, addr, d.ty, SVal::F(r));
+        let vectorized = self.vec_enabled
+            && vec != VecOp::None
+            && n > 0
+            && self.apply_vec(pe_idx, kind, vec, &rdst, &mut out, &ra, &rb, scalar, n);
+        if vectorized {
+            self.vec_ops += 1;
+        } else {
+            for i in 0..n {
+                let av = self.rv_val(pe_idx, &ra, i);
+                let bv = self.rv_val(pe_idx, &rb, i);
+                let r = match kind {
+                    DsdKind::Fadd => av + bv,
+                    DsdKind::Fsub => av - bv,
+                    DsdKind::Fmul => av * bv,
+                    DsdKind::Fmac => av + bv * scalar,
+                    DsdKind::Fscale => av * scalar,
+                    DsdKind::Mov => av,
+                    DsdKind::Fill => scalar,
+                    DsdKind::FmaxOp => av.max(bv),
+                };
+                match (&mut out, &rdst) {
+                    (Some(words), _) => words.push((r as f32).to_bits()),
+                    (None, Some(d)) => {
+                        let addr = (d.base as isize + i as isize * d.stride) as usize;
+                        if d.ty == Dtype::F32 {
+                            self.pes[pe_idx].mem[addr..addr + 4]
+                                .copy_from_slice(&(r as f32).to_le_bytes());
+                        } else {
+                            self.store_scalar(pe_idx, addr, d.ty, SVal::F(r));
+                        }
                     }
+                    _ => unreachable!(),
                 }
-                _ => unreachable!(),
             }
         }
         self.metrics.flops += kind.flops_per_elem() * n as u64;
         self.metrics.mem_bytes += (n * dst.ty().size()) as u64;
         self.metrics.dsd_ops += 1;
         Ok(out)
+    }
+
+    /// Try to execute an eligible DSD op as one slice pass. Returns
+    /// `false` (without touching any state) when the resolved operands
+    /// fail runtime admission — the caller then runs the interpreter.
+    #[allow(clippy::too_many_arguments)]
+    fn apply_vec(
+        &mut self,
+        pe_idx: usize,
+        kind: DsdKind,
+        vec: VecOp,
+        rdst: &Option<RMem>,
+        out: &mut Option<Vec<u32>>,
+        ra: &RVOp<'_>,
+        rb: &RVOp<'_>,
+        scalar: f64,
+        n: usize,
+    ) -> bool {
+        let mem_len = self.pes[pe_idx].mem.len();
+        let span = |r: &RMem| Span { base: r.base, stride: r.stride };
+        // Memory sources must be f32 to enter the slice kernels; the
+        // static hint guarantees this, but re-checking is cheap and
+        // keeps admission self-contained.
+        let src_span = |o: &RVOp<'_>| -> Result<Option<Span>, ()> {
+            match o {
+                RVOp::Mem(r) if r.ty != Dtype::F32 => Err(()),
+                RVOp::Mem(r) => Ok(Some(span(r))),
+                _ => Ok(None),
+            }
+        };
+        let (Ok(sa), Ok(sb)) = (src_span(ra), src_span(rb)) else {
+            return false;
+        };
+        match vec {
+            VecOp::Map => {
+                let sd = match rdst {
+                    Some(d) if d.ty != Dtype::F32 => return false,
+                    Some(d) => Some(span(d)),
+                    None => None,
+                };
+                if !vecop::admit_map(mem_len, sd, &[sa, sb], n) {
+                    return false;
+                }
+                let mut va = std::mem::take(&mut self.scratch_a);
+                let mut vb = std::mem::take(&mut self.scratch_b);
+                self.gather(pe_idx, ra, n, &mut va);
+                self.gather(pe_idx, rb, n, &mut vb);
+                match out {
+                    Some(words) => map_out_kernel(kind, words, &va, &vb, scalar),
+                    None => {
+                        let d = rdst.as_ref().expect("map without fabout has a mem dst");
+                        let dst = &mut self.pes[pe_idx].mem[d.base..d.base + 4 * n];
+                        map_mem_kernel(kind, dst, &va, &vb, scalar);
+                    }
+                }
+                self.scratch_a = va;
+                self.scratch_b = vb;
+                true
+            }
+            VecOp::Fold => {
+                let Some(d) = rdst else { return false };
+                let RVOp::Mem(a0) = ra else { return false };
+                if d.ty != Dtype::F32 || d.stride != 0 || a0.base != d.base || a0.stride != 0 {
+                    return false;
+                }
+                if !vecop::admit_fold(mem_len, Span { base: d.base, stride: 0 }, sb, n) {
+                    return false;
+                }
+                let mut vb = std::mem::take(&mut self.scratch_b);
+                self.gather(pe_idx, rb, n, &mut vb);
+                let mem = &mut self.pes[pe_idx].mem;
+                let acc = f32::from_le_bytes(mem[d.base..d.base + 4].try_into().unwrap());
+                let acc = fold_kernel(kind, acc, &vb, scalar);
+                mem[d.base..d.base + 4].copy_from_slice(&acc.to_le_bytes());
+                self.scratch_b = vb;
+                true
+            }
+            VecOp::None => false,
+        }
+    }
+
+    /// Materialize one admitted source operand as a dense f64 slice
+    /// (the interpreter's element representation, so rounding agrees).
+    fn gather(&self, pe_idx: usize, o: &RVOp<'_>, n: usize, buf: &mut Vec<f64>) {
+        buf.clear();
+        match o {
+            RVOp::Vals(v) => buf.extend_from_slice(&v[..n]),
+            RVOp::Mem(r) => {
+                let mem = &self.pes[pe_idx].mem;
+                buf.extend(
+                    mem[r.base..r.base + 4 * n]
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()) as f64),
+                );
+            }
+            RVOp::Nothing => buf.resize(n, 0.0),
+        }
     }
 
     fn resolve_mem(&self, pe_idx: usize, r: &DsdRef) -> RMem {
@@ -1248,7 +1429,7 @@ impl Simulator {
             let a = op.src0.as_ref().map(VOp::Mem).unwrap_or(VOp::Nothing);
             let b = op.src1.as_ref().map(VOp::Mem).unwrap_or(VOp::Nothing);
             let words = self
-                .apply_dsd(pe_idx, op.kind, &op.dst, a, b, scalar, n)?
+                .apply_dsd(pe_idx, op.kind, &op.dst, a, b, scalar, n, op.vec)?
                 .expect("fabout dst produces words");
             let color = match &op.dst {
                 DsdRef::FabOut { color, .. } => *color,
@@ -1280,10 +1461,82 @@ impl Simulator {
         );
         let a = op.src0.as_ref().map(VOp::Mem).unwrap_or(VOp::Nothing);
         let b = op.src1.as_ref().map(VOp::Mem).unwrap_or(VOp::Nothing);
-        self.apply_dsd(pe_idx, op.kind, &op.dst, a, b, scalar, n)?;
+        self.apply_dsd(pe_idx, op.kind, &op.dst, a, b, scalar, n, op.vec)?;
         *clock += self.elem_cycles(ty, n as u64);
         self.apply_actions_id(pe_idx, op.actions);
         Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Batched DSD slice kernels
+// ---------------------------------------------------------------------
+//
+// One monomorphized pass per `DsdKind`. Each element is computed with
+// the interpreter's exact arithmetic — f32 sources widened to f64,
+// the operation applied in f64, the result rounded back to f32 — so
+// destination memory and emitted fabric words are bit-identical to the
+// per-element loop. The win is structural: no per-element operand
+// dispatch, no strided address math, and loops the compiler can keep
+// in registers and auto-vectorize.
+
+/// Elementwise pass into a contiguous f32 memory destination.
+fn map_mem_kernel(kind: DsdKind, dst: &mut [u8], a: &[f64], b: &[f64], scalar: f64) {
+    fn run(dst: &mut [u8], a: &[f64], b: &[f64], f: impl Fn(f64, f64) -> f64) {
+        for ((o, x), y) in dst.chunks_exact_mut(4).zip(a).zip(b) {
+            o.copy_from_slice(&(f(*x, *y) as f32).to_le_bytes());
+        }
+    }
+    match kind {
+        DsdKind::Fadd => run(dst, a, b, |x, y| x + y),
+        DsdKind::Fsub => run(dst, a, b, |x, y| x - y),
+        DsdKind::Fmul => run(dst, a, b, |x, y| x * y),
+        DsdKind::Fmac => run(dst, a, b, |x, y| x + y * scalar),
+        DsdKind::Fscale => run(dst, a, b, |x, _| x * scalar),
+        DsdKind::Mov => run(dst, a, b, |x, _| x),
+        DsdKind::Fill => run(dst, a, b, |_, _| scalar),
+        DsdKind::FmaxOp => run(dst, a, b, |x, y| x.max(y)),
+    }
+}
+
+/// Elementwise pass into a fabric-out word stream.
+fn map_out_kernel(kind: DsdKind, words: &mut Vec<u32>, a: &[f64], b: &[f64], scalar: f64) {
+    fn run(words: &mut Vec<u32>, a: &[f64], b: &[f64], f: impl Fn(f64, f64) -> f64) {
+        words.extend(a.iter().zip(b).map(|(x, y)| (f(*x, *y) as f32).to_bits()));
+    }
+    match kind {
+        DsdKind::Fadd => run(words, a, b, |x, y| x + y),
+        DsdKind::Fsub => run(words, a, b, |x, y| x - y),
+        DsdKind::Fmul => run(words, a, b, |x, y| x * y),
+        DsdKind::Fmac => run(words, a, b, |x, y| x + y * scalar),
+        DsdKind::Fscale => run(words, a, b, |x, _| x * scalar),
+        DsdKind::Mov => run(words, a, b, |x, _| x),
+        DsdKind::Fill => run(words, a, b, |_, _| scalar),
+        DsdKind::FmaxOp => run(words, a, b, |x, y| x.max(y)),
+    }
+}
+
+/// Scalar-fold pass for the stride-0 accumulate idiom: the interpreter
+/// stores the f32-rounded partial result every element and re-reads it
+/// as the next element's `src0`, so the fold rounds to f32 after every
+/// step to stay bit-identical.
+fn fold_kernel(kind: DsdKind, acc0: f32, b: &[f64], scalar: f64) -> f32 {
+    fn run(acc0: f32, b: &[f64], f: impl Fn(f64, f64) -> f64) -> f32 {
+        let mut acc = acc0;
+        for y in b {
+            acc = f(acc as f64, *y) as f32;
+        }
+        acc
+    }
+    match kind {
+        DsdKind::Fadd => run(acc0, b, |x, y| x + y),
+        DsdKind::Fsub => run(acc0, b, |x, y| x - y),
+        DsdKind::Fmul => run(acc0, b, |x, y| x * y),
+        DsdKind::Fmac => run(acc0, b, |x, y| x + y * scalar),
+        DsdKind::Fscale => run(acc0, b, |x, _| x * scalar),
+        DsdKind::Mov => run(acc0, b, |x, _| x),
+        DsdKind::Fill => run(acc0, b, |_, _| scalar),
+        DsdKind::FmaxOp => run(acc0, b, |x, y| x.max(y)),
     }
 }
 

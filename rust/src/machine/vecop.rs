@@ -1,0 +1,263 @@
+//! Batched DSD execution: eligibility classification and admission.
+//!
+//! The per-element interpreter in [`super::sim`] is fully general but
+//! pays an enum dispatch, a strided address computation, and two
+//! f32↔f64 conversions per element. The paper's kernels overwhelmingly
+//! issue *contiguous f32* descriptors, so the plan compiler classifies
+//! every DSD operation once ([`classify_vec`], stored in
+//! [`super::plan::PDsd::vec`]) and the simulator executes eligible
+//! operations as single slice passes — one kernel per
+//! [`super::program::DsdKind`], plus a dedicated scalar-fold kernel for
+//! the stride-0 accumulate idiom the backend emits for scalar
+//! reductions.
+//!
+//! Classification is split into two stages, both conservative:
+//!
+//! 1. **Static** ([`classify_vec`], plan time): all operands must be
+//!    memory-resident `f32` descriptors with element stride 1 (or the
+//!    fold shape: a stride-0 destination re-read as `src0`), fabric-in
+//!    value streams, or absent. Mixed dtypes, non-unit strides and any
+//!    other shape fall back to the interpreter.
+//! 2. **Dynamic** ([`admit_map`] / [`admit_fold`], issue time): offsets
+//!    are runtime expressions, so the resolved byte spans are checked
+//!    for bounds and for overlap between the destination and every
+//!    memory source. Aliased or out-of-bounds operands are *never*
+//!    admitted — they take the lazy per-element path, whose
+//!    read-after-write semantics define the reference behaviour.
+//!
+//! The slice kernels themselves live in [`super::sim`] (they need the
+//! PE memory); everything here is pure and unit-testable, and the
+//! admission functions are exercised by the `properties.rs` fuzz suite.
+
+use super::program::{DsdRef, Dtype};
+
+/// Element size every slice kernel operates on (f32 / one wavelet).
+pub const ELEM: usize = 4;
+
+/// Plan-time batching verdict for one DSD operation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum VecOp {
+    /// Not statically eligible: always interpret per element.
+    None,
+    /// Elementwise pass: contiguous f32 destination (memory or fabric
+    /// out) from contiguous f32 / fabric-in sources.
+    Map,
+    /// Scalar-fold pass: stride-0 f32 destination accumulated through
+    /// `src0` aliasing it (the backend's scalar-reduction idiom).
+    Fold,
+}
+
+fn contiguous_f32(r: &DsdRef) -> bool {
+    matches!(r, DsdRef::Mem { stride: 1, ty: Dtype::F32, .. })
+}
+
+/// A source operand admissible for slice execution: absent, a fabric-in
+/// word stream (already materialized as a dense value slice by the
+/// consume machinery), or a contiguous f32 memory descriptor.
+fn src_ok(s: &Option<DsdRef>) -> bool {
+    match s {
+        None => true,
+        Some(DsdRef::FabIn { .. }) => true,
+        Some(r @ DsdRef::Mem { .. }) => contiguous_f32(r),
+        Some(DsdRef::FabOut { .. }) => false,
+    }
+}
+
+/// Statically classify a DSD operation for batched execution.
+///
+/// The verdict is kind-independent: the slice kernels replicate the
+/// interpreter's per-element arithmetic exactly for every
+/// [`super::program::DsdKind`], so only operand *shape* matters.
+pub fn classify_vec(dst: &DsdRef, src0: &Option<DsdRef>, src1: &Option<DsdRef>) -> VecOp {
+    match dst {
+        DsdRef::FabOut { .. } if src_ok(src0) && src_ok(src1) => VecOp::Map,
+        DsdRef::Mem { stride: 1, ty: Dtype::F32, .. } if src_ok(src0) && src_ok(src1) => {
+            VecOp::Map
+        }
+        DsdRef::Mem { base: bd, offset: od, stride: 0, ty: Dtype::F32, .. } => {
+            // Fold requires src0 to be *the same cell* as the
+            // destination: same field base and an identical offset
+            // expression (evaluated in the same PE state, so equal
+            // expressions resolve to equal addresses).
+            let acc_aliases_dst = matches!(
+                src0,
+                Some(DsdRef::Mem { base, offset, stride: 0, ty: Dtype::F32, .. })
+                    if base == bd && offset == od
+            );
+            if acc_aliases_dst && src_ok(src1) {
+                VecOp::Fold
+            } else {
+                VecOp::None
+            }
+        }
+        _ => VecOp::None,
+    }
+}
+
+/// A resolved memory operand: byte base address and byte stride per
+/// element (offset expressions already evaluated).
+#[derive(Clone, Copy, Debug)]
+pub struct Span {
+    pub base: usize,
+    pub stride: isize,
+}
+
+/// The byte interval `[lo, hi)` touched by `n` elements of a span, or
+/// `None` when degenerate (n = 0, or address arithmetic leaves usize).
+fn interval(s: Span, n: usize) -> Option<(usize, usize)> {
+    if n == 0 {
+        return None;
+    }
+    let base = i64::try_from(s.base).ok()?;
+    let last = base + (n as i64 - 1) * s.stride as i64;
+    let lo = base.min(last);
+    let hi = base.max(last) + ELEM as i64;
+    if lo < 0 {
+        return None;
+    }
+    Some((lo as usize, hi as usize))
+}
+
+/// Conservative byte-interval overlap test between `na` elements of `a`
+/// and `nb` elements of `b`. Degenerate spans count as overlapping, so
+/// callers reject them.
+pub fn overlaps(a: Span, na: usize, b: Span, nb: usize) -> bool {
+    match (interval(a, na), interval(b, nb)) {
+        (Some((al, ah)), Some((bl, bh))) => al < bh && bl < ah,
+        _ => true,
+    }
+}
+
+fn in_bounds(s: Span, n: usize, mem_len: usize) -> bool {
+    matches!(interval(s, n), Some((_, hi)) if hi <= mem_len)
+}
+
+/// Runtime admission for a [`VecOp::Map`] operation over resolved
+/// spans. `dst` is `None` for fabric-out destinations (the output words
+/// live in a separate buffer and cannot alias PE memory); `srcs`
+/// entries are `None` for absent / fabric-in operands.
+///
+/// Admits only when every memory span is contiguous (`stride == 4`),
+/// fully inside `mem_len` bytes, and no source overlaps the
+/// destination. Never admits an aliased or overlapping pair — those
+/// take the per-element path.
+pub fn admit_map(mem_len: usize, dst: Option<Span>, srcs: &[Option<Span>], n: usize) -> bool {
+    if n == 0 {
+        return false;
+    }
+    if let Some(d) = dst {
+        if d.stride != ELEM as isize || !in_bounds(d, n, mem_len) {
+            return false;
+        }
+    }
+    for s in srcs.iter().flatten() {
+        if s.stride != ELEM as isize || !in_bounds(*s, n, mem_len) {
+            return false;
+        }
+        if let Some(d) = dst {
+            if overlaps(d, n, *s, n) {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+/// Runtime admission for a [`VecOp::Fold`]: the accumulator is a single
+/// in-bounds f32 cell (`acc.stride == 0`), and the streamed source (if
+/// memory-resident) is contiguous, in bounds, and disjoint from it.
+pub fn admit_fold(mem_len: usize, acc: Span, src: Option<Span>, n: usize) -> bool {
+    if n == 0 || acc.stride != 0 || !in_bounds(acc, 1, mem_len) {
+        return false;
+    }
+    if let Some(s) = src {
+        if s.stride != ELEM as isize || !in_bounds(s, n, mem_len) {
+            return false;
+        }
+        if overlaps(acc, 1, s, n) {
+            return false;
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::machine::program::SExpr;
+
+    fn mem(base: u32, off: i64, stride: i64, ty: Dtype) -> DsdRef {
+        DsdRef::Mem { base, offset: SExpr::imm(off), stride, len: SExpr::imm(8), ty }
+    }
+
+    #[test]
+    fn classify_contiguous_f32_map() {
+        let d = mem(0, 0, 1, Dtype::F32);
+        let s0 = Some(mem(64, 0, 1, Dtype::F32));
+        assert_eq!(classify_vec(&d, &s0, &None), VecOp::Map);
+        let fab = Some(DsdRef::FabIn { color: 1, len: SExpr::imm(8), ty: Dtype::F32 });
+        assert_eq!(classify_vec(&d, &s0, &fab), VecOp::Map);
+    }
+
+    #[test]
+    fn classify_rejects_strided_and_mixed_dtype() {
+        let d = mem(0, 0, 1, Dtype::F32);
+        assert_eq!(classify_vec(&d, &Some(mem(64, 0, 2, Dtype::F32)), &None), VecOp::None);
+        assert_eq!(classify_vec(&d, &Some(mem(64, 0, 1, Dtype::F16)), &None), VecOp::None);
+        assert_eq!(classify_vec(&mem(0, 0, 1, Dtype::I32), &None, &None), VecOp::None);
+        assert_eq!(classify_vec(&mem(0, 0, 2, Dtype::F32), &None, &None), VecOp::None);
+    }
+
+    #[test]
+    fn classify_fold_requires_exact_acc_alias() {
+        let acc = mem(16, 0, 0, Dtype::F32);
+        let stream = Some(mem(64, 0, 1, Dtype::F32));
+        assert_eq!(classify_vec(&acc, &Some(mem(16, 0, 0, Dtype::F32)), &stream), VecOp::Fold);
+        // Different base or offset: not the accumulate idiom.
+        assert_eq!(classify_vec(&acc, &Some(mem(20, 0, 0, Dtype::F32)), &stream), VecOp::None);
+        assert_eq!(classify_vec(&acc, &Some(mem(16, 1, 0, Dtype::F32)), &stream), VecOp::None);
+        // Stride-0 dst without the alias is a last-write op, not a fold.
+        assert_eq!(classify_vec(&acc, &stream, &None), VecOp::None);
+    }
+
+    #[test]
+    fn admit_map_rejects_overlap_and_oob() {
+        let d = Span { base: 0, stride: 4 };
+        let s = Span { base: 16, stride: 4 };
+        assert!(admit_map(1024, Some(d), &[Some(s), None], 4));
+        // dst [0,16) vs src [12, 28): one shared element word.
+        assert!(!admit_map(1024, Some(d), &[Some(Span { base: 12, stride: 4 })], 4));
+        // Exact alias.
+        assert!(!admit_map(1024, Some(d), &[Some(d)], 4));
+        // Out of bounds.
+        assert!(!admit_map(24, Some(d), &[Some(s)], 4));
+        // Fabric-out dst: only sources constrain admission.
+        assert!(admit_map(32, None, &[Some(s), None], 4));
+        assert!(!admit_map(16, None, &[Some(s)], 4));
+        // n = 0 falls back (the interpreter no-ops it).
+        assert!(!admit_map(1024, Some(d), &[], 0));
+    }
+
+    #[test]
+    fn admit_fold_rejects_acc_inside_stream() {
+        let acc = Span { base: 32, stride: 0 };
+        assert!(admit_fold(1024, acc, Some(Span { base: 64, stride: 4 }), 8));
+        assert!(admit_fold(1024, acc, None, 8));
+        // Stream runs over the accumulator cell.
+        assert!(!admit_fold(1024, acc, Some(Span { base: 24, stride: 4 }), 8));
+        // Strided stream is not a slice.
+        assert!(!admit_fold(1024, acc, Some(Span { base: 64, stride: 8 }), 8));
+        assert!(!admit_fold(1024, Span { base: 32, stride: 4 }, None, 8));
+    }
+
+    #[test]
+    fn interval_math_is_exact_for_unit_stride() {
+        assert!(!overlaps(
+            Span { base: 0, stride: 4 },
+            4,
+            Span { base: 16, stride: 4 },
+            4
+        ));
+        assert!(overlaps(Span { base: 0, stride: 4 }, 5, Span { base: 16, stride: 4 }, 4));
+    }
+}

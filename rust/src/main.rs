@@ -14,7 +14,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use spada::frontend::{lower_stencil, parse_stencil, stencil_source};
 use spada::harness;
 use spada::kernels;
-use spada::machine::{MachineConfig, Simulator};
+use spada::machine::MachineConfig;
 use spada::passes::Options;
 use spada::sem::instantiate;
 use spada::spada::pretty;
@@ -43,7 +43,10 @@ impl Args {
                 if let Some((k, v)) = name.split_once('=') {
                     flags.push((k.to_string(), Some(v.to_string())));
                 } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false)
-                    && matches!(name, "bind" | "emit" | "exp" | "grid")
+                    && matches!(
+                        name,
+                        "bind" | "emit" | "exp" | "grid" | "compare" | "current" | "threshold"
+                    )
                 {
                     flags.push((name.to_string(), it.next()));
                 } else {
@@ -188,8 +191,8 @@ fn real_main() -> Result<()> {
                 binds.iter().map(|(k, v)| (k.as_str(), *v)).collect();
             let (w, h) = grid_of(&args, &binds);
             let cfg = MachineConfig::with_grid(w, h);
-            let (prog, _, _) = kernels::compile(name, &bind_refs, &cfg, &options(&args))?;
-            let mut sim = Simulator::new(cfg.clone(), prog)?;
+            let ck = kernels::compile(name, &bind_refs, &cfg, &options(&args))?;
+            let mut sim = ck.simulator()?;
             // Fill every input with deterministic noise.
             let io: Vec<(String, usize)> = sim
                 .program()
@@ -258,6 +261,24 @@ fn real_main() -> Result<()> {
             Ok(())
         }
         "bench" => {
+            if let Some(baseline) = args.flag("compare") {
+                // Bench-regression gate: compare events-per-sec against a
+                // blessed baseline, failing on any per-kernel drop beyond
+                // the threshold (default 25%).
+                let threshold: f64 = match args.flag("threshold") {
+                    Some(t) => t.parse().context("--threshold")?,
+                    None => 0.25,
+                };
+                let current = match args.flag("current") {
+                    Some(cur) => cur.to_string(),
+                    None => {
+                        // No current file given: run the sweep first.
+                        harness::sim_scaling::run(args.has("quick"))?;
+                        harness::sim_scaling::OUT_FILE.to_string()
+                    }
+                };
+                return harness::sim_scaling::compare_files(baseline, &current, threshold);
+            }
             let exp = args.flag("exp").unwrap_or("all").to_string();
             harness::run(&exp, args.has("quick"))
         }
@@ -285,6 +306,9 @@ fn print_help() {
          \x20 spada run <kernel> [--bind ...] [--grid WxH]\n\
          \x20 spada bench [--exp table2|fig4|fig5|fig6|fig7|fig8|fig9|sim|verify|all] [--quick]\n\
          \x20   (--exp sim sweeps the six kernels 4x4..128x128 and writes BENCH_sim.json)\n\
+         \x20 spada bench --compare BASELINE.json [--current CURRENT.json] [--threshold 0.25]\n\
+         \x20   (regression gate: fails if any kernel's events/s drops more than the\n\
+         \x20    threshold vs the baseline; without --current it runs the sim sweep first)\n\
          \x20 spada loc\n\
          \n\
          Ablation flags: --no-fusion --no-recycling --no-copy-elim --no-check\n\

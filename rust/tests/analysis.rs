@@ -259,9 +259,11 @@ fn paper_kernels_check_clean() {
     for (name, b, (w, h)) in cases {
         let cfg = MachineConfig::with_grid(w, h);
         let opts = Options { check: false, ..Options::default() };
-        let (prog, _, _) = spada::kernels::compile(name, &b, &cfg, &opts)
+        let ck = spada::kernels::compile(name, &b, &cfg, &opts)
             .unwrap_or_else(|e| panic!("{name}: {e:#}"));
-        let report = analysis::check(&prog, &cfg);
+        // Check against the compiler's own plan instance (the shared
+        // trace-once path).
+        let report = analysis::check_with_plan(&ck.machine, &cfg, &ck.plan);
         assert!(
             report.is_clean(),
             "{name} {b:?} must have zero findings:\n{report}"
@@ -309,10 +311,9 @@ fn checker_clean_across_ablations() {
         Options { copy_elim: false, ..Options::default() },
     ] {
         let cfg = MachineConfig::with_grid(8, 1);
-        let (prog, _, _) =
-            spada::kernels::compile("chain_reduce", &[("K", 8), ("N", 8)], &cfg, &opts)
-                .unwrap_or_else(|e| panic!("{opts:?}: {e:#}"));
-        let report = analysis::check(&prog, &cfg);
+        let ck = spada::kernels::compile("chain_reduce", &[("K", 8), ("N", 8)], &cfg, &opts)
+            .unwrap_or_else(|e| panic!("{opts:?}: {e:#}"));
+        let report = analysis::check_with_plan(&ck.machine, &cfg, &ck.plan);
         assert!(report.is_clean(), "{opts:?}:\n{report}");
     }
 }

@@ -2,7 +2,7 @@
 //! numerics for the communication-collective kernels (paper §VI-B).
 
 use spada::kernels;
-use spada::machine::{MachineConfig, Simulator};
+use spada::machine::MachineConfig;
 use spada::passes::Options;
 use spada::util::SplitMix64;
 
@@ -36,11 +36,11 @@ fn assert_close(got: &[f32], want: &[f32], tol: f32, what: &str) {
 fn chain_reduce_e2e() {
     let (k, n) = (32usize, 8i64);
     let cfg = MachineConfig::with_grid(n, 1);
-    let (prog, stats, _loc) =
+    let ck =
         kernels::compile("chain_reduce", &[("K", k as i64), ("N", n)], &cfg, &Options::default())
             .unwrap();
-    assert!(stats.colors_used >= 2, "chain needs red+blue: {stats:?}");
-    let mut sim = Simulator::new(cfg, prog).unwrap();
+    assert!(ck.stats.colors_used >= 2, "chain needs red+blue: {:?}", ck.stats);
+    let mut sim = ck.simulator().unwrap();
     let data = rand_vec(1, k * n as usize);
     sim.set_input("a_in", &data).unwrap();
     let report = sim.run().unwrap();
@@ -58,10 +58,10 @@ fn chain_reduce_e2e() {
 fn chain_reduce_larger() {
     let (k, n) = (256usize, 17i64); // odd PE count exercises both corners
     let cfg = MachineConfig::with_grid(n, 1);
-    let (prog, _, _) =
+    let ck =
         kernels::compile("chain_reduce", &[("K", k as i64), ("N", n)], &cfg, &Options::default())
             .unwrap();
-    let mut sim = Simulator::new(cfg, prog).unwrap();
+    let mut sim = ck.simulator().unwrap();
     let data = rand_vec(2, k * n as usize);
     sim.set_input("a_in", &data).unwrap();
     sim.run().unwrap();
@@ -73,10 +73,10 @@ fn chain_reduce_larger() {
 fn broadcast_e2e() {
     let (k, n) = (64usize, 8i64);
     let cfg = MachineConfig::with_grid(n, 1);
-    let (prog, _, _) =
+    let ck =
         kernels::compile("broadcast", &[("K", k as i64), ("N", n)], &cfg, &Options::default())
             .unwrap();
-    let mut sim = Simulator::new(cfg, prog).unwrap();
+    let mut sim = ck.simulator().unwrap();
     let data = rand_vec(3, k);
     sim.set_input("a_in", &data).unwrap();
     let report = sim.run().unwrap();
@@ -93,7 +93,7 @@ fn broadcast_e2e() {
 fn tree_reduce_e2e() {
     let (k, nx, ny) = (16usize, 8i64, 4i64);
     let cfg = MachineConfig::with_grid(nx, ny);
-    let (prog, stats, _) = kernels::compile(
+    let ck = kernels::compile(
         "tree_reduce",
         &[("K", k as i64), ("NX", nx), ("NY", ny)],
         &cfg,
@@ -101,8 +101,8 @@ fn tree_reduce_e2e() {
     )
     .unwrap();
     // 2·log2 colors: log2(8) + log2(4) = 5.
-    assert_eq!(stats.colors_used, 5, "{stats:?}");
-    let mut sim = Simulator::new(cfg, prog).unwrap();
+    assert_eq!(ck.stats.colors_used, 5, "{:?}", ck.stats);
+    let mut sim = ck.simulator().unwrap();
     let data = rand_vec(4, k * (nx * ny) as usize);
     sim.set_input("a_in", &data).unwrap();
     sim.run().unwrap();
@@ -114,14 +114,14 @@ fn tree_reduce_e2e() {
 fn two_phase_reduce_e2e() {
     let (k, nx, ny) = (32usize, 8i64, 4i64);
     let cfg = MachineConfig::with_grid(nx, ny);
-    let (prog, _, _) = kernels::compile(
+    let ck = kernels::compile(
         "two_phase_reduce",
         &[("K", k as i64), ("NX", nx), ("NY", ny)],
         &cfg,
         &Options::default(),
     )
     .unwrap();
-    let mut sim = Simulator::new(cfg, prog).unwrap();
+    let mut sim = ck.simulator().unwrap();
     let data = rand_vec(5, k * (nx * ny) as usize);
     sim.set_input("a_in", &data).unwrap();
     sim.run().unwrap();
@@ -134,14 +134,14 @@ fn gemv_e2e() {
     let (m, n, nx, ny) = (16i64, 12i64, 3i64, 4i64);
     let (bm, bn) = ((m / ny) as usize, (n / nx) as usize);
     let cfg = MachineConfig::with_grid(nx, ny);
-    let (prog, _, _) = kernels::compile(
+    let ck = kernels::compile(
         "gemv",
         &[("M", m), ("N", n), ("NX", nx), ("NY", ny)],
         &cfg,
         &Options::default(),
     )
     .unwrap();
-    let mut sim = Simulator::new(cfg, prog).unwrap();
+    let mut sim = ck.simulator().unwrap();
 
     // Dense A (row r, col c), distributed in column-major blocks:
     // PE (i, j) holds rows [j·bm, (j+1)·bm) × cols [i·bn, (i+1)·bn),
@@ -219,9 +219,9 @@ fn chain_reduce_ablations_correct() {
         Options::none(),
     ] {
         let cfg = MachineConfig::with_grid(n, 1);
-        let (prog, _, _) =
+        let ck =
             kernels::compile("chain_reduce", &[("K", k as i64), ("N", n)], &cfg, &opts).unwrap();
-        let mut sim = Simulator::new(cfg, prog).unwrap();
+        let mut sim = ck.simulator().unwrap();
         sim.set_input("a_in", &data).unwrap();
         let report = sim.run().unwrap();
         let out = sim.get_output("out").unwrap();

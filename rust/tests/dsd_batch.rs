@@ -1,0 +1,147 @@
+//! Batched-vs-interpreted DSD execution equivalence.
+//!
+//! The slice-kernel engine (see `machine/vecop.rs`) claims bit-identity
+//! with the per-element interpreter: same cycles, same metrics, same
+//! destination memory, same fabric word streams. This suite runs every
+//! library kernel twice over identical inputs — batched engine forced
+//! on, then forced off — and asserts the full `RunReport` and every
+//! output argument's raw words are equal. `SPADA_NO_VEC=1` is the
+//! environment-variable form of the same switch.
+
+use spada::kernels::{self, CompiledKernel};
+use spada::machine::{IoDir, MachineConfig, RunReport};
+use spada::passes::Options;
+use spada::util::SplitMix64;
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+/// Every test in this binary serializes on this lock: the env-var test
+/// calls `std::env::set_var`, and `Simulator` construction reads
+/// `SPADA_NO_VEC` via `std::env::var_os` — concurrent setenv/getenv is
+/// a data race on glibc, so nothing here may construct a simulator
+/// while another thread mutates the environment.
+fn env_lock() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(())).lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Compile one library kernel at a modest grid.
+fn compile(name: &str, binds: &[(&str, i64)], w: i64, h: i64) -> CompiledKernel {
+    let cfg = MachineConfig::with_grid(w, h);
+    kernels::compile(name, binds, &cfg, &Options::default())
+        .unwrap_or_else(|e| panic!("{name}: {e:#}"))
+}
+
+/// Run a fresh simulator over deterministic inputs with the batched
+/// engine toggled, returning the report, all raw output words, and the
+/// number of slice-kernel executions.
+fn run_mode(ck: &CompiledKernel, vectorize: bool) -> (RunReport, Vec<(String, Vec<u32>)>, u64) {
+    let mut sim = ck.simulator().unwrap();
+    sim.set_vectorize(vectorize);
+    // Fill every input binding with the same deterministic noise in
+    // both modes (binding order is deterministic).
+    let inputs: Vec<(String, usize)> = sim
+        .program()
+        .io
+        .iter()
+        .filter(|b| b.dir == IoDir::In)
+        .map(|b| (b.arg.clone(), (b.total_ports * b.elems_per_pe) as usize))
+        .collect();
+    let mut rng = SplitMix64::new(0xD5D);
+    for (arg, len) in inputs {
+        let data: Vec<f32> = (0..len).map(|_| rng.next_f32()).collect();
+        sim.set_input(&arg, &data).unwrap();
+    }
+    let report = sim.run().unwrap_or_else(|e| panic!("{}: {e}", ck.machine.name));
+    let mut outs: Vec<(String, Vec<u32>)> = vec![];
+    for b in sim.program().io.iter().filter(|b| b.dir == IoDir::Out) {
+        if outs.iter().any(|(a, _)| a == &b.arg) {
+            continue;
+        }
+        outs.push((b.arg.clone(), sim.get_output_words(&b.arg).unwrap()));
+    }
+    (report, outs, sim.vec_ops_executed())
+}
+
+fn assert_equivalent(name: &str, ck: &CompiledKernel) {
+    let _guard = env_lock();
+    let (vec_report, vec_outs, vec_ops) = run_mode(ck, true);
+    let (int_report, int_outs, int_ops) = run_mode(ck, false);
+    // The batched engine must actually engage (every library kernel
+    // issues at least one contiguous f32 op), and the interpreter run
+    // must not.
+    assert!(vec_ops > 0, "{name}: batched engine never engaged");
+    assert_eq!(int_ops, 0, "{name}: interpreter run used slice kernels");
+    // Cycles, every metric counter, and resource usage: identical.
+    assert_eq!(vec_report, int_report, "{name}: RunReport diverged between engines");
+    // Output memory: bit-identical words.
+    assert_eq!(
+        vec_outs.len(),
+        int_outs.len(),
+        "{name}: output binding count diverged"
+    );
+    for ((va, vw), (ia, iw)) in vec_outs.iter().zip(&int_outs) {
+        assert_eq!(va, ia, "{name}: output order diverged");
+        assert_eq!(vw, iw, "{name}: output {va} diverged between engines");
+    }
+}
+
+#[test]
+fn chain_reduce_batched_equivalent() {
+    assert_equivalent(
+        "chain_reduce",
+        &compile("chain_reduce", &[("K", 24), ("N", 7)], 7, 1),
+    );
+}
+
+#[test]
+fn broadcast_batched_equivalent() {
+    assert_equivalent("broadcast", &compile("broadcast", &[("K", 16), ("N", 6)], 6, 1));
+}
+
+#[test]
+fn tree_reduce_batched_equivalent() {
+    assert_equivalent(
+        "tree_reduce",
+        &compile("tree_reduce", &[("K", 8), ("NX", 4), ("NY", 4)], 4, 4),
+    );
+}
+
+#[test]
+fn two_phase_reduce_batched_equivalent() {
+    assert_equivalent(
+        "two_phase_reduce",
+        &compile("two_phase_reduce", &[("K", 8), ("NX", 3), ("NY", 3)], 3, 3),
+    );
+}
+
+#[test]
+fn gemv_batched_equivalent() {
+    assert_equivalent(
+        "gemv",
+        &compile("gemv", &[("M", 8), ("N", 8), ("NX", 4), ("NY", 4)], 4, 4),
+    );
+}
+
+#[test]
+fn gemv_tree_batched_equivalent() {
+    assert_equivalent(
+        "gemv_tree",
+        &compile("gemv_tree", &[("M", 8), ("N", 8), ("NX", 4), ("NY", 4)], 4, 4),
+    );
+}
+
+/// `SPADA_NO_VEC` in the environment disables the batched engine at
+/// construction time. Holds the binary-wide env lock so no other test
+/// constructs a simulator (reads the environment) while this one
+/// mutates it.
+#[test]
+fn env_var_disables_batched_engine() {
+    let ck = compile("broadcast", &[("K", 8), ("N", 4)], 4, 1);
+    let _guard = env_lock();
+    std::env::set_var("SPADA_NO_VEC", "1");
+    let sim = ck.simulator().unwrap();
+    std::env::remove_var("SPADA_NO_VEC");
+    assert!(!sim.vectorize_enabled(), "SPADA_NO_VEC must disable vectorization");
+    let sim2 = ck.simulator().unwrap();
+    assert!(sim2.vectorize_enabled(), "default must be enabled");
+}

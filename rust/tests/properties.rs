@@ -4,7 +4,7 @@
 
 use spada::csl;
 use spada::kernels;
-use spada::machine::{MachineConfig, Simulator};
+use spada::machine::MachineConfig;
 use spada::passes::{self, Options};
 use spada::ptest::run_prop;
 use spada::sem::{instantiate, Bindings};
@@ -120,8 +120,9 @@ fn prop_routes_conflict_free() {
         },
         |(name, binds, w, h)| {
             let cfg = MachineConfig::with_grid(*w, *h);
-            let (prog, _, _) = kernels::compile(name, binds, &cfg, &Options::default())
-                .map_err(|e| e.to_string())?;
+            let prog = kernels::compile(name, binds, &cfg, &Options::default())
+                .map_err(|e| e.to_string())?
+                .machine;
             for i in 0..prog.routes.len() {
                 for j in (i + 1)..prog.routes.len() {
                     let (a, b) = (&prog.routes[i], &prog.routes[j]);
@@ -235,7 +236,7 @@ fn prop_reduce_correct_all_option_sets() {
             let cfg = MachineConfig::with_grid(*nx, *ny);
             let compiled =
                 kernels::compile(kernel, &[("K", *k), ("NX", *nx), ("NY", *ny)], &cfg, opts);
-            let (prog, _, _) = match compiled {
+            let ck = match compiled {
                 Ok(p) => p,
                 // Resource exhaustion is a legitimate outcome for
                 // pessimized option sets (the paper's OOR results) —
@@ -245,7 +246,7 @@ fn prop_reduce_correct_all_option_sets() {
                 }
                 Err(e) => return Err(e.to_string()),
             };
-            let mut sim = Simulator::new(cfg, prog).map_err(|e| e.to_string())?;
+            let mut sim = ck.simulator().map_err(|e| e.to_string())?;
             let mut rng = SplitMix64::new(*seed);
             let data: Vec<f32> = (0..(k * nx * ny) as usize).map(|_| rng.next_f32()).collect();
             sim.set_input("a_in", &data).map_err(|e| e.to_string())?;
@@ -430,6 +431,187 @@ fn prop_routing_plan_matches_trace_route() {
                 }
             }
             Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// Batched-DSD eligibility vs aliasing
+// ---------------------------------------------------------------------
+
+/// Random `(base, offset, stride, n, dtype)` descriptor pairs: the
+/// batched-eligibility pipeline (static `classify_vec` + runtime
+/// `admit_map`/`admit_fold`) must never mark an aliased or overlapping
+/// (dst, src) pair as vectorizable, must only admit contiguous f32
+/// spans, and must keep every admitted span inside PE memory. The
+/// brute-force oracle enumerates the exact byte set each descriptor
+/// touches.
+#[test]
+fn prop_vec_classifier_never_admits_overlap() {
+    use spada::machine::program::{DsdRef, Dtype, SExpr};
+    use spada::machine::vecop::{admit_fold, admit_map, classify_vec, Span, VecOp};
+
+    const MEM_LEN: usize = 1024;
+
+    fn ty_of(code: u64) -> Dtype {
+        // Biased toward f32 so the Map/Fold arms are exercised often.
+        match code {
+            0..=5 => Dtype::F32,
+            6 => Dtype::F16,
+            7 => Dtype::I32,
+            _ => Dtype::U16,
+        }
+    }
+
+    /// (base bytes, offset elems, stride elems, dtype code)
+    type Desc = (u32, i64, i64, u64);
+
+    fn mk(d: &Desc, n: usize) -> DsdRef {
+        DsdRef::Mem {
+            base: d.0,
+            offset: SExpr::imm(d.1),
+            stride: d.2,
+            len: SExpr::imm(n as i64),
+            ty: ty_of(d.3),
+        }
+    }
+
+    /// Mirror of the simulator's descriptor resolution:
+    /// byte base = base + offset·size, byte stride = stride·size.
+    fn resolved(d: &Desc) -> (i64, i64, usize) {
+        let esz = ty_of(d.3).size() as i64;
+        (d.0 as i64 + d.1 * esz, d.2 * esz, esz as usize)
+    }
+
+    /// Exact byte intervals touched by n elements.
+    fn touched(base: i64, stride: i64, esz: usize, n: usize) -> Vec<(i64, i64)> {
+        (0..n)
+            .map(|i| {
+                let a = base + i as i64 * stride;
+                (a, a + esz as i64)
+            })
+            .collect()
+    }
+
+    fn intersects(a: &[(i64, i64)], b: &[(i64, i64)]) -> bool {
+        a.iter().any(|(al, ah)| b.iter().any(|(bl, bh)| al < *bh && *bl < ah))
+    }
+
+    fn desc(r: &mut SplitMix64) -> Desc {
+        (
+            (r.below(64) * 4) as u32,
+            r.below(12) as i64 - 4,
+            r.below(6) as i64 - 2,
+            r.below(9),
+        )
+    }
+
+    run_prop(
+        "vec-no-overlap",
+        0xD5D,
+        600,
+        |r| {
+            let dst = desc(r);
+            let src0 = if r.below(8) == 0 { None } else { Some(desc(r)) };
+            // Bias src0 toward exact dst aliases so the Fold arm and the
+            // aliased-Map rejection both fire regularly.
+            let src0 = if r.below(3) == 0 { Some(dst) } else { src0 };
+            let src1 = if r.below(4) == 0 { None } else { Some(desc(r)) };
+            let n = 1 + r.below(16) as usize;
+            (dst, src0, src1, n)
+        },
+        |(dst, src0, src1, n)| {
+            let n = *n;
+            let d_ref = mk(dst, n);
+            let s0_ref = src0.as_ref().map(|d| mk(d, n));
+            let s1_ref = src1.as_ref().map(|d| mk(d, n));
+            let verdict = classify_vec(&d_ref, &s0_ref, &s1_ref);
+            let (db, ds, desz) = resolved(dst);
+            match verdict {
+                VecOp::None => Ok(()), // interpreter path: always sound
+                VecOp::Map => {
+                    // Static stage must only pass contiguous f32 shapes.
+                    if dst.2 != 1 || ty_of(dst.3) != Dtype::F32 {
+                        return Err(format!("Map with dst stride {} ty {:?}", dst.2, ty_of(dst.3)));
+                    }
+                    if db < 0 {
+                        return Ok(()); // wrapped address: admission sees an OOB span
+                    }
+                    let d_span = Some(Span { base: db as usize, stride: ds as isize });
+                    let mut spans = vec![];
+                    for (s, sref) in [(src0, &s0_ref), (src1, &s1_ref)] {
+                        match sref {
+                            Some(DsdRef::Mem { .. }) => {
+                                let (sb, ss, _) = resolved(s.as_ref().unwrap());
+                                if sb < 0 {
+                                    return Ok(());
+                                }
+                                spans.push(Some(Span { base: sb as usize, stride: ss as isize }));
+                            }
+                            _ => spans.push(None),
+                        }
+                    }
+                    if !admit_map(MEM_LEN, d_span, &spans, n) {
+                        return Ok(()); // rejected: interpreter path
+                    }
+                    // Admitted: brute-force check bounds + disjointness.
+                    let d_bytes = touched(db, ds, desz, n);
+                    if d_bytes.iter().any(|(lo, hi)| *lo < 0 || *hi > MEM_LEN as i64) {
+                        return Err(format!("admitted dst leaves memory: {d_bytes:?}"));
+                    }
+                    for s in [src0.as_ref(), src1.as_ref()].into_iter().flatten() {
+                        let (sb, ss, sesz) = resolved(s);
+                        let s_bytes = touched(sb, ss, sesz, n);
+                        if intersects(&d_bytes, &s_bytes) {
+                            return Err(format!(
+                                "admitted overlapping pair: dst {dst:?} src {s:?} (n={n})"
+                            ));
+                        }
+                        if s_bytes.iter().any(|(lo, hi)| *lo < 0 || *hi > MEM_LEN as i64) {
+                            return Err(format!("admitted src leaves memory: {s:?}"));
+                        }
+                    }
+                    Ok(())
+                }
+                VecOp::Fold => {
+                    // src0 must be the destination cell, exactly.
+                    let s0 = src0.as_ref().ok_or("Fold without src0")?;
+                    let (s0b, s0s, _) = resolved(s0);
+                    if s0b != db || s0s != 0 || ds != 0 {
+                        return Err(format!("Fold acc is not the dst cell: {dst:?} vs {s0:?}"));
+                    }
+                    if db < 0 {
+                        return Ok(());
+                    }
+                    let acc = Span { base: db as usize, stride: 0 };
+                    let s1_span = match &s1_ref {
+                        Some(DsdRef::Mem { .. }) => {
+                            let (sb, ss, _) = resolved(src1.as_ref().unwrap());
+                            if sb < 0 {
+                                return Ok(());
+                            }
+                            Some(Span { base: sb as usize, stride: ss as isize })
+                        }
+                        _ => None,
+                    };
+                    if !admit_fold(MEM_LEN, acc, s1_span, n) {
+                        return Ok(());
+                    }
+                    // Admitted: the streamed source must not touch the
+                    // accumulator cell.
+                    if let Some(s) = src1 {
+                        let (sb, ss, sesz) = resolved(s);
+                        let s_bytes = touched(sb, ss, sesz, n);
+                        let acc_bytes = touched(db, 0, desz, 1);
+                        if intersects(&acc_bytes, &s_bytes) {
+                            return Err(format!(
+                                "admitted fold with stream over the accumulator: {s:?}"
+                            ));
+                        }
+                    }
+                    Ok(())
+                }
+            }
         },
     );
 }

@@ -1,0 +1,122 @@
+//! Offline stub of the `xla` crate's PJRT surface.
+//!
+//! This is **not** a PJRT implementation: it mirrors exactly the types
+//! and signatures `spada::runtime`'s `pjrt_impl` module uses, so that
+//! `cargo build --features pjrt` type-checks the oracle bridge in
+//! offline/CI builds instead of letting it bit-rot. Every entry point
+//! that would touch a real PJRT client fails at runtime with a clear
+//! message; swap this directory for the real vendored `xla` crate to
+//! run the numerical oracle.
+
+use std::path::Path;
+
+/// Stub error: formatted with `{:?}` at every call site.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "xla stub: {what} unavailable (vendor the real `xla` crate over vendor/xla to \
+         enable the PJRT oracle)"
+    )))
+}
+
+/// Stub PJRT client. [`PjRtClient::cpu`] always fails, so no other
+/// method is ever reached at runtime.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PJRT CPU client")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "xla-stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("compilation")
+    }
+}
+
+/// Stub HLO module proto.
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        unavailable("HLO text parsing")
+    }
+}
+
+/// Stub XLA computation.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Stub loaded executable.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("execution")
+    }
+}
+
+/// Stub device buffer.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("buffer readback")
+    }
+}
+
+/// Stub literal.
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn vec1(_data: &[f32]) -> Literal {
+        Literal { _private: () }
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unavailable("reshape")
+    }
+
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        unavailable("tuple decomposition")
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable("literal readback")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_client_reports_unavailable() {
+        let err = PjRtClient::cpu().err().expect("stub must fail");
+        assert!(format!("{err:?}").contains("xla stub"));
+    }
+}
