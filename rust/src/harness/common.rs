@@ -4,7 +4,7 @@
 use crate::csl;
 use crate::frontend::{lower_stencil, parse_stencil, stencil_source, StencilKernel};
 use crate::kernels;
-use crate::machine::{MachineConfig, RunReport, Simulator};
+use crate::machine::{IoDir, MachineConfig, RunReport, Simulator};
 use crate::passes::{Options, PassStats};
 use crate::sem::{instantiate, Bindings};
 use crate::util::SplitMix64;
@@ -25,6 +25,66 @@ pub struct SimRun {
 pub fn rand_vec(seed: u64, n: usize) -> Vec<f32> {
     let mut rng = SplitMix64::new(seed);
     (0..n).map(|_| rng.next_f32()).collect()
+}
+
+/// Bind list and grid geometry for one library kernel at scale factor
+/// `g` with K-length per-PE vectors: returns `(binds, width, height)`.
+/// The single encoding of every kernel's meta-parameters, shared by
+/// the `sim_scaling` bench and the cross-thread determinism suites so
+/// a renamed bind or reshaped grid is edited in exactly one place.
+/// GEMV variants use `n = 2g` (2×2 blocks per PE).
+pub fn scaled_binds(
+    kernel: &str,
+    g: i64,
+    k: i64,
+) -> Result<(Vec<(&'static str, i64)>, i64, i64)> {
+    Ok(match kernel {
+        "chain_reduce" => (vec![("K", k), ("N", g)], g.max(2), 1),
+        "broadcast" => (vec![("K", k), ("N", g)], g, 1),
+        "tree_reduce" | "two_phase_reduce" => {
+            (vec![("K", k), ("NX", g), ("NY", g)], g, g)
+        }
+        "gemv" | "gemv_tree" => {
+            let n = 2 * g;
+            (vec![("M", n), ("N", n), ("NX", g), ("NY", g)], g, g)
+        }
+        other => return Err(anyhow!("not a scalable library kernel: {other}")),
+    })
+}
+
+/// Stage deterministic noise into every input binding of `sim` — one
+/// `SplitMix64` stream consumed in binding order, so two simulators
+/// staged with the same seed see byte-identical inputs. Shared by the
+/// equivalence/determinism suites (`dsd_batch`, `parallel_equiv`, the
+/// cross-thread property) so the workload definition cannot drift
+/// between them.
+pub fn stage_random_inputs(sim: &mut Simulator, seed: u64) {
+    let inputs: Vec<(String, usize)> = sim
+        .program()
+        .io
+        .iter()
+        .filter(|b| b.dir == IoDir::In)
+        .map(|b| (b.arg.clone(), (b.total_ports * b.elems_per_pe) as usize))
+        .collect();
+    let mut rng = SplitMix64::new(seed);
+    for (arg, len) in inputs {
+        let data: Vec<f32> = (0..len).map(|_| rng.next_f32()).collect();
+        sim.set_input(&arg, &data).expect("staging a declared input binding");
+    }
+}
+
+/// Read back every output argument's raw words (first binding per
+/// argument, in binding order) — the bit-exact observable the
+/// equivalence suites compare.
+pub fn output_words(sim: &Simulator) -> Vec<(String, Vec<u32>)> {
+    let mut outs: Vec<(String, Vec<u32>)> = vec![];
+    for b in sim.program().io.iter().filter(|b| b.dir == IoDir::Out) {
+        if outs.iter().any(|(a, _)| a == &b.arg) {
+            continue;
+        }
+        outs.push((b.arg.clone(), sim.get_output_words(&b.arg).expect("declared output reads")));
+    }
+    outs
 }
 
 /// Compile + run a reduction collective over a `px × py` grid with
@@ -119,23 +179,15 @@ pub fn run_gemv(n: i64, g: i64, opts: &Options) -> Result<(SimRun, Vec<f32>, Vec
     run_gemv_variant("gemv", n, g, opts)
 }
 
-/// GEMV with a selectable reduction scheme ("gemv" = pipelined chain,
-/// "gemv_tree" = binary tree — the paper's two Fig. 7 variants).
-pub fn run_gemv_variant(
-    kernel: &str,
-    n: i64,
-    g: i64,
-    opts: &Options,
-) -> Result<(SimRun, Vec<f32>, Vec<f32>)> {
-    let cfg = MachineConfig::with_grid(g, g);
-    let ck = kernels::compile(kernel, &[("M", n), ("N", n), ("NX", g), ("NY", g)], &cfg, opts)?;
-    let spada_loc = kernels::spada_loc(kernel)?;
+/// The GEMV harness inputs: dense matrix, column-major PE blocks
+/// (ports i·NY + j), input/initial vectors. Shared by the Fig. 7
+/// runners and the `sim_scaling` bench so every consumer stages the
+/// same deterministic workload.
+pub fn gemv_inputs(n: i64, g: i64) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
     let (bm, bn) = ((n / g) as usize, (n / g) as usize);
-    let mut sim = ck.simulator()?;
     let a_dense = rand_vec(21, (n * n) as usize);
     let x = rand_vec(22, n as usize);
     let y0 = rand_vec(23, n as usize);
-    // Column-major blocks, ports i·NY + j.
     let mut a_blocks = vec![0f32; (n * n) as usize];
     let mut off = 0usize;
     for i in 0..g {
@@ -150,6 +202,22 @@ pub fn run_gemv_variant(
             off += bm * bn;
         }
     }
+    (a_dense, a_blocks, x, y0)
+}
+
+/// GEMV with a selectable reduction scheme ("gemv" = pipelined chain,
+/// "gemv_tree" = binary tree — the paper's two Fig. 7 variants).
+pub fn run_gemv_variant(
+    kernel: &str,
+    n: i64,
+    g: i64,
+    opts: &Options,
+) -> Result<(SimRun, Vec<f32>, Vec<f32>)> {
+    let cfg = MachineConfig::with_grid(g, g);
+    let ck = kernels::compile(kernel, &[("M", n), ("N", n), ("NX", g), ("NY", g)], &cfg, opts)?;
+    let spada_loc = kernels::spada_loc(kernel)?;
+    let mut sim = ck.simulator()?;
+    let (a_dense, a_blocks, x, y0) = gemv_inputs(n, g);
     sim.set_input("a_blk", &a_blocks)?;
     sim.set_input("x_in", &x)?;
     sim.set_input("y_in", &y0)?;

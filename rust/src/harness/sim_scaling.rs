@@ -1,22 +1,28 @@
 //! `spada bench --exp sim` — reproducible simulator scaling sweep.
 //!
 //! Runs the six paper kernels across growing fabric sizes (4×4 up to
-//! 128×128 in the full sweep; `--quick` stops at 16) and records, per
-//! run, the simulated cycle count, host wall time, event count and
-//! event-loop throughput. Results are printed as a table and written to
+//! 128×128 in the full sweep; `--quick` stops at 16) at every worker
+//! thread count in [`THREAD_COUNTS`], and records, per run, the
+//! simulated cycle count, host wall time, event count and event-loop
+//! throughput. Results are printed as a table and written to
 //! `BENCH_sim.json` in the working directory so CI can archive the perf
 //! trajectory PR over PR — this is the baseline artifact every future
 //! simulator-performance change is measured against.
 //!
-//! `wall_ms` is **end-to-end** (parse + compile + plan build + I/O
-//! staging + simulate), matching what a user of `spada run` pays. At
-//! the small grids compile time dominates; the large-grid rows are the
-//! ones to read for event-loop throughput, and compiler-side changes
-//! will move the small-grid rows — compare like with like.
+//! Each (kernel, grid) point compiles **once** and reuses one
+//! `Simulator` allocation across the thread sweep via
+//! [`spada::machine::Simulator::reset`], so `wall_ms` is the
+//! simulate-only time (inputs are staged once; reset restores pristine
+//! PE images instead of re-cloning the program per run). The 1-thread
+//! rows are the classic event loop; higher counts run the
+//! epoch-parallel engine — cycles/events/wavelets are bit-identical
+//! across rows of one point by construction, only `wall_ms` /
+//! `events_per_sec` move.
 
-use super::common::{run_broadcast, run_gemv_variant, run_reduce};
+use super::common::{gemv_inputs, rand_vec, scaled_binds};
 use crate::bench::{eng, Table};
-use crate::machine::RunReport;
+use crate::kernels;
+use crate::machine::{MachineConfig, Simulator};
 use crate::passes::Options;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::BTreeMap;
@@ -25,11 +31,19 @@ use std::time::Instant;
 /// Output file, relative to the working directory.
 pub const OUT_FILE: &str = "BENCH_sim.json";
 
-/// One measured (kernel, grid) point.
+/// Worker-thread counts every sweep point is measured at. Fixed (not
+/// host-derived) so `BENCH_sim.json` files from different machines
+/// have comparable row sets and the `--compare` gate always finds
+/// matching thread counts.
+pub const THREAD_COUNTS: &[usize] = &[1, 4];
+
+/// One measured (kernel, grid, threads) point.
 pub struct ScalePoint {
     pub kernel: &'static str,
     pub grid: String,
     pub pes: i64,
+    /// Simulator worker threads for this run.
+    pub threads: usize,
     pub cycles: u64,
     pub events: u64,
     pub wavelets: u64,
@@ -37,18 +51,37 @@ pub struct ScalePoint {
     pub events_per_sec: f64,
 }
 
-impl ScalePoint {
-    fn of(kernel: &'static str, grid: String, pes: i64, report: &RunReport, wall_s: f64) -> Self {
-        ScalePoint {
-            kernel,
-            grid,
-            pes,
-            cycles: report.cycles,
-            events: report.metrics.events,
-            wavelets: report.metrics.wavelets,
-            wall_ms: wall_s * 1e3,
-            events_per_sec: report.events_per_sec(wall_s),
+/// Compile one sweep kernel and stage its deterministic inputs,
+/// returning a ready-to-run simulator plus the (grid label, PE count)
+/// of the point. Binds and geometry come from the shared
+/// [`scaled_binds`] encoding; input staging preserves the historical
+/// per-argument seeds of the figure runners. The caller reruns the
+/// same allocation per thread count via `reset()`.
+fn stage(kernel: &'static str, g: i64, k: i64, opts: &Options) -> Result<(Simulator, String, i64)> {
+    let (binds, w, h) = scaled_binds(kernel, g, k)?;
+    let cfg = MachineConfig::with_grid(w, h);
+    let ck = kernels::compile(kernel, &binds, &cfg, opts)?;
+    let mut sim = ck.simulator()?;
+    match kernel {
+        "chain_reduce" => sim.set_input("a_in", &rand_vec(0xF16, (k * g) as usize))?,
+        "broadcast" => sim.set_input("a_in", &rand_vec(7, k as usize))?,
+        "tree_reduce" | "two_phase_reduce" => {
+            sim.set_input("a_in", &rand_vec(0xF16, (k * g * g) as usize))?
         }
+        _ => {
+            let n = 2 * g; // 2×2 blocks per PE keeps the sweep tractable
+            let (_, a_blocks, x, y0) = gemv_inputs(n, g);
+            sim.set_input("a_blk", &a_blocks)?;
+            sim.set_input("x_in", &x)?;
+            sim.set_input("y_in", &y0)?;
+            sim.set_input("alpha", &[1.0])?;
+            sim.set_input("beta", &[0.0])?;
+        }
+    }
+    if h == 1 {
+        Ok((sim, format!("{g}x1"), g))
+    } else {
+        Ok((sim, format!("{g}x{g}"), g * g))
     }
 }
 
@@ -58,61 +91,41 @@ pub fn sweep(quick: bool) -> Result<Vec<ScalePoint>> {
     let opts = Options::default();
     let grids: &[i64] = if quick { &[4, 8, 16] } else { &[4, 8, 16, 32, 64, 128] };
     let k = 64i64;
+    let kernels: [&'static str; 6] =
+        ["chain_reduce", "broadcast", "tree_reduce", "two_phase_reduce", "gemv", "gemv_tree"];
     let mut points = vec![];
     for &g in grids {
-        {
-            let t0 = Instant::now();
-            let (run, _) = run_reduce("chain_reduce", g, 1, k, &opts)
-                .with_context(|| format!("chain_reduce {g}x1"))?;
-            points.push(ScalePoint::of(
-                "chain_reduce",
-                format!("{g}x1"),
-                g,
-                &run.report,
-                t0.elapsed().as_secs_f64(),
-            ));
-        }
-        {
-            let t0 = Instant::now();
-            let run = run_broadcast(g, k, &opts).with_context(|| format!("broadcast {g}x1"))?;
-            points.push(ScalePoint::of(
-                "broadcast",
-                format!("{g}x1"),
-                g,
-                &run.report,
-                t0.elapsed().as_secs_f64(),
-            ));
-        }
-        for kernel in ["tree_reduce", "two_phase_reduce"] {
-            let t0 = Instant::now();
-            let (run, _) =
-                run_reduce(kernel, g, g, k, &opts).with_context(|| format!("{kernel} {g}x{g}"))?;
-            points.push(ScalePoint::of(
-                kernel,
-                format!("{g}x{g}"),
-                g * g,
-                &run.report,
-                t0.elapsed().as_secs_f64(),
-            ));
-        }
-        for kernel in ["gemv", "gemv_tree"] {
-            let t0 = Instant::now();
-            let n = 2 * g; // 2×2 blocks per PE keeps the sweep tractable
-            let (run, _, _) = run_gemv_variant(kernel, n, g, &opts)
-                .with_context(|| format!("{kernel} {g}x{g}"))?;
-            points.push(ScalePoint::of(
-                kernel,
-                format!("{g}x{g}"),
-                g * g,
-                &run.report,
-                t0.elapsed().as_secs_f64(),
-            ));
+        for kernel in kernels {
+            let (mut sim, grid, pes) =
+                stage(kernel, g, k, &opts).with_context(|| format!("{kernel} grid {g}"))?;
+            for &threads in THREAD_COUNTS {
+                sim.reset();
+                sim.set_threads(threads);
+                let t0 = Instant::now();
+                let report = sim
+                    .run()
+                    .map_err(anyhow::Error::from)
+                    .with_context(|| format!("{kernel} {grid} threads={threads}"))?;
+                let wall_s = t0.elapsed().as_secs_f64();
+                points.push(ScalePoint {
+                    kernel,
+                    grid: grid.clone(),
+                    pes,
+                    threads,
+                    cycles: report.cycles,
+                    events: report.metrics.events,
+                    wavelets: report.metrics.wavelets,
+                    wall_ms: wall_s * 1e3,
+                    events_per_sec: report.events_per_sec(wall_s),
+                });
+            }
         }
     }
     Ok(points)
 }
 
 fn json_of(points: &[ScalePoint], quick: bool) -> String {
+    let host = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let mut s = String::new();
     s.push_str("{\n");
     s.push_str("  \"bench\": \"sim_scaling\",\n");
@@ -120,11 +133,14 @@ fn json_of(points: &[ScalePoint], quick: bool) -> String {
     s.push_str("  \"runs\": [\n");
     for (i, p) in points.iter().enumerate() {
         s.push_str(&format!(
-            "    {{\"kernel\": \"{}\", \"grid\": \"{}\", \"pes\": {}, \"cycles\": {}, \
-             \"events\": {}, \"wavelets\": {}, \"wall_ms\": {:.3}, \"events_per_sec\": {:.1}}}{}\n",
+            "    {{\"kernel\": \"{}\", \"grid\": \"{}\", \"pes\": {}, \"threads\": {}, \
+             \"host_parallelism\": {}, \"cycles\": {}, \"events\": {}, \"wavelets\": {}, \
+             \"wall_ms\": {:.3}, \"events_per_sec\": {:.1}}}{}\n",
             p.kernel,
             p.grid,
             p.pes,
+            p.threads,
+            host,
             p.cycles,
             p.events,
             p.wavelets,
@@ -139,12 +155,15 @@ fn json_of(points: &[ScalePoint], quick: bool) -> String {
 
 pub fn run(quick: bool) -> Result<()> {
     let points = sweep(quick)?;
-    let mut table = Table::new(&["kernel", "grid", "PEs", "cycles", "events", "wall ms", "events/s"]);
+    let mut table = Table::new(&[
+        "kernel", "grid", "PEs", "thr", "cycles", "events", "wall ms", "events/s",
+    ]);
     for p in &points {
         table.row(&[
             p.kernel.to_string(),
             p.grid.clone(),
             p.pes.to_string(),
+            p.threads.to_string(),
             p.cycles.to_string(),
             p.events.to_string(),
             format!("{:.1}", p.wall_ms),
@@ -166,6 +185,9 @@ pub fn run(quick: bool) -> Result<()> {
 pub struct BenchRun {
     pub kernel: String,
     pub grid: String,
+    /// Worker threads the row was measured at (1 when the file predates
+    /// the threads field, so old baselines keep comparing 1-vs-1).
+    pub threads: usize,
     pub events_per_sec: f64,
 }
 
@@ -210,9 +232,10 @@ pub fn parse_bench_json(text: &str) -> Result<BenchFile> {
             .ok_or_else(|| anyhow!("bad run row (no kernel): {line}"))?;
         let grid =
             extract_str(line, "grid").ok_or_else(|| anyhow!("bad run row (no grid): {line}"))?;
+        let threads = extract_num(line, "threads").map(|t| t as usize).unwrap_or(1);
         let events_per_sec = extract_num(line, "events_per_sec")
             .ok_or_else(|| anyhow!("bad run row (no events_per_sec): {line}"))?;
-        runs.push(BenchRun { kernel, grid, events_per_sec });
+        runs.push(BenchRun { kernel, grid, threads, events_per_sec });
     }
     if runs.is_empty() {
         bail!("no bench runs found (not a BENCH_sim.json-format file?)");
@@ -221,7 +244,9 @@ pub fn parse_bench_json(text: &str) -> Result<BenchFile> {
 }
 
 /// Per-kernel comparison outcome (geometric-mean events/s over the
-/// grids present in both files).
+/// (grid, threads) rows present in both files — rows only ever compare
+/// against the same thread count, so a 1-thread baseline is never
+/// diffed against a parallel run).
 #[derive(Clone, Debug)]
 pub struct KernelDelta {
     pub kernel: String,
@@ -239,29 +264,31 @@ fn geomean(v: &[f64]) -> f64 {
     (v.iter().map(|x| x.max(1e-12).ln()).sum::<f64>() / v.len() as f64).exp()
 }
 
-/// Baseline (kernel, grid) rows with no counterpart in the current
-/// file. A non-empty result fails the gate: a kernel silently dropped
-/// from the sweep must not read as "no regression".
+/// Baseline (kernel, grid, threads) rows with no counterpart in the
+/// current file. A non-empty result fails the gate: a kernel (or a
+/// thread count) silently dropped from the sweep must not read as "no
+/// regression".
 pub fn missing_rows(base: &BenchFile, cur: &BenchFile) -> Vec<String> {
-    let have: std::collections::BTreeSet<(&str, &str)> =
-        cur.runs.iter().map(|r| (r.kernel.as_str(), r.grid.as_str())).collect();
+    let have: std::collections::BTreeSet<(&str, &str, usize)> =
+        cur.runs.iter().map(|r| (r.kernel.as_str(), r.grid.as_str(), r.threads)).collect();
     base.runs
         .iter()
-        .filter(|r| !have.contains(&(r.kernel.as_str(), r.grid.as_str())))
-        .map(|r| format!("{} {}", r.kernel, r.grid))
+        .filter(|r| !have.contains(&(r.kernel.as_str(), r.grid.as_str(), r.threads)))
+        .map(|r| format!("{} {} threads={}", r.kernel, r.grid, r.threads))
         .collect()
 }
 
 /// Compare two bench files per kernel. Pure (no I/O, no printing) so
-/// the gate logic is unit-testable.
+/// the gate logic is unit-testable. Only rows matching on (kernel,
+/// grid, threads) are compared.
 pub fn compare_runs(base: &BenchFile, cur: &BenchFile) -> Vec<KernelDelta> {
-    let mut base_by: BTreeMap<(&str, &str), f64> = BTreeMap::new();
+    let mut base_by: BTreeMap<(&str, &str, usize), f64> = BTreeMap::new();
     for r in &base.runs {
-        base_by.insert((r.kernel.as_str(), r.grid.as_str()), r.events_per_sec);
+        base_by.insert((r.kernel.as_str(), r.grid.as_str(), r.threads), r.events_per_sec);
     }
     let mut per_kernel: BTreeMap<&str, (Vec<f64>, Vec<f64>)> = BTreeMap::new();
     for r in &cur.runs {
-        if let Some(&b) = base_by.get(&(r.kernel.as_str(), r.grid.as_str())) {
+        if let Some(&b) = base_by.get(&(r.kernel.as_str(), r.grid.as_str(), r.threads)) {
             let e = per_kernel.entry(r.kernel.as_str()).or_default();
             e.0.push(b);
             e.1.push(r.events_per_sec);
@@ -301,7 +328,9 @@ pub fn compare_files(baseline_path: &str, current_path: &str, threshold: f64) ->
     }
     let deltas = compare_runs(&base, &cur);
     if deltas.is_empty() {
-        bail!("bench gate: no (kernel, grid) rows in common between baseline and current");
+        bail!(
+            "bench gate: no (kernel, grid, threads) rows in common between baseline and current"
+        );
     }
     let missing = missing_rows(&base, &cur);
     if !missing.is_empty() {
@@ -350,17 +379,36 @@ mod tests {
     use super::*;
 
     #[test]
-    fn quick_sweep_covers_all_kernels() {
+    fn quick_sweep_covers_all_kernels_and_thread_counts() {
         let points = sweep(true).unwrap();
-        // 3 grids × 6 kernels.
-        assert_eq!(points.len(), 18);
+        // 3 grids × 6 kernels × |THREAD_COUNTS|.
+        assert_eq!(points.len(), 18 * THREAD_COUNTS.len());
         for p in &points {
             assert!(p.cycles > 0, "{} {} ran zero cycles", p.kernel, p.grid);
             assert!(p.events > 0, "{} {} processed zero events", p.kernel, p.grid);
         }
+        // Simulated behaviour is thread-count-invariant: rows of one
+        // (kernel, grid) point differ only in wall-clock fields.
+        let mut by_point: BTreeMap<(&str, &str), Vec<(u64, u64, u64)>> = BTreeMap::new();
+        for p in &points {
+            by_point
+                .entry((p.kernel, p.grid.as_str()))
+                .or_default()
+                .push((p.cycles, p.events, p.wavelets));
+        }
+        for ((kernel, grid), rows) in &by_point {
+            assert_eq!(rows.len(), THREAD_COUNTS.len());
+            assert!(
+                rows.windows(2).all(|w| w[0] == w[1]),
+                "{kernel} {grid}: cycles/events/wavelets diverged across thread counts: {rows:?}"
+            );
+        }
         let json = json_of(&points, true);
         assert!(json.contains("\"bench\": \"sim_scaling\""));
         assert!(json.contains("\"kernel\": \"gemv_tree\""));
+        assert!(json.contains("\"threads\": 1"));
+        assert!(json.contains("\"threads\": 4"));
+        assert!(json.contains("\"host_parallelism\""));
 
         // The gate's parser must round-trip the writer's format.
         let parsed = parse_bench_json(&json).unwrap();
@@ -369,18 +417,20 @@ mod tests {
         for (r, p) in parsed.runs.iter().zip(&points) {
             assert_eq!(r.kernel, p.kernel);
             assert_eq!(r.grid, p.grid);
+            assert_eq!(r.threads, p.threads);
             assert!((r.events_per_sec - p.events_per_sec).abs() <= 0.06 * (1.0 + p.events_per_sec));
         }
     }
 
-    fn file(rows: &[(&str, &str, f64)], placeholder: bool) -> BenchFile {
+    fn file(rows: &[(&str, &str, usize, f64)], placeholder: bool) -> BenchFile {
         BenchFile {
             placeholder,
             runs: rows
                 .iter()
-                .map(|(k, g, e)| BenchRun {
+                .map(|(k, g, t, e)| BenchRun {
                     kernel: k.to_string(),
                     grid: g.to_string(),
+                    threads: *t,
                     events_per_sec: *e,
                 })
                 .collect(),
@@ -390,12 +440,20 @@ mod tests {
     #[test]
     fn compare_flags_only_kernels_beyond_threshold() {
         let base = file(
-            &[("gemv", "8x8", 1000.0), ("gemv", "16x16", 2000.0), ("broadcast", "8x1", 500.0)],
+            &[
+                ("gemv", "8x8", 1, 1000.0),
+                ("gemv", "16x16", 1, 2000.0),
+                ("broadcast", "8x1", 1, 500.0),
+            ],
             false,
         );
         // gemv halves (≈ −50%), broadcast improves.
         let cur = file(
-            &[("gemv", "8x8", 500.0), ("gemv", "16x16", 1000.0), ("broadcast", "8x1", 900.0)],
+            &[
+                ("gemv", "8x8", 1, 500.0),
+                ("gemv", "16x16", 1, 1000.0),
+                ("broadcast", "8x1", 1, 900.0),
+            ],
             false,
         );
         let deltas = compare_runs(&base, &cur);
@@ -408,12 +466,33 @@ mod tests {
         assert!(bc.delta > 0.0);
         // Unmatched rows are never compared against garbage, and rows
         // that vanish from the current sweep are reported as missing.
-        let sparse = file(&[("gemv", "64x64", 1.0)], false);
+        let sparse = file(&[("gemv", "64x64", 1, 1.0)], false);
         assert!(compare_runs(&base, &sparse).is_empty());
         let missing = missing_rows(&base, &sparse);
         assert_eq!(missing.len(), 3, "{missing:?}");
-        assert!(missing.contains(&"broadcast 8x1".to_string()));
+        assert!(missing.contains(&"broadcast 8x1 threads=1".to_string()));
         assert!(missing_rows(&base, &base).is_empty());
+    }
+
+    #[test]
+    fn compare_only_matches_rows_with_equal_thread_counts() {
+        // Same kernel/grid measured at different thread counts must
+        // never be compared against each other: a 1-thread baseline
+        // row only matches a 1-thread current row.
+        let base = file(&[("gemv", "8x8", 1, 1000.0), ("gemv", "8x8", 4, 3000.0)], false);
+        let cur = file(&[("gemv", "8x8", 1, 990.0), ("gemv", "8x8", 4, 2900.0)], false);
+        let deltas = compare_runs(&base, &cur);
+        assert_eq!(deltas.len(), 1);
+        assert_eq!(deltas[0].matched_runs, 2);
+        assert!(deltas[0].delta.abs() < 0.05, "{:?}", deltas[0]);
+        // A current file missing the 4-thread rows fails row coverage
+        // (and its 1-thread rows never pair with 4-thread baselines).
+        let cur_1t = file(&[("gemv", "8x8", 1, 990.0)], false);
+        let deltas = compare_runs(&base, &cur_1t);
+        assert_eq!(deltas.len(), 1);
+        assert_eq!(deltas[0].matched_runs, 1);
+        let missing = missing_rows(&base, &cur_1t);
+        assert_eq!(missing, vec!["gemv 8x8 threads=4".to_string()]);
     }
 
     #[test]
@@ -424,6 +503,9 @@ mod tests {
         assert!(f.placeholder);
         assert_eq!(f.runs.len(), 1);
         assert!((f.runs[0].events_per_sec - 123.4).abs() < 1e-9);
+        // Rows without a threads field (pre-parallel baselines) parse
+        // as 1-thread rows.
+        assert_eq!(f.runs[0].threads, 1);
         assert!(parse_bench_json("{}").is_err());
     }
 }

@@ -31,6 +31,31 @@ pub struct Metrics {
     pub dispatches: u64,
 }
 
+impl Metrics {
+    /// Fold another counter set into this one. Every field is a sum of
+    /// per-event increments, so accumulating thread-locally per shard
+    /// and merging at the epoch barrier yields exactly the totals a
+    /// single-threaded run would have counted (addition commutes; the
+    /// event multiset is identical) — the invariant the epoch-parallel
+    /// simulator's bit-identical `RunReport` guarantee rests on.
+    /// (`active_pes` and `busy_cycles` are additionally recomputed from
+    /// per-PE state in the run epilogue, after reassembly.)
+    pub fn merge(&mut self, other: &Metrics) {
+        self.events += other.events;
+        self.flows += other.flows;
+        self.wavelets += other.wavelets;
+        self.wavelet_hops += other.wavelet_hops;
+        self.flops += other.flops;
+        self.mem_bytes += other.mem_bytes;
+        self.ramp_bytes += other.ramp_bytes;
+        self.task_runs += other.task_runs;
+        self.dsd_ops += other.dsd_ops;
+        self.busy_cycles += other.busy_cycles;
+        self.active_pes += other.active_pes;
+        self.dispatches += other.dispatches;
+    }
+}
+
 /// The result of one kernel simulation.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct RunReport {
@@ -98,6 +123,18 @@ impl RunReport {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn metrics_merge_sums_fields() {
+        let mut a = Metrics { events: 1, flows: 2, wavelets: 3, ..Default::default() };
+        let b = Metrics { events: 10, flops: 5, dispatches: 7, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.events, 11);
+        assert_eq!(a.flows, 2);
+        assert_eq!(a.wavelets, 3);
+        assert_eq!(a.flops, 5);
+        assert_eq!(a.dispatches, 7);
+    }
 
     #[test]
     fn report_math() {

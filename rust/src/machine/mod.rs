@@ -19,6 +19,12 @@
 //! cycle (4-way SIMD for 16-bit), links forward one wavelet per cycle per
 //! hop, and tasks are non-preemptive. Cycle counts convert to wall time at
 //! 0.85 GHz, matching the paper's `runtime[µs] = cycles/0.85 · 10⁻³`.
+//!
+//! The event loop is epoch-parallel (`SPADA_THREADS` /
+//! [`sim::Simulator::set_threads`]): PEs interact only through routed
+//! flows, so link-sharing islands simulate concurrently with
+//! conservative lookahead, bit-identically to the single-threaded loop
+//! — see [`sim`] module docs.
 
 pub mod config;
 pub mod plan;

@@ -161,6 +161,8 @@ pub enum FlowError {
 #[derive(Clone, Debug)]
 pub struct PlannedFlow {
     pub src: (i64, i64),
+    /// Dense index of the source PE (the flow's injection point).
+    pub src_pe: u32,
     pub color: u8,
     /// Raw trace result — shared verbatim with the static checker.
     pub trace: Result<FlowPath, RouteError>,
@@ -200,9 +202,45 @@ pub struct RoutingPlan {
     /// Count of distinct colors referenced (the run-report metric,
     /// precomputed instead of clone+sort+dedup per run).
     pub colors_used: usize,
+    /// PE → link-sharing island (see [`RoutingPlan::build`]): two
+    /// source PEs whose planned flows can occupy the same physical
+    /// link must arbitrate it in event order, so the epoch-parallel
+    /// simulator keeps every such group of PEs inside one shard.
+    /// Island ids are compact (`0..n_islands`) and assigned in dense
+    /// PE order, so the partition is deterministic.
+    pub island_of: Vec<u32>,
+    /// Number of link-sharing islands (1 = no parallelism available).
+    pub n_islands: usize,
+    /// Conservative cross-island lookahead in cycles: every flow
+    /// arrival whose destination lies in a different island lands at
+    /// least this many cycles after the event that sent it (arrival =
+    /// send time + hop depth + `hop_cycles`, and `send_flow` never
+    /// starts a flow before the current event time). `u64::MAX` when
+    /// no flow ever crosses islands — each island then runs to
+    /// completion in a single epoch.
+    pub lookahead: u64,
     /// Defects that make the program unrunnable (the simulator rejects
     /// them at construction; the static checker reports its own).
     pub build_errors: Vec<String>,
+}
+
+/// Union-find `find` with path halving (roots are self-parents).
+fn uf_find(parent: &mut [u32], mut a: u32) -> u32 {
+    while parent[a as usize] != a {
+        let grand = parent[parent[a as usize] as usize];
+        parent[a as usize] = grand;
+        a = grand;
+    }
+    a
+}
+
+/// Union two sets; the smaller root index wins, so the partition is
+/// independent of union order.
+fn uf_union(parent: &mut [u32], a: u32, b: u32) {
+    let (ra, rb) = (uf_find(parent, a), uf_find(parent, b));
+    if ra != rb {
+        parent[ra.max(rb) as usize] = ra.min(rb);
+    }
 }
 
 /// Per-class color usage discovered by scanning task bodies.
@@ -386,6 +424,7 @@ impl RoutingPlan {
                 let trace = trace_route(prog, cfg, color, pe.x, pe.y);
                 let mut flow = PlannedFlow {
                     src: (pe.x, pe.y),
+                    src_pe: pi as u32,
                     color,
                     trace,
                     error: None,
@@ -542,6 +581,57 @@ impl RoutingPlan {
             }
         }
 
+        // --- link-sharing islands + cross-island lookahead ---
+        // Union-find over flow sources: any two PEs whose planned flows
+        // occupy a common link contend for it (wormhole arbitration is
+        // event-order-dependent), so the parallel simulator must step
+        // them in one shard. Destinations do not union — arrivals cross
+        // shard boundaries through the epoch barrier. Erroneous flows
+        // never touch a link (send_flow fails before arbitration).
+        let mut parent: Vec<u32> = (0..pes.len() as u32).collect();
+        let mut link_src: Vec<u32> = vec![NONE_U32; cfg.link_slots()];
+        for flow in &flows {
+            if flow.error.is_some() {
+                continue;
+            }
+            for &(li, _) in &flow.links {
+                let owner = link_src[li as usize];
+                if owner == NONE_U32 {
+                    link_src[li as usize] = flow.src_pe;
+                } else {
+                    uf_union(&mut parent, owner, flow.src_pe);
+                }
+            }
+        }
+        let mut island_of = vec![0u32; pes.len()];
+        let mut island_id = vec![NONE_U32; pes.len()];
+        let mut n_islands = 0usize;
+        for p in 0..pes.len() {
+            let root = uf_find(&mut parent, p as u32) as usize;
+            if island_id[root] == NONE_U32 {
+                island_id[root] = n_islands as u32;
+                n_islands += 1;
+            }
+            island_of[p] = island_id[root];
+        }
+        // Minimum hop depth over deliveries that leave their island.
+        // Arrival events fire at send_start + depth + hop_cycles with
+        // send_start >= the sending event's time, so depth + hop_cycles
+        // lower-bounds every cross-island latency.
+        let mut min_cross = u64::MAX;
+        for flow in &flows {
+            if flow.error.is_some() {
+                continue;
+            }
+            for &(dst, _, depth) in &flow.dests {
+                if island_of[dst as usize] != island_of[flow.src_pe as usize] {
+                    min_cross = min_cross.min(depth);
+                }
+            }
+        }
+        let lookahead =
+            if min_cross == u64::MAX { u64::MAX } else { min_cross + cfg.hop_cycles };
+
         RoutingPlan {
             width,
             height,
@@ -553,6 +643,9 @@ impl RoutingPlan {
             classes,
             actions,
             colors_used: prog.distinct_colors().len(),
+            island_of,
+            n_islands,
+            lookahead,
             build_errors,
         }
     }
@@ -740,6 +833,119 @@ mod tests {
         let cfg = MachineConfig::with_grid(2, 1);
         let plan = RoutingPlan::build(&prog, &cfg);
         assert!(plan.build_errors.iter().any(|e| e.contains("entry task id 9")));
+    }
+
+    #[test]
+    fn plan_islands_and_lookahead() {
+        let prog = send_recv_prog(3);
+        let cfg = MachineConfig::with_grid(2, 1);
+        let plan = RoutingPlan::build(&prog, &cfg);
+        // The single flow shares its link with nobody: every PE is its
+        // own island, and the one delivery (depth 1) sets the lookahead.
+        assert_eq!(plan.n_islands, 2);
+        assert_ne!(plan.island_of[0], plan.island_of[1]);
+        assert_eq!(plan.lookahead, 1 + cfg.hop_cycles);
+    }
+
+    #[test]
+    fn plan_unions_sources_sharing_a_link() {
+        // Two producers at (0,0) and (1,0) both inject color 5 east
+        // toward a sink at (2,0): the flows share link (1,0)→East, so
+        // the two source PEs must land in one island.
+        let color = 5u8;
+        let producer = PeClass {
+            name: "producer".into(),
+            subgrids: vec![Subgrid::rect(2, 1)],
+            fields: vec![FieldAlloc {
+                name: "a".into(),
+                addr: 0,
+                len: 4,
+                ty: Dtype::F32,
+                is_extern: false,
+            }],
+            mem_size: 16,
+            tasks: vec![TaskDef {
+                name: "send".into(),
+                hw_id: 25,
+                kind: TaskKind::Local,
+                initially_active: false,
+                initially_blocked: false,
+                body: vec![MOp::Dsd(DsdOp {
+                    kind: DsdKind::Mov,
+                    dst: DsdRef::FabOut { color, len: SExpr::imm(4), ty: Dtype::F32 },
+                    src0: Some(DsdRef::mem(0, SExpr::imm(4), Dtype::F32)),
+                    src1: None,
+                    scalar: None,
+                    is_async: true,
+                    on_complete: vec![],
+                })],
+            }],
+            entry_tasks: vec![25],
+        };
+        let sink = PeClass {
+            name: "sink".into(),
+            subgrids: vec![Subgrid::point(2, 0)],
+            fields: vec![FieldAlloc {
+                name: "b".into(),
+                addr: 0,
+                len: 8,
+                ty: Dtype::F32,
+                is_extern: false,
+            }],
+            mem_size: 32,
+            tasks: vec![TaskDef {
+                name: "recv".into(),
+                hw_id: 24,
+                kind: TaskKind::Local,
+                initially_active: false,
+                initially_blocked: false,
+                body: vec![MOp::Dsd(DsdOp {
+                    kind: DsdKind::Mov,
+                    dst: DsdRef::mem(0, SExpr::imm(8), Dtype::F32),
+                    src0: Some(DsdRef::FabIn { color, len: SExpr::imm(8), ty: Dtype::F32 }),
+                    src1: None,
+                    scalar: None,
+                    is_async: true,
+                    on_complete: vec![],
+                })],
+            }],
+            entry_tasks: vec![24],
+        };
+        let prog = MachineProgram {
+            name: "shared_link".into(),
+            classes: vec![producer, sink],
+            routes: vec![
+                RouteRule {
+                    color,
+                    subgrid: Subgrid::point(0, 0),
+                    rx: DirSet::single(Direction::Ramp),
+                    tx: DirSet::single(Direction::East),
+                },
+                RouteRule {
+                    color,
+                    subgrid: Subgrid::point(1, 0),
+                    rx: DirSet::single(Direction::Ramp).with(Direction::West),
+                    tx: DirSet::single(Direction::East),
+                },
+                RouteRule {
+                    color,
+                    subgrid: Subgrid::point(2, 0),
+                    rx: DirSet::single(Direction::West),
+                    tx: DirSet::single(Direction::Ramp),
+                },
+            ],
+            colors_used: vec![color],
+            ..Default::default()
+        };
+        let cfg = MachineConfig::with_grid(3, 1);
+        let plan = RoutingPlan::build(&prog, &cfg);
+        assert!(plan.build_errors.is_empty(), "{:?}", plan.build_errors);
+        let p0 = plan.pe_index(0, 0).unwrap();
+        let p1 = plan.pe_index(1, 0).unwrap();
+        let p2 = plan.pe_index(2, 0).unwrap();
+        assert_eq!(plan.island_of[p0], plan.island_of[p1], "shared link must union sources");
+        assert_ne!(plan.island_of[p0], plan.island_of[p2], "the sink sends nothing");
+        assert_eq!(plan.n_islands, 2);
     }
 
     #[test]

@@ -18,11 +18,33 @@
 //!
 //! DSD execution is *batched* where legal: the plan compiler marks
 //! contiguous-f32 operations ([`super::vecop`]) and the simulator runs
-//! them as single slice passes (one kernel per [`DsdKind`], plus a
+//! them as single slice passes (one kernel per [`DsdKind`], a second
+//! monomorphized kernel for contiguous 16-bit integer operands, plus a
 //! scalar-fold kernel for stride-0 accumulation), falling back to the
 //! per-element interpreter for aliased / strided / mixed-dtype
 //! descriptors. Both paths are bit-identical; `SPADA_NO_VEC=1` (or
 //! [`Simulator::set_vectorize`]) forces the interpreter everywhere.
+//!
+//! Execution is *epoch-parallel* when more than one worker thread is
+//! configured (`SPADA_THREADS` / [`Simulator::set_threads`]; default =
+//! available host parallelism). PEs share no memory and interact only
+//! through routed flows, so the plan partitions them into link-sharing
+//! islands (PEs whose flows can contend for a physical link — see
+//! [`RoutingPlan`]), the islands fold onto a fixed shard count, and
+//! every shard owns its PEs, link slots, event queue, payload pool and
+//! metric counters outright. Time advances in epochs bounded by the
+//! plan's conservative cross-island lookahead; within an epoch every
+//! shard steps independently on a `std::thread::scope` worker pool,
+//! and cross-shard flow arrivals are buffered per shard and merged at
+//! the epoch barrier in a deterministic order (arrival timestamp, then
+//! send timestamp, then dense source-PE index, then per-shard sequence
+//! number — the send-timestamp tie-break reproduces the classic
+//! global-sequence order at equal arrival times). The shard count
+//! is independent of the worker count, and per-shard metrics merge by
+//! commutative sums, so outputs, `RunReport` metrics and cycle counts
+//! are **bit-identical across all thread counts**; `SPADA_THREADS=1`
+//! runs the classic single-queue event loop (the one-shard degenerate
+//! case of the same engine).
 
 use super::config::MachineConfig;
 use super::metrics::{Metrics, RunReport};
@@ -33,11 +55,11 @@ use super::program::{
     DsdKind, DsdRef, Dtype, IoDir, MachineProgram, SBinOp, SExpr, SVal, TaskActionKind,
 };
 use super::router::RouteError;
-use super::vecop::{self, Span, VecOp};
+use super::vecop::{self, Span, VecOp, ELEM};
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap, VecDeque};
-use std::rc::Rc;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Barrier, Mutex};
 
 /// Simulator errors.
 #[derive(Debug, Clone)]
@@ -89,7 +111,7 @@ struct TaskState {
 struct ArrivedFlow {
     /// Availability time of word 0 at this PE's ramp.
     first_word: u64,
-    words: Rc<Vec<u32>>,
+    words: Arc<Vec<u32>>,
     /// Next unconsumed word index.
     cursor: usize,
 }
@@ -148,15 +170,18 @@ struct ColorEndpoint {
 /// One pooled flow payload. The pool slot releases its reference after
 /// the last destination's `FlowArrive` event is processed, so payload
 /// memory is freed once every endpoint holds (or has drained) its own
-/// `Rc` — matching the pre-pool lifetime.
+/// `Arc` — matching the pre-pool lifetime.
 struct FlowPayload {
-    words: Option<Rc<Vec<u32>>>,
+    words: Option<Arc<Vec<u32>>>,
     /// `FlowArrive` events still outstanding for this payload.
     pending: u32,
 }
 
 /// Runtime state of one PE.
 struct Pe {
+    /// Dense (global) PE index — events and plan tables are keyed by
+    /// it, and shard-local PE vectors map back through it.
+    gix: u32,
     x: i64,
     y: i64,
     class: usize,
@@ -166,7 +191,7 @@ struct Pe {
     /// Bit r (scheduler-rank order) set = the task at `order[r]` is
     /// potentially runnable: local tasks exactly (active && !blocked),
     /// data tasks when unblocked with queued flows and no microthread
-    /// bound. Maintained by [`Simulator::refresh_task_bit`]; lets the
+    /// bound. Maintained by `ShardState::refresh_task_bit`; lets the
     /// scheduler skip quiescent tasks without re-inspection.
     ready: u32,
     busy_until: u64,
@@ -191,13 +216,29 @@ enum EventKind {
 #[derive(Clone, Copy, Debug)]
 struct Event {
     time: u64,
+    /// Simulation time at which this event was *scheduled* (the
+    /// scheduler's `now`; for cross-shard arrivals, the sender's).
+    /// Tie-breaking same-`time` events by scheduling time first
+    /// reproduces the classic global-sequence order across shards:
+    /// within one shard `sched` is non-decreasing in `seq`, so
+    /// ordering by (time, sched, seq) is identical to the historical
+    /// (time, seq); across shards it puts a flow arrival sent at
+    /// simulation time 5 ahead of a wakeup scheduled at time 10 even
+    /// though the arrival was merged (and numbered) later. The one
+    /// shape this cannot disambiguate is two *same-color* arrivals at
+    /// one endpoint with equal (time, sched) from different source
+    /// PEs — a multi-writer endpoint race the static checker
+    /// (`analysis::races`) rejects before such a program ever
+    /// simulates; for statically clean programs the order is the
+    /// classic one.
+    sched: u64,
     seq: u64,
     kind: EventKind,
 }
 
 impl PartialEq for Event {
     fn eq(&self, other: &Self) -> bool {
-        self.time == other.time && self.seq == other.seq
+        (self.time, self.sched, self.seq) == (other.time, other.sched, other.seq)
     }
 }
 impl Eq for Event {}
@@ -208,21 +249,110 @@ impl PartialOrd for Event {
 }
 impl Ord for Event {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        (self.time, self.seq).cmp(&(other.time, other.seq))
+        (self.time, self.sched, self.seq).cmp(&(other.time, other.sched, other.seq))
     }
 }
 
-/// The WSE-2 simulator. Construct with [`Simulator::new`], feed inputs
-/// with [`Simulator::set_input`], [`Simulator::run`], then read outputs.
-pub struct Simulator {
-    pub cfg: MachineConfig,
-    prog: Rc<MachineProgram>,
-    /// Everything resolvable before the first event (see `machine::plan`).
-    /// Shared with the compiler/checker when constructed via
-    /// [`Simulator::with_plan`] — one trace per compiled kernel.
-    plan: Arc<RoutingPlan>,
+/// A cross-shard flow delivery buffered by the sending shard during an
+/// epoch and merged into the destination shard at the epoch barrier.
+struct OutMsg {
+    /// Event time at the destination (never earlier than the epoch
+    /// boundary — the plan's lookahead guarantees it).
+    time: u64,
+    /// The sender's simulation time when the flow was sent — the
+    /// delivered event's [`Event::sched`] tie-break key.
+    sched: u64,
+    /// Availability time of word 0 at the destination ramp.
+    first_word: u64,
+    /// Destination (global PE index, endpoint slot).
+    dst: u32,
+    slot: u8,
+    words: Arc<Vec<u32>>,
+    /// Deterministic merge key: (time, src_pe, src_seq) is a total
+    /// order over every message of one epoch.
+    src_pe: u32,
+    src_seq: u64,
+}
+
+/// Runtime shard decomposition: global→shard-local index maps shared
+/// read-only by every worker. Built per run from the plan's
+/// link-sharing islands; `None` in [`Ctx::maps`] means the one-shard
+/// (classic single-threaded) layout where every map is the identity.
+struct ShardMaps {
+    /// Global PE index → owning shard.
+    shard_of: Vec<u32>,
+    /// Global PE index → position in its shard's PE vector.
+    pe_loc: Vec<u32>,
+    /// Global dense link index → slot in the owning shard's busy
+    /// array (`u32::MAX` for links no planned flow occupies).
+    link_loc: Vec<u32>,
+}
+
+/// Hard cap on runtime shards. Fixed (never a function of the worker
+/// count) so every thread count ≥ 2 sees the same decomposition and
+/// therefore processes byte-identical per-shard event sequences.
+const MAX_SHARDS: usize = 64;
+
+/// Immutable per-run context shared by every worker thread.
+struct Ctx<'a> {
+    cfg: &'a MachineConfig,
+    plan: &'a RoutingPlan,
+    vec_enabled: bool,
+    maps: Option<&'a ShardMaps>,
+    /// Events processed across all shards — the runaway budget is a
+    /// *global* bound, like the classic engine's. The one-shard path
+    /// checks its local counter exactly; parallel shards add to this
+    /// in batches (see [`EVENT_BATCH`]) so a program whose total event
+    /// count exceeds `cfg.max_events` errors at every thread count.
+    events_total: &'a AtomicU64,
+}
+
+/// Granularity at which parallel shards flush their processed-event
+/// counts into [`Ctx::events_total`]. The budget check can overshoot
+/// by at most `MAX_SHARDS · EVENT_BATCH` events — the Runaway error
+/// value itself is identical everywhere.
+const EVENT_BATCH: u64 = 1024;
+
+impl Ctx<'_> {
+    /// Shard-local index of a global PE.
+    #[inline]
+    fn loc(&self, gpe: u32) -> usize {
+        match self.maps {
+            None => gpe as usize,
+            Some(m) => m.pe_loc[gpe as usize] as usize,
+        }
+    }
+
+    /// Owning shard of a global PE.
+    #[inline]
+    fn shard_of(&self, gpe: u32) -> u32 {
+        match self.maps {
+            None => 0,
+            Some(m) => m.shard_of[gpe as usize],
+        }
+    }
+
+    /// Shard-local slot of a global link index.
+    #[inline]
+    fn link(&self, li: u32) -> usize {
+        match self.maps {
+            None => li as usize,
+            Some(m) => m.link_loc[li as usize] as usize,
+        }
+    }
+}
+
+/// One shard's complete runtime state. The event-processing engine
+/// lives here: every handler touches only this shard's PEs, links,
+/// payload pool and counters, so shards step concurrently without
+/// synchronization; cross-shard flow arrivals leave through `outbox`.
+/// A single shard spanning the whole fabric (identity maps) *is* the
+/// classic single-threaded simulator.
+struct ShardState {
+    ix: u32,
+    /// PEs owned by this shard, in ascending global index order.
     pes: Vec<Pe>,
-    /// Link busy-until, dense: `(y·width + x)·5 + direction index`.
+    /// Busy-until per link slot owned by this shard.
     link_busy: Vec<u64>,
     /// Flow payload pool; `FlowArrive` events reference entries by index
     /// so heap entries stay `Copy`.
@@ -234,6 +364,48 @@ pub struct Simulator {
     now: u64,
     seq: u64,
     metrics: Metrics,
+    /// DSD operations executed through the slice kernels (not a
+    /// [`Metrics`] field: metrics are bit-identical across modes).
+    vec_ops: u64,
+    /// Reusable slice-kernel operand buffers (no per-op allocation).
+    scratch_a: Vec<f64>,
+    scratch_b: Vec<f64>,
+    /// Cross-shard deliveries generated this epoch.
+    outbox: Vec<OutMsg>,
+    /// First error this shard hit, keyed (event time, global PE) so the
+    /// coordinator picks the globally earliest one deterministically.
+    error: Option<(u64, u32, SimError)>,
+}
+
+/// Lock a shard even if a panicking worker poisoned its mutex — the
+/// shard's own `error` field (set by the panic handler) carries the
+/// failure; a poisoned lock must not turn into a second panic or a
+/// barrier deadlock.
+fn lock_shard(m: &Mutex<ShardState>) -> std::sync::MutexGuard<'_, ShardState> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Worker-count default: `SPADA_THREADS` if set, else the host's
+/// available parallelism.
+fn default_threads() -> usize {
+    match std::env::var("SPADA_THREADS").ok().and_then(|s| s.trim().parse::<usize>().ok()) {
+        Some(n) => n.max(1),
+        None => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+    }
+}
+
+/// The WSE-2 simulator. Construct with [`Simulator::new`], feed inputs
+/// with [`Simulator::set_input`], [`Simulator::run`], then read outputs.
+pub struct Simulator {
+    pub cfg: MachineConfig,
+    prog: Arc<MachineProgram>,
+    /// Everything resolvable before the first event (see `machine::plan`).
+    /// Shared with the compiler/checker when constructed via
+    /// [`Simulator::with_plan`] — one trace per compiled kernel.
+    plan: Arc<RoutingPlan>,
+    /// PE runtime state in dense (global) order. During a run the PEs
+    /// are moved into shards; they return here before `run` exits.
+    pes: Vec<Pe>,
     /// External inputs staged before run (arg name -> data words).
     inputs: HashMap<String, Vec<u32>>,
     ran: bool,
@@ -241,12 +413,11 @@ pub struct Simulator {
     /// environment or [`Simulator::set_vectorize`] force the
     /// per-element interpreter everywhere).
     vec_enabled: bool,
-    /// DSD operations executed through the slice kernels (not a
-    /// [`Metrics`] field: metrics are bit-identical across modes).
+    /// Worker threads for the epoch-parallel engine (`SPADA_THREADS` or
+    /// host parallelism by default; 1 = classic single-queue loop).
+    threads: usize,
+    /// Slice-kernel executions, summed over shards after each run.
     vec_ops: u64,
-    /// Reusable slice-kernel operand buffers (no per-op allocation).
-    scratch_a: Vec<f64>,
-    scratch_b: Vec<f64>,
 }
 
 impl Simulator {
@@ -285,12 +456,13 @@ impl Simulator {
         if let Some(e) = plan.build_errors.first() {
             return Err(SimError::Program(e.clone()));
         }
-        let prog = Rc::new(prog);
+        let prog = Arc::new(prog);
         let mut pes = Vec::with_capacity(plan.pes.len());
-        for p in &plan.pes {
+        for (g, p) in plan.pes.iter().enumerate() {
             let class = &prog.classes[p.class];
             let nslots = plan.classes[p.class].slot_color.len();
             pes.push(Pe {
+                gix: g as u32,
                 x: p.x,
                 y: p.y,
                 class: p.class,
@@ -305,25 +477,16 @@ impl Simulator {
                 busy_cycles: 0,
             });
         }
-        let link_busy = vec![0u64; cfg.link_slots()];
         Ok(Simulator {
             cfg,
             prog,
             plan,
             pes,
-            link_busy,
-            payloads: Vec::new(),
-            free_payloads: Vec::new(),
-            events: BinaryHeap::with_capacity(1024),
-            now: 0,
-            seq: 0,
-            metrics: Metrics::default(),
             inputs: HashMap::new(),
             ran: false,
             vec_enabled: std::env::var_os("SPADA_NO_VEC").is_none(),
+            threads: default_threads(),
             vec_ops: 0,
-            scratch_a: Vec::new(),
-            scratch_b: Vec::new(),
         })
     }
 
@@ -353,6 +516,50 @@ impl Simulator {
     /// vectorization is disabled or no operation was admitted).
     pub fn vec_ops_executed(&self) -> u64 {
         self.vec_ops
+    }
+
+    /// Set the worker-thread count for [`Simulator::run`]. `1` runs the
+    /// classic single-queue event loop; any count ≥ 2 runs the
+    /// epoch-parallel engine over a shard decomposition that is fixed
+    /// per plan (never a function of the thread count), so results are
+    /// bit-identical across all values. Defaults to `SPADA_THREADS`
+    /// from the environment, else the host's available parallelism.
+    pub fn set_threads(&mut self, n: usize) {
+        self.threads = n.max(1);
+    }
+
+    /// The configured worker-thread count.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Reset all runtime state so this allocation can run again:
+    /// restores every PE's memory to the plan's pristine image (fields
+    /// are zero-initialized; inputs are staged per run, so pristine =
+    /// zeroed), clears task/endpoint/scheduler state, and re-arms
+    /// [`Simulator::run`]. Staged inputs are kept and reloaded by the
+    /// next run. This is the bench-sweep lever: repeated runs of one
+    /// compilation reuse a single allocation instead of re-cloning the
+    /// machine program and every PE image per run.
+    pub fn reset(&mut self) {
+        for pe in &mut self.pes {
+            pe.mem.fill(0);
+            pe.regs = [SVal::I(0); NUM_REGS];
+            for t in &mut pe.tasks {
+                *t = TaskState::default();
+            }
+            pe.ready = 0;
+            pe.busy_until = 0;
+            pe.last_activity = 0;
+            for ep in &mut pe.endpoints {
+                ep.flows.clear();
+                ep.consumers.clear();
+            }
+            pe.ran_anything = false;
+            pe.busy_cycles = 0;
+        }
+        self.vec_ops = 0;
+        self.ran = false;
     }
 
     /// Dense PE lookup (row-major grid table).
@@ -385,15 +592,9 @@ impl Simulator {
         Ok(())
     }
 
-    fn schedule(&mut self, time: u64, kind: EventKind) {
-        self.seq += 1;
-        let time = time.max(self.now);
-        self.events.push(Reverse(Event { time, seq: self.seq, kind }));
-    }
-
     /// Load staged inputs into extern fields.
     fn load_inputs(&mut self) -> Result<(), SimError> {
-        let prog = Rc::clone(&self.prog);
+        let prog = Arc::clone(&self.prog);
         for binding in prog.io.iter().filter(|b| b.dir == IoDir::In) {
             let words = match self.inputs.get(&binding.arg) {
                 Some(w) => w.clone(),
@@ -511,52 +712,243 @@ impl Simulator {
     }
 
     /// Run the kernel to quiescence. Returns the run report.
+    ///
+    /// With one worker thread (or a plan whose PEs all share one
+    /// link-sharing island) this is the classic single-queue event
+    /// loop. Otherwise the epoch-parallel engine steps the shards
+    /// concurrently — bit-identical results either way (pinned by
+    /// `tests/parallel_equiv.rs`).
     pub fn run(&mut self) -> Result<RunReport, SimError> {
-        assert!(!self.ran, "Simulator::run is single-shot");
+        assert!(!self.ran, "Simulator::run is single-shot (use Simulator::reset to rerun)");
         self.ran = true;
         self.load_inputs()?;
-
-        // Initialize task states and entry activations.
         let plan = Arc::clone(&self.plan);
-        for pe_idx in 0..self.pes.len() {
-            let cp = &plan.classes[self.pes[pe_idx].class];
-            for (ti, t) in cp.tasks.iter().enumerate() {
-                let st = &mut self.pes[pe_idx].tasks[ti];
-                st.active = t.initially_active || matches!(t.kind, PTaskKind::Data { .. });
-                st.blocked = t.initially_blocked;
+        let threads = self.threads.max(1);
+        // The parallel engine needs ≥ 2 islands to decompose and a
+        // positive lookahead to advance epochs (lookahead 0 only occurs
+        // under a zero-hop-cost config, where no window can close).
+        let metrics = if threads == 1 || plan.n_islands <= 1 || plan.lookahead == 0 {
+            self.run_single()?
+        } else {
+            self.run_parallel(threads)?
+        };
+        self.finish(metrics)
+    }
+
+    /// Classic path: one shard spanning the whole fabric (identity
+    /// index maps), one event queue, run to completion.
+    fn run_single(&mut self) -> Result<Metrics, SimError> {
+        let plan = Arc::clone(&self.plan);
+        let cfg = self.cfg.clone();
+        let events_total = AtomicU64::new(0); // unused: one shard checks exactly
+        let ctx = Ctx {
+            cfg: &cfg,
+            plan: &plan,
+            vec_enabled: self.vec_enabled,
+            maps: None,
+            events_total: &events_total,
+        };
+        let mut shard = ShardState::new(0, std::mem::take(&mut self.pes), cfg.link_slots());
+        shard.init_pes(&ctx);
+        shard.run_until(&ctx, u64::MAX);
+        self.pes = shard.pes;
+        self.vec_ops += shard.vec_ops;
+        if let Some((_, _, e)) = shard.error {
+            return Err(e);
+        }
+        Ok(shard.metrics)
+    }
+
+    /// Epoch-parallel path: conservative parallel discrete-event
+    /// simulation over the plan's link-sharing islands.
+    fn run_parallel(&mut self, threads: usize) -> Result<Metrics, SimError> {
+        let plan = Arc::clone(&self.plan);
+        let cfg = self.cfg.clone();
+        let lookahead = plan.lookahead;
+
+        // --- runtime shards: islands folded onto a fixed count ---
+        let n_shards = plan.n_islands.min(MAX_SHARDS);
+        let mut maps = ShardMaps {
+            shard_of: vec![0u32; plan.pes.len()],
+            pe_loc: vec![0u32; plan.pes.len()],
+            link_loc: vec![u32::MAX; cfg.link_slots()],
+        };
+        let mut pe_counts = vec![0u32; n_shards];
+        for (g, &isl) in plan.island_of.iter().enumerate() {
+            let s = isl as usize % n_shards;
+            maps.shard_of[g] = s as u32;
+            maps.pe_loc[g] = pe_counts[s];
+            pe_counts[s] += 1;
+        }
+        // Every link is occupied only by flows of one island (the
+        // union-find invariant), so each gets a dense slot in the
+        // island's shard.
+        let mut link_counts = vec![0u32; n_shards];
+        for flow in &plan.flows {
+            if flow.error.is_some() {
+                continue;
             }
-            for &ti in &cp.entry {
-                self.pes[pe_idx].tasks[ti as usize].active = true;
-            }
-            for ti in 0..cp.tasks.len() {
-                self.refresh_task_bit(pe_idx, ti);
-            }
-            if !cp.entry.is_empty() {
-                self.schedule(0, EventKind::PeReady(pe_idx as u32));
+            let s = maps.shard_of[flow.src_pe as usize] as usize;
+            for &(li, _) in &flow.links {
+                if maps.link_loc[li as usize] == u32::MAX {
+                    maps.link_loc[li as usize] = link_counts[s];
+                    link_counts[s] += 1;
+                }
             }
         }
 
-        // Event loop: pure dense-array arithmetic; every event variant
-        // is `Copy` and all routing/action state is preresolved.
-        while let Some(Reverse(ev)) = self.events.pop() {
-            self.metrics.events += 1;
-            if self.metrics.events > self.cfg.max_events {
-                return Err(SimError::Runaway(self.cfg.max_events));
-            }
-            self.now = ev.time;
-            match ev.kind {
-                EventKind::PeReady(pe) => self.pe_ready(pe as usize)?,
-                EventKind::FlowArrive { pe, slot, first_word, payload } => {
-                    self.flow_arrive(pe as usize, slot, first_word, payload)?
-                }
-                EventKind::Complete { pe, actions } => {
-                    self.apply_actions_id(pe as usize, actions);
-                    self.schedule(self.now, EventKind::PeReady(pe));
-                }
-            }
+        // Partition the PEs (global order preserved inside each shard,
+        // matching the `pe_loc` assignment above).
+        let mut shard_pes: Vec<Vec<Pe>> =
+            pe_counts.iter().map(|&c| Vec::with_capacity(c as usize)).collect();
+        for pe in std::mem::take(&mut self.pes) {
+            shard_pes[maps.shard_of[pe.gix as usize] as usize].push(pe);
+        }
+        let shards: Vec<Mutex<ShardState>> = shard_pes
+            .into_iter()
+            .enumerate()
+            .map(|(s, p)| Mutex::new(ShardState::new(s as u32, p, link_counts[s] as usize)))
+            .collect();
+        let events_total = AtomicU64::new(0);
+        let ctx = Ctx {
+            cfg: &cfg,
+            plan: &plan,
+            vec_enabled: self.vec_enabled,
+            maps: Some(&maps),
+            events_total: &events_total,
+        };
+        for sh in &shards {
+            lock_shard(sh).init_pes(&ctx);
         }
 
-        // Quiescent: check for deadlock.
+        // --- epoch loop: persistent scoped workers + a coordinator ---
+        let workers = threads.min(n_shards).max(1);
+        let barrier = Barrier::new(workers + 1);
+        let epoch_end = AtomicU64::new(0);
+        let stop = AtomicBool::new(false);
+        let mut run_error: Option<(u64, u32, SimError)> = None;
+
+        std::thread::scope(|scope| {
+            for w in 0..workers {
+                let (barrier, shards, epoch_end, stop, ctx) =
+                    (&barrier, &shards, &epoch_end, &stop, &ctx);
+                scope.spawn(move || loop {
+                    barrier.wait();
+                    if stop.load(Ordering::Acquire) {
+                        break;
+                    }
+                    let end = epoch_end.load(Ordering::Acquire);
+                    let mut si = w;
+                    while si < shards.len() {
+                        // A panicking handler must not strand the other
+                        // threads at the barrier: convert it into a
+                        // shard error the coordinator aborts on.
+                        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                            lock_shard(&shards[si]).run_until(ctx, end);
+                        }));
+                        if r.is_err() {
+                            let mut sh = lock_shard(&shards[si]);
+                            if sh.error.is_none() {
+                                sh.error = Some((
+                                    0,
+                                    0,
+                                    SimError::Program(
+                                        "simulator worker thread panicked (engine bug)".into(),
+                                    ),
+                                ));
+                            }
+                        }
+                        si += workers;
+                    }
+                    barrier.wait();
+                });
+            }
+            // Coordinator. Workers park at the top barrier between
+            // epochs, so every lock below is uncontended.
+            loop {
+                let mut next = u64::MAX;
+                let mut err: Option<(u64, u32, SimError)> = None;
+                for sh in &shards {
+                    let sh = lock_shard(sh);
+                    if let Some(e) = &sh.error {
+                        // Pick the globally earliest (time, PE) error,
+                        // with real program errors strictly preferred
+                        // over the budget guard: *whether* a shard
+                        // trips Runaway can depend on how the other
+                        // shards' batched counter flushes interleave,
+                        // so it must never shadow a deterministic
+                        // error from the event stream.
+                        let key =
+                            |e: &(u64, u32, SimError)| {
+                                (matches!(e.2, SimError::Runaway(_)), e.0, e.1)
+                            };
+                        let earlier = match &err {
+                            None => true,
+                            Some(b) => key(e) < key(b),
+                        };
+                        if earlier {
+                            err = Some(e.clone());
+                        }
+                    }
+                    if let Some(&Reverse(ev)) = sh.events.peek() {
+                        next = next.min(ev.time);
+                    }
+                }
+                if err.is_some() || next == u64::MAX {
+                    run_error = err;
+                    stop.store(true, Ordering::Release);
+                    barrier.wait(); // release workers into their break
+                    break;
+                }
+                // Conservative window: every cross-shard arrival sent
+                // while processing events in [next, end) lands at or
+                // after `end` (send start ≥ event time; arrival = start
+                // + depth + hop ≥ time + lookahead).
+                let end = next.saturating_add(lookahead);
+                epoch_end.store(end, Ordering::Release);
+                barrier.wait(); // workers step the epoch
+                barrier.wait(); // workers parked again
+                // Deterministic merge: deliver every buffered arrival
+                // ordered by (arrival time, send time, source PE,
+                // source sequence) — a total order independent of
+                // worker interleaving.
+                let mut msgs: Vec<OutMsg> = vec![];
+                for sh in &shards {
+                    msgs.append(&mut lock_shard(sh).outbox);
+                }
+                msgs.sort_by_key(|m| (m.time, m.sched, m.src_pe, m.src_seq));
+                for m in msgs {
+                    debug_assert!(m.time >= end, "cross-shard arrival inside its own epoch");
+                    let dst = maps.shard_of[m.dst as usize] as usize;
+                    lock_shard(&shards[dst]).deliver(m);
+                }
+            }
+        });
+
+        // Reassemble the dense PE table and merge the counters.
+        let mut metrics = Metrics::default();
+        let mut slots: Vec<Option<Pe>> = Vec::with_capacity(plan.pes.len());
+        slots.resize_with(plan.pes.len(), || None);
+        for sh in shards {
+            let sh = sh.into_inner().unwrap_or_else(|poisoned| poisoned.into_inner());
+            metrics.merge(&sh.metrics);
+            self.vec_ops += sh.vec_ops;
+            for pe in sh.pes {
+                let g = pe.gix as usize;
+                slots[g] = Some(pe);
+            }
+        }
+        self.pes = slots.into_iter().map(|p| p.expect("every PE returns from its shard")).collect();
+        if let Some((_, _, e)) = run_error {
+            return Err(e);
+        }
+        Ok(metrics)
+    }
+
+    /// Post-run epilogue shared by both engines: deadlock detection
+    /// over the reassembled PE table, then the report.
+    fn finish(&mut self, metrics: Metrics) -> Result<RunReport, SimError> {
+        let plan = Arc::clone(&self.plan);
         let mut stuck = vec![];
         for pe in &self.pes {
             let cp = &plan.classes[pe.class];
@@ -612,7 +1004,7 @@ impl Simulator {
         }
 
         let cycles = self.pes.iter().map(|p| p.last_activity).max().unwrap_or(0);
-        let mut m = std::mem::take(&mut self.metrics);
+        let mut m = metrics;
         m.active_pes = self.pes.iter().filter(|p| p.ran_anything).count() as u64;
         m.busy_cycles = self.pes.iter().map(|p| p.busy_cycles).sum();
         Ok(RunReport {
@@ -626,19 +1018,169 @@ impl Simulator {
             mem_bytes_used: self.prog.max_mem_used(),
         })
     }
+}
+
+impl ShardState {
+    fn new(ix: u32, pes: Vec<Pe>, link_slots: usize) -> ShardState {
+        ShardState {
+            ix,
+            pes,
+            link_busy: vec![0u64; link_slots],
+            payloads: Vec::new(),
+            free_payloads: Vec::new(),
+            events: BinaryHeap::with_capacity(1024),
+            now: 0,
+            seq: 0,
+            metrics: Metrics::default(),
+            vec_ops: 0,
+            scratch_a: Vec::new(),
+            scratch_b: Vec::new(),
+            outbox: Vec::new(),
+            error: None,
+        }
+    }
+
+    /// Initialize task states and entry activations for this shard's
+    /// PEs (ascending global order, matching the classic seed order).
+    fn init_pes(&mut self, ctx: &Ctx<'_>) {
+        for lp in 0..self.pes.len() {
+            let cp = &ctx.plan.classes[self.pes[lp].class];
+            for (ti, t) in cp.tasks.iter().enumerate() {
+                let st = &mut self.pes[lp].tasks[ti];
+                st.active = t.initially_active || matches!(t.kind, PTaskKind::Data { .. });
+                st.blocked = t.initially_blocked;
+            }
+            for &ti in &cp.entry {
+                self.pes[lp].tasks[ti as usize].active = true;
+            }
+            for ti in 0..cp.tasks.len() {
+                self.refresh_task_bit(ctx, lp, ti);
+            }
+            if !cp.entry.is_empty() {
+                let g = self.pes[lp].gix;
+                self.schedule(0, EventKind::PeReady(g));
+            }
+        }
+    }
+
+    fn schedule(&mut self, time: u64, kind: EventKind) {
+        self.seq += 1;
+        let time = time.max(self.now);
+        self.events.push(Reverse(Event { time, sched: self.now, seq: self.seq, kind }));
+    }
+
+    /// Merge one cross-shard arrival (coordinator-side, at the epoch
+    /// barrier). Allocates a pool slot in *this* shard's payload pool;
+    /// the receiver-side sequence number is assigned here, in the
+    /// coordinator's deterministic merge order.
+    fn deliver(&mut self, m: OutMsg) {
+        let entry = FlowPayload { words: Some(m.words), pending: 1 };
+        let payload = match self.free_payloads.pop() {
+            Some(ix) => {
+                self.payloads[ix as usize] = entry;
+                ix
+            }
+            None => {
+                self.payloads.push(entry);
+                (self.payloads.len() - 1) as u32
+            }
+        };
+        self.seq += 1;
+        self.events.push(Reverse(Event {
+            time: m.time,
+            sched: m.sched,
+            seq: self.seq,
+            kind: EventKind::FlowArrive {
+                pe: m.dst,
+                slot: m.slot,
+                first_word: m.first_word,
+                payload,
+            },
+        }));
+    }
+
+    /// Process every queued event with `time < end` (the event loop:
+    /// pure dense-array arithmetic; every event variant is `Copy` and
+    /// all routing/action state is preresolved). Errors freeze the
+    /// shard; the driver surfaces the globally earliest one.
+    fn run_until(&mut self, ctx: &Ctx<'_>, end: u64) {
+        if self.error.is_some() {
+            return;
+        }
+        let single = ctx.maps.is_none();
+        // Events processed this call but not yet flushed into the
+        // global budget counter (parallel mode only).
+        let mut unflushed = 0u64;
+        while let Some(&Reverse(ev)) = self.events.peek() {
+            if ev.time >= end {
+                break;
+            }
+            self.events.pop();
+            self.metrics.events += 1;
+            let gpe = match ev.kind {
+                EventKind::PeReady(pe)
+                | EventKind::FlowArrive { pe, .. }
+                | EventKind::Complete { pe, .. } => pe,
+            };
+            if single {
+                // Exact classic semantics: error on event max_events+1.
+                if self.metrics.events > ctx.cfg.max_events {
+                    self.error = Some((ev.time, gpe, SimError::Runaway(ctx.cfg.max_events)));
+                    return;
+                }
+            } else {
+                unflushed += 1;
+                if unflushed >= EVENT_BATCH {
+                    let total =
+                        ctx.events_total.fetch_add(unflushed, Ordering::Relaxed) + unflushed;
+                    unflushed = 0;
+                    if total > ctx.cfg.max_events {
+                        self.error = Some((ev.time, gpe, SimError::Runaway(ctx.cfg.max_events)));
+                        return;
+                    }
+                }
+            }
+            self.now = ev.time;
+            let res = match ev.kind {
+                EventKind::PeReady(pe) => self.pe_ready(ctx, ctx.loc(pe)),
+                EventKind::FlowArrive { pe, slot, first_word, payload } => {
+                    self.flow_arrive(ctx, ctx.loc(pe), slot, first_word, payload)
+                }
+                EventKind::Complete { pe, actions } => {
+                    self.apply_actions_id(ctx, ctx.loc(pe), actions);
+                    self.schedule(self.now, EventKind::PeReady(pe));
+                    Ok(())
+                }
+            };
+            if let Err(e) = res {
+                self.error = Some((ev.time, gpe, e));
+                return;
+            }
+        }
+        if !single && unflushed > 0 {
+            // Flush the tail so a terminating run whose global total
+            // exceeds the budget still errors, exactly as one thread
+            // would have.
+            let total = ctx.events_total.fetch_add(unflushed, Ordering::Relaxed) + unflushed;
+            if total > ctx.cfg.max_events && self.error.is_none() {
+                let gpe = self.pes.first().map(|p| p.gix).unwrap_or(0);
+                self.error = Some((self.now, gpe, SimError::Runaway(ctx.cfg.max_events)));
+            }
+        }
+    }
 
     // ------------------------------------------------------------------
     // Task scheduling
     // ------------------------------------------------------------------
 
-    fn pe_ready(&mut self, pe_idx: usize) -> Result<(), SimError> {
+    fn pe_ready(&mut self, ctx: &Ctx<'_>, pe_idx: usize) -> Result<(), SimError> {
+        let gpe = self.pes[pe_idx].gix;
         if self.pes[pe_idx].busy_until > self.now {
             let t = self.pes[pe_idx].busy_until;
-            self.schedule(t, EventKind::PeReady(pe_idx as u32));
+            self.schedule(t, EventKind::PeReady(gpe));
             return Ok(());
         }
-        let plan = Arc::clone(&self.plan);
-        let cp = &plan.classes[self.pes[pe_idx].class];
+        let cp = &ctx.plan.classes[self.pes[pe_idx].class];
 
         // Pick the lowest-hardware-ID runnable task by walking the set
         // bits of the ready mask in rank order: quiescent tasks are
@@ -671,7 +1213,7 @@ impl Simulator {
         }
         let Some(ti) = chosen else {
             if let Some(t) = next_wakeup {
-                self.schedule(t, EventKind::PeReady(pe_idx as u32));
+                self.schedule(t, EventKind::PeReady(gpe));
             }
             return Ok(());
         };
@@ -679,13 +1221,13 @@ impl Simulator {
         self.pes[pe_idx].ran_anything = true;
 
         let start = self.now.max(self.pes[pe_idx].busy_until);
-        let mut clock = start + self.cfg.task_wakeup_cycles;
+        let mut clock = start + ctx.cfg.task_wakeup_cycles;
 
         match cp.tasks[ti].kind {
             PTaskKind::Local => {
                 self.pes[pe_idx].tasks[ti].active = false;
-                self.refresh_task_bit(pe_idx, ti);
-                self.exec_ops(pe_idx, &cp.tasks[ti].body, &mut clock)?;
+                self.refresh_task_bit(ctx, pe_idx, ti);
+                self.exec_ops(ctx, pe_idx, &cp.tasks[ti].body, &mut clock)?;
             }
             PTaskKind::Data { slot, wavelet_reg } => {
                 // Consume available wavelets one at a time (hardware fires
@@ -709,8 +1251,8 @@ impl Simulator {
                     let Some(w) = word else { break };
                     self.pes[pe_idx].regs[wavelet_reg as usize] =
                         SVal::F(f32::from_bits(w) as f64);
-                    clock += self.cfg.data_task_wavelet_cycles;
-                    self.exec_ops(pe_idx, &cp.tasks[ti].body, &mut clock)?;
+                    clock += ctx.cfg.data_task_wavelet_cycles;
+                    self.exec_ops(ctx, pe_idx, &cp.tasks[ti].body, &mut clock)?;
                     if self.pes[pe_idx].tasks[ti].blocked {
                         break; // body blocked its own task
                     }
@@ -718,9 +1260,9 @@ impl Simulator {
                 // If more words are in flight, wake up again.
                 if let Some(f) = self.pes[pe_idx].endpoints[slot as usize].flows.front() {
                     let t0 = f.word_time(f.cursor);
-                    self.schedule(t0.max(clock), EventKind::PeReady(pe_idx as u32));
+                    self.schedule(t0.max(clock), EventKind::PeReady(gpe));
                 }
-                self.refresh_task_bit(pe_idx, ti);
+                self.refresh_task_bit(ctx, pe_idx, ti);
             }
         }
 
@@ -728,16 +1270,15 @@ impl Simulator {
         pe.busy_cycles += clock - start;
         pe.busy_until = clock;
         pe.last_activity = pe.last_activity.max(clock);
-        self.schedule(clock, EventKind::PeReady(pe_idx as u32));
+        self.schedule(clock, EventKind::PeReady(gpe));
         Ok(())
     }
 
     /// Recompute one task's ready-mask bit from its actual state. Every
     /// state transition that can change runnability funnels through
     /// here, so the bit is always consistent with the predicate.
-    fn refresh_task_bit(&mut self, pe_idx: usize, ti: usize) {
-        let plan = Arc::clone(&self.plan);
-        let cp = &plan.classes[self.pes[pe_idx].class];
+    fn refresh_task_bit(&mut self, ctx: &Ctx<'_>, pe_idx: usize, ti: usize) {
+        let cp = &ctx.plan.classes[self.pes[pe_idx].class];
         let runnable = {
             let pe = &self.pes[pe_idx];
             let st = &pe.tasks[ti];
@@ -760,25 +1301,24 @@ impl Simulator {
 
     /// Refresh the ready bit of the data task bound to an endpoint slot
     /// (if any) after the endpoint's queues changed.
-    fn refresh_data_bit(&mut self, pe_idx: usize, slot: u8) {
-        let ti = self.plan.classes[self.pes[pe_idx].class].data_task_of_slot[slot as usize];
+    fn refresh_data_bit(&mut self, ctx: &Ctx<'_>, pe_idx: usize, slot: u8) {
+        let ti = ctx.plan.classes[self.pes[pe_idx].class].data_task_of_slot[slot as usize];
         if ti != TASK_NONE {
-            self.refresh_task_bit(pe_idx, ti as usize);
+            self.refresh_task_bit(ctx, pe_idx, ti as usize);
         }
     }
 
     /// Apply an interned completion-action list.
-    fn apply_actions_id(&mut self, pe_idx: usize, actions: u32) {
+    fn apply_actions_id(&mut self, ctx: &Ctx<'_>, pe_idx: usize, actions: u32) {
         if actions == ACTIONS_EMPTY {
             return;
         }
-        let plan = Arc::clone(&self.plan);
-        for a in &plan.actions[actions as usize] {
-            self.apply_paction(pe_idx, a);
+        for a in &ctx.plan.actions[actions as usize] {
+            self.apply_paction(ctx, pe_idx, a);
         }
     }
 
-    fn apply_paction(&mut self, pe_idx: usize, a: &PAction) {
+    fn apply_paction(&mut self, ctx: &Ctx<'_>, pe_idx: usize, a: &PAction) {
         if let Some((reg, val)) = a.set_reg {
             self.pes[pe_idx].regs[reg as usize] = SVal::I(val);
             self.metrics.dispatches += 1;
@@ -791,7 +1331,7 @@ impl Simulator {
                 TaskActionKind::Unblock => st.blocked = false,
                 TaskActionKind::Block => st.blocked = true,
             }
-            self.refresh_task_bit(pe_idx, ti);
+            self.refresh_task_bit(ctx, pe_idx, ti);
         }
     }
 
@@ -801,6 +1341,7 @@ impl Simulator {
 
     fn flow_arrive(
         &mut self,
+        ctx: &Ctx<'_>,
         pe_idx: usize,
         slot: u8,
         first_word: u64,
@@ -808,7 +1349,7 @@ impl Simulator {
     ) -> Result<(), SimError> {
         let words = {
             let p = &mut self.payloads[payload as usize];
-            let words = Rc::clone(p.words.as_ref().expect("payload already released"));
+            let words = Arc::clone(p.words.as_ref().expect("payload already released"));
             p.pending -= 1;
             if p.pending == 0 {
                 // Last arrival: the endpoints own the data now; the pool
@@ -822,36 +1363,46 @@ impl Simulator {
         self.pes[pe_idx].endpoints[slot as usize]
             .flows
             .push_back(ArrivedFlow { first_word, words, cursor: 0 });
-        self.try_satisfy(pe_idx, slot)?;
+        self.try_satisfy(ctx, pe_idx, slot)?;
         // A data task may be waiting for this color.
-        self.schedule(first_word.max(self.now), EventKind::PeReady(pe_idx as u32));
+        let gpe = self.pes[pe_idx].gix;
+        self.schedule(first_word.max(self.now), EventKind::PeReady(gpe));
         Ok(())
     }
 
-    /// Inject a flow from PE `src_pe` on `color` with payload `words`,
-    /// not before `earliest`. Returns (start_time, drain_end). The route
-    /// (links, destinations, endpoint slots) was precompiled at
-    /// construction; route errors stored in the plan surface here, on
-    /// first use, exactly as the lazily-traced simulator did.
+    /// Inject a flow from local PE `src_pe` on `color` with payload
+    /// `words`, not before `earliest`. Returns (start_time, drain_end).
+    /// The route (links, destinations, endpoint slots) was precompiled
+    /// at construction; route errors stored in the plan surface here,
+    /// on first use, exactly as the lazily-traced simulator did.
+    ///
+    /// The start time is clamped to the current event time: a flow
+    /// never enters the fabric before the event that sends it. (The
+    /// pre-parallel simulator allowed a retroactive start in one corner
+    /// — a consume assembled from several flows whose earlier words
+    /// were queued long before the last arrival — which would let an
+    /// arrival land inside the sending epoch. The clamp also gives the
+    /// plan's cross-island lookahead its hard guarantee.)
     fn send_flow(
         &mut self,
+        ctx: &Ctx<'_>,
         src_pe: usize,
         color: u8,
-        words: Rc<Vec<u32>>,
+        words: Arc<Vec<u32>>,
         earliest: u64,
     ) -> Result<(u64, u64), SimError> {
         let n = words.len() as u64;
         if n == 0 {
             return Ok((earliest, earliest));
         }
-        let plan = Arc::clone(&self.plan);
-        let (sx, sy) = (self.pes[src_pe].x, self.pes[src_pe].y);
-        let Some(fi) = plan.flow_index(src_pe, color) else {
+        let src = &self.pes[src_pe];
+        let (sx, sy, src_g) = (src.x, src.y, src.gix);
+        let Some(fi) = ctx.plan.flow_index(src_g as usize, color) else {
             return Err(SimError::Program(format!(
                 "flow on color {color} from ({sx},{sy}) has no precompiled route"
             )));
         };
-        let flow = &plan.flows[fi];
+        let flow = &ctx.plan.flows[fi];
         if let Some(err) = &flow.error {
             return Err(match err {
                 FlowError::Route(e) => SimError::Route(e.clone()),
@@ -864,42 +1415,63 @@ impl Simulator {
             });
         }
         // Wormhole start: every link l must be free at start + depth(l).
-        let mut start = earliest;
+        let mut start = earliest.max(self.now);
         for &(li, depth) in &flow.links {
-            let busy = self.link_busy[li as usize];
+            let busy = self.link_busy[ctx.link(li)];
             start = start.max(busy.saturating_sub(depth));
         }
         for &(li, depth) in &flow.links {
-            self.link_busy[li as usize] = start + depth + n;
+            self.link_busy[ctx.link(li)] = start + depth + n;
         }
         self.metrics.flows += 1;
         self.metrics.wavelets += n;
         self.metrics.wavelet_hops += n * flow.links.len() as u64;
         self.metrics.ramp_bytes += 4 * n; // source on-ramp
 
-        let entry = FlowPayload { words: Some(words), pending: flow.dests.len() as u32 };
-        let payload = match self.free_payloads.pop() {
-            Some(ix) => {
-                self.payloads[ix as usize] = entry;
-                ix
+        // In-shard destinations share one pool entry; every cross-shard
+        // destination ships its own message through the epoch barrier.
+        let local = flow.dests.iter().filter(|&&(d, _, _)| ctx.shard_of(d) == self.ix).count();
+        let payload = if local > 0 {
+            let entry = FlowPayload { words: Some(Arc::clone(&words)), pending: local as u32 };
+            match self.free_payloads.pop() {
+                Some(ix) => {
+                    self.payloads[ix as usize] = entry;
+                    ix
+                }
+                None => {
+                    self.payloads.push(entry);
+                    (self.payloads.len() - 1) as u32
+                }
             }
-            None => {
-                self.payloads.push(entry);
-                (self.payloads.len() - 1) as u32
-            }
+        } else {
+            0 // never read: no local FlowArrive references it
         };
         for &(dst, slot, depth) in &flow.dests {
-            let first = start + depth + self.cfg.hop_cycles;
-            self.schedule(
-                first.max(self.now),
-                EventKind::FlowArrive { pe: dst, slot, first_word: first, payload },
-            );
+            let first = start + depth + ctx.cfg.hop_cycles;
+            if ctx.shard_of(dst) == self.ix {
+                self.schedule(
+                    first.max(self.now),
+                    EventKind::FlowArrive { pe: dst, slot, first_word: first, payload },
+                );
+            } else {
+                self.seq += 1;
+                self.outbox.push(OutMsg {
+                    time: first.max(self.now),
+                    sched: self.now,
+                    first_word: first,
+                    dst,
+                    slot,
+                    words: Arc::clone(&words),
+                    src_pe: src_g,
+                    src_seq: self.seq,
+                });
+            }
         }
         Ok((start, start + n))
     }
 
     /// Try to satisfy the head consumer(s) on a (PE, slot) endpoint.
-    fn try_satisfy(&mut self, pe_idx: usize, slot: u8) -> Result<(), SimError> {
+    fn try_satisfy(&mut self, ctx: &Ctx<'_>, pe_idx: usize, slot: u8) -> Result<(), SimError> {
         loop {
             let popped = {
                 let ep = &mut self.pes[pe_idx].endpoints[slot as usize];
@@ -920,18 +1492,22 @@ impl Simulator {
                 }
                 ep.consumers.pop_front().unwrap()
             };
-            self.complete_consume(pe_idx, popped)?;
+            self.complete_consume(ctx, pe_idx, popped)?;
         }
-        self.refresh_data_bit(pe_idx, slot);
+        self.refresh_data_bit(ctx, pe_idx, slot);
         Ok(())
     }
 
     /// Apply a completed fabric-in consumption: compute the op, write the
     /// destination (memory or a forwarded out-flow), schedule completion.
     /// The operation is read from the plan's consume-template table.
-    fn complete_consume(&mut self, pe_idx: usize, c: PendingConsume) -> Result<(), SimError> {
-        let plan = Arc::clone(&self.plan);
-        let tmpl = &plan.classes[self.pes[pe_idx].class].consumes[c.consume_ix as usize];
+    fn complete_consume(
+        &mut self,
+        ctx: &Ctx<'_>,
+        pe_idx: usize,
+        c: PendingConsume,
+    ) -> Result<(), SimError> {
+        let tmpl = &ctx.plan.classes[self.pes[pe_idx].class].consumes[c.consume_ix as usize];
         let words = c.taken;
         let n = words.len();
         let ty = tmpl
@@ -941,7 +1517,7 @@ impl Simulator {
             .map(|r| r.ty())
             .unwrap_or(Dtype::F32);
         // Processing cannot beat the ALU (1 elem/cycle f32) nor the data.
-        let elem_cycles = self.elem_cycles(ty, n as u64);
+        let elem_cycles = self.elem_cycles(ctx, ty, n as u64);
         let proc_done = (c.issue_time + elem_cycles).max(c.last_avail + 1);
 
         // Gather the in-stream values.
@@ -962,7 +1538,7 @@ impl Simulator {
             Some(r @ DsdRef::Mem { .. }) => VOp::Mem(r),
             _ => VOp::Nothing,
         };
-        let out = self.apply_dsd(pe_idx, tmpl.kind, &tmpl.dst, a, b, scalar, n, tmpl.vec)?;
+        let out = self.apply_dsd(ctx, pe_idx, tmpl.kind, &tmpl.dst, a, b, scalar, n, tmpl.vec)?;
 
         if let Some(out_words) = out {
             let out_color = match &tmpl.dst {
@@ -973,14 +1549,12 @@ impl Simulator {
             // word i is processed → out flow starts right behind the
             // in flow.
             let earliest = (c.issue_time + 1).max(proc_done.saturating_sub(n as u64) + 1);
-            self.send_flow(pe_idx, out_color, Rc::new(out_words), earliest)?;
+            self.send_flow(ctx, pe_idx, out_color, Arc::new(out_words), earliest)?;
         }
 
         if tmpl.actions != ACTIONS_EMPTY {
-            self.schedule(
-                proc_done,
-                EventKind::Complete { pe: pe_idx as u32, actions: tmpl.actions },
-            );
+            let gpe = self.pes[pe_idx].gix;
+            self.schedule(proc_done, EventKind::Complete { pe: gpe, actions: tmpl.actions });
         }
         let pe = &mut self.pes[pe_idx];
         pe.last_activity = pe.last_activity.max(proc_done);
@@ -991,9 +1565,9 @@ impl Simulator {
     // Interpreter
     // ------------------------------------------------------------------
 
-    fn elem_cycles(&self, ty: Dtype, n: u64) -> u64 {
+    fn elem_cycles(&self, ctx: &Ctx<'_>, ty: Dtype, n: u64) -> u64 {
         if ty.is_16bit() {
-            n.div_ceil(self.cfg.simd16_width)
+            n.div_ceil(ctx.cfg.simd16_width)
         } else {
             n
         }
@@ -1125,6 +1699,7 @@ impl Simulator {
     #[allow(clippy::too_many_arguments)]
     fn apply_dsd(
         &mut self,
+        ctx: &Ctx<'_>,
         pe_idx: usize,
         kind: DsdKind,
         dst: &DsdRef,
@@ -1149,7 +1724,7 @@ impl Simulator {
             DsdRef::Mem { .. } => Some(self.resolve_mem(pe_idx, dst)),
             _ => None,
         };
-        let vectorized = self.vec_enabled
+        let vectorized = ctx.vec_enabled
             && vec != VecOp::None
             && n > 0
             && self.apply_vec(pe_idx, kind, vec, &rdst, &mut out, &ra, &rb, scalar, n);
@@ -1208,27 +1783,26 @@ impl Simulator {
     ) -> bool {
         let mem_len = self.pes[pe_idx].mem.len();
         let span = |r: &RMem| Span { base: r.base, stride: r.stride };
-        // Memory sources must be f32 to enter the slice kernels; the
-        // static hint guarantees this, but re-checking is cheap and
-        // keeps admission self-contained.
-        let src_span = |o: &RVOp<'_>| -> Result<Option<Span>, ()> {
+        // Memory sources must match the kernel's dtype to enter the
+        // slice passes; the static hint guarantees this, but
+        // re-checking is cheap and keeps admission self-contained.
+        let src_span = |o: &RVOp<'_>, want: Dtype| -> Result<Option<Span>, ()> {
             match o {
-                RVOp::Mem(r) if r.ty != Dtype::F32 => Err(()),
+                RVOp::Mem(r) if r.ty != want => Err(()),
                 RVOp::Mem(r) => Ok(Some(span(r))),
                 _ => Ok(None),
             }
         };
-        let (Ok(sa), Ok(sb)) = (src_span(ra), src_span(rb)) else {
-            return false;
-        };
         match vec {
             VecOp::Map => {
+                let (fa, fb) = (src_span(ra, Dtype::F32), src_span(rb, Dtype::F32));
+                let (Ok(sa), Ok(sb)) = (fa, fb) else { return false };
                 let sd = match rdst {
                     Some(d) if d.ty != Dtype::F32 => return false,
                     Some(d) => Some(span(d)),
                     None => None,
                 };
-                if !vecop::admit_map(mem_len, sd, &[sa, sb], n) {
+                if !vecop::admit_map(mem_len, sd, &[sa, sb], n, ELEM) {
                     return false;
                 }
                 let mut va = std::mem::take(&mut self.scratch_a);
@@ -1247,7 +1821,35 @@ impl Simulator {
                 self.scratch_b = vb;
                 true
             }
+            VecOp::Map16 => {
+                // 16-bit integer elementwise pass (memory destinations
+                // only; the classifier never marks a fabric-out Map16).
+                if out.is_some() {
+                    return false;
+                }
+                let Some(d) = rdst else { return false };
+                if !matches!(d.ty, Dtype::I16 | Dtype::U16) {
+                    return false;
+                }
+                let (fa, fb) = (src_span(ra, d.ty), src_span(rb, d.ty));
+                let (Ok(sa), Ok(sb)) = (fa, fb) else { return false };
+                if !vecop::admit_map(mem_len, Some(span(d)), &[sa, sb], n, 2) {
+                    return false;
+                }
+                let mut va = std::mem::take(&mut self.scratch_a);
+                let mut vb = std::mem::take(&mut self.scratch_b);
+                self.gather16(pe_idx, ra, n, &mut va);
+                self.gather16(pe_idx, rb, n, &mut vb);
+                let base = d.base;
+                let dst = &mut self.pes[pe_idx].mem[base..base + 2 * n];
+                map_mem16_kernel(kind, dst, &va, &vb, scalar);
+                self.scratch_a = va;
+                self.scratch_b = vb;
+                true
+            }
             VecOp::Fold => {
+                let (fa, fb) = (src_span(ra, Dtype::F32), src_span(rb, Dtype::F32));
+                let (Ok(_), Ok(sb)) = (fa, fb) else { return false };
                 let Some(d) = rdst else { return false };
                 let RVOp::Mem(a0) = ra else { return false };
                 if d.ty != Dtype::F32 || d.stride != 0 || a0.base != d.base || a0.stride != 0 {
@@ -1282,6 +1884,35 @@ impl Simulator {
                         .chunks_exact(4)
                         .map(|c| f32::from_le_bytes(c.try_into().unwrap()) as f64),
                 );
+            }
+            RVOp::Nothing => buf.resize(n, 0.0),
+        }
+    }
+
+    /// 16-bit variant of [`ShardState::gather`]: materialize an
+    /// admitted i16/u16 source as the interpreter's f64 element
+    /// representation (sign- or zero-extended exactly like
+    /// `load_scalar` + `SVal::as_f`).
+    fn gather16(&self, pe_idx: usize, o: &RVOp<'_>, n: usize, buf: &mut Vec<f64>) {
+        buf.clear();
+        match o {
+            RVOp::Vals(v) => buf.extend_from_slice(&v[..n]),
+            RVOp::Mem(r) => {
+                let mem = &self.pes[pe_idx].mem;
+                let bytes = &mem[r.base..r.base + 2 * n];
+                if r.ty == Dtype::I16 {
+                    buf.extend(
+                        bytes
+                            .chunks_exact(2)
+                            .map(|c| i16::from_le_bytes(c.try_into().unwrap()) as f64),
+                    );
+                } else {
+                    buf.extend(
+                        bytes
+                            .chunks_exact(2)
+                            .map(|c| u16::from_le_bytes(c.try_into().unwrap()) as f64),
+                    );
+                }
             }
             RVOp::Nothing => buf.resize(n, 0.0),
         }
@@ -1341,33 +1972,39 @@ impl Simulator {
             .max(0) as usize
     }
 
-    fn exec_ops(&mut self, pe_idx: usize, ops: &[POp], clock: &mut u64) -> Result<(), SimError> {
+    fn exec_ops(
+        &mut self,
+        ctx: &Ctx<'_>,
+        pe_idx: usize,
+        ops: &[POp],
+        clock: &mut u64,
+    ) -> Result<(), SimError> {
         for op in ops {
             match op {
                 POp::SetReg { reg, val } => {
                     let v = self.eval(pe_idx, val);
                     self.pes[pe_idx].regs[*reg as usize] = v;
-                    *clock += self.cfg.scalar_op_cycles + val.cost();
+                    *clock += ctx.cfg.scalar_op_cycles + val.cost();
                 }
                 POp::Store { addr, ty, val } => {
                     let a = self.eval(pe_idx, addr).as_i() as usize;
                     let v = self.eval(pe_idx, val);
                     self.store_scalar(pe_idx, a, *ty, v);
                     self.metrics.mem_bytes += ty.size() as u64;
-                    *clock += self.cfg.scalar_op_cycles + addr.cost() + val.cost();
+                    *clock += ctx.cfg.scalar_op_cycles + addr.cost() + val.cost();
                 }
                 POp::Control(a) => {
-                    self.apply_paction(pe_idx, a);
-                    *clock += self.cfg.scalar_op_cycles;
+                    self.apply_paction(ctx, pe_idx, a);
+                    *clock += ctx.cfg.scalar_op_cycles;
                     // Activation becomes visible now; the post-task
                     // PeReady event will pick it up.
                 }
                 POp::If { cond, then_ops, else_ops } => {
-                    *clock += self.cfg.scalar_op_cycles + cond.cost();
+                    *clock += ctx.cfg.scalar_op_cycles + cond.cost();
                     if self.eval(pe_idx, cond).truthy() {
-                        self.exec_ops(pe_idx, then_ops, clock)?;
+                        self.exec_ops(ctx, pe_idx, then_ops, clock)?;
                     } else {
-                        self.exec_ops(pe_idx, else_ops, clock)?;
+                        self.exec_ops(ctx, pe_idx, else_ops, clock)?;
                     }
                 }
                 POp::For { reg, start, stop, step, body } => {
@@ -1375,11 +2012,11 @@ impl Simulator {
                     let e = self.eval(pe_idx, stop).as_i();
                     let st = self.eval(pe_idx, step).as_i().max(1);
                     let mut i = s;
-                    *clock += self.cfg.scalar_op_cycles;
+                    *clock += ctx.cfg.scalar_op_cycles;
                     while i < e {
                         self.pes[pe_idx].regs[*reg as usize] = SVal::I(i);
-                        self.exec_ops(pe_idx, body, clock)?;
-                        *clock += self.cfg.scalar_op_cycles; // inc + branch
+                        self.exec_ops(ctx, pe_idx, body, clock)?;
+                        *clock += ctx.cfg.scalar_op_cycles; // inc + branch
                         i += st;
                     }
                 }
@@ -1391,14 +2028,20 @@ impl Simulator {
                     let pe = &self.pes[pe_idx];
                     eprintln!("[{}] PE({},{}): {}", *clock, pe.x, pe.y, msg);
                 }
-                POp::Dsd(d) => self.exec_dsd(pe_idx, d, clock)?,
+                POp::Dsd(d) => self.exec_dsd(ctx, pe_idx, d, clock)?,
             }
         }
         Ok(())
     }
 
-    fn exec_dsd(&mut self, pe_idx: usize, op: &PDsd, clock: &mut u64) -> Result<(), SimError> {
-        *clock += self.cfg.dsd_issue_cycles;
+    fn exec_dsd(
+        &mut self,
+        ctx: &Ctx<'_>,
+        pe_idx: usize,
+        op: &PDsd,
+        clock: &mut u64,
+    ) -> Result<(), SimError> {
+        *clock += ctx.cfg.dsd_issue_cycles;
         let n = self.dsd_len(pe_idx, op);
         let fabout_dst = matches!(op.dst, DsdRef::FabOut { .. });
 
@@ -1417,7 +2060,7 @@ impl Simulator {
                     issue_time: *clock,
                 },
             );
-            self.try_satisfy(pe_idx, op.fab_slot)?;
+            self.try_satisfy(ctx, pe_idx, op.fab_slot)?;
             return Ok(());
         }
 
@@ -1429,24 +2072,26 @@ impl Simulator {
             let a = op.src0.as_ref().map(VOp::Mem).unwrap_or(VOp::Nothing);
             let b = op.src1.as_ref().map(VOp::Mem).unwrap_or(VOp::Nothing);
             let words = self
-                .apply_dsd(pe_idx, op.kind, &op.dst, a, b, scalar, n, op.vec)?
+                .apply_dsd(ctx, pe_idx, op.kind, &op.dst, a, b, scalar, n, op.vec)?
                 .expect("fabout dst produces words");
             let color = match &op.dst {
                 DsdRef::FabOut { color, .. } => *color,
                 _ => unreachable!(),
             };
-            let (_start, drain_end) = self.send_flow(pe_idx, color, Rc::new(words), *clock + 1)?;
+            let (_start, drain_end) =
+                self.send_flow(ctx, pe_idx, color, Arc::new(words), *clock + 1)?;
             if op.is_async {
                 if op.actions != ACTIONS_EMPTY {
+                    let gpe = self.pes[pe_idx].gix;
                     self.schedule(
                         drain_end,
-                        EventKind::Complete { pe: pe_idx as u32, actions: op.actions },
+                        EventKind::Complete { pe: gpe, actions: op.actions },
                     );
                 }
             } else {
                 // Synchronous send: spin until the buffer drains.
                 *clock = (*clock).max(drain_end);
-                self.apply_actions_id(pe_idx, op.actions);
+                self.apply_actions_id(ctx, pe_idx, op.actions);
             }
             let pe = &mut self.pes[pe_idx];
             pe.last_activity = pe.last_activity.max(drain_end);
@@ -1461,9 +2106,9 @@ impl Simulator {
         );
         let a = op.src0.as_ref().map(VOp::Mem).unwrap_or(VOp::Nothing);
         let b = op.src1.as_ref().map(VOp::Mem).unwrap_or(VOp::Nothing);
-        self.apply_dsd(pe_idx, op.kind, &op.dst, a, b, scalar, n, op.vec)?;
-        *clock += self.elem_cycles(ty, n as u64);
-        self.apply_actions_id(pe_idx, op.actions);
+        self.apply_dsd(ctx, pe_idx, op.kind, &op.dst, a, b, scalar, n, op.vec)?;
+        *clock += self.elem_cycles(ctx, ty, n as u64);
+        self.apply_actions_id(ctx, pe_idx, op.actions);
         Ok(())
     }
 }
@@ -1513,6 +2158,29 @@ fn map_out_kernel(kind: DsdKind, words: &mut Vec<u32>, a: &[f64], b: &[f64], sca
         DsdKind::Mov => run(words, a, b, |x, _| x),
         DsdKind::Fill => run(words, a, b, |_, _| scalar),
         DsdKind::FmaxOp => run(words, a, b, |x, y| x.max(y)),
+    }
+}
+
+/// Elementwise pass into a contiguous 16-bit integer memory
+/// destination. The interpreter computes every element in f64 and
+/// stores through `SVal::as_i` (a saturating f64→i64 cast) truncated
+/// to 16 bits; the kernel reproduces that exact conversion chain, so
+/// i16 and u16 destinations are bit-identical to the per-element path.
+fn map_mem16_kernel(kind: DsdKind, dst: &mut [u8], a: &[f64], b: &[f64], scalar: f64) {
+    fn run(dst: &mut [u8], a: &[f64], b: &[f64], f: impl Fn(f64, f64) -> f64) {
+        for ((o, x), y) in dst.chunks_exact_mut(2).zip(a).zip(b) {
+            o.copy_from_slice(&((f(*x, *y) as i64) as i16).to_le_bytes());
+        }
+    }
+    match kind {
+        DsdKind::Fadd => run(dst, a, b, |x, y| x + y),
+        DsdKind::Fsub => run(dst, a, b, |x, y| x - y),
+        DsdKind::Fmul => run(dst, a, b, |x, y| x * y),
+        DsdKind::Fmac => run(dst, a, b, |x, y| x + y * scalar),
+        DsdKind::Fscale => run(dst, a, b, |x, _| x * scalar),
+        DsdKind::Mov => run(dst, a, b, |x, _| x),
+        DsdKind::Fill => run(dst, a, b, |_, _| scalar),
+        DsdKind::FmaxOp => run(dst, a, b, |x, y| x.max(y)),
     }
 }
 
@@ -1674,11 +2342,9 @@ ty: Dtype::F32,
         assert_eq!(report.metrics.flops, 2 * k as u64);
     }
 
-    /// Two PEs: PE0 sends its array east, PE1 receives and accumulates.
-    #[test]
-    fn two_pe_send_receive() {
-        let k = 16u32;
-        let color = 1u8;
+    /// Two PEs: PE0 sends its array east, PE1 receives and accumulates
+    /// (shared by the send/receive, thread-equivalence and reset tests).
+    fn p2p_prog(k: u32, color: u8) -> MachineProgram {
         let sender = PeClass {
             name: "sender".into(),
             subgrids: vec![Subgrid::point(0, 0)],
@@ -1737,7 +2403,7 @@ ty: Dtype::F32,
             }],
             entry_tasks: vec![25],
         };
-        let prog = MachineProgram {
+        MachineProgram {
             name: "p2p".into(),
             classes: vec![sender, recv],
             routes: vec![
@@ -1788,20 +2454,66 @@ ty: Dtype::F32,
             ],
             colors_used: vec![color],
             ..Default::default()
-        };
-        let mut sim = Simulator::new(cfg(2, 1), prog).unwrap();
+        }
+    }
+
+    fn run_p2p(threads: usize) -> (RunReport, Vec<f32>) {
+        let k = 16u32;
+        let mut sim = Simulator::new(cfg(2, 1), p2p_prog(k, 1)).unwrap();
+        sim.set_threads(threads);
         let a: Vec<f32> = (0..k).map(|i| i as f32).collect();
         let acc0: Vec<f32> = vec![100.0; k as usize];
         sim.set_input("a", &a).unwrap();
         sim.set_input("acc0", &acc0).unwrap();
         let report = sim.run().unwrap();
         let out = sim.get_output("acc").unwrap();
+        (report, out)
+    }
+
+    #[test]
+    fn two_pe_send_receive() {
+        let k = 16u32;
+        let (report, out) = run_p2p(1);
         let expect: Vec<f32> = (0..k).map(|i| 100.0 + i as f32).collect();
         assert_eq!(out, expect);
         assert_eq!(report.metrics.flows, 1);
         assert_eq!(report.metrics.wavelets, k as u64);
         // Pipelined: runtime ~ K + overheads, far less than 2K.
         assert!(report.cycles < 2 * k as u64 + 40, "cycles = {}", report.cycles);
+    }
+
+    /// The epoch-parallel engine (≥ 2 threads forces the sharded path:
+    /// sender and receiver are distinct link-sharing islands) must be
+    /// bit-identical to the classic single-queue loop.
+    #[test]
+    fn parallel_threads_bit_identical() {
+        let (seq_report, seq_out) = run_p2p(1);
+        for threads in [2, 4, 8] {
+            let (par_report, par_out) = run_p2p(threads);
+            assert_eq!(par_report, seq_report, "threads={threads}: RunReport diverged");
+            assert_eq!(par_out, seq_out, "threads={threads}: outputs diverged");
+        }
+    }
+
+    /// `Simulator::reset` re-arms one allocation for another run with
+    /// identical results (the bench-sweep reuse lever).
+    #[test]
+    fn reset_reruns_bit_identical() {
+        let k = 16u32;
+        let mut sim = Simulator::new(cfg(2, 1), p2p_prog(k, 1)).unwrap();
+        sim.set_threads(1);
+        let a: Vec<f32> = (0..k).map(|i| i as f32).collect();
+        let acc0: Vec<f32> = vec![100.0; k as usize];
+        sim.set_input("a", &a).unwrap();
+        sim.set_input("acc0", &acc0).unwrap();
+        let first = sim.run().unwrap();
+        let first_out = sim.get_output("acc").unwrap();
+        // Staged inputs survive reset; everything else is pristine.
+        sim.reset();
+        let second = sim.run().unwrap();
+        let second_out = sim.get_output("acc").unwrap();
+        assert_eq!(first, second, "reset run diverged from the first run");
+        assert_eq!(first_out, second_out);
     }
 
     /// Deadlock detection: receiver waits for data nobody sends.
@@ -2025,6 +2737,103 @@ ty: Dtype::F32,
         sim.set_input("a", &[1.0, 2.0, 3.0, 4.0, 5.0]).unwrap();
         sim.run().unwrap();
         assert_eq!(sim.get_output("sum").unwrap(), vec![15.0]);
+    }
+
+    /// The 16-bit integer slice kernel must be bit-identical to the
+    /// per-element interpreter (i16 Fadd over contiguous operands).
+    #[test]
+    fn map16_slice_kernel_equivalent() {
+        let k = 8u32;
+        let prog = || {
+            let class = PeClass {
+                name: "only".into(),
+                subgrids: vec![Subgrid::point(0, 0)],
+                fields: vec![
+                    FieldAlloc {
+                        name: "in".into(),
+                        addr: 0,
+                        len: k,
+                        ty: Dtype::I16,
+                        is_extern: true,
+                    },
+                    FieldAlloc {
+                        name: "out".into(),
+                        addr: 2 * k,
+                        len: k,
+                        ty: Dtype::I16,
+                        is_extern: true,
+                    },
+                ],
+                mem_size: 4 * k,
+                tasks: vec![TaskDef {
+                    name: "main".into(),
+                    hw_id: 24,
+                    kind: TaskKind::Local,
+                    initially_active: false,
+                    initially_blocked: false,
+                    body: vec![
+                        MOp::Dsd(DsdOp {
+                            kind: DsdKind::Fadd,
+                            dst: DsdRef::mem(2 * k, SExpr::imm(k as i64), Dtype::I16),
+                            src0: Some(DsdRef::mem(0, SExpr::imm(k as i64), Dtype::I16)),
+                            src1: Some(DsdRef::mem(0, SExpr::imm(k as i64), Dtype::I16)),
+                            scalar: None,
+                            is_async: false,
+                            on_complete: vec![],
+                        }),
+                        MOp::Halt,
+                    ],
+                }],
+                entry_tasks: vec![24],
+            };
+            MachineProgram {
+                name: "double16".into(),
+                classes: vec![class],
+                io: vec![
+                    IoBinding {
+                        arg: "in".into(),
+                        field: "in".into(),
+                        dir: IoDir::In,
+                        subgrid: Subgrid::point(0, 0),
+                        elems_per_pe: k,
+                        total_ports: 1,
+                        port_map: PortMap::default(),
+                        ty: Dtype::I16,
+                    },
+                    IoBinding {
+                        arg: "out".into(),
+                        field: "out".into(),
+                        dir: IoDir::Out,
+                        subgrid: Subgrid::point(0, 0),
+                        elems_per_pe: k,
+                        total_ports: 1,
+                        port_map: PortMap::default(),
+                        ty: Dtype::I16,
+                    },
+                ],
+                ..Default::default()
+            }
+        };
+        // Values incl. negatives: stored as 16-bit two's complement.
+        let input: Vec<u32> = (0..k).map(|i| (i as i16 - 3) as u16 as u32).collect();
+        let run = |vectorize: bool| -> (RunReport, Vec<u32>, u64) {
+            let mut sim = Simulator::new(cfg(1, 1), prog()).unwrap();
+            sim.set_threads(1);
+            sim.set_vectorize(vectorize);
+            sim.set_input_words("in", input.clone()).unwrap();
+            let report = sim.run().unwrap();
+            let out = sim.get_output_words("out").unwrap();
+            (report, out, sim.vec_ops_executed())
+        };
+        let (vec_report, vec_out, vec_ops) = run(true);
+        let (int_report, int_out, int_ops) = run(false);
+        assert!(vec_ops > 0, "Map16 slice kernel never engaged");
+        assert_eq!(int_ops, 0);
+        assert_eq!(vec_report, int_report, "16-bit engines diverged in report");
+        assert_eq!(vec_out, int_out, "16-bit engines diverged in memory");
+        let expect: Vec<u32> =
+            (0..k).map(|i| (2 * (i as i16 - 3)) as u16 as u32).collect();
+        assert_eq!(vec_out, expect);
     }
 
     #[test]

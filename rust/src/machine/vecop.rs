@@ -16,8 +16,11 @@
 //! 1. **Static** ([`classify_vec`], plan time): all operands must be
 //!    memory-resident `f32` descriptors with element stride 1 (or the
 //!    fold shape: a stride-0 destination re-read as `src0`), fabric-in
-//!    value streams, or absent. Mixed dtypes, non-unit strides and any
-//!    other shape fall back to the interpreter.
+//!    value streams, or absent. Contiguous *16-bit integer* (`i16` /
+//!    `u16`) operand sets of one uniform dtype get their own verdict
+//!    ([`VecOp::Map16`]) and monomorphized kernel. Mixed dtypes,
+//!    non-unit strides, `f16`, and any other shape fall back to the
+//!    interpreter.
 //! 2. **Dynamic** ([`admit_map`] / [`admit_fold`], issue time): offsets
 //!    are runtime expressions, so the resolved byte spans are checked
 //!    for bounds and for overlap between the destination and every
@@ -42,6 +45,12 @@ pub enum VecOp {
     /// Elementwise pass: contiguous f32 destination (memory or fabric
     /// out) from contiguous f32 / fabric-in sources.
     Map,
+    /// Elementwise pass over contiguous 16-bit integer (`i16`/`u16`)
+    /// memory operands of one uniform dtype (fabric-in sources are
+    /// stream-shaped and allowed). Executed by a second monomorphized
+    /// kernel that replicates the interpreter's load → f64 → truncate
+    /// store arithmetic exactly.
+    Map16,
     /// Scalar-fold pass: stride-0 f32 destination accumulated through
     /// `src0` aliasing it (the backend's scalar-reduction idiom).
     Fold,
@@ -49,6 +58,21 @@ pub enum VecOp {
 
 fn contiguous_f32(r: &DsdRef) -> bool {
     matches!(r, DsdRef::Mem { stride: 1, ty: Dtype::F32, .. })
+}
+
+fn contiguous_16(r: &DsdRef, want: Dtype) -> bool {
+    matches!(r, DsdRef::Mem { stride: 1, ty, .. } if *ty == want)
+}
+
+/// A source operand admissible for the 16-bit slice kernel: absent, a
+/// fabric-in word stream, or contiguous memory of exactly `want`.
+fn src_ok_16(s: &Option<DsdRef>, want: Dtype) -> bool {
+    match s {
+        None => true,
+        Some(DsdRef::FabIn { .. }) => true,
+        Some(r @ DsdRef::Mem { .. }) => contiguous_16(r, want),
+        Some(DsdRef::FabOut { .. }) => false,
+    }
 }
 
 /// A source operand admissible for slice execution: absent, a fabric-in
@@ -73,6 +97,13 @@ pub fn classify_vec(dst: &DsdRef, src0: &Option<DsdRef>, src1: &Option<DsdRef>) 
         DsdRef::FabOut { .. } if src_ok(src0) && src_ok(src1) => VecOp::Map,
         DsdRef::Mem { stride: 1, ty: Dtype::F32, .. } if src_ok(src0) && src_ok(src1) => {
             VecOp::Map
+        }
+        DsdRef::Mem { stride: 1, ty, .. }
+            if matches!(ty, Dtype::I16 | Dtype::U16)
+                && src_ok_16(src0, *ty)
+                && src_ok_16(src1, *ty) =>
+        {
+            VecOp::Map16
         }
         DsdRef::Mem { base: bd, offset: od, stride: 0, ty: Dtype::F32, .. } => {
             // Fold requires src0 to be *the same cell* as the
@@ -102,16 +133,17 @@ pub struct Span {
     pub stride: isize,
 }
 
-/// The byte interval `[lo, hi)` touched by `n` elements of a span, or
-/// `None` when degenerate (n = 0, or address arithmetic leaves usize).
-fn interval(s: Span, n: usize) -> Option<(usize, usize)> {
+/// The byte interval `[lo, hi)` touched by `n` elements of `esz` bytes
+/// each, or `None` when degenerate (n = 0, or address arithmetic
+/// leaves usize).
+fn interval(s: Span, n: usize, esz: usize) -> Option<(usize, usize)> {
     if n == 0 {
         return None;
     }
     let base = i64::try_from(s.base).ok()?;
     let last = base + (n as i64 - 1) * s.stride as i64;
     let lo = base.min(last);
-    let hi = base.max(last) + ELEM as i64;
+    let hi = base.max(last) + esz as i64;
     if lo < 0 {
         return None;
     }
@@ -119,43 +151,51 @@ fn interval(s: Span, n: usize) -> Option<(usize, usize)> {
 }
 
 /// Conservative byte-interval overlap test between `na` elements of `a`
-/// and `nb` elements of `b`. Degenerate spans count as overlapping, so
-/// callers reject them.
-pub fn overlaps(a: Span, na: usize, b: Span, nb: usize) -> bool {
-    match (interval(a, na), interval(b, nb)) {
+/// and `nb` elements of `b`, both `esz` bytes per element. Degenerate
+/// spans count as overlapping, so callers reject them.
+pub fn overlaps(a: Span, na: usize, b: Span, nb: usize, esz: usize) -> bool {
+    match (interval(a, na, esz), interval(b, nb, esz)) {
         (Some((al, ah)), Some((bl, bh))) => al < bh && bl < ah,
         _ => true,
     }
 }
 
-fn in_bounds(s: Span, n: usize, mem_len: usize) -> bool {
-    matches!(interval(s, n), Some((_, hi)) if hi <= mem_len)
+fn in_bounds(s: Span, n: usize, esz: usize, mem_len: usize) -> bool {
+    matches!(interval(s, n, esz), Some((_, hi)) if hi <= mem_len)
 }
 
-/// Runtime admission for a [`VecOp::Map`] operation over resolved
-/// spans. `dst` is `None` for fabric-out destinations (the output words
-/// live in a separate buffer and cannot alias PE memory); `srcs`
-/// entries are `None` for absent / fabric-in operands.
+/// Runtime admission for a [`VecOp::Map`] / [`VecOp::Map16`] operation
+/// over resolved spans; `esz` is the element size every span shares (4
+/// for f32, 2 for the 16-bit integer kernel). `dst` is `None` for
+/// fabric-out destinations (the output words live in a separate buffer
+/// and cannot alias PE memory); `srcs` entries are `None` for absent /
+/// fabric-in operands.
 ///
-/// Admits only when every memory span is contiguous (`stride == 4`),
+/// Admits only when every memory span is contiguous (`stride == esz`),
 /// fully inside `mem_len` bytes, and no source overlaps the
 /// destination. Never admits an aliased or overlapping pair — those
 /// take the per-element path.
-pub fn admit_map(mem_len: usize, dst: Option<Span>, srcs: &[Option<Span>], n: usize) -> bool {
+pub fn admit_map(
+    mem_len: usize,
+    dst: Option<Span>,
+    srcs: &[Option<Span>],
+    n: usize,
+    esz: usize,
+) -> bool {
     if n == 0 {
         return false;
     }
     if let Some(d) = dst {
-        if d.stride != ELEM as isize || !in_bounds(d, n, mem_len) {
+        if d.stride != esz as isize || !in_bounds(d, n, esz, mem_len) {
             return false;
         }
     }
     for s in srcs.iter().flatten() {
-        if s.stride != ELEM as isize || !in_bounds(*s, n, mem_len) {
+        if s.stride != esz as isize || !in_bounds(*s, n, esz, mem_len) {
             return false;
         }
         if let Some(d) = dst {
-            if overlaps(d, n, *s, n) {
+            if overlaps(d, n, *s, n, esz) {
                 return false;
             }
         }
@@ -167,14 +207,14 @@ pub fn admit_map(mem_len: usize, dst: Option<Span>, srcs: &[Option<Span>], n: us
 /// in-bounds f32 cell (`acc.stride == 0`), and the streamed source (if
 /// memory-resident) is contiguous, in bounds, and disjoint from it.
 pub fn admit_fold(mem_len: usize, acc: Span, src: Option<Span>, n: usize) -> bool {
-    if n == 0 || acc.stride != 0 || !in_bounds(acc, 1, mem_len) {
+    if n == 0 || acc.stride != 0 || !in_bounds(acc, 1, ELEM, mem_len) {
         return false;
     }
     if let Some(s) = src {
-        if s.stride != ELEM as isize || !in_bounds(s, n, mem_len) {
+        if s.stride != ELEM as isize || !in_bounds(s, n, ELEM, mem_len) {
             return false;
         }
-        if overlaps(acc, 1, s, n) {
+        if overlaps(acc, 1, s, n, ELEM) {
             return false;
         }
     }
@@ -224,18 +264,51 @@ mod tests {
     fn admit_map_rejects_overlap_and_oob() {
         let d = Span { base: 0, stride: 4 };
         let s = Span { base: 16, stride: 4 };
-        assert!(admit_map(1024, Some(d), &[Some(s), None], 4));
+        assert!(admit_map(1024, Some(d), &[Some(s), None], 4, ELEM));
         // dst [0,16) vs src [12, 28): one shared element word.
-        assert!(!admit_map(1024, Some(d), &[Some(Span { base: 12, stride: 4 })], 4));
+        assert!(!admit_map(1024, Some(d), &[Some(Span { base: 12, stride: 4 })], 4, ELEM));
         // Exact alias.
-        assert!(!admit_map(1024, Some(d), &[Some(d)], 4));
+        assert!(!admit_map(1024, Some(d), &[Some(d)], 4, ELEM));
         // Out of bounds.
-        assert!(!admit_map(24, Some(d), &[Some(s)], 4));
+        assert!(!admit_map(24, Some(d), &[Some(s)], 4, ELEM));
         // Fabric-out dst: only sources constrain admission.
-        assert!(admit_map(32, None, &[Some(s), None], 4));
-        assert!(!admit_map(16, None, &[Some(s)], 4));
+        assert!(admit_map(32, None, &[Some(s), None], 4, ELEM));
+        assert!(!admit_map(16, None, &[Some(s)], 4, ELEM));
         // n = 0 falls back (the interpreter no-ops it).
-        assert!(!admit_map(1024, Some(d), &[], 0));
+        assert!(!admit_map(1024, Some(d), &[], 0, ELEM));
+    }
+
+    #[test]
+    fn classify_16bit_int_map() {
+        let di = mem(0, 0, 1, Dtype::I16);
+        let du = mem(64, 0, 1, Dtype::U16);
+        assert_eq!(classify_vec(&di, &Some(mem(64, 0, 1, Dtype::I16)), &None), VecOp::Map16);
+        assert_eq!(classify_vec(&du, &Some(mem(128, 0, 1, Dtype::U16)), &None), VecOp::Map16);
+        // No sources (Fill) is a valid 16-bit map shape.
+        assert_eq!(classify_vec(&di, &None, &None), VecOp::Map16);
+        // Fabric-in sources are stream-shaped and allowed.
+        let fab = Some(DsdRef::FabIn { color: 1, len: SExpr::imm(8), ty: Dtype::I16 });
+        assert_eq!(classify_vec(&di, &fab, &None), VecOp::Map16);
+        // Mixed 16-bit integer dtypes (sign extension differs): fall back.
+        assert_eq!(classify_vec(&di, &Some(mem(64, 0, 1, Dtype::U16)), &None), VecOp::None);
+        // f16 is a float conversion, not an integer move: fall back.
+        assert_eq!(classify_vec(&mem(0, 0, 1, Dtype::F16), &None, &None), VecOp::None);
+        // Strided 16-bit source: fall back.
+        assert_eq!(classify_vec(&di, &Some(mem(64, 0, 2, Dtype::I16)), &None), VecOp::None);
+    }
+
+    #[test]
+    fn admit_map_16bit_element_size() {
+        let d = Span { base: 0, stride: 2 };
+        let s = Span { base: 8, stride: 2 };
+        assert!(admit_map(1024, Some(d), &[Some(s), None], 4, 2));
+        // dst [0,8) vs src [6,14): one shared halfword.
+        assert!(!admit_map(1024, Some(d), &[Some(Span { base: 6, stride: 2 })], 4, 2));
+        // A 4-byte stride is not contiguous for 2-byte elements.
+        assert!(!admit_map(1024, Some(d), &[Some(Span { base: 8, stride: 4 })], 4, 2));
+        // Bounds are measured in halfwords: 4 elems at base 8 end at 16.
+        assert!(admit_map(16, None, &[Some(s)], 4, 2));
+        assert!(!admit_map(15, None, &[Some(s)], 4, 2));
     }
 
     #[test]
@@ -256,8 +329,9 @@ mod tests {
             Span { base: 0, stride: 4 },
             4,
             Span { base: 16, stride: 4 },
-            4
+            4,
+            ELEM
         ));
-        assert!(overlaps(Span { base: 0, stride: 4 }, 5, Span { base: 16, stride: 4 }, 4));
+        assert!(overlaps(Span { base: 0, stride: 4 }, 5, Span { base: 16, stride: 4 }, 4, ELEM));
     }
 }

@@ -305,13 +305,17 @@ fn print_help() {
          \x20 spada check <kernel|file.spada> [--bind ...] [--grid WxH]\n\
          \x20 spada run <kernel> [--bind ...] [--grid WxH]\n\
          \x20 spada bench [--exp table2|fig4|fig5|fig6|fig7|fig8|fig9|sim|verify|all] [--quick]\n\
-         \x20   (--exp sim sweeps the six kernels 4x4..128x128 and writes BENCH_sim.json)\n\
+         \x20   (--exp sim sweeps the six kernels 4x4..128x128 at 1 and 4 worker\n\
+         \x20    threads and writes BENCH_sim.json; rows record threads + host parallelism)\n\
          \x20 spada bench --compare BASELINE.json [--current CURRENT.json] [--threshold 0.25]\n\
          \x20   (regression gate: fails if any kernel's events/s drops more than the\n\
          \x20    threshold vs the baseline; without --current it runs the sim sweep first)\n\
          \x20 spada loc\n\
          \n\
          Ablation flags: --no-fusion --no-recycling --no-copy-elim --no-check\n\
+         Env vars: SPADA_THREADS=N  simulator worker threads (default: host parallelism;\n\
+         \x20                       1 = classic single-threaded loop, results bit-identical)\n\
+         \x20         SPADA_NO_VEC=1  force the per-element DSD interpreter (bit-identical)\n\
          Kernels: {}",
         kernels::sources().iter().map(|(n, _)| *n).collect::<Vec<_>>().join(", ")
     );

@@ -8,10 +8,10 @@
 //! output argument's raw words are equal. `SPADA_NO_VEC=1` is the
 //! environment-variable form of the same switch.
 
+use spada::harness::common::{output_words, stage_random_inputs};
 use spada::kernels::{self, CompiledKernel};
-use spada::machine::{IoDir, MachineConfig, RunReport};
+use spada::machine::{MachineConfig, RunReport};
 use spada::passes::Options;
-use spada::util::SplitMix64;
 use std::sync::{Mutex, MutexGuard, OnceLock};
 
 /// Every test in this binary serializes on this lock: the env-var test
@@ -39,26 +39,9 @@ fn run_mode(ck: &CompiledKernel, vectorize: bool) -> (RunReport, Vec<(String, Ve
     sim.set_vectorize(vectorize);
     // Fill every input binding with the same deterministic noise in
     // both modes (binding order is deterministic).
-    let inputs: Vec<(String, usize)> = sim
-        .program()
-        .io
-        .iter()
-        .filter(|b| b.dir == IoDir::In)
-        .map(|b| (b.arg.clone(), (b.total_ports * b.elems_per_pe) as usize))
-        .collect();
-    let mut rng = SplitMix64::new(0xD5D);
-    for (arg, len) in inputs {
-        let data: Vec<f32> = (0..len).map(|_| rng.next_f32()).collect();
-        sim.set_input(&arg, &data).unwrap();
-    }
+    stage_random_inputs(&mut sim, 0xD5D);
     let report = sim.run().unwrap_or_else(|e| panic!("{}: {e}", ck.machine.name));
-    let mut outs: Vec<(String, Vec<u32>)> = vec![];
-    for b in sim.program().io.iter().filter(|b| b.dir == IoDir::Out) {
-        if outs.iter().any(|(a, _)| a == &b.arg) {
-            continue;
-        }
-        outs.push((b.arg.clone(), sim.get_output_words(&b.arg).unwrap()));
-    }
+    let outs = output_words(&sim);
     (report, outs, sim.vec_ops_executed())
 }
 

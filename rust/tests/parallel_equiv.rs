@@ -1,0 +1,157 @@
+//! Cross-thread-count equivalence: the epoch-parallel simulator claims
+//! bit-identical behaviour at every worker count.
+//!
+//! The engine (see `machine/sim.rs`) decomposes the fabric into
+//! link-sharing islands folded onto a fixed shard count, steps shards
+//! concurrently inside conservative lookahead epochs, and merges
+//! cross-shard flow arrivals deterministically at each barrier. This
+//! suite runs every library kernel over identical inputs at threads ∈
+//! {1, 2, 4, 8} — 1 is the classic single-queue loop, ≥ 2 the sharded
+//! engine — and asserts the full `RunReport` (cycles, every metric
+//! counter, resource usage) and every output argument's raw words are
+//! equal across all counts.
+
+use spada::harness::common::{output_words, stage_random_inputs};
+use spada::kernels::{self, CompiledKernel};
+use spada::machine::{MachineConfig, RunReport};
+use spada::passes::Options;
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+/// Thread counts every kernel is exercised at.
+const THREADS: [usize; 4] = [1, 2, 4, 8];
+
+/// Tests constructing simulators serialize against the env-var test:
+/// `Simulator` construction reads `SPADA_THREADS` via `std::env::var`,
+/// and concurrent setenv/getenv is a data race on glibc.
+fn env_lock() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(())).lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Compile one library kernel at a modest grid.
+fn compile(name: &str, binds: &[(&str, i64)], w: i64, h: i64) -> CompiledKernel {
+    let cfg = MachineConfig::with_grid(w, h);
+    kernels::compile(name, binds, &cfg, &Options::default())
+        .unwrap_or_else(|e| panic!("{name}: {e:#}"))
+}
+
+/// Run a fresh simulator over deterministic inputs at a given worker
+/// count, returning the report and all raw output words.
+fn run_at(ck: &CompiledKernel, threads: usize) -> (RunReport, Vec<(String, Vec<u32>)>) {
+    let mut sim = ck.simulator().unwrap();
+    sim.set_threads(threads);
+    stage_random_inputs(&mut sim, 0xEB0C);
+    let report =
+        sim.run().unwrap_or_else(|e| panic!("{} threads={threads}: {e}", ck.machine.name));
+    let outs = output_words(&sim);
+    (report, outs)
+}
+
+fn assert_equivalent(name: &str, ck: &CompiledKernel) {
+    let _guard = env_lock();
+    let (base_report, base_outs) = run_at(ck, THREADS[0]);
+    for &threads in &THREADS[1..] {
+        let (report, outs) = run_at(ck, threads);
+        assert_eq!(
+            report, base_report,
+            "{name}: RunReport diverged between threads=1 and threads={threads}"
+        );
+        assert_eq!(
+            outs.len(),
+            base_outs.len(),
+            "{name}: output binding count diverged at threads={threads}"
+        );
+        for ((ba, bw), (ca, cw)) in base_outs.iter().zip(&outs) {
+            assert_eq!(ba, ca, "{name}: output order diverged at threads={threads}");
+            assert_eq!(
+                bw, cw,
+                "{name}: output {ba} not bit-identical at threads={threads}"
+            );
+        }
+    }
+}
+
+#[test]
+fn chain_reduce_threads_equivalent() {
+    assert_equivalent(
+        "chain_reduce",
+        &compile("chain_reduce", &[("K", 24), ("N", 9)], 9, 1),
+    );
+}
+
+#[test]
+fn broadcast_threads_equivalent() {
+    assert_equivalent("broadcast", &compile("broadcast", &[("K", 16), ("N", 8)], 8, 1));
+}
+
+#[test]
+fn tree_reduce_threads_equivalent() {
+    assert_equivalent(
+        "tree_reduce",
+        &compile("tree_reduce", &[("K", 8), ("NX", 4), ("NY", 4)], 4, 4),
+    );
+}
+
+#[test]
+fn two_phase_reduce_threads_equivalent() {
+    assert_equivalent(
+        "two_phase_reduce",
+        &compile("two_phase_reduce", &[("K", 8), ("NX", 4), ("NY", 4)], 4, 4),
+    );
+}
+
+#[test]
+fn gemv_threads_equivalent() {
+    assert_equivalent(
+        "gemv",
+        &compile("gemv", &[("M", 16), ("N", 16), ("NX", 4), ("NY", 4)], 4, 4),
+    );
+}
+
+#[test]
+fn gemv_tree_threads_equivalent() {
+    assert_equivalent(
+        "gemv_tree",
+        &compile("gemv_tree", &[("M", 16), ("N", 16), ("NX", 4), ("NY", 4)], 4, 4),
+    );
+}
+
+/// The batched DSD engine and the parallel engine compose: interpreter
+/// runs must also be thread-count-invariant (and agree with the
+/// vectorized single-thread baseline, which dsd_batch.rs pins).
+#[test]
+fn interpreter_mode_threads_equivalent() {
+    let ck = compile("tree_reduce", &[("K", 8), ("NX", 4), ("NY", 4)], 4, 4);
+    let _guard = env_lock();
+    let run = |threads: usize| {
+        let mut sim = ck.simulator().unwrap();
+        sim.set_threads(threads);
+        sim.set_vectorize(false);
+        stage_random_inputs(&mut sim, 0xEB0C);
+        let report = sim.run().unwrap();
+        (report, output_words(&sim))
+    };
+    let (r1, o1) = run(1);
+    for threads in [2, 8] {
+        let (r, o) = run(threads);
+        assert_eq!(r, r1, "interpreter mode diverged at threads={threads}");
+        assert_eq!(o, o1);
+    }
+}
+
+/// `SPADA_THREADS` in the environment seeds the default worker count
+/// at construction; `set_threads` overrides it per simulator.
+#[test]
+fn env_var_sets_default_thread_count() {
+    let ck = compile("broadcast", &[("K", 8), ("N", 4)], 4, 1);
+    let _guard = env_lock();
+    std::env::set_var("SPADA_THREADS", "3");
+    let sim = ck.simulator().unwrap();
+    std::env::remove_var("SPADA_THREADS");
+    assert_eq!(sim.threads(), 3, "SPADA_THREADS must seed the default");
+    let mut sim2 = ck.simulator().unwrap();
+    sim2.set_threads(7);
+    assert_eq!(sim2.threads(), 7);
+    sim2.set_threads(0);
+    assert_eq!(sim2.threads(), 1, "thread counts clamp to >= 1");
+}

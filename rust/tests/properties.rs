@@ -527,6 +527,49 @@ fn prop_vec_classifier_never_admits_overlap() {
             let s1_ref = src1.as_ref().map(|d| mk(d, n));
             let verdict = classify_vec(&d_ref, &s0_ref, &s1_ref);
             let (db, ds, desz) = resolved(dst);
+            // Shared Map/Map16 oracle: admission at element size `esz`
+            // must keep every span inside memory and disjoint from the
+            // destination.
+            let check_map = |esz: usize| -> Result<(), String> {
+                if db < 0 {
+                    return Ok(()); // wrapped address: admission sees an OOB span
+                }
+                let d_span = Some(Span { base: db as usize, stride: ds as isize });
+                let mut spans = vec![];
+                for (s, sref) in [(src0, &s0_ref), (src1, &s1_ref)] {
+                    match sref {
+                        Some(DsdRef::Mem { .. }) => {
+                            let (sb, ss, _) = resolved(s.as_ref().unwrap());
+                            if sb < 0 {
+                                return Ok(());
+                            }
+                            spans.push(Some(Span { base: sb as usize, stride: ss as isize }));
+                        }
+                        _ => spans.push(None),
+                    }
+                }
+                if !admit_map(MEM_LEN, d_span, &spans, n, esz) {
+                    return Ok(()); // rejected: interpreter path
+                }
+                // Admitted: brute-force check bounds + disjointness.
+                let d_bytes = touched(db, ds, desz, n);
+                if d_bytes.iter().any(|(lo, hi)| *lo < 0 || *hi > MEM_LEN as i64) {
+                    return Err(format!("admitted dst leaves memory: {d_bytes:?}"));
+                }
+                for s in [src0.as_ref(), src1.as_ref()].into_iter().flatten() {
+                    let (sb, ss, sesz) = resolved(s);
+                    let s_bytes = touched(sb, ss, sesz, n);
+                    if intersects(&d_bytes, &s_bytes) {
+                        return Err(format!(
+                            "admitted overlapping pair: dst {dst:?} src {s:?} (n={n})"
+                        ));
+                    }
+                    if s_bytes.iter().any(|(lo, hi)| *lo < 0 || *hi > MEM_LEN as i64) {
+                        return Err(format!("admitted src leaves memory: {s:?}"));
+                    }
+                }
+                Ok(())
+            };
             match verdict {
                 VecOp::None => Ok(()), // interpreter path: always sound
                 VecOp::Map => {
@@ -534,44 +577,28 @@ fn prop_vec_classifier_never_admits_overlap() {
                     if dst.2 != 1 || ty_of(dst.3) != Dtype::F32 {
                         return Err(format!("Map with dst stride {} ty {:?}", dst.2, ty_of(dst.3)));
                     }
-                    if db < 0 {
-                        return Ok(()); // wrapped address: admission sees an OOB span
-                    }
-                    let d_span = Some(Span { base: db as usize, stride: ds as isize });
-                    let mut spans = vec![];
-                    for (s, sref) in [(src0, &s0_ref), (src1, &s1_ref)] {
-                        match sref {
-                            Some(DsdRef::Mem { .. }) => {
-                                let (sb, ss, _) = resolved(s.as_ref().unwrap());
-                                if sb < 0 {
-                                    return Ok(());
-                                }
-                                spans.push(Some(Span { base: sb as usize, stride: ss as isize }));
-                            }
-                            _ => spans.push(None),
-                        }
-                    }
-                    if !admit_map(MEM_LEN, d_span, &spans, n) {
-                        return Ok(()); // rejected: interpreter path
-                    }
-                    // Admitted: brute-force check bounds + disjointness.
-                    let d_bytes = touched(db, ds, desz, n);
-                    if d_bytes.iter().any(|(lo, hi)| *lo < 0 || *hi > MEM_LEN as i64) {
-                        return Err(format!("admitted dst leaves memory: {d_bytes:?}"));
+                    check_map(4)
+                }
+                VecOp::Map16 => {
+                    // Static stage: contiguous 16-bit integer dst, and
+                    // every memory source of exactly the same dtype.
+                    let dty = ty_of(dst.3);
+                    if dst.2 != 1 || !matches!(dty, Dtype::I16 | Dtype::U16) {
+                        return Err(format!(
+                            "Map16 with dst stride {} ty {dty:?}",
+                            dst.2
+                        ));
                     }
                     for s in [src0.as_ref(), src1.as_ref()].into_iter().flatten() {
-                        let (sb, ss, sesz) = resolved(s);
-                        let s_bytes = touched(sb, ss, sesz, n);
-                        if intersects(&d_bytes, &s_bytes) {
+                        if s.2 != 1 || ty_of(s.3) != dty {
                             return Err(format!(
-                                "admitted overlapping pair: dst {dst:?} src {s:?} (n={n})"
+                                "Map16 with src stride {} ty {:?} (dst {dty:?})",
+                                s.2,
+                                ty_of(s.3)
                             ));
                         }
-                        if s_bytes.iter().any(|(lo, hi)| *lo < 0 || *hi > MEM_LEN as i64) {
-                            return Err(format!("admitted src leaves memory: {s:?}"));
-                        }
                     }
-                    Ok(())
+                    check_map(2)
                 }
                 VecOp::Fold => {
                     // src0 must be the destination cell, exactly.
@@ -612,6 +639,87 @@ fn prop_vec_classifier_never_admits_overlap() {
                     Ok(())
                 }
             }
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// Epoch-parallel determinism
+// ---------------------------------------------------------------------
+
+/// Randomly drawn (kernel, size, input seed) programs must simulate
+/// bit-identically at every worker thread count: threads = 1 is the
+/// classic single-queue event loop, ≥ 2 the epoch-parallel sharded
+/// engine with deterministic barrier merges. Any divergence in the
+/// `RunReport` (cycles, every metric counter) or in raw output words
+/// falsifies the engine's conservative-lookahead argument.
+#[test]
+fn prop_random_programs_deterministic_across_threads() {
+    use spada::harness::common::{output_words, stage_random_inputs};
+    use spada::machine::RunReport;
+
+    const KERNELS: [&str; 6] =
+        ["chain_reduce", "broadcast", "tree_reduce", "two_phase_reduce", "gemv", "gemv_tree"];
+
+    fn run_at(
+        kernel: &str,
+        k: i64,
+        g: i64,
+        seed: u64,
+        threads: usize,
+    ) -> (RunReport, Vec<(String, Vec<u32>)>) {
+        let (binds, w, h) =
+            spada::harness::common::scaled_binds(kernel, g, k).expect("library kernel");
+        let cfg = MachineConfig::with_grid(w, h);
+        let ck = kernels::compile(kernel, &binds, &cfg, &Options::default())
+            .unwrap_or_else(|e| panic!("{kernel} g={g} k={k}: {e:#}"));
+        let mut sim = ck.simulator().unwrap();
+        sim.set_threads(threads);
+        stage_random_inputs(&mut sim, seed);
+        let report = sim
+            .run()
+            .unwrap_or_else(|e| panic!("{kernel} g={g} threads={threads}: {e}"));
+        let outs = output_words(&sim);
+        (report, outs)
+    }
+
+    run_prop(
+        "parallel-determinism",
+        0x9AD,
+        6,
+        |r| {
+            (
+                KERNELS[r.below(KERNELS.len() as u64) as usize],
+                1 + r.below(24) as i64, // K
+                3 + r.below(3) as i64,  // grid dimension
+                r.next_u64(),           // input seed
+            )
+        },
+        |(kernel, k, g, seed)| {
+            // Tree-shaped kernels instantiate on power-of-two grids.
+            let g = match *kernel {
+                "tree_reduce" | "gemv" | "gemv_tree" => {
+                    if *g <= 4 {
+                        4
+                    } else {
+                        8
+                    }
+                }
+                _ => *g,
+            };
+            let (base_report, base_outs) = run_at(kernel, *k, g, *seed, 1);
+            for threads in [2, 4, 8] {
+                let (report, outs) = run_at(kernel, *k, g, *seed, threads);
+                if report != base_report {
+                    return Err(format!(
+                        "RunReport diverged at threads={threads}: {report:?} vs {base_report:?}"
+                    ));
+                }
+                if outs != base_outs {
+                    return Err(format!("output words diverged at threads={threads}"));
+                }
+            }
+            Ok(())
         },
     );
 }
