@@ -1,0 +1,497 @@
+//! Static credit-sufficiency verification — the compile-time half of
+//! the finite-buffer model (the runtime half is
+//! [`crate::machine::flowctl`]).
+//!
+//! With a finite endpoint capacity configured
+//! ([`MachineConfig::endpoint_capacity_words`] / `SPADA_BUF_CAP`), a
+//! flow whose words are never consumed wedges in the fabric: the
+//! endpoint's credits are exhausted for good, the tail stalls across
+//! the route's link stages, and the run deadlocks where the unbounded
+//! machine would have completed. This pass bounds that statically,
+//! conservatively, over the same flow graph the deadlock checker uses:
+//!
+//! - **Certain wedges** (`Severity::Error`, always on): for every
+//!   delivered (PE, color) endpoint whose total delivered and consumed
+//!   word counts are both statically known (unconditional producers and
+//!   consumers, const-evaluable lengths and loop trip counts, no
+//!   per-wavelet data task), a leftover `delivered − consumed` larger
+//!   than the endpoint capacity can never drain — the exact condition
+//!   under which the simulator reports its runtime buffer deadlock, so
+//!   the two verdicts cross-reference each other.
+//! - **Advisory audit** (`spada check --buffers`): without a configured
+//!   capacity, any statically known leftover is reported as a sizing
+//!   warning (the words park in the endpoint buffer forever — legal
+//!   only on an unbounded fabric); with one, single bursts that exceed
+//!   the endpoint capacity *plus* the route's link-stage slack
+//!   (`links × link_buffer_words`) into an endpoint whose every
+//!   consumer is gated behind an activation are flagged as *potential
+//!   buffer-cycle deadlocks* — if the gate transitively depends on
+//!   traffic queued behind the burst, the fabric wedges even though
+//!   every word has a consumer.
+//!
+//! Everything unknown (conditional sends, dynamic lengths, data tasks,
+//! unbounded loops) is skipped, never guessed: the pass may miss a
+//! wedge but never invents one, matching the repository's
+//! "conservative verdicts only" checker contract.
+
+use super::flowgraph::{eval_const, ConsumeOp, FlowGraph};
+use super::{AnalysisReport, DiagKind, Diagnostic, Severity};
+use crate::machine::{MachineConfig, MachineProgram};
+
+/// Statically known words delivered/consumed at one endpoint; `None`
+/// when any contribution is unknown (conditional, dynamic, data task).
+fn known_total(pairs: &[(Option<i64>, Option<i64>)]) -> Option<i64> {
+    let mut total = 0i64;
+    for (len, trips) in pairs {
+        match (len, trips) {
+            (Some(l), Some(t)) => total += (*l).max(0) * (*t).max(0),
+            _ => return None,
+        }
+    }
+    Some(total)
+}
+
+/// Per-endpoint static accounting, gathered once per (PE, color).
+struct EndpointBound {
+    /// Total statically known delivered words (`None` = unknown).
+    delivered: Option<i64>,
+    /// Total statically known consumed words (`None` = unknown).
+    consumed: Option<i64>,
+    /// A data task drains this color wavelet by wavelet — consumption
+    /// is unbounded and eager.
+    consumes_all: bool,
+    /// Largest single statically known delivery burst, with the link
+    /// count of the route that carries it.
+    max_burst: Option<(i64, usize)>,
+    /// Every consuming task is gated behind an activation (not an
+    /// entry task, not initially active); `None` when nothing consumes.
+    all_consumers_gated: Option<bool>,
+    /// One gated consumer's class-qualified name, for the message.
+    gated_consumer: Option<String>,
+}
+
+/// How many times a (local) task's body runs, statically: `Some(0)`
+/// when nothing ever starts it, `Some(1)` when exactly its entry /
+/// initial activation does, `None` (unknown) when any `Activate`
+/// action targets it — a re-activated task reruns its consumes and
+/// produces arbitrarily often — or when any `Block` action or an
+/// initial block could stop it before it runs. The exact-count
+/// contract is what lets the certain-wedge check use one bound for
+/// both sides (delivered needs a lower bound, consumed an upper);
+/// everything uncertain degrades to unknown, which skips the endpoint
+/// rather than inventing a wedge. (Data tasks rerun per wavelet by
+/// construction and are handled separately via `consumes_all`.)
+fn runs_bound(
+    prog: &MachineProgram,
+    graph: &FlowGraph,
+    ci: usize,
+    m: &super::flowgraph::TaskModel,
+) -> Option<i64> {
+    use crate::machine::TaskActionKind;
+    let retargeted = graph.models[ci].iter().any(|om| {
+        om.actions.iter().any(|site| {
+            site.action.task == m.hw_id
+                && matches!(site.action.kind, TaskActionKind::Activate | TaskActionKind::Block)
+        })
+    });
+    if retargeted || m.initially_blocked {
+        return None;
+    }
+    let entry = prog.classes[ci].entry_tasks.contains(&m.hw_id);
+    if m.initially_active || entry {
+        Some(1)
+    } else {
+        Some(0)
+    }
+}
+
+fn bound_endpoint(
+    prog: &MachineProgram,
+    graph: &FlowGraph,
+    pi: usize,
+    color: u8,
+    flow_ixs: &[usize],
+) -> EndpointBound {
+    let (x, y, ci) = graph.pes[pi];
+
+    // Delivered side: every producer of every flow reaching here. A
+    // producer's contribution is len × trips × runs, each factor
+    // statically known or the whole endpoint degrades to unknown.
+    let mut deliveries: Vec<(Option<i64>, Option<i64>)> = vec![];
+    let mut max_burst: Option<(i64, usize)> = None;
+    for &fi in flow_ixs {
+        let flow = &graph.flows[fi];
+        // Link stages upstream of *this* destination = its hop depth
+        // on the traced path (a multicast tree's total link count
+        // would overstate the slack available to one endpoint).
+        let links = flow
+            .path
+            .as_ref()
+            .ok()
+            .and_then(|p| {
+                p.dests
+                    .iter()
+                    .find(|&&(dx, dy, _)| (dx, dy) == (x, y))
+                    .map(|&(_, _, depth)| depth as usize)
+            })
+            .unwrap_or(0);
+        for &(ppi, pti, poi) in &flow.producers {
+            let (px, py, pci) = graph.pes[ppi];
+            let pm = &graph.models[pci][pti];
+            let p = &pm.produces[poi];
+            // Dispatch-guard branches are walked as unconditional for
+            // the optimistic deadlock fixpoint, but sibling branches
+            // cannot be *summed* (each activation runs one) — exact
+            // counting degrades to unknown for them.
+            if pm.data_color.is_some() || p.conditional || p.dispatched {
+                deliveries.push((None, None));
+                continue;
+            }
+            let runs = runs_bound(prog, graph, pci, pm);
+            let len = eval_const(&p.len, px, py);
+            let trips = p
+                .trips
+                .as_ref()
+                .and_then(|t| eval_const(t, px, py))
+                .and_then(|t| runs.map(|r| t * r));
+            deliveries.push((len, trips));
+            // A producer that provably never runs sends no burst.
+            if runs == Some(0) {
+                continue;
+            }
+            if let Some(l) = len {
+                if max_burst.map(|(b, _)| l > b).unwrap_or(true) {
+                    max_burst = Some((l, links));
+                }
+            }
+        }
+    }
+
+    // Consumed side: every consume and data task at this PE's class,
+    // bounded the same way (a re-activatable consumer can drain more
+    // than one pass's worth, so its count is unknown — which skips the
+    // endpoint rather than inventing a wedge).
+    let mut consumes: Vec<(Option<i64>, Option<i64>)> = vec![];
+    let mut consumes_all = false;
+    let mut any_consumer = false;
+    let mut all_gated = true;
+    let mut gated_consumer = None;
+    for m in &graph.models[ci] {
+        let owns_color = m.data_color == Some(color)
+            || m.consumes.iter().any(|c: &ConsumeOp| c.color == color);
+        if !owns_color {
+            continue;
+        }
+        any_consumer = true;
+        if m.data_color == Some(color) {
+            consumes_all = true;
+        }
+        let runs = runs_bound(prog, graph, ci, m);
+        let entry = prog.classes[ci].entry_tasks.contains(&m.hw_id);
+        if m.initially_active || entry {
+            all_gated = false;
+        } else if gated_consumer.is_none() {
+            gated_consumer = Some(format!("{}.{}", prog.classes[ci].name, m.name));
+        }
+        for c in &m.consumes {
+            if c.color != color {
+                continue;
+            }
+            if c.conditional || c.dispatched {
+                consumes.push((None, None));
+                continue;
+            }
+            let len = eval_const(&c.len, x, y);
+            let trips = c
+                .trips
+                .as_ref()
+                .and_then(|t| eval_const(t, x, y))
+                .and_then(|t| runs.map(|r| t * r));
+            consumes.push((len, trips));
+        }
+    }
+
+    EndpointBound {
+        delivered: known_total(&deliveries),
+        consumed: known_total(&consumes),
+        consumes_all,
+        max_burst,
+        all_consumers_gated: if any_consumer { Some(all_gated) } else { None },
+        gated_consumer,
+    }
+}
+
+/// Run the credit-sufficiency checks over every delivered endpoint.
+/// `audit` adds the advisory findings (`spada check --buffers`); the
+/// certain-wedge errors are always on — but only fire when a finite
+/// capacity is actually configured, so the default unbounded pipeline
+/// reports nothing.
+pub fn check_credits(
+    prog: &MachineProgram,
+    cfg: &MachineConfig,
+    graph: &FlowGraph,
+    audit: bool,
+    report: &mut AnalysisReport,
+) {
+    let cap = cfg.endpoint_capacity_words;
+    if cap.is_none() && !audit {
+        return;
+    }
+    let link_slack = cfg.link_buffer_words.unwrap_or(0);
+
+    // Deterministic order: endpoints sorted by (PE, color).
+    let mut endpoints: Vec<(&(usize, u8), &Vec<usize>)> = graph.deliveries.iter().collect();
+    endpoints.sort_by_key(|(k, _)| **k);
+
+    for (&(pi, color), flow_ixs) in endpoints {
+        let (x, y, _) = graph.pes[pi];
+        let b = bound_endpoint(prog, graph, pi, color, flow_ixs);
+
+        // --- leftover words: the certain-wedge condition ---
+        if !b.consumes_all {
+            if let (Some(d), Some(c)) = (b.delivered, b.consumed) {
+                let leftover = d - c;
+                if leftover > 0 {
+                    match cap {
+                        Some(capw) if leftover as u64 > capw => {
+                            report.push(Diagnostic {
+                                kind: DiagKind::BufferDeadlock,
+                                severity: Severity::Error,
+                                pe: Some((x, y)),
+                                color: Some(color),
+                                task: None,
+                                message: format!(
+                                    "{d} words delivered but at most {c} consumed: the \
+                                     {leftover} leftover words exceed the endpoint capacity \
+                                     ({capw}); the flow's tail wedges in the fabric (the \
+                                     simulator reports a buffer deadlock here)"
+                                ),
+                            });
+                        }
+                        None if audit => {
+                            report.push(Diagnostic {
+                                kind: DiagKind::BufferDeadlock,
+                                severity: Severity::Warning,
+                                pe: Some((x, y)),
+                                color: Some(color),
+                                task: None,
+                                message: format!(
+                                    "{d} words delivered but at most {c} consumed: completes \
+                                     only with unbounded buffering — size \
+                                     endpoint_capacity_words >= {leftover} (SPADA_BUF_CAP) or \
+                                     drain the endpoint"
+                                ),
+                            });
+                        }
+                        _ => {} // fits in the configured buffer
+                    }
+                }
+            }
+        }
+
+        // --- gated-consumer bursts: the potential buffer-cycle ---
+        if audit && !b.consumes_all {
+            if let (Some(capw), Some((burst, links)), Some(true)) =
+                (cap, b.max_burst, b.all_consumers_gated)
+            {
+                let slack = links as u64 * link_slack;
+                if burst as u64 > capw + slack {
+                    let task = b.gated_consumer.clone();
+                    report.push(Diagnostic {
+                        kind: DiagKind::BufferDeadlock,
+                        severity: Severity::Warning,
+                        pe: Some((x, y)),
+                        color: Some(color),
+                        task,
+                        message: format!(
+                            "potential buffer-cycle: a single {burst}-word burst exceeds \
+                             the endpoint capacity ({capw}) plus {slack} words of route \
+                             slack ({links} link stage(s)); every consumer is gated behind \
+                             an activation — if that gate depends on traffic queued behind \
+                             this flow, the fabric wedges"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis;
+    use crate::machine::program::{
+        DirSet, Direction, DsdKind, DsdOp, DsdRef, Dtype, FieldAlloc, MOp, PeClass, RouteRule,
+        SExpr, TaskAction, TaskDef, TaskKind,
+    };
+    use crate::util::Subgrid;
+
+    /// Sender ships `send` words east on `color`; receiver consumes
+    /// `recv` of them (entry-activated unless `gated`).
+    fn unbalanced_prog(color: u8, send: i64, recv: i64, gated: bool) -> MachineProgram {
+        let sender = PeClass {
+            name: "sender".into(),
+            subgrids: vec![Subgrid::point(0, 0)],
+            fields: vec![FieldAlloc {
+                name: "a".into(),
+                addr: 0,
+                len: send as u32,
+                ty: Dtype::F32,
+                is_extern: false,
+            }],
+            mem_size: 4 * send as u32,
+            tasks: vec![TaskDef {
+                name: "send".into(),
+                hw_id: 25,
+                kind: TaskKind::Local,
+                initially_active: false,
+                initially_blocked: false,
+                body: vec![MOp::Dsd(DsdOp {
+                    kind: DsdKind::Mov,
+                    dst: DsdRef::FabOut { color, len: SExpr::imm(send), ty: Dtype::F32 },
+                    src0: Some(DsdRef::mem(0, SExpr::imm(send), Dtype::F32)),
+                    src1: None,
+                    scalar: None,
+                    is_async: true,
+                    on_complete: vec![],
+                })],
+            }],
+            entry_tasks: vec![25],
+        };
+        let recv_class = PeClass {
+            name: "recv".into(),
+            subgrids: vec![Subgrid::point(1, 0)],
+            fields: vec![FieldAlloc {
+                name: "b".into(),
+                addr: 0,
+                len: recv.max(1) as u32,
+                ty: Dtype::F32,
+                is_extern: false,
+            }],
+            mem_size: 4 * recv.max(1) as u32,
+            tasks: vec![TaskDef {
+                name: "recv".into(),
+                hw_id: 26,
+                kind: TaskKind::Local,
+                initially_active: false,
+                initially_blocked: false,
+                body: vec![MOp::Dsd(DsdOp {
+                    kind: DsdKind::Mov,
+                    dst: DsdRef::mem(0, SExpr::imm(recv), Dtype::F32),
+                    src0: Some(DsdRef::FabIn { color, len: SExpr::imm(recv), ty: Dtype::F32 }),
+                    src1: None,
+                    scalar: None,
+                    is_async: true,
+                    on_complete: vec![TaskAction::activate(27)],
+                })],
+            }],
+            entry_tasks: if gated { vec![] } else { vec![26] },
+        };
+        MachineProgram {
+            name: "unbalanced".into(),
+            classes: vec![sender, recv_class],
+            routes: vec![
+                RouteRule {
+                    color,
+                    subgrid: Subgrid::point(0, 0),
+                    rx: DirSet::single(Direction::Ramp),
+                    tx: DirSet::single(Direction::East),
+                },
+                RouteRule {
+                    color,
+                    subgrid: Subgrid::point(1, 0),
+                    rx: DirSet::single(Direction::West),
+                    tx: DirSet::single(Direction::Ramp),
+                },
+            ],
+            colors_used: vec![color],
+            ..Default::default()
+        }
+    }
+
+    fn capped_cfg(cap: Option<u64>) -> MachineConfig {
+        let mut cfg = MachineConfig::with_grid(2, 1);
+        cfg.endpoint_capacity_words = cap;
+        cfg
+    }
+
+    #[test]
+    fn leftover_beyond_capacity_is_a_certain_wedge() {
+        let prog = unbalanced_prog(1, 16, 4, false);
+        let report = analysis::check(&prog, &capped_cfg(Some(8)));
+        let diag = report
+            .diagnostics
+            .iter()
+            .find(|d| d.kind == DiagKind::BufferDeadlock)
+            .expect("credit pass must flag the wedge");
+        assert_eq!(diag.severity, Severity::Error);
+        assert_eq!(diag.pe, Some((1, 0)));
+        assert_eq!(diag.color, Some(1));
+        assert!(diag.message.contains("12 leftover"), "{}", diag.message);
+    }
+
+    #[test]
+    fn leftover_within_capacity_is_fine() {
+        let prog = unbalanced_prog(1, 16, 4, false);
+        let report = analysis::check(&prog, &capped_cfg(Some(12)));
+        assert!(
+            !report.has_kind(DiagKind::BufferDeadlock),
+            "a leftover that fits the buffer is not a wedge:\n{report}"
+        );
+    }
+
+    #[test]
+    fn balanced_endpoints_are_clean_under_any_capacity() {
+        let prog = unbalanced_prog(1, 16, 16, false);
+        for cap in [Some(1), Some(8), None] {
+            let report = analysis::check(&prog, &capped_cfg(cap));
+            assert!(
+                !report.has_kind(DiagKind::BufferDeadlock),
+                "balanced traffic must never wedge (cap {cap:?}):\n{report}"
+            );
+        }
+    }
+
+    #[test]
+    fn unbounded_pipeline_reports_nothing_without_audit() {
+        // Default checks on an unbounded config: the leftover exists
+        // but nothing finite is violated and no audit was requested.
+        let prog = unbalanced_prog(1, 16, 4, false);
+        let report = analysis::check(&prog, &capped_cfg(None));
+        assert!(!report.has_kind(DiagKind::BufferDeadlock), "{report}");
+    }
+
+    #[test]
+    fn audit_sizes_unbounded_leftovers() {
+        let prog = unbalanced_prog(1, 16, 4, false);
+        let cfg = capped_cfg(None);
+        let plan = crate::machine::RoutingPlan::build(&prog, &cfg);
+        let report = analysis::check_buffers(&prog, &cfg, &plan);
+        let diag = report
+            .diagnostics
+            .iter()
+            .find(|d| d.kind == DiagKind::BufferDeadlock)
+            .expect("audit must report the sizing hint");
+        assert_eq!(diag.severity, Severity::Warning);
+        assert!(diag.message.contains(">= 12"), "{}", diag.message);
+    }
+
+    #[test]
+    fn audit_flags_gated_consumer_bursts() {
+        // Balanced word counts, but the consumer only starts after an
+        // activation and the burst exceeds capacity + route slack.
+        let prog = unbalanced_prog(1, 16, 16, true);
+        let mut cfg = capped_cfg(Some(4));
+        cfg.link_buffer_words = Some(2);
+        let plan = crate::machine::RoutingPlan::build(&prog, &cfg);
+        let report = analysis::check_buffers(&prog, &cfg, &plan);
+        let diag = report
+            .diagnostics
+            .iter()
+            .find(|d| d.message.contains("potential buffer-cycle"))
+            .expect("audit must flag the gated burst");
+        assert_eq!(diag.severity, Severity::Warning);
+        assert!(diag.task.as_deref().unwrap_or("").contains("recv"), "{diag:?}");
+    }
+}

@@ -77,9 +77,12 @@ pub enum Trigger {
     OnRun,
     /// Fires when the owning task's `consumes[i]` completes.
     OnConsume(usize),
-    /// Fires when the owning task's `produces[i]` drains (producers
-    /// always drain — endpoint buffers are unbounded in this machine
-    /// model — so this is equivalent to "the produce issued").
+    /// Fires when the owning task's `produces[i]` drains. The
+    /// optimistic progress fixpoint treats this as "the produce
+    /// issued" (sound for deadlock detection: progress is only ever
+    /// over-approximated); whether a produce can actually drain under
+    /// *finite* endpoint buffers is the credit pass's concern
+    /// ([`super::credits`]).
     OnProduce(usize),
     /// Fires once the owning data task has received `threshold`
     /// wavelets (`None` = any wavelet).
@@ -97,6 +100,12 @@ pub struct ProduceOp {
     pub trips: Option<SExpr>,
     /// Inside a genuine runtime conditional (not a dispatch wrapper).
     pub conditional: bool,
+    /// Inside a dispatch-guard branch (task-ID recycling's
+    /// `if scratch_reg == k` wrapper). The optimistic deadlock fixpoint
+    /// treats every branch as reachable — correct for progress — but an
+    /// *exact word count* cannot sum sibling branches (each activation
+    /// runs one), so the credit pass treats these sites as unknown.
+    pub dispatched: bool,
     /// Fused accumulate-and-forward ops (`FabIn` source + `FabOut`
     /// destination, the chain pipeline's streaming form) only emit
     /// once the paired consume (index into `consumes`) completes.
@@ -108,7 +117,14 @@ pub struct ProduceOp {
 pub struct ConsumeOp {
     pub color: u8,
     pub len: SExpr,
+    /// Trip-count multiplier from enclosing `For` loops (`None` when a
+    /// bound is not statically known) — symmetric with
+    /// [`ProduceOp::trips`], so the credit pass can bound total
+    /// consumption the same way it bounds total delivery.
+    pub trips: Option<SExpr>,
     pub conditional: bool,
+    /// Inside a dispatch-guard branch — see [`ProduceOp::dispatched`].
+    pub dispatched: bool,
     pub on_complete: Vec<TaskAction>,
 }
 
@@ -166,12 +182,15 @@ impl<'m> BodyWalker<'m> {
     /// `conditional`: inside a genuine runtime `If`. `trips`: product of
     /// enclosing `For` trip-count expressions (`None` = unknown).
     /// `threshold`: wavelet-count guard context (data tasks).
+    /// `dispatched`: inside a dispatch-guard branch (see
+    /// [`ProduceOp::dispatched`]).
     fn walk(
         &mut self,
         ops: &[MOp],
         conditional: bool,
         trips: Option<SExpr>,
         threshold: Option<&SExpr>,
+        dispatched: bool,
     ) {
         for op in ops {
             match op {
@@ -188,7 +207,9 @@ impl<'m> BodyWalker<'m> {
                         self.model.consumes.push(ConsumeOp {
                             color,
                             len,
+                            trips: trips.clone(),
                             conditional,
+                            dispatched,
                             on_complete: d.on_complete.clone(),
                         });
                         self.model.consumes.len() - 1
@@ -199,6 +220,7 @@ impl<'m> BodyWalker<'m> {
                             len: len.clone(),
                             trips: trips.clone(),
                             conditional,
+                            dispatched,
                             after_consume: consume_idx,
                         });
                         Some(self.model.produces.len() - 1)
@@ -241,19 +263,19 @@ impl<'m> BodyWalker<'m> {
                 }
                 MOp::If { cond, then_ops, else_ops } => {
                     if is_dispatch_guard(cond) {
-                        self.walk(then_ops, conditional, trips.clone(), threshold);
-                        self.walk(else_ops, conditional, trips.clone(), threshold);
+                        self.walk(then_ops, conditional, trips.clone(), threshold, true);
+                        self.walk(else_ops, conditional, trips.clone(), threshold, true);
                     } else if self.is_data_task {
                         if let Some(n) = wavelet_threshold(cond) {
-                            self.walk(then_ops, conditional, trips.clone(), Some(n));
-                            self.walk(else_ops, conditional, trips.clone(), threshold);
+                            self.walk(then_ops, conditional, trips.clone(), Some(n), dispatched);
+                            self.walk(else_ops, conditional, trips.clone(), threshold, dispatched);
                         } else {
-                            self.walk(then_ops, true, trips.clone(), threshold);
-                            self.walk(else_ops, true, trips.clone(), threshold);
+                            self.walk(then_ops, true, trips.clone(), threshold, dispatched);
+                            self.walk(else_ops, true, trips.clone(), threshold, dispatched);
                         }
                     } else {
-                        self.walk(then_ops, true, trips.clone(), threshold);
-                        self.walk(else_ops, true, trips.clone(), threshold);
+                        self.walk(then_ops, true, trips.clone(), threshold, dispatched);
+                        self.walk(else_ops, true, trips.clone(), threshold, dispatched);
                     }
                 }
                 MOp::For { start, stop, step, body, .. } => {
@@ -265,7 +287,7 @@ impl<'m> BodyWalker<'m> {
                         (Some(t), Some(c)) => Some(SExpr::mul(t, c)),
                         _ => None,
                     };
-                    self.walk(body, conditional, combined, threshold);
+                    self.walk(body, conditional, combined, threshold, dispatched);
                 }
                 _ => {}
             }
@@ -332,7 +354,7 @@ pub fn model_task(def: &crate::machine::TaskDef) -> TaskModel {
         ..TaskModel::default()
     };
     let mut walker = BodyWalker { model: &mut model, is_data_task: data_color.is_some() };
-    walker.walk(&def.body, false, Some(SExpr::imm(1)), None);
+    walker.walk(&def.body, false, Some(SExpr::imm(1)), None, false);
     model
 }
 

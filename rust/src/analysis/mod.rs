@@ -25,7 +25,13 @@
 //! - [`deadlock`] runs a monotone progress fixpoint over the wait-for
 //!   graph of channel consumers/producers and task activations,
 //!   reporting starved consumers, wavelet-count shortfalls, and
-//!   circular waits (with the cycle spelled out).
+//!   circular waits (with the cycle spelled out);
+//! - [`credits`] verifies **credit sufficiency** under finite endpoint
+//!   buffers (`SPADA_BUF_CAP` / `endpoint_capacity_words`): statically
+//!   known leftover words larger than the capacity wedge the fabric
+//!   (the exact condition of the simulator's runtime buffer-deadlock
+//!   report), and `spada check --buffers` additionally audits capacity
+//!   sizing and gated-consumer bursts that risk buffer-cycle deadlocks.
 //!
 //! [`check_with_plan`] runs in `kernels::compile` by default (opt out
 //! with [`crate::passes::Options::check`]) against the same
@@ -37,6 +43,7 @@
 //! deadlock message. The checker is O(program): PEs × task events, not
 //! simulated events.
 
+pub mod credits;
 pub mod deadlock;
 pub mod flowgraph;
 pub mod races;
@@ -71,6 +78,9 @@ pub enum DiagKind {
     Deadlock,
     /// A consumer endpoint no flow can ever satisfy.
     Starvation,
+    /// Credit exhaustion under finite endpoint buffers: delivered words
+    /// that can never drain wedge the fabric (see [`credits`]).
+    BufferDeadlock,
     /// Resource-limit violation (the paper's OOR / OOM), surfaced from
     /// `MachineProgram::validate`.
     Resource,
@@ -84,6 +94,7 @@ impl fmt::Display for DiagKind {
             DiagKind::DataRace => "data-race",
             DiagKind::Deadlock => "deadlock",
             DiagKind::Starvation => "starvation",
+            DiagKind::BufferDeadlock => "buffer-deadlock",
             DiagKind::Resource => "resource",
         };
         f.write_str(s)
@@ -194,11 +205,33 @@ pub fn check(prog: &MachineProgram, cfg: &MachineConfig) -> AnalysisReport {
 
 /// Run every static check against an existing precompiled plan — the
 /// same instance the simulator executes from, so checker and runtime
-/// cannot disagree about route geometry.
+/// cannot disagree about route geometry. Includes the credit pass's
+/// certain-wedge verdicts whenever the config carries a finite
+/// endpoint capacity (`SPADA_BUF_CAP` / `endpoint_capacity_words`).
 pub fn check_with_plan(
     prog: &MachineProgram,
     cfg: &MachineConfig,
     plan: &RoutingPlan,
+) -> AnalysisReport {
+    check_full(prog, cfg, plan, false)
+}
+
+/// [`check_with_plan`] plus the advisory buffer audit — capacity
+/// sizing hints and potential buffer-cycle warnings — the engine
+/// behind `spada check --buffers`.
+pub fn check_buffers(
+    prog: &MachineProgram,
+    cfg: &MachineConfig,
+    plan: &RoutingPlan,
+) -> AnalysisReport {
+    check_full(prog, cfg, plan, true)
+}
+
+fn check_full(
+    prog: &MachineProgram,
+    cfg: &MachineConfig,
+    plan: &RoutingPlan,
+    buffers_audit: bool,
 ) -> AnalysisReport {
     let mut report = AnalysisReport::default();
 
@@ -222,6 +255,7 @@ pub fn check_with_plan(
     routing::check_routing(prog, cfg, &graph, &mut report);
     races::check_races(prog, &graph, &mut report);
     deadlock::check_deadlock(prog, &graph, &mut report);
+    credits::check_credits(prog, cfg, &graph, buffers_audit, &mut report);
 
     report
 }
@@ -238,13 +272,29 @@ pub fn check_source(
     cfg: &MachineConfig,
     opts: &Options,
 ) -> anyhow::Result<AnalysisReport> {
+    check_source_opts(src, bindings, cfg, opts, false)
+}
+
+/// [`check_source`] with the buffer audit switched on — the engine
+/// behind `spada check --buffers`: adds capacity sizing hints and
+/// potential buffer-cycle warnings on top of the standard checks.
+pub fn check_source_opts(
+    src: &str,
+    bindings: &Bindings,
+    cfg: &MachineConfig,
+    opts: &Options,
+    buffers_audit: bool,
+) -> anyhow::Result<AnalysisReport> {
     let kernel = crate::spada::parse_kernel(src).map_err(|e| anyhow::anyhow!("{e}"))?;
     let prog = crate::sem::instantiate(&kernel, bindings)?;
     // Run the backend with checking disabled: `check` below IS the check
     // (and we want a report even when compilation half-succeeds).
     let opts = Options { check: false, ..*opts };
     match crate::csl::compile(&prog, cfg, &opts) {
-        Ok(compiled) => Ok(check(&compiled.machine, cfg)),
+        Ok(compiled) => {
+            let plan = RoutingPlan::build(&compiled.machine, cfg);
+            Ok(check_full(&compiled.machine, cfg, &plan, buffers_audit))
+        }
         Err(pass_err) => {
             let msg = pass_err.0;
             let kind = if msg.contains(crate::passes::colors::AMBIGUOUS_ROUTER) {

@@ -3,8 +3,10 @@
 //! Runs the six paper kernels across growing fabric sizes (4×4 up to
 //! 128×128 in the full sweep; `--quick` stops at 16) at every worker
 //! thread count in [`THREAD_COUNTS`], and records, per run, the
-//! simulated cycle count, host wall time, event count and event-loop
-//! throughput. Results are printed as a table and written to
+//! simulated cycle count, host wall time, event count, event-loop
+//! throughput, and the buffer-model observables (peak endpoint queue
+//! depth — the value to size `SPADA_BUF_CAP` from — and backpressure
+//! stall cycles). Results are printed as a table and written to
 //! `BENCH_sim.json` in the working directory so CI can archive the perf
 //! trajectory PR over PR — this is the baseline artifact every future
 //! simulator-performance change is measured against.
@@ -47,6 +49,12 @@ pub struct ScalePoint {
     pub cycles: u64,
     pub events: u64,
     pub wavelets: u64,
+    /// Peak (PE, color) endpoint queue depth in words — the value to
+    /// size `SPADA_BUF_CAP` from for this point.
+    pub peak_queue_depth: u64,
+    /// Backpressure stall cycles (0 unless a finite buffer capacity is
+    /// configured for the sweep).
+    pub stall_cycles: u64,
     pub wall_ms: f64,
     pub events_per_sec: f64,
 }
@@ -115,6 +123,8 @@ pub fn sweep(quick: bool) -> Result<Vec<ScalePoint>> {
                     cycles: report.cycles,
                     events: report.metrics.events,
                     wavelets: report.metrics.wavelets,
+                    peak_queue_depth: report.metrics.peak_queue_depth,
+                    stall_cycles: report.metrics.stall_cycles,
                     wall_ms: wall_s * 1e3,
                     events_per_sec: report.events_per_sec(wall_s),
                 });
@@ -135,7 +145,8 @@ fn json_of(points: &[ScalePoint], quick: bool) -> String {
         s.push_str(&format!(
             "    {{\"kernel\": \"{}\", \"grid\": \"{}\", \"pes\": {}, \"threads\": {}, \
              \"host_parallelism\": {}, \"cycles\": {}, \"events\": {}, \"wavelets\": {}, \
-             \"wall_ms\": {:.3}, \"events_per_sec\": {:.1}}}{}\n",
+             \"peak_queue_depth\": {}, \"stall_cycles\": {}, \"wall_ms\": {:.3}, \
+             \"events_per_sec\": {:.1}}}{}\n",
             p.kernel,
             p.grid,
             p.pes,
@@ -144,6 +155,8 @@ fn json_of(points: &[ScalePoint], quick: bool) -> String {
             p.cycles,
             p.events,
             p.wavelets,
+            p.peak_queue_depth,
+            p.stall_cycles,
             p.wall_ms,
             p.events_per_sec,
             if i + 1 == points.len() { "" } else { "," }
@@ -156,7 +169,8 @@ fn json_of(points: &[ScalePoint], quick: bool) -> String {
 pub fn run(quick: bool) -> Result<()> {
     let points = sweep(quick)?;
     let mut table = Table::new(&[
-        "kernel", "grid", "PEs", "thr", "cycles", "events", "wall ms", "events/s",
+        "kernel", "grid", "PEs", "thr", "cycles", "events", "peakq", "stalls", "wall ms",
+        "events/s",
     ]);
     for p in &points {
         table.row(&[
@@ -166,6 +180,8 @@ pub fn run(quick: bool) -> Result<()> {
             p.threads.to_string(),
             p.cycles.to_string(),
             p.events.to_string(),
+            p.peak_queue_depth.to_string(),
+            p.stall_cycles.to_string(),
             format!("{:.1}", p.wall_ms),
             eng(p.events_per_sec),
         ]);
@@ -389,12 +405,15 @@ mod tests {
         }
         // Simulated behaviour is thread-count-invariant: rows of one
         // (kernel, grid) point differ only in wall-clock fields.
-        let mut by_point: BTreeMap<(&str, &str), Vec<(u64, u64, u64)>> = BTreeMap::new();
+        let mut by_point: BTreeMap<(&str, &str), Vec<(u64, u64, u64, u64, u64)>> = BTreeMap::new();
         for p in &points {
-            by_point
-                .entry((p.kernel, p.grid.as_str()))
-                .or_default()
-                .push((p.cycles, p.events, p.wavelets));
+            by_point.entry((p.kernel, p.grid.as_str())).or_default().push((
+                p.cycles,
+                p.events,
+                p.wavelets,
+                p.peak_queue_depth,
+                p.stall_cycles,
+            ));
         }
         for ((kernel, grid), rows) in &by_point {
             assert_eq!(rows.len(), THREAD_COUNTS.len());
@@ -409,6 +428,8 @@ mod tests {
         assert!(json.contains("\"threads\": 1"));
         assert!(json.contains("\"threads\": 4"));
         assert!(json.contains("\"host_parallelism\""));
+        assert!(json.contains("\"peak_queue_depth\""));
+        assert!(json.contains("\"stall_cycles\""));
 
         // The gate's parser must round-trip the writer's format.
         let parsed = parse_bench_json(&json).unwrap();

@@ -39,6 +39,17 @@ pub struct MachineConfig {
     pub simd16_width: u64,
     /// Hard cap on simulated events (runaway guard).
     pub max_events: u64,
+    /// Finite per-(PE, color) endpoint buffer capacity in words, with
+    /// credit-based backpressure (see [`super::flowctl`]). `None` (the
+    /// default when `SPADA_BUF_CAP` is unset) keeps the historical
+    /// unbounded endpoints — bit-identical to every prior snapshot.
+    pub endpoint_capacity_words: Option<u64>,
+    /// Words of buffering per link stage along a route — how much of a
+    /// stalled flow's tail the fabric can absorb before the stall backs
+    /// up into the source on-ramp. Consumed by the static credit pass
+    /// ([`crate::analysis::credits`]) and the runtime deadlock report;
+    /// `None` models zero link-stage slack (most conservative).
+    pub link_buffer_words: Option<u64>,
 }
 
 impl MachineConfig {
@@ -64,6 +75,8 @@ impl MachineConfig {
             data_task_wavelet_cycles: 2,
             simd16_width: 4,
             max_events: 2_000_000_000,
+            endpoint_capacity_words: super::flowctl::env_buf_cap(),
+            link_buffer_words: None,
         }
     }
 

@@ -1,0 +1,448 @@
+//! Credit-based finite-buffer flow control — the runtime half of the
+//! buffer model (the static half is [`crate::analysis::credits`]).
+//!
+//! The paper's dataflow semantics define deadlock over *finite* router
+//! and endpoint buffers, but the simulator historically queued arrived
+//! flows at (PE, color) endpoints without bound, so backpressure stalls
+//! and buffer-wedge deadlocks — a real class of WSE failure modes —
+//! were invisible. This module gives every endpoint a finite word
+//! capacity with credit-based admission:
+//!
+//! - **Credits.** An endpoint with capacity `cap` holds at most `cap`
+//!   admitted-but-unconsumed words. Each consumed word returns one
+//!   credit; credits return at the consuming word's availability time
+//!   (never before the event that consumes it) — an instant-turnaround
+//!   model: the capacity bound is exact, the timing is optimistic by
+//!   the credit round-trip latency.
+//! - **Wormhole tails.** A flow whose payload exceeds the free credits
+//!   admits a prefix and leaves its tail *in the fabric*: the words
+//!   wait in the route's link-stage buffers, upstream of the endpoint,
+//!   exactly like a wormhole packet stalling in place. Tail words are
+//!   admitted in FIFO order as credits free, each admission wave
+//!   streaming in at link rate (one word per cycle) from its release
+//!   time; the induced per-word delay is accounted as
+//!   [`Metrics::stall_cycles`](crate::machine::Metrics).
+//! - **FIFO per endpoint.** Admission is strictly first-flow-first:
+//!   a later flow's words never overtake an earlier flow's stalled
+//!   tail (same color ⇒ same virtual channel ⇒ in-order wire). Cross-
+//!   *flow* head-of-line blocking on a shared link does not arise in
+//!   statically clean programs: the routing checker rejects two
+//!   distinct flows on one (link, color), and WSE-class routers buffer
+//!   per color, so another color's traffic is never behind a stalled
+//!   tail. The `link_buffer_words` capacity is therefore enforced by
+//!   the *static* credit pass (how much tail a route can absorb before
+//!   the stall backs into the source ramp), not re-modeled dynamically.
+//! - **Deadlock.** A run that quiesces with unadmitted tail words has
+//!   exhausted credits that can never return — the simulator reports a
+//!   buffer deadlock naming the blocked endpoints, cross-referenced
+//!   with the static verdict (`spada check --buffers`).
+//!
+//! With no capacity configured (`MachineConfig::endpoint_capacity_words
+//! = None`, `SPADA_BUF_CAP` unset) every flow is admitted wholesale at
+//! its natural arrival times and no stall state is ever created, so the
+//! unbounded machine is **bit-identical** to the historical simulator —
+//! golden snapshots, the `parallel_equiv` and `dsd_batch` suites all
+//! hold unchanged. Because admission depends only on endpoint-local
+//! state and the deterministic arrival order, a capped run is also
+//! bit-identical across worker thread counts: cross-shard arrivals that
+//! find a full endpoint simply enqueue their stalled tail in the merged
+//! (deterministic) order, and stalls only *delay* word availability, so
+//! the epoch-parallel engine's conservative lookahead stays sound.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+/// Internal sentinel for "no capacity bound".
+const UNBOUNDED: u64 = u64::MAX;
+
+/// Parse `SPADA_BUF_CAP` from the environment: a positive word count
+/// caps every (PE, color) endpoint; unset, unparsable or zero means
+/// unbounded (the historical behaviour).
+pub fn env_buf_cap() -> Option<u64> {
+    std::env::var("SPADA_BUF_CAP")
+        .ok()
+        .and_then(|s| s.trim().parse::<u64>().ok())
+        .filter(|&n| n > 0)
+}
+
+/// One arrived flow queued at an endpoint, with its admission state.
+struct BufFlow {
+    /// Natural availability time of word 0 at the PE ramp (the
+    /// arrival-event timing; words stream in one per cycle after it).
+    first_word: u64,
+    words: Arc<Vec<u32>>,
+    /// Next unconsumed word index (`< admitted`).
+    cursor: usize,
+    /// Words admitted into the endpoint buffer; `words[admitted..]` is
+    /// the stalled tail still in the fabric.
+    admitted: usize,
+    /// Late-admission waves `(start index, base time)`, ascending by
+    /// start index: word `i` of the wave starting at `s` becomes
+    /// available at `base + (i - s)` (link rate). Words before the
+    /// first wave arrive at their natural time `first_word + i`.
+    waves: Vec<(usize, u64)>,
+}
+
+impl BufFlow {
+    /// Availability time of word `idx` (must be `< admitted`).
+    fn time(&self, idx: usize) -> u64 {
+        let natural = self.first_word + idx as u64;
+        for &(s, b) in self.waves.iter().rev() {
+            if s <= idx {
+                return natural.max(b + (idx - s) as u64);
+            }
+        }
+        natural
+    }
+
+    fn stalled(&self) -> usize {
+        self.words.len() - self.admitted
+    }
+}
+
+/// The credit-managed buffer of one (PE, color) endpoint. With an
+/// unbounded capacity this is exactly the historical `VecDeque` of
+/// arrived flows (every word admitted at its natural time); with a
+/// finite capacity it adds credit accounting, stalled-tail admission
+/// and stall metrics. All state is endpoint-local, so the structure is
+/// trivially deterministic under the epoch-parallel engine.
+pub struct EndpointBuf {
+    /// Capacity in words ([`UNBOUNDED`] when no cap is configured).
+    cap: u64,
+    /// Admitted, unconsumed words currently buffered.
+    in_use: u64,
+    flows: VecDeque<BufFlow>,
+    /// Index into `flows` of the first flow with an unadmitted tail
+    /// (== `flows.len()` when everything is admitted). Admission is
+    /// strictly FIFO, so this only ever moves forward — it makes every
+    /// admission attempt O(1) amortized and keeps the hot unbounded
+    /// path free of scans.
+    first_unadmitted: usize,
+    /// Total unadmitted words across all flows (the stalled tail).
+    stalled: u64,
+    /// High-water mark of `in_use` — the capacity-sizing observable
+    /// surfaced as `Metrics::peak_queue_depth`.
+    peak: u64,
+    /// Word-cycles of admission delay attributable to backpressure.
+    stall_cycles: u64,
+}
+
+impl EndpointBuf {
+    pub fn new(cap: Option<u64>) -> EndpointBuf {
+        EndpointBuf {
+            cap: cap.unwrap_or(UNBOUNDED),
+            in_use: 0,
+            flows: VecDeque::new(),
+            first_unadmitted: 0,
+            stalled: 0,
+            peak: 0,
+            stall_cycles: 0,
+        }
+    }
+
+    /// Reset all runtime state and counters, keeping the capacity.
+    pub fn clear(&mut self) {
+        self.in_use = 0;
+        self.flows.clear();
+        self.first_unadmitted = 0;
+        self.stalled = 0;
+        self.peak = 0;
+        self.stall_cycles = 0;
+    }
+
+    /// Enqueue an arrived flow. Words are admitted up to the free
+    /// credits at their natural wire times; any remainder stalls in
+    /// the fabric until credits return.
+    pub fn push_flow(&mut self, first_word: u64, words: Arc<Vec<u32>>) {
+        let len = words.len();
+        if self.stalled == 0 {
+            self.first_unadmitted = self.flows.len();
+        }
+        self.flows.push_back(BufFlow { first_word, words, cursor: 0, admitted: 0, waves: vec![] });
+        self.stalled += len as u64;
+        // Arrival admission: base time 0 degrades to the natural wire
+        // times, so the uncapped path is byte-identical to history.
+        self.admit(0);
+    }
+
+    /// Admit stalled words into freed credits, strictly FIFO. Each
+    /// admission wave starts no earlier than `t_rel` (the credit
+    /// release time), no earlier than its natural wire time, and no
+    /// earlier than one cycle after the previous word (link rate).
+    fn admit(&mut self, t_rel: u64) {
+        while self.stalled > 0 {
+            let free = if self.cap == UNBOUNDED {
+                usize::MAX
+            } else {
+                (self.cap - self.in_use) as usize
+            };
+            if free == 0 {
+                return;
+            }
+            let f = &mut self.flows[self.first_unadmitted];
+            let take = free.min(f.stalled());
+            let s = f.admitted;
+            let natural = f.first_word + s as u64;
+            let prev_end = if s > 0 { f.time(s - 1) + 1 } else { 0 };
+            let base = t_rel.max(natural).max(prev_end);
+            if base > natural {
+                f.waves.push((s, base));
+                self.stall_cycles += (base - natural) * take as u64;
+            }
+            f.admitted += take;
+            self.in_use += take as u64;
+            self.stalled -= take as u64;
+            self.peak = self.peak.max(self.in_use);
+            if f.admitted == f.words.len() {
+                self.first_unadmitted += 1;
+            }
+            // A partial admission leaves the loop via free == 0.
+        }
+    }
+
+    /// Availability time of the next unconsumed word at the FIFO head
+    /// (`None`: nothing admitted and unconsumed — the scheduler has
+    /// nothing to wake for until a consumption event frees credits).
+    pub fn next_word_time(&self) -> Option<u64> {
+        let f = self.flows.front()?;
+        if f.cursor < f.admitted {
+            Some(f.time(f.cursor))
+        } else {
+            None
+        }
+    }
+
+    /// Drop the fully-consumed front flow (it is by construction fully
+    /// admitted, so the FIFO admission cursor shifts down with it).
+    fn pop_front_flow(&mut self) {
+        self.flows.pop_front();
+        self.first_unadmitted -= 1;
+    }
+
+    /// Pop the head word if it is available by `clock` (the data-task
+    /// consume path: one wavelet per activation step). Returns the
+    /// word; frees its credit at `clock` and admits stalled tails.
+    pub fn pop_word(&mut self, clock: u64) -> Option<u32> {
+        let (w, done) = {
+            let f = self.flows.front_mut()?;
+            if f.cursor >= f.admitted || f.time(f.cursor) > clock {
+                return None;
+            }
+            let w = f.words[f.cursor];
+            f.cursor += 1;
+            (w, f.cursor == f.words.len())
+        };
+        if done {
+            self.pop_front_flow();
+        }
+        self.in_use -= 1;
+        self.admit(clock);
+        Some(w)
+    }
+
+    /// Pull up to `need` available words into `out` (the microthreaded
+    /// consume path), in FIFO order, freeing credits as it goes —
+    /// credits return no earlier than `now` (the pulling event's time)
+    /// and no earlier than the consumed word's own availability.
+    /// Returns the availability time of the last word taken, if any.
+    pub fn take(&mut self, mut need: usize, now: u64, out: &mut Vec<u32>) -> Option<u64> {
+        let mut last: Option<u64> = None;
+        while need > 0 {
+            let (taken, t_last, done) = {
+                let Some(f) = self.flows.front_mut() else { break };
+                let avail = f.admitted - f.cursor;
+                let take = need.min(avail);
+                if take == 0 {
+                    break;
+                }
+                out.extend_from_slice(&f.words[f.cursor..f.cursor + take]);
+                let t = f.time(f.cursor + take - 1);
+                f.cursor += take;
+                (take, t, f.cursor == f.words.len())
+            };
+            if done {
+                self.pop_front_flow();
+            }
+            self.in_use -= taken as u64;
+            need -= taken;
+            last = Some(last.map_or(t_last, |l: u64| l.max(t_last)));
+            self.admit(t_last.max(now));
+        }
+        last
+    }
+
+    /// Any flow queued (admitted or stalled) — the data-task ready-bit
+    /// predicate.
+    pub fn queued(&self) -> bool {
+        !self.flows.is_empty()
+    }
+
+    /// Words stalled in the fabric (arrived but never admitted). A
+    /// nonzero value at quiescence is a buffer deadlock.
+    pub fn stalled_words(&self) -> u64 {
+        self.stalled
+    }
+
+    /// Admitted, unconsumed words currently buffered.
+    pub fn occupancy(&self) -> u64 {
+        self.in_use
+    }
+
+    /// High-water mark of the occupancy over the run so far.
+    pub fn peak(&self) -> u64 {
+        self.peak
+    }
+
+    /// Word-cycles of backpressure-induced admission delay.
+    pub fn stall_cycles(&self) -> u64 {
+        self.stall_cycles
+    }
+
+    /// The configured capacity (`None` = unbounded).
+    pub fn capacity(&self) -> Option<u64> {
+        if self.cap == UNBOUNDED {
+            None
+        } else {
+            Some(self.cap)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn words(n: usize) -> Arc<Vec<u32>> {
+        Arc::new((0..n as u32).collect())
+    }
+
+    /// Unbounded: every word admitted at its natural wire time, no
+    /// stall state — the historical endpoint, bit for bit.
+    #[test]
+    fn unbounded_is_natural() {
+        let mut b = EndpointBuf::new(None);
+        b.push_flow(10, words(4));
+        assert_eq!(b.next_word_time(), Some(10));
+        assert_eq!(b.stalled_words(), 0);
+        assert_eq!(b.occupancy(), 4);
+        assert_eq!(b.peak(), 4);
+        let mut out = vec![];
+        let last = b.take(4, 10, &mut out);
+        assert_eq!(out, vec![0, 1, 2, 3]);
+        assert_eq!(last, Some(13)); // word 3 at first_word + 3
+        assert_eq!(b.occupancy(), 0);
+        assert_eq!(b.stall_cycles(), 0);
+        assert!(!b.queued());
+    }
+
+    /// Capped: the prefix admits at natural times, the tail stalls and
+    /// streams in at link rate from the release time.
+    #[test]
+    fn capped_tail_stalls_then_trickles() {
+        let mut b = EndpointBuf::new(Some(4));
+        b.push_flow(10, words(10));
+        assert_eq!(b.occupancy(), 4);
+        assert_eq!(b.stalled_words(), 6);
+        // Consumer shows up late, at t = 100: pulls the 4 admitted
+        // words, credits release at 100, 4 more words admit at
+        // 100, 101, 102, 103.
+        let mut out = vec![];
+        let last = b.take(10, 100, &mut out);
+        // take loops: 4 at natural (last avail 13), release at 100
+        // admits 4 more (avail 100..104), pulled with last 103, then
+        // the final 2 admit at 104, 105.
+        assert_eq!(out.len(), 10);
+        assert_eq!(out, (0..10).collect::<Vec<u32>>());
+        assert_eq!(last, Some(105));
+        assert_eq!(b.stalled_words(), 0);
+        assert!(b.stall_cycles() > 0, "late drain must account stall cycles");
+    }
+
+    /// A pending consumer pulls words as they stream in: credits free
+    /// at wire rate, so the tail admits at its natural times and the
+    /// stall costs nothing (the ALU drains at link rate).
+    #[test]
+    fn eager_consumer_costs_nothing() {
+        let mut b = EndpointBuf::new(Some(4));
+        b.push_flow(10, words(10));
+        let mut out = vec![];
+        // Pull at the arrival event (now = wire time of word 0).
+        let last = b.take(10, 10, &mut out);
+        assert_eq!(out.len(), 10);
+        // Word 9 at natural time 19: releases chain at wire rate.
+        assert_eq!(last, Some(19));
+        assert_eq!(b.stall_cycles(), 0);
+    }
+
+    /// FIFO across flows: a later flow's words never overtake an
+    /// earlier flow's stalled tail.
+    #[test]
+    fn admission_is_fifo_across_flows() {
+        let mut b = EndpointBuf::new(Some(3));
+        b.push_flow(10, words(5)); // admits 3, stalls 2
+        b.push_flow(20, Arc::new(vec![100, 101])); // fully stalled
+        assert_eq!(b.occupancy(), 3);
+        assert_eq!(b.stalled_words(), 4);
+        let mut out = vec![];
+        b.take(7, 50, &mut out);
+        assert_eq!(out, vec![0, 1, 2, 3, 4, 100, 101]);
+        assert_eq!(b.stalled_words(), 0);
+    }
+
+    /// The data-task path: words pop one at a time, gated on their
+    /// availability; each pop returns a credit.
+    #[test]
+    fn pop_word_gates_on_availability() {
+        let mut b = EndpointBuf::new(Some(2));
+        b.push_flow(10, words(4));
+        assert_eq!(b.pop_word(9), None, "word 0 not available before t=10");
+        assert_eq!(b.pop_word(10), Some(0));
+        // Credit freed at t=10: word 2 admits with base max(10, 12) = 12.
+        assert_eq!(b.pop_word(11), Some(1));
+        assert_eq!(b.pop_word(11), None, "word 2 streams in at t=12");
+        assert_eq!(b.pop_word(12), Some(2));
+        assert_eq!(b.pop_word(13), Some(3));
+        assert!(!b.queued());
+        assert_eq!(b.stall_cycles(), 0, "wire-rate pops never stall");
+    }
+
+    /// Late pops delay the tail and the delay is accounted.
+    #[test]
+    fn late_pop_accounts_stall() {
+        let mut b = EndpointBuf::new(Some(1));
+        b.push_flow(10, words(2));
+        assert_eq!(b.pop_word(50), Some(0));
+        // Word 1 natural time 11, admitted at 50: 39 stall cycles.
+        assert_eq!(b.stall_cycles(), 39);
+        assert_eq!(b.next_word_time(), Some(50));
+        assert_eq!(b.pop_word(50), Some(1));
+    }
+
+    /// Peak occupancy tracks the unbounded high-water mark — the
+    /// capacity-sizing observable.
+    #[test]
+    fn peak_tracks_high_water() {
+        let mut b = EndpointBuf::new(None);
+        b.push_flow(0, words(3));
+        b.push_flow(5, words(4));
+        assert_eq!(b.peak(), 7);
+        let mut out = vec![];
+        b.take(7, 10, &mut out);
+        b.push_flow(20, words(2));
+        assert_eq!(b.peak(), 7, "peak never decreases");
+    }
+
+    #[test]
+    fn env_cap_parses_positive_only() {
+        // Pure parse behaviour is covered by the filter; exercise the
+        // clear/capacity plumbing here.
+        let mut b = EndpointBuf::new(Some(8));
+        assert_eq!(b.capacity(), Some(8));
+        b.push_flow(0, words(12));
+        assert_eq!(b.stalled_words(), 4);
+        b.clear();
+        assert_eq!(b.stalled_words(), 0);
+        assert_eq!(b.peak(), 0);
+        assert_eq!(b.capacity(), Some(8), "clear keeps the capacity");
+    }
+}

@@ -29,15 +29,28 @@ pub struct Metrics {
     pub active_pes: u64,
     /// Dispatch state-machine invocations (recycled task overhead).
     pub dispatches: u64,
+    /// Word-cycles of backpressure delay: for every word admitted late
+    /// into a finite endpoint buffer, the cycles between its natural
+    /// wire arrival and its actual admission (0 when no capacity is
+    /// configured — unbounded endpoints never stall).
+    pub stall_cycles: u64,
+    /// High-water mark of admitted-but-unconsumed words over all
+    /// (PE, color) endpoints — the observable to size
+    /// `endpoint_capacity_words` from: any capacity ≥ this value
+    /// reproduces the unbounded run bit for bit.
+    pub peak_queue_depth: u64,
 }
 
 impl Metrics {
-    /// Fold another counter set into this one. Every field is a sum of
-    /// per-event increments, so accumulating thread-locally per shard
-    /// and merging at the epoch barrier yields exactly the totals a
-    /// single-threaded run would have counted (addition commutes; the
-    /// event multiset is identical) — the invariant the epoch-parallel
-    /// simulator's bit-identical `RunReport` guarantee rests on.
+    /// Fold another counter set into this one. Every field except
+    /// `peak_queue_depth` is a sum of per-event increments, so
+    /// accumulating thread-locally per shard and merging at the epoch
+    /// barrier yields exactly the totals a single-threaded run would
+    /// have counted (addition commutes; the event multiset is
+    /// identical) — the invariant the epoch-parallel simulator's
+    /// bit-identical `RunReport` guarantee rests on. `peak_queue_depth`
+    /// is a per-endpoint maximum, so it merges by `max` (which also
+    /// commutes — endpoints are owned by exactly one shard).
     /// (`active_pes` and `busy_cycles` are additionally recomputed from
     /// per-PE state in the run epilogue, after reassembly.)
     pub fn merge(&mut self, other: &Metrics) {
@@ -53,6 +66,8 @@ impl Metrics {
         self.busy_cycles += other.busy_cycles;
         self.active_pes += other.active_pes;
         self.dispatches += other.dispatches;
+        self.stall_cycles += other.stall_cycles;
+        self.peak_queue_depth = self.peak_queue_depth.max(other.peak_queue_depth);
     }
 }
 
@@ -126,14 +141,30 @@ mod tests {
 
     #[test]
     fn metrics_merge_sums_fields() {
-        let mut a = Metrics { events: 1, flows: 2, wavelets: 3, ..Default::default() };
-        let b = Metrics { events: 10, flops: 5, dispatches: 7, ..Default::default() };
+        let mut a = Metrics {
+            events: 1,
+            flows: 2,
+            wavelets: 3,
+            stall_cycles: 4,
+            peak_queue_depth: 9,
+            ..Default::default()
+        };
+        let b = Metrics {
+            events: 10,
+            flops: 5,
+            dispatches: 7,
+            stall_cycles: 6,
+            peak_queue_depth: 3,
+            ..Default::default()
+        };
         a.merge(&b);
         assert_eq!(a.events, 11);
         assert_eq!(a.flows, 2);
         assert_eq!(a.wavelets, 3);
         assert_eq!(a.flops, 5);
         assert_eq!(a.dispatches, 7);
+        assert_eq!(a.stall_cycles, 10, "stall cycles merge by sum");
+        assert_eq!(a.peak_queue_depth, 9, "peak queue depth merges by max");
     }
 
     #[test]

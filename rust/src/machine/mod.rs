@@ -25,8 +25,17 @@
 //! flows, so link-sharing islands simulate concurrently with
 //! conservative lookahead, bit-identically to the single-threaded loop
 //! — see [`sim`] module docs.
+//!
+//! Endpoint buffers are finite when a capacity is configured
+//! (`SPADA_BUF_CAP` / [`MachineConfig::endpoint_capacity_words`]):
+//! credit-based backpressure stalls a flow's tail in the fabric when
+//! its destination buffer fills, and exhausted credits that never
+//! return surface as a buffer-deadlock report — see [`flowctl`].
+//! Unconfigured (the default), endpoints are unbounded and behaviour
+//! is bit-identical to every prior snapshot.
 
 pub mod config;
+pub mod flowctl;
 pub mod plan;
 pub mod program;
 pub mod router;

@@ -680,6 +680,18 @@ impl RoutingPlan {
         let pi = self.pe_index(x, y)?;
         self.flow_index(pi, color).map(|fi| &self.flows[fi].trace)
     }
+
+    /// Planned flows that deliver to a (dense PE index, endpoint slot).
+    /// Cold-path reverse lookup (linear over the flow table) used by
+    /// the runtime buffer-deadlock report to describe how many link
+    /// stages a stalled tail occupies upstream of the endpoint. (The
+    /// static credit pass bounds route slack from the flow graph's own
+    /// traced paths instead — same plan-backed geometry.)
+    pub fn flows_into(&self, pe: u32, slot: u8) -> impl Iterator<Item = &PlannedFlow> {
+        self.flows.iter().filter(move |f| {
+            f.error.is_none() && f.dests.iter().any(|&(d, s, _)| d == pe && s == slot)
+        })
+    }
 }
 
 #[cfg(test)]

@@ -18,11 +18,11 @@
 //!
 //! DSD execution is *batched* where legal: the plan compiler marks
 //! contiguous-f32 operations ([`super::vecop`]) and the simulator runs
-//! them as single slice passes (one kernel per [`DsdKind`], a second
-//! monomorphized kernel for contiguous 16-bit integer operands, plus a
-//! scalar-fold kernel for stride-0 accumulation), falling back to the
-//! per-element interpreter for aliased / strided / mixed-dtype
-//! descriptors. Both paths are bit-identical; `SPADA_NO_VEC=1` (or
+//! them as single slice passes (one kernel per [`DsdKind`], plus
+//! monomorphized variants for contiguous 16-bit integer and f16
+//! operands and a scalar-fold kernel for stride-0 accumulation),
+//! falling back to the per-element interpreter for aliased / strided /
+//! mixed-dtype descriptors. Both paths are bit-identical; `SPADA_NO_VEC=1` (or
 //! [`Simulator::set_vectorize`]) forces the interpreter everywhere.
 //!
 //! Execution is *epoch-parallel* when more than one worker thread is
@@ -45,8 +45,24 @@
 //! are **bit-identical across all thread counts**; `SPADA_THREADS=1`
 //! runs the classic single-queue event loop (the one-shard degenerate
 //! case of the same engine).
+//!
+//! Endpoint buffers are *finite* when a capacity is configured
+//! (`SPADA_BUF_CAP` / [`MachineConfig::endpoint_capacity_words`]):
+//! each (PE, color) endpoint is a credit-managed
+//! [`super::flowctl::EndpointBuf`] — an arriving flow admits words up
+//! to the free credits and stalls its tail in the fabric, wormhole
+//! style, until consumption returns credits. Stall state is entirely
+//! endpoint-local and admission order is the deterministic arrival
+//! order, so capped runs are bit-identical across thread counts too
+//! (a cross-shard arrival that finds a full endpoint enqueues its
+//! stalled tail in the merged order; stalls only *delay* word
+//! availability, so the conservative lookahead stays sound). A run
+//! that quiesces with stalled words reports a buffer deadlock naming
+//! the blocked endpoints. With no capacity configured the buffers are
+//! unbounded and behaviour is bit-identical to every prior snapshot.
 
 use super::config::MachineConfig;
+use super::flowctl::EndpointBuf;
 use super::metrics::{Metrics, RunReport};
 use super::plan::{
     FlowError, PAction, PDsd, POp, PTaskKind, RoutingPlan, ACTIONS_EMPTY, SLOT_NONE, TASK_NONE,
@@ -107,25 +123,6 @@ struct TaskState {
     blocked: bool,
 }
 
-/// An arrived flow queued at a (PE, color) endpoint.
-struct ArrivedFlow {
-    /// Availability time of word 0 at this PE's ramp.
-    first_word: u64,
-    words: Arc<Vec<u32>>,
-    /// Next unconsumed word index.
-    cursor: usize,
-}
-
-impl ArrivedFlow {
-    fn remaining(&self) -> usize {
-        self.words.len() - self.cursor
-    }
-
-    fn word_time(&self, idx: usize) -> u64 {
-        self.first_word + idx as u64
-    }
-}
-
 /// A vector operand for elementwise DSD application.
 enum VOp<'a> {
     Mem(&'a DsdRef),
@@ -160,11 +157,18 @@ struct PendingConsume {
     issue_time: u64,
 }
 
-/// Per-(PE, endpoint slot) fabric endpoint state.
-#[derive(Default)]
+/// Per-(PE, endpoint slot) fabric endpoint state: the credit-managed
+/// arrival buffer (see [`super::flowctl`]) plus pending microthreaded
+/// consumers.
 struct ColorEndpoint {
-    flows: VecDeque<ArrivedFlow>,
+    buf: EndpointBuf,
     consumers: VecDeque<PendingConsume>,
+}
+
+impl ColorEndpoint {
+    fn new(cap: Option<u64>) -> ColorEndpoint {
+        ColorEndpoint { buf: EndpointBuf::new(cap), consumers: VecDeque::new() }
+    }
 }
 
 /// One pooled flow payload. The pool slot releases its reference after
@@ -457,6 +461,7 @@ impl Simulator {
             return Err(SimError::Program(e.clone()));
         }
         let prog = Arc::new(prog);
+        let buf_cap = cfg.endpoint_capacity_words;
         let mut pes = Vec::with_capacity(plan.pes.len());
         for (g, p) in plan.pes.iter().enumerate() {
             let class = &prog.classes[p.class];
@@ -472,7 +477,7 @@ impl Simulator {
                 ready: 0,
                 busy_until: 0,
                 last_activity: 0,
-                endpoints: (0..nslots).map(|_| ColorEndpoint::default()).collect(),
+                endpoints: (0..nslots).map(|_| ColorEndpoint::new(buf_cap)).collect(),
                 ran_anything: false,
                 busy_cycles: 0,
             });
@@ -552,7 +557,7 @@ impl Simulator {
             pe.busy_until = 0;
             pe.last_activity = 0;
             for ep in &mut pe.endpoints {
-                ep.flows.clear();
+                ep.buf.clear();
                 ep.consumers.clear();
             }
             pe.ran_anything = false;
@@ -751,6 +756,7 @@ impl Simulator {
         let mut shard = ShardState::new(0, std::mem::take(&mut self.pes), cfg.link_slots());
         shard.init_pes(&ctx);
         shard.run_until(&ctx, u64::MAX);
+        shard.fold_flowctl();
         self.pes = shard.pes;
         self.vec_ops += shard.vec_ops;
         if let Some((_, _, e)) = shard.error {
@@ -930,7 +936,8 @@ impl Simulator {
         let mut slots: Vec<Option<Pe>> = Vec::with_capacity(plan.pes.len());
         slots.resize_with(plan.pes.len(), || None);
         for sh in shards {
-            let sh = sh.into_inner().unwrap_or_else(|poisoned| poisoned.into_inner());
+            let mut sh = sh.into_inner().unwrap_or_else(|poisoned| poisoned.into_inner());
+            sh.fold_flowctl();
             metrics.merge(&sh.metrics);
             self.vec_ops += sh.vec_ops;
             for pe in sh.pes {
@@ -946,10 +953,13 @@ impl Simulator {
     }
 
     /// Post-run epilogue shared by both engines: deadlock detection
-    /// over the reassembled PE table, then the report.
+    /// over the reassembled PE table (starved consumers and, with a
+    /// finite buffer capacity, credit-exhausted endpoints), then the
+    /// report.
     fn finish(&mut self, metrics: Metrics) -> Result<RunReport, SimError> {
         let plan = Arc::clone(&self.plan);
         let mut stuck = vec![];
+        let mut buffer_stall = false;
         for pe in &self.pes {
             let cp = &plan.classes[pe.class];
             for (slot, ep) in pe.endpoints.iter().enumerate() {
@@ -962,6 +972,45 @@ impl Simulator {
                         c.need - c.taken.len()
                     ));
                 }
+                let stalled = ep.buf.stalled_words();
+                if stalled > 0 {
+                    // Credits exhausted for good: the flow's tail is
+                    // wedged in the fabric. Name the endpoint and how
+                    // far upstream the stall reaches along its route.
+                    buffer_stall = true;
+                    let color = cp.slot_color[slot];
+                    // Link stages upstream of this endpoint = the hop
+                    // depth of its own delivery (not the multicast
+                    // tree's total link count).
+                    let reach = plan
+                        .flows_into(pe.gix, slot as u8)
+                        .flat_map(|f| {
+                            f.dests
+                                .iter()
+                                .filter(|&&(d, s, _)| d == pe.gix && s == slot as u8)
+                                .map(|&(_, _, depth)| depth)
+                        })
+                        .max()
+                        .unwrap_or(0);
+                    let slack = reach * self.cfg.link_buffer_words.unwrap_or(0);
+                    let upstream = if stalled > slack {
+                        " and back into the source on-ramp"
+                    } else {
+                        ""
+                    };
+                    stuck.push(format!(
+                        "PE ({},{}) color {} endpoint full ({}/{} words): {} words stalled \
+                         across {} link stage(s){}",
+                        pe.x,
+                        pe.y,
+                        color,
+                        ep.buf.occupancy(),
+                        ep.buf.capacity().unwrap_or(u64::MAX),
+                        stalled,
+                        reach,
+                        upstream,
+                    ));
+                }
             }
         }
         if !stuck.is_empty() {
@@ -969,9 +1018,11 @@ impl Simulator {
             // Cross-reference the static dataflow checker. When the
             // compiler already ran the checker (Options::check) the
             // stored verdict is reused instead of re-running the full
-            // analysis here.
+            // analysis here — except for buffer deadlocks, where the
+            // credit pass's finite-capacity verdict is the relevant
+            // one (`spada check --buffers`), so it is always consulted.
             let verdict = match self.prog.meta.get("static_check").map(String::as_str) {
-                Some("clean") => {
+                Some("clean") if !buffer_stall => {
                     "static check passed at compile time: no static deadlock (dynamic-only)"
                         .to_string()
                 }
@@ -985,18 +1036,23 @@ impl Simulator {
                                 d.kind,
                                 crate::analysis::DiagKind::Deadlock
                                     | crate::analysis::DiagKind::Starvation
+                                    | crate::analysis::DiagKind::BufferDeadlock
                             )
                         })
                         .take(2)
                         .map(|d| d.to_string())
                         .collect();
                     if statics.is_empty() {
-                        "static check found no deadlock (dynamic-only)".to_string()
+                        if buffer_stall {
+                            "static credit check found no certain wedge (dynamic-only; \
+                             see `spada check --buffers`)"
+                                .to_string()
+                        } else {
+                            "static check found no deadlock (dynamic-only)".to_string()
+                        }
                     } else {
-                        format!(
-                            "confirmed by static analysis (`spada check`): {}",
-                            statics.join("; ")
-                        )
+                        let cmd = if buffer_stall { "spada check --buffers" } else { "spada check" };
+                        format!("confirmed by static analysis (`{cmd}`): {}", statics.join("; "))
                     }
                 }
             };
@@ -1059,6 +1115,20 @@ impl ShardState {
             if !cp.entry.is_empty() {
                 let g = self.pes[lp].gix;
                 self.schedule(0, EventKind::PeReady(g));
+            }
+        }
+    }
+
+    /// Fold the per-endpoint flow-control counters into this shard's
+    /// metrics — stall cycles by sum, peak queue depth by max — so the
+    /// cross-shard [`Metrics::merge`] yields the global totals (each
+    /// endpoint is owned by exactly one shard).
+    fn fold_flowctl(&mut self) {
+        for pe in &self.pes {
+            for ep in &pe.endpoints {
+                self.metrics.stall_cycles += ep.buf.stall_cycles();
+                self.metrics.peak_queue_depth =
+                    self.metrics.peak_queue_depth.max(ep.buf.peak());
             }
         }
     }
@@ -1199,8 +1269,15 @@ impl ShardState {
                     break;
                 }
                 PTaskKind::Data { slot, .. } => {
-                    if let Some(f) = self.pes[pe_idx].endpoints[slot as usize].flows.front() {
-                        let t0 = f.word_time(f.cursor);
+                    // `next_word_time` is `None` both for an empty
+                    // endpoint and for one whose head words are all
+                    // stalled tails — the admission that makes them
+                    // available is itself a consumption event on this
+                    // endpoint, which reschedules, so no wakeup is
+                    // needed (or possible) here.
+                    if let Some(t0) =
+                        self.pes[pe_idx].endpoints[slot as usize].buf.next_word_time()
+                    {
                         if t0 <= self.now {
                             chosen = Some(ti);
                             break;
@@ -1232,22 +1309,11 @@ impl ShardState {
             PTaskKind::Data { slot, wavelet_reg } => {
                 // Consume available wavelets one at a time (hardware fires
                 // the task per wavelet; we batch into one scheduling event).
+                // Each popped word returns a credit, so a stalled tail
+                // trickles into the endpoint at the consumption rate.
                 loop {
-                    let word = {
-                        let ep = &mut self.pes[pe_idx].endpoints[slot as usize];
-                        match ep.flows.front_mut() {
-                            Some(f) if f.word_time(f.cursor) <= clock => {
-                                let w = f.words[f.cursor];
-                                f.cursor += 1;
-                                let done = f.remaining() == 0;
-                                if done {
-                                    ep.flows.pop_front();
-                                }
-                                Some(w)
-                            }
-                            _ => None,
-                        }
-                    };
+                    let word =
+                        self.pes[pe_idx].endpoints[slot as usize].buf.pop_word(clock);
                     let Some(w) = word else { break };
                     self.pes[pe_idx].regs[wavelet_reg as usize] =
                         SVal::F(f32::from_bits(w) as f64);
@@ -1258,8 +1324,8 @@ impl ShardState {
                     }
                 }
                 // If more words are in flight, wake up again.
-                if let Some(f) = self.pes[pe_idx].endpoints[slot as usize].flows.front() {
-                    let t0 = f.word_time(f.cursor);
+                if let Some(t0) = self.pes[pe_idx].endpoints[slot as usize].buf.next_word_time()
+                {
                     self.schedule(t0.max(clock), EventKind::PeReady(gpe));
                 }
                 self.refresh_task_bit(ctx, pe_idx, ti);
@@ -1286,7 +1352,7 @@ impl ShardState {
                 PTaskKind::Local => st.active && !st.blocked,
                 PTaskKind::Data { slot, .. } => {
                     let ep = &pe.endpoints[slot as usize];
-                    !st.blocked && ep.consumers.is_empty() && !ep.flows.is_empty()
+                    !st.blocked && ep.consumers.is_empty() && ep.buf.queued()
                 }
             }
         };
@@ -1360,9 +1426,10 @@ impl ShardState {
             words
         };
         self.metrics.ramp_bytes += 4 * words.len() as u64;
-        self.pes[pe_idx].endpoints[slot as usize]
-            .flows
-            .push_back(ArrivedFlow { first_word, words, cursor: 0 });
+        // Credit-managed admission: with a finite capacity the flow may
+        // stall part of its payload in the fabric; with none this is
+        // exactly the historical enqueue (see `machine::flowctl`).
+        self.pes[pe_idx].endpoints[slot as usize].buf.push_flow(first_word, words);
         self.try_satisfy(ctx, pe_idx, slot)?;
         // A data task may be waiting for this color.
         let gpe = self.pes[pe_idx].gix;
@@ -1472,19 +1539,19 @@ impl ShardState {
 
     /// Try to satisfy the head consumer(s) on a (PE, slot) endpoint.
     fn try_satisfy(&mut self, ctx: &Ctx<'_>, pe_idx: usize, slot: u8) -> Result<(), SimError> {
+        let now = self.now;
         loop {
             let popped = {
                 let ep = &mut self.pes[pe_idx].endpoints[slot as usize];
                 let Some(head) = ep.consumers.front_mut() else { break };
-                // Pull words into the head consumer (batched per flow).
-                while head.taken.len() < head.need {
-                    let Some(f) = ep.flows.front_mut() else { break };
-                    let take = (head.need - head.taken.len()).min(f.remaining());
-                    head.last_avail = head.last_avail.max(f.word_time(f.cursor + take - 1));
-                    head.taken.extend_from_slice(&f.words[f.cursor..f.cursor + take]);
-                    f.cursor += take;
-                    if f.remaining() == 0 {
-                        ep.flows.pop_front();
+                // Pull available words into the head consumer. Each
+                // pulled word returns a credit (no earlier than this
+                // event), so a stalled tail streams in behind the pull
+                // and the take loop drains it in the same pass.
+                let need = head.need - head.taken.len();
+                if need > 0 {
+                    if let Some(t) = ep.buf.take(need, now, &mut head.taken) {
+                        head.last_avail = head.last_avail.max(t);
                     }
                 }
                 if head.taken.len() < head.need {
@@ -1847,6 +1914,32 @@ impl ShardState {
                 self.scratch_b = vb;
                 true
             }
+            VecOp::MapF16 => {
+                // f16 elementwise pass (memory destinations only; the
+                // classifier never marks a fabric-out MapF16).
+                if out.is_some() {
+                    return false;
+                }
+                let Some(d) = rdst else { return false };
+                if d.ty != Dtype::F16 {
+                    return false;
+                }
+                let (fa, fb) = (src_span(ra, Dtype::F16), src_span(rb, Dtype::F16));
+                let (Ok(sa), Ok(sb)) = (fa, fb) else { return false };
+                if !vecop::admit_map(mem_len, Some(span(d)), &[sa, sb], n, 2) {
+                    return false;
+                }
+                let mut va = std::mem::take(&mut self.scratch_a);
+                let mut vb = std::mem::take(&mut self.scratch_b);
+                self.gather_f16(pe_idx, ra, n, &mut va);
+                self.gather_f16(pe_idx, rb, n, &mut vb);
+                let base = d.base;
+                let dst = &mut self.pes[pe_idx].mem[base..base + 2 * n];
+                map_mem_f16_kernel(kind, dst, &va, &vb, scalar);
+                self.scratch_a = va;
+                self.scratch_b = vb;
+                true
+            }
             VecOp::Fold => {
                 let (fa, fb) = (src_span(ra, Dtype::F32), src_span(rb, Dtype::F32));
                 let (Ok(_), Ok(sb)) = (fa, fb) else { return false };
@@ -1913,6 +2006,25 @@ impl ShardState {
                             .map(|c| u16::from_le_bytes(c.try_into().unwrap()) as f64),
                     );
                 }
+            }
+            RVOp::Nothing => buf.resize(n, 0.0),
+        }
+    }
+
+    /// f16 variant of [`ShardState::gather`]: materialize an admitted
+    /// f16 source as the interpreter's f64 element representation
+    /// (widened exactly like `load_scalar`'s f16 → f32 → f64 chain).
+    fn gather_f16(&self, pe_idx: usize, o: &RVOp<'_>, n: usize, buf: &mut Vec<f64>) {
+        buf.clear();
+        match o {
+            RVOp::Vals(v) => buf.extend_from_slice(&v[..n]),
+            RVOp::Mem(r) => {
+                let mem = &self.pes[pe_idx].mem;
+                buf.extend(
+                    mem[r.base..r.base + 2 * n]
+                        .chunks_exact(2)
+                        .map(|c| f16_to_f64(u16::from_le_bytes(c.try_into().unwrap()))),
+                );
             }
             RVOp::Nothing => buf.resize(n, 0.0),
         }
@@ -2170,6 +2282,30 @@ fn map_mem16_kernel(kind: DsdKind, dst: &mut [u8], a: &[f64], b: &[f64], scalar:
     fn run(dst: &mut [u8], a: &[f64], b: &[f64], f: impl Fn(f64, f64) -> f64) {
         for ((o, x), y) in dst.chunks_exact_mut(2).zip(a).zip(b) {
             o.copy_from_slice(&((f(*x, *y) as i64) as i16).to_le_bytes());
+        }
+    }
+    match kind {
+        DsdKind::Fadd => run(dst, a, b, |x, y| x + y),
+        DsdKind::Fsub => run(dst, a, b, |x, y| x - y),
+        DsdKind::Fmul => run(dst, a, b, |x, y| x * y),
+        DsdKind::Fmac => run(dst, a, b, |x, y| x + y * scalar),
+        DsdKind::Fscale => run(dst, a, b, |x, _| x * scalar),
+        DsdKind::Mov => run(dst, a, b, |x, _| x),
+        DsdKind::Fill => run(dst, a, b, |_, _| scalar),
+        DsdKind::FmaxOp => run(dst, a, b, |x, y| x.max(y)),
+    }
+}
+
+/// Elementwise pass into a contiguous f16 memory destination. The
+/// interpreter computes every element in f64 and stores through
+/// `store_scalar` → `f64_to_f16` (an f64→f32 rounding followed by the
+/// f32→f16 conversion); the kernel reproduces that exact rounding
+/// chain, so f16 destinations are bit-identical to the per-element
+/// path.
+fn map_mem_f16_kernel(kind: DsdKind, dst: &mut [u8], a: &[f64], b: &[f64], scalar: f64) {
+    fn run(dst: &mut [u8], a: &[f64], b: &[f64], f: impl Fn(f64, f64) -> f64) {
+        for ((o, x), y) in dst.chunks_exact_mut(2).zip(a).zip(b) {
+            o.copy_from_slice(&f64_to_f16(f(*x, *y)).to_le_bytes());
         }
     }
     match kind {
@@ -2834,6 +2970,191 @@ ty: Dtype::F32,
         let expect: Vec<u32> =
             (0..k).map(|i| (2 * (i as i16 - 3)) as u16 as u32).collect();
         assert_eq!(vec_out, expect);
+    }
+
+    /// The f16 slice kernel must be bit-identical to the per-element
+    /// interpreter (f16 Fadd over contiguous operands) — the last
+    /// dtype that used to be forced onto the interpreter.
+    #[test]
+    fn f16_slice_kernel_equivalent() {
+        let k = 8u32;
+        let prog = || {
+            let class = PeClass {
+                name: "only".into(),
+                subgrids: vec![Subgrid::point(0, 0)],
+                fields: vec![
+                    FieldAlloc {
+                        name: "in".into(),
+                        addr: 0,
+                        len: k,
+                        ty: Dtype::F16,
+                        is_extern: true,
+                    },
+                    FieldAlloc {
+                        name: "out".into(),
+                        addr: 2 * k,
+                        len: k,
+                        ty: Dtype::F16,
+                        is_extern: true,
+                    },
+                ],
+                mem_size: 4 * k,
+                tasks: vec![TaskDef {
+                    name: "main".into(),
+                    hw_id: 24,
+                    kind: TaskKind::Local,
+                    initially_active: false,
+                    initially_blocked: false,
+                    body: vec![
+                        MOp::Dsd(DsdOp {
+                            kind: DsdKind::Fmac,
+                            dst: DsdRef::mem(2 * k, SExpr::imm(k as i64), Dtype::F16),
+                            src0: Some(DsdRef::mem(0, SExpr::imm(k as i64), Dtype::F16)),
+                            src1: Some(DsdRef::mem(0, SExpr::imm(k as i64), Dtype::F16)),
+                            scalar: Some(SExpr::ImmF(0.5)),
+                            is_async: false,
+                            on_complete: vec![],
+                        }),
+                        MOp::Halt,
+                    ],
+                }],
+                entry_tasks: vec![24],
+            };
+            MachineProgram {
+                name: "scale16".into(),
+                classes: vec![class],
+                io: vec![
+                    IoBinding {
+                        arg: "in".into(),
+                        field: "in".into(),
+                        dir: IoDir::In,
+                        subgrid: Subgrid::point(0, 0),
+                        elems_per_pe: k,
+                        total_ports: 1,
+                        port_map: PortMap::default(),
+                        ty: Dtype::F16,
+                    },
+                    IoBinding {
+                        arg: "out".into(),
+                        field: "out".into(),
+                        dir: IoDir::Out,
+                        subgrid: Subgrid::point(0, 0),
+                        elems_per_pe: k,
+                        total_ports: 1,
+                        port_map: PortMap::default(),
+                        ty: Dtype::F16,
+                    },
+                ],
+                ..Default::default()
+            }
+        };
+        // f16 bit patterns incl. values that round on the f64→f16 path.
+        let input: Vec<u32> =
+            (0..k).map(|i| f64_to_f16(i as f64 * 0.3 - 1.1) as u32).collect();
+        let run = |vectorize: bool| -> (RunReport, Vec<u32>, u64) {
+            let mut sim = Simulator::new(cfg(1, 1), prog()).unwrap();
+            sim.set_threads(1);
+            sim.set_vectorize(vectorize);
+            sim.set_input_words("in", input.clone()).unwrap();
+            let report = sim.run().unwrap();
+            let out = sim.get_output_words("out").unwrap();
+            (report, out, sim.vec_ops_executed())
+        };
+        let (vec_report, vec_out, vec_ops) = run(true);
+        let (int_report, int_out, int_ops) = run(false);
+        assert!(vec_ops > 0, "MapF16 slice kernel never engaged");
+        assert_eq!(int_ops, 0);
+        assert_eq!(vec_report, int_report, "f16 engines diverged in report");
+        assert_eq!(vec_out, int_out, "f16 engines diverged in memory");
+        // Spot-check the arithmetic: out = in + in·0.5 in the f64
+        // interpreter chain, rounded through f16 exactly once.
+        let expect: Vec<u32> = input
+            .iter()
+            .map(|&w| {
+                let x = f16_to_f64(w as u16);
+                f64_to_f16(x + x * 0.5) as u32
+            })
+            .collect();
+        assert_eq!(vec_out, expect);
+    }
+
+    /// A finite endpoint capacity with an eager consumer completes with
+    /// the unbounded run's outputs, and a capacity at the unbounded
+    /// run's peak queue depth is bit-identical to the unbounded run.
+    #[test]
+    fn finite_buffers_trickle_and_size_from_peak() {
+        let k = 16u32;
+        // Unbounded p2p run for the reference output and peak depth.
+        let run_with = |cap: Option<u64>| {
+            let mut c = cfg(2, 1);
+            c.endpoint_capacity_words = cap;
+            let mut sim = Simulator::new(c, p2p_prog(k, 1)).unwrap();
+            sim.set_threads(1);
+            let a: Vec<f32> = (0..k).map(|i| i as f32).collect();
+            let acc0: Vec<f32> = vec![100.0; k as usize];
+            sim.set_input("a", &a).unwrap();
+            sim.set_input("acc0", &acc0).unwrap();
+            let report = sim.run().unwrap();
+            let out = sim.get_output("acc").unwrap();
+            (report, out)
+        };
+        let (unbounded, out_unbounded) = run_with(None);
+        // The p2p receiver issues its consume at entry, so even a tiny
+        // capacity drains at wire rate: same outputs, zero stalls.
+        let (capped, out_capped) = run_with(Some(4));
+        assert_eq!(out_capped, out_unbounded, "eager consumer must see identical values");
+        assert_eq!(capped.metrics.wavelets, unbounded.metrics.wavelets);
+        assert!(
+            unbounded.metrics.peak_queue_depth > 0,
+            "unbounded run must report its high-water mark"
+        );
+        // Capacity at the unbounded peak: bit-identical run report.
+        let (sized, out_sized) = run_with(Some(unbounded.metrics.peak_queue_depth));
+        assert_eq!(sized, unbounded, "cap >= peak depth must be bit-identical");
+        assert_eq!(out_sized, out_unbounded);
+    }
+
+    /// A flow whose destination never consumes it completes unbounded
+    /// (leftover words are legal) but deadlocks at a small capacity —
+    /// the class of failure the flow-control subsystem exists to catch.
+    #[test]
+    fn buffer_deadlock_reported_at_small_capacity() {
+        let k = 16u32;
+        let taken = 4u32;
+        let mk = || {
+            // Sender ships K words; receiver consumes only `taken`.
+            let mut prog = p2p_prog(k, 1);
+            // Shrink the receiver's consume to `taken` words.
+            let recv = &mut prog.classes[1];
+            if let MOp::Dsd(d) = &mut recv.tasks[0].body[0] {
+                d.dst = DsdRef::mem(0, SExpr::imm(taken as i64), Dtype::F32);
+                d.src0 = Some(DsdRef::mem(0, SExpr::imm(taken as i64), Dtype::F32));
+                d.src1 = Some(DsdRef::FabIn {
+                    color: 1,
+                    len: SExpr::imm(taken as i64),
+                    ty: Dtype::F32,
+                });
+            }
+            prog
+        };
+        let mut c = cfg(2, 1);
+        c.endpoint_capacity_words = None; // explicit: ignore SPADA_BUF_CAP
+        let mut sim = Simulator::new(c.clone(), mk()).unwrap();
+        sim.set_threads(1);
+        sim.set_input("a", &(0..k).map(|i| i as f32).collect::<Vec<f32>>()).unwrap();
+        sim.set_input("acc0", &vec![0.0f32; k as usize]).unwrap();
+        sim.run().expect("unbounded leftover words are legal");
+
+        c.endpoint_capacity_words = Some(8);
+        let mut sim = Simulator::new(c, mk()).unwrap();
+        sim.set_threads(1);
+        sim.set_input("a", &(0..k).map(|i| i as f32).collect::<Vec<f32>>()).unwrap();
+        sim.set_input("acc0", &vec![0.0f32; k as usize]).unwrap();
+        let err = sim.run().unwrap_err();
+        let SimError::Deadlock(msg) = err else { panic!("want buffer deadlock, got {err}") };
+        assert!(msg.contains("endpoint full"), "{msg}");
+        assert!(msg.contains("stalled"), "{msg}");
+        assert!(msg.contains("spada check --buffers"), "{msg}");
     }
 
     #[test]

@@ -18,8 +18,9 @@
 //!    fold shape: a stride-0 destination re-read as `src0`), fabric-in
 //!    value streams, or absent. Contiguous *16-bit integer* (`i16` /
 //!    `u16`) operand sets of one uniform dtype get their own verdict
-//!    ([`VecOp::Map16`]) and monomorphized kernel. Mixed dtypes,
-//!    non-unit strides, `f16`, and any other shape fall back to the
+//!    ([`VecOp::Map16`]) and monomorphized kernel, and contiguous
+//!    *f16* operand sets likewise ([`VecOp::MapF16`]). Mixed dtypes,
+//!    non-unit strides, and any other shape fall back to the
 //!    interpreter.
 //! 2. **Dynamic** ([`admit_map`] / [`admit_fold`], issue time): offsets
 //!    are runtime expressions, so the resolved byte spans are checked
@@ -51,6 +52,12 @@ pub enum VecOp {
     /// kernel that replicates the interpreter's load → f64 → truncate
     /// store arithmetic exactly.
     Map16,
+    /// Elementwise pass over contiguous `f16` memory operands (fabric-
+    /// in sources allowed). Executed by a dedicated kernel replicating
+    /// the interpreter's f16 → f64 widening and f64 → f32 → f16
+    /// rounding chain exactly — the last dtype that used to be forced
+    /// onto the per-element interpreter.
+    MapF16,
     /// Scalar-fold pass: stride-0 f32 destination accumulated through
     /// `src0` aliasing it (the backend's scalar-reduction idiom).
     Fold,
@@ -104,6 +111,11 @@ pub fn classify_vec(dst: &DsdRef, src0: &Option<DsdRef>, src1: &Option<DsdRef>) 
                 && src_ok_16(src1, *ty) =>
         {
             VecOp::Map16
+        }
+        DsdRef::Mem { stride: 1, ty: Dtype::F16, .. }
+            if src_ok_16(src0, Dtype::F16) && src_ok_16(src1, Dtype::F16) =>
+        {
+            VecOp::MapF16
         }
         DsdRef::Mem { base: bd, offset: od, stride: 0, ty: Dtype::F32, .. } => {
             // Fold requires src0 to be *the same cell* as the
@@ -291,10 +303,27 @@ mod tests {
         assert_eq!(classify_vec(&di, &fab, &None), VecOp::Map16);
         // Mixed 16-bit integer dtypes (sign extension differs): fall back.
         assert_eq!(classify_vec(&di, &Some(mem(64, 0, 1, Dtype::U16)), &None), VecOp::None);
-        // f16 is a float conversion, not an integer move: fall back.
-        assert_eq!(classify_vec(&mem(0, 0, 1, Dtype::F16), &None, &None), VecOp::None);
         // Strided 16-bit source: fall back.
         assert_eq!(classify_vec(&di, &Some(mem(64, 0, 2, Dtype::I16)), &None), VecOp::None);
+    }
+
+    #[test]
+    fn classify_f16_map() {
+        let d = mem(0, 0, 1, Dtype::F16);
+        assert_eq!(classify_vec(&d, &Some(mem(64, 0, 1, Dtype::F16)), &None), VecOp::MapF16);
+        // No sources (Fill) is a valid f16 map shape.
+        assert_eq!(classify_vec(&d, &None, &None), VecOp::MapF16);
+        // Fabric-in sources are stream-shaped and allowed.
+        let fab = Some(DsdRef::FabIn { color: 1, len: SExpr::imm(8), ty: Dtype::F16 });
+        assert_eq!(classify_vec(&d, &fab, &None), VecOp::MapF16);
+        // Mixed dtypes and strided f16 operands: fall back.
+        assert_eq!(classify_vec(&d, &Some(mem(64, 0, 1, Dtype::I16)), &None), VecOp::None);
+        assert_eq!(classify_vec(&d, &Some(mem(64, 0, 2, Dtype::F16)), &None), VecOp::None);
+        // An f16 source under an f32 destination is a conversion: fall back.
+        assert_eq!(
+            classify_vec(&mem(0, 0, 1, Dtype::F32), &Some(mem(64, 0, 1, Dtype::F16)), &None),
+            VecOp::None
+        );
     }
 
     #[test]

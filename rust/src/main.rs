@@ -49,6 +49,16 @@ impl Args {
                     )
                 {
                     flags.push((name.to_string(), it.next()));
+                } else if name == "buffers"
+                    && it
+                        .peek()
+                        .map(|n| !n.is_empty() && n.chars().all(|c| c.is_ascii_digit()))
+                        .unwrap_or(false)
+                {
+                    // `--buffers 8` — the value is optional, so only a
+                    // bare number is consumed (`--buffers kernel` keeps
+                    // the kernel as a positional).
+                    flags.push((name.to_string(), it.next()));
                 } else {
                     flags.push((name.to_string(), None));
                 }
@@ -216,6 +226,19 @@ fn real_main() -> Result<()> {
                 report.metrics.wavelets,
                 100.0 * report.utilization(),
             );
+            // Buffer-model observables: the peak depth is the capacity
+            // to size SPADA_BUF_CAP from (any cap >= it is bit-identical
+            // to the unbounded run).
+            println!(
+                "{name}: peak endpoint queue depth {} words{}, {} stall cycles{}",
+                report.metrics.peak_queue_depth,
+                match cfg.endpoint_capacity_words {
+                    Some(c) => format!(" (capacity {c})"),
+                    None => " (unbounded)".to_string(),
+                },
+                report.metrics.stall_cycles,
+                if report.metrics.stall_cycles > 0 { " (backpressure)" } else { "" },
+            );
             Ok(())
         }
         "check" => {
@@ -244,8 +267,17 @@ fn real_main() -> Result<()> {
                     (w.max(1), h.max(1))
                 }
             };
-            let cfg = MachineConfig::with_grid(w, h);
-            let report = spada::analysis::check_source(&src, &binds, &cfg, &options(&args))?;
+            let mut cfg = MachineConfig::with_grid(w, h);
+            // --buffers[=N]: run the finite-buffer credit audit. A
+            // value overrides the endpoint capacity (otherwise
+            // SPADA_BUF_CAP, otherwise the sizing audit runs on the
+            // unbounded model).
+            let buffers = args.has("buffers");
+            if let Some(v) = args.flag("buffers") {
+                cfg.endpoint_capacity_words = Some(v.parse::<u64>().context("--buffers")?);
+            }
+            let report =
+                spada::analysis::check_source_opts(&src, &binds, &cfg, &options(&args), buffers)?;
             println!("{report}");
             if report.has_errors() {
                 bail!(
@@ -254,9 +286,17 @@ fn real_main() -> Result<()> {
                     report.errors().count()
                 );
             }
+            let buffers_note = if buffers {
+                match cfg.endpoint_capacity_words {
+                    Some(c) => format!("; credit check passed at {c} words/endpoint"),
+                    None => "; buffer audit ran on the unbounded model".to_string(),
+                }
+            } else {
+                String::new()
+            };
             println!(
                 "{target}: statically verified on a {w}x{h} fabric — routing, race and \
-                 deadlock checks passed"
+                 deadlock checks passed{buffers_note}"
             );
             Ok(())
         }
@@ -302,7 +342,9 @@ fn print_help() {
          \x20 spada compile <kernel> [--bind K=64,N=8] [--grid WxH] [--emit DIR]\n\
          \x20 spada stencil <laplacian|vertical|uvbke> [--show-ir]\n\
          \x20 spada compile-stencil <file.gt> [--bind K=8,NX=16,NY=16] [--emit DIR]\n\
-         \x20 spada check <kernel|file.spada> [--bind ...] [--grid WxH]\n\
+         \x20 spada check <kernel|file.spada> [--bind ...] [--grid WxH] [--buffers[=N]]\n\
+         \x20   (--buffers adds the finite-buffer credit audit: capacity sizing hints and\n\
+         \x20    potential buffer-cycle warnings; =N caps endpoints at N words)\n\
          \x20 spada run <kernel> [--bind ...] [--grid WxH]\n\
          \x20 spada bench [--exp table2|fig4|fig5|fig6|fig7|fig8|fig9|sim|verify|all] [--quick]\n\
          \x20   (--exp sim sweeps the six kernels 4x4..128x128 at 1 and 4 worker\n\
@@ -316,6 +358,9 @@ fn print_help() {
          Env vars: SPADA_THREADS=N  simulator worker threads (default: host parallelism;\n\
          \x20                       1 = classic single-threaded loop, results bit-identical)\n\
          \x20         SPADA_NO_VEC=1  force the per-element DSD interpreter (bit-identical)\n\
+         \x20         SPADA_BUF_CAP=N finite endpoint buffers: N words per (PE, color) with\n\
+         \x20                       credit backpressure (unset = unbounded; outputs identical,\n\
+         \x20                       cycles may grow, wedges report a buffer deadlock)\n\
          Kernels: {}",
         kernels::sources().iter().map(|(n, _)| *n).collect::<Vec<_>>().join(", ")
     );

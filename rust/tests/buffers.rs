@@ -1,0 +1,351 @@
+//! Finite-buffer flow control: runtime/static agreement and
+//! finite≈unbounded equivalence.
+//!
+//! The credit-based buffer model (`machine::flowctl` +
+//! `analysis::credits`) promises three things, each pinned here:
+//!
+//! 1. **Negative fixture.** A kernel that completes on the unbounded
+//!    machine but wedges at a small endpoint capacity is caught *both*
+//!    ways: the simulator reports a buffer deadlock naming the blocked
+//!    endpoint, and the static credit pass flags the same endpoint as
+//!    a certain wedge — the two verdicts cross-reference each other.
+//! 2. **Generously-finite equivalence.** Any capacity at or above the
+//!    unbounded run's observed peak queue depth reproduces the
+//!    unbounded run bit for bit — `RunReport` and raw output words —
+//!    at 1 and 4 worker threads (property-tested over random kernels,
+//!    sizes and inputs).
+//! 3. **Output preservation under backpressure.** With eager consumers
+//!    a tight capacity only delays words, never reorders or drops
+//!    them: all six library kernels produce bit-identical *outputs*
+//!    under an 8-word cap (cycles may grow; that is the point).
+
+use spada::harness::common::{output_words, scaled_binds, stage_random_inputs};
+use spada::kernels;
+use spada::machine::{
+    DirSet, Direction, DsdKind, DsdOp, DsdRef, Dtype, FieldAlloc, IoBinding, IoDir,
+    MachineConfig, MachineProgram, MOp, PeClass, PortMap, RouteRule, RunReport, SExpr, SimError,
+    Simulator, TaskDef, TaskKind,
+};
+use spada::passes::Options;
+use spada::ptest::run_prop;
+use spada::util::Subgrid;
+
+/// A 2-PE fixture: the sender ships `send` words east on `color`, the
+/// receiver consumes only `recv` of them. Legal on an unbounded
+/// fabric (leftover words park at the endpoint); wedged whenever
+/// `send - recv` exceeds the endpoint capacity.
+fn unbalanced_prog(color: u8, send: u32, recv: u32) -> MachineProgram {
+    let sender = PeClass {
+        name: "sender".into(),
+        subgrids: vec![Subgrid::point(0, 0)],
+        fields: vec![FieldAlloc {
+            name: "a".into(),
+            addr: 0,
+            len: send,
+            ty: Dtype::F32,
+            is_extern: true,
+        }],
+        mem_size: 4 * send,
+        tasks: vec![TaskDef {
+            name: "send".into(),
+            hw_id: 25,
+            kind: TaskKind::Local,
+            initially_active: false,
+            initially_blocked: false,
+            body: vec![MOp::Dsd(DsdOp {
+                kind: DsdKind::Mov,
+                dst: DsdRef::FabOut { color, len: SExpr::imm(send as i64), ty: Dtype::F32 },
+                src0: Some(DsdRef::mem(0, SExpr::imm(send as i64), Dtype::F32)),
+                src1: None,
+                scalar: None,
+                is_async: true,
+                on_complete: vec![],
+            })],
+        }],
+        entry_tasks: vec![25],
+    };
+    let receiver = PeClass {
+        name: "recv".into(),
+        subgrids: vec![Subgrid::point(1, 0)],
+        fields: vec![FieldAlloc {
+            name: "b".into(),
+            addr: 0,
+            len: recv,
+            ty: Dtype::F32,
+            is_extern: true,
+        }],
+        mem_size: 4 * recv,
+        tasks: vec![TaskDef {
+            name: "recv".into(),
+            hw_id: 26,
+            kind: TaskKind::Local,
+            initially_active: false,
+            initially_blocked: false,
+            body: vec![MOp::Dsd(DsdOp {
+                kind: DsdKind::Mov,
+                dst: DsdRef::mem(0, SExpr::imm(recv as i64), Dtype::F32),
+                src0: Some(DsdRef::FabIn {
+                    color,
+                    len: SExpr::imm(recv as i64),
+                    ty: Dtype::F32,
+                }),
+                src1: None,
+                scalar: None,
+                is_async: true,
+                on_complete: vec![],
+            })],
+        }],
+        entry_tasks: vec![26],
+    };
+    MachineProgram {
+        name: "unbalanced".into(),
+        classes: vec![sender, receiver],
+        routes: vec![
+            RouteRule {
+                color,
+                subgrid: Subgrid::point(0, 0),
+                rx: DirSet::single(Direction::Ramp),
+                tx: DirSet::single(Direction::East),
+            },
+            RouteRule {
+                color,
+                subgrid: Subgrid::point(1, 0),
+                rx: DirSet::single(Direction::West),
+                tx: DirSet::single(Direction::Ramp),
+            },
+        ],
+        io: vec![
+            IoBinding {
+                arg: "a".into(),
+                field: "a".into(),
+                dir: IoDir::In,
+                subgrid: Subgrid::point(0, 0),
+                elems_per_pe: send,
+                total_ports: 1,
+                port_map: PortMap::default(),
+                ty: Dtype::F32,
+            },
+            IoBinding {
+                arg: "b".into(),
+                field: "b".into(),
+                dir: IoDir::Out,
+                subgrid: Subgrid::point(1, 0),
+                elems_per_pe: recv,
+                total_ports: 1,
+                port_map: PortMap::default(),
+                ty: Dtype::F32,
+            },
+        ],
+        colors_used: vec![color],
+        ..Default::default()
+    }
+}
+
+/// Grid config with an explicit capacity — explicit `None` shields the
+/// unbounded baselines from an ambient `SPADA_BUF_CAP` (the CI cap leg
+/// runs this whole suite with it set).
+fn cfg_with_cap(w: i64, h: i64, cap: Option<u64>) -> MachineConfig {
+    let mut cfg = MachineConfig::with_grid(w, h);
+    cfg.endpoint_capacity_words = cap;
+    cfg
+}
+
+fn run_unbalanced(cap: Option<u64>) -> Result<(RunReport, Vec<f32>), SimError> {
+    let mut sim = Simulator::new(cfg_with_cap(2, 1, cap), unbalanced_prog(1, 16, 4))?;
+    sim.set_threads(1);
+    sim.set_input("a", &(0..16).map(|i| i as f32).collect::<Vec<f32>>())?;
+    let report = sim.run()?;
+    let out = sim.get_output("b")?;
+    Ok((report, out))
+}
+
+/// The negative fixture end to end: completes unbounded, wedges at a
+/// small capacity, and the runtime report cross-references the static
+/// verdict — which flags the very same endpoint.
+#[test]
+fn fixture_deadlocks_at_small_capacity_and_static_agrees() {
+    // Unbounded: completes, leftover words legally park at the endpoint.
+    let (report, out) = run_unbalanced(None).expect("unbounded run completes");
+    assert_eq!(out, (0..4).map(|i| i as f32).collect::<Vec<f32>>());
+    assert_eq!(report.metrics.stall_cycles, 0);
+    assert!(report.metrics.peak_queue_depth >= 12, "leftover words occupy the endpoint");
+
+    // Capacity 8 < 12 leftover words: runtime buffer deadlock.
+    let err = run_unbalanced(Some(8)).expect_err("12 leftover words exceed an 8-word cap");
+    let SimError::Deadlock(msg) = err else { panic!("want Deadlock, got {err}") };
+    assert!(msg.contains("endpoint full"), "{msg}");
+    assert!(msg.contains("stalled"), "{msg}");
+    // The runtime message cites the static credit verdict.
+    assert!(msg.contains("spada check --buffers"), "{msg}");
+    assert!(msg.contains("buffer-deadlock"), "static verdict must be quoted: {msg}");
+
+    // The static pass, on its own, flags the same endpoint.
+    let report = spada::analysis::check(&unbalanced_prog(1, 16, 4), &cfg_with_cap(2, 1, Some(8)));
+    let diag = report
+        .diagnostics
+        .iter()
+        .find(|d| d.kind == spada::analysis::DiagKind::BufferDeadlock)
+        .expect("static credit pass must flag the wedge");
+    assert_eq!(diag.severity, spada::analysis::Severity::Error);
+    assert_eq!(diag.pe, Some((1, 0)), "the blocked endpoint is the receiver's");
+    assert_eq!(diag.color, Some(1));
+
+    // A capacity that absorbs the leftover completes again, with the
+    // unbounded outputs.
+    let (_, out12) = run_unbalanced(Some(12)).expect("leftover fits a 12-word buffer");
+    assert_eq!(out12, out);
+}
+
+/// Generously-finite equivalence, property-tested: for random library
+/// kernels, sizes and inputs, a capacity at (or above) the unbounded
+/// run's peak queue depth is bit-identical — report and output words —
+/// at 1 and 4 worker threads.
+#[test]
+fn prop_finite_cap_at_peak_depth_is_bit_identical() {
+    const KERNELS: [&str; 6] =
+        ["chain_reduce", "broadcast", "tree_reduce", "two_phase_reduce", "gemv", "gemv_tree"];
+
+    fn run_at(
+        kernel: &str,
+        g: i64,
+        k: i64,
+        seed: u64,
+        cap: Option<u64>,
+        threads: usize,
+    ) -> (RunReport, Vec<(String, Vec<u32>)>) {
+        let (binds, w, h) = scaled_binds(kernel, g, k).expect("library kernel");
+        let cfg = cfg_with_cap(w, h, cap);
+        let ck = kernels::compile(kernel, &binds, &cfg, &Options::default())
+            .unwrap_or_else(|e| panic!("{kernel} g={g}: {e:#}"));
+        let mut sim = ck.simulator().unwrap();
+        sim.set_threads(threads);
+        stage_random_inputs(&mut sim, seed);
+        let report = sim
+            .run()
+            .unwrap_or_else(|e| panic!("{kernel} g={g} cap={cap:?} threads={threads}: {e}"));
+        let outs = output_words(&sim);
+        (report, outs)
+    }
+
+    run_prop(
+        "finite-cap-equivalence",
+        0xBFC,
+        5,
+        |r| {
+            (
+                KERNELS[r.below(KERNELS.len() as u64) as usize],
+                1 + r.below(16) as i64, // K
+                4i64,                   // grid dimension (tree kernels need a power of two)
+                r.next_u64(),
+            )
+        },
+        |(kernel, k, g, seed)| {
+            let (base, base_outs) = run_at(kernel, *g, *k, *seed, None, 1);
+            let peak = base.metrics.peak_queue_depth;
+            if peak == 0 {
+                return Err(format!("{kernel}: fabric kernel must buffer at least one word"));
+            }
+            for threads in [1usize, 4] {
+                let (capped, outs) = run_at(kernel, *g, *k, *seed, Some(peak), threads);
+                if capped != base {
+                    return Err(format!(
+                        "{kernel} cap={peak} threads={threads}: RunReport diverged from the \
+                         unbounded run"
+                    ));
+                }
+                if outs != base_outs {
+                    return Err(format!(
+                        "{kernel} cap={peak} threads={threads}: outputs diverged"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Backpressure preserves values: every library kernel completes under
+/// a tight 8-word endpoint cap with outputs bit-identical to the
+/// unbounded run (cycles may grow — consumers gate on delayed words —
+/// but nothing reorders or drops).
+#[test]
+fn all_kernels_outputs_identical_under_backpressure() {
+    const KERNELS: [&str; 6] =
+        ["chain_reduce", "broadcast", "tree_reduce", "two_phase_reduce", "gemv", "gemv_tree"];
+    for kernel in KERNELS {
+        let (binds, w, h) = scaled_binds(kernel, 4, 16).expect("library kernel");
+        let run = |cap: Option<u64>| {
+            let cfg = cfg_with_cap(w, h, cap);
+            let ck = kernels::compile(kernel, &binds, &cfg, &Options::default())
+                .unwrap_or_else(|e| panic!("{kernel}: {e:#}"));
+            let mut sim = ck.simulator().unwrap();
+            sim.set_threads(1);
+            stage_random_inputs(&mut sim, 0xCAB);
+            let report =
+                sim.run().unwrap_or_else(|e| panic!("{kernel} cap={cap:?}: {e}"));
+            (report, output_words(&sim))
+        };
+        let (base, base_outs) = run(None);
+        let (capped, outs) = run(Some(8));
+        assert_eq!(outs, base_outs, "{kernel}: outputs must survive backpressure");
+        assert_eq!(
+            capped.metrics.wavelets, base.metrics.wavelets,
+            "{kernel}: traffic volume is capacity-independent"
+        );
+        assert!(
+            capped.cycles >= base.cycles,
+            "{kernel}: backpressure can only delay ({} < {})",
+            capped.cycles,
+            base.cycles
+        );
+    }
+}
+
+/// The capped engines agree with each other: under an 8-word cap the
+/// epoch-parallel engine is bit-identical to the single-queue loop
+/// (stall state is endpoint-local; admission order is the merged
+/// deterministic arrival order).
+#[test]
+fn capped_runs_bit_identical_across_threads() {
+    let (binds, w, h) = scaled_binds("chain_reduce", 8, 24).expect("library kernel");
+    let cfg = cfg_with_cap(w, h, Some(8));
+    let ck = kernels::compile("chain_reduce", &binds, &cfg, &Options::default())
+        .unwrap_or_else(|e| panic!("{e:#}"));
+    let run = |threads: usize| {
+        let mut sim = ck.simulator().unwrap();
+        sim.set_threads(threads);
+        stage_random_inputs(&mut sim, 0x5EED);
+        let report = sim.run().unwrap_or_else(|e| panic!("threads={threads}: {e}"));
+        (report, output_words(&sim))
+    };
+    let (base, base_outs) = run(1);
+    for threads in [2usize, 4, 8] {
+        let (report, outs) = run(threads);
+        assert_eq!(report, base, "capped RunReport diverged at threads={threads}");
+        assert_eq!(outs, base_outs, "capped outputs diverged at threads={threads}");
+    }
+}
+
+/// `spada check --buffers` surfaces sizing hints on the unbounded
+/// model (audit mode) while the default pipeline stays silent.
+#[test]
+fn buffer_audit_reports_sizing_only_on_request() {
+    let prog = unbalanced_prog(1, 16, 4);
+    let cfg = cfg_with_cap(2, 1, None);
+
+    let plain = spada::analysis::check(&prog, &cfg);
+    assert!(
+        !plain.has_kind(spada::analysis::DiagKind::BufferDeadlock),
+        "unbounded default check must not warn:\n{plain}"
+    );
+
+    let plan = spada::machine::RoutingPlan::build(&prog, &cfg);
+    let audited = spada::analysis::check_buffers(&prog, &cfg, &plan);
+    let diag = audited
+        .diagnostics
+        .iter()
+        .find(|d| d.kind == spada::analysis::DiagKind::BufferDeadlock)
+        .expect("audit must emit the sizing warning");
+    assert_eq!(diag.severity, spada::analysis::Severity::Warning);
+    assert!(diag.message.contains(">= 12"), "{}", diag.message);
+}

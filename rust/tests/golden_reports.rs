@@ -39,6 +39,16 @@ fn fingerprint(r: &RunReport) -> String {
 }
 
 fn check_golden(name: &str, report: &RunReport) {
+    // A finite buffer capacity (SPADA_BUF_CAP) legitimately shifts
+    // cycle counts (backpressure delays word availability) while
+    // leaving outputs bit-identical. The cycle-identity snapshots are
+    // pinned to the unbounded machine, so skip — never bootstrap or
+    // compare — when a cap is configured (the SPADA_BUF_CAP CI leg
+    // gates on output equality through the equivalence suites instead).
+    if spada::machine::flowctl::env_buf_cap().is_some() {
+        eprintln!("{name}: skipped (SPADA_BUF_CAP set; goldens pin the unbounded machine)");
+        return;
+    }
     let got = fingerprint(report);
     let dir = golden_dir();
     std::fs::create_dir_all(&dir).unwrap();

@@ -600,6 +600,27 @@ fn prop_vec_classifier_never_admits_overlap() {
                     }
                     check_map(2)
                 }
+                VecOp::MapF16 => {
+                    // Static stage: contiguous f16 dst, every memory
+                    // source f16 and contiguous too.
+                    if dst.2 != 1 || ty_of(dst.3) != Dtype::F16 {
+                        return Err(format!(
+                            "MapF16 with dst stride {} ty {:?}",
+                            dst.2,
+                            ty_of(dst.3)
+                        ));
+                    }
+                    for s in [src0.as_ref(), src1.as_ref()].into_iter().flatten() {
+                        if s.2 != 1 || ty_of(s.3) != Dtype::F16 {
+                            return Err(format!(
+                                "MapF16 with src stride {} ty {:?}",
+                                s.2,
+                                ty_of(s.3)
+                            ));
+                        }
+                    }
+                    check_map(2)
+                }
                 VecOp::Fold => {
                     // src0 must be the destination cell, exactly.
                     let s0 = src0.as_ref().ok_or("Fold without src0")?;
