@@ -6,7 +6,11 @@
 //! simulated cycle count, host wall time, event count, event-loop
 //! throughput, and the buffer-model observables (peak endpoint queue
 //! depth — the value to size `SPADA_BUF_CAP` from — and backpressure
-//! stall cycles). Results are printed as a table and written to
+//! stall cycles), plus the parallel-engine introspection figures from
+//! [`spada::machine::EngineStats`]: epoch count, max/mean per-shard
+//! event imbalance, and coordinator barrier-wait time (all trivially
+//! 0 / 1.0 / 0 on the 1-thread classic-engine rows). Results are
+//! printed as a table and written to
 //! `BENCH_sim.json` in the working directory so CI can archive the perf
 //! trajectory PR over PR — this is the baseline artifact every future
 //! simulator-performance change is measured against.
@@ -57,6 +61,16 @@ pub struct ScalePoint {
     pub stall_cycles: u64,
     pub wall_ms: f64,
     pub events_per_sec: f64,
+    /// Epoch-parallel engine epochs executed (0 on 1-thread rows — the
+    /// classic event loop has no epochs).
+    pub epochs: u64,
+    /// Max/mean per-shard event ratio (1.0 = perfectly balanced, and by
+    /// convention for the 1-shard classic engine). The headroom figure
+    /// for the shard-balancing lever in ROADMAP.md.
+    pub shard_imbalance: f64,
+    /// Host milliseconds the coordinator spent blocked on epoch
+    /// barriers — the serialized straggler-bound fraction of the run.
+    pub barrier_wait_ms: f64,
 }
 
 /// Compile one sweep kernel and stage its deterministic inputs,
@@ -115,6 +129,7 @@ pub fn sweep(quick: bool) -> Result<Vec<ScalePoint>> {
                     .map_err(anyhow::Error::from)
                     .with_context(|| format!("{kernel} {grid} threads={threads}"))?;
                 let wall_s = t0.elapsed().as_secs_f64();
+                let engine = sim.engine_stats();
                 points.push(ScalePoint {
                     kernel,
                     grid: grid.clone(),
@@ -127,6 +142,9 @@ pub fn sweep(quick: bool) -> Result<Vec<ScalePoint>> {
                     stall_cycles: report.metrics.stall_cycles,
                     wall_ms: wall_s * 1e3,
                     events_per_sec: report.events_per_sec(wall_s),
+                    epochs: engine.epochs,
+                    shard_imbalance: engine.imbalance(),
+                    barrier_wait_ms: engine.barrier_wait_ns as f64 / 1e6,
                 });
             }
         }
@@ -146,7 +164,8 @@ fn json_of(points: &[ScalePoint], quick: bool) -> String {
             "    {{\"kernel\": \"{}\", \"grid\": \"{}\", \"pes\": {}, \"threads\": {}, \
              \"host_parallelism\": {}, \"cycles\": {}, \"events\": {}, \"wavelets\": {}, \
              \"peak_queue_depth\": {}, \"stall_cycles\": {}, \"wall_ms\": {:.3}, \
-             \"events_per_sec\": {:.1}}}{}\n",
+             \"events_per_sec\": {:.1}, \"epochs\": {}, \"shard_imbalance\": {:.3}, \
+             \"barrier_wait_ms\": {:.3}}}{}\n",
             p.kernel,
             p.grid,
             p.pes,
@@ -159,6 +178,9 @@ fn json_of(points: &[ScalePoint], quick: bool) -> String {
             p.stall_cycles,
             p.wall_ms,
             p.events_per_sec,
+            p.epochs,
+            p.shard_imbalance,
+            p.barrier_wait_ms,
             if i + 1 == points.len() { "" } else { "," }
         ));
     }
@@ -170,7 +192,7 @@ pub fn run(quick: bool) -> Result<()> {
     let points = sweep(quick)?;
     let mut table = Table::new(&[
         "kernel", "grid", "PEs", "thr", "cycles", "events", "peakq", "stalls", "wall ms",
-        "events/s",
+        "events/s", "epochs", "imbal", "barrier ms",
     ]);
     for p in &points {
         table.row(&[
@@ -184,6 +206,9 @@ pub fn run(quick: bool) -> Result<()> {
             p.stall_cycles.to_string(),
             format!("{:.1}", p.wall_ms),
             eng(p.events_per_sec),
+            p.epochs.to_string(),
+            format!("{:.2}", p.shard_imbalance),
+            format!("{:.1}", p.barrier_wait_ms),
         ]);
     }
     table.print();
@@ -402,7 +427,23 @@ mod tests {
         for p in &points {
             assert!(p.cycles > 0, "{} {} ran zero cycles", p.kernel, p.grid);
             assert!(p.events > 0, "{} {} processed zero events", p.kernel, p.grid);
+            // Engine introspection: 1-thread rows are the classic
+            // engine (no epochs, trivial imbalance); multi-thread rows
+            // may still fall back to it when a kernel's links fold into
+            // a single island, so only the invariant bound is asserted.
+            if p.threads == 1 {
+                assert_eq!(p.epochs, 0, "{} {}: classic engine has no epochs", p.kernel, p.grid);
+                assert_eq!(p.shard_imbalance, 1.0);
+            } else {
+                assert!(p.shard_imbalance >= 1.0, "{} {}: {}", p.kernel, p.grid, p.shard_imbalance);
+            }
         }
+        // At least one sweep kernel decomposes into ≥ 2 islands, so the
+        // parallel rows as a whole must have logged epochs.
+        assert!(
+            points.iter().any(|p| p.threads > 1 && p.epochs > 0),
+            "no parallel row ran the epoch engine"
+        );
         // Simulated behaviour is thread-count-invariant: rows of one
         // (kernel, grid) point differ only in wall-clock fields.
         let mut by_point: BTreeMap<(&str, &str), Vec<(u64, u64, u64, u64, u64)>> = BTreeMap::new();
@@ -430,6 +471,9 @@ mod tests {
         assert!(json.contains("\"host_parallelism\""));
         assert!(json.contains("\"peak_queue_depth\""));
         assert!(json.contains("\"stall_cycles\""));
+        assert!(json.contains("\"epochs\""));
+        assert!(json.contains("\"shard_imbalance\""));
+        assert!(json.contains("\"barrier_wait_ms\""));
 
         // The gate's parser must round-trip the writer's format.
         let parsed = parse_bench_json(&json).unwrap();

@@ -125,6 +125,14 @@ pub struct EndpointBuf {
     peak: u64,
     /// Word-cycles of admission delay attributable to backpressure.
     stall_cycles: u64,
+    /// When set, every delayed admission wave is also logged to
+    /// `stalls` for the tracing layer. Off by default so the hot
+    /// admission path stays allocation-free.
+    log: bool,
+    /// Logged stall intervals: `(natural_arrival, admission, words)`
+    /// per delayed wave. Drained by the simulator via
+    /// [`EndpointBuf::take_stalls`] right after the admissions happen.
+    stalls: Vec<(u64, u64, u32)>,
 }
 
 impl EndpointBuf {
@@ -137,10 +145,13 @@ impl EndpointBuf {
             stalled: 0,
             peak: 0,
             stall_cycles: 0,
+            log: false,
+            stalls: Vec::new(),
         }
     }
 
-    /// Reset all runtime state and counters, keeping the capacity.
+    /// Reset all runtime state and counters, keeping the capacity and
+    /// the logging flag.
     pub fn clear(&mut self) {
         self.in_use = 0;
         self.flows.clear();
@@ -148,6 +159,21 @@ impl EndpointBuf {
         self.stalled = 0;
         self.peak = 0;
         self.stall_cycles = 0;
+        self.stalls.clear();
+    }
+
+    /// Enable or disable stall-interval logging (tracing support).
+    /// Logging only records what the credit accounting already
+    /// computed — it never changes admission times.
+    pub fn set_logging(&mut self, on: bool) {
+        self.log = on;
+        self.stalls.clear();
+    }
+
+    /// Drain the logged stall intervals accumulated since the last
+    /// call: `(natural_arrival, admission_time, words)` per wave.
+    pub fn take_stalls(&mut self) -> Vec<(u64, u64, u32)> {
+        std::mem::take(&mut self.stalls)
     }
 
     /// Enqueue an arrived flow. Words are admitted up to the free
@@ -188,6 +214,9 @@ impl EndpointBuf {
             if base > natural {
                 f.waves.push((s, base));
                 self.stall_cycles += (base - natural) * take as u64;
+                if self.log {
+                    self.stalls.push((natural, base, take as u32));
+                }
             }
             f.admitted += take;
             self.in_use += take as u64;
@@ -356,6 +385,33 @@ mod tests {
         assert_eq!(last, Some(105));
         assert_eq!(b.stalled_words(), 0);
         assert!(b.stall_cycles() > 0, "late drain must account stall cycles");
+    }
+
+    /// Stall logging mirrors the credit accounting exactly — the sum
+    /// of logged `(admission - natural) * words` reproduces
+    /// `stall_cycles` — and never perturbs admission behaviour.
+    #[test]
+    fn stall_log_reconciles_and_is_inert() {
+        let run = |log: bool| {
+            let mut b = EndpointBuf::new(Some(4));
+            b.set_logging(log);
+            b.push_flow(10, words(10));
+            let mut out = vec![];
+            let last = b.take(10, 100, &mut out);
+            (out, last, b.stall_cycles(), b.take_stalls())
+        };
+        let (out_on, last_on, cycles_on, stalls) = run(true);
+        let (out_off, last_off, cycles_off, none) = run(false);
+        assert_eq!(out_on, out_off, "logging must not change admitted words");
+        assert_eq!(last_on, last_off);
+        assert_eq!(cycles_on, cycles_off);
+        assert!(none.is_empty(), "logging off records nothing");
+        assert!(!stalls.is_empty());
+        let logged: u64 = stalls.iter().map(|&(nat, adm, w)| (adm - nat) * w as u64).sum();
+        assert_eq!(logged, cycles_on, "log must reconcile with stall_cycles");
+        for &(nat, adm, w) in &stalls {
+            assert!(adm > nat && w > 0);
+        }
     }
 
     /// A pending consumer pulls words as they stream in: credits free

@@ -133,38 +133,162 @@ impl RunReport {
         }
         self.metrics.flops as f64 / self.metrics.ramp_bytes as f64
     }
+
+    /// The full report as machine-readable JSON (`spada run --json`):
+    /// every counter plus the derived runtime/utilization figures.
+    /// Hand-rolled with a fixed field order so output is deterministic.
+    pub fn to_json(&self, cfg: &MachineConfig) -> String {
+        let m = &self.metrics;
+        format!(
+            "{{\"kernel\":\"{}\",\"cycles\":{},\"width\":{},\"height\":{},\
+             \"colors_used\":{},\"task_ids_used\":{},\"mem_bytes_used\":{},\
+             \"runtime_us\":{:.3},\"utilization\":{:.4},\"metrics\":{{\
+             \"events\":{},\"flows\":{},\"wavelets\":{},\"wavelet_hops\":{},\
+             \"flops\":{},\"mem_bytes\":{},\"ramp_bytes\":{},\"task_runs\":{},\
+             \"dsd_ops\":{},\"busy_cycles\":{},\"active_pes\":{},\
+             \"dispatches\":{},\"stall_cycles\":{},\"peak_queue_depth\":{}}}}}\n",
+            self.kernel.replace('\\', "\\\\").replace('"', "\\\""),
+            self.cycles,
+            self.width,
+            self.height,
+            self.colors_used,
+            self.task_ids_used,
+            self.mem_bytes_used,
+            self.runtime_us(cfg),
+            self.utilization(),
+            m.events,
+            m.flows,
+            m.wavelets,
+            m.wavelet_hops,
+            m.flops,
+            m.mem_bytes,
+            m.ramp_bytes,
+            m.task_runs,
+            m.dsd_ops,
+            m.busy_cycles,
+            m.active_pes,
+            m.dispatches,
+            m.stall_cycles,
+            m.peak_queue_depth,
+        )
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    /// Pin the merge rule for EVERY field: all counters sum except
+    /// `peak_queue_depth`, which is a per-endpoint high-water mark and
+    /// merges by max. Exhaustive by construction — the final
+    /// whole-struct equality means a new field added with the wrong
+    /// rule (or no rule) fails here before it can silently break the
+    /// parallel engine's bit-identical-metrics guarantee.
     #[test]
-    fn metrics_merge_sums_fields() {
-        let mut a = Metrics {
+    fn metrics_merge_rule_pinned_for_every_field() {
+        let a = Metrics {
             events: 1,
             flows: 2,
             wavelets: 3,
-            stall_cycles: 4,
+            wavelet_hops: 4,
+            flops: 5,
+            mem_bytes: 6,
+            ramp_bytes: 7,
+            task_runs: 8,
+            dsd_ops: 9,
+            busy_cycles: 10,
+            active_pes: 11,
+            dispatches: 12,
+            stall_cycles: 13,
             peak_queue_depth: 9,
-            ..Default::default()
         };
         let b = Metrics {
-            events: 10,
-            flops: 5,
-            dispatches: 7,
-            stall_cycles: 6,
+            events: 100,
+            flows: 200,
+            wavelets: 300,
+            wavelet_hops: 400,
+            flops: 500,
+            mem_bytes: 600,
+            ramp_bytes: 700,
+            task_runs: 800,
+            dsd_ops: 900,
+            busy_cycles: 1000,
+            active_pes: 1100,
+            dispatches: 1200,
+            stall_cycles: 1300,
             peak_queue_depth: 3,
-            ..Default::default()
         };
-        a.merge(&b);
-        assert_eq!(a.events, 11);
-        assert_eq!(a.flows, 2);
-        assert_eq!(a.wavelets, 3);
-        assert_eq!(a.flops, 5);
-        assert_eq!(a.dispatches, 7);
-        assert_eq!(a.stall_cycles, 10, "stall cycles merge by sum");
-        assert_eq!(a.peak_queue_depth, 9, "peak queue depth merges by max");
+        let mut merged = a.clone();
+        merged.merge(&b);
+        let expect = Metrics {
+            events: 101,
+            flows: 202,
+            wavelets: 303,
+            wavelet_hops: 404,
+            flops: 505,
+            mem_bytes: 606,
+            ramp_bytes: 707,
+            task_runs: 808,
+            dsd_ops: 909,
+            busy_cycles: 1010,
+            active_pes: 1111,
+            dispatches: 1212,
+            stall_cycles: 1313,
+            peak_queue_depth: 9, // max(9, 3), NOT 12
+        };
+        assert_eq!(merged, expect, "every field must merge by sum except peak (max)");
+        // Max is symmetric: merging the other way picks the same peak.
+        let mut rev = b.clone();
+        rev.merge(&a);
+        assert_eq!(rev, expect, "merge must commute");
+        // Merging the identity changes nothing.
+        let mut id = a.clone();
+        id.merge(&Metrics::default());
+        assert_eq!(id, a);
+    }
+
+    #[test]
+    fn run_report_json_round_trips_every_counter() {
+        let r = RunReport {
+            kernel: "gemv".into(),
+            cycles: 850,
+            metrics: Metrics {
+                events: 1,
+                flows: 2,
+                wavelets: 3,
+                wavelet_hops: 4,
+                flops: 8500,
+                mem_bytes: 6,
+                ramp_bytes: 7,
+                task_runs: 8,
+                dsd_ops: 9,
+                busy_cycles: 425,
+                active_pes: 1,
+                dispatches: 12,
+                stall_cycles: 13,
+                peak_queue_depth: 14,
+            },
+            width: 4,
+            height: 4,
+            colors_used: 2,
+            task_ids_used: 3,
+            mem_bytes_used: 64,
+        };
+        let cfg = MachineConfig::wse2();
+        let json = r.to_json(&cfg);
+        for key in [
+            "\"kernel\":\"gemv\"",
+            "\"cycles\":850",
+            "\"runtime_us\":1.000",
+            "\"utilization\":0.5000",
+            "\"stall_cycles\":13",
+            "\"peak_queue_depth\":14",
+            "\"busy_cycles\":425",
+            "\"dispatches\":12",
+        ] {
+            assert!(json.contains(key), "missing {key} in {json}");
+        }
+        assert!(json.ends_with("}\n"));
     }
 
     #[test]

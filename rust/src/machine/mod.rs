@@ -33,6 +33,12 @@
 //! return surface as a buffer-deadlock report — see [`flowctl`].
 //! Unconfigured (the default), endpoints are unbounded and behaviour
 //! is bit-identical to every prior snapshot.
+//!
+//! Cycle-accurate tracing ([`sim::Simulator::set_tracing`]) captures
+//! task/DSD/flow/stall records through both engines into a
+//! deterministic stream (byte-identical across `SPADA_THREADS`) for
+//! Chrome-trace export, profiling and heatmaps — see [`trace`].
+//! Tracing is off by default and never perturbs simulated cycles.
 
 pub mod config;
 pub mod flowctl;
@@ -41,6 +47,7 @@ pub mod program;
 pub mod router;
 pub mod sim;
 pub mod metrics;
+pub mod trace;
 pub mod vecop;
 
 pub use config::MachineConfig;
@@ -52,3 +59,7 @@ pub use program::{
 };
 pub use metrics::{Metrics, RunReport};
 pub use sim::{SimError, Simulator};
+pub use trace::{
+    ascii_heatmap, chrome_trace_json, EngineStats, EpochRecord, PeBreakdown, Profile, Trace,
+    TraceRecord, TraceSink,
+};

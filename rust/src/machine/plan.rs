@@ -692,6 +692,17 @@ impl RoutingPlan {
             f.error.is_none() && f.dests.iter().any(|&(d, s, _)| d == pe && s == slot)
         })
     }
+
+    /// Human-readable label for a dense link index (the inverse of the
+    /// `(y·width + x)·5 + direction` packing used by the router):
+    /// `"(x,y)->D"` where `D` is the egress direction at that cell.
+    /// Used by the trace/profile consumers to print link paths.
+    pub fn link_label(&self, li: u32) -> String {
+        const DIRS: [&str; 5] = ["N", "E", "S", "W", "R"];
+        let cell = (li / 5) as i64;
+        let (x, y) = (cell % self.width.max(1), cell / self.width.max(1));
+        format!("({x},{y})->{}", DIRS[(li % 5) as usize])
+    }
 }
 
 #[cfg(test)]

@@ -71,6 +71,7 @@ use super::program::{
     DsdKind, DsdRef, Dtype, IoDir, MachineProgram, SBinOp, SExpr, SVal, TaskActionKind,
 };
 use super::router::RouteError;
+use super::trace::{EngineStats, EpochRecord, Trace, TraceRecord};
 use super::vecop::{self, Span, VecOp, ELEM};
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap, VecDeque};
@@ -302,6 +303,9 @@ struct Ctx<'a> {
     cfg: &'a MachineConfig,
     plan: &'a RoutingPlan,
     vec_enabled: bool,
+    /// Trace-record emission enabled (see [`super::trace`]). Checked
+    /// before every push so tracing is zero-cost when off.
+    trace: bool,
     maps: Option<&'a ShardMaps>,
     /// Events processed across all shards — the runaway budget is a
     /// *global* bound, like the classic engine's. The one-shard path
@@ -379,6 +383,11 @@ struct ShardState {
     /// First error this shard hit, keyed (event time, global PE) so the
     /// coordinator picks the globally earliest one deterministically.
     error: Option<(u64, u32, SimError)>,
+    /// Trace records emitted by this shard (empty unless tracing is
+    /// on). Per-shard buffers need no synchronization; the run
+    /// epilogue concatenates them in shard-index order and stably
+    /// sorts by `(start, pe)` to reproduce the single-threaded stream.
+    trace: Vec<TraceRecord>,
 }
 
 /// Lock a shard even if a panicking worker poisoned its mutex — the
@@ -422,6 +431,17 @@ pub struct Simulator {
     threads: usize,
     /// Slice-kernel executions, summed over shards after each run.
     vec_ops: u64,
+    /// Trace-record capture enabled ([`Simulator::set_tracing`]).
+    tracing: bool,
+    /// Raw per-shard records, concatenated in shard-index order during
+    /// reassembly, before the deterministic merge sort.
+    trace_raw: Vec<TraceRecord>,
+    /// Epoch log accumulated by the parallel coordinator.
+    epoch_raw: Vec<EpochRecord>,
+    /// The finished run's merged trace (tracing runs only).
+    trace: Option<Trace>,
+    /// Engine shape of the last run (both engines populate this).
+    engine: EngineStats,
 }
 
 impl Simulator {
@@ -492,6 +512,11 @@ impl Simulator {
             vec_enabled: std::env::var_os("SPADA_NO_VEC").is_none(),
             threads: default_threads(),
             vec_ops: 0,
+            tracing: false,
+            trace_raw: Vec::new(),
+            epoch_raw: Vec::new(),
+            trace: None,
+            engine: EngineStats::default(),
         })
     }
 
@@ -538,6 +563,38 @@ impl Simulator {
         self.threads
     }
 
+    /// Enable cycle-accurate trace capture for subsequent runs (see
+    /// [`super::trace`]). Off by default; tracing records what the
+    /// engines already compute and never perturbs simulated time —
+    /// reports and outputs are bit-identical either way.
+    pub fn set_tracing(&mut self, on: bool) {
+        self.tracing = on;
+    }
+
+    /// Whether trace capture is enabled.
+    pub fn tracing_enabled(&self) -> bool {
+        self.tracing
+    }
+
+    /// The last run's merged trace (`None` unless tracing was enabled).
+    /// Records are sorted by `(start, pe)` with per-PE emission order
+    /// preserved — byte-identical across thread counts.
+    pub fn trace(&self) -> Option<&Trace> {
+        self.trace.as_ref()
+    }
+
+    /// Take ownership of the last run's trace.
+    pub fn take_trace(&mut self) -> Option<Trace> {
+        self.trace.take()
+    }
+
+    /// Engine shape of the last run: shard count, epochs, per-shard
+    /// event totals and barrier-wait time. Populated by both engines
+    /// (the classic loop reports one shard, zero epochs).
+    pub fn engine_stats(&self) -> &EngineStats {
+        &self.engine
+    }
+
     /// Reset all runtime state so this allocation can run again:
     /// restores every PE's memory to the plan's pristine image (fields
     /// are zero-initialized; inputs are staged per run, so pristine =
@@ -565,6 +622,10 @@ impl Simulator {
         }
         self.vec_ops = 0;
         self.ran = false;
+        self.trace_raw.clear();
+        self.epoch_raw.clear();
+        self.trace = None;
+        self.engine = EngineStats::default();
     }
 
     /// Dense PE lookup (row-major grid table).
@@ -727,16 +788,36 @@ impl Simulator {
         assert!(!self.ran, "Simulator::run is single-shot (use Simulator::reset to rerun)");
         self.ran = true;
         self.load_inputs()?;
+        // Arm (or disarm) endpoint stall logging to match the tracing
+        // flag — logging mirrors credit accounting without touching
+        // admission times, so this cannot perturb the run.
+        let tracing = self.tracing;
+        for pe in &mut self.pes {
+            for ep in &mut pe.endpoints {
+                ep.buf.set_logging(tracing);
+            }
+        }
         let plan = Arc::clone(&self.plan);
         let threads = self.threads.max(1);
         // The parallel engine needs ≥ 2 islands to decompose and a
         // positive lookahead to advance epochs (lookahead 0 only occurs
         // under a zero-hop-cost config, where no window can close).
-        let metrics = if threads == 1 || plan.n_islands <= 1 || plan.lookahead == 0 {
-            self.run_single()?
+        let result = if threads == 1 || plan.n_islands <= 1 || plan.lookahead == 0 {
+            self.run_single()
         } else {
-            self.run_parallel(threads)?
+            self.run_parallel(threads)
         };
+        if tracing {
+            // Deterministic merge: per-shard buffers were concatenated
+            // in shard-index order; a *stable* sort by (start, pe)
+            // reproduces the single-threaded emission order exactly —
+            // equal-key records come from one PE, which is owned by one
+            // shard and emits in nondecreasing start order.
+            let mut records = std::mem::take(&mut self.trace_raw);
+            records.sort_by_key(|r| (r.start(), r.pe()));
+            self.trace = Some(Trace { records, epochs: std::mem::take(&mut self.epoch_raw) });
+        }
+        let metrics = result?;
         self.finish(metrics)
     }
 
@@ -750,6 +831,7 @@ impl Simulator {
             cfg: &cfg,
             plan: &plan,
             vec_enabled: self.vec_enabled,
+            trace: self.tracing,
             maps: None,
             events_total: &events_total,
         };
@@ -759,6 +841,13 @@ impl Simulator {
         shard.fold_flowctl();
         self.pes = shard.pes;
         self.vec_ops += shard.vec_ops;
+        self.engine = EngineStats {
+            shards: 1,
+            epochs: 0,
+            shard_events: vec![shard.metrics.events],
+            barrier_wait_ns: 0,
+        };
+        self.trace_raw = shard.trace;
         if let Some((_, _, e)) = shard.error {
             return Err(e);
         }
@@ -816,10 +905,12 @@ impl Simulator {
             .map(|(s, p)| Mutex::new(ShardState::new(s as u32, p, link_counts[s] as usize)))
             .collect();
         let events_total = AtomicU64::new(0);
+        let tracing = self.tracing;
         let ctx = Ctx {
             cfg: &cfg,
             plan: &plan,
             vec_enabled: self.vec_enabled,
+            trace: tracing,
             maps: Some(&maps),
             events_total: &events_total,
         };
@@ -833,6 +924,16 @@ impl Simulator {
         let epoch_end = AtomicU64::new(0);
         let stop = AtomicBool::new(false);
         let mut run_error: Option<(u64, u32, SimError)> = None;
+        // Engine introspection. `epochs`/`barrier_wait` are always
+        // collected (cheap); the per-epoch log only under tracing.
+        // A pending `(window start, window end, merged msgs)` closes
+        // into an EpochRecord at the *next* scan, when every shard's
+        // post-epoch event counter is visible under its lock.
+        let mut epochs: u64 = 0;
+        let mut barrier_wait = std::time::Duration::ZERO;
+        let mut epoch_log: Vec<EpochRecord> = Vec::new();
+        let mut prev_events = vec![0u64; n_shards];
+        let mut pending: Option<(u64, u64, u64)> = None;
 
         std::thread::scope(|scope| {
             for w in 0..workers {
@@ -874,8 +975,12 @@ impl Simulator {
             loop {
                 let mut next = u64::MAX;
                 let mut err: Option<(u64, u32, SimError)> = None;
+                let mut events_now: Vec<u64> = Vec::new();
                 for sh in &shards {
                     let sh = lock_shard(sh);
+                    if tracing {
+                        events_now.push(sh.metrics.events);
+                    }
                     if let Some(e) = &sh.error {
                         // Pick the globally earliest (time, PE) error,
                         // with real program errors strictly preferred
@@ -900,6 +1005,21 @@ impl Simulator {
                         next = next.min(ev.time);
                     }
                 }
+                // Close the previous epoch's record before the exit
+                // check so the final epoch is logged too.
+                if let Some((start, end, merged)) = pending.take() {
+                    epoch_log.push(EpochRecord {
+                        start,
+                        end,
+                        merged,
+                        shard_events: events_now
+                            .iter()
+                            .zip(&prev_events)
+                            .map(|(&now, &prev)| now - prev)
+                            .collect(),
+                    });
+                    prev_events.copy_from_slice(&events_now);
+                }
                 if err.is_some() || next == u64::MAX {
                     run_error = err;
                     stop.store(true, Ordering::Release);
@@ -912,8 +1032,14 @@ impl Simulator {
                 // + depth + hop ≥ time + lookahead).
                 let end = next.saturating_add(lookahead);
                 epoch_end.store(end, Ordering::Release);
+                epochs += 1;
+                // The coordinator is blocked for the whole epoch step
+                // — this interval is the serialized (straggler-bound)
+                // epoch time the shard-balancing lever wants to shrink.
+                let t0 = std::time::Instant::now();
                 barrier.wait(); // workers step the epoch
                 barrier.wait(); // workers parked again
+                barrier_wait += t0.elapsed();
                 // Deterministic merge: deliver every buffered arrival
                 // ordered by (arrival time, send time, source PE,
                 // source sequence) — a total order independent of
@@ -923,10 +1049,14 @@ impl Simulator {
                     msgs.append(&mut lock_shard(sh).outbox);
                 }
                 msgs.sort_by_key(|m| (m.time, m.sched, m.src_pe, m.src_seq));
+                let merged = msgs.len() as u64;
                 for m in msgs {
                     debug_assert!(m.time >= end, "cross-shard arrival inside its own epoch");
                     let dst = maps.shard_of[m.dst as usize] as usize;
                     lock_shard(&shards[dst]).deliver(m);
+                }
+                if tracing {
+                    pending = Some((next, end, merged));
                 }
             }
         });
@@ -935,16 +1065,28 @@ impl Simulator {
         let mut metrics = Metrics::default();
         let mut slots: Vec<Option<Pe>> = Vec::with_capacity(plan.pes.len());
         slots.resize_with(plan.pes.len(), || None);
+        let mut shard_events = Vec::with_capacity(n_shards);
         for sh in shards {
             let mut sh = sh.into_inner().unwrap_or_else(|poisoned| poisoned.into_inner());
             sh.fold_flowctl();
             metrics.merge(&sh.metrics);
             self.vec_ops += sh.vec_ops;
+            shard_events.push(sh.metrics.events);
+            // Shard-index order: the precondition of the deterministic
+            // (start, pe) merge sort in `run`.
+            self.trace_raw.append(&mut sh.trace);
             for pe in sh.pes {
                 let g = pe.gix as usize;
                 slots[g] = Some(pe);
             }
         }
+        self.engine = EngineStats {
+            shards: n_shards,
+            epochs,
+            shard_events,
+            barrier_wait_ns: barrier_wait.as_nanos() as u64,
+        };
+        self.epoch_raw = epoch_log;
         self.pes = slots.into_iter().map(|p| p.expect("every PE returns from its shard")).collect();
         if let Some((_, _, e)) = run_error {
             return Err(e);
@@ -1093,6 +1235,7 @@ impl ShardState {
             scratch_b: Vec::new(),
             outbox: Vec::new(),
             error: None,
+            trace: Vec::new(),
         }
     }
 
@@ -1329,15 +1472,44 @@ impl ShardState {
                     self.schedule(t0.max(clock), EventKind::PeReady(gpe));
                 }
                 self.refresh_task_bit(ctx, pe_idx, ti);
+                if ctx.trace {
+                    self.drain_stall_log(ctx, pe_idx, slot);
+                }
             }
         }
 
+        if ctx.trace {
+            // The span covers exactly the cycles this activation adds
+            // to `pe.busy_cycles` below, so profile busy totals
+            // reconcile with `Metrics::busy_cycles` to the cycle.
+            self.trace.push(TraceRecord::Task { pe: gpe, task: ti as u16, start, end: clock });
+        }
         let pe = &mut self.pes[pe_idx];
         pe.busy_cycles += clock - start;
         pe.busy_until = clock;
         pe.last_activity = pe.last_activity.max(clock);
         self.schedule(clock, EventKind::PeReady(gpe));
         Ok(())
+    }
+
+    /// Drain the endpoint buffer's logged stall intervals into trace
+    /// records. Cold: called only when tracing is on, right after the
+    /// consumption/arrival that triggered admissions.
+    #[cold]
+    fn drain_stall_log(&mut self, ctx: &Ctx<'_>, pe_idx: usize, slot: u8) {
+        let gpe = self.pes[pe_idx].gix;
+        let color = ctx.plan.classes[self.pes[pe_idx].class].slot_color[slot as usize];
+        for (natural, admitted, words) in
+            self.pes[pe_idx].endpoints[slot as usize].buf.take_stalls()
+        {
+            self.trace.push(TraceRecord::Stall {
+                pe: gpe,
+                color,
+                start: natural,
+                end: admitted,
+                words,
+            });
+        }
     }
 
     /// Recompute one task's ready-mask bit from its actual state. Every
@@ -1431,6 +1603,9 @@ impl ShardState {
         // exactly the historical enqueue (see `machine::flowctl`).
         self.pes[pe_idx].endpoints[slot as usize].buf.push_flow(first_word, words);
         self.try_satisfy(ctx, pe_idx, slot)?;
+        if ctx.trace {
+            self.drain_stall_log(ctx, pe_idx, slot);
+        }
         // A data task may be waiting for this color.
         let gpe = self.pes[pe_idx].gix;
         self.schedule(first_word.max(self.now), EventKind::PeReady(gpe));
@@ -1494,6 +1669,15 @@ impl ShardState {
         self.metrics.wavelets += n;
         self.metrics.wavelet_hops += n * flow.links.len() as u64;
         self.metrics.ramp_bytes += 4 * n; // source on-ramp
+        if ctx.trace {
+            self.trace.push(TraceRecord::Flow {
+                pe: src_g,
+                color,
+                flow: fi as u32,
+                start,
+                words: n as u32,
+            });
+        }
 
         // In-shard destinations share one pool entry; every cross-shard
         // destination ships its own message through the epoch barrier.
@@ -1605,6 +1789,7 @@ impl ShardState {
             Some(r @ DsdRef::Mem { .. }) => VOp::Mem(r),
             _ => VOp::Nothing,
         };
+        let v0 = self.vec_ops;
         let out = self.apply_dsd(ctx, pe_idx, tmpl.kind, &tmpl.dst, a, b, scalar, n, tmpl.vec)?;
 
         if let Some(out_words) = out {
@@ -1622,6 +1807,17 @@ impl ShardState {
         if tmpl.actions != ACTIONS_EMPTY {
             let gpe = self.pes[pe_idx].gix;
             self.schedule(proc_done, EventKind::Complete { pe: gpe, actions: tmpl.actions });
+        }
+        if ctx.trace {
+            let gpe = self.pes[pe_idx].gix;
+            self.trace.push(TraceRecord::Dsd {
+                pe: gpe,
+                kind: tmpl.kind,
+                n: n as u32,
+                vectorized: self.vec_ops > v0,
+                start: c.issue_time,
+                end: proc_done,
+            });
         }
         let pe = &mut self.pes[pe_idx];
         pe.last_activity = pe.last_activity.max(proc_done);
@@ -2153,6 +2349,8 @@ impl ShardState {
         op: &PDsd,
         clock: &mut u64,
     ) -> Result<(), SimError> {
+        let t0 = *clock;
+        let v0 = self.vec_ops;
         *clock += ctx.cfg.dsd_issue_cycles;
         let n = self.dsd_len(pe_idx, op);
         let fabout_dst = matches!(op.dst, DsdRef::FabOut { .. });
@@ -2173,6 +2371,12 @@ impl ShardState {
                 },
             );
             self.try_satisfy(ctx, pe_idx, op.fab_slot)?;
+            if ctx.trace {
+                // The DSD span itself is emitted when the consume
+                // completes (`complete_consume`); only freshly logged
+                // admission stalls are drained here.
+                self.drain_stall_log(ctx, pe_idx, op.fab_slot);
+            }
             return Ok(());
         }
 
@@ -2192,6 +2396,17 @@ impl ShardState {
             };
             let (_start, drain_end) =
                 self.send_flow(ctx, pe_idx, color, Arc::new(words), *clock + 1)?;
+            if ctx.trace {
+                let gpe = self.pes[pe_idx].gix;
+                self.trace.push(TraceRecord::Dsd {
+                    pe: gpe,
+                    kind: op.kind,
+                    n: n as u32,
+                    vectorized: self.vec_ops > v0,
+                    start: t0,
+                    end: drain_end,
+                });
+            }
             if op.is_async {
                 if op.actions != ACTIONS_EMPTY {
                     let gpe = self.pes[pe_idx].gix;
@@ -2220,6 +2435,17 @@ impl ShardState {
         let b = op.src1.as_ref().map(VOp::Mem).unwrap_or(VOp::Nothing);
         self.apply_dsd(ctx, pe_idx, op.kind, &op.dst, a, b, scalar, n, op.vec)?;
         *clock += self.elem_cycles(ctx, ty, n as u64);
+        if ctx.trace {
+            let gpe = self.pes[pe_idx].gix;
+            self.trace.push(TraceRecord::Dsd {
+                pe: gpe,
+                kind: op.kind,
+                n: n as u32,
+                vectorized: self.vec_ops > v0,
+                start: t0,
+                end: *clock,
+            });
+        }
         self.apply_actions_id(ctx, pe_idx, op.actions);
         Ok(())
     }
@@ -2763,11 +2989,11 @@ ty: Dtype::F32,
         assert_eq!(sim.get_output("v").unwrap(), vec![42.0]);
     }
 
-    /// Data task fires once per wavelet.
-    #[test]
-    fn data_task_per_wavelet() {
-        let n = 5u32;
-        let color = 2u8;
+    /// Sender streams `n` words east; a receiver *data task* fires per
+    /// wavelet and accumulates into addr 0 (shared by the data-task and
+    /// stall-trace tests — the per-wavelet consumption rate is far
+    /// slower than the wire, so a small endpoint cap guarantees stalls).
+    fn datatask_prog(n: u32, color: u8) -> MachineProgram {
         let sender = PeClass {
             name: "s".into(),
             subgrids: vec![Subgrid::point(0, 0)],
@@ -2827,7 +3053,7 @@ ty: Dtype::F32,
             }],
             entry_tasks: vec![],
         };
-        let prog = MachineProgram {
+        MachineProgram {
             name: "datatask".into(),
             classes: vec![sender, recv],
             routes: vec![
@@ -2868,8 +3094,13 @@ ty: Dtype::F32,
             ],
             colors_used: vec![color],
             ..Default::default()
-        };
-        let mut sim = Simulator::new(cfg(2, 1), prog).unwrap();
+        }
+    }
+
+    /// Data task fires once per wavelet.
+    #[test]
+    fn data_task_per_wavelet() {
+        let mut sim = Simulator::new(cfg(2, 1), datatask_prog(5, 2)).unwrap();
         sim.set_input("a", &[1.0, 2.0, 3.0, 4.0, 5.0]).unwrap();
         sim.run().unwrap();
         assert_eq!(sim.get_output("sum").unwrap(), vec![15.0]);
@@ -3163,5 +3394,119 @@ ty: Dtype::F32,
             let bits = f64_to_f16(v);
             assert!((f16_to_f64(bits) - v).abs() < 1e-3, "{v}");
         }
+    }
+
+    /// Tracing must never perturb the run (reports and outputs are
+    /// bit-identical with it on or off), the merged record stream must
+    /// be identical across thread counts, and busy cycles must
+    /// reconcile with `Metrics::busy_cycles` exactly.
+    #[test]
+    fn tracing_inert_and_thread_invariant() {
+        let k = 16u32;
+        let run = |threads: usize, tracing: bool| {
+            let mut sim = Simulator::new(cfg(2, 1), p2p_prog(k, 1)).unwrap();
+            sim.set_threads(threads);
+            sim.set_tracing(tracing);
+            sim.set_input("a", &(0..k).map(|i| i as f32).collect::<Vec<f32>>()).unwrap();
+            sim.set_input("acc0", &vec![100.0f32; k as usize]).unwrap();
+            let report = sim.run().unwrap();
+            let out = sim.get_output("acc").unwrap();
+            (report, out, sim.take_trace())
+        };
+        let (plain_report, plain_out, none) = run(1, false);
+        assert!(none.is_none(), "no trace unless enabled");
+        let (base_report, base_out, base_trace) = run(1, true);
+        assert_eq!(base_report, plain_report, "tracing must not change the report");
+        assert_eq!(base_out, plain_out);
+        let base_trace = base_trace.expect("tracing run produces a trace");
+        assert!(!base_trace.records.is_empty());
+        assert!(base_trace.epochs.is_empty(), "classic engine has no epochs");
+        // Sorted by (start, pe) — the documented merge order.
+        let keys: Vec<(u64, u32)> =
+            base_trace.records.iter().map(|r| (r.start(), r.pe())).collect();
+        let mut sorted = keys.clone();
+        sorted.sort();
+        assert_eq!(keys, sorted);
+        // Task spans reconcile with the metrics busy counter exactly.
+        let busy: u64 = base_trace
+            .records
+            .iter()
+            .map(|r| match *r {
+                TraceRecord::Task { start, end, .. } => end - start,
+                _ => 0,
+            })
+            .sum();
+        assert_eq!(busy, base_report.metrics.busy_cycles);
+        assert!(base_trace
+            .records
+            .iter()
+            .any(|r| matches!(r, TraceRecord::Flow { .. })));
+        // The sharded engine (p2p = 2 islands at >= 2 threads) emits
+        // the identical record stream.
+        for threads in [2, 4] {
+            let (report, out, trace) = run(threads, true);
+            assert_eq!(report, base_report, "threads={threads}");
+            assert_eq!(out, base_out);
+            let trace = trace.unwrap();
+            assert_eq!(
+                trace.records, base_trace.records,
+                "trace records diverged at threads={threads}"
+            );
+            assert!(!trace.epochs.is_empty(), "parallel engine logs its epochs");
+            let merged_events: u64 =
+                trace.epochs.iter().flat_map(|e| e.shard_events.iter()).sum();
+            assert!(merged_events <= report.metrics.events);
+        }
+    }
+
+    /// With a finite endpoint capacity and a slow consumer, stall
+    /// records appear and reconcile with `Metrics::stall_cycles`
+    /// exactly: sum of (admission - natural) * words.
+    #[test]
+    fn stall_records_reconcile_with_metrics() {
+        let mut c = cfg(2, 1);
+        c.endpoint_capacity_words = Some(2);
+        let mut sim = Simulator::new(c, datatask_prog(5, 2)).unwrap();
+        sim.set_threads(1);
+        sim.set_tracing(true);
+        sim.set_input("a", &[1.0, 2.0, 3.0, 4.0, 5.0]).unwrap();
+        let report = sim.run().unwrap();
+        assert_eq!(sim.get_output("sum").unwrap(), vec![15.0]);
+        assert!(report.metrics.stall_cycles > 0, "slow consumer must stall the tail");
+        let trace = sim.take_trace().unwrap();
+        let logged: u64 = trace
+            .records
+            .iter()
+            .map(|r| match *r {
+                TraceRecord::Stall { start, end, words, .. } => (end - start) * words as u64,
+                _ => 0,
+            })
+            .sum();
+        assert_eq!(logged, report.metrics.stall_cycles, "stall records must reconcile");
+    }
+
+    /// Both engines report their shape: the classic loop as one shard
+    /// with zero epochs, the parallel engine with its real shard count
+    /// and per-shard event totals summing to `Metrics::events`.
+    #[test]
+    fn engine_stats_cover_both_engines() {
+        let run = |threads: usize| {
+            let k = 16u32;
+            let mut sim = Simulator::new(cfg(2, 1), p2p_prog(k, 1)).unwrap();
+            sim.set_threads(threads);
+            sim.set_input("a", &(0..k).map(|i| i as f32).collect::<Vec<f32>>()).unwrap();
+            sim.set_input("acc0", &vec![100.0f32; k as usize]).unwrap();
+            let report = sim.run().unwrap();
+            (report, sim.engine_stats().clone())
+        };
+        let (report, st) = run(1);
+        assert_eq!((st.shards, st.epochs), (1, 0));
+        assert_eq!(st.shard_events, vec![report.metrics.events]);
+        assert_eq!(st.imbalance(), 1.0);
+        let (report, st) = run(4);
+        assert_eq!(st.shards, 2, "p2p decomposes into 2 link-sharing islands");
+        assert!(st.epochs > 0);
+        assert_eq!(st.shard_events.iter().sum::<u64>(), report.metrics.events);
+        assert!(st.imbalance() >= 1.0);
     }
 }

@@ -1,0 +1,763 @@
+//! Cycle-accurate tracing and profiling — the simulator's observability
+//! substrate.
+//!
+//! The simulator's only end-of-run observables used to be the aggregate
+//! [`super::Metrics`] counters; this module captures *where* the cycles
+//! go. When tracing is enabled ([`super::sim::Simulator::set_tracing`])
+//! both engines emit typed [`TraceRecord`]s at the same semantic points
+//! — task activations, DSD operations, flow injections, backpressure
+//! stalls — into per-shard buffers with no synchronization. After the
+//! run the buffers are concatenated in shard-index order and stably
+//! sorted by `(start_cycle, pe)`, which reproduces the single-threaded
+//! emission order exactly: records with equal keys come from the same
+//! PE (a PE emits in nondecreasing start order and is owned by exactly
+//! one shard), so the stable sort preserves their relative order and
+//! the merged stream is byte-identical across `SPADA_THREADS`.
+//!
+//! Tracing never perturbs simulated time: every emission site reads
+//! state the simulator computed anyway and is gated on a boolean that
+//! is false by default (zero-cost-when-off).
+//!
+//! Three consumers sit on top of the deterministic stream, all driven
+//! through the [`TraceSink`] trait by [`Trace::replay`]:
+//!
+//! 1. [`chrome_trace_json`] — a Chrome trace-event JSON writer
+//!    (Perfetto-loadable; `spada run --trace out.json`);
+//! 2. [`Profile`] — per-PE busy/stall/idle breakdowns, per-link
+//!    occupancy, hot-PE/hot-link tables (`spada profile`);
+//! 3. [`ascii_heatmap`] — a time-binned utilization heatmap for quick
+//!    terminal diagnosis.
+//!
+//! Engine-level introspection (shard/epoch structure, barrier-wait
+//! attribution) is deliberately split off into [`EngineStats`] and
+//! [`EpochRecord`]: epoch structure legitimately differs between
+//! thread counts (the single-queue loop has no epochs at all) and
+//! barrier wait is wall-clock, so neither may participate in the
+//! deterministic stream. Epoch tracks appear in the Chrome export only
+//! behind an explicit opt-in.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use super::plan::RoutingPlan;
+use super::program::{DsdKind, MachineProgram};
+
+/// One typed trace record. Cheap (`Copy`) so emission is a guarded
+/// push into a per-shard `Vec` and nothing more.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceRecord {
+    /// A task activation span on one PE.
+    Task { pe: u32, task: u16, start: u64, end: u64 },
+    /// A DSD operation span (vectorized by the batch engine or
+    /// interpreted element-wise).
+    Dsd { pe: u32, kind: DsdKind, n: u32, vectorized: bool, start: u64, end: u64 },
+    /// A flow injected into the fabric at `pe` on `color`. `flow`
+    /// indexes [`RoutingPlan::flows`]; consumers resolve the link path
+    /// and destinations from the plan, so the record itself stays
+    /// small. The drain occupies `[start, start + words)` at the
+    /// injection ramp.
+    Flow { pe: u32, color: u8, flow: u32, start: u64, words: u32 },
+    /// A backpressure interval from [`super::flowctl`]: `words` words
+    /// whose natural wire arrival was `start` were admitted into the
+    /// finite endpoint buffer at `end`. Contributes
+    /// `(end - start) * words` to `Metrics::stall_cycles`.
+    Stall { pe: u32, color: u8, start: u64, end: u64, words: u32 },
+}
+
+impl TraceRecord {
+    /// The PE this record is attributed to (source PE for flows).
+    pub fn pe(&self) -> u32 {
+        match *self {
+            TraceRecord::Task { pe, .. }
+            | TraceRecord::Dsd { pe, .. }
+            | TraceRecord::Flow { pe, .. }
+            | TraceRecord::Stall { pe, .. } => pe,
+        }
+    }
+
+    /// The record's start cycle — the primary merge key.
+    pub fn start(&self) -> u64 {
+        match *self {
+            TraceRecord::Task { start, .. }
+            | TraceRecord::Dsd { start, .. }
+            | TraceRecord::Flow { start, .. }
+            | TraceRecord::Stall { start, .. } => start,
+        }
+    }
+}
+
+/// One conservative-lookahead epoch of the parallel engine. Engine
+/// introspection only — excluded from the deterministic record stream
+/// (the single-threaded loop has no epochs).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct EpochRecord {
+    /// Epoch window `[start, end)` in simulated cycles.
+    pub start: u64,
+    /// Window end (exclusive).
+    pub end: u64,
+    /// Cross-shard messages merged at this epoch's barrier.
+    pub merged: u64,
+    /// Events each shard processed inside this window, indexed by
+    /// shard.
+    pub shard_events: Vec<u64>,
+}
+
+/// Aggregate engine statistics for one run, populated by both engines
+/// (the classic loop reports itself as a single shard with zero
+/// epochs). Cheap enough to collect unconditionally — this is what the
+/// bench harness surfaces as the shard-balancing baseline.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct EngineStats {
+    /// Shards the fabric was folded onto (1 = classic engine).
+    pub shards: usize,
+    /// Epoch barriers crossed (0 = classic engine).
+    pub epochs: u64,
+    /// Total events processed per shard, in shard-index order.
+    pub shard_events: Vec<u64>,
+    /// Wall-clock nanoseconds the coordinator spent inside epoch
+    /// barriers (not simulated time; varies run to run).
+    pub barrier_wait_ns: u64,
+}
+
+impl EngineStats {
+    /// Shard load imbalance: max/mean of per-shard event counts. 1.0
+    /// is perfectly balanced; 1.0 is also reported for a single shard
+    /// or an empty run, where imbalance is not meaningful.
+    pub fn imbalance(&self) -> f64 {
+        if self.shard_events.len() <= 1 {
+            return 1.0;
+        }
+        let max = *self.shard_events.iter().max().unwrap_or(&0);
+        let sum: u64 = self.shard_events.iter().sum();
+        let mean = sum as f64 / self.shard_events.len() as f64;
+        if mean == 0.0 {
+            1.0
+        } else {
+            max as f64 / mean
+        }
+    }
+}
+
+/// A consumer of trace records. Implementations receive the merged
+/// deterministic stream in `(start, pe)` order via [`Trace::replay`];
+/// epoch records (engine introspection, not deterministic) arrive
+/// separately and default to ignored.
+pub trait TraceSink {
+    fn record(&mut self, rec: TraceRecord);
+    fn epoch(&mut self, _rec: &EpochRecord) {}
+}
+
+/// A completed run's trace: the merged deterministic record stream
+/// plus (for parallel runs) the epoch log.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Trace {
+    /// Records sorted by `(start, pe)`, ties in per-PE emission order.
+    pub records: Vec<TraceRecord>,
+    /// Epoch log, empty for single-threaded runs.
+    pub epochs: Vec<EpochRecord>,
+}
+
+impl Trace {
+    /// Drive a sink over the whole trace: every record in merged
+    /// order, then every epoch.
+    pub fn replay(&self, sink: &mut dyn TraceSink) {
+        for rec in &self.records {
+            sink.record(*rec);
+        }
+        for ep in &self.epochs {
+            sink.epoch(ep);
+        }
+    }
+}
+
+/// Escape a string for embedding in a JSON string literal.
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Longest flow path rendered into Chrome event args before eliding.
+const MAX_PATH_HOPS: usize = 16;
+
+/// Track (pid) layout of the Chrome export. Tasks and DSD spans get
+/// separate processes because an async fabric-in consume span can
+/// overlap the task spans of the same PE, and Chrome slice tracks
+/// require proper nesting within one (pid, tid).
+const PID_TASKS: u32 = 0;
+const PID_DSD: u32 = 1;
+const PID_FLOWS: u32 = 2;
+const PID_STALLS: u32 = 3;
+const PID_EPOCHS: u32 = 9;
+
+/// Streams the trace into Chrome trace-event JSON ("JSON array
+/// format" wrapped in `{"traceEvents": [...]}`), loadable in Perfetto
+/// or `chrome://tracing`. Timestamps and durations are simulated
+/// cycles written as integers — no floating point, so the output is
+/// byte-identical whenever the record stream is.
+struct ChromeWriter<'a> {
+    prog: &'a MachineProgram,
+    plan: &'a RoutingPlan,
+    include_epochs: bool,
+    out: String,
+    first: bool,
+}
+
+impl<'a> ChromeWriter<'a> {
+    fn new(prog: &'a MachineProgram, plan: &'a RoutingPlan, include_epochs: bool) -> Self {
+        let mut w = ChromeWriter {
+            prog,
+            plan,
+            include_epochs,
+            out: String::from("{\"traceEvents\":[\n"),
+            first: true,
+        };
+        w.metadata();
+        w
+    }
+
+    fn push(&mut self, ev: &str) {
+        if !self.first {
+            self.out.push_str(",\n");
+        }
+        self.first = false;
+        self.out.push_str(ev);
+    }
+
+    fn meta(&mut self, kind: &str, pid: u32, tid: u32, name: &str) {
+        let ev = format!(
+            "{{\"ph\":\"M\",\"pid\":{pid},\"tid\":{tid},\"name\":\"{kind}\",\
+             \"args\":{{\"name\":\"{}\"}}}}",
+            esc(name)
+        );
+        self.push(&ev);
+    }
+
+    fn metadata(&mut self) {
+        self.meta("process_name", PID_TASKS, 0, "PE tasks");
+        self.meta("process_name", PID_DSD, 0, "DSD ops");
+        self.meta("process_name", PID_FLOWS, 0, "flows (by source PE)");
+        self.meta("process_name", PID_STALLS, 0, "endpoint stalls");
+        if self.include_epochs {
+            self.meta("process_name", PID_EPOCHS, 0, "engine epochs");
+        }
+        for (pi, pe) in self.plan.pes.iter().enumerate() {
+            self.meta("thread_name", PID_TASKS, pi as u32, &format!("PE({},{})", pe.x, pe.y));
+        }
+    }
+
+    fn task_name(&self, pe: u32, task: u16) -> String {
+        let class = match self.plan.pes.get(pe as usize) {
+            Some(p) => p.class,
+            None => return format!("task{task}"),
+        };
+        self.prog
+            .classes
+            .get(class)
+            .and_then(|c| c.tasks.get(task as usize))
+            .map(|t| t.name.clone())
+            .unwrap_or_else(|| format!("task{task}"))
+    }
+
+    /// Human-readable link path of a planned flow: per-hop
+    /// `(x,y)->DIR@depth` labels, elided past [`MAX_PATH_HOPS`].
+    fn flow_path(&self, fi: u32) -> String {
+        let Some(flow) = self.plan.flows.get(fi as usize) else {
+            return String::new();
+        };
+        let mut parts: Vec<String> = flow
+            .links
+            .iter()
+            .take(MAX_PATH_HOPS)
+            .map(|&(li, depth)| format!("{}@{depth}", self.plan.link_label(li)))
+            .collect();
+        if flow.links.len() > MAX_PATH_HOPS {
+            parts.push("…".into());
+        }
+        parts.join(" ")
+    }
+
+    fn finish(mut self) -> String {
+        self.out.push_str("\n]}\n");
+        self.out
+    }
+}
+
+impl TraceSink for ChromeWriter<'_> {
+    fn record(&mut self, rec: TraceRecord) {
+        let ev = match rec {
+            TraceRecord::Task { pe, task, start, end } => format!(
+                "{{\"ph\":\"X\",\"pid\":{PID_TASKS},\"tid\":{pe},\"ts\":{start},\
+                 \"dur\":{},\"name\":\"{}\",\"args\":{{\"task\":{task}}}}}",
+                end - start,
+                esc(&self.task_name(pe, task)),
+            ),
+            TraceRecord::Dsd { pe, kind, n, vectorized, start, end } => format!(
+                "{{\"ph\":\"X\",\"pid\":{PID_DSD},\"tid\":{pe},\"ts\":{start},\
+                 \"dur\":{},\"name\":\"{kind:?}\",\
+                 \"args\":{{\"n\":{n},\"vectorized\":{vectorized}}}}}",
+                end - start,
+            ),
+            TraceRecord::Flow { pe, color, flow, start, words } => {
+                let hops =
+                    self.plan.flows.get(flow as usize).map(|f| f.links.len()).unwrap_or(0);
+                format!(
+                    "{{\"ph\":\"X\",\"pid\":{PID_FLOWS},\"tid\":{pe},\"ts\":{start},\
+                     \"dur\":{words},\"name\":\"c{color}\",\
+                     \"args\":{{\"words\":{words},\"hops\":{hops},\"path\":\"{}\"}}}}",
+                    esc(&self.flow_path(flow)),
+                )
+            }
+            TraceRecord::Stall { pe, color, start, end, words } => format!(
+                "{{\"ph\":\"X\",\"pid\":{PID_STALLS},\"tid\":{pe},\"ts\":{start},\
+                 \"dur\":{},\"name\":\"stall c{color}\",\"args\":{{\"words\":{words}}}}}",
+                end - start,
+            ),
+        };
+        self.push(&ev);
+    }
+
+    fn epoch(&mut self, rec: &EpochRecord) {
+        if !self.include_epochs {
+            return;
+        }
+        let dur = rec.end.saturating_sub(rec.start).max(1);
+        let events: u64 = rec.shard_events.iter().sum();
+        let ev = format!(
+            "{{\"ph\":\"X\",\"pid\":{PID_EPOCHS},\"tid\":0,\"ts\":{},\"dur\":{dur},\
+             \"name\":\"epoch\",\"args\":{{\"merged\":{},\"events\":{events}}}}}",
+            rec.start, rec.merged,
+        );
+        self.push(&ev);
+        for (si, &n) in rec.shard_events.iter().enumerate() {
+            if n == 0 {
+                continue;
+            }
+            let ev = format!(
+                "{{\"ph\":\"X\",\"pid\":{PID_EPOCHS},\"tid\":{},\"ts\":{},\"dur\":{dur},\
+                 \"name\":\"shard\",\"args\":{{\"events\":{n}}}}}",
+                si + 1,
+                rec.start,
+            );
+            self.push(&ev);
+        }
+    }
+}
+
+/// Render a trace as Chrome trace-event JSON. `include_epochs` adds
+/// the parallel engine's epoch/shard tracks — engine introspection
+/// that varies with the thread count, so it is off for the default
+/// deterministic export.
+pub fn chrome_trace_json(
+    trace: &Trace,
+    prog: &MachineProgram,
+    plan: &RoutingPlan,
+    include_epochs: bool,
+) -> String {
+    let mut w = ChromeWriter::new(prog, plan, include_epochs);
+    trace.replay(&mut w);
+    w.finish()
+}
+
+/// Per-PE cycle attribution in a [`Profile`].
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct PeBreakdown {
+    pub pe: u32,
+    pub x: i64,
+    pub y: i64,
+    /// Cycles inside task-activation spans. Task spans on one PE never
+    /// overlap (the scheduler is non-preemptive), so `busy <= makespan`
+    /// and summing over PEs reproduces `Metrics::busy_cycles` exactly.
+    pub busy: u64,
+    /// Word-cycles of backpressure delay at this PE's endpoints
+    /// (sums to `Metrics::stall_cycles` over all PEs). Word-cycles,
+    /// not wall cycles — overlapping per-word delays accumulate.
+    pub stall: u64,
+    /// `makespan - busy`.
+    pub idle: u64,
+    /// Task activations.
+    pub tasks: u64,
+}
+
+/// In-memory profile aggregator: one [`TraceSink`] pass over the
+/// record stream, then cheap queries (hot PEs, hot links, occupancy
+/// histogram). Built from a finished trace with [`Profile::build`].
+#[derive(Clone, Debug, Default)]
+pub struct Profile {
+    /// Run makespan the breakdowns are measured against.
+    pub cycles: u64,
+    /// One entry per planned PE, in PE-index order.
+    pub pes: Vec<PeBreakdown>,
+    /// Dense link index → busy word-cycles (each word occupies each
+    /// link on its path for one cycle; wormhole arbitration keeps the
+    /// per-link intervals disjoint, so busy ≤ makespan per link).
+    pub links: BTreeMap<u32, u64>,
+    pub total_busy: u64,
+    pub total_stall: u64,
+    pub dsd_ops: u64,
+    pub dsd_vectorized: u64,
+    /// Flow count (fabric injections).
+    pub flows: u64,
+    link_paths: BTreeMap<u32, Vec<u32>>,
+}
+
+impl Profile {
+    /// Aggregate a finished trace against its routing plan.
+    /// `cycles` is the run makespan (`RunReport::cycles`).
+    pub fn build(trace: &Trace, plan: &RoutingPlan, cycles: u64) -> Profile {
+        let mut p = Profile {
+            cycles,
+            pes: plan
+                .pes
+                .iter()
+                .enumerate()
+                .map(|(i, pe)| PeBreakdown {
+                    pe: i as u32,
+                    x: pe.x,
+                    y: pe.y,
+                    idle: cycles,
+                    ..Default::default()
+                })
+                .collect(),
+            ..Default::default()
+        };
+        for (fi, flow) in plan.flows.iter().enumerate() {
+            p.link_paths.insert(fi as u32, flow.links.iter().map(|&(li, _)| li).collect());
+        }
+        trace.replay(&mut p);
+        for pe in &mut p.pes {
+            pe.idle = cycles.saturating_sub(pe.busy);
+        }
+        p.total_busy = p.pes.iter().map(|b| b.busy).sum();
+        p.total_stall = p.pes.iter().map(|b| b.stall).sum();
+        p
+    }
+
+    /// Top-`n` PEs by busy cycles (ties broken by PE index).
+    pub fn hot_pes(&self, n: usize) -> Vec<&PeBreakdown> {
+        let mut v: Vec<&PeBreakdown> = self.pes.iter().filter(|b| b.busy > 0).collect();
+        v.sort_by(|a, b| b.busy.cmp(&a.busy).then(a.pe.cmp(&b.pe)));
+        v.truncate(n);
+        v
+    }
+
+    /// Top-`n` links by busy word-cycles (ties broken by link index).
+    pub fn hot_links(&self, n: usize) -> Vec<(u32, u64)> {
+        let mut v: Vec<(u32, u64)> = self.links.iter().map(|(&li, &b)| (li, b)).collect();
+        v.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        v.truncate(n);
+        v
+    }
+
+    /// Occupancy histogram over used links: decile bins of
+    /// `busy / makespan` (bin 0 = <10 % occupied, bin 9 = ≥90 %).
+    pub fn link_histogram(&self) -> [u64; 10] {
+        let mut bins = [0u64; 10];
+        if self.cycles == 0 {
+            return bins;
+        }
+        for &busy in self.links.values() {
+            let decile = (10 * busy / self.cycles).min(9) as usize;
+            bins[decile] += 1;
+        }
+        bins
+    }
+
+    /// Machine-readable JSON (hand-rolled, deterministic field order).
+    pub fn to_json(&self, plan: &RoutingPlan, top: usize) -> String {
+        let mut out = String::new();
+        let _ = write!(
+            out,
+            "{{\"cycles\":{},\"total_busy\":{},\"total_stall\":{},\
+             \"dsd_ops\":{},\"dsd_vectorized\":{},\"flows\":{},\"pes\":[",
+            self.cycles, self.total_busy, self.total_stall, self.dsd_ops,
+            self.dsd_vectorized, self.flows,
+        );
+        for (i, b) in self.pes.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let _ = write!(
+                out,
+                "{{\"pe\":{},\"x\":{},\"y\":{},\"busy\":{},\"stall\":{},\
+                 \"idle\":{},\"tasks\":{}}}",
+                b.pe, b.x, b.y, b.busy, b.stall, b.idle, b.tasks,
+            );
+        }
+        out.push_str("],\"hot_links\":[");
+        for (i, (li, busy)) in self.hot_links(top).iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let _ = write!(
+                out,
+                "{{\"link\":\"{}\",\"busy\":{busy}}}",
+                esc(&plan.link_label(*li)),
+            );
+        }
+        out.push_str("],\"link_histogram\":[");
+        for (i, n) in self.link_histogram().iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let _ = write!(out, "{n}");
+        }
+        out.push_str("]}\n");
+        out
+    }
+}
+
+impl TraceSink for Profile {
+    fn record(&mut self, rec: TraceRecord) {
+        match rec {
+            TraceRecord::Task { pe, start, end, .. } => {
+                if let Some(b) = self.pes.get_mut(pe as usize) {
+                    b.busy += end - start;
+                    b.tasks += 1;
+                }
+            }
+            TraceRecord::Dsd { vectorized, .. } => {
+                self.dsd_ops += 1;
+                if vectorized {
+                    self.dsd_vectorized += 1;
+                }
+            }
+            TraceRecord::Flow { flow, words, .. } => {
+                self.flows += 1;
+                if let Some(path) = self.link_paths.get(&flow) {
+                    for &li in path {
+                        *self.links.entry(li).or_insert(0) += words as u64;
+                    }
+                }
+            }
+            TraceRecord::Stall { pe, start, end, words, .. } => {
+                if let Some(b) = self.pes.get_mut(pe as usize) {
+                    b.stall += (end - start) * words as u64;
+                }
+            }
+        }
+    }
+}
+
+/// Character ramp for heatmap cells, blank → saturated.
+const HEAT_RAMP: &[u8; 10] = b" .:-=+*#%@";
+
+/// Render a time-binned PE-utilization heatmap: rows are groups of
+/// consecutive PE indices (at most `max_rows`), columns are `nbins`
+/// equal time bins over `[0, cycles)`, cell intensity is the group's
+/// mean busy fraction inside the bin. Memory is bounded by
+/// `max_rows × nbins` regardless of fabric size.
+pub fn ascii_heatmap(
+    trace: &Trace,
+    npes: usize,
+    cycles: u64,
+    nbins: usize,
+    max_rows: usize,
+) -> String {
+    if npes == 0 || cycles == 0 || nbins == 0 || max_rows == 0 {
+        return String::from("(no activity)\n");
+    }
+    let chunk = npes.div_ceil(max_rows);
+    let rows = npes.div_ceil(chunk);
+    let binw = cycles as f64 / nbins as f64;
+    let mut grid = vec![0.0f64; rows * nbins];
+    for rec in &trace.records {
+        let TraceRecord::Task { pe, start, end, .. } = *rec else { continue };
+        let row = (pe as usize / chunk).min(rows - 1);
+        let (s, e) = (start as f64, end as f64);
+        let b0 = ((s / binw) as usize).min(nbins - 1);
+        let b1 = ((e / binw).ceil() as usize).min(nbins);
+        for b in b0..b1 {
+            let lo = (b as f64 * binw).max(s);
+            let hi = ((b + 1) as f64 * binw).min(e);
+            if hi > lo {
+                grid[row * nbins + b] += hi - lo;
+            }
+        }
+    }
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "PE utilization heatmap — {rows} row(s) of {chunk} PE(s), \
+         {nbins} bins of {binw:.1} cycles:",
+    );
+    for row in 0..rows {
+        let first = row * chunk;
+        let last = (first + chunk - 1).min(npes - 1);
+        let _ = write!(out, "  PE {first:>4}-{last:<4} |");
+        for b in 0..nbins {
+            let v = (grid[row * nbins + b] / (chunk as f64 * binw)).clamp(0.0, 1.0);
+            let idx = ((v * 9.0).round() as usize).min(9);
+            out.push(HEAT_RAMP[idx] as char);
+        }
+        out.push_str("|\n");
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::machine::program::{Dtype, FieldAlloc, MOp, PeClass, TaskDef, TaskKind};
+    use crate::machine::MachineConfig;
+    use crate::util::Subgrid;
+
+    /// A minimal 1-PE program/plan pair for writer tests.
+    fn tiny() -> (MachineProgram, RoutingPlan) {
+        let class = PeClass {
+            name: "only".into(),
+            subgrids: vec![Subgrid::point(0, 0)],
+            fields: vec![FieldAlloc {
+                name: "a".into(),
+                addr: 0,
+                len: 4,
+                ty: Dtype::F32,
+                is_extern: false,
+            }],
+            mem_size: 16,
+            tasks: vec![TaskDef {
+                name: "main".into(),
+                hw_id: 24,
+                kind: TaskKind::Local,
+                initially_active: false,
+                initially_blocked: false,
+                body: vec![MOp::Halt],
+            }],
+            entry_tasks: vec![24],
+        };
+        let prog = MachineProgram { name: "tiny".into(), classes: vec![class], ..Default::default() };
+        let cfg = MachineConfig::with_grid(2, 2);
+        let plan = RoutingPlan::build(&prog, &cfg);
+        (prog, plan)
+    }
+
+    fn sample_trace() -> Trace {
+        Trace {
+            records: vec![
+                TraceRecord::Task { pe: 0, task: 0, start: 6, end: 20 },
+                TraceRecord::Dsd {
+                    pe: 0,
+                    kind: DsdKind::Fmac,
+                    n: 8,
+                    vectorized: true,
+                    start: 9,
+                    end: 17,
+                },
+                TraceRecord::Stall { pe: 0, color: 3, start: 10, end: 14, words: 2 },
+                TraceRecord::Task { pe: 0, task: 0, start: 30, end: 40 },
+            ],
+            epochs: vec![EpochRecord {
+                start: 0,
+                end: 32,
+                merged: 1,
+                shard_events: vec![5, 3],
+            }],
+        }
+    }
+
+    #[test]
+    fn record_accessors() {
+        let r = TraceRecord::Flow { pe: 7, color: 1, flow: 0, start: 42, words: 9 };
+        assert_eq!(r.pe(), 7);
+        assert_eq!(r.start(), 42);
+        let s = TraceRecord::Stall { pe: 2, color: 0, start: 5, end: 9, words: 1 };
+        assert_eq!((s.pe(), s.start()), (2, 5));
+    }
+
+    #[test]
+    fn imbalance_math() {
+        let mut st = EngineStats { shards: 1, shard_events: vec![100], ..Default::default() };
+        assert_eq!(st.imbalance(), 1.0, "single shard is defined as balanced");
+        st.shard_events = vec![10, 10, 10, 10];
+        assert_eq!(st.imbalance(), 1.0);
+        st.shard_events = vec![30, 10];
+        assert!((st.imbalance() - 1.5).abs() < 1e-12, "max/mean = 30/20");
+        st.shard_events = vec![0, 0];
+        assert_eq!(st.imbalance(), 1.0, "empty run is defined as balanced");
+    }
+
+    #[test]
+    fn json_escaping() {
+        assert_eq!(esc("plain"), "plain");
+        assert_eq!(esc("a\"b\\c\n"), "a\\\"b\\\\c\\n");
+        assert_eq!(esc("\u{1}"), "\\u0001");
+    }
+
+    #[test]
+    fn chrome_writer_structure() {
+        let (prog, plan) = tiny();
+        let json = chrome_trace_json(&sample_trace(), &prog, &plan, false);
+        assert!(json.starts_with("{\"traceEvents\":["));
+        assert!(json.trim_end().ends_with("]}"));
+        // Task spans resolve to the program's task name.
+        assert!(json.contains("\"name\":\"main\""), "{json}");
+        // Integer timestamps in cycles, duration = end - start.
+        assert!(json.contains("\"ts\":6,\"dur\":14"), "{json}");
+        assert!(json.contains("\"name\":\"Fmac\""));
+        assert!(json.contains("\"vectorized\":true"));
+        assert!(json.contains("\"name\":\"stall c3\""));
+        // Epochs are excluded from the default deterministic export...
+        assert!(!json.contains("\"epoch\""));
+        // ...and included behind the explicit opt-in.
+        let with = chrome_trace_json(&sample_trace(), &prog, &plan, true);
+        assert!(with.contains("\"name\":\"epoch\""));
+        assert!(with.contains("\"merged\":1,\"events\":8"));
+        assert!(with.contains("\"name\":\"shard\""));
+    }
+
+    #[test]
+    fn chrome_writer_deterministic() {
+        let (prog, plan) = tiny();
+        let a = chrome_trace_json(&sample_trace(), &prog, &plan, true);
+        let b = chrome_trace_json(&sample_trace(), &prog, &plan, true);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn profile_breakdowns() {
+        let (_prog, plan) = tiny();
+        let p = Profile::build(&sample_trace(), &plan, 50);
+        assert_eq!(p.pes.len(), 1);
+        let b = &p.pes[0];
+        assert_eq!(b.busy, 14 + 10, "sum of the two task spans");
+        assert_eq!(b.tasks, 2);
+        assert_eq!(b.stall, (14 - 10) * 2, "(end - start) * words");
+        assert_eq!(b.idle, 50 - 24);
+        assert_eq!(p.total_busy, 24);
+        assert_eq!(p.total_stall, 8);
+        assert_eq!(p.dsd_ops, 1);
+        assert_eq!(p.dsd_vectorized, 1);
+        assert_eq!(p.hot_pes(4).len(), 1);
+        let json = p.to_json(&plan, 8);
+        assert!(json.contains("\"total_busy\":24"), "{json}");
+        assert!(json.contains("\"link_histogram\":[0,0,0,0,0,0,0,0,0,0]"));
+    }
+
+    #[test]
+    fn heatmap_bounded_and_saturating() {
+        let mut t = Trace::default();
+        // PE 0 busy the whole run; PE 1 idle.
+        t.records.push(TraceRecord::Task { pe: 0, task: 0, start: 0, end: 100 });
+        let art = ascii_heatmap(&t, 2, 100, 10, 2);
+        let lines: Vec<&str> = art.lines().collect();
+        assert_eq!(lines.len(), 3, "header + 2 rows: {art}");
+        assert!(lines[1].contains("@@@@@@@@@@"), "fully busy row saturates: {art}");
+        assert!(lines[2].contains("          "), "idle row stays blank: {art}");
+        // Thousands of PEs still render at most max_rows rows.
+        let big = ascii_heatmap(&t, 10_000, 100, 64, 24);
+        assert!(big.lines().count() <= 25);
+        assert_eq!(ascii_heatmap(&Trace::default(), 0, 0, 0, 0), "(no activity)\n");
+    }
+}

@@ -45,7 +45,16 @@ impl Args {
                 } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false)
                     && matches!(
                         name,
-                        "bind" | "emit" | "exp" | "grid" | "compare" | "current" | "threshold"
+                        "bind"
+                            | "emit"
+                            | "exp"
+                            | "grid"
+                            | "compare"
+                            | "current"
+                            | "threshold"
+                            | "trace"
+                            | "format"
+                            | "top"
                     )
                 {
                     flags.push((name.to_string(), it.next()));
@@ -98,6 +107,32 @@ fn options(args: &Args) -> Options {
         copy_elim: !args.has("no-copy-elim"),
         check: !args.has("no-check"),
     }
+}
+
+/// Compile a library kernel at the grid its binds imply and stage
+/// deterministic noise into every input — the shared front half of
+/// `spada run` and `spada profile`.
+fn compile_and_stage(name: &str, args: &Args) -> Result<(MachineConfig, spada::machine::Simulator)> {
+    let binds = parse_binds(args.flag("bind"))?;
+    let bind_refs: Vec<(&str, i64)> = binds.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+    let (w, h) = grid_of(args, &binds);
+    let cfg = MachineConfig::with_grid(w, h);
+    let ck = kernels::compile(name, &bind_refs, &cfg, &options(args))?;
+    let mut sim = ck.simulator()?;
+    // Fill every input with deterministic noise.
+    let io: Vec<(String, usize)> = sim
+        .program()
+        .io
+        .iter()
+        .filter(|b| matches!(b.dir, spada::machine::IoDir::In))
+        .map(|b| (b.arg.clone(), (b.total_ports * b.elems_per_pe) as usize))
+        .collect();
+    let mut rng = SplitMix64::new(1);
+    for (arg, len) in io {
+        let data: Vec<f32> = (0..len).map(|_| rng.next_f32()).collect();
+        let _ = sim.set_input(&arg, &data);
+    }
+    Ok((cfg, sim))
 }
 
 fn grid_of(args: &Args, binds: &[(String, i64)]) -> (i64, i64) {
@@ -196,27 +231,34 @@ fn real_main() -> Result<()> {
         }
         "run" => {
             let name = args.positional.get(1).ok_or_else(|| anyhow!("run <kernel>"))?;
-            let binds = parse_binds(args.flag("bind"))?;
-            let bind_refs: Vec<(&str, i64)> =
-                binds.iter().map(|(k, v)| (k.as_str(), *v)).collect();
-            let (w, h) = grid_of(&args, &binds);
-            let cfg = MachineConfig::with_grid(w, h);
-            let ck = kernels::compile(name, &bind_refs, &cfg, &options(&args))?;
-            let mut sim = ck.simulator()?;
-            // Fill every input with deterministic noise.
-            let io: Vec<(String, usize)> = sim
-                .program()
-                .io
-                .iter()
-                .filter(|b| matches!(b.dir, spada::machine::IoDir::In))
-                .map(|b| (b.arg.clone(), (b.total_ports * b.elems_per_pe) as usize))
-                .collect();
-            let mut rng = SplitMix64::new(1);
-            for (arg, len) in io {
-                let data: Vec<f32> = (0..len).map(|_| rng.next_f32()).collect();
-                let _ = sim.set_input(&arg, &data);
+            let (cfg, mut sim) = compile_and_stage(name, &args)?;
+            // --trace PATH (or SPADA_TRACE=PATH) arms cycle-accurate
+            // capture; the Chrome trace-event JSON is written after the
+            // run. Tracing never changes simulated cycles.
+            let trace_path = args
+                .flag("trace")
+                .map(str::to_string)
+                .or_else(|| std::env::var("SPADA_TRACE").ok().filter(|s| !s.is_empty()));
+            if trace_path.is_some() {
+                sim.set_tracing(true);
             }
             let report = sim.run()?;
+            if let Some(path) = &trace_path {
+                let trace = sim.take_trace().expect("tracing was enabled");
+                let json = spada::machine::chrome_trace_json(
+                    &trace,
+                    sim.program(),
+                    sim.plan(),
+                    args.has("trace-epochs"),
+                );
+                std::fs::write(path, json).context(path.clone())?;
+                // stderr: `--json` keeps stdout machine-readable.
+                eprintln!("wrote Chrome trace to {path} ({} records)", trace.records.len());
+            }
+            if args.has("json") {
+                print!("{}", report.to_json(&cfg));
+                return Ok(());
+            }
             println!(
                 "{name}: {} cycles ({:.2} us), {} flops, {} flows, {} wavelets, util {:.1}%",
                 report.cycles,
@@ -238,6 +280,87 @@ fn real_main() -> Result<()> {
                 },
                 report.metrics.stall_cycles,
                 if report.metrics.stall_cycles > 0 { " (backpressure)" } else { "" },
+            );
+            Ok(())
+        }
+        "profile" => {
+            // Compile + trace + aggregate: per-PE busy/stall/idle
+            // breakdowns, hot PEs/links, link-occupancy histogram and
+            // a terminal utilization heatmap. `--format json` emits the
+            // same data machine-readably.
+            let name = args.positional.get(1).ok_or_else(|| anyhow!("profile <kernel>"))?;
+            let top: usize = match args.flag("top") {
+                Some(t) => t.parse().context("--top")?,
+                None => 8,
+            };
+            let (cfg, mut sim) = compile_and_stage(name, &args)?;
+            sim.set_tracing(true);
+            let report = sim.run()?;
+            let trace = sim.take_trace().expect("tracing was enabled");
+            let profile = spada::machine::Profile::build(&trace, sim.plan(), report.cycles);
+            match args.flag("format") {
+                Some("json") => {
+                    print!("{}", profile.to_json(sim.plan(), top));
+                    return Ok(());
+                }
+                None | Some("table") => {}
+                Some(other) => bail!("--format {other}: want table or json"),
+            }
+            println!(
+                "{name}: {} cycles ({:.2} us), {} PEs, busy {} cycles, \
+                 stall {} word-cycles, {} flows, {}/{} DSD ops vectorized",
+                report.cycles,
+                report.runtime_us(&cfg),
+                profile.pes.len(),
+                profile.total_busy,
+                profile.total_stall,
+                profile.flows,
+                profile.dsd_vectorized,
+                profile.dsd_ops,
+            );
+            println!("\nhot PEs (top {top} by busy cycles):");
+            let mut t = spada::bench::Table::new(&[
+                "pe", "x", "y", "busy", "stall", "idle", "tasks", "util",
+            ]);
+            for b in profile.hot_pes(top) {
+                t.row(&[
+                    b.pe.to_string(),
+                    b.x.to_string(),
+                    b.y.to_string(),
+                    b.busy.to_string(),
+                    b.stall.to_string(),
+                    b.idle.to_string(),
+                    b.tasks.to_string(),
+                    format!("{:.1}%", 100.0 * b.busy as f64 / report.cycles.max(1) as f64),
+                ]);
+            }
+            t.print();
+            println!("\nhot links (top {top} by busy word-cycles):");
+            let mut t = spada::bench::Table::new(&["link", "busy", "occupancy"]);
+            for (li, busy) in profile.hot_links(top) {
+                t.row(&[
+                    sim.plan().link_label(li),
+                    busy.to_string(),
+                    format!("{:.1}%", 100.0 * busy as f64 / report.cycles.max(1) as f64),
+                ]);
+            }
+            t.print();
+            let hist = profile.link_histogram();
+            println!(
+                "\nlink occupancy histogram (deciles, {} used links): {:?}",
+                profile.links.len(),
+                hist,
+            );
+            println!();
+            print!(
+                "{}",
+                spada::machine::ascii_heatmap(
+                    &trace,
+                    sim.plan().pes.len(),
+                    report.cycles,
+                    64,
+                    24
+                )
             );
             Ok(())
         }
@@ -345,7 +468,13 @@ fn print_help() {
          \x20 spada check <kernel|file.spada> [--bind ...] [--grid WxH] [--buffers[=N]]\n\
          \x20   (--buffers adds the finite-buffer credit audit: capacity sizing hints and\n\
          \x20    potential buffer-cycle warnings; =N caps endpoints at N words)\n\
-         \x20 spada run <kernel> [--bind ...] [--grid WxH]\n\
+         \x20 spada run <kernel> [--bind ...] [--grid WxH] [--json] [--trace OUT.json\n\
+         \x20   [--trace-epochs]]  (--json prints the full RunReport as JSON; --trace\n\
+         \x20    writes a Chrome trace-event file, loadable in Perfetto — tracing never\n\
+         \x20    changes simulated cycles; --trace-epochs adds parallel-engine epoch tracks)\n\
+         \x20 spada profile <kernel> [--bind ...] [--grid WxH] [--format table|json] [--top N]\n\
+         \x20   (cycle-accurate profile: per-PE busy/stall/idle, hot PEs/links, link\n\
+         \x20    occupancy histogram and an ASCII utilization heatmap)\n\
          \x20 spada bench [--exp table2|fig4|fig5|fig6|fig7|fig8|fig9|sim|verify|all] [--quick]\n\
          \x20   (--exp sim sweeps the six kernels 4x4..128x128 at 1 and 4 worker\n\
          \x20    threads and writes BENCH_sim.json; rows record threads + host parallelism)\n\
@@ -361,6 +490,8 @@ fn print_help() {
          \x20         SPADA_BUF_CAP=N finite endpoint buffers: N words per (PE, color) with\n\
          \x20                       credit backpressure (unset = unbounded; outputs identical,\n\
          \x20                       cycles may grow, wedges report a buffer deadlock)\n\
+         \x20         SPADA_TRACE=PATH write a Chrome trace from `spada run` (same as --trace;\n\
+         \x20                       the flag wins when both are given)\n\
          Kernels: {}",
         kernels::sources().iter().map(|(n, _)| *n).collect::<Vec<_>>().join(", ")
     );

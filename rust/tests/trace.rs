@@ -1,0 +1,159 @@
+//! Trace determinism and profile reconciliation, end to end.
+//!
+//! The tracing layer (`machine/trace.rs`) claims three cross-cutting
+//! guarantees, each pinned here over all six library kernels:
+//!
+//! 1. **No perturbation**: a run with tracing enabled produces the
+//!    bit-identical `RunReport` and output words of a run without it —
+//!    instrumentation observes the event loop, it never reschedules it.
+//! 2. **Thread-count determinism**: the rendered Chrome-trace JSON (and
+//!    the underlying record stream) is *byte-identical* between the
+//!    classic 1-thread engine and the epoch-parallel engine, for every
+//!    kernel. Records are emitted per shard and merged by a stable
+//!    `(start, pe)` sort, which reproduces single-threaded order.
+//! 3. **Exact reconciliation**: the profile aggregator's busy and stall
+//!    totals equal `Metrics::busy_cycles` / `Metrics::stall_cycles`
+//!    exactly — not approximately — because spans are emitted at the
+//!    same program points that bump the counters.
+
+use spada::harness::common::{output_words, stage_random_inputs};
+use spada::kernels::{self, CompiledKernel};
+use spada::machine::{chrome_trace_json, MachineConfig, Profile, RunReport, Trace};
+use spada::passes::Options;
+
+/// The six paper kernels at the geometries the equivalence suites use.
+const KERNELS: [(&str, &[(&str, i64)], i64, i64); 6] = [
+    ("chain_reduce", &[("K", 24), ("N", 9)], 9, 1),
+    ("broadcast", &[("K", 16), ("N", 8)], 8, 1),
+    ("tree_reduce", &[("K", 8), ("NX", 4), ("NY", 4)], 4, 4),
+    ("two_phase_reduce", &[("K", 8), ("NX", 4), ("NY", 4)], 4, 4),
+    ("gemv", &[("M", 16), ("N", 16), ("NX", 4), ("NY", 4)], 4, 4),
+    ("gemv_tree", &[("M", 16), ("N", 16), ("NX", 4), ("NY", 4)], 4, 4),
+];
+
+fn compile(name: &str, binds: &[(&str, i64)], w: i64, h: i64) -> CompiledKernel {
+    let cfg = MachineConfig::with_grid(w, h);
+    kernels::compile(name, binds, &cfg, &Options::default())
+        .unwrap_or_else(|e| panic!("{name}: {e:#}"))
+}
+
+/// Run over deterministic inputs with tracing on, returning the report,
+/// raw output words, and the captured trace.
+fn run_traced(
+    ck: &CompiledKernel,
+    threads: usize,
+) -> (RunReport, Vec<(String, Vec<u32>)>, Trace) {
+    let mut sim = ck.simulator().unwrap();
+    sim.set_threads(threads);
+    sim.set_tracing(true);
+    stage_random_inputs(&mut sim, 0xEB0C);
+    let report =
+        sim.run().unwrap_or_else(|e| panic!("{} threads={threads}: {e}", ck.machine.name));
+    let outs = output_words(&sim);
+    let trace = sim.take_trace().expect("tracing was enabled");
+    (report, outs, trace)
+}
+
+/// Guarantee 2: byte-identical trace files across `SPADA_THREADS`.
+/// Rendering to the final JSON (not just comparing record vectors)
+/// also covers the writer: any nondeterminism in name resolution or
+/// field ordering would surface as a byte diff here.
+#[test]
+fn chrome_trace_byte_identical_across_thread_counts() {
+    for (name, binds, w, h) in KERNELS {
+        let ck = compile(name, binds, w, h);
+        let (report1, _, trace1) = run_traced(&ck, 1);
+        let json1 = chrome_trace_json(&trace1, &ck.machine, &ck.plan, false);
+        assert!(!trace1.records.is_empty(), "{name}: traced run captured no records");
+        for threads in [4] {
+            let (report, _, trace) = run_traced(&ck, threads);
+            assert_eq!(report, report1, "{name}: report diverged at threads={threads}");
+            assert_eq!(
+                trace.records, trace1.records,
+                "{name}: record stream diverged at threads={threads}"
+            );
+            let json = chrome_trace_json(&trace, &ck.machine, &ck.plan, false);
+            assert_eq!(json, json1, "{name}: trace JSON not byte-identical at threads={threads}");
+        }
+    }
+}
+
+/// Guarantee 1: tracing never perturbs the simulation. Runs with the
+/// instrumentation armed must match untraced runs bit for bit, on both
+/// engines.
+#[test]
+fn tracing_is_inert_on_both_engines() {
+    for (name, binds, w, h) in KERNELS {
+        let ck = compile(name, binds, w, h);
+        for threads in [1, 4] {
+            let mut sim = ck.simulator().unwrap();
+            sim.set_threads(threads);
+            stage_random_inputs(&mut sim, 0xEB0C);
+            let plain_report = sim.run().unwrap();
+            let plain_outs = output_words(&sim);
+            assert!(sim.trace().is_none(), "{name}: untraced run must capture nothing");
+
+            let (report, outs, _) = run_traced(&ck, threads);
+            assert_eq!(
+                report, plain_report,
+                "{name}: tracing perturbed the report at threads={threads}"
+            );
+            assert_eq!(
+                outs, plain_outs,
+                "{name}: tracing perturbed outputs at threads={threads}"
+            );
+        }
+    }
+}
+
+/// Guarantee 3: profile totals reconcile with the run metrics exactly.
+#[test]
+fn profile_reconciles_with_metrics_exactly() {
+    for (name, binds, w, h) in KERNELS {
+        let ck = compile(name, binds, w, h);
+        let (report, _, trace) = run_traced(&ck, 1);
+        let profile = Profile::build(&trace, &ck.plan, report.cycles);
+        assert_eq!(
+            profile.total_busy, report.metrics.busy_cycles,
+            "{name}: profile busy must equal Metrics::busy_cycles exactly"
+        );
+        assert_eq!(
+            profile.total_stall, report.metrics.stall_cycles,
+            "{name}: profile stall must equal Metrics::stall_cycles exactly"
+        );
+        assert_eq!(profile.flows, report.metrics.flows, "{name}: flow count mismatch");
+        assert_eq!(profile.dsd_ops, report.metrics.dsd_ops, "{name}: dsd_ops mismatch");
+        let tasks: u64 = profile.pes.iter().map(|p| p.tasks).sum();
+        assert_eq!(tasks, report.metrics.task_runs, "{name}: task_runs mismatch");
+        // Per-PE invariants: non-preemptive tasks keep busy within the
+        // makespan, and idle is its exact complement.
+        for pe in &profile.pes {
+            assert!(pe.busy <= report.cycles, "{name} PE {}: busy > makespan", pe.pe);
+            assert_eq!(pe.busy + pe.idle, report.cycles, "{name} PE {}: busy+idle", pe.pe);
+        }
+    }
+}
+
+/// The exported JSON is structurally sound for every kernel: one
+/// balanced `traceEvents` array, metadata naming, and integer
+/// timestamps (Perfetto rejects files violating any of these).
+#[test]
+fn chrome_export_is_well_formed() {
+    for (name, binds, w, h) in KERNELS {
+        let ck = compile(name, binds, w, h);
+        let (_, _, trace) = run_traced(&ck, 1);
+        let json = chrome_trace_json(&trace, &ck.machine, &ck.plan, false);
+        assert!(json.starts_with("{\"traceEvents\":["), "{name}");
+        assert!(json.trim_end().ends_with("]}"), "{name}");
+        assert!(json.contains("\"ph\":\"M\""), "{name}: missing metadata events");
+        assert!(json.contains("\"ph\":\"X\""), "{name}: missing span events");
+        assert!(json.contains("process_name"), "{name}");
+        assert!(json.contains("PE(0,0)"), "{name}: missing thread naming");
+        // Braces balance — a cheap structural check that catches a
+        // truncated or doubly-terminated writer without a JSON parser.
+        let opens = json.matches('{').count();
+        let closes = json.matches('}').count();
+        assert_eq!(opens, closes, "{name}: unbalanced JSON braces");
+        assert!(!json.contains("\"ts\":-"), "{name}: negative timestamp");
+    }
+}
