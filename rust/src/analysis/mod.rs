@@ -191,6 +191,29 @@ impl fmt::Display for AnalysisReport {
     }
 }
 
+/// Map a runtime deadlock report onto the static taxonomy: the
+/// flow-control layer's quiescence scan names blocked endpoints with
+/// "endpoint full" (credit exhaustion — [`DiagKind::BufferDeadlock`]),
+/// anything else wedged is a circular consumer/producer wait
+/// ([`DiagKind::Deadlock`]). Fault-injection triage
+/// ([`crate::machine::fault::classify`]) uses this to file faulted
+/// runs under the same vocabulary the static checker reports in.
+pub fn runtime_deadlock_kind(msg: &str) -> DiagKind {
+    if msg.contains("endpoint full") {
+        DiagKind::BufferDeadlock
+    } else {
+        DiagKind::Deadlock
+    }
+}
+
+/// Did `kernels::compile` already verify this program deadlock-free?
+/// (The verdict is recorded in program metadata so runtime consumers —
+/// the simulator's deadlock report, fault triage — can cite the
+/// compile-time check instead of re-running the whole analysis.)
+pub fn is_statically_clean(prog: &MachineProgram) -> bool {
+    prog.meta.get("static_check").map(String::as_str) == Some("clean")
+}
+
 /// Run every static check on a lowered machine program, building a
 /// fresh [`RoutingPlan`] for it.
 ///

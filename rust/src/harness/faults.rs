@@ -1,0 +1,322 @@
+//! Resilience campaign (`spada faults --campaign`): sweep single-fault
+//! sites across the library kernels, classify every faulted run against
+//! its clean reference, and emit a JSONL resilience matrix plus a
+//! per-kernel summary table.
+//!
+//! Site enumeration is taken from each kernel's *planned flows* — every
+//! mesh link an actual flow occupies (times a grid of injection cycles),
+//! every placed PE (halts), and every flow source (payload corruption).
+//! Ramp transfers never appear in `PlannedFlow::links`, so ramp sites
+//! are structurally absent rather than silently inert.
+//!
+//! Determinism: rows are produced into a site-indexed table (worker
+//! interleaving cannot reorder them), every run stages the same seeded
+//! inputs, and the engines guarantee bit-identical faulted runs across
+//! `SPADA_THREADS` — so the matrix file is byte-identical at any thread
+//! count (the CI gate diffs thread counts 1 and 4).
+
+use crate::harness::common::{output_words, scaled_binds, stage_random_inputs};
+use crate::kernels::{self, CompiledKernel};
+use crate::machine::fault::{classify, FaultPlan, FaultSpec, Outcome};
+use crate::machine::{Direction, MachineConfig, Simulator};
+use crate::passes::Options;
+use anyhow::{anyhow, Context, Result};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// The six library kernels the campaign sweeps.
+pub const KERNELS: &[&str] =
+    &["chain_reduce", "broadcast", "tree_reduce", "two_phase_reduce", "gemv", "gemv_tree"];
+
+/// Input seed shared by the clean reference and every faulted run.
+const INPUT_SEED: u64 = 0xCAFE;
+
+/// Campaign configuration (CLI surface of `spada faults`).
+pub struct CampaignOpts {
+    /// Trim the sweep for CI: one injection time per site.
+    pub quick: bool,
+    /// Restrict to one kernel (default: all of [`KERNELS`]).
+    pub kernel: Option<String>,
+    /// Injection-time grid points per site (ignored under `quick`).
+    pub grid: usize,
+    /// JSONL output path.
+    pub out: String,
+}
+
+impl Default for CampaignOpts {
+    fn default() -> CampaignOpts {
+        CampaignOpts {
+            quick: false,
+            kernel: None,
+            grid: 4,
+            out: "FAULTS_matrix.jsonl".to_string(),
+        }
+    }
+}
+
+/// One resilience-matrix row.
+struct Row {
+    kernel: &'static str,
+    site: String,
+    kind: &'static str,
+    outcome: Outcome,
+    cycles: u64,
+}
+
+impl Row {
+    fn to_jsonl(&self) -> String {
+        let mut detail = self.outcome.detail();
+        if detail.len() > 160 {
+            detail.truncate(160);
+            detail.push('…');
+        }
+        format!(
+            "{{\"kernel\":\"{}\",\"site\":\"{}\",\"kind\":\"{}\",\"outcome\":\"{}\",\
+             \"cycles\":{},\"detail\":\"{}\"}}",
+            self.kernel,
+            esc(&self.site),
+            self.kind,
+            self.outcome.label(),
+            self.cycles,
+            esc(&detail),
+        )
+    }
+}
+
+fn esc(s: &str) -> String {
+    s.chars()
+        .flat_map(|c| match c {
+            '"' => "\\\"".chars().collect::<Vec<_>>(),
+            '\\' => "\\\\".chars().collect(),
+            '\n' => "\\n".chars().collect(),
+            c if (c as u32) < 0x20 => format!("\\u{:04x}", c as u32).chars().collect(),
+            c => vec![c],
+        })
+        .collect()
+}
+
+/// One compiled kernel plus its clean-run reference.
+struct Subject {
+    name: &'static str,
+    ck: CompiledKernel,
+    reference: Vec<(String, Vec<u32>)>,
+    clean_cycles: u64,
+}
+
+/// Compile a kernel at campaign scale and produce its clean reference
+/// run. The config is built fresh (ambient `SPADA_FAULTS` cleared) so
+/// the reference really is clean even inside an armed environment.
+fn prepare(name: &'static str, quick: bool) -> Result<Subject> {
+    let k = if quick { 4 } else { 8 };
+    let (binds, w, h) = scaled_binds(name, 4, k)?;
+    let mut cfg = MachineConfig::with_grid(w, h);
+    cfg.faults = FaultPlan::default();
+    // No wall-clock watchdog in campaign runs: the simulator's event
+    // budget is the (deterministic) backstop, so the matrix does not
+    // depend on host speed.
+    cfg.timeout_ms = None;
+    let ck = kernels::compile(name, &binds, &cfg, &Options::default())
+        .with_context(|| format!("compiling {name} for the fault campaign"))?;
+    let mut sim = ck.simulator()?;
+    stage_random_inputs(&mut sim, INPUT_SEED);
+    let report = sim.run().map_err(|e| anyhow!("clean {name} run failed: {e}"))?;
+    let reference = output_words(&sim);
+    Ok(Subject { name, ck, reference, clean_cycles: report.cycles })
+}
+
+/// Enumerate this subject's single-fault sites, in a deterministic
+/// order: link kills (site-major, then time), PE halts (likewise),
+/// then one corruption per flow source.
+fn sites(s: &Subject, times: &[u64]) -> Vec<FaultSpec> {
+    let plan = &s.ck.plan;
+    // Every mesh link any planned flow occupies, decoded from its
+    // dense slot: slot = (y·width + x)·5 + dir.
+    let mut links: Vec<(i64, i64, usize)> = plan
+        .flows
+        .iter()
+        .filter(|f| f.error.is_none())
+        .flat_map(|f| f.links.iter().map(|&(li, _)| li))
+        .map(|li| {
+            let cell = (li / 5) as i64;
+            (cell % plan.width, cell / plan.width, (li % 5) as usize)
+        })
+        .collect();
+    links.sort_unstable();
+    links.dedup();
+    let mut specs = Vec::new();
+    for &(x, y, d) in &links {
+        for &at in times {
+            specs.push(FaultSpec::LinkKill { x, y, dir: Direction::ALL[d], at });
+        }
+    }
+    for p in &plan.pes {
+        for &at in times {
+            specs.push(FaultSpec::PeHalt { x: p.x, y: p.y, at });
+        }
+    }
+    let mut srcs: Vec<(i64, i64, u8)> = plan
+        .flows
+        .iter()
+        .filter(|f| f.error.is_none())
+        .map(|f| (f.src.0, f.src.1, f.color))
+        .collect();
+    srcs.sort_unstable();
+    srcs.dedup();
+    for (x, y, color) in srcs {
+        specs.push(FaultSpec::Corrupt { x, y, color, at: 0 });
+    }
+    specs
+}
+
+/// Run one faulted site and classify it against the clean reference.
+fn run_site(s: &Subject, spec: FaultSpec) -> Result<Row> {
+    let mut cfg = s.ck.cfg.clone();
+    cfg.faults = FaultPlan::single(spec);
+    let mut sim = Simulator::with_plan(cfg, s.ck.machine.clone(), Arc::clone(&s.ck.plan))
+        .map_err(|e| anyhow!("{}: site {spec}: {e}", s.name))?;
+    stage_random_inputs(&mut sim, INPUT_SEED);
+    let result = sim.run();
+    let outputs = output_words(&sim);
+    let cycles = result.as_ref().map(|r| r.cycles).unwrap_or(0);
+    let kind = match spec {
+        FaultSpec::LinkKill { .. } => "link-kill",
+        FaultSpec::LinkSlow { .. } => "link-slow",
+        FaultSpec::PeHalt { .. } => "pe-halt",
+        FaultSpec::Corrupt { .. } => "corrupt",
+        FaultSpec::Delay { .. } => "delay",
+    };
+    Ok(Row {
+        kernel: s.name,
+        site: spec.to_string(),
+        kind,
+        outcome: classify(&result, &outputs, &s.reference),
+        cycles,
+    })
+}
+
+/// Run the full campaign: every subject's sites through a worker pool,
+/// rows written site-indexed (deterministic order), summary to stdout.
+pub fn campaign(opts: &CampaignOpts) -> Result<()> {
+    let selected: Vec<&'static str> = match &opts.kernel {
+        None => KERNELS.to_vec(),
+        Some(k) => {
+            let Some(&name) = KERNELS.iter().find(|&&n| n == k.as_str()) else {
+                return Err(anyhow!(
+                    "unknown campaign kernel {k} (try: {})",
+                    KERNELS.join(", ")
+                ));
+            };
+            vec![name]
+        }
+    };
+    let grid = if opts.quick { 1 } else { opts.grid.max(1) };
+
+    // Phase 1: compile + clean reference per kernel (serial: compilation
+    // is cheap and the reference is each subject's shared baseline).
+    let mut subjects = Vec::new();
+    for &name in &selected {
+        subjects.push(prepare(name, opts.quick)?);
+    }
+
+    // Phase 2: enumerate (subject, spec) work items.
+    let mut work: Vec<(usize, FaultSpec)> = Vec::new();
+    for (si, s) in subjects.iter().enumerate() {
+        // Injection times spread over the clean run: t_i = c·i/grid
+        // (quick sweeps the midpoint only — t=0 halts trivially kill
+        // everything; mid-run faults are the interesting regime).
+        let c = s.clean_cycles.max(1);
+        let times: Vec<u64> = if grid == 1 {
+            vec![c / 2]
+        } else {
+            (0..grid as u64).map(|i| c * i / grid as u64).collect()
+        };
+        for spec in sites(s, &times) {
+            work.push((si, spec));
+        }
+    }
+
+    // Phase 3: worker pool over an atomic work index; results land in a
+    // site-indexed table so output order is independent of scheduling.
+    let rows: Mutex<Vec<Option<Result<Row>>>> =
+        Mutex::new((0..work.len()).map(|_| None).collect());
+    let next = AtomicUsize::new(0);
+    let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= work.len() {
+                    break;
+                }
+                let (si, spec) = work[i];
+                let row = run_site(&subjects[si], spec);
+                rows.lock().unwrap_or_else(|p| p.into_inner())[i] = Some(row);
+            });
+        }
+    });
+
+    // Phase 4: emit JSONL + summary.
+    let rows = rows.into_inner().unwrap_or_else(|p| p.into_inner());
+    let mut jsonl = String::new();
+    let mut summary: Vec<(&'static str, [u64; 7])> =
+        selected.iter().map(|&n| (n, [0u64; 7])).collect();
+    const LABELS: [&str; 7] =
+        ["correct", "sdc", "buffer-deadlock", "circular-wait", "runaway", "timeout", "error"];
+    for slot in rows {
+        let row = slot.expect("every work item ran")?;
+        let li = LABELS
+            .iter()
+            .position(|&l| l == row.outcome.label())
+            .expect("outcome labels are closed");
+        summary.iter_mut().find(|(n, _)| *n == row.kernel).expect("known kernel").1[li] += 1;
+        jsonl.push_str(&row.to_jsonl());
+        jsonl.push('\n');
+    }
+    std::fs::write(&opts.out, &jsonl)
+        .with_context(|| format!("writing resilience matrix to {}", opts.out))?;
+
+    println!("resilience matrix: {} rows -> {}", jsonl.lines().count(), opts.out);
+    println!(
+        "{:<18} {:>8} {:>6} {:>12} {:>13} {:>8} {:>8} {:>6}",
+        "kernel", "correct", "sdc", "buf-deadlock", "circular-wait", "runaway", "timeout", "error"
+    );
+    for (name, counts) in &summary {
+        println!(
+            "{:<18} {:>8} {:>6} {:>12} {:>13} {:>8} {:>8} {:>6}",
+            name, counts[0], counts[1], counts[2], counts[3], counts[4], counts[5], counts[6]
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn site_enumeration_is_deterministic_and_nonempty() {
+        let s = prepare("chain_reduce", true).unwrap();
+        let a = sites(&s, &[10]);
+        let b = sites(&s, &[10]);
+        assert!(!a.is_empty());
+        assert_eq!(a, b);
+        // Kill sites come from real flow links: every one compiles.
+        for spec in &a {
+            let fp = FaultPlan::single(*spec);
+            crate::machine::FaultSet::compile(&fp, &s.ck.cfg, &s.ck.plan)
+                .expect("campaign sites always compile")
+                .expect("non-empty plan");
+        }
+    }
+
+    #[test]
+    fn corrupt_site_classifies_as_sdc() {
+        let s = prepare("chain_reduce", true).unwrap();
+        let spec = sites(&s, &[0])
+            .into_iter()
+            .find(|sp| matches!(sp, FaultSpec::Corrupt { .. }))
+            .expect("chain_reduce has flow sources");
+        let row = run_site(&s, spec).unwrap();
+        assert_eq!(row.outcome.label(), "sdc", "corruption must be detected: {:?}", row.outcome);
+    }
+}

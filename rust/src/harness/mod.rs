@@ -9,6 +9,7 @@
 //! fabric. EXPERIMENTS.md records paper-vs-measured per artifact.
 
 pub mod common;
+pub mod faults;
 pub mod table2;
 pub mod fig4;
 pub mod fig5;

@@ -1,5 +1,6 @@
 //! Machine configuration: grid geometry, resource limits, cycle costs.
 
+use super::fault::FaultPlan;
 
 /// WSE-2 machine model parameters.
 ///
@@ -50,6 +51,20 @@ pub struct MachineConfig {
     /// ([`crate::analysis::credits`]) and the runtime deadlock report;
     /// `None` models zero link-stage slack (most conservative).
     pub link_buffer_words: Option<u64>,
+    /// Cycles for a freed credit to travel back to the upstream stall
+    /// point (see [`super::flowctl`]). 0 (the default) returns credits
+    /// instantly — bit-identical to every prior snapshot.
+    pub credit_latency_cycles: u64,
+    /// Wall-clock watchdog: abort a run that is still processing events
+    /// after this many milliseconds with [`super::SimError::Timeout`]
+    /// (set from `SPADA_TIMEOUT_MS`; `None` = no watchdog). Purely an
+    /// abort path — it never changes the semantics of a run that
+    /// finishes in time.
+    pub timeout_ms: Option<u64>,
+    /// Fault-injection plan (see [`super::fault`]; set from
+    /// `SPADA_FAULTS`). Empty by default; a parse error rides along in
+    /// `faults.invalid` and fails the run loudly.
+    pub faults: FaultPlan,
 }
 
 impl MachineConfig {
@@ -77,6 +92,9 @@ impl MachineConfig {
             max_events: 2_000_000_000,
             endpoint_capacity_words: super::flowctl::env_buf_cap(),
             link_buffer_words: None,
+            credit_latency_cycles: 0,
+            timeout_ms: env_timeout_ms(),
+            faults: FaultPlan::from_env(),
         }
     }
 
@@ -103,6 +121,19 @@ impl MachineConfig {
     /// Dense link-occupancy slots: one per (cell, direction incl. ramp).
     pub fn link_slots(&self) -> usize {
         self.grid_cells() * 5
+    }
+}
+
+/// `SPADA_TIMEOUT_MS` as a watchdog budget; unset, empty, `0` or
+/// unparsable values disable the watchdog (0 would abort every run
+/// before its first event — never useful, so it reads as "off").
+pub fn env_timeout_ms() -> Option<u64> {
+    match std::env::var("SPADA_TIMEOUT_MS") {
+        Ok(v) => match v.trim().parse::<u64>() {
+            Ok(0) | Err(_) => None,
+            Ok(ms) => Some(ms),
+        },
+        Err(_) => None,
     }
 }
 

@@ -1,0 +1,731 @@
+//! Deterministic fault injection and outcome triage.
+//!
+//! The real WSE ships with fabricated-defective PEs and links that the
+//! platform routes around; every guarantee the static checker makes
+//! (routing correctness, deadlock freedom) is only interesting when the
+//! fabric can misbehave. This module is the adversary: a seeded,
+//! deterministic fault layer that both engines apply at *fixed program
+//! points*, so a faulted run — like a clean one — is bit-identical at
+//! every `SPADA_THREADS` count.
+//!
+//! # Fault models
+//!
+//! | spec                      | effect                                              |
+//! |---------------------------|-----------------------------------------------------|
+//! | `link(x,y,D):kill@T`      | the link leaving cell (x,y) through D drops every   |
+//! |                           | flow whose head word would traverse it at/after T   |
+//! | `link(x,y,D):slow@T+N`    | same predicate, but delivery to downstream dests is |
+//! |                           | delayed by N cycles instead of dropped              |
+//! | `pe(x,y):halt@T`          | the PE processes no task/completion events at/after |
+//! |                           | T; arrivals still buffer at its endpoints           |
+//! | `flow(x,y,c):corrupt@T`   | one seeded word-flip in the first payload PE (x,y)  |
+//! |                           | sends on color c at/after T (fires exactly once)    |
+//! | `flow(x,y,c):delay@T+N`   | every delivery of that flow sent at/after T lands N |
+//! |                           | cycles late                                         |
+//!
+//! `D` ∈ {`N`,`E`,`S`,`W`,`R`}; specs are joined with `;` and an
+//! optional `seed=K` entry seeds the corruption RNG. The same grammar
+//! is accepted by `SPADA_FAULTS`, `spada run --faults`, and
+//! [`FaultPlan::parse`], and [`FaultSpec`]'s `Display` round-trips it —
+//! the campaign matrix records sites in exactly this syntax so any row
+//! can be replayed by hand.
+//!
+//! # Determinism and the injection points
+//!
+//! Faults are compiled once per run against the [`RoutingPlan`] into a
+//! [`FaultSet`]: per-flow effects (which destinations sit downstream of
+//! a dead link, at what send-time threshold) and per-PE halt cycles.
+//! The engines consult it at exactly two places — `send_flow` (kill /
+//! slow / delay / corrupt, as a pure function of the flow's start time)
+//! and event dispatch (halt, as a pure function of `(event kind, PE,
+//! time)`). Neither depends on shard layout or wall-clock, so the
+//! epoch-parallel engine reproduces the classic engine bit for bit.
+//!
+//! A fault can remove or postpone arrivals but never create an earlier
+//! one, so the clean plan's cross-island lookahead remains a sound
+//! lower bound; [`FaultSet::effective_lookahead`] re-derives it anyway
+//! (dropping arrivals a fault provably removes for every send), which
+//! can only widen epochs — see the method's soundness note.
+
+use super::config::MachineConfig;
+use super::metrics::RunReport;
+use super::plan::RoutingPlan;
+use super::program::Direction;
+use super::router::FlowPath;
+use super::sim::SimError;
+use crate::util::rng::SplitMix64;
+use std::fmt;
+
+/// Default corruption-RNG seed (overridden by a `seed=K` spec entry).
+pub const DEFAULT_FAULT_SEED: u64 = 0xFA17;
+
+/// Trace-lane kind codes carried by `TraceRecord::Fault`.
+pub const FK_LINK_KILL: u8 = 0;
+pub const FK_LINK_SLOW: u8 = 1;
+pub const FK_PE_HALT: u8 = 2;
+pub const FK_CORRUPT: u8 = 3;
+pub const FK_DELAY: u8 = 4;
+/// Chrome-trace event names, indexed by the `FK_*` codes.
+pub const FAULT_KIND_NAMES: [&str; 5] = ["link-kill", "link-slow", "pe-halt", "corrupt", "delay"];
+
+/// One parsed fault, in the grammar documented at module level.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultSpec {
+    LinkKill { x: i64, y: i64, dir: Direction, at: u64 },
+    LinkSlow { x: i64, y: i64, dir: Direction, at: u64, extra: u64 },
+    PeHalt { x: i64, y: i64, at: u64 },
+    Corrupt { x: i64, y: i64, color: u8, at: u64 },
+    Delay { x: i64, y: i64, color: u8, at: u64, extra: u64 },
+}
+
+fn dir_char(d: Direction) -> char {
+    match d {
+        Direction::North => 'N',
+        Direction::East => 'E',
+        Direction::South => 'S',
+        Direction::West => 'W',
+        Direction::Ramp => 'R',
+    }
+}
+
+fn dir_of(s: &str) -> Option<Direction> {
+    match s {
+        "N" => Some(Direction::North),
+        "E" => Some(Direction::East),
+        "S" => Some(Direction::South),
+        "W" => Some(Direction::West),
+        "R" => Some(Direction::Ramp),
+        _ => None,
+    }
+}
+
+impl fmt::Display for FaultSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            FaultSpec::LinkKill { x, y, dir, at } => {
+                write!(f, "link({x},{y},{}):kill@{at}", dir_char(dir))
+            }
+            FaultSpec::LinkSlow { x, y, dir, at, extra } => {
+                write!(f, "link({x},{y},{}):slow@{at}+{extra}", dir_char(dir))
+            }
+            FaultSpec::PeHalt { x, y, at } => write!(f, "pe({x},{y}):halt@{at}"),
+            FaultSpec::Corrupt { x, y, color, at } => {
+                write!(f, "flow({x},{y},{color}):corrupt@{at}")
+            }
+            FaultSpec::Delay { x, y, color, at, extra } => {
+                write!(f, "flow({x},{y},{color}):delay@{at}+{extra}")
+            }
+        }
+    }
+}
+
+/// A full fault configuration: the parsed specs plus the corruption
+/// seed. Construction is infallible — `SPADA_FAULTS` parse errors are
+/// carried in `invalid` and surfaced loudly when the simulator runs,
+/// never silently dropped at config-build time.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub specs: Vec<FaultSpec>,
+    pub seed: u64,
+    /// Parse error from the environment, if any; `Simulator::run`
+    /// rejects the run with it.
+    pub invalid: Option<String>,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan { specs: Vec::new(), seed: DEFAULT_FAULT_SEED, invalid: None }
+    }
+}
+
+impl fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut first = true;
+        for s in &self.specs {
+            if !first {
+                f.write_str("; ")?;
+            }
+            write!(f, "{s}")?;
+            first = false;
+        }
+        if self.seed != DEFAULT_FAULT_SEED {
+            if !first {
+                f.write_str("; ")?;
+            }
+            write!(f, "seed={}", self.seed)?;
+        }
+        Ok(())
+    }
+}
+
+fn parse_u64(s: &str, what: &str) -> Result<u64, String> {
+    s.trim().parse::<u64>().map_err(|_| format!("{what}: `{s}` is not a non-negative integer"))
+}
+
+fn parse_i64(s: &str, what: &str) -> Result<i64, String> {
+    s.trim().parse::<i64>().map_err(|_| format!("{what}: `{s}` is not an integer"))
+}
+
+fn parse_spec(s: &str) -> Result<FaultSpec, String> {
+    let (site, action) = s
+        .split_once(':')
+        .ok_or_else(|| format!("`{s}`: expected SITE:ACTION@T (e.g. link(0,0,E):kill@100)"))?;
+    let (verb, when) =
+        action.split_once('@').ok_or_else(|| format!("`{s}`: expected ACTION@T"))?;
+    let verb = verb.trim();
+    let (at, extra) = match when.split_once('+') {
+        Some((t, n)) => {
+            (parse_u64(t, "fault time")?, Some(parse_u64(n, "fault extra cycles")?))
+        }
+        None => (parse_u64(when, "fault time")?, None),
+    };
+    let site = site.trim();
+    let (kind, rest) =
+        site.split_once('(').ok_or_else(|| format!("`{s}`: expected SITE like link(x,y,D)"))?;
+    let args = rest
+        .strip_suffix(')')
+        .ok_or_else(|| format!("`{s}`: unterminated site argument list"))?;
+    let parts: Vec<&str> = args.split(',').map(str::trim).collect();
+    let need_extra = |e: Option<u64>| {
+        e.ok_or_else(|| format!("`{s}`: {verb} needs `@T+N` (delay amount in cycles)"))
+    };
+    let no_extra = |e: Option<u64>| match e {
+        Some(_) => Err(format!("`{s}`: {verb} takes `@T`, not `@T+N`")),
+        None => Ok(()),
+    };
+    match (kind.trim(), verb) {
+        ("link", "kill") | ("link", "slow") => {
+            if parts.len() != 3 {
+                return Err(format!("`{s}`: link site needs (x,y,DIR)"));
+            }
+            let x = parse_i64(parts[0], "link x")?;
+            let y = parse_i64(parts[1], "link y")?;
+            let dir = dir_of(parts[2])
+                .ok_or_else(|| format!("`{s}`: direction must be one of N,E,S,W,R"))?;
+            if verb == "kill" {
+                no_extra(extra)?;
+                Ok(FaultSpec::LinkKill { x, y, dir, at })
+            } else {
+                Ok(FaultSpec::LinkSlow { x, y, dir, at, extra: need_extra(extra)? })
+            }
+        }
+        ("pe", "halt") => {
+            if parts.len() != 2 {
+                return Err(format!("`{s}`: pe site needs (x,y)"));
+            }
+            no_extra(extra)?;
+            Ok(FaultSpec::PeHalt {
+                x: parse_i64(parts[0], "pe x")?,
+                y: parse_i64(parts[1], "pe y")?,
+                at,
+            })
+        }
+        ("flow", "corrupt") | ("flow", "delay") => {
+            if parts.len() != 3 {
+                return Err(format!("`{s}`: flow site needs (x,y,color)"));
+            }
+            let x = parse_i64(parts[0], "flow x")?;
+            let y = parse_i64(parts[1], "flow y")?;
+            let color = parts[2]
+                .parse::<u8>()
+                .map_err(|_| format!("`{s}`: color must be a u8"))?;
+            if verb == "corrupt" {
+                no_extra(extra)?;
+                Ok(FaultSpec::Corrupt { x, y, color, at })
+            } else {
+                Ok(FaultSpec::Delay { x, y, color, at, extra: need_extra(extra)? })
+            }
+        }
+        (k, v) => Err(format!("`{s}`: unknown fault `{k}:{v}` (link:kill, link:slow, pe:halt, flow:corrupt, flow:delay)")),
+    }
+}
+
+impl FaultPlan {
+    /// Parse the `SPADA_FAULTS` grammar: `;`-separated specs plus an
+    /// optional `seed=K` entry.
+    pub fn parse(s: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::default();
+        for part in s.split(';') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            if let Some(v) = part.strip_prefix("seed=") {
+                plan.seed = parse_u64(v, "seed")?;
+                continue;
+            }
+            plan.specs.push(parse_spec(part)?);
+        }
+        Ok(plan)
+    }
+
+    /// Read `SPADA_FAULTS`; a malformed value is preserved in
+    /// `invalid` so the run (not the config constructor) rejects it.
+    pub fn from_env() -> FaultPlan {
+        match std::env::var("SPADA_FAULTS") {
+            Ok(s) if !s.trim().is_empty() => match FaultPlan::parse(&s) {
+                Ok(p) => p,
+                Err(e) => FaultPlan { invalid: Some(e), ..FaultPlan::default() },
+            },
+            _ => FaultPlan::default(),
+        }
+    }
+
+    /// A plan holding exactly one spec (the campaign's per-site shape).
+    pub fn single(spec: FaultSpec) -> FaultPlan {
+        FaultPlan { specs: vec![spec], ..FaultPlan::default() }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty() && self.invalid.is_none()
+    }
+}
+
+/// Compiled per-flow fault effects. `kills`/`slows` pair a *start-time
+/// threshold* (the earliest flow start whose head word meets the fault:
+/// the head traverses a depth-`d` link at `start + d`, so threshold =
+/// `T - d`, saturating) with a per-destination mask of which deliveries
+/// sit downstream of the faulted link.
+#[derive(Clone, Debug, Default)]
+pub struct FlowFx {
+    pub kills: Vec<(u64, Vec<bool>)>,
+    pub slows: Vec<(u64, u64, Vec<bool>)>,
+    /// `(T, extra)` — uniform delivery delay for sends at/after `T`.
+    pub delay: Option<(u64, u64)>,
+    /// `(T, spec index)` — one seeded word-flip, fires once.
+    pub corrupt: Option<(u64, u32)>,
+}
+
+/// A [`FaultPlan`] compiled against one routing plan: what the engines
+/// actually consult. Construction validates sites against the fabric.
+#[derive(Clone, Debug)]
+pub struct FaultSet {
+    pub n_specs: usize,
+    pub seed: u64,
+    /// `(PE index, spec index, halt cycle)`, sorted by PE index; one
+    /// entry per halted PE (earliest halt wins).
+    halts: Vec<(u32, u32, u64)>,
+    /// Planned-flow index → effects (dense; `None` = flow unaffected).
+    fx: Vec<Option<FlowFx>>,
+}
+
+/// Walk the route tree backward from `dest` toward the source and
+/// report whether the unique upstream chain crosses `(lx, ly, dir)`.
+/// `None` when the chain is not uniquely reconstructible (re-converging
+/// routes, zero hop latency) — callers treat that conservatively.
+fn upstream_crosses(
+    path: &FlowPath,
+    hop: u64,
+    dest: (i64, i64, u64),
+    lx: i64,
+    ly: i64,
+    dir: Direction,
+) -> Option<bool> {
+    let (mut cx, mut cy, mut cd) = dest;
+    loop {
+        if cd == 0 {
+            return Some(false);
+        }
+        if hop == 0 {
+            return None;
+        }
+        let mut found = None;
+        for l in &path.links {
+            let (dx, dy) = l.dir.delta();
+            if l.x + dx == cx && l.y + dy == cy && l.depth + hop == cd {
+                if found.is_some() {
+                    return None;
+                }
+                found = Some(l);
+            }
+        }
+        let l = found?;
+        if l.x == lx && l.y == ly && l.dir == dir {
+            return Some(true);
+        }
+        (cx, cy, cd) = (l.x, l.y, l.depth);
+    }
+}
+
+impl FaultSet {
+    /// Compile a plan. `Ok(None)` when no faults are configured; `Err`
+    /// when a spec references a site the fabric/program doesn't have
+    /// (loud beats silent for a fault that would never fire).
+    pub fn compile(
+        fp: &FaultPlan,
+        cfg: &MachineConfig,
+        plan: &RoutingPlan,
+    ) -> Result<Option<FaultSet>, String> {
+        if fp.specs.is_empty() {
+            return Ok(None);
+        }
+        let mut fx: Vec<Option<FlowFx>> = vec![None; plan.flows.len()];
+        let mut halts: Vec<(u32, u32, u64)> = Vec::new();
+        for (si, spec) in fp.specs.iter().enumerate() {
+            match *spec {
+                FaultSpec::PeHalt { x, y, at } => {
+                    let g = plan
+                        .pe_index(x, y)
+                        .ok_or_else(|| format!("fault {spec}: no PE with code at ({x},{y})"))?;
+                    halts.push((g as u32, si as u32, at));
+                }
+                FaultSpec::LinkKill { x, y, dir, at }
+                | FaultSpec::LinkSlow { x, y, dir, at, .. } => {
+                    if x < 0 || y < 0 || x >= plan.width || y >= plan.height {
+                        return Err(format!(
+                            "fault {spec}: cell ({x},{y}) is outside the {}x{} fabric",
+                            plan.width, plan.height
+                        ));
+                    }
+                    let slot = ((y * plan.width + x) * 5) as u32 + dir.index() as u32;
+                    let extra = match *spec {
+                        FaultSpec::LinkSlow { extra, .. } => Some(extra),
+                        _ => None,
+                    };
+                    for (fi, flow) in plan.flows.iter().enumerate() {
+                        if flow.error.is_some() {
+                            continue;
+                        }
+                        let Some(&(_, ldepth)) =
+                            flow.links.iter().find(|&&(l, _)| l == slot)
+                        else {
+                            continue;
+                        };
+                        let Ok(fpath) = &flow.trace else { continue };
+                        // Which deliveries sit downstream of the faulted
+                        // link? Ambiguous chains count as affected —
+                        // dropping/delaying too much is sound (arrivals
+                        // only ever get later), delivering through a
+                        // dead link would not be.
+                        let mask: Vec<bool> = fpath
+                            .dests
+                            .iter()
+                            .map(|&d| {
+                                upstream_crosses(fpath, cfg.hop_cycles, d, x, y, dir)
+                                    .unwrap_or(true)
+                            })
+                            .collect();
+                        let thr = at.saturating_sub(ldepth);
+                        let e = fx[fi].get_or_insert_with(FlowFx::default);
+                        match extra {
+                            None => e.kills.push((thr, mask)),
+                            Some(n) => e.slows.push((thr, n, mask)),
+                        }
+                    }
+                }
+                FaultSpec::Corrupt { x, y, color, at }
+                | FaultSpec::Delay { x, y, color, at, .. } => {
+                    let g = plan
+                        .pe_index(x, y)
+                        .ok_or_else(|| format!("fault {spec}: no PE with code at ({x},{y})"))?;
+                    let fi = plan.flow_index(g, color).ok_or_else(|| {
+                        format!("fault {spec}: PE ({x},{y}) sends no flow on color {color}")
+                    })?;
+                    let e = fx[fi].get_or_insert_with(FlowFx::default);
+                    match *spec {
+                        FaultSpec::Corrupt { .. } => {
+                            if e.corrupt.is_some() {
+                                return Err(format!("fault {spec}: duplicate corrupt spec"));
+                            }
+                            e.corrupt = Some((at, si as u32));
+                        }
+                        FaultSpec::Delay { extra, .. } => {
+                            if e.delay.is_some() {
+                                return Err(format!("fault {spec}: duplicate delay spec"));
+                            }
+                            e.delay = Some((at, extra));
+                        }
+                        _ => unreachable!(),
+                    }
+                }
+            }
+        }
+        halts.sort_unstable_by_key(|&(g, _, at)| (g, at));
+        halts.dedup_by_key(|&mut (g, _, _)| g);
+        Ok(Some(FaultSet { n_specs: fp.specs.len(), seed: fp.seed, halts, fx }))
+    }
+
+    /// Effects for a planned-flow index, if any.
+    #[inline]
+    pub fn fx_of(&self, flow: usize) -> Option<&FlowFx> {
+        self.fx.get(flow).and_then(|o| o.as_ref())
+    }
+
+    /// `(spec index, halt cycle)` when the PE is configured to halt.
+    #[inline]
+    pub fn halt_of(&self, gix: u32) -> Option<(usize, u64)> {
+        self.halts
+            .binary_search_by_key(&gix, |&(g, _, _)| g)
+            .ok()
+            .map(|i| (self.halts[i].1 as usize, self.halts[i].2))
+    }
+
+    /// Is the PE halted at time `t`?
+    #[inline]
+    pub fn halted_at(&self, gix: u32, t: u64) -> bool {
+        matches!(self.halt_of(gix), Some((_, at)) if t >= at)
+    }
+
+    /// Deterministic corruption: flip one word of `words` in place,
+    /// seeded by the fault seed and the flow index (never by time or
+    /// shard layout). The high bit is forced into the flip so the
+    /// altered word always differs substantially.
+    pub fn corrupt_words(&self, flow: usize, words: &mut [u32]) -> usize {
+        let mut rng = SplitMix64::new(
+            self.seed ^ 0x9E3779B97F4A7C15u64.wrapping_mul(flow as u64 + 1),
+        );
+        let idx = rng.below(words.len().max(1) as u64) as usize;
+        words[idx] ^= (rng.next_u64() as u32) | 0x8000_0000;
+        idx
+    }
+
+    /// Re-derive the cross-island lookahead under this fault set.
+    ///
+    /// Soundness: every fault model delays, drops, or value-alters an
+    /// arrival — none creates an *earlier* one — so the clean
+    /// `plan.lookahead` is already a valid lower bound on faulted
+    /// cross-island arrival gaps. The re-derivation can therefore only
+    /// *raise* it, by excluding arrivals the fault set provably removes
+    /// for every send: destinations downstream of a link killed from
+    /// threshold 0, and every flow out of a PE halted at cycle 0
+    /// (a halt drops all its task/completion events, so it never
+    /// sends). The result is clamped to `>= plan.lookahead`.
+    pub fn effective_lookahead(&self, plan: &RoutingPlan, cfg: &MachineConfig) -> u64 {
+        let mut min_cross = u64::MAX;
+        for (fi, flow) in plan.flows.iter().enumerate() {
+            if flow.error.is_some() {
+                continue;
+            }
+            if matches!(self.halt_of(flow.src_pe), Some((_, 0))) {
+                continue;
+            }
+            let src_island = plan.island_of[flow.src_pe as usize];
+            let fxe = self.fx_of(fi);
+            for (j, &(dst, _, depth)) in flow.dests.iter().enumerate() {
+                if plan.island_of[dst as usize] == src_island {
+                    continue;
+                }
+                if let Some(fxe) = fxe {
+                    if fxe.kills.iter().any(|(thr, m)| *thr == 0 && m[j]) {
+                        continue;
+                    }
+                }
+                min_cross = min_cross.min(depth);
+            }
+        }
+        let rederived = match min_cross {
+            u64::MAX => u64::MAX,
+            d => d.saturating_add(cfg.hop_cycles),
+        };
+        rederived.max(plan.lookahead)
+    }
+}
+
+/// The triage verdict for one (possibly faulted) run.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Outcome {
+    /// Run completed and every output word matches the clean reference.
+    Correct,
+    /// Run completed but outputs differ — silent data corruption.
+    Sdc { detail: String },
+    /// Wedged on credit exhaustion (finite endpoint buffers).
+    BufferDeadlock { detail: String },
+    /// Wedged on a circular consumer/producer wait.
+    CircularWait { detail: String },
+    /// Event budget exhausted.
+    Runaway { events: u64 },
+    /// Wall-clock watchdog fired.
+    Timeout { detail: String },
+    /// Any other `SimError`.
+    Error { detail: String },
+}
+
+impl Outcome {
+    /// Stable machine-readable label (the campaign JSONL vocabulary).
+    pub fn label(&self) -> &'static str {
+        match self {
+            Outcome::Correct => "correct",
+            Outcome::Sdc { .. } => "sdc",
+            Outcome::BufferDeadlock { .. } => "buffer-deadlock",
+            Outcome::CircularWait { .. } => "circular-wait",
+            Outcome::Runaway { .. } => "runaway",
+            Outcome::Timeout { .. } => "timeout",
+            Outcome::Error { .. } => "error",
+        }
+    }
+
+    pub fn detail(&self) -> String {
+        match self {
+            Outcome::Correct => String::new(),
+            Outcome::Sdc { detail }
+            | Outcome::BufferDeadlock { detail }
+            | Outcome::CircularWait { detail }
+            | Outcome::Timeout { detail }
+            | Outcome::Error { detail } => detail.clone(),
+            Outcome::Runaway { events } => format!("event budget exhausted ({events})"),
+        }
+    }
+}
+
+/// First differing output word between a faulted run and the clean
+/// reference, for the SDC detail string.
+fn first_diff(outs: &[(String, Vec<u32>)], reference: &[(String, Vec<u32>)]) -> String {
+    if outs.len() != reference.len() {
+        return format!("output arity differs: {} vs {}", outs.len(), reference.len());
+    }
+    for ((name, a), (rname, b)) in outs.iter().zip(reference) {
+        if name != rname {
+            return format!("output order differs: {name} vs {rname}");
+        }
+        if a.len() != b.len() {
+            return format!("{name}: length {} vs {}", a.len(), b.len());
+        }
+        if let Some(i) = (0..a.len()).find(|&i| a[i] != b[i]) {
+            return format!("{name}[{i}]: {:#010x} != {:#010x}", a[i], b[i]);
+        }
+    }
+    "outputs differ".into()
+}
+
+/// Classify one run against its clean reference. Every `SimError` path
+/// maps to a verdict — a faulted run is never "unclassified": either it
+/// completed (correct or SDC by output diff), or the error itself is
+/// the classification, cross-referencing the flow-control report via
+/// [`crate::analysis::runtime_deadlock_kind`].
+pub fn classify(
+    result: &Result<RunReport, SimError>,
+    outputs: &[(String, Vec<u32>)],
+    reference: &[(String, Vec<u32>)],
+) -> Outcome {
+    match result {
+        Ok(_) => {
+            if outputs == reference {
+                Outcome::Correct
+            } else {
+                Outcome::Sdc { detail: first_diff(outputs, reference) }
+            }
+        }
+        Err(SimError::Deadlock(msg)) => {
+            match crate::analysis::runtime_deadlock_kind(msg) {
+                crate::analysis::DiagKind::BufferDeadlock => {
+                    Outcome::BufferDeadlock { detail: msg.clone() }
+                }
+                _ => Outcome::CircularWait { detail: msg.clone() },
+            }
+        }
+        Err(SimError::Runaway(n)) => Outcome::Runaway { events: *n },
+        Err(e @ SimError::Timeout { .. }) => Outcome::Timeout { detail: e.to_string() },
+        Err(e) => Outcome::Error { detail: e.to_string() },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::router::PathLink;
+
+    #[test]
+    fn specs_round_trip_through_display() {
+        let src = "link(1,2,E):kill@100; link(0,0,R):slow@5+3; pe(3,1):halt@0; \
+                   flow(2,2,7):corrupt@40; flow(0,1,3):delay@9+16; seed=99";
+        let plan = FaultPlan::parse(src).unwrap();
+        assert_eq!(plan.specs.len(), 5);
+        assert_eq!(plan.seed, 99);
+        let printed = plan.to_string();
+        let again = FaultPlan::parse(&printed).unwrap();
+        assert_eq!(plan, again, "Display must round-trip: {printed}");
+    }
+
+    #[test]
+    fn default_seed_is_omitted_from_display() {
+        let plan = FaultPlan::single(FaultSpec::PeHalt { x: 0, y: 0, at: 7 });
+        assert_eq!(plan.to_string(), "pe(0,0):halt@7");
+        assert_eq!(FaultPlan::parse(&plan.to_string()).unwrap(), plan);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in [
+            "link(0,0,E)",             // no action
+            "link(0,0):kill@5",        // missing direction
+            "link(0,0,Q):kill@5",      // bad direction
+            "link(0,0,E):kill@5+2",    // kill takes no extra
+            "link(0,0,E):slow@5",      // slow needs extra
+            "pe(0):halt@5",            // pe needs (x,y)
+            "flow(0,0,300):corrupt@5", // color out of u8 range
+            "pe(0,0):explode@5",       // unknown verb
+            "seed=banana",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "`{bad}` must not parse");
+        }
+        // Empty and whitespace-only plans are valid and empty.
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse(" ; ;; ").unwrap().is_empty());
+    }
+
+    /// A 3-hop eastward chain: source (0,0) → dests at (1,0) and (2,0).
+    fn chain_path() -> FlowPath {
+        FlowPath {
+            links: vec![
+                PathLink { x: 0, y: 0, dir: Direction::East, depth: 0 },
+                PathLink { x: 1, y: 0, dir: Direction::East, depth: 1 },
+            ],
+            dests: vec![(1, 0, 1), (2, 0, 2)],
+        }
+    }
+
+    #[test]
+    fn upstream_walk_separates_dests_by_link() {
+        let p = chain_path();
+        // The (0,0)->E link feeds both dests.
+        assert_eq!(upstream_crosses(&p, 1, (1, 0, 1), 0, 0, Direction::East), Some(true));
+        assert_eq!(upstream_crosses(&p, 1, (2, 0, 2), 0, 0, Direction::East), Some(true));
+        // The (1,0)->E link feeds only the far dest.
+        assert_eq!(upstream_crosses(&p, 1, (1, 0, 1), 1, 0, Direction::East), Some(false));
+        assert_eq!(upstream_crosses(&p, 1, (2, 0, 2), 1, 0, Direction::East), Some(true));
+        // Zero hop latency is ambiguous — conservative None.
+        assert_eq!(upstream_crosses(&p, 0, (2, 0, 2), 1, 0, Direction::East), None);
+    }
+
+    #[test]
+    fn corruption_is_deterministic_and_changes_a_word() {
+        let fs = FaultSet { n_specs: 1, seed: 7, halts: vec![], fx: vec![] };
+        let mut a = vec![0u32; 8];
+        let mut b = vec![0u32; 8];
+        let ia = fs.corrupt_words(3, &mut a);
+        let ib = fs.corrupt_words(3, &mut b);
+        assert_eq!((ia, &a), (ib, &b), "same seed + flow index → same flip");
+        assert_ne!(a[ia], 0, "the flipped word must change");
+        assert!(a[ia] & 0x8000_0000 != 0, "high bit forced into the flip");
+        let mut c = vec![0u32; 8];
+        fs.corrupt_words(4, &mut c);
+        assert_ne!((ia, a), (ia, c), "different flow index → different flip");
+    }
+
+    #[test]
+    fn outcome_labels_are_stable() {
+        let cases: Vec<(Outcome, &str)> = vec![
+            (Outcome::Correct, "correct"),
+            (Outcome::Sdc { detail: String::new() }, "sdc"),
+            (Outcome::BufferDeadlock { detail: String::new() }, "buffer-deadlock"),
+            (Outcome::CircularWait { detail: String::new() }, "circular-wait"),
+            (Outcome::Runaway { events: 1 }, "runaway"),
+            (Outcome::Timeout { detail: String::new() }, "timeout"),
+            (Outcome::Error { detail: String::new() }, "error"),
+        ];
+        for (o, want) in cases {
+            assert_eq!(o.label(), want);
+        }
+    }
+
+    #[test]
+    fn classify_splits_deadlocks_by_flow_control_report() {
+        let reference: Vec<(String, Vec<u32>)> = vec![("y".into(), vec![1, 2, 3])];
+        let buf = Err(SimError::Deadlock("endpoint full (8/8 words): 4 stalled".into()));
+        assert_eq!(classify(&buf, &[], &reference).label(), "buffer-deadlock");
+        let circ = Err(SimError::Deadlock("PE (1,0) waiting for 4 more wavelets".into()));
+        assert_eq!(classify(&circ, &[], &reference).label(), "circular-wait");
+        let run = Err(SimError::Runaway(9));
+        assert_eq!(classify(&run, &[], &reference).label(), "runaway");
+    }
+}

@@ -11,9 +11,13 @@
 //! - **Credits.** An endpoint with capacity `cap` holds at most `cap`
 //!   admitted-but-unconsumed words. Each consumed word returns one
 //!   credit; credits return at the consuming word's availability time
-//!   (never before the event that consumes it) — an instant-turnaround
-//!   model: the capacity bound is exact, the timing is optimistic by
-//!   the credit round-trip latency.
+//!   (never before the event that consumes it) plus
+//!   `MachineConfig::credit_latency_cycles` — the return-path wire
+//!   delay. The default latency of 0 is the historical
+//!   instant-turnaround model: the capacity bound is exact, the timing
+//!   optimistic by the credit round-trip; a nonzero latency charges
+//!   that round-trip to every readmission wave (arrival-side admission
+//!   spends no credit round-trip and is never delayed by it).
 //! - **Wormhole tails.** A flow whose payload exceeds the free credits
 //!   admits a prefix and leaves its tail *in the fabric*: the words
 //!   wait in the route's link-stage buffers, upstream of the endpoint,
@@ -109,6 +113,10 @@ impl BufFlow {
 pub struct EndpointBuf {
     /// Capacity in words ([`UNBOUNDED`] when no cap is configured).
     cap: u64,
+    /// Cycles for a freed credit to travel back upstream; added to
+    /// every consumption-side credit release (never to arrival-side
+    /// admission, which spends no round-trip).
+    credit_latency: u64,
     /// Admitted, unconsumed words currently buffered.
     in_use: u64,
     flows: VecDeque<BufFlow>,
@@ -137,8 +145,13 @@ pub struct EndpointBuf {
 
 impl EndpointBuf {
     pub fn new(cap: Option<u64>) -> EndpointBuf {
+        Self::with_credit_latency(cap, 0)
+    }
+
+    pub fn with_credit_latency(cap: Option<u64>, credit_latency: u64) -> EndpointBuf {
         EndpointBuf {
             cap: cap.unwrap_or(UNBOUNDED),
+            credit_latency,
             in_use: 0,
             flows: VecDeque::new(),
             first_unadmitted: 0,
@@ -265,7 +278,7 @@ impl EndpointBuf {
             self.pop_front_flow();
         }
         self.in_use -= 1;
-        self.admit(clock);
+        self.admit(clock.saturating_add(self.credit_latency));
         Some(w)
     }
 
@@ -295,7 +308,7 @@ impl EndpointBuf {
             self.in_use -= taken as u64;
             need -= taken;
             last = Some(last.map_or(t_last, |l: u64| l.max(t_last)));
-            self.admit(t_last.max(now));
+            self.admit(t_last.max(now).saturating_add(self.credit_latency));
         }
         last
     }
@@ -486,6 +499,66 @@ mod tests {
         b.take(7, 10, &mut out);
         b.push_flow(20, words(2));
         assert_eq!(b.peak(), 7, "peak never decreases");
+    }
+
+    /// Latency 0 is the historical instant-turnaround model, bit for
+    /// bit — the constructor pair must agree exactly.
+    #[test]
+    fn zero_credit_latency_is_identical() {
+        let run = |mut b: EndpointBuf| {
+            b.push_flow(10, words(10));
+            let mut out = vec![];
+            let last = b.take(10, 100, &mut out);
+            (out, last, b.stall_cycles())
+        };
+        assert_eq!(
+            run(EndpointBuf::new(Some(4))),
+            run(EndpointBuf::with_credit_latency(Some(4), 0))
+        );
+    }
+
+    /// A nonzero latency delays every readmission wave by exactly the
+    /// round-trip: the late-drain scenario's tail admits `latency`
+    /// cycles later, and the extra delay lands in `stall_cycles`.
+    #[test]
+    fn credit_latency_delays_readmission() {
+        let drain = |lat: u64| {
+            let mut b = EndpointBuf::with_credit_latency(Some(4), lat);
+            b.push_flow(10, words(10));
+            let mut out = vec![];
+            let last = b.take(10, 100, &mut out).unwrap();
+            assert_eq!(out, (0..10).collect::<Vec<u32>>(), "latency never drops words");
+            (last, b.stall_cycles())
+        };
+        let (last0, stall0) = drain(0);
+        let (last5, stall5) = drain(5);
+        // lat 0: waves admit at 100 (t_rel) and 104 (link-rate prev_end
+        // dominates the 103 release) → last word at 105.
+        // lat 5: waves admit at 105 and 113 (release 108+5 dominates)
+        // → last word at 114.
+        assert_eq!((last0, last5), (105, 114));
+        assert!(stall5 > stall0, "the round-trip is charged as stall cycles");
+
+        // Unbounded endpoints never spend credits, so latency is inert.
+        let mut b = EndpointBuf::with_credit_latency(None, 50);
+        b.push_flow(10, words(4));
+        let mut out = vec![];
+        assert_eq!(b.take(4, 10, &mut out), Some(13));
+        assert_eq!(b.stall_cycles(), 0);
+    }
+
+    /// Latency also gates the one-word pop path: the freed credit
+    /// readmits the tail only after the round-trip.
+    #[test]
+    fn credit_latency_on_pop_word() {
+        let mut b = EndpointBuf::with_credit_latency(Some(1), 3);
+        b.push_flow(10, words(2));
+        assert_eq!(b.pop_word(10), Some(0));
+        // Credit freed at 10 returns at 13: word 1 (natural 11) admits at 13.
+        assert_eq!(b.pop_word(12), None, "credit still in flight");
+        assert_eq!(b.next_word_time(), Some(13));
+        assert_eq!(b.pop_word(13), Some(1));
+        assert_eq!(b.stall_cycles(), 2);
     }
 
     #[test]

@@ -39,6 +39,11 @@ pub struct Metrics {
     /// `endpoint_capacity_words` from: any capacity ≥ this value
     /// reproduces the unbounded run bit for bit.
     pub peak_queue_depth: u64,
+    /// Fault-effect applications (see [`super::fault`]): one per
+    /// send/dispatch a configured fault actually altered — dropped or
+    /// delayed deliveries, word corruptions, halted-PE event drops
+    /// (counted once per halt). 0 on every clean run.
+    pub faults_injected: u64,
 }
 
 impl Metrics {
@@ -68,6 +73,7 @@ impl Metrics {
         self.dispatches += other.dispatches;
         self.stall_cycles += other.stall_cycles;
         self.peak_queue_depth = self.peak_queue_depth.max(other.peak_queue_depth);
+        self.faults_injected += other.faults_injected;
     }
 }
 
@@ -146,7 +152,8 @@ impl RunReport {
              \"events\":{},\"flows\":{},\"wavelets\":{},\"wavelet_hops\":{},\
              \"flops\":{},\"mem_bytes\":{},\"ramp_bytes\":{},\"task_runs\":{},\
              \"dsd_ops\":{},\"busy_cycles\":{},\"active_pes\":{},\
-             \"dispatches\":{},\"stall_cycles\":{},\"peak_queue_depth\":{}}}}}\n",
+             \"dispatches\":{},\"stall_cycles\":{},\"peak_queue_depth\":{},\
+             \"faults_injected\":{}}}}}\n",
             self.kernel.replace('\\', "\\\\").replace('"', "\\\""),
             self.cycles,
             self.width,
@@ -170,6 +177,7 @@ impl RunReport {
             m.dispatches,
             m.stall_cycles,
             m.peak_queue_depth,
+            m.faults_injected,
         )
     }
 }
@@ -201,6 +209,7 @@ mod tests {
             dispatches: 12,
             stall_cycles: 13,
             peak_queue_depth: 9,
+            faults_injected: 14,
         };
         let b = Metrics {
             events: 100,
@@ -217,6 +226,7 @@ mod tests {
             dispatches: 1200,
             stall_cycles: 1300,
             peak_queue_depth: 3,
+            faults_injected: 1400,
         };
         let mut merged = a.clone();
         merged.merge(&b);
@@ -235,6 +245,7 @@ mod tests {
             dispatches: 1212,
             stall_cycles: 1313,
             peak_queue_depth: 9, // max(9, 3), NOT 12
+            faults_injected: 1414,
         };
         assert_eq!(merged, expect, "every field must merge by sum except peak (max)");
         // Max is symmetric: merging the other way picks the same peak.
@@ -267,6 +278,7 @@ mod tests {
                 dispatches: 12,
                 stall_cycles: 13,
                 peak_queue_depth: 14,
+                faults_injected: 15,
             },
             width: 4,
             height: 4,
@@ -283,6 +295,7 @@ mod tests {
             "\"utilization\":0.5000",
             "\"stall_cycles\":13",
             "\"peak_queue_depth\":14",
+            "\"faults_injected\":15",
             "\"busy_cycles\":425",
             "\"dispatches\":12",
         ] {

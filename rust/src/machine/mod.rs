@@ -39,8 +39,17 @@
 //! deterministic stream (byte-identical across `SPADA_THREADS`) for
 //! Chrome-trace export, profiling and heatmaps — see [`trace`].
 //! Tracing is off by default and never perturbs simulated cycles.
+//!
+//! Deterministic fault injection (`SPADA_FAULTS` /
+//! [`MachineConfig::faults`]) models dead and degraded links, halted
+//! PEs, payload corruption and delayed delivery, applied at fixed
+//! program points so faulted runs stay bit-identical across
+//! `SPADA_THREADS`; outcome triage classifies every faulted run
+//! against its clean reference — see [`fault`]. A wall-clock watchdog
+//! (`SPADA_TIMEOUT_MS`) aborts hung runs with `SimError::Timeout`.
 
 pub mod config;
+pub mod fault;
 pub mod flowctl;
 pub mod plan;
 pub mod program;
@@ -51,6 +60,7 @@ pub mod trace;
 pub mod vecop;
 
 pub use config::MachineConfig;
+pub use fault::{classify, FaultPlan, FaultSet, FaultSpec, Outcome};
 pub use plan::RoutingPlan;
 pub use program::{
     DirSet, Direction, DsdKind, DsdOp, DsdRef, Dtype, FieldAlloc, IoBinding, IoDir,

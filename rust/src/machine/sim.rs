@@ -62,6 +62,9 @@
 //! unbounded and behaviour is bit-identical to every prior snapshot.
 
 use super::config::MachineConfig;
+use super::fault::{
+    FaultSet, FK_CORRUPT, FK_DELAY, FK_LINK_KILL, FK_LINK_SLOW, FK_PE_HALT,
+};
 use super::flowctl::EndpointBuf;
 use super::metrics::{Metrics, RunReport};
 use super::plan::{
@@ -92,6 +95,10 @@ pub enum SimError {
     Io(String),
     /// Malformed program detected at runtime.
     Program(String),
+    /// Wall-clock watchdog fired (`SPADA_TIMEOUT_MS` /
+    /// [`MachineConfig::timeout_ms`]) — the run was aborted, not
+    /// completed; simulated state is wherever the engines stopped.
+    Timeout(String),
 }
 
 impl std::fmt::Display for SimError {
@@ -103,6 +110,46 @@ impl std::fmt::Display for SimError {
             SimError::Runaway(n) => write!(f, "event budget exhausted ({n})"),
             SimError::Io(s) => write!(f, "io error: {s}"),
             SimError::Program(s) => write!(f, "program error: {s}"),
+            SimError::Timeout(s) => write!(f, "timeout: {s}"),
+        }
+    }
+}
+
+impl SimError {
+    /// Stable machine-readable discriminant — `spada run --json` error
+    /// objects and resilience-campaign rows key on it.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            SimError::Validation(_) => "validation",
+            SimError::Route(_) => "route",
+            SimError::Deadlock(_) => "deadlock",
+            SimError::Runaway(_) => "runaway",
+            SimError::Io(_) => "io",
+            SimError::Program(_) => "program",
+            SimError::Timeout(_) => "timeout",
+        }
+    }
+
+    /// The error as a one-line JSON object (every `spada run --json`
+    /// failure path emits this). `site` is the engine's error site
+    /// (cycle, PE x, PE y) when one is known.
+    pub fn to_json(&self, site: Option<(u64, i64, i64)>) -> String {
+        let msg = self.to_string().replace('\\', "\\\\").replace('"', "\\\"");
+        match site {
+            Some((cycle, x, y)) => format!(
+                "{{\"error\":{{\"kind\":\"{}\",\"cycle\":{},\"pe\":[{},{}],\
+                 \"message\":\"{}\"}}}}\n",
+                self.kind(),
+                cycle,
+                x,
+                y,
+                msg
+            ),
+            None => format!(
+                "{{\"error\":{{\"kind\":\"{}\",\"message\":\"{}\"}}}}\n",
+                self.kind(),
+                msg
+            ),
         }
     }
 }
@@ -167,8 +214,11 @@ struct ColorEndpoint {
 }
 
 impl ColorEndpoint {
-    fn new(cap: Option<u64>) -> ColorEndpoint {
-        ColorEndpoint { buf: EndpointBuf::new(cap), consumers: VecDeque::new() }
+    fn new(cap: Option<u64>, credit_latency: u64) -> ColorEndpoint {
+        ColorEndpoint {
+            buf: EndpointBuf::with_credit_latency(cap, credit_latency),
+            consumers: VecDeque::new(),
+        }
     }
 }
 
@@ -313,6 +363,13 @@ struct Ctx<'a> {
     /// in batches (see [`EVENT_BATCH`]) so a program whose total event
     /// count exceeds `cfg.max_events` errors at every thread count.
     events_total: &'a AtomicU64,
+    /// Compiled fault set (see [`super::fault`]); `None` on clean runs,
+    /// so the fault paths cost one branch when no faults are configured.
+    faults: Option<&'a FaultSet>,
+    /// Wall-clock watchdog deadline (`SPADA_TIMEOUT_MS`). Checked at
+    /// every `run_until` entry and every [`EVENT_BATCH`] events — an
+    /// abort-only guard; it never alters simulated time.
+    deadline: Option<std::time::Instant>,
 }
 
 /// Granularity at which parallel shards flush their processed-event
@@ -388,6 +445,12 @@ struct ShardState {
     /// epilogue concatenates them in shard-index order and stably
     /// sorts by `(start, pe)` to reproduce the single-threaded stream.
     trace: Vec<TraceRecord>,
+    /// Per-fault-spec fired/counted flags (indexed by spec index; empty
+    /// on clean runs). One-shot effects — the seeded corruption, the
+    /// once-per-halt metric/trace emission — key off these. Each spec's
+    /// site (source PE or halted PE) is owned by exactly one shard, so
+    /// per-shard flags observe every firing exactly once.
+    fault_fired: Vec<bool>,
 }
 
 /// Lock a shard even if a panicking worker poisoned its mutex — the
@@ -442,6 +505,11 @@ pub struct Simulator {
     trace: Option<Trace>,
     /// Engine shape of the last run (both engines populate this).
     engine: EngineStats,
+    /// `(event cycle, global PE)` of the last run's engine error, when
+    /// one was recorded — the site `spada run --json` error objects
+    /// report. `None` for pre-run errors (validation, I/O) and for the
+    /// epilogue's deadlock report.
+    err_site: Option<(u64, u32)>,
 }
 
 impl Simulator {
@@ -497,7 +565,9 @@ impl Simulator {
                 ready: 0,
                 busy_until: 0,
                 last_activity: 0,
-                endpoints: (0..nslots).map(|_| ColorEndpoint::new(buf_cap)).collect(),
+                endpoints: (0..nslots)
+                    .map(|_| ColorEndpoint::new(buf_cap, cfg.credit_latency_cycles))
+                    .collect(),
                 ran_anything: false,
                 busy_cycles: 0,
             });
@@ -517,6 +587,7 @@ impl Simulator {
             epoch_raw: Vec::new(),
             trace: None,
             engine: EngineStats::default(),
+            err_site: None,
         })
     }
 
@@ -626,6 +697,16 @@ impl Simulator {
         self.epoch_raw.clear();
         self.trace = None;
         self.engine = EngineStats::default();
+        self.err_site = None;
+    }
+
+    /// The last run's engine error site as `(cycle, x, y)`, if one was
+    /// recorded — feed to [`SimError::to_json`].
+    pub fn error_site(&self) -> Option<(u64, i64, i64)> {
+        self.err_site.map(|(t, g)| {
+            let p = &self.plan.pes[g as usize];
+            (t, p.x, p.y)
+        })
     }
 
     /// Dense PE lookup (row-major grid table).
@@ -787,6 +868,19 @@ impl Simulator {
     pub fn run(&mut self) -> Result<RunReport, SimError> {
         assert!(!self.ran, "Simulator::run is single-shot (use Simulator::reset to rerun)");
         self.ran = true;
+        // Fault configuration is validated loudly up front: a malformed
+        // `SPADA_FAULTS` string or a spec naming a site this fabric /
+        // program doesn't have would otherwise arm a campaign that
+        // silently never fires.
+        if let Some(msg) = self.cfg.faults.invalid.clone() {
+            return Err(SimError::Validation(vec![format!("SPADA_FAULTS: {msg}")]));
+        }
+        let faults = FaultSet::compile(&self.cfg.faults, &self.cfg, &self.plan)
+            .map_err(|e| SimError::Validation(vec![e]))?;
+        let deadline = self
+            .cfg
+            .timeout_ms
+            .map(|ms| std::time::Instant::now() + std::time::Duration::from_millis(ms));
         self.load_inputs()?;
         // Arm (or disarm) endpoint stall logging to match the tracing
         // flag — logging mirrors credit accounting without touching
@@ -803,9 +897,9 @@ impl Simulator {
         // positive lookahead to advance epochs (lookahead 0 only occurs
         // under a zero-hop-cost config, where no window can close).
         let result = if threads == 1 || plan.n_islands <= 1 || plan.lookahead == 0 {
-            self.run_single()
+            self.run_single(faults.as_ref(), deadline)
         } else {
-            self.run_parallel(threads)
+            self.run_parallel(threads, faults.as_ref(), deadline)
         };
         if tracing {
             // Deterministic merge: per-shard buffers were concatenated
@@ -817,13 +911,52 @@ impl Simulator {
             records.sort_by_key(|r| (r.start(), r.pe()));
             self.trace = Some(Trace { records, epochs: std::mem::take(&mut self.epoch_raw) });
         }
-        let metrics = result?;
+        let metrics = match result {
+            // The watchdog aborted mid-flight: name where the fabric's
+            // backlog sits. The PEs are already reassembled (both
+            // engines restore them before returning an error), so the
+            // endpoint scan below sees the aborted run's real state.
+            Err(SimError::Timeout(msg)) => {
+                return Err(SimError::Timeout(format!("{msg}; {}", self.busiest_endpoints())))
+            }
+            other => other?,
+        };
         self.finish(metrics)
+    }
+
+    /// Name the most loaded endpoints of the (reassembled) PE table —
+    /// queued plus fabric-stalled words — for the watchdog's abort
+    /// diagnostic. Cold: runs once, only on `SimError::Timeout`.
+    fn busiest_endpoints(&self) -> String {
+        let mut tops: Vec<(u64, i64, i64, u8)> = Vec::new();
+        for pe in &self.pes {
+            let cp = &self.plan.classes[pe.class];
+            for (slot, ep) in pe.endpoints.iter().enumerate() {
+                let load = ep.buf.occupancy() + ep.buf.stalled_words();
+                if load > 0 {
+                    tops.push((load, pe.x, pe.y, cp.slot_color[slot]));
+                }
+            }
+        }
+        if tops.is_empty() {
+            return "no queued endpoint words".to_string();
+        }
+        tops.sort_by_key(|&(load, x, y, c)| (Reverse(load), x, y, c));
+        tops.truncate(3);
+        let parts: Vec<String> = tops
+            .iter()
+            .map(|&(load, x, y, c)| format!("PE ({x},{y}) color {c}: {load} words"))
+            .collect();
+        format!("busiest endpoints: {}", parts.join(", "))
     }
 
     /// Classic path: one shard spanning the whole fabric (identity
     /// index maps), one event queue, run to completion.
-    fn run_single(&mut self) -> Result<Metrics, SimError> {
+    fn run_single(
+        &mut self,
+        faults: Option<&FaultSet>,
+        deadline: Option<std::time::Instant>,
+    ) -> Result<Metrics, SimError> {
         let plan = Arc::clone(&self.plan);
         let cfg = self.cfg.clone();
         let events_total = AtomicU64::new(0); // unused: one shard checks exactly
@@ -834,8 +967,13 @@ impl Simulator {
             trace: self.tracing,
             maps: None,
             events_total: &events_total,
+            faults,
+            deadline,
         };
         let mut shard = ShardState::new(0, std::mem::take(&mut self.pes), cfg.link_slots());
+        if let Some(fs) = faults {
+            shard.fault_fired = vec![false; fs.n_specs];
+        }
         shard.init_pes(&ctx);
         shard.run_until(&ctx, u64::MAX);
         shard.fold_flowctl();
@@ -848,7 +986,8 @@ impl Simulator {
             barrier_wait_ns: 0,
         };
         self.trace_raw = shard.trace;
-        if let Some((_, _, e)) = shard.error {
+        if let Some((t, g, e)) = shard.error {
+            self.err_site = Some((t, g));
             return Err(e);
         }
         Ok(shard.metrics)
@@ -856,10 +995,22 @@ impl Simulator {
 
     /// Epoch-parallel path: conservative parallel discrete-event
     /// simulation over the plan's link-sharing islands.
-    fn run_parallel(&mut self, threads: usize) -> Result<Metrics, SimError> {
+    fn run_parallel(
+        &mut self,
+        threads: usize,
+        faults: Option<&FaultSet>,
+        deadline: Option<std::time::Instant>,
+    ) -> Result<Metrics, SimError> {
         let plan = Arc::clone(&self.plan);
         let cfg = self.cfg.clone();
-        let lookahead = plan.lookahead;
+        // A halted PE or dead link removes arrivals but never creates
+        // earlier ones, so the clean lookahead is already sound under
+        // faults; the re-derivation can only widen the window (see
+        // [`FaultSet::effective_lookahead`]).
+        let lookahead = match faults {
+            Some(fs) => fs.effective_lookahead(&plan, &cfg),
+            None => plan.lookahead,
+        };
 
         // --- runtime shards: islands folded onto a fixed count ---
         let n_shards = plan.n_islands.min(MAX_SHARDS);
@@ -902,7 +1053,13 @@ impl Simulator {
         let shards: Vec<Mutex<ShardState>> = shard_pes
             .into_iter()
             .enumerate()
-            .map(|(s, p)| Mutex::new(ShardState::new(s as u32, p, link_counts[s] as usize)))
+            .map(|(s, p)| {
+                let mut sh = ShardState::new(s as u32, p, link_counts[s] as usize);
+                if let Some(fs) = faults {
+                    sh.fault_fired = vec![false; fs.n_specs];
+                }
+                Mutex::new(sh)
+            })
             .collect();
         let events_total = AtomicU64::new(0);
         let tracing = self.tracing;
@@ -913,6 +1070,8 @@ impl Simulator {
             trace: tracing,
             maps: Some(&maps),
             events_total: &events_total,
+            faults,
+            deadline,
         };
         for sh in &shards {
             lock_shard(sh).init_pes(&ctx);
@@ -984,15 +1143,19 @@ impl Simulator {
                     if let Some(e) = &sh.error {
                         // Pick the globally earliest (time, PE) error,
                         // with real program errors strictly preferred
-                        // over the budget guard: *whether* a shard
-                        // trips Runaway can depend on how the other
-                        // shards' batched counter flushes interleave,
-                        // so it must never shadow a deterministic
-                        // error from the event stream.
-                        let key =
-                            |e: &(u64, u32, SimError)| {
-                                (matches!(e.2, SimError::Runaway(_)), e.0, e.1)
-                            };
+                        // over the budget and watchdog guards: *whether*
+                        // a shard trips Runaway can depend on how the
+                        // other shards' batched counter flushes
+                        // interleave (and Timeout is wall-clock by
+                        // nature), so neither must ever shadow a
+                        // deterministic error from the event stream.
+                        let key = |e: &(u64, u32, SimError)| {
+                            (
+                                matches!(e.2, SimError::Runaway(_) | SimError::Timeout(_)),
+                                e.0,
+                                e.1,
+                            )
+                        };
                         let earlier = match &err {
                             None => true,
                             Some(b) => key(e) < key(b),
@@ -1088,7 +1251,8 @@ impl Simulator {
         };
         self.epoch_raw = epoch_log;
         self.pes = slots.into_iter().map(|p| p.expect("every PE returns from its shard")).collect();
-        if let Some((_, _, e)) = run_error {
+        if let Some((t, g, e)) = run_error {
+            self.err_site = Some((t, g));
             return Err(e);
         }
         Ok(metrics)
@@ -1163,8 +1327,8 @@ impl Simulator {
             // analysis here — except for buffer deadlocks, where the
             // credit pass's finite-capacity verdict is the relevant
             // one (`spada check --buffers`), so it is always consulted.
-            let verdict = match self.prog.meta.get("static_check").map(String::as_str) {
-                Some("clean") if !buffer_stall => {
+            let verdict = match crate::analysis::is_statically_clean(&self.prog) {
+                true if !buffer_stall => {
                     "static check passed at compile time: no static deadlock (dynamic-only)"
                         .to_string()
                 }
@@ -1198,7 +1362,17 @@ impl Simulator {
                     }
                 }
             };
-            return Err(SimError::Deadlock(format!("{}; {}", stuck.join("; "), verdict)));
+            let fault_note = if metrics.faults_injected > 0 {
+                format!("; {} fault effect(s) injected this run", metrics.faults_injected)
+            } else {
+                String::new()
+            };
+            return Err(SimError::Deadlock(format!(
+                "{}; {}{}",
+                stuck.join("; "),
+                verdict,
+                fault_note
+            )));
         }
 
         let cycles = self.pes.iter().map(|p| p.last_activity).max().unwrap_or(0);
@@ -1236,6 +1410,7 @@ impl ShardState {
             outbox: Vec::new(),
             error: None,
             trace: Vec::new(),
+            fault_fired: Vec::new(),
         }
     }
 
@@ -1320,6 +1495,11 @@ impl ShardState {
         if self.error.is_some() {
             return;
         }
+        // Watchdog: once at entry (epochs can be nearly empty) and
+        // every EVENT_BATCH events below.
+        if self.watchdog_fired(ctx, self.now) {
+            return;
+        }
         let single = ctx.maps.is_none();
         // Events processed this call but not yet flushed into the
         // global budget counter (parallel mode only).
@@ -1353,7 +1533,26 @@ impl ShardState {
                     }
                 }
             }
+            if ctx.deadline.is_some()
+                && self.metrics.events & (EVENT_BATCH - 1) == 0
+                && self.watchdog_fired(ctx, ev.time)
+            {
+                return;
+            }
             self.now = ev.time;
+            // A halted PE processes nothing from its halt cycle on: its
+            // wakeups and microthread completions are dropped here
+            // (counted once per halt); arriving flows still buffer (see
+            // `flow_arrive`) so upstream credit accounting stays
+            // physical.
+            if let Some(fs) = ctx.faults {
+                if let Some((si, at)) = fs.halt_of(gpe) {
+                    if ev.time >= at && !matches!(ev.kind, EventKind::FlowArrive { .. }) {
+                        self.note_halt(ctx, gpe, si, at);
+                        continue;
+                    }
+                }
+            }
             let res = match ev.kind {
                 EventKind::PeReady(pe) => self.pe_ready(ctx, ctx.loc(pe)),
                 EventKind::FlowArrive { pe, slot, first_word, payload } => {
@@ -1378,6 +1577,42 @@ impl ShardState {
             if total > ctx.cfg.max_events && self.error.is_none() {
                 let gpe = self.pes.first().map(|p| p.gix).unwrap_or(0);
                 self.error = Some((self.now, gpe, SimError::Runaway(ctx.cfg.max_events)));
+            }
+        }
+    }
+
+    /// Check the wall-clock watchdog; on expiry freeze this shard with
+    /// a [`SimError::Timeout`] sited at `(t, first owned PE)` and
+    /// return true. Abort-only: simulated time is never touched, and
+    /// the coordinator's error pick deprioritizes Timeout exactly like
+    /// Runaway (which shard notices first is wall-clock racy).
+    fn watchdog_fired(&mut self, ctx: &Ctx<'_>, t: u64) -> bool {
+        let Some(dl) = ctx.deadline else { return false };
+        if std::time::Instant::now() < dl {
+            return false;
+        }
+        let gpe = self.pes.first().map(|p| p.gix).unwrap_or(0);
+        self.error = Some((
+            t,
+            gpe,
+            SimError::Timeout(format!(
+                "wall-clock watchdog ({} ms) fired; last progress at cycle {}",
+                ctx.cfg.timeout_ms.unwrap_or(0),
+                self.now
+            )),
+        ));
+        true
+    }
+
+    /// Record a halted-PE fault application — the metric increment and
+    /// trace record fire once per halt spec, on the first event the
+    /// halt actually swallows.
+    fn note_halt(&mut self, ctx: &Ctx<'_>, gpe: u32, si: usize, at: u64) {
+        if !self.fault_fired[si] {
+            self.fault_fired[si] = true;
+            self.metrics.faults_injected += 1;
+            if ctx.trace {
+                self.trace.push(TraceRecord::Fault { pe: gpe, kind: FK_PE_HALT, start: at });
             }
         }
     }
@@ -1602,12 +1837,23 @@ impl ShardState {
         // stall part of its payload in the fabric; with none this is
         // exactly the historical enqueue (see `machine::flowctl`).
         self.pes[pe_idx].endpoints[slot as usize].buf.push_flow(first_word, words);
+        let gpe = self.pes[pe_idx].gix;
+        if let Some(fs) = ctx.faults {
+            if let Some((si, at)) = fs.halt_of(gpe) {
+                if self.now >= at {
+                    // Halted consumer: the words buffer (and stall
+                    // their tails, backpressuring upstream) but are
+                    // never consumed, and no task dispatch fires.
+                    self.note_halt(ctx, gpe, si, at);
+                    return Ok(());
+                }
+            }
+        }
         self.try_satisfy(ctx, pe_idx, slot)?;
         if ctx.trace {
             self.drain_stall_log(ctx, pe_idx, slot);
         }
         // A data task may be waiting for this color.
-        let gpe = self.pes[pe_idx].gix;
         self.schedule(first_word.max(self.now), EventKind::PeReady(gpe));
         Ok(())
     }
@@ -1679,9 +1925,89 @@ impl ShardState {
             });
         }
 
+        // Fault effects (see `machine::fault`): dropped and delayed
+        // deliveries, seeded payload corruption. Everything is keyed
+        // off `start` and per-flow compiled state, both identical
+        // across thread counts, so faulted runs stay bit-identical.
+        // Link occupancy above is deliberately untouched — a dead link
+        // still holds its upstream path; only deliveries change.
+        let mut words = words;
+        let mut dropped: Option<Vec<bool>> = None;
+        let mut extra_of: Option<Vec<u64>> = None;
+        if let Some(fx) = ctx.faults.and_then(|fs| fs.fx_of(fi)) {
+            for (thr, mask) in &fx.kills {
+                if start >= *thr && mask.iter().any(|&m| m) {
+                    let d = dropped.get_or_insert_with(|| vec![false; flow.dests.len()]);
+                    for (j, &m) in mask.iter().enumerate() {
+                        if m {
+                            d[j] = true;
+                        }
+                    }
+                    self.metrics.faults_injected += 1;
+                    if ctx.trace {
+                        self.trace.push(TraceRecord::Fault {
+                            pe: src_g,
+                            kind: FK_LINK_KILL,
+                            start,
+                        });
+                    }
+                }
+            }
+            for (thr, extra, mask) in &fx.slows {
+                if start >= *thr && mask.iter().any(|&m| m) {
+                    let e = extra_of.get_or_insert_with(|| vec![0u64; flow.dests.len()]);
+                    for (j, &m) in mask.iter().enumerate() {
+                        if m {
+                            e[j] = e[j].saturating_add(*extra);
+                        }
+                    }
+                    self.metrics.faults_injected += 1;
+                    if ctx.trace {
+                        self.trace.push(TraceRecord::Fault {
+                            pe: src_g,
+                            kind: FK_LINK_SLOW,
+                            start,
+                        });
+                    }
+                }
+            }
+            if let Some((at, extra)) = fx.delay {
+                if start >= at {
+                    let e = extra_of.get_or_insert_with(|| vec![0u64; flow.dests.len()]);
+                    for v in e.iter_mut() {
+                        *v = v.saturating_add(extra);
+                    }
+                    self.metrics.faults_injected += 1;
+                    if ctx.trace {
+                        self.trace.push(TraceRecord::Fault { pe: src_g, kind: FK_DELAY, start });
+                    }
+                }
+            }
+            if let Some((at, si)) = fx.corrupt {
+                if start >= at && !self.fault_fired[si as usize] {
+                    self.fault_fired[si as usize] = true;
+                    let mut w = (*words).clone();
+                    ctx.faults.expect("fx implies faults").corrupt_words(fi, &mut w);
+                    words = Arc::new(w);
+                    self.metrics.faults_injected += 1;
+                    if ctx.trace {
+                        self.trace.push(TraceRecord::Fault { pe: src_g, kind: FK_CORRUPT, start });
+                    }
+                }
+            }
+        }
+        let is_dropped = |j: usize| dropped.as_ref().is_some_and(|d| d[j]);
+
         // In-shard destinations share one pool entry; every cross-shard
         // destination ships its own message through the epoch barrier.
-        let local = flow.dests.iter().filter(|&&(d, _, _)| ctx.shard_of(d) == self.ix).count();
+        // Dropped deliveries count in neither: their `FlowArrive` never
+        // exists, so the payload's pending count must not include them.
+        let local = flow
+            .dests
+            .iter()
+            .enumerate()
+            .filter(|&(j, &(d, _, _))| !is_dropped(j) && ctx.shard_of(d) == self.ix)
+            .count();
         let payload = if local > 0 {
             let entry = FlowPayload { words: Some(Arc::clone(&words)), pending: local as u32 };
             match self.free_payloads.pop() {
@@ -1697,8 +2023,12 @@ impl ShardState {
         } else {
             0 // never read: no local FlowArrive references it
         };
-        for &(dst, slot, depth) in &flow.dests {
-            let first = start + depth + ctx.cfg.hop_cycles;
+        for (j, &(dst, slot, depth)) in flow.dests.iter().enumerate() {
+            if is_dropped(j) {
+                continue;
+            }
+            let extra = extra_of.as_ref().map_or(0, |e| e[j]);
+            let first = start + depth + ctx.cfg.hop_cycles + extra;
             if ctx.shard_of(dst) == self.ix {
                 self.schedule(
                     first.max(self.now),

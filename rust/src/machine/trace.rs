@@ -62,6 +62,11 @@ pub enum TraceRecord {
     /// finite endpoint buffer at `end`. Contributes
     /// `(end - start) * words` to `Metrics::stall_cycles`.
     Stall { pe: u32, color: u8, start: u64, end: u64, words: u32 },
+    /// A fault effect fired (see [`super::fault`]): `kind` is one of
+    /// the `FK_*` codes, `pe` the PE it applied at (source PE for
+    /// link/flow faults, the halted PE for halts). Instant — faults
+    /// have no duration, only an application point.
+    Fault { pe: u32, kind: u8, start: u64 },
 }
 
 impl TraceRecord {
@@ -71,7 +76,8 @@ impl TraceRecord {
             TraceRecord::Task { pe, .. }
             | TraceRecord::Dsd { pe, .. }
             | TraceRecord::Flow { pe, .. }
-            | TraceRecord::Stall { pe, .. } => pe,
+            | TraceRecord::Stall { pe, .. }
+            | TraceRecord::Fault { pe, .. } => pe,
         }
     }
 
@@ -81,7 +87,8 @@ impl TraceRecord {
             TraceRecord::Task { start, .. }
             | TraceRecord::Dsd { start, .. }
             | TraceRecord::Flow { start, .. }
-            | TraceRecord::Stall { start, .. } => start,
+            | TraceRecord::Stall { start, .. }
+            | TraceRecord::Fault { start, .. } => start,
         }
     }
 }
@@ -200,6 +207,7 @@ const PID_TASKS: u32 = 0;
 const PID_DSD: u32 = 1;
 const PID_FLOWS: u32 = 2;
 const PID_STALLS: u32 = 3;
+const PID_FAULTS: u32 = 4;
 const PID_EPOCHS: u32 = 9;
 
 /// Streams the trace into Chrome trace-event JSON ("JSON array
@@ -250,6 +258,7 @@ impl<'a> ChromeWriter<'a> {
         self.meta("process_name", PID_DSD, 0, "DSD ops");
         self.meta("process_name", PID_FLOWS, 0, "flows (by source PE)");
         self.meta("process_name", PID_STALLS, 0, "endpoint stalls");
+        self.meta("process_name", PID_FAULTS, 0, "injected faults");
         if self.include_epochs {
             self.meta("process_name", PID_EPOCHS, 0, "engine epochs");
         }
@@ -325,6 +334,16 @@ impl TraceSink for ChromeWriter<'_> {
                  \"dur\":{},\"name\":\"stall c{color}\",\"args\":{{\"words\":{words}}}}}",
                 end - start,
             ),
+            TraceRecord::Fault { pe, kind, start } => {
+                let name = super::fault::FAULT_KIND_NAMES
+                    .get(kind as usize)
+                    .copied()
+                    .unwrap_or("fault");
+                format!(
+                    "{{\"ph\":\"i\",\"s\":\"t\",\"pid\":{PID_FAULTS},\"tid\":{pe},\
+                     \"ts\":{start},\"name\":\"{name}\",\"args\":{{\"kind\":{kind}}}}}"
+                )
+            }
         };
         self.push(&ev);
     }
@@ -410,6 +429,8 @@ pub struct Profile {
     pub dsd_vectorized: u64,
     /// Flow count (fabric injections).
     pub flows: u64,
+    /// Fault-effect applications (0 on clean runs).
+    pub faults: u64,
     link_paths: BTreeMap<u32, Vec<u32>>,
 }
 
@@ -547,6 +568,9 @@ impl TraceSink for Profile {
                     b.stall += (end - start) * words as u64;
                 }
             }
+            TraceRecord::Fault { .. } => {
+                self.faults += 1;
+            }
         }
     }
 }
@@ -656,6 +680,7 @@ mod tests {
                     end: 17,
                 },
                 TraceRecord::Stall { pe: 0, color: 3, start: 10, end: 14, words: 2 },
+                TraceRecord::Fault { pe: 0, kind: 3, start: 12 },
                 TraceRecord::Task { pe: 0, task: 0, start: 30, end: 40 },
             ],
             epochs: vec![EpochRecord {
@@ -674,6 +699,8 @@ mod tests {
         assert_eq!(r.start(), 42);
         let s = TraceRecord::Stall { pe: 2, color: 0, start: 5, end: 9, words: 1 };
         assert_eq!((s.pe(), s.start()), (2, 5));
+        let f = TraceRecord::Fault { pe: 3, kind: 0, start: 11 };
+        assert_eq!((f.pe(), f.start()), (3, 11));
     }
 
     #[test]
@@ -708,6 +735,10 @@ mod tests {
         assert!(json.contains("\"name\":\"Fmac\""));
         assert!(json.contains("\"vectorized\":true"));
         assert!(json.contains("\"name\":\"stall c3\""));
+        // Faults render as instant events on the dedicated lane, named
+        // by their FK_* code (3 = corrupt).
+        assert!(json.contains("\"ph\":\"i\",\"s\":\"t\",\"pid\":4,\"tid\":0,\"ts\":12,\"name\":\"corrupt\""), "{json}");
+        assert!(json.contains("\"name\":\"injected faults\""), "{json}");
         // Epochs are excluded from the default deterministic export...
         assert!(!json.contains("\"epoch\""));
         // ...and included behind the explicit opt-in.
@@ -739,6 +770,7 @@ mod tests {
         assert_eq!(p.total_stall, 8);
         assert_eq!(p.dsd_ops, 1);
         assert_eq!(p.dsd_vectorized, 1);
+        assert_eq!(p.faults, 1, "the corrupt record counts, attributing no cycles");
         assert_eq!(p.hot_pes(4).len(), 1);
         let json = p.to_json(&plan, 8);
         assert!(json.contains("\"total_busy\":24"), "{json}");

@@ -55,6 +55,9 @@ impl Args {
                             | "trace"
                             | "format"
                             | "top"
+                            | "faults"
+                            | "kernel"
+                            | "out"
                     )
                 {
                     flags.push((name.to_string(), it.next()));
@@ -116,7 +119,14 @@ fn compile_and_stage(name: &str, args: &Args) -> Result<(MachineConfig, spada::m
     let binds = parse_binds(args.flag("bind"))?;
     let bind_refs: Vec<(&str, i64)> = binds.iter().map(|(k, v)| (k.as_str(), *v)).collect();
     let (w, h) = grid_of(args, &binds);
-    let cfg = MachineConfig::with_grid(w, h);
+    let mut cfg = MachineConfig::with_grid(w, h);
+    // --faults SPEC overrides the ambient SPADA_FAULTS plan (see
+    // machine::fault for the grammar). Parse errors are loud here so a
+    // typo never runs clean and reports success.
+    if let Some(spec) = args.flag("faults") {
+        cfg.faults =
+            spada::machine::FaultPlan::parse(spec).map_err(|e| anyhow!("--faults: {e}"))?;
+    }
     let ck = kernels::compile(name, &bind_refs, &cfg, &options(args))?;
     let mut sim = ck.simulator()?;
     // Fill every input with deterministic noise.
@@ -133,6 +143,35 @@ fn compile_and_stage(name: &str, args: &Args) -> Result<(MachineConfig, spada::m
         let _ = sim.set_input(&arg, &data);
     }
     Ok((cfg, sim))
+}
+
+/// Read back every declared output of a wedged run (`spada run
+/// --drain`): the partial results the quiesced fabric computed before
+/// the error. JSON mode emits raw 32-bit words (always valid JSON —
+/// partial f32 state may hold NaN); table mode shows f32 previews.
+fn drain_outputs(sim: &spada::machine::Simulator, json: bool) {
+    let mut seen: Vec<String> = vec![];
+    for b in sim.program().io.iter() {
+        if !matches!(b.dir, spada::machine::IoDir::Out) || seen.contains(&b.arg) {
+            continue;
+        }
+        seen.push(b.arg.clone());
+        let Ok(words) = sim.get_output_words(&b.arg) else { continue };
+        if json {
+            let list =
+                words.iter().map(|w| w.to_string()).collect::<Vec<_>>().join(",");
+            println!("{{\"drain\":{{\"arg\":\"{}\",\"words\":[{list}]}}}}", b.arg);
+        } else {
+            let vals: Vec<f32> = words.iter().copied().map(f32::from_bits).take(8).collect();
+            println!(
+                "drained {} ({} words): {:?}{}",
+                b.arg,
+                words.len(),
+                vals,
+                if words.len() > 8 { " …" } else { "" }
+            );
+        }
+    }
 }
 
 fn grid_of(args: &Args, binds: &[(String, i64)]) -> (i64, i64) {
@@ -231,7 +270,25 @@ fn real_main() -> Result<()> {
         }
         "run" => {
             let name = args.positional.get(1).ok_or_else(|| anyhow!("run <kernel>"))?;
-            let (cfg, mut sim) = compile_and_stage(name, &args)?;
+            let json = args.has("json");
+            let (cfg, mut sim) = match compile_and_stage(name, &args) {
+                Ok(v) => v,
+                Err(e) => {
+                    // Pre-run failures (validation, routing, bad binds)
+                    // also honor the --json contract: stdout carries a
+                    // machine-readable error object, exit is nonzero.
+                    if json {
+                        match e.downcast_ref::<spada::machine::SimError>() {
+                            Some(se) => print!("{}", se.to_json(None)),
+                            None => println!(
+                                "{{\"error\":{{\"kind\":\"compile\",\"message\":\"{}\"}}}}",
+                                e.to_string().replace('\\', "\\\\").replace('"', "\\\"")
+                            ),
+                        }
+                    }
+                    return Err(e);
+                }
+            };
             // --trace PATH (or SPADA_TRACE=PATH) arms cycle-accurate
             // capture; the Chrome trace-event JSON is written after the
             // run. Tracing never changes simulated cycles.
@@ -242,7 +299,24 @@ fn real_main() -> Result<()> {
             if trace_path.is_some() {
                 sim.set_tracing(true);
             }
-            let report = sim.run()?;
+            let report = match sim.run() {
+                Ok(r) => r,
+                Err(e) => {
+                    // Every SimError path: a JSON error object naming
+                    // kind, cycle and PE (when the engine recorded an
+                    // error site) on stdout, nonzero exit through the
+                    // normal error epilogue on stderr.
+                    if json {
+                        print!("{}", e.to_json(sim.error_site()));
+                    }
+                    // --drain: partial-results mode for wedged runs —
+                    // read back whatever the quiesced fabric computed.
+                    if args.has("drain") {
+                        drain_outputs(&sim, json);
+                    }
+                    return Err(e.into());
+                }
+            };
             if let Some(path) = &trace_path {
                 let trace = sim.take_trace().expect("tracing was enabled");
                 let json = spada::machine::chrome_trace_json(
@@ -445,6 +519,29 @@ fn real_main() -> Result<()> {
             let exp = args.flag("exp").unwrap_or("all").to_string();
             harness::run(&exp, args.has("quick"))
         }
+        "faults" => {
+            // Resilience campaign: sweep single-fault sites across the
+            // library kernels and write the JSONL resilience matrix.
+            if !args.has("campaign") {
+                bail!(
+                    "spada faults --campaign [--quick] [--kernel NAME] [--grid N] [--out FILE]\n\
+                     (single runs take `spada run <kernel> --faults 'SPEC'` instead)"
+                );
+            }
+            let opts = harness::faults::CampaignOpts {
+                quick: args.has("quick"),
+                kernel: args.flag("kernel").map(str::to_string),
+                grid: match args.flag("grid") {
+                    Some(g) => g.parse().context("--grid")?,
+                    None => harness::faults::CampaignOpts::default().grid,
+                },
+                out: args
+                    .flag("out")
+                    .map(str::to_string)
+                    .unwrap_or_else(|| harness::faults::CampaignOpts::default().out),
+            };
+            harness::faults::campaign(&opts)
+        }
         "loc" => harness::run("table2", false),
         "help" => {
             print_help();
@@ -472,6 +569,17 @@ fn print_help() {
          \x20   [--trace-epochs]]  (--json prints the full RunReport as JSON; --trace\n\
          \x20    writes a Chrome trace-event file, loadable in Perfetto — tracing never\n\
          \x20    changes simulated cycles; --trace-epochs adds parallel-engine epoch tracks)\n\
+         \x20 spada run <kernel> --faults 'pe(1,0):halt@100' [--drain] [--json]\n\
+         \x20   (deterministic fault injection — grammar: link(x,y,D):kill@T | :slow@T+N,\n\
+         \x20    pe(x,y):halt@T, flow(x,y,c):corrupt@T | :delay@T+N, seed=K, ';'-separated.\n\
+         \x20    --drain prints partial outputs of a wedged run; --json turns every\n\
+         \x20    simulator error into a JSON object with kind/cycle/PE, exit nonzero)\n\
+         \x20 spada faults --campaign [--quick] [--kernel NAME] [--grid N] [--out FILE]\n\
+         \x20   (resilience sweep: every used link x N injection times, every PE halt,\n\
+         \x20    one corruption per flow, across the six library kernels; writes a JSONL\n\
+         \x20    matrix [default FAULTS_matrix.jsonl] with outcomes correct|sdc|\n\
+         \x20    buffer-deadlock|circular-wait|runaway|timeout|error, byte-identical\n\
+         \x20    across SPADA_THREADS)\n\
          \x20 spada profile <kernel> [--bind ...] [--grid WxH] [--format table|json] [--top N]\n\
          \x20   (cycle-accurate profile: per-PE busy/stall/idle, hot PEs/links, link\n\
          \x20    occupancy histogram and an ASCII utilization heatmap)\n\
@@ -492,6 +600,10 @@ fn print_help() {
          \x20                       cycles may grow, wedges report a buffer deadlock)\n\
          \x20         SPADA_TRACE=PATH write a Chrome trace from `spada run` (same as --trace;\n\
          \x20                       the flag wins when both are given)\n\
+         \x20         SPADA_FAULTS=SPEC ambient fault plan, same grammar as --faults\n\
+         \x20                       (the flag wins when both are given)\n\
+         \x20         SPADA_TIMEOUT_MS=N wall-clock watchdog: abort a hung run after N ms\n\
+         \x20                       with a timeout error naming the busiest endpoints\n\
          Kernels: {}",
         kernels::sources().iter().map(|(n, _)| *n).collect::<Vec<_>>().join(", ")
     );

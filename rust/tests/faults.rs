@@ -1,0 +1,372 @@
+//! Fault injection: classification totality, engine determinism under
+//! faults, inert-fault bit-identity, and the watchdog/error contracts.
+//!
+//! The resilience layer (`machine::fault` + the campaign harness)
+//! promises four things, each pinned here:
+//!
+//! 1. **No silent hangs.** Any single link drop on any library kernel
+//!    terminates with a classified outcome — a label from the closed
+//!    taxonomy, never an unbounded run (property-tested over random
+//!    sites and injection times; the event budget is the backstop).
+//! 2. **Determinism.** A faulted run is bit-identical at 1 and 4
+//!    worker threads — report, outputs, and error text — so a campaign
+//!    matrix does not depend on `SPADA_THREADS`.
+//! 3. **Zero-cost when inert.** A fault armed far past the run's end
+//!    reproduces the clean run bit for bit at both thread counts:
+//!    arming the machinery must not perturb a healthy simulation.
+//! 4. **Loud aborts.** The wall-clock watchdog surfaces as a
+//!    `SimError::Timeout` naming the last-progress cycle, and every
+//!    `SimError` renders the one-line JSON object `spada run --json`
+//!    emits on failure.
+
+use std::sync::Arc;
+
+use spada::harness::common::{output_words, scaled_binds, stage_random_inputs};
+use spada::kernels::{self, CompiledKernel};
+use spada::machine::{
+    chrome_trace_json, classify, Direction, FaultPlan, FaultSpec, MachineConfig, Outcome,
+    RunReport, SimError, Simulator,
+};
+use spada::passes::Options;
+use spada::ptest::run_prop;
+
+const INPUT_SEED: u64 = 0xFA57;
+
+/// The closed outcome vocabulary — campaign rows and CI validators key
+/// on these exact labels.
+const LABELS: [&str; 7] =
+    ["correct", "sdc", "buffer-deadlock", "circular-wait", "runaway", "timeout", "error"];
+
+/// Compile one library kernel with an explicit fault plan. Explicit
+/// `faults`/`timeout_ms`/capacity shield the suite from the ambient CI
+/// legs (`SPADA_FAULTS`, `SPADA_TIMEOUT_MS`, `SPADA_BUF_CAP` all run
+/// the full test binary).
+fn compile_faulted(kernel: &str, g: i64, k: i64, faults: FaultPlan) -> CompiledKernel {
+    let (binds, w, h) = scaled_binds(kernel, g, k).unwrap();
+    let mut cfg = MachineConfig::with_grid(w, h);
+    cfg.faults = faults;
+    cfg.timeout_ms = None;
+    cfg.endpoint_capacity_words = None;
+    kernels::compile(kernel, &binds, &cfg, &Options::default())
+        .unwrap_or_else(|e| panic!("{kernel}: {e:#}"))
+}
+
+/// Run over the shared deterministic inputs; outputs are drained even
+/// from an errored run (the `--drain` contract: both engines restore
+/// the PE table before returning an error).
+fn run_with(
+    ck: &CompiledKernel,
+    threads: usize,
+) -> (Result<RunReport, SimError>, Vec<(String, Vec<u32>)>) {
+    let mut sim = ck.simulator().unwrap();
+    sim.set_threads(threads);
+    stage_random_inputs(&mut sim, INPUT_SEED);
+    let res = sim.run();
+    let outs = output_words(&sim);
+    (res, outs)
+}
+
+/// Re-run a compiled kernel under a different fault plan without
+/// recompiling — the campaign harness's own pattern (`with_plan` reuses
+/// the routing plan; faults never change routing).
+fn run_faulted(
+    ck: &CompiledKernel,
+    faults: FaultPlan,
+    threads: usize,
+) -> (Result<RunReport, SimError>, Vec<(String, Vec<u32>)>) {
+    let mut cfg = ck.cfg.clone();
+    cfg.faults = faults;
+    let mut sim = Simulator::with_plan(cfg, ck.machine.clone(), Arc::clone(&ck.plan)).unwrap();
+    sim.set_threads(threads);
+    stage_random_inputs(&mut sim, INPUT_SEED);
+    let res = sim.run();
+    let outs = output_words(&sim);
+    (res, outs)
+}
+
+/// Every distinct mesh-link site the plan actually routes over,
+/// decoded from the flows' dense link slots.
+fn link_sites(ck: &CompiledKernel) -> Vec<(i64, i64, Direction)> {
+    let plan = &ck.plan;
+    let mut slots: Vec<u32> = plan
+        .flows
+        .iter()
+        .filter(|f| f.error.is_none())
+        .flat_map(|f| f.links.iter().map(|&(li, _)| li))
+        .collect();
+    slots.sort_unstable();
+    slots.dedup();
+    slots
+        .iter()
+        .map(|&li| {
+            let cell = (li / 5) as i64;
+            (cell % plan.width, cell / plan.width, Direction::ALL[(li % 5) as usize])
+        })
+        .collect()
+}
+
+/// `(x, y, color)` of every planned flow that reaches a destination.
+fn flow_sites(ck: &CompiledKernel) -> Vec<(i64, i64, u8)> {
+    let plan = &ck.plan;
+    let mut sites: Vec<(i64, i64, u8)> = plan
+        .flows
+        .iter()
+        .filter(|f| f.error.is_none() && !f.dests.is_empty())
+        .map(|f| {
+            let p = &plan.pes[f.src_pe as usize];
+            (p.x, p.y, f.color)
+        })
+        .collect();
+    sites.sort_unstable();
+    sites.dedup();
+    sites
+}
+
+/// Guarantee 1, property-tested: a random single link kill at a random
+/// time on a random kernel always terminates with a label from the
+/// closed taxonomy. (The simulator's event budget bounds runaways, so
+/// a hang would surface as a test timeout — the property passing *is*
+/// the no-silent-hang proof.)
+#[test]
+fn link_drop_always_terminates_classified() {
+    struct Subject {
+        name: &'static str,
+        ck: CompiledKernel,
+        sites: Vec<(i64, i64, Direction)>,
+        reference: Vec<(String, Vec<u32>)>,
+        clean_cycles: u64,
+    }
+    let subjects: Vec<Subject> =
+        ["chain_reduce", "broadcast", "tree_reduce", "two_phase_reduce", "gemv", "gemv_tree"]
+            .iter()
+            .map(|&name| {
+                let ck = compile_faulted(name, 3, 4, FaultPlan::default());
+                let sites = link_sites(&ck);
+                assert!(!sites.is_empty(), "{name}: no mesh links to fault");
+                let (res, reference) = run_with(&ck, 1);
+                let clean_cycles = res.expect("clean run completes").cycles;
+                Subject { name, ck, sites, reference, clean_cycles }
+            })
+            .collect();
+
+    run_prop(
+        "link-drop-classified",
+        0xD00D,
+        18,
+        |r| {
+            let ki = (r.next_u64() % subjects.len() as u64) as usize;
+            let si = (r.next_u64() % subjects[ki].sites.len() as u64) as usize;
+            // Bias toward early kills (the interesting regime) but
+            // cover post-completion arming too.
+            let t = r.next_u64() % (2 * subjects[ki].clean_cycles);
+            (ki, si, t)
+        },
+        |&(ki, si, t)| {
+            let s = &subjects[ki];
+            let (x, y, dir) = s.sites[si];
+            let spec = FaultSpec::LinkKill { x, y, dir, at: t };
+            let (res, outs) = run_faulted(&s.ck, FaultPlan::single(spec), 1);
+            let outcome = classify(&res, &outs, &s.reference);
+            let label = outcome.label();
+            if !LABELS.contains(&label) {
+                return Err(format!("{}: {spec} produced unknown label {label}", s.name));
+            }
+            // detail() must render for every variant (campaign rows
+            // embed it in JSONL).
+            let _ = outcome.detail();
+            Ok(())
+        },
+    );
+
+    // A link killed before any word moves always drops at least one
+    // destination: the run must never classify as correct.
+    for s in &subjects {
+        let (x, y, dir) = s.sites[0];
+        let spec = FaultSpec::LinkKill { x, y, dir, at: 0 };
+        let (res, outs) = run_faulted(&s.ck, FaultPlan::single(spec), 1);
+        let outcome = classify(&res, &outs, &s.reference);
+        assert_ne!(
+            outcome.label(),
+            "correct",
+            "{}: killing {dir:?}-link at ({x},{y}) cycle 0 cannot be correct",
+            s.name
+        );
+    }
+}
+
+/// Guarantee 2: the same faulted run is bit-identical at 1 and 4
+/// threads — completed reports and outputs, or the error text when the
+/// fault wedges the fabric. This is what makes the campaign matrix
+/// independent of `SPADA_THREADS`.
+#[test]
+fn faulted_runs_bit_identical_across_thread_counts() {
+    for name in ["tree_reduce", "gemv"] {
+        let ck = compile_faulted(name, 4, 4, FaultPlan::default());
+        let (clean, _) = run_with(&ck, 1);
+        let mid = clean.expect("clean run completes").cycles / 2;
+        let links = link_sites(&ck);
+        let flows = flow_sites(&ck);
+        let (lx, ly, dir) = links[links.len() / 2];
+        let (fx, fy, color) = flows[0];
+        let last = *ck.plan.pes.last().unwrap();
+
+        // A mixed plan: one kill mid-run, one delayed flow, one corrupt
+        // word, one late halt — every effect class in a single run.
+        let mut fp = FaultPlan::single(FaultSpec::LinkKill { x: lx, y: ly, dir, at: mid });
+        fp.specs.push(FaultSpec::Delay { x: fx, y: fy, color, at: 0, extra: 7 });
+        fp.specs.push(FaultSpec::Corrupt { x: fx, y: fy, color, at: 0 });
+        fp.specs.push(FaultSpec::PeHalt { x: last.x, y: last.y, at: mid });
+
+        let (res1, outs1) = run_faulted(&ck, fp.clone(), 1);
+        let (res4, outs4) = run_faulted(&ck, fp, 4);
+        assert_eq!(
+            format!("{res1:?}"),
+            format!("{res4:?}"),
+            "{name}: faulted result diverged across thread counts"
+        );
+        assert_eq!(outs1, outs4, "{name}: faulted outputs diverged across thread counts");
+        if let Ok(rep) = &res1 {
+            assert!(rep.metrics.faults_injected > 0, "{name}: plan never fired");
+        }
+    }
+}
+
+/// Guarantee 3: faults armed far beyond the run's horizon leave the
+/// run bit-identical to the clean golden at both thread counts, with
+/// zero recorded injections.
+#[test]
+fn inert_armed_faults_reproduce_clean_run_exactly() {
+    let clean_ck = compile_faulted("chain_reduce", 4, 6, FaultPlan::default());
+    let (clean_res, clean_outs) = run_with(&clean_ck, 1);
+    let clean_rep = clean_res.expect("clean run completes");
+
+    let (x, y, dir) = link_sites(&clean_ck)[0];
+    let far = 1u64 << 40;
+    let mut fp = FaultPlan::single(FaultSpec::PeHalt { x: 0, y: 0, at: far });
+    fp.specs.push(FaultSpec::LinkSlow { x, y, dir, at: far, extra: 99 });
+    fp.specs.push(FaultSpec::LinkKill { x, y, dir, at: far });
+
+    for threads in [1, 4] {
+        let (res, outs) = run_faulted(&clean_ck, fp.clone(), threads);
+        let rep = res.expect("armed-but-inert run completes");
+        assert_eq!(rep, clean_rep, "threads={threads}: inert faults perturbed the report");
+        assert_eq!(outs, clean_outs, "threads={threads}: inert faults perturbed outputs");
+        assert_eq!(rep.metrics.faults_injected, 0, "threads={threads}: nothing may fire");
+    }
+}
+
+/// Payload corruption is invisible to timing: the run completes, the
+/// diff against the clean reference classifies it as silent data
+/// corruption, and the trace gains a record on the fault lane.
+#[test]
+fn corrupt_classifies_as_sdc_and_lands_on_the_fault_lane() {
+    let ck = compile_faulted("chain_reduce", 4, 6, FaultPlan::default());
+    let (_, reference) = run_with(&ck, 1);
+    let (fx, fy, color) = flow_sites(&ck)[0];
+
+    let mut cfg = ck.cfg.clone();
+    cfg.faults = FaultPlan::single(FaultSpec::Corrupt { x: fx, y: fy, color, at: 0 });
+    let mut sim = Simulator::with_plan(cfg, ck.machine.clone(), Arc::clone(&ck.plan)).unwrap();
+    sim.set_tracing(true);
+    stage_random_inputs(&mut sim, INPUT_SEED);
+    let res = sim.run();
+    let outs = output_words(&sim);
+
+    let rep = res.as_ref().expect("corruption does not change timing");
+    assert_eq!(rep.metrics.faults_injected, 1, "corrupt fires exactly once");
+    let outcome = classify(&res, &outs, &reference);
+    assert!(matches!(outcome, Outcome::Sdc { .. }), "want sdc, got {}", outcome.label());
+    assert!(outcome.detail().contains("!="), "SDC detail names the first differing word");
+
+    let trace = sim.take_trace().expect("tracing was enabled");
+    let json = chrome_trace_json(&trace, &ck.machine, &ck.plan, false);
+    assert!(json.contains("injected faults"), "fault lane missing from chrome trace");
+    assert!(json.contains("corrupt"), "corrupt record missing from chrome trace");
+}
+
+/// Halting the chain's head PE starves every downstream consumer: the
+/// run terminates (quiescence detection, not a hang) and classifies as
+/// a deadlock-family outcome, with the halt recorded as an injection.
+#[test]
+fn halt_at_cycle_zero_is_classified_not_silent() {
+    let ck = compile_faulted("chain_reduce", 4, 6, FaultPlan::default());
+    let (_, reference) = run_with(&ck, 1);
+    let (res, outs) = run_faulted(&ck, FaultPlan::single(FaultSpec::PeHalt { x: 0, y: 0, at: 0 }), 1);
+    let outcome = classify(&res, &outs, &reference);
+    assert!(
+        matches!(
+            outcome,
+            Outcome::BufferDeadlock { .. }
+                | Outcome::CircularWait { .. }
+                | Outcome::Runaway { .. }
+                | Outcome::Sdc { .. }
+        ),
+        "halted head must starve the chain, got {}: {}",
+        outcome.label(),
+        outcome.detail()
+    );
+    assert_ne!(outcome.label(), "correct");
+    if let Err(SimError::Deadlock(msg)) = &res {
+        assert!(msg.contains("fault effect"), "deadlock diagnostic must flag the injection: {msg}");
+    }
+}
+
+/// Satellite 1: the wall-clock watchdog aborts with `SimError::Timeout`
+/// naming the last-progress cycle and the backlog (or its absence), at
+/// both thread counts.
+#[test]
+fn watchdog_aborts_with_timeout_diagnostic() {
+    for threads in [1, 4] {
+        let (binds, w, h) = scaled_binds("chain_reduce", 4, 6).unwrap();
+        let mut cfg = MachineConfig::with_grid(w, h);
+        cfg.faults = FaultPlan::default();
+        cfg.endpoint_capacity_words = None;
+        cfg.timeout_ms = Some(0); // expires before the first event batch
+        let ck = kernels::compile("chain_reduce", &binds, &cfg, &Options::default()).unwrap();
+        let mut sim = ck.simulator().unwrap();
+        sim.set_threads(threads);
+        stage_random_inputs(&mut sim, INPUT_SEED);
+        let err = sim.run().expect_err("0 ms watchdog must fire");
+        assert_eq!(err.kind(), "timeout");
+        let msg = err.to_string();
+        assert!(msg.contains("wall-clock watchdog (0 ms) fired"), "{msg}");
+        assert!(msg.contains("last progress at cycle"), "{msg}");
+        assert!(
+            msg.contains("busiest endpoints") || msg.contains("no queued endpoint words"),
+            "timeout must report the backlog: {msg}"
+        );
+    }
+}
+
+/// Satellite 2: the one-line JSON error object every `spada run --json`
+/// failure path emits — kind + message always, cycle + PE when the
+/// engine recorded an error site.
+#[test]
+fn sim_errors_render_as_json_objects() {
+    let e = SimError::Timeout("wall-clock watchdog (5 ms) fired".into());
+    let j = e.to_json(Some((12, 1, 2)));
+    assert!(j.contains("\"error\":{"), "{j}");
+    assert!(j.contains("\"kind\":\"timeout\""), "{j}");
+    assert!(j.contains("\"cycle\":12"), "{j}");
+    assert!(j.contains("\"pe\":[1,2]"), "{j}");
+    assert!(j.ends_with('\n'), "one line per error object: {j:?}");
+
+    // No site → no cycle/pe keys; quotes and backslashes escape.
+    let j = SimError::Deadlock("endpoint \"full\" at c:\\x".into()).to_json(None);
+    assert!(j.contains("\"kind\":\"deadlock\""), "{j}");
+    assert!(!j.contains("cycle"), "{j}");
+    assert!(!j.contains("\"pe\""), "{j}");
+    assert!(j.contains("\\\"full\\\""), "{j}");
+    assert!(j.contains("c:\\\\x"), "{j}");
+
+    // A real engine failure carries its site through `error_site`.
+    let ck = compile_faulted("chain_reduce", 4, 6, FaultPlan::default());
+    let (res, _) = run_faulted(
+        &ck,
+        FaultPlan::single(FaultSpec::PeHalt { x: 0, y: 0, at: 0 }),
+        1,
+    );
+    let err = res.expect_err("halted head wedges the chain");
+    let j = err.to_json(Some((3, 0, 0)));
+    assert!(j.contains(&format!("\"kind\":\"{}\"", err.kind())), "{j}");
+}
