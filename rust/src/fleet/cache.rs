@@ -1,0 +1,210 @@
+//! The fleet plan cache: one compilation per distinct kernel shape.
+//!
+//! A batch of N jobs typically contains far fewer *shapes* — distinct
+//! (kernel, binds, machine-config fingerprint) triples — than jobs.
+//! Compilation (parse → instantiate → lower → route trace → static
+//! check) dominates small-grid job latency, so the cache compiles each
+//! shape exactly once and hands every job of that shape the same
+//! [`CompiledKernel`] behind an `Arc`. The shared [`RoutingPlan`]
+//! inside is immutable; per-job state lives entirely in the
+//! [`Simulator`](crate::machine::Simulator) each job builds from it
+//! via [`CompiledKernel::simulator_with`].
+//!
+//! Exactly-once is enforced under concurrency with a per-entry mutex:
+//! the first thread to reach a shape compiles while holding the
+//! entry's slot lock; latecomers block on that lock and then clone the
+//! finished result (success *or* failure — a kernel that fails to
+//! compile fails every job of its shape without recompiling per job).
+
+use crate::kernels::{self, CompiledKernel};
+use crate::machine::MachineConfig;
+use crate::passes::Options;
+use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Compile-once cache over kernel shapes. Cheap to share: all methods
+/// take `&self`, so one instance serves the whole worker pool.
+#[derive(Default)]
+pub struct PlanCache {
+    entries: Mutex<HashMap<String, Arc<Entry>>>,
+    lookups: AtomicU64,
+    compiles: AtomicU64,
+}
+
+/// One shape's slot. `None` until the winning thread fills it; the
+/// compile runs under the slot lock so a shape is never compiled twice.
+#[derive(Default)]
+struct Entry {
+    slot: Mutex<Option<Result<Arc<CompiledKernel>, String>>>,
+}
+
+impl PlanCache {
+    pub fn new() -> PlanCache {
+        PlanCache::default()
+    }
+
+    /// The cache key of a shape: kernel name, meta-parameter bindings,
+    /// and every compile-relevant machine parameter
+    /// ([`MachineConfig::fingerprint`]) plus the pass configuration.
+    /// Run-time options (threads, buffer capacity, faults, watchdog —
+    /// see [`SimOptions`](crate::machine::SimOptions)) are deliberately
+    /// absent: jobs differing only in run options share a compilation.
+    pub fn key(kernel: &str, binds: &[(&str, i64)], cfg: &MachineConfig, opts: &Options) -> String {
+        use std::fmt::Write as _;
+        let mut key = String::with_capacity(96);
+        key.push_str(kernel);
+        key.push('|');
+        for (name, v) in binds {
+            let _ = write!(key, "{name}={v},");
+        }
+        let _ = write!(
+            key,
+            "|{}|p{}{}{}{}",
+            cfg.fingerprint(),
+            opts.fusion as u8,
+            opts.recycling as u8,
+            opts.copy_elim as u8,
+            opts.check as u8
+        );
+        key
+    }
+
+    /// Fetch the compilation for a shape, compiling it on first touch.
+    /// Concurrent callers of the same shape block until the winner
+    /// finishes, then share its result. Compile errors (and compile
+    /// panics, defused so they can never poison the slot) are cached
+    /// like successes.
+    pub fn get(
+        &self,
+        kernel: &str,
+        binds: &[(&str, i64)],
+        cfg: &MachineConfig,
+        opts: &Options,
+    ) -> Result<Arc<CompiledKernel>, String> {
+        self.lookups.fetch_add(1, Ordering::Relaxed);
+        let key = Self::key(kernel, binds, cfg, opts);
+        let entry = {
+            let mut map = lock(&self.entries);
+            Arc::clone(map.entry(key).or_default())
+        };
+        let mut slot = lock(&entry.slot);
+        if slot.is_none() {
+            self.compiles.fetch_add(1, Ordering::Relaxed);
+            let compiled = catch_unwind(AssertUnwindSafe(|| {
+                kernels::compile(kernel, binds, cfg, opts)
+            }));
+            *slot = Some(match compiled {
+                Ok(Ok(ck)) => Ok(Arc::new(ck)),
+                Ok(Err(e)) => Err(format!("{e:#}")),
+                Err(payload) => Err(format!("compile panicked: {}", panic_message(&payload))),
+            });
+        }
+        slot.clone().expect("slot filled above")
+    }
+
+    /// Total `get` calls since construction.
+    pub fn lookups(&self) -> u64 {
+        self.lookups.load(Ordering::Relaxed)
+    }
+
+    /// Compilations actually run — `lookups() - compiles()` is the hit
+    /// count. With exactly-once enforcement this equals the number of
+    /// distinct shapes ever requested.
+    pub fn compiles(&self) -> u64 {
+        self.compiles.load(Ordering::Relaxed)
+    }
+
+    /// Number of distinct shapes currently cached.
+    pub fn len(&self) -> usize {
+        lock(&self.entries).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Lock a mutex, recovering from poisoning: cache state is only ever
+/// written under `catch_unwind`-defused compiles, so a poisoned lock
+/// still guards coherent data.
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Best-effort text of a panic payload (the standard `&str` / `String`
+/// forms; anything else gets a placeholder).
+pub(crate) fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_compile_per_shape() {
+        let cache = PlanCache::new();
+        let cfg = MachineConfig::with_grid(4, 1);
+        let binds: &[(&str, i64)] = &[("K", 8), ("N", 4)];
+        let opts = Options::default();
+        let a = cache.get("broadcast", binds, &cfg, &opts).unwrap();
+        let b = cache.get("broadcast", binds, &cfg, &opts).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "second lookup must share the first compilation");
+        assert_eq!(cache.compiles(), 1);
+        assert_eq!(cache.lookups(), 2);
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn distinct_shapes_compile_separately() {
+        let cache = PlanCache::new();
+        let opts = Options::default();
+        let cfg4 = MachineConfig::with_grid(4, 1);
+        let cfg8 = MachineConfig::with_grid(8, 1);
+        cache.get("broadcast", &[("K", 8), ("N", 4)], &cfg4, &opts).unwrap();
+        cache.get("broadcast", &[("K", 8), ("N", 8)], &cfg8, &opts).unwrap();
+        cache.get("broadcast", &[("K", 16), ("N", 4)], &cfg4, &opts).unwrap();
+        assert_eq!(cache.compiles(), 3);
+        assert_eq!(cache.len(), 3);
+    }
+
+    #[test]
+    fn compile_errors_are_cached() {
+        let cache = PlanCache::new();
+        let cfg = MachineConfig::with_grid(4, 1);
+        let opts = Options::default();
+        let e1 = cache.get("no_such_kernel", &[], &cfg, &opts).unwrap_err();
+        let e2 = cache.get("no_such_kernel", &[], &cfg, &opts).unwrap_err();
+        assert_eq!(e1, e2);
+        assert_eq!(cache.compiles(), 1, "a failing shape still compiles only once");
+    }
+
+    #[test]
+    fn run_options_do_not_split_the_key() {
+        // Two configs differing only in non-compile fields (watchdog,
+        // faults) share one key; a compile-relevant field splits it.
+        let opts = Options::default();
+        let a = MachineConfig::with_grid(4, 4);
+        let mut b = a.clone();
+        b.timeout_ms = Some(1);
+        b.faults = crate::machine::FaultPlan::parse("seed=9").unwrap();
+        assert_eq!(
+            PlanCache::key("gemv", &[("M", 8)], &a, &opts),
+            PlanCache::key("gemv", &[("M", 8)], &b, &opts)
+        );
+        let mut c = a.clone();
+        c.endpoint_capacity_words = Some(8);
+        assert_ne!(
+            PlanCache::key("gemv", &[("M", 8)], &a, &opts),
+            PlanCache::key("gemv", &[("M", 8)], &c, &opts)
+        );
+    }
+}

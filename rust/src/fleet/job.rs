@@ -1,0 +1,540 @@
+//! Batch job specs and result rows — the JSONL wire format of
+//! `spada batch`.
+//!
+//! One line in = one [`JobSpec`]; one line out = one [`JobResult`].
+//! The repo carries no JSON dependency, so specs are read with a small
+//! flat-object scanner (string/number/bool/null values, unknown keys
+//! tolerated) and rows are written with the same hand-rolled style the
+//! fault campaign and bench harness use.
+//!
+//! Result rows are **deterministic**: they carry simulated observables
+//! only (cycles, events, traffic, stalls) and never wall-clock fields,
+//! so the same job list produces byte-identical rows at any pool size.
+
+use crate::machine::{Metrics, RunReport, SimError};
+
+/// One simulation job, parsed from a JSONL spec line.
+///
+/// `kernel` is required; everything else defaults. `g`/`k` follow the
+/// harness scaling convention ([`crate::harness::common::scaled_binds`]):
+/// `g` is the grid scale factor, `k` the per-PE vector length. The
+/// remaining fields override run options for this job only — they
+/// never touch the process environment, so jobs with different
+/// buffer capacities, fault plans or watchdogs coexist in one fleet.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobSpec {
+    /// Row correlation ID (defaults to `job-<index>` when absent).
+    pub id: String,
+    pub kernel: String,
+    /// Grid scale factor (`g × g` grids for 2-D kernels, `g × 1` for
+    /// 1-D ones).
+    pub g: i64,
+    /// Per-PE vector length.
+    pub k: i64,
+    /// Input-staging seed (one `SplitMix64` stream over the kernel's
+    /// input bindings in declaration order).
+    pub seed: u64,
+    /// Finite endpoint-buffer capacity in words (default unbounded).
+    pub buf_cap: Option<u64>,
+    /// Credit return latency in cycles.
+    pub credit_latency: Option<u64>,
+    /// Fault plan in the `SPADA_FAULTS` grammar.
+    pub faults: Option<String>,
+    /// Wall-clock watchdog for this job.
+    pub timeout_ms: Option<u64>,
+    /// Inner (epoch-parallel) thread override; default = fleet budget
+    /// policy. Never changes results — only wall-clock.
+    pub threads: Option<usize>,
+    /// Force the per-element DSD interpreter (bit-identical).
+    pub no_vec: bool,
+}
+
+impl Default for JobSpec {
+    fn default() -> JobSpec {
+        JobSpec {
+            id: String::new(),
+            kernel: String::new(),
+            g: 4,
+            k: 8,
+            seed: 0xF1EE7,
+            buf_cap: None,
+            credit_latency: None,
+            faults: None,
+            timeout_ms: None,
+            threads: None,
+            no_vec: false,
+        }
+    }
+}
+
+impl JobSpec {
+    /// Parse one JSONL spec line. Unknown keys are ignored (forward
+    /// compatibility); a known key with the wrong type is an error.
+    pub fn parse(line: &str) -> Result<JobSpec, String> {
+        let mut spec = JobSpec::default();
+        for (key, val) in parse_flat_object(line)? {
+            match key.as_str() {
+                "id" => spec.id = val.str(&key)?,
+                "kernel" => spec.kernel = val.str(&key)?,
+                "g" | "grid" => spec.g = val.int(&key)?,
+                "k" => spec.k = val.int(&key)?,
+                "seed" => spec.seed = val.int(&key)? as u64,
+                "buf_cap" => spec.buf_cap = val.opt_int(&key)?.map(|v| v as u64),
+                "credit_latency" => {
+                    spec.credit_latency = val.opt_int(&key)?.map(|v| v as u64)
+                }
+                "faults" => spec.faults = val.opt_str(&key)?,
+                "timeout_ms" => spec.timeout_ms = val.opt_int(&key)?.map(|v| v as u64),
+                "threads" => spec.threads = val.opt_int(&key)?.map(|v| v.max(1) as usize),
+                "no_vec" => spec.no_vec = val.bool(&key)?,
+                _ => {}
+            }
+        }
+        if spec.kernel.is_empty() {
+            return Err("missing required key \"kernel\"".to_string());
+        }
+        if spec.g < 1 {
+            return Err(format!("g must be >= 1, got {}", spec.g));
+        }
+        if spec.k < 1 {
+            return Err(format!("k must be >= 1, got {}", spec.k));
+        }
+        Ok(spec)
+    }
+}
+
+/// One result row: either a completed simulation's observables or an
+/// isolated failure. Serialized with [`JobResult::to_jsonl`].
+#[derive(Clone, Debug)]
+pub struct JobResult {
+    pub id: String,
+    pub kernel: String,
+    /// `WxH` geometry, empty when the spec never resolved to a grid.
+    pub grid: String,
+    /// Plan-cache disposition — `Some(true)` = this job was the first
+    /// of its shape in input order (the compile), `Some(false)` = it
+    /// shared an earlier job's compilation. `None` when the job failed
+    /// before reaching the cache. Deterministic: derived from input
+    /// order, not from which worker won the compile race.
+    pub cache_miss: Option<bool>,
+    /// Simulated observables (completed jobs only).
+    pub report: Option<RowMetrics>,
+    /// `(kind, message)` for failed jobs — `kind` is
+    /// [`SimError::kind`] plus the fleet's own `spec` / `compile` /
+    /// `panic` discriminants.
+    pub error: Option<(String, String)>,
+}
+
+/// The deterministic slice of a [`RunReport`] a row carries.
+#[derive(Clone, Debug)]
+pub struct RowMetrics {
+    pub cycles: u64,
+    pub events: u64,
+    pub flows: u64,
+    pub wavelets: u64,
+    pub flops: u64,
+    pub peak_queue_depth: u64,
+    pub stall_cycles: u64,
+    pub faults_injected: u64,
+}
+
+impl RowMetrics {
+    pub fn of(report: &RunReport) -> RowMetrics {
+        let m: &Metrics = &report.metrics;
+        RowMetrics {
+            cycles: report.cycles,
+            events: m.events,
+            flows: m.flows,
+            wavelets: m.wavelets,
+            flops: m.flops,
+            peak_queue_depth: m.peak_queue_depth,
+            stall_cycles: m.stall_cycles,
+            faults_injected: m.faults_injected,
+        }
+    }
+}
+
+impl JobResult {
+    /// A failure row. Timeout messages are normalized here: the
+    /// engine's diagnostic cites wall-clock state ("last progress at
+    /// cycle N; busiest endpoints …") that legitimately varies run to
+    /// run, and rows must be byte-identical at any pool size.
+    pub fn failed(id: &str, kernel: &str, grid: &str, kind: &str, message: String) -> JobResult {
+        let message = if kind == "timeout" {
+            "wall-clock watchdog fired".to_string()
+        } else {
+            message
+        };
+        JobResult {
+            id: id.to_string(),
+            kernel: kernel.to_string(),
+            grid: grid.to_string(),
+            cache_miss: None,
+            report: None,
+            error: Some((kind.to_string(), message)),
+        }
+    }
+
+    /// A failure row from a [`SimError`].
+    pub fn from_sim_error(id: &str, kernel: &str, grid: &str, e: &SimError) -> JobResult {
+        JobResult::failed(id, kernel, grid, e.kind(), e.to_string())
+    }
+
+    pub fn ok(&self) -> bool {
+        self.error.is_none()
+    }
+
+    /// The row as one JSON line (trailing newline included).
+    pub fn to_jsonl(&self) -> String {
+        let mut s = String::with_capacity(160);
+        s.push_str(&format!(
+            "{{\"id\":\"{}\",\"kernel\":\"{}\",\"grid\":\"{}\",\"ok\":{}",
+            esc(&self.id),
+            esc(&self.kernel),
+            esc(&self.grid),
+            self.ok()
+        ));
+        if let Some(miss) = self.cache_miss {
+            s.push_str(&format!(",\"cache\":\"{}\"", if miss { "miss" } else { "hit" }));
+        }
+        if let Some(m) = &self.report {
+            s.push_str(&format!(
+                ",\"cycles\":{},\"events\":{},\"flows\":{},\"wavelets\":{},\"flops\":{},\
+                 \"peak_queue_depth\":{},\"stall_cycles\":{},\"faults_injected\":{}",
+                m.cycles,
+                m.events,
+                m.flows,
+                m.wavelets,
+                m.flops,
+                m.peak_queue_depth,
+                m.stall_cycles,
+                m.faults_injected
+            ));
+        }
+        if let Some((kind, msg)) = &self.error {
+            s.push_str(&format!(
+                ",\"error\":{{\"kind\":\"{}\",\"message\":\"{}\"}}",
+                esc(kind),
+                esc(msg)
+            ));
+        }
+        s.push_str("}\n");
+        s
+    }
+}
+
+/// Minimal JSON string escaping (mirrors the fault campaign's writer).
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// A scanned flat-JSON value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum JsonVal {
+    Str(String),
+    Int(i64),
+    Num(f64),
+    Bool(bool),
+    Null,
+}
+
+impl JsonVal {
+    fn str(self, key: &str) -> Result<String, String> {
+        match self {
+            JsonVal::Str(s) => Ok(s),
+            other => Err(format!("\"{key}\" wants a string, got {other:?}")),
+        }
+    }
+    fn opt_str(self, key: &str) -> Result<Option<String>, String> {
+        match self {
+            JsonVal::Null => Ok(None),
+            other => other.str(key).map(Some),
+        }
+    }
+    fn int(self, key: &str) -> Result<i64, String> {
+        match self {
+            JsonVal::Int(v) => Ok(v),
+            other => Err(format!("\"{key}\" wants an integer, got {other:?}")),
+        }
+    }
+    fn opt_int(self, key: &str) -> Result<Option<i64>, String> {
+        match self {
+            JsonVal::Null => Ok(None),
+            other => other.int(key).map(Some),
+        }
+    }
+    fn bool(self, key: &str) -> Result<bool, String> {
+        match self {
+            JsonVal::Bool(b) => Ok(b),
+            other => Err(format!("\"{key}\" wants a boolean, got {other:?}")),
+        }
+    }
+}
+
+/// Scan one flat JSON object — `{"key": value, ...}` with string,
+/// number, boolean and null values. No nesting (a spec line is flat by
+/// construction); arrays or objects as values are rejected loudly.
+pub fn parse_flat_object(line: &str) -> Result<Vec<(String, JsonVal)>, String> {
+    let mut p = Scanner { bytes: line.as_bytes(), pos: 0 };
+    p.ws();
+    p.expect(b'{')?;
+    let mut pairs = Vec::new();
+    p.ws();
+    if p.peek() == Some(b'}') {
+        p.pos += 1;
+    } else {
+        loop {
+            p.ws();
+            let key = p.string()?;
+            p.ws();
+            p.expect(b':')?;
+            p.ws();
+            let val = p.value()?;
+            pairs.push((key, val));
+            p.ws();
+            match p.next() {
+                Some(b',') => continue,
+                Some(b'}') => break,
+                other => {
+                    return Err(format!(
+                        "expected ',' or '}}' at byte {}, got {:?}",
+                        p.pos,
+                        other.map(|b| b as char)
+                    ))
+                }
+            }
+        }
+    }
+    p.ws();
+    if p.pos != p.bytes.len() {
+        return Err(format!("trailing garbage after object at byte {}", p.pos));
+    }
+    Ok(pairs)
+}
+
+struct Scanner<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl Scanner<'_> {
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+    fn next(&mut self) -> Option<u8> {
+        let b = self.peek();
+        if b.is_some() {
+            self.pos += 1;
+        }
+        b
+    }
+    fn ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+    fn expect(&mut self, want: u8) -> Result<(), String> {
+        match self.next() {
+            Some(b) if b == want => Ok(()),
+            other => Err(format!(
+                "expected '{}' at byte {}, got {:?}",
+                want as char,
+                self.pos,
+                other.map(|b| b as char)
+            )),
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.next() {
+                None => return Err("unterminated string".to_string()),
+                Some(b'"') => return Ok(out),
+                Some(b'\\') => match self.next() {
+                    Some(b'"') => out.push('"'),
+                    Some(b'\\') => out.push('\\'),
+                    Some(b'/') => out.push('/'),
+                    Some(b'n') => out.push('\n'),
+                    Some(b'r') => out.push('\r'),
+                    Some(b't') => out.push('\t'),
+                    Some(b'b') => out.push('\u{8}'),
+                    Some(b'f') => out.push('\u{c}'),
+                    Some(b'u') => {
+                        let mut code = 0u32;
+                        for _ in 0..4 {
+                            let d = self
+                                .next()
+                                .and_then(|b| (b as char).to_digit(16))
+                                .ok_or("bad \\u escape")?;
+                            code = code * 16 + d;
+                        }
+                        out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                    }
+                    other => return Err(format!("bad escape {other:?}")),
+                },
+                // Multi-byte UTF-8: the line came in as &str, so the
+                // remaining bytes of the scalar follow contiguously.
+                Some(b) if b >= 0x80 => {
+                    let start = self.pos - 1;
+                    let mut end = self.pos;
+                    while end < self.bytes.len() && self.bytes[end] & 0xC0 == 0x80 {
+                        end += 1;
+                    }
+                    out.push_str(
+                        std::str::from_utf8(&self.bytes[start..end]).map_err(|e| e.to_string())?,
+                    );
+                    self.pos = end;
+                }
+                Some(b) => out.push(b as char),
+            }
+        }
+    }
+
+    fn value(&mut self) -> Result<JsonVal, String> {
+        match self.peek() {
+            Some(b'"') => self.string().map(JsonVal::Str),
+            Some(b't') => self.literal("true", JsonVal::Bool(true)),
+            Some(b'f') => self.literal("false", JsonVal::Bool(false)),
+            Some(b'n') => self.literal("null", JsonVal::Null),
+            Some(b'-' | b'0'..=b'9') => {
+                let start = self.pos;
+                while matches!(
+                    self.peek(),
+                    Some(b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9')
+                ) {
+                    self.pos += 1;
+                }
+                let tok = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+                if let Ok(v) = tok.parse::<i64>() {
+                    Ok(JsonVal::Int(v))
+                } else {
+                    tok.parse::<f64>()
+                        .map(JsonVal::Num)
+                        .map_err(|_| format!("bad number {tok:?}"))
+                }
+            }
+            Some(b'{' | b'[') => Err("nested values are not part of the spec schema".to_string()),
+            other => Err(format!("unexpected {:?} at byte {}", other.map(|b| b as char), self.pos)),
+        }
+    }
+
+    fn literal(&mut self, word: &str, val: JsonVal) -> Result<JsonVal, String> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(val)
+        } else {
+            Err(format!("expected {word} at byte {}", self.pos))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_minimal() {
+        let s = JobSpec::parse(r#"{"kernel": "gemv"}"#).unwrap();
+        assert_eq!(s.kernel, "gemv");
+        assert_eq!(s.g, 4);
+        assert_eq!(s.k, 8);
+        assert!(s.buf_cap.is_none() && s.faults.is_none());
+    }
+
+    #[test]
+    fn spec_full() {
+        let s = JobSpec::parse(
+            r#"{"id":"j7","kernel":"tree_reduce","g":8,"k":16,"seed":42,
+                "buf_cap":8,"credit_latency":2,"faults":"pe(1,1):halt@10",
+                "timeout_ms":500,"threads":2,"no_vec":true,"future_key":"ignored"}"#,
+        )
+        .unwrap();
+        assert_eq!(s.id, "j7");
+        assert_eq!(s.g, 8);
+        assert_eq!(s.seed, 42);
+        assert_eq!(s.buf_cap, Some(8));
+        assert_eq!(s.credit_latency, Some(2));
+        assert_eq!(s.faults.as_deref(), Some("pe(1,1):halt@10"));
+        assert_eq!(s.timeout_ms, Some(500));
+        assert_eq!(s.threads, Some(2));
+        assert!(s.no_vec);
+    }
+
+    #[test]
+    fn spec_rejects_missing_kernel_and_bad_types() {
+        assert!(JobSpec::parse(r#"{"g": 4}"#).unwrap_err().contains("kernel"));
+        assert!(JobSpec::parse(r#"{"kernel": 3}"#).is_err());
+        assert!(JobSpec::parse(r#"{"kernel":"gemv","g":"four"}"#).is_err());
+        assert!(JobSpec::parse(r#"{"kernel":"gemv","#).is_err());
+        assert!(JobSpec::parse(r#"{"kernel":"gemv"} trailing"#).is_err());
+        assert!(JobSpec::parse(r#"{"kernel":"gemv","g":0}"#).is_err());
+    }
+
+    #[test]
+    fn string_escapes_round_trip() {
+        let pairs =
+            parse_flat_object(r#"{"a": "x\"y\\z\n", "b": "A"}"#).unwrap();
+        assert_eq!(pairs[0].1, JsonVal::Str("x\"y\\z\n".to_string()));
+        assert_eq!(pairs[1].1, JsonVal::Str("A".to_string()));
+    }
+
+    #[test]
+    fn row_shapes() {
+        let ok = JobResult {
+            id: "a".into(),
+            kernel: "gemv".into(),
+            grid: "4x4".into(),
+            cache_miss: Some(true),
+            report: Some(RowMetrics {
+                cycles: 10,
+                events: 20,
+                flows: 3,
+                wavelets: 40,
+                flops: 50,
+                peak_queue_depth: 6,
+                stall_cycles: 0,
+                faults_injected: 0,
+            }),
+            error: None,
+        };
+        let line = ok.to_jsonl();
+        assert!(line.contains("\"ok\":true") && line.contains("\"cache\":\"miss\""));
+        assert!(line.ends_with("}\n"));
+        // Success rows are flat: they must round-trip through the
+        // spec scanner (schema sanity for downstream tooling).
+        let parsed = parse_flat_object(line.trim_end()).unwrap();
+        assert!(parsed.iter().any(|(k, v)| k == "cycles" && *v == JsonVal::Int(10)));
+
+        let err = JobResult::failed("b", "nope", "", "compile", "unknown kernel \"nope\"".into());
+        let line = err.to_jsonl();
+        assert!(line.contains("\"ok\":false"));
+        assert!(line.contains("\\\"nope\\\""));
+        assert!(!line.contains("\"cache\""));
+    }
+
+    #[test]
+    fn timeout_rows_are_normalized() {
+        let r = JobResult::failed(
+            "t",
+            "gemv",
+            "4x4",
+            "timeout",
+            "wall-clock watchdog (1 ms) fired; last progress at cycle 7312".into(),
+        );
+        assert_eq!(r.error.unwrap().1, "wall-clock watchdog fired");
+    }
+}

@@ -1,0 +1,307 @@
+//! Simulation-as-a-service: the batch fleet engine.
+//!
+//! `spada batch` turns the simulator into a service: a JSONL stream of
+//! job specs in, one JSONL result row out per job. The engine layers
+//! *outer* parallelism (whole simulations on a worker pool) over the
+//! simulator's *inner* epoch-parallelism, with three guarantees:
+//!
+//! - **Compile once per shape.** Jobs are keyed by (kernel, binds,
+//!   machine-config fingerprint) into a [`PlanCache`]; N jobs of one
+//!   shape share a single compilation and [`RoutingPlan`]
+//!   (see [`cache`]).
+//! - **Deterministic output at any pool size.** Result rows carry only
+//!   simulated observables (never wall-clock), are labeled hit/miss by
+//!   input order (never by compile race), and are emitted in input
+//!   order — the same job list is byte-identical at `--pool 1` and
+//!   `--pool 16`.
+//! - **Per-job isolation.** A job that fails to parse, compile, run —
+//!   or panics, or trips its watchdog — becomes an error row; its
+//!   siblings and the fleet are unaffected.
+//!
+//! Thread budget: `outer × inner ≤ budget` (default: the host's
+//! available parallelism). The pool width is the outer factor; each
+//! job's simulator gets `max(1, budget / pool)` inner threads unless
+//! its spec pins `threads` explicitly. Inner thread count never
+//! changes results (the epoch-parallel engine's bit-identity
+//! guarantee), so the budget policy is pure scheduling.
+//!
+//! [`RoutingPlan`]: crate::machine::RoutingPlan
+
+pub mod cache;
+pub mod job;
+pub mod pool;
+
+pub use cache::PlanCache;
+pub use job::{JobResult, JobSpec, RowMetrics};
+
+use crate::harness::common::{scaled_binds, stage_random_inputs};
+use crate::machine::{FaultPlan, MachineConfig, SimOptions};
+use crate::passes::Options;
+use std::collections::HashSet;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+/// Fleet-level scheduling knobs (per-job options live in [`JobSpec`]).
+#[derive(Clone, Debug)]
+pub struct FleetOptions {
+    /// Outer worker-pool width: simulations in flight at once.
+    pub pool: usize,
+    /// Total thread budget shared by outer × inner parallelism.
+    /// Defaults to the host's available parallelism.
+    pub budget: usize,
+}
+
+impl Default for FleetOptions {
+    fn default() -> FleetOptions {
+        FleetOptions {
+            pool: 1,
+            budget: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        }
+    }
+}
+
+impl FleetOptions {
+    /// Inner (epoch-parallel) threads per job under the
+    /// `outer × inner ≤ budget` policy.
+    pub fn inner_threads(&self) -> usize {
+        (self.budget / self.pool.max(1)).max(1)
+    }
+}
+
+/// What a batch did, for the operator summary (rows carry the per-job
+/// story; this is the fleet-level one).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct BatchSummary {
+    pub jobs: usize,
+    pub ok: usize,
+    pub errors: usize,
+    /// Plan-cache compiles this batch ran = distinct shapes among the
+    /// jobs that reached the cache.
+    pub compiles: u64,
+    /// Plan-cache lookups this batch performed.
+    pub lookups: u64,
+}
+
+/// Run every job against the pool, emitting rows **in input order**
+/// through `sink` as their prefix completes (a streaming consumer
+/// never waits for the whole batch). Returns the summary; the emitted
+/// rows are byte-identical for a given job list at any pool width.
+pub fn run_batch<F>(
+    jobs: &[JobSpec],
+    fleet: &FleetOptions,
+    cache: &PlanCache,
+    mut sink: F,
+) -> BatchSummary
+where
+    F: FnMut(&JobResult) + Send,
+{
+    let pass_opts = Options::default();
+    // Fill default IDs so every row is correlatable.
+    let jobs: Vec<JobSpec> = jobs
+        .iter()
+        .enumerate()
+        .map(|(i, j)| {
+            let mut j = j.clone();
+            if j.id.is_empty() {
+                j.id = format!("job-{i}");
+            }
+            j
+        })
+        .collect();
+    // Deterministic hit/miss labels: the first job of each shape *in
+    // input order* is the miss. (Which worker actually wins the
+    // compile race varies with pool width; the rows must not.)
+    let mut seen = HashSet::new();
+    let labels: Vec<Option<bool>> = jobs
+        .iter()
+        .map(|j| {
+            let (binds, w, h) = scaled_binds(&j.kernel, j.g, j.k).ok()?;
+            let cfg = MachineConfig::with_grid(w, h);
+            Some(seen.insert(PlanCache::key(&j.kernel, &binds, &cfg, &pass_opts)))
+        })
+        .collect();
+    let inner = fleet.inner_threads();
+    let (lookups0, compiles0) = (cache.lookups(), cache.compiles());
+
+    // Streaming input-order emitter: buffer out-of-order completions,
+    // flush the contiguous prefix.
+    let mut next_emit = 0usize;
+    let mut buffered: Vec<Option<JobResult>> = jobs.iter().map(|_| None).collect();
+    let results = pool::run_indexed(
+        jobs.len(),
+        fleet.pool,
+        |i| {
+            let spec = &jobs[i];
+            // Isolation: a panicking job (engine bug, corrupt state)
+            // becomes an error row; the fleet keeps draining.
+            let mut row = catch_unwind(AssertUnwindSafe(|| run_job(spec, inner, cache, &pass_opts)))
+                .unwrap_or_else(|payload| {
+                    JobResult::failed(
+                        &spec.id,
+                        &spec.kernel,
+                        "",
+                        "panic",
+                        cache::panic_message(&*payload),
+                    )
+                });
+            if row.cache_miss.is_none() {
+                row.cache_miss = labels[i];
+            }
+            row
+        },
+        |i, row| {
+            buffered[i] = Some(row.clone());
+            while next_emit < buffered.len() {
+                match buffered[next_emit].take() {
+                    Some(r) => {
+                        sink(&r);
+                        next_emit += 1;
+                    }
+                    None => break,
+                }
+            }
+        },
+    );
+    let ok = results.iter().filter(|r| r.ok()).count();
+    BatchSummary {
+        jobs: results.len(),
+        ok,
+        errors: results.len() - ok,
+        compiles: cache.compiles() - compiles0,
+        lookups: cache.lookups() - lookups0,
+    }
+}
+
+/// One job, start to finish: resolve shape → cached compile → explicit
+/// per-job [`SimOptions`] → stage → run. Every failure mode returns an
+/// error row naming the stage that failed.
+fn run_job(spec: &JobSpec, inner_threads: usize, cache: &PlanCache, pass_opts: &Options) -> JobResult {
+    let (binds, w, h) = match scaled_binds(&spec.kernel, spec.g, spec.k) {
+        Ok(v) => v,
+        Err(e) => return JobResult::failed(&spec.id, &spec.kernel, "", "spec", format!("{e:#}")),
+    };
+    let grid = format!("{w}x{h}");
+    let cfg = MachineConfig::with_grid(w, h);
+    let ck = match cache.get(&spec.kernel, &binds, &cfg, pass_opts) {
+        Ok(ck) => ck,
+        Err(msg) => return JobResult::failed(&spec.id, &spec.kernel, &grid, "compile", msg),
+    };
+    let mut opts = SimOptions::default().threads(spec.threads.unwrap_or(inner_threads));
+    opts.no_vectorize = spec.no_vec;
+    opts.buf_cap = spec.buf_cap;
+    opts.credit_latency = spec.credit_latency;
+    opts.timeout_ms = spec.timeout_ms;
+    if let Some(fspec) = &spec.faults {
+        match FaultPlan::parse(fspec) {
+            Ok(plan) => opts.faults = Some(plan),
+            Err(e) => return JobResult::failed(&spec.id, &spec.kernel, &grid, "faults", e),
+        }
+    }
+    let mut sim = match ck.simulator_with(&opts) {
+        Ok(s) => s,
+        Err(e) => return JobResult::from_sim_error(&spec.id, &spec.kernel, &grid, &e),
+    };
+    stage_random_inputs(&mut sim, spec.seed);
+    match sim.run() {
+        Ok(report) => JobResult {
+            id: spec.id.clone(),
+            kernel: spec.kernel.clone(),
+            grid,
+            cache_miss: None, // labeled by the batch driver
+            report: Some(RowMetrics::of(&report)),
+            error: None,
+        },
+        Err(e) => JobResult::from_sim_error(&spec.id, &spec.kernel, &grid, &e),
+    }
+}
+
+/// Parse a whole JSONL spec stream. Malformed lines become error
+/// *specs* — sentinel jobs whose run immediately yields an error row —
+/// so one bad line never aborts the batch and row K still corresponds
+/// to input line K. Blank lines and `#` comments are skipped.
+pub fn parse_jobs(text: &str) -> Vec<Result<JobSpec, (String, String)>> {
+    let mut out = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        out.push(match JobSpec::parse(line) {
+            Ok(mut spec) => {
+                if spec.id.is_empty() {
+                    spec.id = format!("job-{}", lineno + 1);
+                }
+                Ok(spec)
+            }
+            Err(e) => Err((format!("job-{}", lineno + 1), e)),
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn collect(jobs: &[JobSpec], fleet: &FleetOptions, cache: &PlanCache) -> Vec<String> {
+        let mut rows = Vec::new();
+        run_batch(jobs, fleet, cache, |r| rows.push(r.to_jsonl()));
+        rows
+    }
+
+    #[test]
+    fn rows_are_input_ordered_and_labeled() {
+        let jobs: Vec<JobSpec> = [("a", 4), ("b", 4), ("c", 8)]
+            .iter()
+            .map(|(id, g)| JobSpec {
+                id: id.to_string(),
+                kernel: "broadcast".into(),
+                g: *g,
+                ..JobSpec::default()
+            })
+            .collect();
+        let cache = PlanCache::new();
+        let rows = collect(&jobs, &FleetOptions { pool: 2, budget: 2 }, &cache);
+        assert_eq!(rows.len(), 3);
+        assert!(rows[0].contains("\"id\":\"a\"") && rows[0].contains("\"cache\":\"miss\""));
+        assert!(rows[1].contains("\"id\":\"b\"") && rows[1].contains("\"cache\":\"hit\""));
+        assert!(rows[2].contains("\"id\":\"c\"") && rows[2].contains("\"cache\":\"miss\""));
+        assert_eq!(cache.compiles(), 2);
+    }
+
+    #[test]
+    fn bad_jobs_become_rows_not_failures() {
+        let jobs = vec![
+            JobSpec { id: "good".into(), kernel: "broadcast".into(), ..JobSpec::default() },
+            JobSpec { id: "bad".into(), kernel: "no_such".into(), ..JobSpec::default() },
+            JobSpec {
+                id: "badfault".into(),
+                kernel: "broadcast".into(),
+                faults: Some("pe(9:nope".into()),
+                ..JobSpec::default()
+            },
+        ];
+        let cache = PlanCache::new();
+        let rows = collect(&jobs, &FleetOptions::default(), &cache);
+        assert!(rows[0].contains("\"ok\":true"));
+        assert!(rows[1].contains("\"ok\":false") && rows[1].contains("\"kind\":\"spec\""));
+        assert!(rows[2].contains("\"ok\":false") && rows[2].contains("\"kind\":\"faults\""));
+    }
+
+    #[test]
+    fn parse_jobs_keeps_line_correspondence() {
+        let text = "\n# comment\n{\"kernel\":\"gemv\"}\nnot json\n{\"kernel\":\"broadcast\",\"id\":\"x\"}\n";
+        let parsed = parse_jobs(text);
+        assert_eq!(parsed.len(), 3);
+        assert_eq!(parsed[0].as_ref().unwrap().id, "job-3");
+        assert_eq!(parsed[1].as_ref().unwrap_err().0, "job-4");
+        assert_eq!(parsed[2].as_ref().unwrap().id, "x");
+    }
+
+    #[test]
+    fn budget_policy() {
+        let f = FleetOptions { pool: 4, budget: 8 };
+        assert_eq!(f.inner_threads(), 2);
+        let f = FleetOptions { pool: 8, budget: 4 };
+        assert_eq!(f.inner_threads(), 1);
+    }
+}

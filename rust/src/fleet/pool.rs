@@ -1,0 +1,95 @@
+//! A minimal indexed worker pool for whole-simulation (outer)
+//! parallelism.
+//!
+//! Work items are identified by index; workers pull the next index
+//! from a shared atomic counter, so scheduling is dynamic (a slow job
+//! never convoys the queue behind it) while results stay slot-indexed
+//! by input order — the property every deterministic-output consumer
+//! (the batch engine, the fault campaign) builds on.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Run `f(i)` for every `i in 0..n` on `workers` threads and return
+/// the results in input order. `f` must be panic-free (wrap the body
+/// in `catch_unwind` when isolation is required — the fleet driver
+/// does); a panic that does escape tears down the scope and propagates.
+///
+/// `on_done(i, &result)` fires immediately after item `i` completes,
+/// from the completing worker's thread, serialized under a lock — the
+/// hook for streaming emitters that must not wait for the barrier.
+pub fn run_indexed<T, F, D>(n: usize, workers: usize, f: F, on_done: D) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+    D: FnMut(usize, &T) + Send,
+{
+    let workers = workers.max(1).min(n.max(1));
+    let done = Mutex::new(on_done);
+    if workers <= 1 {
+        return (0..n)
+            .map(|i| {
+                let r = f(i);
+                (done.lock().unwrap_or_else(|p| p.into_inner()))(i, &r);
+                r
+            })
+            .collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(i);
+                (done.lock().unwrap_or_else(|p| p.into_inner()))(i, &r);
+                *slots[i].lock().unwrap_or_else(|p| p.into_inner()) = Some(r);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|s| {
+            s.into_inner()
+                .unwrap_or_else(|p| p.into_inner())
+                .expect("every index visited exactly once")
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_are_input_ordered_at_any_width() {
+        for workers in [1, 2, 7] {
+            let out = run_indexed(20, workers, |i| i * i, |_, _| {});
+            assert_eq!(out, (0..20).map(|i| i * i).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn on_done_sees_every_item() {
+        let seen = Mutex::new(vec![false; 12]);
+        run_indexed(
+            12,
+            4,
+            |i| i,
+            |i, r| {
+                assert_eq!(i, *r);
+                seen.lock().unwrap()[i] = true;
+            },
+        );
+        assert!(seen.into_inner().unwrap().iter().all(|&b| b));
+    }
+
+    #[test]
+    fn zero_items_is_fine() {
+        let out: Vec<u32> = run_indexed(0, 4, |_| unreachable!(), |_, _| {});
+        assert!(out.is_empty());
+    }
+}

@@ -1,7 +1,13 @@
 //! Shared harness plumbing: compile + simulate kernels with synthetic
 //! workloads, collect reports, and extrapolate to paper scale.
+//!
+//! All library-kernel runners compile through one process-wide fleet
+//! [`PlanCache`] — the fig sweeps re-run the same handful of shapes at
+//! many operating points, so each distinct `(kernel, binds, grid,
+//! options)` shape compiles exactly once per process.
 
 use crate::csl;
+use crate::fleet::PlanCache;
 use crate::frontend::{lower_stencil, parse_stencil, stencil_source, StencilKernel};
 use crate::kernels;
 use crate::machine::{IoDir, MachineConfig, RunReport, Simulator};
@@ -9,6 +15,14 @@ use crate::passes::{Options, PassStats};
 use crate::sem::{instantiate, Bindings};
 use crate::util::SplitMix64;
 use anyhow::{anyhow, Result};
+use std::sync::OnceLock;
+
+/// The shared harness compilation cache (see module docs). Keyed on
+/// pass options too, so `-O0`-vs-`-O2` style sweeps never collide.
+fn plan_cache() -> &'static PlanCache {
+    static CACHE: OnceLock<PlanCache> = OnceLock::new();
+    CACHE.get_or_init(PlanCache::new)
+}
 
 /// WSE-2 full-fabric constants for extrapolation.
 pub const PAPER_PES: f64 = 750.0 * 994.0;
@@ -102,7 +116,7 @@ pub fn run_reduce(
         "tree_reduce" | "two_phase_reduce" => vec![("K", k), ("NX", px), ("NY", py)],
         other => return Err(anyhow!("not a reduce kernel: {other}")),
     };
-    let ck = kernels::compile(kernel, &binds, &cfg, opts)?;
+    let ck = plan_cache().get(kernel, &binds, &cfg, opts).map_err(anyhow::Error::msg)?;
     let spada_loc = kernels::spada_loc(kernel)?;
     let pes = if kernel == "chain_reduce" { px } else { px * py };
     let mut sim = ck.simulator()?;
@@ -110,18 +124,19 @@ pub fn run_reduce(
     sim.set_input("a_in", &data)?;
     let report = sim.run()?;
     let out = sim.get_output("out")?;
-    Ok((SimRun { report, stats: ck.stats, csl_loc: ck.csl_loc, spada_loc }, out))
+    Ok((SimRun { report, stats: ck.stats.clone(), csl_loc: ck.csl_loc, spada_loc }, out))
 }
 
 /// Compile + run the 1-D broadcast.
 pub fn run_broadcast(p: i64, k: i64, opts: &Options) -> Result<SimRun> {
     let cfg = MachineConfig::with_grid(p, 1);
-    let ck = kernels::compile("broadcast", &[("K", k), ("N", p)], &cfg, opts)?;
+    let ck =
+        plan_cache().get("broadcast", &[("K", k), ("N", p)], &cfg, opts).map_err(anyhow::Error::msg)?;
     let spada_loc = kernels::spada_loc("broadcast")?;
     let mut sim = ck.simulator()?;
     sim.set_input("a_in", &rand_vec(7, k as usize))?;
     let report = sim.run()?;
-    Ok(SimRun { report, stats: ck.stats, csl_loc: ck.csl_loc, spada_loc })
+    Ok(SimRun { report, stats: ck.stats.clone(), csl_loc: ck.csl_loc, spada_loc })
 }
 
 /// Compile a stencil through the GT4Py-style pipeline and run it.
@@ -214,7 +229,9 @@ pub fn run_gemv_variant(
     opts: &Options,
 ) -> Result<(SimRun, Vec<f32>, Vec<f32>)> {
     let cfg = MachineConfig::with_grid(g, g);
-    let ck = kernels::compile(kernel, &[("M", n), ("N", n), ("NX", g), ("NY", g)], &cfg, opts)?;
+    let ck = plan_cache()
+        .get(kernel, &[("M", n), ("N", n), ("NX", g), ("NY", g)], &cfg, opts)
+        .map_err(anyhow::Error::msg)?;
     let spada_loc = kernels::spada_loc(kernel)?;
     let mut sim = ck.simulator()?;
     let (a_dense, a_blocks, x, y0) = gemv_inputs(n, g);
@@ -230,7 +247,7 @@ pub fn run_gemv_variant(
     for r in 0..n as usize {
         want[r] = (0..n as usize).map(|c| a_dense[r * n as usize + c] * x[c]).sum();
     }
-    Ok((SimRun { report, stats: ck.stats, csl_loc: ck.csl_loc, spada_loc }, y, want))
+    Ok((SimRun { report, stats: ck.stats.clone(), csl_loc: ck.csl_loc, spada_loc }, y, want))
 }
 
 /// Extrapolate a measured FLOP rate to the paper's fabric: per-PE work

@@ -10,19 +10,27 @@
 //! are structurally absent rather than silently inert.
 //!
 //! Determinism: rows are produced into a site-indexed table (worker
-//! interleaving cannot reorder them), every run stages the same seeded
-//! inputs, and the engines guarantee bit-identical faulted runs across
+//! interleaving cannot reorder them — the fleet's [`pool`] provides
+//! exactly that contract), every run stages the same seeded inputs,
+//! and the engines guarantee bit-identical faulted runs across
 //! `SPADA_THREADS` — so the matrix file is byte-identical at any thread
-//! count (the CI gate diffs thread counts 1 and 4).
+//! count (the CI gate diffs thread counts 1 and 4). Each kernel
+//! compiles once through the fleet [`PlanCache`]; every faulted site
+//! reuses that compilation with an explicit per-run [`SimOptions`]
+//! fault plan, so ambient `SPADA_FAULTS` / `SPADA_TIMEOUT_MS` can
+//! never leak into the matrix (only the inner thread count is taken
+//! from the environment, to keep the cross-thread CI diff meaningful).
+//!
+//! [`pool`]: crate::fleet::pool
 
+use crate::fleet::{pool, PlanCache};
 use crate::harness::common::{output_words, scaled_binds, stage_random_inputs};
-use crate::kernels::{self, CompiledKernel};
+use crate::kernels::CompiledKernel;
 use crate::machine::fault::{classify, FaultPlan, FaultSpec, Outcome};
-use crate::machine::{Direction, MachineConfig, Simulator};
+use crate::machine::{Direction, MachineConfig, SimOptions};
 use crate::passes::Options;
 use anyhow::{anyhow, Context, Result};
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 /// The six library kernels the campaign sweeps.
 pub const KERNELS: &[&str] =
@@ -95,29 +103,36 @@ fn esc(s: &str) -> String {
         .collect()
 }
 
-/// One compiled kernel plus its clean-run reference.
+/// One compiled kernel (shared out of the [`PlanCache`]) plus its
+/// clean-run reference.
 struct Subject {
     name: &'static str,
-    ck: CompiledKernel,
+    ck: Arc<CompiledKernel>,
     reference: Vec<(String, Vec<u32>)>,
     clean_cycles: u64,
 }
 
-/// Compile a kernel at campaign scale and produce its clean reference
-/// run. The config is built fresh (ambient `SPADA_FAULTS` cleared) so
-/// the reference really is clean even inside an armed environment.
-fn prepare(name: &'static str, quick: bool) -> Result<Subject> {
+/// Compile a kernel at campaign scale (through the fleet plan cache —
+/// repeated campaigns in one process reuse the compilation) and
+/// produce its clean reference run. [`MachineConfig::with_grid`] is
+/// pure and `base` carries no fault plan or watchdog, so the reference
+/// really is clean even inside an armed environment; the simulator's
+/// event budget is the (deterministic) backstop, so the matrix never
+/// depends on host speed.
+fn prepare(
+    name: &'static str,
+    quick: bool,
+    cache: &PlanCache,
+    base: &SimOptions,
+) -> Result<Subject> {
     let k = if quick { 4 } else { 8 };
     let (binds, w, h) = scaled_binds(name, 4, k)?;
-    let mut cfg = MachineConfig::with_grid(w, h);
-    cfg.faults = FaultPlan::default();
-    // No wall-clock watchdog in campaign runs: the simulator's event
-    // budget is the (deterministic) backstop, so the matrix does not
-    // depend on host speed.
-    cfg.timeout_ms = None;
-    let ck = kernels::compile(name, &binds, &cfg, &Options::default())
+    let cfg = MachineConfig::with_grid(w, h);
+    let ck = cache
+        .get(name, &binds, &cfg, &Options::default())
+        .map_err(anyhow::Error::msg)
         .with_context(|| format!("compiling {name} for the fault campaign"))?;
-    let mut sim = ck.simulator()?;
+    let mut sim = ck.simulator_with(base)?;
     stage_random_inputs(&mut sim, INPUT_SEED);
     let report = sim.run().map_err(|e| anyhow!("clean {name} run failed: {e}"))?;
     let reference = output_words(&sim);
@@ -169,11 +184,12 @@ fn sites(s: &Subject, times: &[u64]) -> Vec<FaultSpec> {
 }
 
 /// Run one faulted site and classify it against the clean reference.
-fn run_site(s: &Subject, spec: FaultSpec) -> Result<Row> {
-    let mut cfg = s.ck.cfg.clone();
-    cfg.faults = FaultPlan::single(spec);
-    let mut sim = Simulator::with_plan(cfg, s.ck.machine.clone(), Arc::clone(&s.ck.plan))
-        .map_err(|e| anyhow!("{}: site {spec}: {e}", s.name))?;
+/// The shared compilation is reused; only the per-run [`SimOptions`]
+/// differ (the single-fault plan rides on top of `base`).
+fn run_site(s: &Subject, spec: FaultSpec, base: &SimOptions) -> Result<Row> {
+    let opts = base.clone().faults(FaultPlan::single(spec));
+    let mut sim =
+        s.ck.simulator_with(&opts).map_err(|e| anyhow!("{}: site {spec}: {e}", s.name))?;
     stage_random_inputs(&mut sim, INPUT_SEED);
     let result = sim.run();
     let outputs = output_words(&sim);
@@ -211,11 +227,19 @@ pub fn campaign(opts: &CampaignOpts) -> Result<()> {
     };
     let grid = if opts.quick { 1 } else { opts.grid.max(1) };
 
+    // Per-run options: only the inner thread count is taken from the
+    // environment (so the CI cross-thread byte-identity diff still
+    // exercises different engine widths); ambient fault plans,
+    // watchdogs and buffer caps never reach the campaign.
+    let base = SimOptions { threads: SimOptions::from_env().threads, ..SimOptions::default() };
+
     // Phase 1: compile + clean reference per kernel (serial: compilation
     // is cheap and the reference is each subject's shared baseline).
+    // One cache for the whole campaign — each kernel compiles once.
+    let cache = PlanCache::new();
     let mut subjects = Vec::new();
     for &name in &selected {
-        subjects.push(prepare(name, opts.quick)?);
+        subjects.push(prepare(name, opts.quick, &cache, &base)?);
     }
 
     // Phase 2: enumerate (subject, spec) work items.
@@ -235,35 +259,27 @@ pub fn campaign(opts: &CampaignOpts) -> Result<()> {
         }
     }
 
-    // Phase 3: worker pool over an atomic work index; results land in a
-    // site-indexed table so output order is independent of scheduling.
-    let rows: Mutex<Vec<Option<Result<Row>>>> =
-        Mutex::new((0..work.len()).map(|_| None).collect());
-    let next = AtomicUsize::new(0);
+    // Phase 3: the fleet worker pool over the site list; results come
+    // back index-ordered, so output order is independent of scheduling.
     let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8);
-    std::thread::scope(|scope| {
-        for _ in 0..workers {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= work.len() {
-                    break;
-                }
-                let (si, spec) = work[i];
-                let row = run_site(&subjects[si], spec);
-                rows.lock().unwrap_or_else(|p| p.into_inner())[i] = Some(row);
-            });
-        }
-    });
+    let rows = pool::run_indexed(
+        work.len(),
+        workers,
+        |i| {
+            let (si, spec) = work[i];
+            run_site(&subjects[si], spec, &base)
+        },
+        |_, _| {},
+    );
 
     // Phase 4: emit JSONL + summary.
-    let rows = rows.into_inner().unwrap_or_else(|p| p.into_inner());
     let mut jsonl = String::new();
     let mut summary: Vec<(&'static str, [u64; 7])> =
         selected.iter().map(|&n| (n, [0u64; 7])).collect();
     const LABELS: [&str; 7] =
         ["correct", "sdc", "buffer-deadlock", "circular-wait", "runaway", "timeout", "error"];
-    for slot in rows {
-        let row = slot.expect("every work item ran")?;
+    for row in rows {
+        let row = row?;
         let li = LABELS
             .iter()
             .position(|&l| l == row.outcome.label())
@@ -295,7 +311,7 @@ mod tests {
 
     #[test]
     fn site_enumeration_is_deterministic_and_nonempty() {
-        let s = prepare("chain_reduce", true).unwrap();
+        let s = prepare("chain_reduce", true, &PlanCache::new(), &SimOptions::default()).unwrap();
         let a = sites(&s, &[10]);
         let b = sites(&s, &[10]);
         assert!(!a.is_empty());
@@ -311,12 +327,14 @@ mod tests {
 
     #[test]
     fn corrupt_site_classifies_as_sdc() {
-        let s = prepare("chain_reduce", true).unwrap();
+        let cache = PlanCache::new();
+        let s = prepare("chain_reduce", true, &cache, &SimOptions::default()).unwrap();
+        assert_eq!(cache.compiles(), 1, "campaign subjects compile through the cache");
         let spec = sites(&s, &[0])
             .into_iter()
             .find(|sp| matches!(sp, FaultSpec::Corrupt { .. }))
             .expect("chain_reduce has flow sources");
-        let row = run_site(&s, spec).unwrap();
+        let row = run_site(&s, spec, &SimOptions::default()).unwrap();
         assert_eq!(row.outcome.label(), "sdc", "corruption must be detected: {:?}", row.outcome);
     }
 }

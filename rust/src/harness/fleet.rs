@@ -1,0 +1,216 @@
+//! `spada bench --exp fleet` — batch-engine throughput.
+//!
+//! Pushes one mixed job list (every library kernel, two grids, repeated
+//! seeds so the plan cache has real hits) through [`crate::fleet::run_batch`]
+//! at pool widths 1 and 4, and reports whole-simulations-per-second —
+//! the service-level figure the per-kernel `--exp sim` sweep cannot
+//! see, because it measures one simulator at a time.
+//!
+//! Rows are written in the `BENCH_sim.json` line format (kernel /
+//! grid / threads / events_per_sec, so `spada bench --compare` parses
+//! them without special cases) with the fleet-level extras riding
+//! along as extra keys: `sims_per_sec`, `jobs`, `compiles`. The
+//! committed `BENCH_baseline.json` is never touched.
+//!
+//! The run doubles as an end-to-end determinism check: the pool-1 and
+//! pool-4 row streams must be byte-identical, or the bench aborts.
+
+use crate::bench::{eng, Table};
+use crate::fleet::{run_batch, FleetOptions, JobSpec, PlanCache};
+use anyhow::{bail, Context, Result};
+use std::time::Instant;
+
+/// Pool widths measured (mirrors the CI batch smoke legs).
+pub const POOLS: &[usize] = &[1, 4];
+
+/// The mixed fleet workload: every kernel × two grids × repeated
+/// seeds, plus a finite-buffer and a no-vectorize variant, so the
+/// batch exercises cache hits and per-job option isolation, not just
+/// cold compiles.
+pub fn job_list(quick: bool) -> Vec<JobSpec> {
+    let kernels =
+        ["chain_reduce", "broadcast", "tree_reduce", "two_phase_reduce", "gemv", "gemv_tree"];
+    let grids: &[i64] = if quick { &[4, 8] } else { &[4, 8, 16] };
+    let seeds: &[u64] = if quick { &[1, 2] } else { &[1, 2, 3] };
+    let mut jobs = Vec::new();
+    for &g in grids {
+        for kernel in kernels {
+            for &seed in seeds {
+                jobs.push(JobSpec {
+                    id: format!("{kernel}-g{g}-s{seed}"),
+                    kernel: kernel.to_string(),
+                    g,
+                    k: 16,
+                    seed,
+                    ..JobSpec::default()
+                });
+            }
+        }
+    }
+    // Option-isolation variants: same shapes, different run options —
+    // they must share the cached compilations above.
+    jobs.push(JobSpec {
+        id: "gemv-capped".into(),
+        kernel: "gemv".into(),
+        g: grids[0],
+        k: 16,
+        seed: 1,
+        buf_cap: Some(64),
+        ..JobSpec::default()
+    });
+    jobs.push(JobSpec {
+        id: "tree-novec".into(),
+        kernel: "tree_reduce".into(),
+        g: grids[0],
+        k: 16,
+        seed: 1,
+        no_vec: true,
+        ..JobSpec::default()
+    });
+    jobs
+}
+
+/// One measured pool width.
+pub struct FleetPoint {
+    pub pool: usize,
+    pub jobs: usize,
+    pub compiles: u64,
+    pub wall_ms: f64,
+    pub sims_per_sec: f64,
+    /// Aggregate simulated events processed per host second across the
+    /// whole batch — comparable to the `--exp sim` per-run figure.
+    pub events_per_sec: f64,
+}
+
+/// Run the workload at every pool width. Each width gets a fresh
+/// [`PlanCache`], so the measured time always includes the same
+/// compile-once work. Returns the points plus the (identical) row
+/// stream.
+pub fn sweep(quick: bool) -> Result<(Vec<FleetPoint>, Vec<String>)> {
+    let jobs = job_list(quick);
+    let mut points = Vec::new();
+    let mut reference: Option<Vec<String>> = None;
+    for &pool in POOLS {
+        let cache = PlanCache::new();
+        let fleet = FleetOptions { pool, ..FleetOptions::default() };
+        let mut rows: Vec<String> = Vec::with_capacity(jobs.len());
+        let mut events = 0u64;
+        let mut failed: Vec<String> = Vec::new();
+        let t0 = Instant::now();
+        let summary = run_batch(&jobs, &fleet, &cache, |r| {
+            events += r.report.as_ref().map(|m| m.events).unwrap_or(0);
+            if let Some((kind, msg)) = &r.error {
+                failed.push(format!("{}: {kind}: {msg}", r.id));
+            }
+            rows.push(r.to_jsonl());
+        });
+        let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
+        if !failed.is_empty() {
+            bail!("fleet bench jobs failed at pool {pool}: {}", failed.join("; "));
+        }
+        match &reference {
+            None => reference = Some(rows.clone()),
+            Some(want) => {
+                if *want != rows {
+                    bail!(
+                        "fleet determinism violated: pool {pool} rows differ from pool {} rows",
+                        POOLS[0]
+                    );
+                }
+            }
+        }
+        points.push(FleetPoint {
+            pool,
+            jobs: summary.jobs,
+            compiles: summary.compiles,
+            wall_ms: wall_s * 1e3,
+            sims_per_sec: summary.jobs as f64 / wall_s,
+            events_per_sec: events as f64 / wall_s,
+        });
+    }
+    Ok((points, reference.unwrap_or_default()))
+}
+
+fn json_of(points: &[FleetPoint], quick: bool) -> String {
+    let host = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let mut s = String::new();
+    s.push_str("{\n  \"bench\": \"fleet\",\n");
+    s.push_str(&format!("  \"quick\": {quick},\n"));
+    s.push_str("  \"runs\": [\n");
+    for (i, p) in points.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"kernel\": \"fleet_mixed\", \"grid\": \"batch\", \"threads\": {}, \
+             \"host_parallelism\": {}, \"jobs\": {}, \"compiles\": {}, \"wall_ms\": {:.3}, \
+             \"sims_per_sec\": {:.2}, \"events_per_sec\": {:.1}}}{}\n",
+            p.pool,
+            host,
+            p.jobs,
+            p.compiles,
+            p.wall_ms,
+            p.sims_per_sec,
+            p.events_per_sec,
+            if i + 1 == points.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+pub fn run(quick: bool) -> Result<()> {
+    let (points, _rows) = sweep(quick)?;
+    let mut table =
+        Table::new(&["pool", "jobs", "compiles", "wall ms", "sims/s", "events/s"]);
+    for p in &points {
+        table.row(&[
+            p.pool.to_string(),
+            p.jobs.to_string(),
+            p.compiles.to_string(),
+            format!("{:.1}", p.wall_ms),
+            format!("{:.2}", p.sims_per_sec),
+            eng(p.events_per_sec),
+        ]);
+    }
+    table.print();
+    println!("rows byte-identical across pool widths {POOLS:?}");
+    let out = super::sim_scaling::OUT_FILE;
+    std::fs::write(out, json_of(&points, quick)).context(out)?;
+    println!("wrote {out} ({} pool widths)", points.len());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fleet_rows_parse_with_the_bench_gate_parser() {
+        let points = vec![FleetPoint {
+            pool: 4,
+            jobs: 26,
+            compiles: 12,
+            wall_ms: 100.0,
+            sims_per_sec: 260.0,
+            events_per_sec: 1.0e6,
+        }];
+        let json = json_of(&points, true);
+        let parsed = super::super::sim_scaling::parse_bench_json(&json).unwrap();
+        assert_eq!(parsed.runs.len(), 1);
+        assert_eq!(parsed.runs[0].kernel, "fleet_mixed");
+        assert_eq!(parsed.runs[0].grid, "batch");
+        assert_eq!(parsed.runs[0].threads, 4);
+        assert!((parsed.runs[0].events_per_sec - 1.0e6).abs() < 1.0);
+    }
+
+    #[test]
+    fn quick_job_list_is_mixed() {
+        let jobs = job_list(true);
+        assert_eq!(jobs.len(), 26);
+        // Duplicated shapes guarantee cache hits: 6 kernels × 2 grids
+        // distinct shapes, 26 jobs.
+        let shapes: std::collections::BTreeSet<(String, i64, i64)> =
+            jobs.iter().map(|j| (j.kernel.clone(), j.g, j.k)).collect();
+        assert_eq!(shapes.len(), 12);
+        assert!(jobs.iter().any(|j| j.buf_cap.is_some()));
+        assert!(jobs.iter().any(|j| j.no_vec));
+    }
+}

@@ -10,6 +10,7 @@
 
 pub mod common;
 pub mod faults;
+pub mod fleet;
 pub mod table2;
 pub mod fig4;
 pub mod fig5;
@@ -37,6 +38,11 @@ pub fn run(exp: &str, quick: bool) -> Result<()> {
         "fig8" => fig8::run(quick),
         "fig9" => fig9::run(quick),
         "sim" => sim_scaling::run(quick),
+        // Not part of "all": it overwrites `BENCH_sim.json` with fleet
+        // rows, and "all" regenerates the paper artifacts — run it as
+        // its own leg (the CI bench job does, after archiving the sim
+        // sweep).
+        "fleet" => fleet::run(quick),
         "verify" => verify::run(),
         "all" => {
             for e in ALL {
@@ -45,6 +51,6 @@ pub fn run(exp: &str, quick: bool) -> Result<()> {
             }
             Ok(())
         }
-        other => bail!("unknown experiment {other} (try: {} or all)", ALL.join(", ")),
+        other => bail!("unknown experiment {other} (try: {}, fleet, or all)", ALL.join(", ")),
     }
 }

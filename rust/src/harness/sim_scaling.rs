@@ -15,11 +15,11 @@
 //! trajectory PR over PR — this is the baseline artifact every future
 //! simulator-performance change is measured against.
 //!
-//! Each (kernel, grid) point compiles **once** and reuses one
-//! `Simulator` allocation across the thread sweep via
-//! [`spada::machine::Simulator::reset`], so `wall_ms` is the
-//! simulate-only time (inputs are staged once; reset restores pristine
-//! PE images instead of re-cloning the program per run). The 1-thread
+//! Each (kernel, grid) point compiles **once** through the fleet
+//! [`PlanCache`] and builds a fresh simulator per thread count with
+//! explicit [`SimOptions`] (the sweep never reads the environment, so
+//! `BENCH_sim.json` is comparable across CI env legs); timing starts
+//! after staging, so `wall_ms` is the simulate-only time. The 1-thread
 //! rows are the classic event loop; higher counts run the
 //! epoch-parallel engine — cycles/events/wavelets are bit-identical
 //! across rows of one point by construction, only `wall_ms` /
@@ -27,8 +27,8 @@
 
 use super::common::{gemv_inputs, rand_vec, scaled_binds};
 use crate::bench::{eng, Table};
-use crate::kernels;
-use crate::machine::{MachineConfig, Simulator};
+use crate::fleet::PlanCache;
+use crate::machine::{MachineConfig, SimOptions, Simulator};
 use crate::passes::Options;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::BTreeMap;
@@ -73,17 +73,10 @@ pub struct ScalePoint {
     pub barrier_wait_ms: f64,
 }
 
-/// Compile one sweep kernel and stage its deterministic inputs,
-/// returning a ready-to-run simulator plus the (grid label, PE count)
-/// of the point. Binds and geometry come from the shared
-/// [`scaled_binds`] encoding; input staging preserves the historical
-/// per-argument seeds of the figure runners. The caller reruns the
-/// same allocation per thread count via `reset()`.
-fn stage(kernel: &'static str, g: i64, k: i64, opts: &Options) -> Result<(Simulator, String, i64)> {
-    let (binds, w, h) = scaled_binds(kernel, g, k)?;
-    let cfg = MachineConfig::with_grid(w, h);
-    let ck = kernels::compile(kernel, &binds, &cfg, opts)?;
-    let mut sim = ck.simulator()?;
+/// Stage one sweep kernel's deterministic inputs. Preserves the
+/// historical per-argument seeds of the figure runners, so the sweep's
+/// simulated observables stay comparable across snapshots.
+fn stage_inputs(sim: &mut Simulator, kernel: &str, g: i64, k: i64) -> Result<()> {
     match kernel {
         "chain_reduce" => sim.set_input("a_in", &rand_vec(0xF16, (k * g) as usize))?,
         "broadcast" => sim.set_input("a_in", &rand_vec(7, k as usize))?,
@@ -100,17 +93,14 @@ fn stage(kernel: &'static str, g: i64, k: i64, opts: &Options) -> Result<(Simula
             sim.set_input("beta", &[0.0])?;
         }
     }
-    if h == 1 {
-        Ok((sim, format!("{g}x1"), g))
-    } else {
-        Ok((sim, format!("{g}x{g}"), g * g))
-    }
+    Ok(())
 }
 
 /// The sweep itself (separated from [`run`] so tests can exercise it
 /// without touching the filesystem).
 pub fn sweep(quick: bool) -> Result<Vec<ScalePoint>> {
     let opts = Options::default();
+    let cache = PlanCache::new();
     let grids: &[i64] = if quick { &[4, 8, 16] } else { &[4, 8, 16, 32, 64, 128] };
     let k = 64i64;
     let kernels: [&'static str; 6] =
@@ -118,11 +108,20 @@ pub fn sweep(quick: bool) -> Result<Vec<ScalePoint>> {
     let mut points = vec![];
     for &g in grids {
         for kernel in kernels {
-            let (mut sim, grid, pes) =
-                stage(kernel, g, k, &opts).with_context(|| format!("{kernel} grid {g}"))?;
+            let (binds, w, h) = scaled_binds(kernel, g, k)?;
+            let cfg = MachineConfig::with_grid(w, h);
+            let ck = cache
+                .get(kernel, &binds, &cfg, &opts)
+                .map_err(anyhow::Error::msg)
+                .with_context(|| format!("{kernel} grid {g}"))?;
+            let (grid, pes) =
+                if h == 1 { (format!("{g}x1"), g) } else { (format!("{g}x{g}"), g * g) };
             for &threads in THREAD_COUNTS {
-                sim.reset();
-                sim.set_threads(threads);
+                let mut sim = ck
+                    .simulator_with(&SimOptions::default().threads(threads))
+                    .map_err(anyhow::Error::from)
+                    .with_context(|| format!("{kernel} {grid} threads={threads}"))?;
+                stage_inputs(&mut sim, kernel, g, k)?;
                 let t0 = Instant::now();
                 let report = sim
                     .run()
@@ -222,6 +221,13 @@ pub fn run(quick: bool) -> Result<()> {
 // ---------------------------------------------------------------------
 
 /// One parsed run row from a `BENCH_sim.json`-format file.
+///
+/// Only `kernel`, `grid` and `events_per_sec` are required — they have
+/// been in every row since the sweep first existed. **Everything that
+/// arrived later is uniformly optional**: a baseline blessed before a
+/// field existed must parse (with `None`) rather than hard-fail the
+/// gate, and newer row kinds (the `--exp fleet` rows with
+/// `sims_per_sec`) must parse with the same code path.
 #[derive(Clone, Debug)]
 pub struct BenchRun {
     pub kernel: String,
@@ -230,6 +236,16 @@ pub struct BenchRun {
     /// the threads field, so old baselines keep comparing 1-vs-1).
     pub threads: usize,
     pub events_per_sec: f64,
+    /// Buffer-model observables (absent before the finite-buffer PR).
+    pub peak_queue_depth: Option<f64>,
+    pub stall_cycles: Option<f64>,
+    /// Parallel-engine introspection (absent before the epoch-parallel
+    /// engine PR).
+    pub epochs: Option<f64>,
+    pub shard_imbalance: Option<f64>,
+    pub barrier_wait_ms: Option<f64>,
+    /// Batch-fleet throughput (only on `--exp fleet` rows).
+    pub sims_per_sec: Option<f64>,
 }
 
 /// A parsed bench file.
@@ -276,7 +292,18 @@ pub fn parse_bench_json(text: &str) -> Result<BenchFile> {
         let threads = extract_num(line, "threads").map(|t| t as usize).unwrap_or(1);
         let events_per_sec = extract_num(line, "events_per_sec")
             .ok_or_else(|| anyhow!("bad run row (no events_per_sec): {line}"))?;
-        runs.push(BenchRun { kernel, grid, threads, events_per_sec });
+        runs.push(BenchRun {
+            kernel,
+            grid,
+            threads,
+            events_per_sec,
+            peak_queue_depth: extract_num(line, "peak_queue_depth"),
+            stall_cycles: extract_num(line, "stall_cycles"),
+            epochs: extract_num(line, "epochs"),
+            shard_imbalance: extract_num(line, "shard_imbalance"),
+            barrier_wait_ms: extract_num(line, "barrier_wait_ms"),
+            sims_per_sec: extract_num(line, "sims_per_sec"),
+        });
     }
     if runs.is_empty() {
         bail!("no bench runs found (not a BENCH_sim.json-format file?)");
@@ -497,6 +524,12 @@ mod tests {
                     grid: g.to_string(),
                     threads: *t,
                     events_per_sec: *e,
+                    peak_queue_depth: None,
+                    stall_cycles: None,
+                    epochs: None,
+                    shard_imbalance: None,
+                    barrier_wait_ms: None,
+                    sims_per_sec: None,
                 })
                 .collect(),
         }
@@ -572,5 +605,36 @@ mod tests {
         // as 1-thread rows.
         assert_eq!(f.runs[0].threads, 1);
         assert!(parse_bench_json("{}").is_err());
+    }
+
+    #[test]
+    fn post_pr4_fields_are_uniformly_optional() {
+        // An old baseline row — nothing beyond the original triple —
+        // must parse with every later field None, never hard-fail.
+        let old = "{\"runs\": [\n    {\"kernel\": \"gemv\", \"grid\": \"8x8\", \
+                   \"events_per_sec\": 10.0}\n]}";
+        let f = parse_bench_json(old).unwrap();
+        let r = &f.runs[0];
+        assert!(r.peak_queue_depth.is_none() && r.stall_cycles.is_none());
+        assert!(r.epochs.is_none() && r.shard_imbalance.is_none());
+        assert!(r.barrier_wait_ms.is_none() && r.sims_per_sec.is_none());
+        // A current sweep row fills the engine fields; a fleet row
+        // fills sims_per_sec — the same parser reads all three ages.
+        let new = "{\"runs\": [\n    {\"kernel\": \"gemv\", \"grid\": \"8x8\", \"threads\": 4, \
+                   \"events_per_sec\": 10.0, \"peak_queue_depth\": 3, \"stall_cycles\": 0, \
+                   \"epochs\": 7, \"shard_imbalance\": 1.250, \"barrier_wait_ms\": 0.021}\n    \
+                   {\"kernel\": \"fleet_mixed\", \"grid\": \"batch\", \"threads\": 4, \
+                   \"events_per_sec\": 5.0, \"sims_per_sec\": 120.5, \"jobs\": 26}\n]}";
+        let f = parse_bench_json(new).unwrap();
+        assert_eq!(f.runs.len(), 2);
+        assert_eq!(f.runs[0].epochs, Some(7.0));
+        assert_eq!(f.runs[0].shard_imbalance, Some(1.25));
+        assert_eq!(f.runs[0].barrier_wait_ms, Some(0.021));
+        assert_eq!(f.runs[0].peak_queue_depth, Some(3.0));
+        assert!(f.runs[0].sims_per_sec.is_none());
+        assert_eq!(f.runs[1].sims_per_sec, Some(120.5));
+        // Old and new rows interoperate in one comparison.
+        let deltas = compare_runs(&f, &f);
+        assert!(!deltas.is_empty());
     }
 }

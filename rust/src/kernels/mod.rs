@@ -4,7 +4,7 @@
 //! demand; [`KernelSpec`] couples the source with its meta-parameters so
 //! the harness, examples and tests share one entry point.
 
-use crate::machine::{MachineConfig, MachineProgram, RoutingPlan, SimError, Simulator};
+use crate::machine::{MachineConfig, MachineProgram, RoutingPlan, SimError, SimOptions, Simulator};
 use crate::passes::{Options, PassStats};
 use crate::sem::{instantiate, Bindings};
 use crate::spada::{parse_kernel, pretty, Kernel};
@@ -70,9 +70,25 @@ pub struct CompiledKernel {
 impl CompiledKernel {
     /// Build a simulator that executes from the shared plan instance —
     /// no route is re-traced. Each call yields a fresh single-shot
-    /// simulator over the same compilation.
+    /// simulator over the same compilation, with runtime options
+    /// resolved from the environment once (the historical `SPADA_*`
+    /// behaviour via [`SimOptions::from_env`]).
     pub fn simulator(&self) -> Result<Simulator, SimError> {
         Simulator::with_plan(self.cfg.clone(), self.machine.clone(), Arc::clone(&self.plan))
+    }
+
+    /// Build a simulator with **explicit** runtime options — the
+    /// environment is never consulted, so concurrent jobs of one
+    /// compiled kernel can run with different thread counts, buffer
+    /// capacities, fault plans or watchdogs in the same process (the
+    /// batch-fleet path; see [`crate::fleet`]).
+    pub fn simulator_with(&self, opts: &SimOptions) -> Result<Simulator, SimError> {
+        Simulator::with_plan_opts(
+            self.cfg.clone(),
+            self.machine.clone(),
+            Arc::clone(&self.plan),
+            opts,
+        )
     }
 }
 

@@ -13,7 +13,8 @@
 //!   ([`analysis`]: routing correctness, data-race and deadlock
 //!   verification between lowering and execution), the WSE-2 simulator
 //!   ([`machine`]), the GT4Py-style stencil frontend ([`frontend`]),
-//!   baselines and the experiment harness ([`harness`]).
+//!   the batch fleet engine ([`fleet`]: plan cache + job queue behind
+//!   `spada batch`), baselines and the experiment harness ([`harness`]).
 //! - **L2/L1 (python/, build-time only)**: JAX reference compute graphs and
 //!   Pallas kernels, AOT-lowered to HLO text in `artifacts/`.
 //! - **Runtime bridge** ([`runtime`]): PJRT CPU client that loads the AOT
@@ -30,6 +31,7 @@ pub mod analysis;
 pub mod frontend;
 pub mod kernels;
 pub mod baselines;
+pub mod fleet;
 pub mod harness;
 pub mod runtime;
 pub mod bench;

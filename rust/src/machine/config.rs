@@ -74,6 +74,12 @@ impl MachineConfig {
     }
 
     /// WSE-2 model with a custom grid (scaled-down simulations).
+    ///
+    /// Pure: never consults the environment. The `SPADA_*` runtime
+    /// options (buffer capacity, watchdog, faults, …) are resolved
+    /// once per simulation by [`super::SimOptions`] — `from_env()` for
+    /// the CLI-compatible constructors, or an explicit options value
+    /// for batch-fleet jobs whose options differ per job.
     pub fn with_grid(width: i64, height: i64) -> Self {
         MachineConfig {
             width,
@@ -90,11 +96,11 @@ impl MachineConfig {
             data_task_wavelet_cycles: 2,
             simd16_width: 4,
             max_events: 2_000_000_000,
-            endpoint_capacity_words: super::flowctl::env_buf_cap(),
+            endpoint_capacity_words: None,
             link_buffer_words: None,
             credit_latency_cycles: 0,
-            timeout_ms: env_timeout_ms(),
-            faults: FaultPlan::from_env(),
+            timeout_ms: None,
+            faults: FaultPlan::default(),
         }
     }
 
@@ -122,18 +128,36 @@ impl MachineConfig {
     pub fn link_slots(&self) -> usize {
         self.grid_cells() * 5
     }
-}
 
-/// `SPADA_TIMEOUT_MS` as a watchdog budget; unset, empty, `0` or
-/// unparsable values disable the watchdog (0 would abort every run
-/// before its first event — never useful, so it reads as "off").
-pub fn env_timeout_ms() -> Option<u64> {
-    match std::env::var("SPADA_TIMEOUT_MS") {
-        Ok(v) => match v.trim().parse::<u64>() {
-            Ok(0) | Err(_) => None,
-            Ok(ms) => Some(ms),
-        },
-        Err(_) => None,
+    /// A compact, stable fingerprint of every compile-relevant machine
+    /// parameter — the config component of the fleet plan-cache key
+    /// ([`crate::fleet::PlanCache`]). Two configs with equal
+    /// fingerprints build identical routing plans and compile kernels
+    /// identically; per-run options (faults, watchdog — applied via
+    /// [`super::SimOptions`] at simulator creation) are deliberately
+    /// excluded, so jobs differing only in run options share one
+    /// compilation.
+    pub fn fingerprint(&self) -> String {
+        format!(
+            "{}x{} f{} m{} c{} t{} w{} i{} d{} h{} s{} v{} simd{} e{} cap{} lnk{} lat{}",
+            self.width,
+            self.height,
+            self.freq_ghz,
+            self.mem_bytes,
+            self.max_colors,
+            self.max_task_ids,
+            self.task_wakeup_cycles,
+            self.dsd_issue_cycles,
+            self.dispatch_cycles,
+            self.hop_cycles,
+            self.scalar_op_cycles,
+            self.data_task_wavelet_cycles,
+            self.simd16_width,
+            self.max_events,
+            self.endpoint_capacity_words.map(|c| c as i64).unwrap_or(-1),
+            self.link_buffer_words.map(|c| c as i64).unwrap_or(-1),
+            self.credit_latency_cycles,
+        )
     }
 }
 

@@ -259,18 +259,6 @@ impl FaultPlan {
         Ok(plan)
     }
 
-    /// Read `SPADA_FAULTS`; a malformed value is preserved in
-    /// `invalid` so the run (not the config constructor) rejects it.
-    pub fn from_env() -> FaultPlan {
-        match std::env::var("SPADA_FAULTS") {
-            Ok(s) if !s.trim().is_empty() => match FaultPlan::parse(&s) {
-                Ok(p) => p,
-                Err(e) => FaultPlan { invalid: Some(e), ..FaultPlan::default() },
-            },
-            _ => FaultPlan::default(),
-        }
-    }
-
     /// A plan holding exactly one spec (the campaign's per-site shape).
     pub fn single(spec: FaultSpec) -> FaultPlan {
         FaultPlan { specs: vec![spec], ..FaultPlan::default() }

@@ -59,16 +59,6 @@ use std::sync::Arc;
 /// Internal sentinel for "no capacity bound".
 const UNBOUNDED: u64 = u64::MAX;
 
-/// Parse `SPADA_BUF_CAP` from the environment: a positive word count
-/// caps every (PE, color) endpoint; unset, unparsable or zero means
-/// unbounded (the historical behaviour).
-pub fn env_buf_cap() -> Option<u64> {
-    std::env::var("SPADA_BUF_CAP")
-        .ok()
-        .and_then(|s| s.trim().parse::<u64>().ok())
-        .filter(|&n| n > 0)
-}
-
 /// One arrived flow queued at an endpoint, with its admission state.
 struct BufFlow {
     /// Natural availability time of word 0 at the PE ramp (the

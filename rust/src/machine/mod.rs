@@ -51,6 +51,7 @@
 pub mod config;
 pub mod fault;
 pub mod flowctl;
+pub mod options;
 pub mod plan;
 pub mod program;
 pub mod router;
@@ -68,6 +69,7 @@ pub use program::{
     TaskDef, TaskKind,
 };
 pub use metrics::{Metrics, RunReport};
+pub use options::SimOptions;
 pub use sim::{SimError, Simulator};
 pub use trace::{
     ascii_heatmap, chrome_trace_json, EngineStats, EpochRecord, PeBreakdown, Profile, Trace,

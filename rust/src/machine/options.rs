@@ -1,0 +1,267 @@
+//! `SimOptions` — every simulator runtime option, resolved in one place.
+//!
+//! Historically the `SPADA_*` environment variables were read wherever
+//! they were consumed: `SPADA_THREADS` and `SPADA_NO_VEC` inside the
+//! simulator constructor, `SPADA_BUF_CAP` / `SPADA_TIMEOUT_MS` /
+//! `SPADA_FAULTS` inside `MachineConfig::with_grid`, `SPADA_TRACE` in
+//! the CLI. That is fine for one process running one simulation, but a
+//! batch fleet runs *concurrent* jobs with *different* options — and
+//! process-global env cannot express that. This module is the redesign:
+//!
+//! - [`SimOptions`] is an explicit, per-simulation options value with a
+//!   builder API. [`crate::kernels::CompiledKernel::simulator_with`] and
+//!   [`super::Simulator::with_plan_opts`] consume it directly; nothing
+//!   on that path touches the environment.
+//! - [`SimOptions::from_env`] is the **single** place in the crate that
+//!   reads `SPADA_*` variables. The compatibility constructors
+//!   ([`super::Simulator::new`], [`super::Simulator::with_plan`],
+//!   [`crate::kernels::CompiledKernel::simulator`]) resolve it once at
+//!   construction, so the CLI and the test suites keep their historical
+//!   env-driven behaviour — through exactly one resolve site.
+//!
+//! Precedence: options mirroring a [`MachineConfig`] field (buffer
+//! capacity, credit latency, watchdog, faults) are applied only when
+//! the config still holds its pristine default — an explicitly
+//! configured `MachineConfig` always wins over ambient environment.
+//! This reproduces the historical behaviour, where `with_grid` seeded
+//! the config from env and callers overrode fields afterwards.
+//!
+//! The old→new mapping is documented in `docs/sim-options.md`.
+
+use super::config::MachineConfig;
+use super::fault::FaultPlan;
+
+/// Per-simulation runtime options. Construct with [`SimOptions::default`]
+/// (fully explicit, ignores the environment) or [`SimOptions::from_env`]
+/// (the single `SPADA_*` resolve site), then refine with the builder
+/// methods.
+#[derive(Clone, Debug, Default)]
+pub struct SimOptions {
+    /// Worker threads for the epoch-parallel engine. `None` = the
+    /// host's available parallelism. Results are bit-identical at
+    /// every count (`SPADA_THREADS`).
+    pub threads: Option<usize>,
+    /// Force the per-element DSD interpreter instead of the batched
+    /// slice kernels. Bit-identical either way (`SPADA_NO_VEC`).
+    pub no_vectorize: bool,
+    /// Finite (PE, color) endpoint buffers: capacity in words with
+    /// credit-based backpressure. `None` = leave the config as built
+    /// (unbounded unless the caller set a capacity) (`SPADA_BUF_CAP`).
+    pub buf_cap: Option<u64>,
+    /// Words of per-link-stage slack for the static credit pass and
+    /// deadlock reports. No env var; builder/config only.
+    pub link_buffer_words: Option<u64>,
+    /// Credit-return latency in cycles (`MachineConfig::
+    /// credit_latency_cycles`). No env var; builder/config only.
+    pub credit_latency: Option<u64>,
+    /// Wall-clock watchdog in milliseconds (`SPADA_TIMEOUT_MS`; `None`
+    /// = leave the config as built).
+    pub timeout_ms: Option<u64>,
+    /// Fault-injection plan (`SPADA_FAULTS`). `None` = leave the
+    /// config as built. A malformed ambient spec is preserved inside
+    /// the plan's `invalid` field so the *run* rejects it loudly.
+    pub faults: Option<FaultPlan>,
+    /// Capture a cycle-accurate trace ([`super::trace`]).
+    pub tracing: bool,
+    /// Chrome-trace output path (`SPADA_TRACE` / `spada run --trace`).
+    /// Consumed by the CLI; implies [`SimOptions::tracing`].
+    pub trace_path: Option<String>,
+}
+
+impl SimOptions {
+    /// Resolve every `SPADA_*` environment variable once. This is the
+    /// **only** function in the crate that reads simulation options
+    /// from the environment; everything downstream takes the value.
+    pub fn from_env() -> SimOptions {
+        SimOptions {
+            threads: std::env::var("SPADA_THREADS")
+                .ok()
+                .and_then(|s| s.trim().parse::<usize>().ok())
+                .map(|n| n.max(1)),
+            no_vectorize: std::env::var_os("SPADA_NO_VEC").is_some(),
+            // A positive word count caps every endpoint; unset,
+            // unparsable or zero means "leave unbounded".
+            buf_cap: std::env::var("SPADA_BUF_CAP")
+                .ok()
+                .and_then(|s| s.trim().parse::<u64>().ok())
+                .filter(|&n| n > 0),
+            link_buffer_words: None,
+            credit_latency: None,
+            // 0, unset or unparsable disables the watchdog (0 would
+            // abort every run before its first event — never useful,
+            // so it reads as "off").
+            timeout_ms: std::env::var("SPADA_TIMEOUT_MS")
+                .ok()
+                .and_then(|s| match s.trim().parse::<u64>() {
+                    Ok(0) | Err(_) => None,
+                    Ok(ms) => Some(ms),
+                }),
+            faults: match std::env::var("SPADA_FAULTS") {
+                Ok(s) if !s.trim().is_empty() => Some(match FaultPlan::parse(&s) {
+                    Ok(p) => p,
+                    // Preserved so the run (not the config constructor)
+                    // rejects it — a typo must never run clean.
+                    Err(e) => FaultPlan { invalid: Some(e), ..FaultPlan::default() },
+                }),
+                _ => None,
+            },
+            tracing: false,
+            trace_path: std::env::var("SPADA_TRACE").ok().filter(|s| !s.is_empty()),
+        }
+    }
+
+    /// Builder: worker-thread count (1 = classic single-queue loop).
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = Some(n.max(1));
+        self
+    }
+
+    /// Builder: enable/disable the batched DSD engine.
+    pub fn vectorize(mut self, on: bool) -> Self {
+        self.no_vectorize = !on;
+        self
+    }
+
+    /// Builder: finite endpoint buffer capacity in words.
+    pub fn buf_cap(mut self, cap: u64) -> Self {
+        self.buf_cap = Some(cap);
+        self
+    }
+
+    /// Builder: credit-return latency in cycles.
+    pub fn credit_latency(mut self, cycles: u64) -> Self {
+        self.credit_latency = Some(cycles);
+        self
+    }
+
+    /// Builder: wall-clock watchdog in milliseconds.
+    pub fn timeout_ms(mut self, ms: u64) -> Self {
+        self.timeout_ms = Some(ms);
+        self
+    }
+
+    /// Builder: fault-injection plan.
+    pub fn faults(mut self, plan: FaultPlan) -> Self {
+        self.faults = Some(plan);
+        self
+    }
+
+    /// Builder: capture a cycle-accurate trace.
+    pub fn tracing(mut self, on: bool) -> Self {
+        self.tracing = on;
+        self
+    }
+
+    /// The effective worker-thread count: the explicit value, else the
+    /// host's available parallelism.
+    pub fn resolved_threads(&self) -> usize {
+        self.threads
+            .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+            .max(1)
+    }
+
+    /// Whether trace capture should be armed (an output path implies
+    /// capture).
+    pub fn tracing_enabled(&self) -> bool {
+        self.tracing || self.trace_path.is_some()
+    }
+
+    /// Fold the config-mirroring options into `cfg`. Each field is
+    /// applied only when the config still holds its pristine default,
+    /// so an explicitly configured `MachineConfig` wins over these
+    /// options (see the module docs on precedence).
+    pub fn apply_defaults_to(&self, cfg: &mut MachineConfig) {
+        if cfg.endpoint_capacity_words.is_none() {
+            cfg.endpoint_capacity_words = self.buf_cap;
+        }
+        if cfg.link_buffer_words.is_none() {
+            cfg.link_buffer_words = self.link_buffer_words;
+        }
+        if cfg.credit_latency_cycles == 0 {
+            if let Some(l) = self.credit_latency {
+                cfg.credit_latency_cycles = l;
+            }
+        }
+        if cfg.timeout_ms.is_none() {
+            cfg.timeout_ms = self.timeout_ms;
+        }
+        if cfg.faults.is_empty() {
+            if let Some(f) = &self.faults {
+                cfg.faults = f.clone();
+            }
+        }
+    }
+}
+
+/// `SPADA_BLESS`: re-bless the golden cycle-identity snapshots. Test
+/// harness plumbing, not a simulation option — it lives here so every
+/// `SPADA_*` environment read stays at this one resolve site.
+pub fn env_bless() -> bool {
+    std::env::var_os("SPADA_BLESS").is_some()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_fully_explicit() {
+        let o = SimOptions::default();
+        assert_eq!(o.threads, None);
+        assert!(!o.no_vectorize);
+        assert_eq!(o.buf_cap, None);
+        assert_eq!(o.timeout_ms, None);
+        assert!(o.faults.is_none());
+        assert!(!o.tracing_enabled());
+        assert!(o.resolved_threads() >= 1);
+    }
+
+    #[test]
+    fn builder_round_trip() {
+        let o = SimOptions::default()
+            .threads(2)
+            .vectorize(false)
+            .buf_cap(8)
+            .credit_latency(5)
+            .timeout_ms(100)
+            .tracing(true);
+        assert_eq!(o.threads, Some(2));
+        assert!(o.no_vectorize);
+        assert_eq!(o.buf_cap, Some(8));
+        assert_eq!(o.credit_latency, Some(5));
+        assert_eq!(o.timeout_ms, Some(100));
+        assert!(o.tracing_enabled());
+        assert_eq!(o.resolved_threads(), 2);
+    }
+
+    #[test]
+    fn apply_defaults_never_clobbers_explicit_config() {
+        let mut cfg = MachineConfig::with_grid(4, 4);
+        cfg.endpoint_capacity_words = Some(2);
+        cfg.timeout_ms = Some(7);
+        cfg.credit_latency_cycles = 3;
+        let opts = SimOptions::default().buf_cap(8).timeout_ms(100).credit_latency(9);
+        opts.apply_defaults_to(&mut cfg);
+        assert_eq!(cfg.endpoint_capacity_words, Some(2));
+        assert_eq!(cfg.timeout_ms, Some(7));
+        assert_eq!(cfg.credit_latency_cycles, 3);
+    }
+
+    #[test]
+    fn apply_defaults_fills_pristine_fields() {
+        let mut cfg = MachineConfig::with_grid(4, 4);
+        assert_eq!(cfg.endpoint_capacity_words, None, "with_grid must be env-free");
+        assert_eq!(cfg.timeout_ms, None);
+        assert!(cfg.faults.is_empty());
+        let opts = SimOptions::default()
+            .buf_cap(8)
+            .timeout_ms(100)
+            .credit_latency(9)
+            .faults(FaultPlan::parse("pe(1,0):halt@5").unwrap());
+        opts.apply_defaults_to(&mut cfg);
+        assert_eq!(cfg.endpoint_capacity_words, Some(8));
+        assert_eq!(cfg.timeout_ms, Some(100));
+        assert_eq!(cfg.credit_latency_cycles, 9);
+        assert_eq!(cfg.faults.specs.len(), 1);
+    }
+}

@@ -67,6 +67,7 @@ use super::fault::{
 };
 use super::flowctl::EndpointBuf;
 use super::metrics::{Metrics, RunReport};
+use super::options::SimOptions;
 use super::plan::{
     FlowError, PAction, PDsd, POp, PTaskKind, RoutingPlan, ACTIONS_EMPTY, SLOT_NONE, TASK_NONE,
 };
@@ -461,15 +462,6 @@ fn lock_shard(m: &Mutex<ShardState>) -> std::sync::MutexGuard<'_, ShardState> {
     m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
 }
 
-/// Worker-count default: `SPADA_THREADS` if set, else the host's
-/// available parallelism.
-fn default_threads() -> usize {
-    match std::env::var("SPADA_THREADS").ok().and_then(|s| s.trim().parse::<usize>().ok()) {
-        Some(n) => n.max(1),
-        None => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
-    }
-}
-
 /// The WSE-2 simulator. Construct with [`Simulator::new`], feed inputs
 /// with [`Simulator::set_input`], [`Simulator::run`], then read outputs.
 pub struct Simulator {
@@ -527,14 +519,36 @@ impl Simulator {
         Self::with_plan(cfg, prog, plan)
     }
 
-    /// Build a simulator around an existing precompiled plan. The plan
-    /// must have been built from exactly this `(prog, cfg)` pair (the
-    /// geometry is cross-checked; the rest is the caller's contract).
+    /// Build a simulator around an existing precompiled plan, with the
+    /// runtime options resolved from the environment once
+    /// ([`SimOptions::from_env`] — the historical `SPADA_*` behaviour,
+    /// through the single resolve site). Batch jobs with per-job
+    /// options use [`Simulator::with_plan_opts`] instead.
     pub fn with_plan(
         cfg: MachineConfig,
         prog: MachineProgram,
         plan: Arc<RoutingPlan>,
     ) -> Result<Simulator, SimError> {
+        Self::with_plan_opts(cfg, prog, plan, &SimOptions::from_env())
+    }
+
+    /// Build a simulator around an existing precompiled plan with
+    /// **explicit** runtime options — the environment is never
+    /// consulted, so concurrent simulations with different options
+    /// coexist in one process (the batch-fleet prerequisite). The plan
+    /// must have been built from exactly this `(prog, cfg)` pair (the
+    /// geometry is cross-checked; the rest is the caller's contract).
+    ///
+    /// Options mirroring a config field (buffer capacity, credit
+    /// latency, watchdog, faults) fill only pristine config defaults —
+    /// an explicitly configured `cfg` wins (see [`SimOptions`]).
+    pub fn with_plan_opts(
+        mut cfg: MachineConfig,
+        prog: MachineProgram,
+        plan: Arc<RoutingPlan>,
+        opts: &SimOptions,
+    ) -> Result<Simulator, SimError> {
+        opts.apply_defaults_to(&mut cfg);
         let errs = prog.validate(&cfg);
         if !errs.is_empty() {
             return Err(SimError::Validation(errs));
@@ -579,10 +593,10 @@ impl Simulator {
             pes,
             inputs: HashMap::new(),
             ran: false,
-            vec_enabled: std::env::var_os("SPADA_NO_VEC").is_none(),
-            threads: default_threads(),
+            vec_enabled: !opts.no_vectorize,
+            threads: opts.resolved_threads(),
             vec_ops: 0,
-            tracing: false,
+            tracing: opts.tracing_enabled(),
             trace_raw: Vec::new(),
             epoch_raw: Vec::new(),
             trace: None,

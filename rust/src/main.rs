@@ -7,14 +7,15 @@
 //!   check <kernel|file.spada> [--bind ...] [--grid WxH]
 //!                    (static dataflow verification, no simulation)
 //!   run <kernel>     [--bind ...]   (compile + simulate with random input)
-//!   bench --exp <table2|fig4..fig9|verify|all> [--quick]
+//!   batch [--jobs FILE|-] [--pool N] (JSONL jobs in, one result row per job out)
+//!   bench --exp <table2|fig4..fig9|sim|fleet|verify|all> [--quick]
 //!   loc              (Table II shortcut)
 
 use anyhow::{anyhow, bail, Context, Result};
 use spada::frontend::{lower_stencil, parse_stencil, stencil_source};
 use spada::harness;
 use spada::kernels;
-use spada::machine::MachineConfig;
+use spada::machine::{MachineConfig, SimOptions};
 use spada::passes::Options;
 use spada::sem::instantiate;
 use spada::spada::pretty;
@@ -58,6 +59,9 @@ impl Args {
                             | "faults"
                             | "kernel"
                             | "out"
+                            | "jobs"
+                            | "pool"
+                            | "budget"
                     )
                 {
                     flags.push((name.to_string(), it.next()));
@@ -114,21 +118,37 @@ fn options(args: &Args) -> Options {
 
 /// Compile a library kernel at the grid its binds imply and stage
 /// deterministic noise into every input — the shared front half of
-/// `spada run` and `spada profile`.
-fn compile_and_stage(name: &str, args: &Args) -> Result<(MachineConfig, spada::machine::Simulator)> {
+/// `spada run` and `spada profile`. The `SPADA_*` environment is
+/// resolved exactly once here, into a [`SimOptions`] value that CLI
+/// flags then refine; everything downstream takes the options
+/// explicitly.
+fn compile_and_stage(
+    name: &str,
+    args: &Args,
+) -> Result<(MachineConfig, spada::machine::Simulator, SimOptions)> {
     let binds = parse_binds(args.flag("bind"))?;
     let bind_refs: Vec<(&str, i64)> = binds.iter().map(|(k, v)| (k.as_str(), *v)).collect();
     let (w, h) = grid_of(args, &binds);
-    let mut cfg = MachineConfig::with_grid(w, h);
+    let mut opts = SimOptions::from_env();
     // --faults SPEC overrides the ambient SPADA_FAULTS plan (see
     // machine::fault for the grammar). Parse errors are loud here so a
     // typo never runs clean and reports success.
     if let Some(spec) = args.flag("faults") {
-        cfg.faults =
-            spada::machine::FaultPlan::parse(spec).map_err(|e| anyhow!("--faults: {e}"))?;
+        opts.faults =
+            Some(spada::machine::FaultPlan::parse(spec).map_err(|e| anyhow!("--faults: {e}"))?);
     }
+    // --trace PATH wins over SPADA_TRACE when both are given.
+    if let Some(path) = args.flag("trace") {
+        opts.trace_path = Some(path.to_string());
+    }
+    let mut cfg = MachineConfig::with_grid(w, h);
+    // Fold the resolved options into the compile config so compile-time
+    // checks (e.g. the static credit pass under a buffer capacity) see
+    // the same machine the simulator will run — the historical
+    // behaviour, when `with_grid` itself read the environment.
+    opts.apply_defaults_to(&mut cfg);
     let ck = kernels::compile(name, &bind_refs, &cfg, &options(args))?;
-    let mut sim = ck.simulator()?;
+    let mut sim = ck.simulator_with(&opts)?;
     // Fill every input with deterministic noise.
     let io: Vec<(String, usize)> = sim
         .program()
@@ -142,7 +162,7 @@ fn compile_and_stage(name: &str, args: &Args) -> Result<(MachineConfig, spada::m
         let data: Vec<f32> = (0..len).map(|_| rng.next_f32()).collect();
         let _ = sim.set_input(&arg, &data);
     }
-    Ok((cfg, sim))
+    Ok((cfg, sim, opts))
 }
 
 /// Read back every declared output of a wedged run (`spada run
@@ -271,7 +291,7 @@ fn real_main() -> Result<()> {
         "run" => {
             let name = args.positional.get(1).ok_or_else(|| anyhow!("run <kernel>"))?;
             let json = args.has("json");
-            let (cfg, mut sim) = match compile_and_stage(name, &args) {
+            let (cfg, mut sim, opts) = match compile_and_stage(name, &args) {
                 Ok(v) => v,
                 Err(e) => {
                     // Pre-run failures (validation, routing, bad binds)
@@ -291,14 +311,10 @@ fn real_main() -> Result<()> {
             };
             // --trace PATH (or SPADA_TRACE=PATH) arms cycle-accurate
             // capture; the Chrome trace-event JSON is written after the
-            // run. Tracing never changes simulated cycles.
-            let trace_path = args
-                .flag("trace")
-                .map(str::to_string)
-                .or_else(|| std::env::var("SPADA_TRACE").ok().filter(|s| !s.is_empty()));
-            if trace_path.is_some() {
-                sim.set_tracing(true);
-            }
+            // run. Tracing never changes simulated cycles. Both sources
+            // were already folded into the resolved options, which armed
+            // the simulator — only the output path is needed here.
+            let trace_path = opts.trace_path.clone();
             let report = match sim.run() {
                 Ok(r) => r,
                 Err(e) => {
@@ -367,7 +383,7 @@ fn real_main() -> Result<()> {
                 Some(t) => t.parse().context("--top")?,
                 None => 8,
             };
-            let (cfg, mut sim) = compile_and_stage(name, &args)?;
+            let (cfg, mut sim, _opts) = compile_and_stage(name, &args)?;
             sim.set_tracing(true);
             let report = sim.run()?;
             let trace = sim.take_trace().expect("tracing was enabled");
@@ -542,6 +558,7 @@ fn real_main() -> Result<()> {
             };
             harness::faults::campaign(&opts)
         }
+        "batch" => run_batch_cmd(&args),
         "loc" => harness::run("table2", false),
         "help" => {
             print_help();
@@ -552,6 +569,110 @@ fn real_main() -> Result<()> {
             bail!("unknown command {other}");
         }
     }
+}
+
+/// `spada batch`: JSONL job specs in, one JSONL result row per job
+/// out, in input order. Jobs run on a worker pool (`--pool N`) over
+/// the epoch-parallel engine under the `outer × inner ≤ --budget`
+/// thread policy; same-shape jobs share one compilation through the
+/// fleet plan cache. Output is byte-identical at any pool width.
+fn run_batch_cmd(args: &Args) -> Result<()> {
+    use spada::fleet::{self, FleetOptions, JobResult, JobSpec, PlanCache};
+    use std::io::{Read as _, Write as _};
+
+    let text = match args.flag("jobs") {
+        Some("-") | None => {
+            let mut buf = String::new();
+            std::io::stdin().read_to_string(&mut buf).context("reading job specs from stdin")?;
+            buf
+        }
+        Some(path) => std::fs::read_to_string(path).context(path.to_string())?,
+    };
+    let pool: usize = match args.flag("pool") {
+        Some(p) => p.parse::<usize>().context("--pool")?.max(1),
+        None => 1,
+    };
+    let mut fleet_opts = FleetOptions { pool, ..FleetOptions::default() };
+    if let Some(b) = args.flag("budget") {
+        fleet_opts.budget = b.parse::<usize>().context("--budget")?.max(1);
+    }
+
+    // Parse every line up front; malformed lines become error rows at
+    // their input position, never batch aborts.
+    let parsed = fleet::parse_jobs(&text);
+    let specs: Vec<JobSpec> = parsed.iter().filter_map(|r| r.as_ref().ok().cloned()).collect();
+    let spec_pos: Vec<usize> = parsed
+        .iter()
+        .enumerate()
+        .filter_map(|(i, r)| r.is_ok().then_some(i))
+        .collect();
+
+    let mut writer: Box<dyn std::io::Write + Send> = match args.flag("out") {
+        Some(path) => Box::new(std::io::BufWriter::new(
+            std::fs::File::create(path).context(path.to_string())?,
+        )),
+        None => Box::new(std::io::BufWriter::new(std::io::stdout())),
+    };
+    // Streaming merge of run rows with parse-error rows: before row j
+    // of the valid stream, flush every earlier input line — all
+    // necessarily parse errors, since earlier valid rows arrive first.
+    let mut cursor = 0usize; // next input line (within `parsed`) to emit
+    let mut valid_idx = 0usize;
+    let mut write_err: Option<std::io::Error> = None;
+    let flush_errors_until =
+        |upto: usize, cursor: &mut usize, w: &mut dyn std::io::Write| -> std::io::Result<()> {
+            while *cursor < upto {
+                if let Err((id, msg)) = &parsed[*cursor] {
+                    w.write_all(
+                        JobResult::failed(id, "", "", "spec", msg.clone()).to_jsonl().as_bytes(),
+                    )?;
+                }
+                *cursor += 1;
+            }
+            Ok(())
+        };
+
+    let cache = PlanCache::new();
+    let t0 = std::time::Instant::now();
+    let summary = fleet::run_batch(&specs, &fleet_opts, &cache, |row| {
+        if write_err.is_some() {
+            return;
+        }
+        let pos = spec_pos[valid_idx];
+        valid_idx += 1;
+        let r = flush_errors_until(pos, &mut cursor, writer.as_mut())
+            .and_then(|()| writer.write_all(row.to_jsonl().as_bytes()))
+            .map(|()| cursor = pos + 1);
+        if let Err(e) = r {
+            write_err = Some(e);
+        }
+    });
+    if let Some(e) = write_err {
+        return Err(e).context("writing result rows");
+    }
+    flush_errors_until(parsed.len(), &mut cursor, writer.as_mut())
+        .and_then(|()| writer.flush())
+        .context("writing result rows")?;
+    drop(writer);
+
+    let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
+    let parse_errors = parsed.len() - specs.len();
+    // Operator summary on stderr: stdout is the result stream.
+    eprintln!(
+        "batch: {} job(s) in {:.1} ms ({:.1} sims/s) — {} ok, {} error row(s) ({} parse), \
+         plan cache {} compile(s) / {} lookup(s), pool {} x {} inner thread(s)",
+        parsed.len(),
+        wall_s * 1e3,
+        parsed.len() as f64 / wall_s,
+        summary.ok,
+        summary.errors + parse_errors,
+        parse_errors,
+        summary.compiles,
+        summary.lookups,
+        fleet_opts.pool,
+        fleet_opts.inner_threads(),
+    );
+    Ok(())
 }
 
 fn print_help() {
@@ -583,16 +704,26 @@ fn print_help() {
          \x20 spada profile <kernel> [--bind ...] [--grid WxH] [--format table|json] [--top N]\n\
          \x20   (cycle-accurate profile: per-PE busy/stall/idle, hot PEs/links, link\n\
          \x20    occupancy histogram and an ASCII utilization heatmap)\n\
-         \x20 spada bench [--exp table2|fig4|fig5|fig6|fig7|fig8|fig9|sim|verify|all] [--quick]\n\
+         \x20 spada bench [--exp table2|fig4|fig5|fig6|fig7|fig8|fig9|sim|fleet|verify|all] [--quick]\n\
          \x20   (--exp sim sweeps the six kernels 4x4..128x128 at 1 and 4 worker\n\
          \x20    threads and writes BENCH_sim.json; rows record threads + host parallelism)\n\
          \x20 spada bench --compare BASELINE.json [--current CURRENT.json] [--threshold 0.25]\n\
          \x20   (regression gate: fails if any kernel's events/s drops more than the\n\
          \x20    threshold vs the baseline; without --current it runs the sim sweep first)\n\
+         \x20 spada batch [--jobs FILE|-] [--pool N] [--budget N] [--out FILE]\n\
+         \x20   (batch service: JSONL job specs in [default stdin], one JSONL result row\n\
+         \x20    per job out [default stdout], in input order. Spec keys: kernel (required),\n\
+         \x20    id, g, k, seed, buf_cap, credit_latency, faults, timeout_ms, threads,\n\
+         \x20    no_vec. Same-shape jobs compile once via the plan cache; a failing job\n\
+         \x20    becomes an error row, never a batch abort; rows are byte-identical at any\n\
+         \x20    --pool width. Thread policy: pool x inner <= budget [default: host\n\
+         \x20    parallelism]. `spada bench --exp fleet` benchmarks this engine)\n\
          \x20 spada loc\n\
          \n\
          Ablation flags: --no-fusion --no-recycling --no-copy-elim --no-check\n\
-         Env vars: SPADA_THREADS=N  simulator worker threads (default: host parallelism;\n\
+         Env vars (resolved once per process into SimOptions — see docs/sim-options.md;\n\
+         `spada batch` jobs ignore them, their specs carry the options explicitly):\n\
+         \x20         SPADA_THREADS=N  simulator worker threads (default: host parallelism;\n\
          \x20                       1 = classic single-threaded loop, results bit-identical)\n\
          \x20         SPADA_NO_VEC=1  force the per-element DSD interpreter (bit-identical)\n\
          \x20         SPADA_BUF_CAP=N finite endpoint buffers: N words per (PE, color) with\n\

@@ -1,0 +1,256 @@
+//! Batch fleet engine contracts (the `spada batch` service surface):
+//!
+//! 1. **Pool-width determinism** — the same job list yields
+//!    byte-identical result rows at pool widths 1, 2 and 4, including
+//!    jobs with per-job option overrides (finite buffers, faults,
+//!    pinned threads).
+//! 2. **Per-job isolation** — an unknown-kernel job and a 1 ms-watchdog
+//!    job become error rows; every sibling still completes.
+//! 3. **Compile-once** — N jobs over S distinct shapes perform exactly
+//!    S compiles and N lookups, and exactly the first job of each shape
+//!    (in input order) is labeled the cache miss.
+//! 4. **Spec JSONL** — the flat-object job grammar round-trips every
+//!    override and rejects garbage without aborting the stream.
+
+use spada::fleet::{parse_jobs, run_batch, FleetOptions, JobSpec, PlanCache};
+
+/// Collect the emitted rows (in emission order) plus the summary.
+fn run(jobs: &[JobSpec], pool: usize, cache: &PlanCache) -> (Vec<String>, spada::fleet::BatchSummary) {
+    let mut rows = Vec::new();
+    let fleet = FleetOptions { pool, budget: pool * 2 };
+    let summary = run_batch(jobs, &fleet, cache, |r| rows.push(r.to_jsonl()));
+    (rows, summary)
+}
+
+/// A mixed workload: duplicate shapes, differing seeds, a finite-buffer
+/// variant, a no-vectorize variant, a pinned-thread variant and a
+/// single-fault variant. No watchdog jobs here — wall-clock outcomes
+/// are the one thing the determinism contract cannot cover.
+fn mixed_jobs() -> Vec<JobSpec> {
+    let mut jobs = Vec::new();
+    for (i, (kernel, g, seed)) in [
+        ("broadcast", 4, 1u64),
+        ("chain_reduce", 4, 2),
+        ("broadcast", 4, 3), // same shape as job 0, different inputs
+        ("tree_reduce", 4, 1),
+        ("gemv", 4, 1),
+        ("chain_reduce", 4, 2), // exact duplicate of job 1
+    ]
+    .iter()
+    .enumerate()
+    {
+        jobs.push(JobSpec {
+            id: format!("j{i}"),
+            kernel: kernel.to_string(),
+            g: *g,
+            k: 8,
+            seed: *seed,
+            ..JobSpec::default()
+        });
+    }
+    jobs.push(JobSpec {
+        id: "capped".into(),
+        kernel: "gemv".into(),
+        g: 4,
+        k: 8,
+        seed: 1,
+        buf_cap: Some(64),
+        ..JobSpec::default()
+    });
+    jobs.push(JobSpec {
+        id: "novec".into(),
+        kernel: "tree_reduce".into(),
+        g: 4,
+        k: 8,
+        seed: 1,
+        no_vec: true,
+        ..JobSpec::default()
+    });
+    jobs.push(JobSpec {
+        id: "pinned".into(),
+        kernel: "broadcast".into(),
+        g: 4,
+        k: 8,
+        seed: 1,
+        threads: Some(3),
+        ..JobSpec::default()
+    });
+    jobs.push(JobSpec {
+        id: "faulted".into(),
+        kernel: "broadcast".into(),
+        g: 4,
+        k: 8,
+        seed: 1,
+        faults: Some("link(0,0,E):slow@10+5".into()),
+        ..JobSpec::default()
+    });
+    jobs
+}
+
+#[test]
+fn rows_are_byte_identical_at_pool_widths_1_2_4() {
+    let jobs = mixed_jobs();
+    let mut streams = Vec::new();
+    for pool in [1usize, 2, 4] {
+        // Fresh cache per width: every run does the same compile work.
+        let (rows, summary) = run(&jobs, pool, &PlanCache::new());
+        assert_eq!(summary.jobs, jobs.len(), "pool {pool} dropped jobs");
+        assert_eq!(summary.errors, 0, "pool {pool} produced error rows");
+        streams.push((pool, rows.concat()));
+    }
+    let (_, reference) = &streams[0];
+    for (pool, stream) in &streams[1..] {
+        assert_eq!(
+            stream, reference,
+            "pool {pool} rows differ from pool 1 rows (determinism contract)"
+        );
+    }
+    // Rows carry simulated observables only — wall-clock never leaks in.
+    assert!(!reference.contains("wall"), "rows must not contain wall-clock fields");
+}
+
+#[test]
+fn error_jobs_become_rows_and_siblings_complete() {
+    let jobs = vec![
+        JobSpec { id: "ok1".into(), kernel: "broadcast".into(), g: 4, k: 8, ..JobSpec::default() },
+        JobSpec { id: "bad".into(), kernel: "no_such_kernel".into(), ..JobSpec::default() },
+        JobSpec { id: "ok2".into(), kernel: "chain_reduce".into(), g: 4, k: 8, ..JobSpec::default() },
+        // A deliberately impossible watchdog: a 1024-PE GEMV cannot
+        // finish inside 1 ms of wall clock, so the watchdog fires and
+        // the row must carry the *normalized* timeout message (the
+        // engine's own message embeds progress cycles, which vary).
+        JobSpec {
+            id: "strangled".into(),
+            kernel: "gemv".into(),
+            g: 32,
+            k: 8,
+            timeout_ms: Some(1),
+            ..JobSpec::default()
+        },
+        JobSpec { id: "ok3".into(), kernel: "tree_reduce".into(), g: 4, k: 8, ..JobSpec::default() },
+    ];
+    let (rows, summary) = run(&jobs, 4, &PlanCache::new());
+    assert_eq!(rows.len(), 5);
+    assert_eq!(summary.ok, 3);
+    assert_eq!(summary.errors, 2);
+    // Input order is preserved even when the middle jobs fail.
+    for (i, id) in ["ok1", "bad", "ok2", "strangled", "ok3"].iter().enumerate() {
+        assert!(rows[i].contains(&format!("\"id\":\"{id}\"")), "row {i} is not {id}: {}", rows[i]);
+    }
+    assert!(rows[0].contains("\"ok\":true"));
+    assert!(rows[1].contains("\"ok\":false") && rows[1].contains("\"kind\":\"spec\""));
+    assert!(rows[2].contains("\"ok\":true"));
+    assert!(
+        rows[3].contains("\"kind\":\"timeout\"")
+            && rows[3].contains("wall-clock watchdog fired"),
+        "timeout row must be normalized: {}",
+        rows[3]
+    );
+    assert!(rows[4].contains("\"ok\":true"));
+}
+
+#[test]
+fn each_distinct_shape_compiles_exactly_once() {
+    // 12 jobs, 3 distinct shapes. Per-job run options (buffer caps)
+    // must not split the cache key; seeds obviously must not either.
+    let shapes = ["broadcast", "chain_reduce", "tree_reduce"];
+    let mut jobs = Vec::new();
+    for round in 0..4u64 {
+        for kernel in shapes {
+            jobs.push(JobSpec {
+                id: format!("{kernel}-{round}"),
+                kernel: kernel.to_string(),
+                g: 4,
+                k: 8,
+                seed: round,
+                buf_cap: if round == 3 { Some(128) } else { None },
+                ..JobSpec::default()
+            });
+        }
+    }
+    let cache = PlanCache::new();
+    let (rows, summary) = run(&jobs, 4, &cache);
+    assert_eq!(summary.compiles, 3, "one compile per distinct shape");
+    assert_eq!(summary.lookups, 12, "every job consults the cache");
+    assert_eq!(cache.compiles(), 3);
+    assert_eq!(cache.len(), 3);
+    // Exactly the first job of each shape (input order) is the miss.
+    let misses: Vec<bool> = rows.iter().map(|r| r.contains("\"cache\":\"miss\"")).collect();
+    let want: Vec<bool> = (0..12).map(|i| i < 3).collect();
+    assert_eq!(misses, want, "hit/miss labels must follow input order, not the compile race");
+}
+
+#[test]
+fn job_spec_jsonl_round_trips_and_rejects_garbage() {
+    let text = concat!(
+        "# fleet smoke\n",
+        "\n",
+        "{\"kernel\":\"gemv\",\"g\":8,\"k\":16,\"seed\":7}\n",
+        "{\"id\":\"x\",\"kernel\":\"broadcast\",\"buf_cap\":64,\"credit_latency\":2,",
+        "\"timeout_ms\":5000,\"threads\":2,\"no_vec\":true,",
+        "\"faults\":\"pe(1,0):halt@50\",\"ignored_key\":\"fine\"}\n",
+        "{\"kernel\":\"gemv\",\"g\":0}\n",
+        "{\"g\":4}\n",
+        "not json at all\n",
+    );
+    let parsed = parse_jobs(text);
+    assert_eq!(parsed.len(), 5);
+
+    let a = parsed[0].as_ref().unwrap();
+    assert_eq!((a.id.as_str(), a.kernel.as_str(), a.g, a.k, a.seed), ("job-3", "gemv", 8, 16, 7));
+
+    let b = parsed[1].as_ref().unwrap();
+    assert_eq!(b.id, "x");
+    assert_eq!(b.buf_cap, Some(64));
+    assert_eq!(b.credit_latency, Some(2));
+    assert_eq!(b.timeout_ms, Some(5000));
+    assert_eq!(b.threads, Some(2));
+    assert!(b.no_vec);
+    assert_eq!(b.faults.as_deref(), Some("pe(1,0):halt@50"));
+
+    // Bad lines keep their line-derived ids so row K still answers for
+    // input line K.
+    assert_eq!(parsed[2].as_ref().unwrap_err().0, "job-5");
+    assert_eq!(parsed[3].as_ref().unwrap_err().0, "job-6");
+    assert_eq!(parsed[4].as_ref().unwrap_err().0, "job-7");
+}
+
+/// The single-resolve-site rule (docs/sim-options.md): `SPADA_*`
+/// environment reads live in `machine/options.rs` and nowhere else.
+/// Ambient-env reads scattered through the engine are exactly what
+/// made per-job option isolation impossible before the fleet.
+#[test]
+fn env_reads_stay_in_the_options_module() {
+    fn walk(dir: &std::path::Path, offenders: &mut Vec<String>) {
+        for entry in std::fs::read_dir(dir).expect("source tree is readable") {
+            let path = entry.expect("dir entry").path();
+            if path.is_dir() {
+                walk(&path, offenders);
+            } else if path.extension().is_some_and(|e| e == "rs")
+                && !path.ends_with("machine/options.rs")
+            {
+                let src = std::fs::read_to_string(&path).expect("source file reads");
+                if src.contains("env::var") {
+                    offenders.push(path.display().to_string());
+                }
+            }
+        }
+    }
+    let src = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("src");
+    let mut offenders = Vec::new();
+    walk(&src, &mut offenders);
+    assert!(
+        offenders.is_empty(),
+        "environment reads outside machine/options.rs (route them through \
+         SimOptions::from_env): {offenders:?}"
+    );
+}
+
+#[test]
+fn grid_alias_and_defaults() {
+    let spec = JobSpec::parse("{\"kernel\":\"tree_reduce\",\"grid\":16}").unwrap();
+    assert_eq!(spec.g, 16);
+    let spec = JobSpec::parse("{\"kernel\":\"tree_reduce\"}").unwrap();
+    assert_eq!((spec.g, spec.k), (4, 8));
+    assert!(spec.buf_cap.is_none() && spec.faults.is_none() && spec.timeout_ms.is_none());
+}

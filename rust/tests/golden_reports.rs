@@ -45,7 +45,7 @@ fn check_golden(name: &str, report: &RunReport) {
     // pinned to the unbounded machine, so skip — never bootstrap or
     // compare — when a cap is configured (the SPADA_BUF_CAP CI leg
     // gates on output equality through the equivalence suites instead).
-    if spada::machine::flowctl::env_buf_cap().is_some() {
+    if spada::machine::SimOptions::from_env().buf_cap.is_some() {
         eprintln!("{name}: skipped (SPADA_BUF_CAP set; goldens pin the unbounded machine)");
         return;
     }
@@ -53,7 +53,7 @@ fn check_golden(name: &str, report: &RunReport) {
     let dir = golden_dir();
     std::fs::create_dir_all(&dir).unwrap();
     let path = dir.join(format!("{name}.golden"));
-    let bless = std::env::var("SPADA_BLESS").is_ok();
+    let bless = spada::machine::options::env_bless();
     if bless || !path.exists() {
         std::fs::write(&path, &got).unwrap();
         return;
