@@ -1,4 +1,5 @@
-//! The fleet plan cache: one compilation per distinct kernel shape.
+//! The fleet plan cache: one compilation per distinct kernel shape,
+//! bounded for long-lived processes.
 //!
 //! A batch of N jobs typically contains far fewer *shapes* — distinct
 //! (kernel, binds, machine-config fingerprint) triples — than jobs.
@@ -15,34 +16,68 @@
 //! entry's slot lock; latecomers block on that lock and then clone the
 //! finished result (success *or* failure — a kernel that fails to
 //! compile fails every job of its shape without recompiling per job).
+//!
+//! **Bounding.** One batch per process can run unbounded
+//! ([`PlanCache::new`]), but a day-long `spada serve` process cannot:
+//! distinct shapes accumulate forever. [`PlanCache::bounded`] accepts a
+//! [`CacheBudget`] (entry-count and/or approximate-byte ceilings,
+//! resolved like every other knob through `machine/options.rs`) and
+//! evicts least-recently-used entries past it. Eviction prefers cached
+//! *errors* over successes: an error entry is one failed shape's
+//! diagnostic, cheap to recreate, and — crucially — may be *transient*
+//! (a compile panic from a resource blip), so evicting it makes the
+//! shape retryable; a success entry is a whole routing plan that other
+//! jobs are actively sharing. Entries mid-compile are never evicted.
+//! Counters reconcile exactly: `hits + misses == lookups` and
+//! `evictions <= misses` (every eviction removes an entry some miss
+//! created).
+//!
+//! [`RoutingPlan`]: crate::machine::RoutingPlan
 
 use crate::kernels::{self, CompiledKernel};
-use crate::machine::MachineConfig;
+use crate::machine::{CacheBudget, MachineConfig};
 use crate::passes::Options;
 use std::collections::HashMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, TryLockError};
 
 /// Compile-once cache over kernel shapes. Cheap to share: all methods
 /// take `&self`, so one instance serves the whole worker pool.
 #[derive(Default)]
 pub struct PlanCache {
     entries: Mutex<HashMap<String, Arc<Entry>>>,
+    budget: CacheBudget,
+    /// Monotone LRU clock; every lookup stamps its entry.
+    tick: AtomicU64,
     lookups: AtomicU64,
     compiles: AtomicU64,
+    evictions: AtomicU64,
 }
 
 /// One shape's slot. `None` until the winning thread fills it; the
-/// compile runs under the slot lock so a shape is never compiled twice.
+/// compile runs under the slot lock so a shape is never compiled twice
+/// while it stays cached (an evicted shape recompiles on next touch).
 #[derive(Default)]
 struct Entry {
     slot: Mutex<Option<Result<Arc<CompiledKernel>, String>>>,
+    /// LRU stamp of the most recent lookup that touched this entry.
+    last_used: AtomicU64,
+    /// Approximate bytes charged against [`CacheBudget::max_bytes`];
+    /// zero until the compile finishes.
+    cost: AtomicU64,
 }
 
 impl PlanCache {
+    /// An unbounded cache — the one-batch-per-process configuration.
     pub fn new() -> PlanCache {
         PlanCache::default()
+    }
+
+    /// A cache bounded by `budget`, for long-lived processes. With an
+    /// unbounded budget this is identical to [`PlanCache::new`].
+    pub fn bounded(budget: CacheBudget) -> PlanCache {
+        PlanCache { budget, ..PlanCache::default() }
     }
 
     /// The cache key of a shape: kernel name, meta-parameter bindings,
@@ -75,7 +110,9 @@ impl PlanCache {
     /// Concurrent callers of the same shape block until the winner
     /// finishes, then share its result. Compile errors (and compile
     /// panics, defused so they can never poison the slot) are cached
-    /// like successes.
+    /// like successes — and, like successes, charged to the budget and
+    /// evictable, so a transiently failing shape becomes retryable
+    /// once it ages out.
     pub fn get(
         &self,
         kernel: &str,
@@ -87,21 +124,98 @@ impl PlanCache {
         let key = Self::key(kernel, binds, cfg, opts);
         let entry = {
             let mut map = lock(&self.entries);
-            Arc::clone(map.entry(key).or_default())
+            Arc::clone(map.entry(key.clone()).or_default())
         };
-        let mut slot = lock(&entry.slot);
-        if slot.is_none() {
-            self.compiles.fetch_add(1, Ordering::Relaxed);
-            let compiled = catch_unwind(AssertUnwindSafe(|| {
-                kernels::compile(kernel, binds, cfg, opts)
-            }));
-            *slot = Some(match compiled {
-                Ok(Ok(ck)) => Ok(Arc::new(ck)),
-                Ok(Err(e)) => Err(format!("{e:#}")),
-                Err(payload) => Err(format!("compile panicked: {}", panic_message(&payload))),
-            });
+        entry.last_used.store(self.tick.fetch_add(1, Ordering::Relaxed) + 1, Ordering::Relaxed);
+        let result = {
+            let mut slot = lock(&entry.slot);
+            if slot.is_none() {
+                self.compiles.fetch_add(1, Ordering::Relaxed);
+                let compiled = catch_unwind(AssertUnwindSafe(|| {
+                    kernels::compile(kernel, binds, cfg, opts)
+                }));
+                let result = match compiled {
+                    Ok(Ok(ck)) => Ok(Arc::new(ck)),
+                    Ok(Err(e)) => Err(format!("{e:#}")),
+                    Err(payload) => Err(format!("compile panicked: {}", panic_message(&payload))),
+                };
+                entry.cost.store(cost_of(&result), Ordering::Relaxed);
+                *slot = Some(result);
+            }
+            slot.clone().expect("slot filled above")
+        };
+        self.enforce_budget(&key);
+        result
+    }
+
+    /// Evict least-recently-used completed entries until the cache fits
+    /// its budget again. `protect` (the key just served) is never the
+    /// victim, so a lookup always leaves its own entry resident — with
+    /// a byte budget smaller than one plan the cache degrades to
+    /// "cache of one", never to livelock. Entries whose compile is
+    /// still running are skipped (their slot lock is held). Cached
+    /// errors are evicted before any success of equal recency.
+    fn enforce_budget(&self, protect: &str) {
+        if !self.budget.bounded() {
+            return;
         }
-        slot.clone().expect("slot filled above")
+        let mut map = lock(&self.entries);
+        loop {
+            let count = map.len();
+            let bytes: u64 = map.values().map(|e| e.cost.load(Ordering::Relaxed)).sum();
+            let over_entries = self.budget.max_entries.is_some_and(|m| count > m);
+            let over_bytes = self.budget.max_bytes.is_some_and(|m| bytes > m);
+            if !over_entries && !over_bytes {
+                return;
+            }
+            let victim = map
+                .iter()
+                .filter_map(|(k, e)| {
+                    if k == protect {
+                        return None;
+                    }
+                    let slot = match e.slot.try_lock() {
+                        Ok(guard) => guard,
+                        Err(TryLockError::Poisoned(p)) => p.into_inner(),
+                        Err(TryLockError::WouldBlock) => return None, // mid-compile
+                    };
+                    let is_err = slot.as_ref()?.is_err();
+                    Some((k.clone(), is_err, e.last_used.load(Ordering::Relaxed)))
+                })
+                // Errors first (`!is_err` sorts false < true), then
+                // least recent.
+                .min_by_key(|&(_, is_err, used)| (!is_err, used))
+                .map(|(k, _, _)| k);
+            match victim {
+                Some(k) => {
+                    map.remove(&k);
+                    self.evictions.fetch_add(1, Ordering::Relaxed);
+                }
+                // Everything left is protected or mid-compile; give up
+                // rather than spin.
+                None => return,
+            }
+        }
+    }
+
+    /// Drop every cached *error* entry (compiles that failed), making
+    /// those shapes retryable immediately instead of waiting for LRU
+    /// aging. Returns how many were dropped; each counts as an
+    /// eviction.
+    pub fn purge_errors(&self) -> usize {
+        let mut map = lock(&self.entries);
+        let before = map.len();
+        map.retain(|_, e| {
+            let slot = match e.slot.try_lock() {
+                Ok(guard) => guard,
+                Err(TryLockError::Poisoned(p)) => p.into_inner(),
+                Err(TryLockError::WouldBlock) => return true, // mid-compile
+            };
+            !matches!(slot.as_ref(), Some(Err(_)))
+        });
+        let dropped = before - map.len();
+        self.evictions.fetch_add(dropped as u64, Ordering::Relaxed);
+        dropped
     }
 
     /// Total `get` calls since construction.
@@ -109,11 +223,39 @@ impl PlanCache {
         self.lookups.load(Ordering::Relaxed)
     }
 
-    /// Compilations actually run — `lookups() - compiles()` is the hit
-    /// count. With exactly-once enforcement this equals the number of
-    /// distinct shapes ever requested.
+    /// Compilations actually run. Unbounded, this equals the number of
+    /// distinct shapes ever requested; bounded, an evicted shape
+    /// recompiles on its next touch.
     pub fn compiles(&self) -> u64 {
         self.compiles.load(Ordering::Relaxed)
+    }
+
+    /// Lookups that ran a compile (the shape was absent — never seen,
+    /// or evicted). Identical to [`PlanCache::compiles`]; named for the
+    /// counter-reconciliation invariant `hits + misses == lookups`.
+    pub fn misses(&self) -> u64 {
+        self.compiles()
+    }
+
+    /// Lookups served from a resident entry (including callers that
+    /// blocked on the winner's in-flight compile and shared its
+    /// result).
+    pub fn hits(&self) -> u64 {
+        self.lookups() - self.compiles()
+    }
+
+    /// Entries evicted to hold the budget (plus [`purge_errors`]
+    /// drops). Always `<= misses()`: each eviction removes an entry
+    /// exactly one miss created.
+    ///
+    /// [`purge_errors`]: PlanCache::purge_errors
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
+    /// Approximate bytes currently charged against the budget.
+    pub fn bytes(&self) -> u64 {
+        lock(&self.entries).values().map(|e| e.cost.load(Ordering::Relaxed)).sum()
     }
 
     /// Number of distinct shapes currently cached.
@@ -123,6 +265,16 @@ impl PlanCache {
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+}
+
+/// Budget cost of a finished slot: the compilation's resident estimate,
+/// or a small flat charge for a cached error (the entry struct plus its
+/// message — enough that error floods still hit the byte ceiling).
+fn cost_of(result: &Result<Arc<CompiledKernel>, String>) -> u64 {
+    match result {
+        Ok(ck) => ck.approx_bytes(),
+        Err(msg) => 128 + msg.len() as u64,
     }
 }
 
@@ -160,7 +312,11 @@ mod tests {
         assert!(Arc::ptr_eq(&a, &b), "second lookup must share the first compilation");
         assert_eq!(cache.compiles(), 1);
         assert_eq!(cache.lookups(), 2);
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.evictions(), 0);
         assert_eq!(cache.len(), 1);
+        assert!(cache.bytes() > 0, "a cached success must carry a nonzero cost");
     }
 
     #[test]
@@ -206,5 +362,103 @@ mod tests {
             PlanCache::key("gemv", &[("M", 8)], &a, &opts),
             PlanCache::key("gemv", &[("M", 8)], &c, &opts)
         );
+    }
+
+    /// Shape helper for the bounding tests: K splits the key, the grid
+    /// stays tiny so six compiles stay fast.
+    fn shape(cache: &PlanCache, k: i64) -> Result<Arc<CompiledKernel>, String> {
+        let cfg = MachineConfig::with_grid(4, 1);
+        cache.get("broadcast", &[("K", k), ("N", 4)], &cfg, &Options::default())
+    }
+
+    #[test]
+    fn entry_budget_evicts_lru_and_counters_reconcile() {
+        let cache =
+            PlanCache::bounded(CacheBudget { max_entries: Some(3), max_bytes: None });
+        for k in 4..=9 {
+            shape(&cache, k).unwrap();
+            assert!(cache.len() <= 3, "budget violated at k={k}: len={}", cache.len());
+        }
+        assert_eq!(cache.lookups(), 6);
+        assert_eq!(cache.misses(), 6);
+        assert_eq!(cache.hits(), 0);
+        assert_eq!(cache.evictions(), 3);
+        assert_eq!(cache.hits() + cache.misses(), cache.lookups());
+        assert!(cache.evictions() <= cache.misses());
+
+        // k=9 is the most recent entry: a hit, no eviction.
+        shape(&cache, 9).unwrap();
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(cache.misses(), 6);
+        // k=4 aged out long ago: recompiles (a miss), and the cache
+        // stays at its ceiling.
+        shape(&cache, 4).unwrap();
+        assert_eq!(cache.misses(), 7);
+        assert_eq!(cache.len(), 3);
+        assert_eq!(cache.hits() + cache.misses(), cache.lookups());
+    }
+
+    #[test]
+    fn byte_budget_keeps_most_recent_entry() {
+        // A byte ceiling of 1 is smaller than any plan: every lookup
+        // evicts everything but its own (protected) entry — a cache of
+        // one, never zero.
+        let cache = PlanCache::bounded(CacheBudget { max_entries: None, max_bytes: Some(1) });
+        shape(&cache, 4).unwrap();
+        assert_eq!(cache.len(), 1);
+        shape(&cache, 5).unwrap();
+        assert_eq!(cache.len(), 1, "the just-served entry survives, the older one goes");
+        assert_eq!(cache.evictions(), 1);
+        // The resident entry is k=5; k=4 must recompile.
+        shape(&cache, 5).unwrap();
+        assert_eq!(cache.hits(), 1);
+        shape(&cache, 4).unwrap();
+        assert_eq!(cache.misses(), 3);
+    }
+
+    #[test]
+    fn evicted_error_entries_become_retryable() {
+        // Satellite fix pin: a cached compile error must not be
+        // permanent. Once evicted, the shape compiles again from
+        // scratch instead of replaying the stale diagnostic forever.
+        let cache =
+            PlanCache::bounded(CacheBudget { max_entries: Some(2), max_bytes: None });
+        let opts = Options::default();
+        let cfg = MachineConfig::with_grid(4, 1);
+        cache.get("no_such_kernel", &[], &cfg, &opts).unwrap_err();
+        assert_eq!(cache.compiles(), 1);
+        shape(&cache, 4).unwrap();
+        // Touch the error again so it is *more* recent than the
+        // success — eviction must still pick it first.
+        cache.get("no_such_kernel", &[], &cfg, &opts).unwrap_err();
+        assert_eq!(cache.compiles(), 2, "the resident error replays without recompiling");
+        shape(&cache, 5).unwrap();
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.evictions(), 1, "the error entry goes before any success");
+        assert!(
+            shape(&cache, 4).is_ok() && shape(&cache, 5).is_ok(),
+            "both successes stayed resident"
+        );
+        assert_eq!(cache.compiles(), 3, "resident successes are hits");
+        // The failed shape retries: a fresh compile, not the cache.
+        cache.get("no_such_kernel", &[], &cfg, &opts).unwrap_err();
+        assert_eq!(cache.compiles(), 4, "the evicted error shape compiled again");
+        assert_eq!(cache.hits() + cache.misses(), cache.lookups());
+    }
+
+    #[test]
+    fn purge_errors_drops_only_errors() {
+        let cache = PlanCache::new();
+        let opts = Options::default();
+        let cfg = MachineConfig::with_grid(4, 1);
+        shape(&cache, 4).unwrap();
+        cache.get("no_such_kernel", &[], &cfg, &opts).unwrap_err();
+        cache.get("also_missing", &[], &cfg, &opts).unwrap_err();
+        assert_eq!(cache.len(), 3);
+        assert_eq!(cache.purge_errors(), 2);
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.evictions(), 2);
+        shape(&cache, 4).unwrap();
+        assert_eq!(cache.hits(), 1, "the success entry survived the purge");
     }
 }

@@ -47,6 +47,11 @@ pub struct JobSpec {
     pub threads: Option<usize>,
     /// Force the per-element DSD interpreter (bit-identical).
     pub no_vec: bool,
+    /// Chaos hook: panic the job deterministically on attempts `<= N`
+    /// (so attempt `N+1` succeeds). Exercises the serve retry path and
+    /// batch panic isolation without a real engine bug; never set by
+    /// production clients.
+    pub inject_fail: Option<u32>,
 }
 
 impl Default for JobSpec {
@@ -63,6 +68,7 @@ impl Default for JobSpec {
             timeout_ms: None,
             threads: None,
             no_vec: false,
+            inject_fail: None,
         }
     }
 }
@@ -87,6 +93,9 @@ impl JobSpec {
                 "timeout_ms" => spec.timeout_ms = val.opt_int(&key)?.map(|v| v as u64),
                 "threads" => spec.threads = val.opt_int(&key)?.map(|v| v.max(1) as usize),
                 "no_vec" => spec.no_vec = val.bool(&key)?,
+                "inject_fail" => {
+                    spec.inject_fail = val.opt_int(&key)?.map(|v| v.max(0) as u32)
+                }
                 _ => {}
             }
         }
@@ -119,9 +128,15 @@ pub struct JobResult {
     pub cache_miss: Option<bool>,
     /// Simulated observables (completed jobs only).
     pub report: Option<RowMetrics>,
+    /// How many attempts this row took (serve mode only: `Some(1)` =
+    /// first try, `Some(n>1)` = retried). `None` in batch mode, which
+    /// never retries — the key stays absent so batch rows are
+    /// unchanged.
+    pub attempts: Option<u32>,
     /// `(kind, message)` for failed jobs — `kind` is
     /// [`SimError::kind`] plus the fleet's own `spec` / `compile` /
-    /// `panic` discriminants.
+    /// `panic` discriminants, and serve's `overload` (job shed by
+    /// admission control).
     pub error: Option<(String, String)>,
 }
 
@@ -171,6 +186,7 @@ impl JobResult {
             grid: grid.to_string(),
             cache_miss: None,
             report: None,
+            attempts: None,
             error: Some((kind.to_string(), message)),
         }
     }
@@ -196,6 +212,9 @@ impl JobResult {
         ));
         if let Some(miss) = self.cache_miss {
             s.push_str(&format!(",\"cache\":\"{}\"", if miss { "miss" } else { "hit" }));
+        }
+        if let Some(n) = self.attempts {
+            s.push_str(&format!(",\"attempts\":{n}"));
         }
         if let Some(m) = &self.report {
             s.push_str(&format!(
@@ -509,6 +528,7 @@ mod tests {
                 stall_cycles: 0,
                 faults_injected: 0,
             }),
+            attempts: None,
             error: None,
         };
         let line = ok.to_jsonl();
@@ -524,6 +544,19 @@ mod tests {
         assert!(line.contains("\"ok\":false"));
         assert!(line.contains("\\\"nope\\\""));
         assert!(!line.contains("\"cache\""));
+    }
+
+    #[test]
+    fn attempts_and_inject_fail_round_trip() {
+        let s = JobSpec::parse(r#"{"kernel":"gemv","inject_fail":2}"#).unwrap();
+        assert_eq!(s.inject_fail, Some(2));
+        let mut row = JobResult::failed("r", "gemv", "8x8", "panic", "injected".into());
+        row.attempts = Some(3);
+        let line = row.to_jsonl();
+        assert!(line.contains("\"attempts\":3"));
+        // Batch rows never carry the key.
+        let plain = JobResult::failed("r", "gemv", "8x8", "panic", "injected".into());
+        assert!(!plain.to_jsonl().contains("attempts"));
     }
 
     #[test]

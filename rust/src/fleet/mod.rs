@@ -25,14 +25,21 @@
 //! changes results (the epoch-parallel engine's bit-identity
 //! guarantee), so the budget policy is pure scheduling.
 //!
+//! `spada batch` runs one batch per process; [`serve`] is the
+//! long-lived counterpart (continuous intake, bounded cache/queue,
+//! deadlines + retry, graceful drain, crash-safe journal) built on the
+//! same [`PlanCache`] / [`pool`] / [`JobSpec`] primitives.
+//!
 //! [`RoutingPlan`]: crate::machine::RoutingPlan
 
 pub mod cache;
 pub mod job;
 pub mod pool;
+pub mod serve;
 
 pub use cache::PlanCache;
 pub use job::{JobResult, JobSpec, RowMetrics};
+pub use serve::{ServeOptions, ServeSummary};
 
 use crate::harness::common::{scaled_binds, stage_random_inputs};
 use crate::machine::{FaultPlan, MachineConfig, SimOptions};
@@ -133,16 +140,16 @@ where
             let spec = &jobs[i];
             // Isolation: a panicking job (engine bug, corrupt state)
             // becomes an error row; the fleet keeps draining.
-            let mut row = catch_unwind(AssertUnwindSafe(|| run_job(spec, inner, cache, &pass_opts)))
-                .unwrap_or_else(|payload| {
-                    JobResult::failed(
-                        &spec.id,
-                        &spec.kernel,
-                        "",
-                        "panic",
-                        cache::panic_message(&*payload),
-                    )
-                });
+            let run = || run_job_attempt(spec, 1, inner, cache, &pass_opts);
+            let mut row = catch_unwind(AssertUnwindSafe(run)).unwrap_or_else(|payload| {
+                JobResult::failed(
+                    &spec.id,
+                    &spec.kernel,
+                    "",
+                    "panic",
+                    cache::panic_message(&*payload),
+                )
+            });
             if row.cache_miss.is_none() {
                 row.cache_miss = labels[i];
             }
@@ -174,7 +181,22 @@ where
 /// One job, start to finish: resolve shape → cached compile → explicit
 /// per-job [`SimOptions`] → stage → run. Every failure mode returns an
 /// error row naming the stage that failed.
-fn run_job(spec: &JobSpec, inner_threads: usize, cache: &PlanCache, pass_opts: &Options) -> JobResult {
+///
+/// `attempt` is 1-based and only consulted by the `inject_fail` chaos
+/// hook on [`JobSpec`] (batch always passes 1; serve's retry loop
+/// counts up) — a real job runs identically at every attempt number.
+pub(crate) fn run_job_attempt(
+    spec: &JobSpec,
+    attempt: u32,
+    inner_threads: usize,
+    cache: &PlanCache,
+    pass_opts: &Options,
+) -> JobResult {
+    if let Some(n) = spec.inject_fail {
+        if attempt <= n {
+            panic!("injected fault: attempt {attempt} <= inject_fail {n}");
+        }
+    }
     let (binds, w, h) = match scaled_binds(&spec.kernel, spec.g, spec.k) {
         Ok(v) => v,
         Err(e) => return JobResult::failed(&spec.id, &spec.kernel, "", "spec", format!("{e:#}")),
@@ -208,6 +230,7 @@ fn run_job(spec: &JobSpec, inner_threads: usize, cache: &PlanCache, pass_opts: &
             grid,
             cache_miss: None, // labeled by the batch driver
             report: Some(RowMetrics::of(&report)),
+            attempts: None, // stamped by serve's retry loop
             error: None,
         },
         Err(e) => JobResult::from_sim_error(&spec.id, &spec.kernel, &grid, &e),

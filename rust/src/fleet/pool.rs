@@ -6,9 +6,16 @@
 //! never convoys the queue behind it) while results stay slot-indexed
 //! by input order — the property every deterministic-output consumer
 //! (the batch engine, the fault campaign) builds on.
+//!
+//! [`drain_shared`] is the open-ended counterpart for service mode
+//! ([`crate::fleet::serve`]): the work list is a channel, not a known
+//! count, and workers drain it until the producer hangs up or a stop
+//! flag is raised.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::sync::Mutex;
+use std::time::Duration;
 
 /// Run `f(i)` for every `i in 0..n` on `workers` threads and return
 /// the results in input order. `f` must be panic-free (wrap the body
@@ -60,6 +67,35 @@ where
         .collect()
 }
 
+/// Worker loop over a shared receiver: pull items until the sending
+/// side disconnects (and the buffer is drained) or `stop` becomes
+/// nonzero. The in-progress item always completes — a raised stop flag
+/// stops *intake*, it never abandons work, which is exactly the
+/// graceful-drain contract `spada serve` exposes on SIGTERM. Items
+/// still buffered in the channel when the flag rises are left behind
+/// for the journal/resume path.
+///
+/// The receiver sits behind a mutex because `mpsc::Receiver` is
+/// single-consumer; the short `recv_timeout` bounds how long any one
+/// worker monopolizes it (and how stale its view of `stop` can get).
+/// Call from one thread per pool slot.
+pub fn drain_shared<T: Send>(rx: &Mutex<Receiver<T>>, stop: &AtomicU32, mut f: impl FnMut(T)) {
+    loop {
+        if stop.load(Ordering::SeqCst) > 0 {
+            return;
+        }
+        let item = {
+            let guard = rx.lock().unwrap_or_else(|p| p.into_inner());
+            guard.recv_timeout(Duration::from_millis(25))
+        };
+        match item {
+            Ok(t) => f(t),
+            Err(RecvTimeoutError::Timeout) => continue,
+            Err(RecvTimeoutError::Disconnected) => return,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -91,5 +127,43 @@ mod tests {
     fn zero_items_is_fine() {
         let out: Vec<u32> = run_indexed(0, 4, |_| unreachable!(), |_, _| {});
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn drain_shared_consumes_everything_then_stops_on_disconnect() {
+        let (tx, rx) = std::sync::mpsc::channel();
+        for i in 0..40 {
+            tx.send(i).unwrap();
+        }
+        drop(tx);
+        let rx = Mutex::new(rx);
+        let stop = AtomicU32::new(0);
+        let seen = Mutex::new(Vec::new());
+        std::thread::scope(|s| {
+            for _ in 0..3 {
+                s.spawn(|| drain_shared(&rx, &stop, |i| seen.lock().unwrap().push(i)));
+            }
+        });
+        let mut seen = seen.into_inner().unwrap();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..40).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn drain_shared_stop_flag_leaves_buffered_items_behind() {
+        let (tx, rx) = std::sync::mpsc::channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let rx = Mutex::new(rx);
+        let stop = AtomicU32::new(1); // raised before the loop starts
+        let mut seen = Vec::new();
+        drain_shared(&rx, &stop, |i: u32| seen.push(i));
+        assert!(seen.is_empty(), "a raised stop flag must halt intake immediately");
+        // The items are still in the channel for a resumed consumer.
+        stop.store(0, Ordering::SeqCst);
+        drop(tx);
+        drain_shared(&rx, &stop, |i: u32| seen.push(i));
+        assert_eq!(seen.len(), 10);
     }
 }

@@ -1,0 +1,616 @@
+//! `spada serve` — the long-lived service loop over the fleet engine.
+//!
+//! `spada batch` runs one job list per process; this module keeps a
+//! process up indefinitely: JSONL job specs stream in continuously
+//! (stdin, a file, or a Unix socket), result rows stream out as their
+//! input-order prefix completes, and four robustness layers make
+//! unattended day-long operation survivable:
+//!
+//! - **Bounded plan cache.** The caller constructs the [`PlanCache`]
+//!   with a [`CacheBudget`](crate::machine::CacheBudget) so distinct
+//!   shapes cannot grow memory forever; hit/miss/eviction counters
+//!   surface in the heartbeat and final stats.
+//! - **Admission control.** Intake flows through a bounded queue
+//!   ([`ServeOptions::queue_cap`]). When it fills, the reader either
+//!   blocks (backpressure onto the client, the default) or — with
+//!   [`ServeOptions::shed`] — emits a structured
+//!   `{"error":{"kind":"overload"}}` row and drops the job, so memory
+//!   stays bounded under burst traffic either way.
+//! - **Deadlines + bounded retry.** Jobs without an explicit
+//!   `timeout_ms` get [`ServeOptions::deadline_ms`] as a default
+//!   watchdog, so no single job wedges the pool. Failures of
+//!   *transient* kinds (`io`, `panic`) are retried up to
+//!   [`ServeOptions::retries`] times with capped exponential backoff;
+//!   the row records its attempt count. Deterministic outcomes (spec,
+//!   compile, sdc, deadlock, timeout…) are never retried — rerunning
+//!   them reproduces the same answer.
+//! - **Graceful drain + crash-safe journal.** Raising the shutdown
+//!   flag (the CLI wires SIGTERM/SIGINT to it) stops intake, lets
+//!   in-flight jobs finish, flushes the emitted prefix, and writes a
+//!   final stats line. With [`ServeOptions::journal`], every emitted
+//!   row's id is appended (flushed per row) so a restart with
+//!   [`ServeOptions::resume`] skips finished work — the concatenation
+//!   of an interrupted run's rows and its resumed run's rows is
+//!   byte-identical to one uninterrupted run.
+//!
+//! **Output ordering.** Rows are emitted strictly in input order (the
+//! batch engine's contract), buffered minimally: a completion beyond
+//! the first gap waits for the gap to fill. On drain, completions
+//! beyond the gap are discarded rather than emitted out of order —
+//! they were never journaled, so a resumed run recomputes them
+//! deterministically and byte-identity holds. Shed rows and timeouts
+//! are the deliberate exceptions to identity claims: both depend on
+//! wall-clock load, which is the point of emitting them as structured
+//! errors.
+//!
+//! **Journal format.** One row id per line, appended after the row
+//! itself is flushed (at-least-once: a crash between row flush and
+//! journal flush re-runs at most one job on resume, and the resumed
+//! stream then re-emits that row — concatenated output drops the
+//! duplicate prefix row, see `docs/serve.md`). Ids must be unique
+//! across the stream for resume to be exact; the default line-number
+//! ids (`job-<line>`) are.
+
+use super::{cache, pool, FleetOptions, JobResult, JobSpec, PlanCache};
+use crate::passes::Options;
+use anyhow::{bail, Context, Result};
+use std::collections::{BTreeMap, HashSet};
+use std::fs::{File, OpenOptions};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, RecvTimeoutError, Sender, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Service-mode knobs. Everything resolves explicitly here (flags in
+/// the CLI); the only env-derived piece — the plan-cache budget — is
+/// resolved through `machine/options.rs` like every other `SPADA_*`
+/// knob and handed to the [`PlanCache`] the caller constructs.
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Worker pool / thread budget, as in batch mode.
+    pub fleet: FleetOptions,
+    /// Bounded intake queue depth (admission control). Minimum 1.
+    pub queue_cap: usize,
+    /// When the queue is full: `true` = emit an `overload` error row
+    /// and drop the job; `false` = block the reader (backpressure).
+    pub shed: bool,
+    /// Retry budget for *transient* failures (`io` / `panic` kinds):
+    /// a job runs at most `retries + 1` times.
+    pub retries: u32,
+    /// Base backoff between retry attempts, doubled per attempt and
+    /// capped (32× base, 10 s hard ceiling).
+    pub backoff_ms: u64,
+    /// Default wall-clock watchdog applied to jobs that do not pin
+    /// their own `timeout_ms`. `None` disables the default (a job can
+    /// then only be bounded by its own spec).
+    pub deadline_ms: Option<u64>,
+    /// Append every emitted row's id to this file (crash-safe journal).
+    pub journal: Option<String>,
+    /// Skip jobs whose ids are already in the journal (requires
+    /// [`ServeOptions::journal`]).
+    pub resume: bool,
+    /// Emit a heartbeat stats line every N completed rows.
+    pub stats_every: Option<u64>,
+}
+
+impl Default for ServeOptions {
+    fn default() -> ServeOptions {
+        ServeOptions {
+            fleet: FleetOptions::default(),
+            queue_cap: 64,
+            shed: false,
+            retries: 0,
+            backoff_ms: 50,
+            // One minute: generous for any sane simulation job, short
+            // enough that a wedged job frees its pool slot the same
+            // hour it wedged.
+            deadline_ms: Some(60_000),
+            journal: None,
+            resume: false,
+            stats_every: None,
+        }
+    }
+}
+
+/// What a serve session did, reported once at shutdown (the same
+/// counters stream periodically via `stats_every`).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ServeSummary {
+    /// Rows emitted (ok + errors, including shed rows).
+    pub rows: u64,
+    pub ok: u64,
+    pub errors: u64,
+    /// Rows that were overload-shed by admission control.
+    pub shed: u64,
+    /// Jobs skipped because their id was already journaled (resume).
+    pub skipped: u64,
+    /// Extra attempts spent on transient-failure retries.
+    pub retries: u64,
+    /// Total simulated cycles across completed jobs.
+    pub sim_cycles: u64,
+    /// `true` when the session ended on the shutdown flag (drain)
+    /// rather than input EOF.
+    pub drained: bool,
+}
+
+/// One admitted job: its spec plus the emit sequence number the intake
+/// reader assigned (parse errors and shed rows consume numbers too, so
+/// the emitted stream is gap-free in input order).
+struct Task {
+    seq: u64,
+    spec: JobSpec,
+}
+
+/// Serve a byte stream of JSONL job specs (stdin, a file, a pipe).
+/// Returns at input EOF once every admitted job has been emitted, or
+/// earlier when `shutdown` becomes nonzero (graceful drain: intake
+/// stops, in-flight jobs finish, the contiguous emitted prefix is
+/// flushed).
+///
+/// `input` is read on a detached thread (a reader blocked on stdin
+/// cannot be joined); it exits on EOF or when the service's channels
+/// close. `out` receives result rows (flushed per row); `stats`
+/// receives heartbeat/final JSON lines (wall-clock fields live here,
+/// never in rows).
+pub fn serve<R: Read + Send + 'static>(
+    input: R,
+    opts: &ServeOptions,
+    cache: &PlanCache,
+    out: &mut dyn Write,
+    stats: &mut dyn Write,
+    shutdown: &AtomicU32,
+) -> Result<ServeSummary> {
+    serve_core(
+        Box::new(move |mut feeder: Feeder| {
+            for line in BufReader::new(input).lines() {
+                let Ok(line) = line else { break };
+                feeder.feed_line(&line);
+                if feeder.closed {
+                    break;
+                }
+            }
+        }),
+        opts,
+        cache,
+        out,
+        stats,
+        shutdown,
+    )
+}
+
+/// Serve JSONL job specs from a Unix socket: connections are accepted
+/// sequentially and read to EOF, each line a spec; rows still stream
+/// to `out`. There is no input EOF on a listener, so only the shutdown
+/// flag ends the session.
+#[cfg(unix)]
+pub fn serve_unix(
+    listener: std::os::unix::net::UnixListener,
+    opts: &ServeOptions,
+    cache: &PlanCache,
+    out: &mut dyn Write,
+    stats: &mut dyn Write,
+    shutdown: &AtomicU32,
+) -> Result<ServeSummary> {
+    serve_core(
+        Box::new(move |mut feeder: Feeder| {
+            for stream in listener.incoming() {
+                let Ok(stream) = stream else { continue };
+                for line in BufReader::new(stream).lines() {
+                    let Ok(line) = line else { break };
+                    feeder.feed_line(&line);
+                    if feeder.closed {
+                        return;
+                    }
+                }
+                if feeder.closed {
+                    return;
+                }
+            }
+        }),
+        opts,
+        cache,
+        out,
+        stats,
+        shutdown,
+    )
+}
+
+/// Intake state handed to the reader thread: parses lines, assigns
+/// sequence numbers, applies resume-skip and admission control.
+/// Everything it shares with the service is an owned channel end or an
+/// `Arc` — the reader is detached and must not borrow the serve frame.
+struct Feeder {
+    /// 1-based physical input line counter (blank/comment lines count,
+    /// matching `parse_jobs`' `job-<line>` id convention).
+    lineno: u64,
+    /// Next emit sequence number (row-producing lines only).
+    seq: u64,
+    queue_cap: usize,
+    shed: bool,
+    intake_tx: SyncSender<Task>,
+    done_tx: Sender<(u64, JobResult)>,
+    queue_depth: Arc<AtomicU64>,
+    /// Ids already journaled by a previous run (resume mode).
+    done_ids: HashSet<String>,
+    skipped: Arc<AtomicU64>,
+    /// Set when the service hung up; the reader loop should stop.
+    closed: bool,
+}
+
+impl Feeder {
+    fn feed_line(&mut self, raw: &str) {
+        self.lineno += 1;
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            return;
+        }
+        match JobSpec::parse(line) {
+            Ok(mut spec) => {
+                if spec.id.is_empty() {
+                    spec.id = format!("job-{}", self.lineno);
+                }
+                if self.done_ids.contains(&spec.id) {
+                    self.skipped.fetch_add(1, Ordering::SeqCst);
+                    return;
+                }
+                let task = Task { seq: self.seq, spec };
+                self.seq += 1;
+                if self.shed {
+                    match self.intake_tx.try_send(task) {
+                        Ok(()) => {
+                            self.queue_depth.fetch_add(1, Ordering::SeqCst);
+                        }
+                        Err(TrySendError::Full(t)) => {
+                            let row = JobResult::failed(
+                                &t.spec.id,
+                                &t.spec.kernel,
+                                "",
+                                "overload",
+                                format!(
+                                    "admission queue full ({} jobs queued); job shed",
+                                    self.queue_cap
+                                ),
+                            );
+                            if self.done_tx.send((t.seq, row)).is_err() {
+                                self.closed = true;
+                            }
+                        }
+                        Err(TrySendError::Disconnected(_)) => self.closed = true,
+                    }
+                } else if self.intake_tx.send(task).is_ok() {
+                    self.queue_depth.fetch_add(1, Ordering::SeqCst);
+                } else {
+                    self.closed = true;
+                }
+            }
+            Err(e) => {
+                // Same contract as batch: a malformed line becomes an
+                // error row under its line-number id, never an abort.
+                let id = format!("job-{}", self.lineno);
+                if self.done_ids.contains(&id) {
+                    self.skipped.fetch_add(1, Ordering::SeqCst);
+                    return;
+                }
+                let row = JobResult::failed(&id, "", "", "spec", e);
+                let seq = self.seq;
+                self.seq += 1;
+                if self.done_tx.send((seq, row)).is_err() {
+                    self.closed = true;
+                }
+            }
+        }
+    }
+}
+
+/// Per-worker retry configuration (copied out of [`ServeOptions`] so
+/// worker closures capture plain values).
+struct RetryCfg {
+    inner_threads: usize,
+    retries: u32,
+    backoff_ms: u64,
+    deadline_ms: Option<u64>,
+}
+
+/// Run one job to a final row: default deadline applied, transient
+/// failures (`io` / `panic` kinds, including escaped panics) retried
+/// with capped exponential backoff, attempt count stamped on the row.
+fn run_with_retry(
+    spec: &JobSpec,
+    cfg: &RetryCfg,
+    cache: &PlanCache,
+    pass_opts: &Options,
+) -> JobResult {
+    let mut eff = spec.clone();
+    if eff.timeout_ms.is_none() {
+        eff.timeout_ms = cfg.deadline_ms;
+    }
+    let mut attempt = 0u32;
+    loop {
+        attempt += 1;
+        let run = || super::run_job_attempt(&eff, attempt, cfg.inner_threads, cache, pass_opts);
+        let mut row = catch_unwind(AssertUnwindSafe(run)).unwrap_or_else(|payload| {
+            JobResult::failed(&eff.id, &eff.kernel, "", "panic", cache::panic_message(&*payload))
+        });
+        let transient = matches!(&row.error, Some((kind, _)) if kind == "io" || kind == "panic");
+        if transient && attempt <= cfg.retries {
+            let delay = cfg
+                .backoff_ms
+                .saturating_mul(1u64 << (attempt - 1).min(5))
+                .min(cfg.backoff_ms.saturating_mul(32))
+                .min(10_000);
+            std::thread::sleep(Duration::from_millis(delay));
+            continue;
+        }
+        row.attempts = Some(attempt);
+        return row;
+    }
+}
+
+/// The service core shared by [`serve`] and [`serve_unix`]: spawn the
+/// detached intake reader, run the worker pool under a scope, and emit
+/// rows in input order from the calling thread.
+fn serve_core(
+    reader: Box<dyn FnOnce(Feeder) + Send + 'static>,
+    opts: &ServeOptions,
+    cache: &PlanCache,
+    out: &mut dyn Write,
+    stats: &mut dyn Write,
+    shutdown: &AtomicU32,
+) -> Result<ServeSummary> {
+    // Resume set: ids journaled by previous runs of this stream.
+    let mut done_ids = HashSet::new();
+    if opts.resume {
+        let Some(path) = &opts.journal else {
+            bail!("--resume requires --journal (there is nothing to resume from)");
+        };
+        if let Ok(text) = std::fs::read_to_string(path) {
+            for line in text.lines() {
+                let line = line.trim();
+                if !line.is_empty() && !line.starts_with('#') {
+                    done_ids.insert(line.to_string());
+                }
+            }
+        }
+    }
+    // Fresh runs truncate a stale journal (its ids describe a stream
+    // this run is restarting from scratch); resumed runs append.
+    let mut journal = match &opts.journal {
+        Some(path) => Some(if opts.resume {
+            OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(path)
+                .with_context(|| format!("opening journal {path}"))?
+        } else {
+            File::create(path).with_context(|| format!("creating journal {path}"))?
+        }),
+        None => None,
+    };
+
+    let pool_width = opts.fleet.pool.max(1);
+    let (intake_tx, intake_rx) = mpsc::sync_channel::<Task>(opts.queue_cap.max(1));
+    let (done_tx, done_rx) = mpsc::channel::<(u64, JobResult)>();
+    let queue_depth = Arc::new(AtomicU64::new(0));
+    let skipped = Arc::new(AtomicU64::new(0));
+    let in_flight = AtomicU64::new(0);
+    let workers_alive = AtomicUsize::new(pool_width);
+    // Workers watch this, not `shutdown` directly: the emitter raises
+    // it on drain *and* on an output write failure, so the pool can
+    // never outlive its consumer.
+    let stop = AtomicU32::new(0);
+
+    let feeder = Feeder {
+        lineno: 0,
+        seq: 0,
+        queue_cap: opts.queue_cap.max(1),
+        shed: opts.shed,
+        intake_tx,
+        done_tx: done_tx.clone(),
+        queue_depth: Arc::clone(&queue_depth),
+        done_ids,
+        skipped: Arc::clone(&skipped),
+        closed: false,
+    };
+    // Detached on purpose: a reader blocked on stdin/accept cannot be
+    // joined. It exits on EOF or when the service's channel ends drop.
+    std::thread::Builder::new()
+        .name("spada-serve-intake".into())
+        .spawn(move || reader(feeder))
+        .context("spawning intake reader")?;
+
+    let retry_cfg = RetryCfg {
+        inner_threads: opts.fleet.inner_threads(),
+        retries: opts.retries,
+        backoff_ms: opts.backoff_ms,
+        deadline_ms: opts.deadline_ms,
+    };
+    let pass_opts = Options::default();
+    let rx = Mutex::new(intake_rx);
+    let start = Instant::now();
+    let stats_every = opts.stats_every.filter(|&n| n > 0);
+
+    std::thread::scope(|scope| -> Result<ServeSummary> {
+        for _ in 0..pool_width {
+            let done = done_tx.clone();
+            let queue_depth = Arc::clone(&queue_depth);
+            let (rx, stop, retry_cfg) = (&rx, &stop, &retry_cfg);
+            let (in_flight, workers_alive, pass_opts) = (&in_flight, &workers_alive, &pass_opts);
+            scope.spawn(move || {
+                pool::drain_shared(rx, stop, |task: Task| {
+                    queue_depth.fetch_sub(1, Ordering::SeqCst);
+                    in_flight.fetch_add(1, Ordering::SeqCst);
+                    let row = run_with_retry(&task.spec, retry_cfg, cache, pass_opts);
+                    in_flight.fetch_sub(1, Ordering::SeqCst);
+                    let _ = done.send((task.seq, row));
+                });
+                workers_alive.fetch_sub(1, Ordering::SeqCst);
+            });
+        }
+        // Only the reader and the workers hold senders now, so the
+        // emitter's channel disconnects exactly when both are done.
+        drop(done_tx);
+
+        let mut summary = ServeSummary::default();
+        let emitted = (|| -> Result<()> {
+            let mut pending: BTreeMap<u64, JobResult> = BTreeMap::new();
+            let mut next_emit = 0u64;
+            let mut flush = |pending: &mut BTreeMap<u64, JobResult>,
+                             next_emit: &mut u64,
+                             summary: &mut ServeSummary,
+                             out: &mut dyn Write,
+                             stats: &mut dyn Write,
+                             journal: &mut Option<File>|
+             -> Result<()> {
+                while let Some(row) = pending.remove(next_emit) {
+                    out.write_all(row.to_jsonl().as_bytes())?;
+                    out.flush()?;
+                    if let Some(j) = journal.as_mut() {
+                        writeln!(j, "{}", row.id)?;
+                        j.flush()?;
+                    }
+                    *next_emit += 1;
+                    summary.rows += 1;
+                    if row.ok() {
+                        summary.ok += 1;
+                    } else {
+                        summary.errors += 1;
+                    }
+                    if matches!(&row.error, Some((kind, _)) if kind == "overload") {
+                        summary.shed += 1;
+                    }
+                    if let Some(a) = row.attempts {
+                        summary.retries += u64::from(a.saturating_sub(1));
+                    }
+                    if let Some(m) = &row.report {
+                        summary.sim_cycles += m.cycles;
+                    }
+                    summary.skipped = skipped.load(Ordering::SeqCst);
+                    if stats_every.is_some_and(|n| summary.rows % n == 0) {
+                        write_stats_line(
+                            stats,
+                            "heartbeat",
+                            summary,
+                            cache,
+                            queue_depth.load(Ordering::SeqCst),
+                            in_flight.load(Ordering::SeqCst),
+                            start.elapsed().as_millis() as u64,
+                        )?;
+                    }
+                }
+                Ok(())
+            };
+            loop {
+                if shutdown.load(Ordering::SeqCst) > 0 {
+                    stop.store(1, Ordering::SeqCst);
+                }
+                match done_rx.recv_timeout(Duration::from_millis(25)) {
+                    Ok((seq, row)) => {
+                        pending.insert(seq, row);
+                        flush(
+                            &mut pending,
+                            &mut next_emit,
+                            &mut summary,
+                            out,
+                            stats,
+                            &mut journal,
+                        )?;
+                    }
+                    Err(RecvTimeoutError::Timeout) => {
+                        if stop.load(Ordering::SeqCst) > 0
+                            && workers_alive.load(Ordering::SeqCst) == 0
+                        {
+                            // Drain whatever already completed; rows
+                            // beyond the first gap are discarded (the
+                            // journal/resume path recomputes them).
+                            while let Ok((seq, row)) = done_rx.try_recv() {
+                                pending.insert(seq, row);
+                            }
+                            flush(
+                                &mut pending,
+                                &mut next_emit,
+                                &mut summary,
+                                out,
+                                stats,
+                                &mut journal,
+                            )?;
+                            return Ok(());
+                        }
+                    }
+                    // Reader and workers all gone: input EOF, fully
+                    // drained (a receiver yields its buffer before
+                    // reporting disconnect).
+                    Err(RecvTimeoutError::Disconnected) => {
+                        flush(
+                            &mut pending,
+                            &mut next_emit,
+                            &mut summary,
+                            out,
+                            stats,
+                            &mut journal,
+                        )?;
+                        return Ok(());
+                    }
+                }
+            }
+        })();
+        // Whatever happened, release the pool before leaving the scope
+        // (scope exit joins the workers).
+        stop.store(1, Ordering::SeqCst);
+        emitted?;
+        summary.drained = shutdown.load(Ordering::SeqCst) > 0;
+        summary.skipped = skipped.load(Ordering::SeqCst);
+        write_stats_line(
+            stats,
+            "final",
+            &summary,
+            cache,
+            queue_depth.load(Ordering::SeqCst),
+            in_flight.load(Ordering::SeqCst),
+            start.elapsed().as_millis() as u64,
+        )?;
+        Ok(summary)
+    })
+}
+
+/// One heartbeat/final stats line: service counters plus the cache's
+/// reconciling counter set. Wall-clock (`uptime_ms`) is allowed here —
+/// this stream is operator telemetry, never part of the row contract.
+fn write_stats_line(
+    stats: &mut dyn Write,
+    event: &str,
+    s: &ServeSummary,
+    cache: &PlanCache,
+    queue_depth: u64,
+    in_flight: u64,
+    uptime_ms: u64,
+) -> Result<()> {
+    let mut line = format!(
+        "{{\"event\":\"{event}\",\"rows\":{},\"ok\":{},\"errors\":{},\"shed\":{},\
+         \"skipped\":{},\"retries\":{},\"queue_depth\":{queue_depth},\
+         \"in_flight\":{in_flight},\"sim_cycles\":{},\"uptime_ms\":{uptime_ms},\
+         \"cache\":{{\"lookups\":{},\"hits\":{},\"misses\":{},\"evictions\":{},\
+         \"entries\":{},\"bytes\":{}}}",
+        s.rows,
+        s.ok,
+        s.errors,
+        s.shed,
+        s.skipped,
+        s.retries,
+        s.sim_cycles,
+        cache.lookups(),
+        cache.hits(),
+        cache.misses(),
+        cache.evictions(),
+        cache.len(),
+        cache.bytes(),
+    );
+    if event == "final" {
+        line.push_str(&format!(",\"drained\":{}", s.drained));
+    }
+    line.push_str("}\n");
+    stats.write_all(line.as_bytes())?;
+    stats.flush()?;
+    Ok(())
+}

@@ -90,6 +90,19 @@ impl CompiledKernel {
             opts,
         )
     }
+
+    /// Approximate resident bytes of this compilation: the routing
+    /// plan's dense tables plus a flat per-element estimate of the
+    /// machine program (class/route/IO bodies are not walked). This is
+    /// what the fleet plan cache charges an entry against its byte
+    /// budget ([`crate::machine::CacheBudget`]).
+    pub fn approx_bytes(&self) -> u64 {
+        self.plan.approx_bytes()
+            + self.machine.classes.len() as u64 * 256
+            + self.machine.routes.len() as u64 * 64
+            + self.machine.io.len() as u64 * 96
+            + 1024
+    }
 }
 
 /// Convenience: parse + instantiate + compile a kernel.

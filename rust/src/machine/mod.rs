@@ -69,7 +69,7 @@ pub use program::{
     TaskDef, TaskKind,
 };
 pub use metrics::{Metrics, RunReport};
-pub use options::SimOptions;
+pub use options::{CacheBudget, SimOptions};
 pub use sim::{SimError, Simulator};
 pub use trace::{
     ascii_heatmap, chrome_trace_json, EngineStats, EpochRecord, PeBreakdown, Profile, Trace,

@@ -193,6 +193,54 @@ impl SimOptions {
     }
 }
 
+/// Size budget for the fleet plan cache
+/// ([`crate::fleet::PlanCache`]): entry-count and/or byte ceilings with
+/// LRU eviction. `None` on both axes (the default) means unbounded —
+/// the historical one-batch-per-process behaviour. Long-lived
+/// processes (`spada serve`) should bound at least one axis.
+///
+/// Lives in this module so the `SPADA_CACHE_*` reads stay at the single
+/// env resolve site, next to every other `SPADA_*` knob.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheBudget {
+    /// Maximum distinct cached shapes; least-recently-used entries are
+    /// evicted past it (`SPADA_CACHE_ENTRIES`).
+    pub max_entries: Option<usize>,
+    /// Approximate byte ceiling over the cached plans
+    /// (`SPADA_CACHE_BYTES`); a single in-use entry may exceed it.
+    pub max_bytes: Option<u64>,
+}
+
+impl CacheBudget {
+    /// No bounds: entries live for the process lifetime.
+    pub fn unbounded() -> CacheBudget {
+        CacheBudget::default()
+    }
+
+    /// Resolve `SPADA_CACHE_ENTRIES` / `SPADA_CACHE_BYTES` once. Zero,
+    /// unset or unparsable means "no bound on that axis" (matching the
+    /// `SPADA_BUF_CAP` convention: zero-sized caches are never useful,
+    /// so 0 reads as "off").
+    pub fn from_env() -> CacheBudget {
+        CacheBudget {
+            max_entries: std::env::var("SPADA_CACHE_ENTRIES")
+                .ok()
+                .and_then(|s| s.trim().parse::<usize>().ok())
+                .filter(|&n| n > 0),
+            max_bytes: std::env::var("SPADA_CACHE_BYTES")
+                .ok()
+                .and_then(|s| s.trim().parse::<u64>().ok())
+                .filter(|&n| n > 0),
+        }
+    }
+
+    /// Whether any axis is bounded (an unbounded budget makes eviction
+    /// a no-op).
+    pub fn bounded(&self) -> bool {
+        self.max_entries.is_some() || self.max_bytes.is_some()
+    }
+}
+
 /// `SPADA_BLESS`: re-bless the golden cycle-identity snapshots. Test
 /// harness plumbing, not a simulation option — it lives here so every
 /// `SPADA_*` environment read stays at this one resolve site.
@@ -232,6 +280,15 @@ mod tests {
         assert_eq!(o.timeout_ms, Some(100));
         assert!(o.tracing_enabled());
         assert_eq!(o.resolved_threads(), 2);
+    }
+
+    #[test]
+    fn cache_budget_default_is_unbounded() {
+        let b = CacheBudget::default();
+        assert_eq!(b, CacheBudget::unbounded());
+        assert!(!b.bounded());
+        assert!(CacheBudget { max_entries: Some(4), max_bytes: None }.bounded());
+        assert!(CacheBudget { max_entries: None, max_bytes: Some(1 << 20) }.bounded());
     }
 
     #[test]

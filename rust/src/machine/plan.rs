@@ -224,6 +224,31 @@ pub struct RoutingPlan {
     pub build_errors: Vec<String>,
 }
 
+impl RoutingPlan {
+    /// Approximate resident size in bytes: the dense tables that scale
+    /// with the grid, counted at their element sizes. Heap owned by
+    /// nested element fields is not walked — this is the budget
+    /// heuristic the fleet plan cache charges entries with
+    /// ([`crate::machine::CacheBudget`]), not an allocator audit.
+    pub fn approx_bytes(&self) -> u64 {
+        use std::mem::size_of;
+        let nested_actions: usize = self
+            .actions
+            .iter()
+            .map(|a| a.len() * size_of::<PAction>() + size_of::<Vec<PAction>>())
+            .sum();
+        (size_of::<RoutingPlan>()
+            + self.pe_at.len() * size_of::<u32>()
+            + self.pes.len() * size_of::<PlanPe>()
+            + self.flow_of.len() * size_of::<u32>()
+            + self.flows.len() * size_of::<PlannedFlow>()
+            + self.classes.len() * size_of::<ClassPlan>()
+            + nested_actions
+            + self.island_of.len() * size_of::<u32>()
+            + self.build_errors.iter().map(|e| e.len()).sum::<usize>()) as u64
+    }
+}
+
 /// Union-find `find` with path halving (roots are self-parents).
 fn uf_find(parent: &mut [u32], mut a: u32) -> u32 {
     while parent[a as usize] != a {

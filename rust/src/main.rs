@@ -8,6 +8,10 @@
 //!                    (static dataflow verification, no simulation)
 //!   run <kernel>     [--bind ...]   (compile + simulate with random input)
 //!   batch [--jobs FILE|-] [--pool N] (JSONL jobs in, one result row per job out)
+//!   serve [--jobs FILE|-] [--listen SOCK] [--pool N] [--queue N] [--shed]
+//!                    [--retries N] [--deadline-ms N] [--journal F] [--resume]
+//!                    [--stats-every N] (long-lived batch service: continuous
+//!                    intake, bounded plan cache, graceful drain on SIGTERM)
 //!   bench --exp <table2|fig4..fig9|sim|fleet|verify|all> [--quick]
 //!   loc              (Table II shortcut)
 
@@ -62,6 +66,15 @@ impl Args {
                             | "jobs"
                             | "pool"
                             | "budget"
+                            | "listen"
+                            | "queue"
+                            | "retries"
+                            | "backoff-ms"
+                            | "deadline-ms"
+                            | "journal"
+                            | "stats-every"
+                            | "cache-entries"
+                            | "cache-bytes"
                     )
                 {
                     flags.push((name.to_string(), it.next()));
@@ -559,6 +572,7 @@ fn real_main() -> Result<()> {
             harness::faults::campaign(&opts)
         }
         "batch" => run_batch_cmd(&args),
+        "serve" => run_serve_cmd(&args),
         "loc" => harness::run("table2", false),
         "help" => {
             print_help();
@@ -675,6 +689,182 @@ fn run_batch_cmd(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Signal plumbing for `spada serve`: SIGTERM/SIGINT raise a flag the
+/// service polls (graceful drain); a second signal aborts the process
+/// immediately with the conventional 130 exit status. Raw `signal(2)`
+/// FFI keeps this dependency-free — the handler only touches an
+/// atomic and `_exit`, both async-signal-safe.
+#[cfg(unix)]
+mod sig {
+    use std::sync::atomic::{AtomicU32, Ordering};
+
+    pub static SHUTDOWN: AtomicU32 = AtomicU32::new(0);
+
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+        fn _exit(code: i32) -> !;
+    }
+
+    extern "C" fn on_signal(_signum: i32) {
+        if SHUTDOWN.fetch_add(1, Ordering::SeqCst) > 0 {
+            // Second signal: the operator is done waiting for the
+            // drain. Abort now.
+            unsafe { _exit(130) }
+        }
+    }
+
+    /// Route SIGINT (2) and SIGTERM (15) into the shutdown flag.
+    pub fn install() {
+        unsafe {
+            signal(2, on_signal as usize);
+            signal(15, on_signal as usize);
+        }
+    }
+}
+
+#[cfg(not(unix))]
+mod sig {
+    use std::sync::atomic::AtomicU32;
+
+    /// No signal routing off Unix: the flag exists so `serve` links,
+    /// but only input EOF ends the session.
+    pub static SHUTDOWN: AtomicU32 = AtomicU32::new(0);
+
+    pub fn install() {}
+}
+
+#[cfg(unix)]
+fn serve_listen(
+    path: &str,
+    opts: &spada::fleet::ServeOptions,
+    cache: &spada::fleet::PlanCache,
+    out: &mut dyn std::io::Write,
+    shutdown: &std::sync::atomic::AtomicU32,
+) -> Result<spada::fleet::ServeSummary> {
+    // A stale socket file from a previous run would make bind fail.
+    let _ = std::fs::remove_file(path);
+    let listener = std::os::unix::net::UnixListener::bind(path)
+        .with_context(|| format!("binding {path}"))?;
+    eprintln!("serve: listening on {path}");
+    spada::fleet::serve::serve_unix(listener, opts, cache, out, &mut std::io::stderr(), shutdown)
+}
+
+#[cfg(not(unix))]
+fn serve_listen(
+    path: &str,
+    _opts: &spada::fleet::ServeOptions,
+    _cache: &spada::fleet::PlanCache,
+    _out: &mut dyn std::io::Write,
+    _shutdown: &std::sync::atomic::AtomicU32,
+) -> Result<spada::fleet::ServeSummary> {
+    bail!("--listen {path}: Unix sockets are unix-only; use --jobs FILE|- instead");
+}
+
+/// `spada serve`: the long-lived counterpart of `spada batch`. JSONL
+/// job specs stream in continuously (stdin, a file, or `--listen`
+/// Unix socket); result rows stream out as their input-order prefix
+/// completes. Robustness knobs: bounded plan cache (`--cache-entries`
+/// / `--cache-bytes`, or SPADA_CACHE_ENTRIES / SPADA_CACHE_BYTES via
+/// the options module), bounded admission queue (`--queue`, `--shed`),
+/// default deadline + transient retry (`--deadline-ms`, `--retries`),
+/// graceful drain on SIGTERM/SIGINT, crash-safe journal + resume
+/// (`--journal`, `--resume`), heartbeat stats (`--stats-every`).
+fn run_serve_cmd(args: &Args) -> Result<()> {
+    use spada::fleet::{serve, FleetOptions, PlanCache, ServeOptions};
+    use spada::machine::CacheBudget;
+
+    let mut fleet = FleetOptions::default();
+    if let Some(p) = args.flag("pool") {
+        fleet.pool = p.parse::<usize>().context("--pool")?.max(1);
+    }
+    if let Some(b) = args.flag("budget") {
+        fleet.budget = b.parse::<usize>().context("--budget")?.max(1);
+    }
+    let mut opts = ServeOptions { fleet, ..ServeOptions::default() };
+    if let Some(q) = args.flag("queue") {
+        opts.queue_cap = q.parse::<usize>().context("--queue")?.max(1);
+    }
+    opts.shed = args.has("shed");
+    if let Some(r) = args.flag("retries") {
+        opts.retries = r.parse().context("--retries")?;
+    }
+    if let Some(b) = args.flag("backoff-ms") {
+        opts.backoff_ms = b.parse().context("--backoff-ms")?;
+    }
+    if let Some(d) = args.flag("deadline-ms") {
+        // 0 disables the default watchdog (jobs can still pin their
+        // own timeout_ms).
+        let ms: u64 = d.parse().context("--deadline-ms")?;
+        opts.deadline_ms = (ms > 0).then_some(ms);
+    }
+    opts.journal = args.flag("journal").map(str::to_string);
+    opts.resume = args.has("resume");
+    if let Some(n) = args.flag("stats-every") {
+        opts.stats_every = Some(n.parse::<u64>().context("--stats-every")?).filter(|&n| n > 0);
+    }
+
+    // Cache budget: the env side (SPADA_CACHE_ENTRIES/SPADA_CACHE_BYTES)
+    // resolves in machine/options.rs like every other SPADA_* knob;
+    // flags win over env.
+    let mut budget = CacheBudget::from_env();
+    if let Some(n) = args.flag("cache-entries") {
+        budget.max_entries =
+            Some(n.parse::<usize>().context("--cache-entries")?).filter(|&n| n > 0);
+    }
+    if let Some(n) = args.flag("cache-bytes") {
+        budget.max_bytes = Some(n.parse::<u64>().context("--cache-bytes")?).filter(|&n| n > 0);
+    }
+    let cache = PlanCache::bounded(budget);
+
+    sig::install();
+    let shutdown = &sig::SHUTDOWN;
+
+    let mut out: Box<dyn std::io::Write> = match args.flag("out") {
+        Some(path) => Box::new(std::fs::File::create(path).context(path.to_string())?),
+        None => Box::new(std::io::stdout()),
+    };
+
+    let t0 = std::time::Instant::now();
+    let summary = if let Some(path) = args.flag("listen") {
+        serve_listen(path, &opts, &cache, out.as_mut(), shutdown)?
+    } else {
+        match args.flag("jobs") {
+            Some("-") | None => serve::serve(
+                std::io::stdin(),
+                &opts,
+                &cache,
+                out.as_mut(),
+                &mut std::io::stderr(),
+                shutdown,
+            )?,
+            Some(path) => {
+                let f = std::fs::File::open(path).context(path.to_string())?;
+                serve::serve(f, &opts, &cache, out.as_mut(), &mut std::io::stderr(), shutdown)?
+            }
+        }
+    };
+
+    // Operator summary on stderr (stdout is the row stream).
+    eprintln!(
+        "serve: {} row(s) in {:.1} s — {} ok, {} error(s) ({} shed), {} skipped via journal, \
+         {} retry attempt(s); plan cache {} hit(s) / {} miss(es), {} eviction(s), \
+         {} entries live{}",
+        summary.rows,
+        t0.elapsed().as_secs_f64(),
+        summary.ok,
+        summary.errors,
+        summary.shed,
+        summary.skipped,
+        summary.retries,
+        cache.hits(),
+        cache.misses(),
+        cache.evictions(),
+        cache.len(),
+        if summary.drained { " — drained on signal" } else { "" },
+    );
+    Ok(())
+}
+
 fn print_help() {
     println!(
         "spada — SpaDA compiler + WSE-2 simulator (paper reproduction)\n\
@@ -718,6 +908,18 @@ fn print_help() {
          \x20    becomes an error row, never a batch abort; rows are byte-identical at any\n\
          \x20    --pool width. Thread policy: pool x inner <= budget [default: host\n\
          \x20    parallelism]. `spada bench --exp fleet` benchmarks this engine)\n\
+         \x20 spada serve [--jobs FILE|-] [--listen SOCK] [--pool N] [--budget N]\n\
+         \x20   [--queue N] [--shed] [--retries N] [--backoff-ms N] [--deadline-ms N]\n\
+         \x20   [--journal F] [--resume] [--stats-every N] [--cache-entries N]\n\
+         \x20   [--cache-bytes N] [--out FILE]\n\
+         \x20   (long-lived batch service: specs stream in continuously, rows stream out\n\
+         \x20    as their input-order prefix completes. Bounded plan cache with LRU\n\
+         \x20    eviction; bounded admission queue [--shed emits overload error rows\n\
+         \x20    instead of blocking]; default per-job deadline [0 disables] with\n\
+         \x20    transient-failure retry; SIGTERM/SIGINT drains gracefully [second\n\
+         \x20    signal aborts]; --journal + --resume skip already-completed ids after\n\
+         \x20    a restart, keeping concatenated output byte-identical; --stats-every\n\
+         \x20    emits heartbeat JSON on stderr. See docs/serve.md)\n\
          \x20 spada loc\n\
          \n\
          Ablation flags: --no-fusion --no-recycling --no-copy-elim --no-check\n\
@@ -735,6 +937,8 @@ fn print_help() {
          \x20                       (the flag wins when both are given)\n\
          \x20         SPADA_TIMEOUT_MS=N wall-clock watchdog: abort a hung run after N ms\n\
          \x20                       with a timeout error naming the busiest endpoints\n\
+         \x20         SPADA_CACHE_ENTRIES=N / SPADA_CACHE_BYTES=N bound the `spada serve`\n\
+         \x20                       plan cache (LRU eviction; flags win; unset = unbounded)\n\
          Kernels: {}",
         kernels::sources().iter().map(|(n, _)| *n).collect::<Vec<_>>().join(", ")
     );

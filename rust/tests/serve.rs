@@ -1,0 +1,314 @@
+//! Integration tests for `spada serve` — the long-lived service loop:
+//! journal + resume byte-identity, admission-control shedding, bounded
+//! retry, graceful drain on the shutdown flag, heartbeat stats, and the
+//! bounded plan cache holding its budget under many-shape streams.
+
+use spada::fleet::{serve, FleetOptions, PlanCache, ServeOptions, ServeSummary};
+use spada::machine::CacheBudget;
+use std::io::{Cursor, Read};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Run a serve session over an in-memory input, returning the summary,
+/// the emitted row bytes and the stats (stderr) bytes.
+fn run_serve(
+    input: &str,
+    opts: &ServeOptions,
+    cache: &PlanCache,
+) -> (ServeSummary, String, String) {
+    let mut out = Vec::new();
+    let mut stats = Vec::new();
+    let shutdown = AtomicU32::new(0);
+    let summary = serve::serve(
+        Cursor::new(input.as_bytes().to_vec()),
+        opts,
+        cache,
+        &mut out,
+        &mut stats,
+        &shutdown,
+    )
+    .expect("serve session");
+    (summary, String::from_utf8(out).unwrap(), String::from_utf8(stats).unwrap())
+}
+
+fn tmp_path(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("spada-serve-{}-{name}", std::process::id()))
+}
+
+/// A six-line stream: five jobs across three shapes plus one malformed
+/// line (which must become a `spec` error row at its line position).
+const MIXED_STREAM: &str = "{\"kernel\":\"broadcast\",\"g\":4}\n\
+     {\"kernel\":\"broadcast\",\"g\":4}\n\
+     {\"kernel\":\"broadcast\",\"g\":8}\n\
+     this is not json\n\
+     {\"kernel\":\"gemv\",\"g\":4}\n\
+     {\"kernel\":\"broadcast\",\"g\":4,\"seed\":7}\n";
+
+#[test]
+fn journal_resume_byte_identity() {
+    let j_full = tmp_path("journal-full");
+    let j_split = tmp_path("journal-split");
+    let opts = ServeOptions {
+        journal: Some(j_full.to_string_lossy().into_owned()),
+        ..ServeOptions::default()
+    };
+
+    // Reference: one uninterrupted run.
+    let cache = PlanCache::new();
+    let (summary, reference, _) = run_serve(MIXED_STREAM, &opts, &cache);
+    assert_eq!(summary.rows, 6);
+    assert!(!summary.drained);
+
+    // Interrupted twin: the first three lines complete and journal,
+    // then the "process" dies; a resumed run sees the whole stream.
+    let prefix: String =
+        MIXED_STREAM.lines().take(3).map(|l| format!("{l}\n")).collect();
+    let opts_split = ServeOptions {
+        journal: Some(j_split.to_string_lossy().into_owned()),
+        ..ServeOptions::default()
+    };
+    let cache = PlanCache::new();
+    let (s1, part1, _) = run_serve(&prefix, &opts_split, &cache);
+    assert_eq!(s1.rows, 3);
+    let opts_resume = ServeOptions { resume: true, ..opts_split.clone() };
+    // A fresh cache too: the restarted process starts cold.
+    let cache = PlanCache::new();
+    let (s2, part2, _) = run_serve(MIXED_STREAM, &opts_resume, &cache);
+    assert_eq!(s2.skipped, 3, "the journaled prefix is skipped, not re-run");
+    assert_eq!(s2.rows, 3);
+
+    assert_eq!(
+        reference,
+        format!("{part1}{part2}"),
+        "interrupted+resumed output must be byte-identical to the uninterrupted run"
+    );
+    // The journals agree too: same ids, same order.
+    assert_eq!(
+        std::fs::read_to_string(&j_full).unwrap(),
+        std::fs::read_to_string(&j_split).unwrap()
+    );
+    let _ = std::fs::remove_file(&j_full);
+    let _ = std::fs::remove_file(&j_split);
+}
+
+#[test]
+fn resume_requires_a_journal() {
+    let opts = ServeOptions { resume: true, ..ServeOptions::default() };
+    let mut out = Vec::new();
+    let mut stats = Vec::new();
+    let shutdown = AtomicU32::new(0);
+    let err = serve::serve(
+        Cursor::new(Vec::new()),
+        &opts,
+        &PlanCache::new(),
+        &mut out,
+        &mut stats,
+        &shutdown,
+    )
+    .unwrap_err();
+    assert!(err.to_string().contains("--journal"), "got: {err}");
+}
+
+#[test]
+fn overload_shed_emits_structured_rows() {
+    // One worker, queue of one, shedding on. The first job holds the
+    // worker for several backoff rounds (injected transient failures),
+    // so the burst behind it overflows the queue and sheds.
+    let head = "{\"kernel\":\"broadcast\",\"g\":4,\"id\":\"slow\",\"inject_fail\":2}\n";
+    let burst: String = (0..8)
+        .map(|i| format!("{{\"kernel\":\"broadcast\",\"g\":4,\"id\":\"q{i}\"}}\n"))
+        .collect();
+    let opts = ServeOptions {
+        fleet: FleetOptions { pool: 1, budget: 1 },
+        queue_cap: 1,
+        shed: true,
+        retries: 2,
+        backoff_ms: 60,
+        ..ServeOptions::default()
+    };
+    let cache = PlanCache::new();
+    let (summary, rows, _) = run_serve(&format!("{head}{burst}"), &opts, &cache);
+    assert_eq!(summary.rows, 9, "every job gets a row, shed or not");
+    assert!(summary.shed >= 1, "the burst must shed at least one job:\n{rows}");
+    assert_eq!(summary.shed, rows.matches("\"kind\":\"overload\"").count() as u64);
+    assert!(
+        rows.contains("admission queue full"),
+        "shed rows carry the structured overload diagnostic"
+    );
+    // Rows still arrive in input order: `slow` first.
+    assert!(rows.starts_with("{\"id\":\"slow\""), "got: {rows}");
+}
+
+#[test]
+fn transient_failures_retry_until_success() {
+    let input = "{\"kernel\":\"broadcast\",\"g\":4,\"id\":\"flaky\",\"inject_fail\":1}\n";
+    let opts =
+        ServeOptions { retries: 1, backoff_ms: 1, ..ServeOptions::default() };
+    let cache = PlanCache::new();
+    let (summary, rows, _) = run_serve(input, &opts, &cache);
+    assert!(rows.contains("\"ok\":true"), "attempt 2 must succeed: {rows}");
+    assert!(rows.contains("\"attempts\":2"), "the row records both attempts: {rows}");
+    assert_eq!(summary.retries, 1);
+    assert_eq!(summary.ok, 1);
+
+    // Without retry budget the same job is a panic error row.
+    let opts = ServeOptions { retries: 0, ..ServeOptions::default() };
+    let cache = PlanCache::new();
+    let (summary, rows, _) = run_serve(input, &opts, &cache);
+    assert!(rows.contains("\"kind\":\"panic\"") && rows.contains("\"attempts\":1"), "{rows}");
+    assert_eq!(summary.errors, 1);
+    assert_eq!(summary.retries, 0);
+}
+
+#[test]
+fn deterministic_failures_are_not_retried() {
+    // An unknown kernel fails identically on every attempt; the retry
+    // budget must not be spent re-proving it.
+    let input = "{\"kernel\":\"no_such_kernel\",\"id\":\"det\"}\n";
+    let opts =
+        ServeOptions { retries: 3, backoff_ms: 1, ..ServeOptions::default() };
+    let cache = PlanCache::new();
+    let (summary, rows, _) = run_serve(input, &opts, &cache);
+    assert!(rows.contains("\"ok\":false") && rows.contains("\"attempts\":1"), "{rows}");
+    assert_eq!(summary.retries, 0);
+}
+
+#[test]
+fn pool_width_does_not_change_output_bytes() {
+    let mut reference = None;
+    for pool in [1, 4] {
+        let opts = ServeOptions {
+            fleet: FleetOptions { pool, budget: 4 },
+            ..ServeOptions::default()
+        };
+        let cache = PlanCache::new();
+        let (_, rows, _) = run_serve(MIXED_STREAM, &opts, &cache);
+        match &reference {
+            None => reference = Some(rows),
+            Some(r) => assert_eq!(r, &rows, "pool {pool} changed the row bytes"),
+        }
+    }
+}
+
+/// Yields its payload, then blocks until the release flag rises, then
+/// reports EOF — a stand-in for a stalled client connection, so the
+/// drain path (not input EOF) ends the session.
+struct StallingReader {
+    payload: Cursor<Vec<u8>>,
+    release: Arc<AtomicU32>,
+}
+
+impl Read for StallingReader {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let n = self.payload.read(buf)?;
+        if n > 0 {
+            return Ok(n);
+        }
+        while self.release.load(Ordering::SeqCst) == 0 {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        Ok(0)
+    }
+}
+
+#[test]
+fn shutdown_flag_drains_and_journals_the_prefix() {
+    let journal = tmp_path("journal-drain");
+    let payload = "{\"kernel\":\"broadcast\",\"g\":4}\n\
+         {\"kernel\":\"broadcast\",\"g\":4}\n\
+         {\"kernel\":\"broadcast\",\"g\":8}\n\
+         {\"kernel\":\"gemv\",\"g\":4}\n";
+    let release = Arc::new(AtomicU32::new(0));
+    let reader = StallingReader {
+        payload: Cursor::new(payload.as_bytes().to_vec()),
+        release: Arc::clone(&release),
+    };
+    let opts = ServeOptions {
+        journal: Some(journal.to_string_lossy().into_owned()),
+        ..ServeOptions::default()
+    };
+    let cache = PlanCache::new();
+    let shutdown = AtomicU32::new(0);
+    let mut out = Vec::new();
+    let mut stats = Vec::new();
+    let summary = std::thread::scope(|scope| {
+        let handle = scope.spawn(|| {
+            serve::serve(reader, &opts, &cache, &mut out, &mut stats, &shutdown)
+                .expect("serve session")
+        });
+        // Wait until all four jobs have been journaled (the stream is
+        // fully processed, the reader is stalling), then signal.
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            let done = std::fs::read_to_string(&journal)
+                .map(|t| t.lines().count())
+                .unwrap_or(0);
+            if done >= 4 {
+                break;
+            }
+            assert!(Instant::now() < deadline, "jobs never completed");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        shutdown.store(1, Ordering::SeqCst);
+        let summary = handle.join().expect("serve thread");
+        release.store(1, Ordering::SeqCst); // let the reader exit too
+        summary
+    });
+    assert!(summary.drained, "the session must report a drain, not EOF");
+    assert_eq!(summary.rows, 4);
+    let rows = String::from_utf8(out).unwrap();
+    let journal_ids: Vec<String> = std::fs::read_to_string(&journal)
+        .unwrap()
+        .lines()
+        .map(str::to_string)
+        .collect();
+    assert_eq!(journal_ids, vec!["job-1", "job-2", "job-3", "job-4"]);
+    for id in &journal_ids {
+        assert!(rows.contains(&format!("\"id\":\"{id}\"")), "journaled id {id} missing a row");
+    }
+    let _ = std::fs::remove_file(&journal);
+}
+
+#[test]
+fn heartbeat_stats_stream_and_reconcile() {
+    let opts = ServeOptions { stats_every: Some(2), ..ServeOptions::default() };
+    let cache = PlanCache::new();
+    let (summary, _, stats) = run_serve(MIXED_STREAM, &opts, &cache);
+    assert_eq!(summary.rows, 6);
+    let heartbeats = stats.matches("\"event\":\"heartbeat\"").count();
+    let finals = stats.matches("\"event\":\"final\"").count();
+    assert_eq!(heartbeats, 3, "6 rows at --stats-every 2:\n{stats}");
+    assert_eq!(finals, 1, "exactly one final line:\n{stats}");
+    let final_line = stats.lines().last().unwrap();
+    assert!(final_line.contains("\"event\":\"final\""));
+    assert!(final_line.contains("\"rows\":6"));
+    assert!(final_line.contains("\"drained\":false"));
+    // The cache counter set on the final line reconciles exactly.
+    assert!(final_line.contains(&format!(
+        "\"cache\":{{\"lookups\":{},\"hits\":{},\"misses\":{}",
+        cache.lookups(),
+        cache.hits(),
+        cache.misses()
+    )));
+    assert_eq!(cache.hits() + cache.misses(), cache.lookups());
+}
+
+#[test]
+fn bounded_cache_holds_budget_under_many_shapes() {
+    // Acceptance pin: a many-shape workload against a small budget
+    // stays within it, and the counters reconcile exactly.
+    let input: String = (0..12)
+        .map(|i| format!("{{\"kernel\":\"broadcast\",\"g\":{}}}\n", 4 + i))
+        .collect();
+    let cache = PlanCache::bounded(CacheBudget { max_entries: Some(3), max_bytes: None });
+    let (summary, _, _) = run_serve(&input, &ServeOptions::default(), &cache);
+    assert_eq!(summary.rows, 12);
+    assert_eq!(summary.ok, 12);
+    assert!(cache.len() <= 3, "budget violated: {} entries live", cache.len());
+    assert_eq!(cache.hits() + cache.misses(), cache.lookups());
+    assert!(cache.evictions() <= cache.misses());
+    assert_eq!(cache.lookups(), 12);
+    assert!(cache.evictions() >= 9, "12 distinct shapes through 3 slots must evict");
+}
