@@ -41,7 +41,7 @@ pub use cache::PlanCache;
 pub use job::{JobResult, JobSpec, RowMetrics};
 pub use serve::{ServeOptions, ServeSummary};
 
-use crate::harness::common::{scaled_binds, stage_random_inputs};
+use crate::harness::common::{scaled_binds, stage_kernel_inputs};
 use crate::machine::{FaultPlan, MachineConfig, SimOptions};
 use crate::passes::Options;
 use std::collections::HashSet;
@@ -222,7 +222,12 @@ pub(crate) fn run_job_attempt(
         Ok(s) => s,
         Err(e) => return JobResult::from_sim_error(&spec.id, &spec.kernel, &grid, &e),
     };
-    stage_random_inputs(&mut sim, spec.seed);
+    // Seeded noise for dense kernels; sparse kernels additionally get
+    // the registry's demo CSR matrix (matching the compiled binds), so
+    // an `spmv_*` job simulates a real matrix, not noise.
+    if let Err(e) = stage_kernel_inputs(&mut sim, &spec.kernel, spec.g, spec.k, spec.seed) {
+        return JobResult::failed(&spec.id, &spec.kernel, &grid, "stage", format!("{e:#}"));
+    }
     match sim.run() {
         Ok(report) => JobResult {
             id: spec.id.clone(),

@@ -43,27 +43,37 @@ pub fn rand_vec(seed: u64, n: usize) -> Vec<f32> {
 
 /// Bind list and grid geometry for one library kernel at scale factor
 /// `g` with K-length per-PE vectors: returns `(binds, width, height)`.
-/// The single encoding of every kernel's meta-parameters, shared by
-/// the `sim_scaling` bench and the cross-thread determinism suites so
-/// a renamed bind or reshaped grid is edited in exactly one place.
-/// GEMV variants use `n = 2g` (2×2 blocks per PE).
+/// Thin wrapper over the kernel registry ([`kernels::spec`] →
+/// [`kernels::KernelSpec::scaled_binds`]) so the single encoding of
+/// every kernel's meta-parameters — dense grid recipes and sparse
+/// matrix-shaped binds alike — lives in one place. GEMV variants use
+/// `n = 2g` (2×2 blocks per PE); sparse kernels derive CSR extents
+/// from the seeded demo problem.
 pub fn scaled_binds(
     kernel: &str,
     g: i64,
     k: i64,
 ) -> Result<(Vec<(&'static str, i64)>, i64, i64)> {
-    Ok(match kernel {
-        "chain_reduce" => (vec![("K", k), ("N", g)], g.max(2), 1),
-        "broadcast" => (vec![("K", k), ("N", g)], g, 1),
-        "tree_reduce" | "two_phase_reduce" => {
-            (vec![("K", k), ("NX", g), ("NY", g)], g, g)
-        }
-        "gemv" | "gemv_tree" => {
-            let n = 2 * g;
-            (vec![("M", n), ("N", n), ("NX", g), ("NY", g)], g, g)
-        }
-        other => return Err(anyhow!("not a scalable library kernel: {other}")),
-    })
+    kernels::spec(kernel)?.scaled_binds(g, k)
+}
+
+/// Stage the registry workload for `kernel` at `(g, k)`: dense kernels
+/// get the seeded noise of [`stage_random_inputs`]; sparse kernels get
+/// the matching seeded demo matrix (valid CSR, consistent with the
+/// `NNZP` bind that [`scaled_binds`] returned), staged *after* the
+/// noise pass so every declared input is populated either way.
+pub fn stage_kernel_inputs(
+    sim: &mut Simulator,
+    kernel: &str,
+    g: i64,
+    k: i64,
+    seed: u64,
+) -> Result<()> {
+    stage_random_inputs(sim, seed);
+    if kernels::spec(kernel)?.sparse {
+        crate::sparse::stage_demo(sim, kernel, g, k)?;
+    }
+    Ok(())
 }
 
 /// Stage deterministic noise into every input binding of `sim` — one

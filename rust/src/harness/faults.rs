@@ -24,7 +24,7 @@
 //! [`pool`]: crate::fleet::pool
 
 use crate::fleet::{pool, PlanCache};
-use crate::harness::common::{output_words, scaled_binds, stage_random_inputs};
+use crate::harness::common::{output_words, scaled_binds, stage_kernel_inputs};
 use crate::kernels::CompiledKernel;
 use crate::machine::fault::{classify, FaultPlan, FaultSpec, Outcome};
 use crate::machine::{Direction, MachineConfig, SimOptions};
@@ -32,9 +32,13 @@ use crate::passes::Options;
 use anyhow::{anyhow, Context, Result};
 use std::sync::Arc;
 
-/// The six library kernels the campaign sweeps.
-pub const KERNELS: &[&str] =
-    &["chain_reduce", "broadcast", "tree_reduce", "two_phase_reduce", "gemv", "gemv_tree"];
+/// The kernels the campaign sweeps: the whole registry — the six
+/// dense paper kernels plus the sparse SpMV variants (their seeded
+/// demo matrices stage through [`stage_kernel_inputs`], so sparse
+/// subjects run a real CSR workload, not noise-shaped pointers).
+pub fn campaign_kernels() -> Vec<&'static str> {
+    crate::kernels::names()
+}
 
 /// Input seed shared by the clean reference and every faulted run.
 const INPUT_SEED: u64 = 0xCAFE;
@@ -43,7 +47,7 @@ const INPUT_SEED: u64 = 0xCAFE;
 pub struct CampaignOpts {
     /// Trim the sweep for CI: one injection time per site.
     pub quick: bool,
-    /// Restrict to one kernel (default: all of [`KERNELS`]).
+    /// Restrict to one kernel (default: all of [`campaign_kernels`]).
     pub kernel: Option<String>,
     /// Injection-time grid points per site (ignored under `quick`).
     pub grid: usize,
@@ -108,6 +112,9 @@ fn esc(s: &str) -> String {
 struct Subject {
     name: &'static str,
     ck: Arc<CompiledKernel>,
+    /// Density knob the subject was compiled at — faulted runs must
+    /// stage the identical workload (sparse staging depends on it).
+    k: i64,
     reference: Vec<(String, Vec<u32>)>,
     clean_cycles: u64,
 }
@@ -133,10 +140,10 @@ fn prepare(
         .map_err(anyhow::Error::msg)
         .with_context(|| format!("compiling {name} for the fault campaign"))?;
     let mut sim = ck.simulator_with(base)?;
-    stage_random_inputs(&mut sim, INPUT_SEED);
+    stage_kernel_inputs(&mut sim, name, 4, k, INPUT_SEED)?;
     let report = sim.run().map_err(|e| anyhow!("clean {name} run failed: {e}"))?;
     let reference = output_words(&sim);
-    Ok(Subject { name, ck, reference, clean_cycles: report.cycles })
+    Ok(Subject { name, ck, k, reference, clean_cycles: report.cycles })
 }
 
 /// Enumerate this subject's single-fault sites, in a deterministic
@@ -190,7 +197,7 @@ fn run_site(s: &Subject, spec: FaultSpec, base: &SimOptions) -> Result<Row> {
     let opts = base.clone().faults(FaultPlan::single(spec));
     let mut sim =
         s.ck.simulator_with(&opts).map_err(|e| anyhow!("{}: site {spec}: {e}", s.name))?;
-    stage_random_inputs(&mut sim, INPUT_SEED);
+    stage_kernel_inputs(&mut sim, s.name, 4, s.k, INPUT_SEED)?;
     let result = sim.run();
     let outputs = output_words(&sim);
     let cycles = result.as_ref().map(|r| r.cycles).unwrap_or(0);
@@ -213,13 +220,14 @@ fn run_site(s: &Subject, spec: FaultSpec, base: &SimOptions) -> Result<Row> {
 /// Run the full campaign: every subject's sites through a worker pool,
 /// rows written site-indexed (deterministic order), summary to stdout.
 pub fn campaign(opts: &CampaignOpts) -> Result<()> {
+    let all = campaign_kernels();
     let selected: Vec<&'static str> = match &opts.kernel {
-        None => KERNELS.to_vec(),
+        None => all,
         Some(k) => {
-            let Some(&name) = KERNELS.iter().find(|&&n| n == k.as_str()) else {
+            let Some(&name) = all.iter().find(|&&n| n == k.as_str()) else {
                 return Err(anyhow!(
                     "unknown campaign kernel {k} (try: {})",
-                    KERNELS.join(", ")
+                    all.join(", ")
                 ));
             };
             vec![name]

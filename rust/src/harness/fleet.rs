@@ -198,7 +198,7 @@ mod tests {
         assert_eq!(parsed.runs[0].kernel, "fleet_mixed");
         assert_eq!(parsed.runs[0].grid, "batch");
         assert_eq!(parsed.runs[0].threads, 4);
-        assert!((parsed.runs[0].events_per_sec - 1.0e6).abs() < 1.0);
+        assert!((parsed.runs[0].events_per_sec.unwrap() - 1.0e6).abs() < 1.0);
     }
 
     #[test]

@@ -19,6 +19,7 @@ pub mod fig7;
 pub mod fig8;
 pub mod fig9;
 pub mod sim_scaling;
+pub mod sparse;
 pub mod verify;
 
 use anyhow::{bail, Result};
@@ -43,6 +44,10 @@ pub fn run(exp: &str, quick: bool) -> Result<()> {
         // its own leg (the CI bench job does, after archiving the sim
         // sweep).
         "fleet" => fleet::run(quick),
+        // Not part of "all" either: it writes `BENCH_sparse.json` (its
+        // own baseline-gated artifact) and is a post-paper extension,
+        // not a paper table/figure — the CI sparse leg runs it.
+        "sparse" => sparse::run(quick),
         "verify" => verify::run(),
         "all" => {
             for e in ALL {
@@ -51,6 +56,8 @@ pub fn run(exp: &str, quick: bool) -> Result<()> {
             }
             Ok(())
         }
-        other => bail!("unknown experiment {other} (try: {}, fleet, or all)", ALL.join(", ")),
+        other => {
+            bail!("unknown experiment {other} (try: {}, fleet, sparse, or all)", ALL.join(", "))
+        }
     }
 }

@@ -1,6 +1,7 @@
 //! `spada bench --exp sim` — reproducible simulator scaling sweep.
 //!
-//! Runs the six paper kernels across growing fabric sizes (4×4 up to
+//! Runs the six dense paper kernels ([`crate::kernels::dense_names`])
+//! across growing fabric sizes (4×4 up to
 //! 128×128 in the full sweep; `--quick` stops at 16) at every worker
 //! thread count in [`THREAD_COUNTS`], and records, per run, the
 //! simulated cycle count, host wall time, event count, event-loop
@@ -103,11 +104,14 @@ pub fn sweep(quick: bool) -> Result<Vec<ScalePoint>> {
     let cache = PlanCache::new();
     let grids: &[i64] = if quick { &[4, 8, 16] } else { &[4, 8, 16, 32, 64, 128] };
     let k = 64i64;
-    let kernels: [&'static str; 6] =
-        ["chain_reduce", "broadcast", "tree_reduce", "two_phase_reduce", "gemv", "gemv_tree"];
+    // The dense-regular subset only: sparse kernels have their own
+    // sweep (`--exp sparse`) with matrix-shaped workloads and
+    // per-nonzero metrics, and adding them here would silently change
+    // every blessed `BENCH_sim.json` row set.
+    let kernels = crate::kernels::dense_names();
     let mut points = vec![];
     for &g in grids {
-        for kernel in kernels {
+        for &kernel in &kernels {
             let (binds, w, h) = scaled_binds(kernel, g, k)?;
             let cfg = MachineConfig::with_grid(w, h);
             let ck = cache
@@ -222,12 +226,13 @@ pub fn run(quick: bool) -> Result<()> {
 
 /// One parsed run row from a `BENCH_sim.json`-format file.
 ///
-/// Only `kernel`, `grid` and `events_per_sec` are required — they have
-/// been in every row since the sweep first existed. **Everything that
-/// arrived later is uniformly optional**: a baseline blessed before a
-/// field existed must parse (with `None`) rather than hard-fail the
-/// gate, and newer row kinds (the `--exp fleet` rows with
-/// `sims_per_sec`) must parse with the same code path.
+/// Only `kernel` and `grid` are required, plus **one** gating metric:
+/// `events_per_sec` (dense sweep / fleet rows) or `cycles_per_nnz`
+/// (`BENCH_sparse.json` rows). **Everything that arrived later is
+/// uniformly optional**: a baseline blessed before a field existed
+/// must parse (with `None`) rather than hard-fail the gate, and newer
+/// row kinds (the `--exp fleet` rows with `sims_per_sec`, the sparse
+/// rows with per-nonzero metrics) must parse with the same code path.
 #[derive(Clone, Debug)]
 pub struct BenchRun {
     pub kernel: String,
@@ -235,7 +240,9 @@ pub struct BenchRun {
     /// Worker threads the row was measured at (1 when the file predates
     /// the threads field, so old baselines keep comparing 1-vs-1).
     pub threads: usize,
-    pub events_per_sec: f64,
+    /// Dense-sweep throughput (absent on sparse rows, which gate on
+    /// `cycles_per_nnz` instead).
+    pub events_per_sec: Option<f64>,
     /// Buffer-model observables (absent before the finite-buffer PR).
     pub peak_queue_depth: Option<f64>,
     pub stall_cycles: Option<f64>,
@@ -246,6 +253,23 @@ pub struct BenchRun {
     pub barrier_wait_ms: Option<f64>,
     /// Batch-fleet throughput (only on `--exp fleet` rows).
     pub sims_per_sec: Option<f64>,
+    /// Sparse-workload fields (only on `BENCH_sparse.json` rows).
+    pub nnz: Option<f64>,
+    pub cycles_per_nnz: Option<f64>,
+    pub wavelets_per_nnz: Option<f64>,
+}
+
+impl BenchRun {
+    /// The higher-is-better gating score: events/s for dense rows,
+    /// inverse cycles-per-nonzero for sparse rows (simulated cycles are
+    /// deterministic, so sparse regressions are exact, not noisy). One
+    /// scale lets the geomean/delta machinery serve both artifacts;
+    /// rows only ever pair with rows of the same (kernel, grid,
+    /// threads) key, so the two metrics never mix inside one delta.
+    pub fn score(&self) -> Option<f64> {
+        self.events_per_sec
+            .or_else(|| self.cycles_per_nnz.map(|c| 1.0 / c.max(1e-12)))
+    }
 }
 
 /// A parsed bench file.
@@ -290,8 +314,11 @@ pub fn parse_bench_json(text: &str) -> Result<BenchFile> {
         let grid =
             extract_str(line, "grid").ok_or_else(|| anyhow!("bad run row (no grid): {line}"))?;
         let threads = extract_num(line, "threads").map(|t| t as usize).unwrap_or(1);
-        let events_per_sec = extract_num(line, "events_per_sec")
-            .ok_or_else(|| anyhow!("bad run row (no events_per_sec): {line}"))?;
+        let events_per_sec = extract_num(line, "events_per_sec");
+        let cycles_per_nnz = extract_num(line, "cycles_per_nnz");
+        if events_per_sec.is_none() && cycles_per_nnz.is_none() {
+            bail!("bad run row (neither events_per_sec nor cycles_per_nnz): {line}");
+        }
         runs.push(BenchRun {
             kernel,
             grid,
@@ -303,6 +330,9 @@ pub fn parse_bench_json(text: &str) -> Result<BenchFile> {
             shard_imbalance: extract_num(line, "shard_imbalance"),
             barrier_wait_ms: extract_num(line, "barrier_wait_ms"),
             sims_per_sec: extract_num(line, "sims_per_sec"),
+            nnz: extract_num(line, "nnz"),
+            cycles_per_nnz,
+            wavelets_per_nnz: extract_num(line, "wavelets_per_nnz"),
         });
     }
     if runs.is_empty() {
@@ -311,17 +341,19 @@ pub fn parse_bench_json(text: &str) -> Result<BenchFile> {
     Ok(BenchFile { placeholder, runs })
 }
 
-/// Per-kernel comparison outcome (geometric-mean events/s over the
-/// (grid, threads) rows present in both files — rows only ever compare
-/// against the same thread count, so a 1-thread baseline is never
-/// diffed against a parallel run).
+/// Per-kernel comparison outcome (geometric-mean [`BenchRun::score`] —
+/// events/s, or 1/cycles-per-nonzero on sparse rows — over the (grid,
+/// threads) rows present in both files; rows only ever compare against
+/// the same thread count, so a 1-thread baseline is never diffed
+/// against a parallel run).
 #[derive(Clone, Debug)]
 pub struct KernelDelta {
     pub kernel: String,
     pub matched_runs: usize,
     pub base_eps: f64,
     pub cur_eps: f64,
-    /// Relative change: `cur/base - 1` (negative = regression).
+    /// Relative change: `cur/base - 1` (negative = regression — a
+    /// throughput drop, or equivalently a cycles-per-nonzero rise).
     pub delta: f64,
 }
 
@@ -352,15 +384,20 @@ pub fn missing_rows(base: &BenchFile, cur: &BenchFile) -> Vec<String> {
 pub fn compare_runs(base: &BenchFile, cur: &BenchFile) -> Vec<KernelDelta> {
     let mut base_by: BTreeMap<(&str, &str, usize), f64> = BTreeMap::new();
     for r in &base.runs {
-        base_by.insert((r.kernel.as_str(), r.grid.as_str(), r.threads), r.events_per_sec);
+        if let Some(s) = r.score() {
+            base_by.insert((r.kernel.as_str(), r.grid.as_str(), r.threads), s);
+        }
     }
     let mut per_kernel: BTreeMap<&str, (Vec<f64>, Vec<f64>)> = BTreeMap::new();
     for r in &cur.runs {
-        if let Some(&b) = base_by.get(&(r.kernel.as_str(), r.grid.as_str(), r.threads)) {
-            let e = per_kernel.entry(r.kernel.as_str()).or_default();
-            e.0.push(b);
-            e.1.push(r.events_per_sec);
-        }
+        let (Some(&b), Some(c)) =
+            (base_by.get(&(r.kernel.as_str(), r.grid.as_str(), r.threads)), r.score())
+        else {
+            continue;
+        };
+        let e = per_kernel.entry(r.kernel.as_str()).or_default();
+        e.0.push(b);
+        e.1.push(c);
     }
     per_kernel
         .into_iter()
@@ -378,7 +415,8 @@ pub fn compare_runs(base: &BenchFile, cur: &BenchFile) -> Vec<KernelDelta> {
 }
 
 /// The CLI gate: parse both files, print the per-kernel delta table,
-/// and fail (`Err`) if any kernel's events/s dropped more than
+/// and fail (`Err`) if any kernel's score (events/s, or inverse
+/// cycles-per-nonzero for `BENCH_sparse.json` rows) dropped more than
 /// `threshold` (0.25 = 25%) below the baseline. A placeholder baseline
 /// passes with a notice — see ROADMAP.md for the blessing procedure.
 pub fn compare_files(baseline_path: &str, current_path: &str, threshold: f64) -> Result<()> {
@@ -410,7 +448,7 @@ pub fn compare_files(baseline_path: &str, current_path: &str, threshold: f64) ->
         );
     }
     let mut table =
-        Table::new(&["kernel", "runs", "base events/s", "now events/s", "delta", "verdict"]);
+        Table::new(&["kernel", "runs", "base score", "now score", "delta", "verdict"]);
     let mut regressed: Vec<String> = vec![];
     for d in &deltas {
         let fail = d.delta < -threshold;
@@ -510,7 +548,9 @@ mod tests {
             assert_eq!(r.kernel, p.kernel);
             assert_eq!(r.grid, p.grid);
             assert_eq!(r.threads, p.threads);
-            assert!((r.events_per_sec - p.events_per_sec).abs() <= 0.06 * (1.0 + p.events_per_sec));
+            let eps = r.events_per_sec.expect("dense rows always carry events_per_sec");
+            assert!((eps - p.events_per_sec).abs() <= 0.06 * (1.0 + p.events_per_sec));
+            assert!(r.cycles_per_nnz.is_none(), "dense rows carry no sparse metrics");
         }
     }
 
@@ -523,13 +563,16 @@ mod tests {
                     kernel: k.to_string(),
                     grid: g.to_string(),
                     threads: *t,
-                    events_per_sec: *e,
+                    events_per_sec: Some(*e),
                     peak_queue_depth: None,
                     stall_cycles: None,
                     epochs: None,
                     shard_imbalance: None,
                     barrier_wait_ms: None,
                     sims_per_sec: None,
+                    nnz: None,
+                    cycles_per_nnz: None,
+                    wavelets_per_nnz: None,
                 })
                 .collect(),
         }
@@ -600,11 +643,46 @@ mod tests {
         let f = parse_bench_json(text).unwrap();
         assert!(f.placeholder);
         assert_eq!(f.runs.len(), 1);
-        assert!((f.runs[0].events_per_sec - 123.4).abs() < 1e-9);
+        assert!((f.runs[0].events_per_sec.unwrap() - 123.4).abs() < 1e-9);
         // Rows without a threads field (pre-parallel baselines) parse
         // as 1-thread rows.
         assert_eq!(f.runs[0].threads, 1);
         assert!(parse_bench_json("{}").is_err());
+        // A row with neither gating metric is junk, not a silent pass.
+        assert!(parse_bench_json(
+            "{\"runs\": [\n{\"kernel\": \"gemv\", \"grid\": \"4x4\", \"cycles\": 7}\n]}"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn sparse_rows_gate_on_cycles_per_nnz() {
+        let sparse_row = |cpn: f64| BenchRun {
+            kernel: "spmv_rows:uniform".to_string(),
+            grid: "4x4".to_string(),
+            threads: 1,
+            events_per_sec: None,
+            peak_queue_depth: None,
+            stall_cycles: None,
+            epochs: None,
+            shard_imbalance: None,
+            barrier_wait_ms: None,
+            sims_per_sec: None,
+            nnz: Some(486.0),
+            cycles_per_nnz: Some(cpn),
+            wavelets_per_nnz: Some(0.83),
+        };
+        let base = BenchFile { placeholder: false, runs: vec![sparse_row(1.5)] };
+        // Cycles-per-nonzero doubles: score halves, the 25% gate trips.
+        let cur = BenchFile { placeholder: false, runs: vec![sparse_row(3.0)] };
+        let deltas = compare_runs(&base, &cur);
+        assert_eq!(deltas.len(), 1);
+        assert!((deltas[0].delta + 0.5).abs() < 1e-9, "{:?}", deltas[0]);
+        // Getting *faster* (cpn falls) is an improvement, not a trip.
+        let better = BenchFile { placeholder: false, runs: vec![sparse_row(1.0)] };
+        let deltas = compare_runs(&base, &better);
+        assert!(deltas[0].delta > 0.0, "{:?}", deltas[0]);
+        assert!(missing_rows(&base, &cur).is_empty());
     }
 
     #[test]
@@ -618,6 +696,7 @@ mod tests {
         assert!(r.peak_queue_depth.is_none() && r.stall_cycles.is_none());
         assert!(r.epochs.is_none() && r.shard_imbalance.is_none());
         assert!(r.barrier_wait_ms.is_none() && r.sims_per_sec.is_none());
+        assert!(r.nnz.is_none() && r.cycles_per_nnz.is_none() && r.wavelets_per_nnz.is_none());
         // A current sweep row fills the engine fields; a fleet row
         // fills sims_per_sec — the same parser reads all three ages.
         let new = "{\"runs\": [\n    {\"kernel\": \"gemv\", \"grid\": \"8x8\", \"threads\": 4, \

@@ -1,0 +1,228 @@
+//! Sparse workload bench: `spada bench --exp sparse` → `BENCH_sparse.json`.
+//!
+//! Runs the seeded matrix corpus (one matrix per structural class —
+//! uniform, power-law, banded) through all three SpMV dataflow
+//! variants *plus* the adaptive selector's pick, and reports
+//! **cycles-per-nonzero** and **wavelets-per-nonzero** for each. Two
+//! invariants are enforced on every run, not just observed:
+//!
+//! - every row is produced by an explicit `threads ∈ {1, 4}` sweep
+//!   with [`SimOptions`] (the ambient `SPADA_THREADS` is never read),
+//!   and the two engines must agree bit-for-bit — so the emitted file
+//!   is byte-identical under any `SPADA_THREADS`;
+//! - the selector must match the *measured* winner: on every matrix
+//!   class, `spmv_auto`'s cycles-per-nonzero must be ≤ the best fixed
+//!   variant's, or the bench fails loudly.
+//!
+//! Rows carry no wall-clock metric (cycles are simulated and
+//! deterministic), so `BENCH_sparse.json` is gated by
+//! `spada bench --compare` on cycles-per-nonzero, where *lower* is
+//! better — see `sim_scaling` for the shared parser/gate.
+
+use crate::bench::Table;
+use crate::kernels;
+use crate::machine::{MachineConfig, SimOptions};
+use crate::passes::Options;
+use crate::sparse::{
+    self, features, select, spmv_ref, CsrMatrix, Profile, Variant,
+};
+use anyhow::{anyhow, bail, Result};
+
+pub const OUT_FILE: &str = "BENCH_sparse.json";
+
+/// Corpus geometry: 64×64 matrices on a 4×4 grid — small enough for
+/// CI, large enough that the three classes separate decisively.
+pub const SIZE: usize = 64;
+pub const GRID: usize = 4;
+
+/// The seeded corpus: one matrix per structural class. Quick and full
+/// runs use the identical corpus (a matrix is milliseconds of
+/// simulation) so baseline row coverage never depends on the mode.
+pub fn corpus() -> Vec<(&'static str, Profile, u64)> {
+    vec![
+        ("uniform", Profile::Uniform { nnz_per_row: 8 }, 0xA11CE),
+        ("powerlaw", Profile::PowerLaw { max_row: SIZE }, 0xB0B),
+        ("banded", Profile::Banded { half_width: 2 }, 0xC0FFEE),
+    ]
+}
+
+/// One measured (variant, matrix) cell, identical at 1 and 4 threads.
+struct Cell {
+    cycles: u64,
+    wavelets: u64,
+}
+
+/// Compile + stage + run one variant on one matrix at an explicit
+/// thread count, verifying the output against the CPU oracle.
+fn run_once(
+    v: Variant,
+    a: &CsrMatrix,
+    x: &[f32],
+    threads: usize,
+) -> Result<(Cell, Vec<(String, Vec<u32>)>)> {
+    let staged = sparse::stage(v, a, x, GRID, GRID)?;
+    let cfg = MachineConfig::with_grid(GRID as i64, GRID as i64);
+    let ck = kernels::compile(v.kernel(), &staged.binds, &cfg, &Options::default())?;
+    let mut sim = ck.simulator_with(&SimOptions::default().threads(threads))?;
+    staged.apply(&mut sim)?;
+    let report = sim.run().map_err(|e| anyhow!("{} threads={threads}: {e}", v.kernel()))?;
+    let y = sim.get_output("y_out")?;
+    let want = spmv_ref(a, x);
+    for (r, (got, exp)) in y.iter().zip(want.iter()).enumerate() {
+        if (got - exp).abs() > 1e-3 * (1.0 + exp.abs()) {
+            bail!("{} threads={threads}: y[{r}] = {got}, oracle {exp}", v.kernel());
+        }
+    }
+    let outs = super::common::output_words(&sim);
+    Ok((Cell { cycles: report.cycles, wavelets: report.metrics.wavelets }, outs))
+}
+
+/// Run one variant at threads 1 and 4 and require bit-identity.
+fn run_variant(v: Variant, a: &CsrMatrix, x: &[f32]) -> Result<Cell> {
+    let (cell1, outs1) = run_once(v, a, x, 1)?;
+    let (cell4, outs4) = run_once(v, a, x, 4)?;
+    if cell1.cycles != cell4.cycles || cell1.wavelets != cell4.wavelets || outs1 != outs4 {
+        bail!("{}: run diverged between 1 and 4 worker threads", v.kernel());
+    }
+    Ok(cell1)
+}
+
+fn json_row(
+    kernel: &str,
+    class: &str,
+    threads: usize,
+    nnz: usize,
+    cell: &Cell,
+    selected: Option<Variant>,
+) -> String {
+    let cpn = cell.cycles as f64 / nnz as f64;
+    let wpn = cell.wavelets as f64 / nnz as f64;
+    let sel = match selected {
+        Some(v) => format!(", \"selected\": \"{}\"", v.kernel()),
+        None => String::new(),
+    };
+    format!(
+        "{{\"kernel\": \"{kernel}:{class}\", \"grid\": \"{g}x{g}\", \"pes\": {p}, \
+         \"threads\": {threads}, \"nnz\": {nnz}, \"cycles\": {cy}, \
+         \"cycles_per_nnz\": {cpn:.4}, \"wavelets_per_nnz\": {wpn:.4}{sel}}}",
+        g = GRID,
+        p = GRID * GRID,
+        cy = cell.cycles,
+    )
+}
+
+pub fn run(_quick: bool) -> Result<()> {
+    let mut rows: Vec<String> = vec![];
+    let mut table = Table::new(&[
+        "class", "nnz", "skew", "bandwidth", "variant", "cycles", "cyc/nnz", "wav/nnz", "pick",
+    ]);
+    let mut failures: Vec<String> = vec![];
+
+    for (class, profile, seed) in corpus() {
+        let a = sparse::generate(SIZE, SIZE, profile, seed);
+        let x = sparse::seeded_x(SIZE, seed ^ 0x5EED);
+        let f = features(&a);
+        let (pick, ests) = select(&a, GRID, GRID);
+
+        let mut cells: Vec<(Variant, Cell)> = vec![];
+        for v in Variant::ALL {
+            let cell = run_variant(v, &a, &x)?;
+            cells.push((v, cell));
+        }
+        // The adaptive row re-reports the picked variant's measurement
+        // (same compile, same staging — the selector only chooses).
+        let auto = &cells.iter().find(|(v, _)| *v == pick).unwrap().1;
+        let auto_cell = Cell { cycles: auto.cycles, wavelets: auto.wavelets };
+
+        let best = cells.iter().map(|(_, c)| c.cycles).min().unwrap();
+        if auto_cell.cycles > best {
+            let (bv, _) = cells.iter().find(|(_, c)| c.cycles == best).unwrap();
+            failures.push(format!(
+                "{class}: selector picked {} ({} cycles) but {} measured {} cycles \
+                 (estimates rows/outer/tree = {:?})",
+                pick.kernel(),
+                auto_cell.cycles,
+                bv.kernel(),
+                best,
+                ests,
+            ));
+        }
+
+        for (v, cell) in &cells {
+            for threads in [1usize, 4] {
+                rows.push(json_row(v.kernel(), class, threads, f.nnz, cell, None));
+            }
+            table.row(&[
+                class.to_string(),
+                f.nnz.to_string(),
+                format!("{:.2}", f.skew),
+                f.bandwidth.to_string(),
+                v.kernel().to_string(),
+                cell.cycles.to_string(),
+                format!("{:.3}", cell.cycles as f64 / f.nnz as f64),
+                format!("{:.3}", cell.wavelets as f64 / f.nnz as f64),
+                if *v == pick { "<- auto".to_string() } else { String::new() },
+            ]);
+        }
+        for threads in [1usize, 4] {
+            rows.push(json_row("spmv_auto", class, threads, f.nnz, &auto_cell, Some(pick)));
+        }
+    }
+
+    table.print();
+    let body = format!(
+        "{{\n  \"bench\": \"sparse\",\n  \"note\": \"Seeded sparse corpus ({}x{} on a {}x{} \
+         grid): all variants + adaptive pick; rows are byte-identical across SPADA_THREADS \
+         (explicit 1/4 sweep, no wall-clock fields) and gated on cycles_per_nnz.\",\n  \
+         \"runs\": [\n    {}\n  ]\n}}\n",
+        SIZE,
+        SIZE,
+        GRID,
+        GRID,
+        rows.join(",\n    "),
+    );
+    std::fs::write(OUT_FILE, &body)?;
+    println!("\nwrote {OUT_FILE} ({} rows)", rows.len());
+
+    if !failures.is_empty() {
+        bail!("adaptive selector lost to a fixed variant:\n  {}", failures.join("\n  "));
+    }
+    println!("selector matched the measured winner on every matrix class");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harness::sim_scaling::parse_bench_json;
+
+    /// Schema pin: sparse rows parse through the shared bench parser
+    /// with `events_per_sec` absent and `cycles_per_nnz` present, and
+    /// mixed files (dense + sparse rows) parse whole.
+    #[test]
+    fn sparse_rows_parse_through_the_shared_gate_parser() {
+        let cell = Cell { cycles: 712, wavelets: 403 };
+        let sparse_row = json_row("spmv_rows", "uniform", 1, 486, &cell, None);
+        let auto_row = json_row("spmv_auto", "uniform", 4, 486, &cell, Some(Variant::Rows));
+        let dense_row = "{\"kernel\": \"gemv\", \"grid\": \"4x4\", \"pes\": 16, \
+                         \"threads\": 1, \"events_per_sec\": 125000.0}";
+        let text = format!("{{\"runs\": [\n{sparse_row},\n{auto_row},\n{dense_row}\n]}}");
+        let runs = parse_bench_json(&text).unwrap().runs;
+        assert_eq!(runs.len(), 3);
+        assert_eq!(runs[0].kernel, "spmv_rows:uniform");
+        assert_eq!(runs[0].events_per_sec, None);
+        assert!((runs[0].cycles_per_nnz.unwrap() - 712.0 / 486.0).abs() < 1e-3);
+        assert_eq!(runs[1].kernel, "spmv_auto:uniform");
+        assert_eq!(runs[1].threads, 4);
+        assert_eq!(runs[2].events_per_sec, Some(125000.0));
+        assert_eq!(runs[2].cycles_per_nnz, None);
+    }
+
+    /// The corpus has one matrix per class and stable names — the
+    /// baseline gate keys (kernel:class, grid, threads) depend on it.
+    #[test]
+    fn corpus_classes_are_stable() {
+        let names: Vec<&str> = corpus().iter().map(|(c, _, _)| *c).collect();
+        assert_eq!(names, ["uniform", "powerlaw", "banded"]);
+    }
+}

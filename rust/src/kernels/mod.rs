@@ -17,17 +17,91 @@ pub const TREE_REDUCE: &str = include_str!("spada/tree_reduce.spada");
 pub const TWO_PHASE_REDUCE: &str = include_str!("spada/two_phase_reduce.spada");
 pub const GEMV: &str = include_str!("spada/gemv.spada");
 pub const GEMV_TREE: &str = include_str!("spada/gemv_tree.spada");
+pub const SPMV_ROWS: &str = include_str!("spada/spmv_rows.spada");
+pub const SPMV_TREE: &str = include_str!("spada/spmv_tree.spada");
+pub const SPMV_OUTER: &str = include_str!("spada/spmv_outer.spada");
+
+/// One library kernel plus its meta-parameter recipe — the single
+/// list the harnesses, the fault campaign and the equivalence suites
+/// iterate instead of each hard-coding the kernel names. Sparse
+/// kernels carry matrix-shaped binds (CSR extents, `NNZP`) derived
+/// from the seeded demo problem in [`crate::sparse`], not just a grid
+/// size, which is why the recipe lives behind [`KernelSpec::scaled_binds`]
+/// rather than a plain bind list.
+#[derive(Clone, Copy, Debug)]
+pub struct KernelSpec {
+    pub name: &'static str,
+    pub source: &'static str,
+    /// Takes CSR matrix binds and stages a seeded sparse matrix (the
+    /// generic noise stagers remain *safe* on these kernels — clamped
+    /// loops terminate in-bounds — but a real workload needs
+    /// [`crate::sparse::stage_demo`]).
+    pub sparse: bool,
+    /// Instantiates only on power-of-two grid sides (tree combines).
+    pub grid_pow2: bool,
+}
+
+impl KernelSpec {
+    /// Bind list and grid geometry at scale factor `g` with per-PE
+    /// vector length / density knob `k`: `(binds, width, height)`.
+    /// Dense kernels reproduce the historical `scaled_binds` recipes;
+    /// sparse kernels defer to the seeded demo problem (which clamps
+    /// `g` to a power-of-two grid side ≥ 2 internally).
+    pub fn scaled_binds(&self, g: i64, k: i64) -> Result<(Vec<(&'static str, i64)>, i64, i64)> {
+        Ok(match self.name {
+            "chain_reduce" => (vec![("K", k), ("N", g)], g.max(2), 1),
+            "broadcast" => (vec![("K", k), ("N", g)], g, 1),
+            "tree_reduce" | "two_phase_reduce" => {
+                (vec![("K", k), ("NX", g), ("NY", g)], g, g)
+            }
+            "gemv" | "gemv_tree" => {
+                let n = 2 * g;
+                (vec![("M", n), ("N", n), ("NX", g), ("NY", g)], g, g)
+            }
+            name if self.sparse => crate::sparse::demo_binds(name, g, k)?,
+            other => return Err(anyhow!("no scaling recipe for kernel {other}")),
+        })
+    }
+}
+
+/// The kernel registry: the paper's six dense kernels plus the three
+/// sparse SpMV dataflow variants.
+pub fn specs() -> Vec<KernelSpec> {
+    let dense = |name, source| KernelSpec { name, source, sparse: false, grid_pow2: false };
+    let sparse = |name, source| KernelSpec { name, source, sparse: true, grid_pow2: true };
+    vec![
+        dense("chain_reduce", CHAIN_REDUCE),
+        dense("broadcast", BROADCAST),
+        KernelSpec { name: "tree_reduce", source: TREE_REDUCE, sparse: false, grid_pow2: true },
+        dense("two_phase_reduce", TWO_PHASE_REDUCE),
+        KernelSpec { name: "gemv", source: GEMV, sparse: false, grid_pow2: true },
+        KernelSpec { name: "gemv_tree", source: GEMV_TREE, sparse: false, grid_pow2: true },
+        sparse("spmv_rows", SPMV_ROWS),
+        sparse("spmv_tree", SPMV_TREE),
+        sparse("spmv_outer", SPMV_OUTER),
+    ]
+}
+
+/// Look up one registry entry.
+pub fn spec(name: &str) -> Result<KernelSpec> {
+    specs().into_iter().find(|s| s.name == name).ok_or_else(|| anyhow!("unknown kernel {name}"))
+}
+
+/// Every library kernel name, registry order.
+pub fn names() -> Vec<&'static str> {
+    specs().into_iter().map(|s| s.name).collect()
+}
+
+/// The dense-regular subset (the paper's original six kernels) — the
+/// `sim_scaling` bench sweeps exactly these so `BENCH_sim.json` rows
+/// stay comparable against blessed baselines.
+pub fn dense_names() -> Vec<&'static str> {
+    specs().into_iter().filter(|s| !s.sparse).map(|s| s.name).collect()
+}
 
 /// All named kernels in the library.
 pub fn sources() -> Vec<(&'static str, &'static str)> {
-    vec![
-        ("chain_reduce", CHAIN_REDUCE),
-        ("broadcast", BROADCAST),
-        ("tree_reduce", TREE_REDUCE),
-        ("two_phase_reduce", TWO_PHASE_REDUCE),
-        ("gemv", GEMV),
-        ("gemv_tree", GEMV_TREE),
-    ]
+    specs().into_iter().map(|s| (s.name, s.source)).collect()
 }
 
 pub fn source(name: &str) -> Result<&'static str> {
@@ -157,6 +231,27 @@ mod tests {
         for (name, _) in sources() {
             parse(name).unwrap_or_else(|e| panic!("{name}: {e}"));
         }
+    }
+
+    #[test]
+    fn registry_covers_every_source_with_a_scaling_recipe() {
+        assert_eq!(specs().len(), sources().len());
+        for s in specs() {
+            let (binds, w, h) =
+                s.scaled_binds(4, 8).unwrap_or_else(|e| panic!("{}: {e:#}", s.name));
+            assert!(!binds.is_empty(), "{}", s.name);
+            assert!(w >= 1 && h >= 1, "{}", s.name);
+            if s.sparse {
+                // Sparse recipes self-clamp to power-of-two grids ≥ 2
+                // and carry the matrix-shaped binds.
+                assert!(binds.iter().any(|(k, _)| *k == "NNZP"), "{}", s.name);
+                let (_, w3, h3) = s.scaled_binds(3, 8).unwrap();
+                assert_eq!((w3, h3), (4, 4), "{}: grid must clamp to a power of two", s.name);
+            }
+        }
+        assert_eq!(dense_names().len(), 6);
+        assert!(spec("spmv_rows").unwrap().sparse);
+        assert!(spec("nope").is_err());
     }
 
     #[test]

@@ -30,6 +30,7 @@ pub mod csl;
 pub mod analysis;
 pub mod frontend;
 pub mod kernels;
+pub mod sparse;
 pub mod baselines;
 pub mod fleet;
 pub mod harness;

@@ -12,7 +12,10 @@
 //!                    [--retries N] [--deadline-ms N] [--journal F] [--resume]
 //!                    [--stats-every N] (long-lived batch service: continuous
 //!                    intake, bounded plan cache, graceful drain on SIGTERM)
-//!   bench --exp <table2|fig4..fig9|sim|fleet|verify|all> [--quick]
+//!   bench --exp <table2|fig4..fig9|sim|fleet|sparse|verify|all> [--quick]
+//!   sparse [--variant rows|outer|tree|auto|all] [--profile uniform|powerlaw|banded]
+//!                    [--seed N] [--m N] [--grid WxH] [--jsonl]
+//!                    (one seeded sparse matrix through the SpMV variants + selector)
 //!   loc              (Table II shortcut)
 
 use anyhow::{anyhow, bail, Context, Result};
@@ -61,6 +64,10 @@ impl Args {
                             | "format"
                             | "top"
                             | "faults"
+                            | "variant"
+                            | "profile"
+                            | "seed"
+                            | "m"
                             | "kernel"
                             | "out"
                             | "jobs"
@@ -571,6 +578,7 @@ fn real_main() -> Result<()> {
             };
             harness::faults::campaign(&opts)
         }
+        "sparse" => run_sparse_cmd(&args),
         "batch" => run_batch_cmd(&args),
         "serve" => run_serve_cmd(&args),
         "loc" => harness::run("table2", false),
@@ -583,6 +591,111 @@ fn real_main() -> Result<()> {
             bail!("unknown command {other}");
         }
     }
+}
+
+/// `spada sparse`: run one seeded sparse matrix through a chosen SpMV
+/// dataflow variant (or the adaptive selector's pick, or all three),
+/// verify against the CPU CSR oracle, and report per-nonzero metrics.
+/// `--jsonl` rows carry only deterministic fields (no wall-clock), so
+/// the output is byte-identical under any `SPADA_THREADS` — the CI
+/// smoke leg diffs 1- vs 4-thread runs literally.
+fn run_sparse_cmd(args: &Args) -> Result<()> {
+    use spada::sparse::{self, Profile, Variant};
+
+    let m: usize = match args.flag("m") {
+        Some(v) => v.parse().context("--m")?,
+        None => 64,
+    };
+    let seed: u64 = match args.flag("seed") {
+        Some(v) => v.parse().context("--seed")?,
+        None => 0xA11CE,
+    };
+    let profile = match args.flag("profile").unwrap_or("uniform") {
+        "uniform" => Profile::Uniform { nnz_per_row: 8 },
+        "powerlaw" => Profile::PowerLaw { max_row: m },
+        "banded" => Profile::Banded { half_width: 2 },
+        other => bail!("--profile {other}: want uniform, powerlaw or banded"),
+    };
+    let (w, h): (usize, usize) = match args.flag("grid").and_then(|g| g.split_once('x')) {
+        Some((gw, gh)) => (gw.parse().context("--grid")?, gh.parse().context("--grid")?),
+        None => (4, 4),
+    };
+    let jsonl = args.has("jsonl");
+
+    let a = sparse::generate(m, m, profile, seed);
+    let x = sparse::seeded_x(m, seed ^ 0x5EED);
+    let f = sparse::features(&a);
+    let (pick, ests) = sparse::select(&a, w, h);
+    if !jsonl {
+        println!(
+            "matrix {m}x{m} {} (seed {seed:#x}): {} nonzeros, mean row {:.2}, skew {:.2}, \
+             bandwidth {} — selector picks {} on {w}x{h} (estimated cycles \
+             rows/outer/tree = {ests:?})",
+            profile.name(),
+            f.nnz,
+            f.mean,
+            f.skew,
+            f.bandwidth,
+            pick.kernel(),
+        );
+    }
+
+    let variants: Vec<Variant> = match args.flag("variant").unwrap_or("auto") {
+        "auto" => vec![pick],
+        "all" => Variant::ALL.to_vec(),
+        name => vec![sparse::variant_of(&format!("spmv_{name}")).map_err(|_| {
+            anyhow!("--variant {name}: want rows, outer, tree, auto or all")
+        })?],
+    };
+
+    let opts = SimOptions::from_env();
+    let want = sparse::spmv_ref(&a, &x);
+    for v in variants {
+        let staged = sparse::stage(v, &a, &x, w, h)?;
+        let cfg = MachineConfig::with_grid(w as i64, h as i64);
+        let ck = kernels::compile(v.kernel(), &staged.binds, &cfg, &options(args))?;
+        let mut sim = ck.simulator_with(&opts)?;
+        staged.apply(&mut sim)?;
+        let report = sim.run().map_err(|e| anyhow!("{}: {e}", v.kernel()))?;
+        let y = sim.get_output("y_out")?;
+        let mut max_err = 0f32;
+        for (got, exp) in y.iter().zip(want.iter()) {
+            let tol = 1e-3 * (1.0 + exp.abs());
+            if (got - exp).abs() > tol {
+                bail!("{}: output diverged from the CSR oracle (|Δ| {} > {tol})",
+                      v.kernel(), (got - exp).abs());
+            }
+            max_err = max_err.max((got - exp).abs());
+        }
+        let nnz = f.nnz.max(1) as f64;
+        if jsonl {
+            println!(
+                "{{\"kernel\": \"{}\", \"profile\": \"{}\", \"seed\": {seed}, \
+                 \"m\": {m}, \"grid\": \"{w}x{h}\", \"nnz\": {}, \"cycles\": {}, \
+                 \"cycles_per_nnz\": {:.4}, \"wavelets_per_nnz\": {:.4}, \
+                 \"selected\": \"{}\", \"verified\": true}}",
+                v.kernel(),
+                profile.name(),
+                f.nnz,
+                report.cycles,
+                report.cycles as f64 / nnz,
+                report.metrics.wavelets as f64 / nnz,
+                pick.kernel(),
+            );
+        } else {
+            println!(
+                "{}{}: {} cycles ({:.3} cycles/nnz, {:.3} wavelets/nnz), \
+                 verified vs oracle (max |Δ| {:.2e})",
+                v.kernel(),
+                if v == pick { " [selected]" } else { "" },
+                report.cycles,
+                report.cycles as f64 / nnz,
+                report.metrics.wavelets as f64 / nnz,
+                max_err,
+            );
+        }
+    }
+    Ok(())
 }
 
 /// `spada batch`: JSONL job specs in, one JSONL result row per job
@@ -887,19 +1000,29 @@ fn print_help() {
          \x20    simulator error into a JSON object with kind/cycle/PE, exit nonzero)\n\
          \x20 spada faults --campaign [--quick] [--kernel NAME] [--grid N] [--out FILE]\n\
          \x20   (resilience sweep: every used link x N injection times, every PE halt,\n\
-         \x20    one corruption per flow, across the six library kernels; writes a JSONL\n\
+         \x20    one corruption per flow, across every library kernel; writes a JSONL\n\
          \x20    matrix [default FAULTS_matrix.jsonl] with outcomes correct|sdc|\n\
          \x20    buffer-deadlock|circular-wait|runaway|timeout|error, byte-identical\n\
          \x20    across SPADA_THREADS)\n\
          \x20 spada profile <kernel> [--bind ...] [--grid WxH] [--format table|json] [--top N]\n\
          \x20   (cycle-accurate profile: per-PE busy/stall/idle, hot PEs/links, link\n\
          \x20    occupancy histogram and an ASCII utilization heatmap)\n\
-         \x20 spada bench [--exp table2|fig4|fig5|fig6|fig7|fig8|fig9|sim|fleet|verify|all] [--quick]\n\
-         \x20   (--exp sim sweeps the six kernels 4x4..128x128 at 1 and 4 worker\n\
-         \x20    threads and writes BENCH_sim.json; rows record threads + host parallelism)\n\
+         \x20 spada bench [--exp table2|fig4|fig5|fig6|fig7|fig8|fig9|sim|fleet|sparse|verify|all]\n\
+         \x20   [--quick]\n\
+         \x20   (--exp sim sweeps the six dense kernels 4x4..128x128 at 1 and 4 worker\n\
+         \x20    threads and writes BENCH_sim.json; --exp sparse runs the seeded matrix\n\
+         \x20    corpus through all SpMV variants + the adaptive selector and writes\n\
+         \x20    BENCH_sparse.json, failing if the selector loses to any fixed variant)\n\
          \x20 spada bench --compare BASELINE.json [--current CURRENT.json] [--threshold 0.25]\n\
-         \x20   (regression gate: fails if any kernel's events/s drops more than the\n\
-         \x20    threshold vs the baseline; without --current it runs the sim sweep first)\n\
+         \x20   (regression gate: fails if any kernel's events/s drops — or, for sparse\n\
+         \x20    rows, cycles-per-nonzero rises — more than the threshold vs the baseline;\n\
+         \x20    without --current it runs the sim sweep first)\n\
+         \x20 spada sparse [--variant rows|outer|tree|auto|all] [--profile uniform|powerlaw|\n\
+         \x20   banded] [--seed N] [--m N] [--grid WxH] [--jsonl]\n\
+         \x20   (one seeded MxM sparse matrix through the chosen SpMV dataflow variant —\n\
+         \x20    auto lets the structural selector pick — verified against the CPU CSR\n\
+         \x20    oracle; --jsonl rows are deterministic and byte-identical across\n\
+         \x20    SPADA_THREADS. See docs/sparse.md)\n\
          \x20 spada batch [--jobs FILE|-] [--pool N] [--budget N] [--out FILE]\n\
          \x20   (batch service: JSONL job specs in [default stdin], one JSONL result row\n\
          \x20    per job out [default stdout], in input order. Spec keys: kernel (required),\n\

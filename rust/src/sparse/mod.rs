@@ -1,0 +1,672 @@
+//! Sparse workload subsystem: CSR matrices, a seeded corpus generator,
+//! per-PE staging for the three SpMV dataflow variants, a CPU reference
+//! oracle, and the adaptive variant selector.
+//!
+//! The three `.spada` kernels this module feeds (`spmv_rows`,
+//! `spmv_tree`, `spmv_outer` — see `kernels/spada/`) differ only in how
+//! work is partitioned and combined:
+//!
+//! - **rows** / **tree**: row-stationary 2-D blocks (PE `(i, j)` owns
+//!   rows `[j·M/NY, …)` × cols `[i·N/NX, …)`); partials are `M/NY`
+//!   words and combine west per row, pipelined chain vs binary tree.
+//! - **outer**: column slices over all `NX·NY` PEs in port order;
+//!   partials are full `M`-length vectors combined west then north.
+//!
+//! Per-PE work tracks the partition's nonzero count, so the right
+//! variant depends on matrix *structure*, not size: uniform matrices
+//! keep row blocks balanced (rows wins), skewed or banded matrices
+//! concentrate row blocks on few PEs while column slices stay balanced
+//! (outer wins), and deep narrow grids with short partials favor the
+//! tree combine. [`select`] encodes exactly that trade as a closed-form
+//! cycle estimate built from the machine's published cost constants;
+//! the decision inputs are structural features of the input
+//! ([`features`], [`rows_critical`], [`outer_critical`]) — never a
+//! measurement.
+//!
+//! Everything here is deterministic: the generator runs on
+//! [`SplitMix64`] streams keyed by caller seeds (no wall-clock or OS
+//! randomness), and staging emits raw little-endian words so integer
+//! CSR arrays cross the fabric bit-exact.
+
+use crate::machine::Simulator;
+use crate::util::SplitMix64;
+use anyhow::{anyhow, bail, Result};
+
+// ---------------------------------------------------------------------
+// CSR format + seeded generator
+// ---------------------------------------------------------------------
+
+/// A compressed-sparse-row matrix. `rp` has `rows + 1` entries;
+/// column indices within each row are strictly ascending.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CsrMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub rp: Vec<u32>,
+    pub ci: Vec<u32>,
+    pub av: Vec<f32>,
+}
+
+impl CsrMatrix {
+    pub fn nnz(&self) -> usize {
+        self.ci.len()
+    }
+
+    /// Nonzero count of row `r`.
+    pub fn row_len(&self, r: usize) -> usize {
+        (self.rp[r + 1] - self.rp[r]) as usize
+    }
+}
+
+/// Structural profile of a generated matrix.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Profile {
+    /// Every row draws `nnz_per_row` columns uniformly at random
+    /// (deduplicated, so a row may hold slightly fewer).
+    Uniform { nnz_per_row: usize },
+    /// Geometrically decaying row lengths — row `r` targets
+    /// `max(max_row >> (8·r/rows), 2)` nonzeros, so the heaviest rows
+    /// cluster at the top (power-law skew).
+    PowerLaw { max_row: usize },
+    /// Band of half-width `half_width` around the diagonal — every
+    /// in-range column is present.
+    Banded { half_width: usize },
+}
+
+impl Profile {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Profile::Uniform { .. } => "uniform",
+            Profile::PowerLaw { .. } => "powerlaw",
+            Profile::Banded { .. } => "banded",
+        }
+    }
+}
+
+/// Generate a seeded matrix: same `(rows, cols, profile, seed)` →
+/// bit-identical CSR on every host. Values are uniform in [-1, 1).
+pub fn generate(rows: usize, cols: usize, profile: Profile, seed: u64) -> CsrMatrix {
+    let mut rng = SplitMix64::new(seed);
+    let mut rp = Vec::with_capacity(rows + 1);
+    let mut ci = Vec::new();
+    let mut av = Vec::new();
+    rp.push(0u32);
+    for r in 0..rows {
+        let mut row_cols: Vec<u32> = match profile {
+            Profile::Uniform { nnz_per_row } => {
+                let want = nnz_per_row.clamp(1, cols);
+                (0..want).map(|_| rng.below(cols as u64) as u32).collect()
+            }
+            Profile::PowerLaw { max_row } => {
+                let want = (max_row >> (8 * r / rows.max(1))).max(2).min(cols);
+                (0..want).map(|_| rng.below(cols as u64) as u32).collect()
+            }
+            Profile::Banded { half_width } => {
+                let lo = r.saturating_sub(half_width);
+                let hi = (r + half_width + 1).min(cols);
+                (lo..hi.max(lo)).map(|c| c as u32).collect()
+            }
+        };
+        row_cols.sort_unstable();
+        row_cols.dedup();
+        for c in row_cols {
+            ci.push(c);
+            av.push(rng.next_f32());
+        }
+        rp.push(ci.len() as u32);
+    }
+    CsrMatrix { rows, cols, rp, ci, av }
+}
+
+/// Deterministic dense vector in [-1, 1) for the `x` operand.
+pub fn seeded_x(cols: usize, seed: u64) -> Vec<f32> {
+    let mut rng = SplitMix64::new(seed);
+    (0..cols).map(|_| rng.next_f32()).collect()
+}
+
+// ---------------------------------------------------------------------
+// Reference oracle
+// ---------------------------------------------------------------------
+
+/// CPU reference `y = A·x`, accumulated in f64 and rounded once — the
+/// oracle the harness and tests compare simulator outputs against
+/// (with a tolerance: the fabric accumulates in a different order).
+pub fn spmv_ref(a: &CsrMatrix, x: &[f32]) -> Vec<f32> {
+    assert_eq!(x.len(), a.cols, "x length must match the column count");
+    let mut y = vec![0f32; a.rows];
+    for r in 0..a.rows {
+        let mut acc = 0f64;
+        for t in a.rp[r] as usize..a.rp[r + 1] as usize {
+            acc += a.av[t] as f64 * x[a.ci[t] as usize] as f64;
+        }
+        y[r] = acc as f32;
+    }
+    y
+}
+
+// ---------------------------------------------------------------------
+// Structural features
+// ---------------------------------------------------------------------
+
+/// Structural features of a matrix — the selector's decision inputs,
+/// and the per-row diagnostics `BENCH_sparse.json` reports.
+#[derive(Clone, Copy, Debug)]
+pub struct Features {
+    pub nnz: usize,
+    /// Mean row length.
+    pub mean: f64,
+    /// Population variance of row lengths.
+    pub variance: f64,
+    /// Max row length / mean row length (1.0 = perfectly regular).
+    pub skew: f64,
+    /// Max |col - row| over all nonzeros.
+    pub bandwidth: usize,
+}
+
+pub fn features(a: &CsrMatrix) -> Features {
+    let n = a.rows.max(1) as f64;
+    let mean = a.nnz() as f64 / n;
+    let mut var = 0f64;
+    let mut max_len = 0usize;
+    for r in 0..a.rows {
+        let len = a.row_len(r);
+        var += (len as f64 - mean) * (len as f64 - mean);
+        max_len = max_len.max(len);
+    }
+    let mut bandwidth = 0usize;
+    for r in 0..a.rows {
+        for t in a.rp[r] as usize..a.rp[r + 1] as usize {
+            bandwidth = bandwidth.max((a.ci[t] as i64 - r as i64).unsigned_abs() as usize);
+        }
+    }
+    Features {
+        nnz: a.nnz(),
+        mean,
+        variance: var / n,
+        skew: if mean > 0.0 { max_len as f64 / mean } else { 1.0 },
+        bandwidth,
+    }
+}
+
+// ---------------------------------------------------------------------
+// Partition criticals + adaptive selector
+// ---------------------------------------------------------------------
+
+/// The three SpMV dataflow variants.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Variant {
+    Rows,
+    Tree,
+    Outer,
+}
+
+impl Variant {
+    pub const ALL: [Variant; 3] = [Variant::Rows, Variant::Outer, Variant::Tree];
+
+    /// The library kernel this variant compiles to.
+    pub fn kernel(&self) -> &'static str {
+        match self {
+            Variant::Rows => "spmv_rows",
+            Variant::Tree => "spmv_tree",
+            Variant::Outer => "spmv_outer",
+        }
+    }
+}
+
+/// Map a sparse kernel name back to its variant.
+pub fn variant_of(kernel: &str) -> Result<Variant> {
+    Ok(match kernel {
+        "spmv_rows" => Variant::Rows,
+        "spmv_tree" => Variant::Tree,
+        "spmv_outer" => Variant::Outer,
+        other => bail!("not a sparse library kernel: {other}"),
+    })
+}
+
+/// Max nonzeros on any PE under the row-stationary 2-D block partition
+/// — the compute critical path of `spmv_rows` / `spmv_tree`.
+pub fn rows_critical(a: &CsrMatrix, nx: usize, ny: usize) -> u64 {
+    let mb = a.rows.div_ceil(ny.max(1));
+    let nb = a.cols.div_ceil(nx.max(1));
+    let mut per_pe = vec![0u64; nx * ny];
+    for r in 0..a.rows {
+        let j = (r / mb).min(ny - 1);
+        for t in a.rp[r] as usize..a.rp[r + 1] as usize {
+            let i = (a.ci[t] as usize / nb).min(nx - 1);
+            per_pe[i * ny + j] += 1;
+        }
+    }
+    per_pe.into_iter().max().unwrap_or(0)
+}
+
+/// Max nonzeros on any PE under the contiguous column-slice partition
+/// — the scatter critical path of `spmv_outer`.
+pub fn outer_critical(a: &CsrMatrix, nx: usize, ny: usize) -> u64 {
+    let p = (nx * ny).max(1);
+    let ncp = a.cols.div_ceil(p);
+    let mut per_pe = vec![0u64; p];
+    for &c in &a.ci {
+        per_pe[(c as usize / ncp).min(p - 1)] += 1;
+    }
+    per_pe.into_iter().max().unwrap_or(0)
+}
+
+// Cost-model constants, calibrated against the machine's published
+// per-event costs (`machine::config`): ~one scalar inner iteration of
+// the CSR loop (bound eval + clamped index + fmac + store) per
+// nonzero, ~`data_task_wavelet_cycles` per combined word, ~`hop +
+// dispatch + task_wakeup` per chain stage fill, and ~`task_wakeup +
+// dsd_issue + dispatch` per extra phase level. Absolute cycles don't
+// matter — only that the *ratios* track the simulator, which the
+// sparse harness verifies corpus-wide (selector ≤ every fixed
+// variant).
+
+/// Estimated cycles per nonzero on the row-stationary critical PE.
+pub const COST_NNZ_ROWS: u64 = 18;
+/// Estimated cycles per nonzero for the outer scatter (extra indexed
+/// store vs the rows inner loop).
+pub const COST_NNZ_SCATTER: u64 = 20;
+/// Pipelined cycles per combined partial word.
+pub const COST_WORD: u64 = 2;
+/// Fill cost per chain stage (hop + dispatch + wakeup).
+pub const COST_HOP: u64 = 11;
+/// Overhead per tree level / extra combine phase (barrier + wakeup +
+/// DSD issue).
+pub const COST_LEVEL: u64 = 13;
+
+fn ceil_log2(n: u64) -> u64 {
+    (64 - n.max(1).saturating_sub(1).leading_zeros() as u64).min(63)
+}
+
+/// Closed-form cycle estimate for one variant on an `nx × ny` grid.
+pub fn estimate(v: Variant, a: &CsrMatrix, nx: usize, ny: usize) -> u64 {
+    let mb = a.rows.div_ceil(ny.max(1)) as u64;
+    match v {
+        Variant::Rows => {
+            COST_NNZ_ROWS * rows_critical(a, nx, ny)
+                + (nx as u64 - 1) * COST_HOP
+                + mb * COST_WORD
+        }
+        Variant::Tree => {
+            COST_NNZ_ROWS * rows_critical(a, nx, ny)
+                + ceil_log2(nx as u64) * (COST_LEVEL + mb * COST_WORD)
+        }
+        Variant::Outer => {
+            COST_NNZ_SCATTER * outer_critical(a, nx, ny)
+                + 2 * (COST_LEVEL + a.rows as u64 * COST_WORD)
+                + (nx as u64 + ny as u64 - 2) * COST_HOP
+        }
+    }
+}
+
+/// Pick the variant with the smallest estimate (ties resolve in
+/// [`Variant::ALL`] order: rows, then outer, then tree). Returns the
+/// winner and the per-variant estimates `[rows, outer, tree]` in
+/// `Variant::ALL` order.
+pub fn select(a: &CsrMatrix, nx: usize, ny: usize) -> (Variant, [u64; 3]) {
+    let ests: Vec<u64> = Variant::ALL.iter().map(|&v| estimate(v, a, nx, ny)).collect();
+    let mut best = 0usize;
+    for k in 1..ests.len() {
+        if ests[k] < ests[best] {
+            best = k;
+        }
+    }
+    (Variant::ALL[best], [ests[0], ests[1], ests[2]])
+}
+
+// ---------------------------------------------------------------------
+// Per-PE staging
+// ---------------------------------------------------------------------
+
+/// A matrix packed for one kernel variant: the meta-parameter binds to
+/// compile with and the raw input words to stage, in binding order.
+/// Integer arrays are little-endian `i32` words; padding entries are
+/// zero so clamped kernel loops never read them.
+#[derive(Clone, Debug)]
+pub struct Staged {
+    pub binds: Vec<(&'static str, i64)>,
+    pub inputs: Vec<(&'static str, Vec<u32>)>,
+    /// The padded per-PE nonzero capacity (also present in `binds`).
+    pub nnzp: i64,
+}
+
+impl Staged {
+    /// Stage every input into a simulator compiled with `self.binds`.
+    pub fn apply(&self, sim: &mut Simulator) -> Result<()> {
+        for (arg, words) in &self.inputs {
+            sim.set_input_words(arg, words.clone()).map_err(|e| anyhow!("{arg}: {e}"))?;
+        }
+        Ok(())
+    }
+}
+
+/// Pack for `spmv_rows` / `spmv_tree`: per-PE CSR blocks in port order
+/// (`i·NY + j`), block-local row pointers and column indices, arrays
+/// padded to the fabric-wide max block nonzero count.
+pub fn stage_rows(a: &CsrMatrix, x: &[f32], nx: usize, ny: usize) -> Result<Staged> {
+    if nx < 1 || ny < 2 {
+        bail!("spmv_rows/spmv_tree need nx >= 1, ny >= 2 (got {nx}x{ny})");
+    }
+    if a.rows % ny != 0 || a.cols % nx != 0 {
+        bail!("matrix {}x{} does not tile a {nx}x{ny} grid", a.rows, a.cols);
+    }
+    if x.len() != a.cols {
+        bail!("x has {} entries, matrix has {} columns", x.len(), a.cols);
+    }
+    let (mb, nb) = (a.rows / ny, a.cols / nx);
+    // blocks[i][j] = (local rp, local ci, values)
+    let mut blocks: Vec<(Vec<u32>, Vec<u32>, Vec<f32>)> =
+        vec![(vec![0u32], vec![], vec![]); nx * ny];
+    for j in 0..ny {
+        for r in j * mb..(j + 1) * mb {
+            for t in a.rp[r] as usize..a.rp[r + 1] as usize {
+                let c = a.ci[t] as usize;
+                let i = c / nb;
+                let b = &mut blocks[i * ny + j];
+                b.1.push((c - i * nb) as u32);
+                b.2.push(a.av[t]);
+            }
+            // Close row `r` in every column block of this row band.
+            for i in 0..nx {
+                let b = &mut blocks[i * ny + j];
+                b.0.push(b.1.len() as u32);
+            }
+        }
+    }
+    let nnzp = blocks.iter().map(|b| b.1.len()).max().unwrap_or(0).max(1);
+    let mut rp_w = Vec::with_capacity(nx * ny * (mb + 1));
+    let mut ci_w = Vec::with_capacity(nx * ny * nnzp);
+    let mut av_w = Vec::with_capacity(nx * ny * nnzp);
+    for (rp, ci, av) in &blocks {
+        debug_assert_eq!(rp.len(), mb + 1);
+        rp_w.extend(rp.iter().copied());
+        ci_w.extend(ci.iter().copied());
+        ci_w.extend(std::iter::repeat(0u32).take(nnzp - ci.len()));
+        av_w.extend(av.iter().map(|v| v.to_bits()));
+        av_w.extend(std::iter::repeat(0f32.to_bits()).take(nnzp - av.len()));
+    }
+    let x_w: Vec<u32> = x.iter().map(|v| v.to_bits()).collect();
+    Ok(Staged {
+        binds: vec![
+            ("M", a.rows as i64),
+            ("N", a.cols as i64),
+            ("NX", nx as i64),
+            ("NY", ny as i64),
+            ("NNZP", nnzp as i64),
+        ],
+        inputs: vec![("rp_in", rp_w), ("ci_in", ci_w), ("av_in", av_w), ("x_in", x_w)],
+        nnzp: nnzp as i64,
+    })
+}
+
+/// Pack for `spmv_outer`: contiguous column slices over all `nx·ny`
+/// PEs in port order, column-compressed with *global* row indices,
+/// plus the matching x slice per PE.
+pub fn stage_outer(a: &CsrMatrix, x: &[f32], nx: usize, ny: usize) -> Result<Staged> {
+    if nx < 1 || ny < 2 {
+        bail!("spmv_outer needs nx >= 1, ny >= 2 (got {nx}x{ny})");
+    }
+    let p = nx * ny;
+    if a.cols % p != 0 {
+        bail!("matrix with {} columns does not slice over {p} PEs", a.cols);
+    }
+    if x.len() != a.cols {
+        bail!("x has {} entries, matrix has {} columns", x.len(), a.cols);
+    }
+    let ncp = a.cols / p;
+    // Column-major gather: per column, (row, value) in ascending row
+    // order (CSR row iteration order).
+    let mut by_col: Vec<Vec<(u32, f32)>> = vec![vec![]; a.cols];
+    for r in 0..a.rows {
+        for t in a.rp[r] as usize..a.rp[r + 1] as usize {
+            by_col[a.ci[t] as usize].push((r as u32, a.av[t]));
+        }
+    }
+    let mut slices: Vec<(Vec<u32>, Vec<u32>, Vec<f32>)> = Vec::with_capacity(p);
+    for p0 in 0..p {
+        let mut cp = vec![0u32];
+        let mut ri = vec![];
+        let mut av = vec![];
+        for c in p0 * ncp..(p0 + 1) * ncp {
+            for &(r, v) in &by_col[c] {
+                ri.push(r);
+                av.push(v);
+            }
+            cp.push(ri.len() as u32);
+        }
+        slices.push((cp, ri, av));
+    }
+    let nnzp = slices.iter().map(|s| s.1.len()).max().unwrap_or(0).max(1);
+    let mut cp_w = Vec::with_capacity(p * (ncp + 1));
+    let mut ri_w = Vec::with_capacity(p * nnzp);
+    let mut av_w = Vec::with_capacity(p * nnzp);
+    let mut x_w = Vec::with_capacity(a.cols);
+    for (p0, (cp, ri, av)) in slices.iter().enumerate() {
+        cp_w.extend(cp.iter().copied());
+        ri_w.extend(ri.iter().copied());
+        ri_w.extend(std::iter::repeat(0u32).take(nnzp - ri.len()));
+        av_w.extend(av.iter().map(|v| v.to_bits()));
+        av_w.extend(std::iter::repeat(0f32.to_bits()).take(nnzp - av.len()));
+        x_w.extend(x[p0 * ncp..(p0 + 1) * ncp].iter().map(|v| v.to_bits()));
+    }
+    Ok(Staged {
+        binds: vec![
+            ("M", a.rows as i64),
+            ("N", a.cols as i64),
+            ("NX", nx as i64),
+            ("NY", ny as i64),
+            ("NNZP", nnzp as i64),
+        ],
+        inputs: vec![("cp_in", cp_w), ("ri_in", ri_w), ("av_in", av_w), ("x_in", x_w)],
+        nnzp: nnzp as i64,
+    })
+}
+
+/// Pack for any variant.
+pub fn stage(v: Variant, a: &CsrMatrix, x: &[f32], nx: usize, ny: usize) -> Result<Staged> {
+    match v {
+        Variant::Rows | Variant::Tree => stage_rows(a, x, nx, ny),
+        Variant::Outer => stage_outer(a, x, nx, ny),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Demo problem: the registry / fault-campaign workload
+// ---------------------------------------------------------------------
+
+/// Seed of the registry's demo matrices (`scaled_binds` on a sparse
+/// kernel and the fault campaign's staging both derive from it, so the
+/// binds and the staged words always describe the same matrix).
+pub const DEMO_SEED: u64 = 0x5EED;
+
+/// Grid side for scale factor `g`: at least 2 (multicast and the
+/// north chain need two rows) and a power of two (`spmv_tree`).
+pub fn demo_grid(g: i64) -> i64 {
+    (g.max(2) as u64).next_power_of_two() as i64
+}
+
+/// The deterministic demo problem at scale `g` with density knob `k`:
+/// a uniform `4g²  × 4g²` matrix (divisible by every partition the
+/// variants need) with ~`clamp(k, 1, 8)` nonzeros per row.
+pub fn demo_problem(g: i64, k: i64) -> (CsrMatrix, Vec<f32>) {
+    let g2 = demo_grid(g) as usize;
+    let m = 4 * g2 * g2;
+    let per_row = k.clamp(1, 8) as usize;
+    let a = generate(m, m, Profile::Uniform { nnz_per_row: per_row }, DEMO_SEED ^ k as u64);
+    let x = seeded_x(m, DEMO_SEED.wrapping_add(1));
+    (a, x)
+}
+
+/// Bind list and grid for a sparse library kernel at scale `g` —
+/// the sparse arm of `harness::common::scaled_binds`.
+pub fn demo_binds(kernel: &str, g: i64, k: i64) -> Result<(Vec<(&'static str, i64)>, i64, i64)> {
+    let v = variant_of(kernel)?;
+    let (a, x) = demo_problem(g, k);
+    let g2 = demo_grid(g);
+    let staged = stage(v, &a, &x, g2 as usize, g2 as usize)?;
+    Ok((staged.binds, g2, g2))
+}
+
+/// Stage the demo problem into a simulator compiled from
+/// [`demo_binds`] with the same `(kernel, g, k)`.
+pub fn stage_demo(sim: &mut Simulator, kernel: &str, g: i64, k: i64) -> Result<()> {
+    let v = variant_of(kernel)?;
+    let (a, x) = demo_problem(g, k);
+    let g2 = demo_grid(g) as usize;
+    stage(v, &a, &x, g2, g2)?.apply(sim)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generator_is_deterministic_and_well_formed() {
+        for profile in [
+            Profile::Uniform { nnz_per_row: 4 },
+            Profile::PowerLaw { max_row: 32 },
+            Profile::Banded { half_width: 2 },
+        ] {
+            let a = generate(32, 32, profile, 7);
+            let b = generate(32, 32, profile, 7);
+            assert_eq!(a, b, "{profile:?}: same seed must reproduce bit-identically");
+            let c = generate(32, 32, profile, 8);
+            assert_ne!(a, c, "{profile:?}: different seed must differ");
+            assert_eq!(a.rp.len(), 33);
+            assert_eq!(*a.rp.last().unwrap() as usize, a.nnz());
+            assert_eq!(a.ci.len(), a.av.len());
+            for r in 0..a.rows {
+                assert!(a.rp[r] <= a.rp[r + 1], "{profile:?}: rp must be monotone");
+                let row = &a.ci[a.rp[r] as usize..a.rp[r + 1] as usize];
+                assert!(row.windows(2).all(|w| w[0] < w[1]), "{profile:?}: cols ascend");
+                assert!(row.iter().all(|&c| (c as usize) < a.cols));
+            }
+        }
+    }
+
+    #[test]
+    fn oracle_on_hand_built_matrix() {
+        // [[2, 0], [1, 3]] · [1, -1] = [2, -2]
+        let a = CsrMatrix {
+            rows: 2,
+            cols: 2,
+            rp: vec![0, 1, 3],
+            ci: vec![0, 0, 1],
+            av: vec![2.0, 1.0, 3.0],
+        };
+        assert_eq!(spmv_ref(&a, &[1.0, -1.0]), vec![2.0, -2.0]);
+    }
+
+    #[test]
+    fn features_on_hand_built_matrices() {
+        // Perfectly regular diagonal: skew 1, variance 0, bandwidth 0.
+        let diag = generate(16, 16, Profile::Banded { half_width: 0 }, 1);
+        let f = features(&diag);
+        assert_eq!(f.nnz, 16);
+        assert!((f.mean - 1.0).abs() < 1e-12);
+        assert!(f.variance < 1e-12);
+        assert!((f.skew - 1.0).abs() < 1e-12);
+        assert_eq!(f.bandwidth, 0);
+
+        // One heavy row: skew = max/mean spikes.
+        let mut heavy = diag.clone();
+        heavy.rp = vec![0; 17];
+        heavy.ci = (0..16u32).collect();
+        heavy.av = vec![1.0; 16];
+        for r in 1..=16 {
+            heavy.rp[r] = 16; // row 0 holds everything
+        }
+        let f = features(&heavy);
+        assert_eq!(f.nnz, 16);
+        assert!((f.skew - 16.0).abs() < 1e-9, "one-row matrix skews to rows·max/mean");
+        assert_eq!(f.bandwidth, 15);
+    }
+
+    #[test]
+    fn staging_partitions_every_nonzero_exactly_once() {
+        let a = generate(32, 32, Profile::PowerLaw { max_row: 16 }, 3);
+        let x = seeded_x(32, 4);
+        let st = stage_rows(&a, &x, 4, 4).unwrap();
+        // 16 ports × (MB+1) row pointers; final pointer of each port
+        // sums the block nonzeros — together they cover nnz exactly.
+        let rp = &st.inputs[0].1;
+        assert_eq!(rp.len(), 16 * 9);
+        let covered: u32 = (0..16).map(|p| rp[p * 9 + 8]).sum();
+        assert_eq!(covered as usize, a.nnz());
+
+        let st = stage_outer(&a, &x, 4, 4).unwrap();
+        let cp = &st.inputs[0].1;
+        assert_eq!(cp.len(), 16 * 3); // NCP = 32/16 = 2, +1 pointer
+        let covered: u32 = (0..16).map(|p| cp[p * 3 + 2]).sum();
+        assert_eq!(covered as usize, a.nnz());
+        assert!(st.nnzp >= 1);
+    }
+
+    #[test]
+    fn criticals_match_hand_partition() {
+        // Banded matrices concentrate row blocks near the diagonal:
+        // the rows partition goes critical, column slices stay flat.
+        let a = generate(32, 32, Profile::Banded { half_width: 2 }, 5);
+        let rc = rows_critical(&a, 4, 4);
+        let oc = outer_critical(&a, 4, 4);
+        assert!(
+            rc >= 2 * oc,
+            "banded: rows partition must be ≥2× more critical (rows {rc}, outer {oc})"
+        );
+        // Uniform matrices keep both partitions balanced.
+        let u = generate(32, 32, Profile::Uniform { nnz_per_row: 4 }, 5);
+        let (rc, oc) = (rows_critical(&u, 4, 4), outer_critical(&u, 4, 4));
+        assert!(rc < 3 * oc, "uniform: partitions stay comparable (rows {rc}, outer {oc})");
+    }
+
+    #[test]
+    fn selector_picks_expected_variants_on_synthetic_shapes() {
+        // Uniform on a square grid: balanced row blocks, short
+        // partials — row-stationary chain wins.
+        let u = generate(64, 64, Profile::Uniform { nnz_per_row: 8 }, 11);
+        assert_eq!(select(&u, 4, 4).0, Variant::Rows);
+
+        // Banded: row blocks go critical, column slices balance —
+        // outer wins despite the full-length combine.
+        let b = generate(64, 64, Profile::Banded { half_width: 2 }, 11);
+        assert_eq!(select(&b, 4, 4).0, Variant::Outer);
+
+        // Power-law: heavy rows cluster in one row band — outer wins.
+        let p = generate(64, 64, Profile::PowerLaw { max_row: 64 }, 11);
+        assert_eq!(select(&p, 4, 4).0, Variant::Outer);
+
+        // Deep narrow grid with short partials: tree combine beats the
+        // chain fill (8 stages of fill vs 3 levels).
+        let t = generate(8, 64, Profile::Uniform { nnz_per_row: 4 }, 11);
+        assert_eq!(select(&t, 8, 2).0, Variant::Tree);
+    }
+
+    #[test]
+    fn demo_binds_and_staging_agree() {
+        for kernel in ["spmv_rows", "spmv_tree", "spmv_outer"] {
+            let (binds, w, h) = demo_binds(kernel, 4, 8).unwrap();
+            assert_eq!((w, h), (4, 4));
+            let get = |n: &str| binds.iter().find(|(k, _)| *k == n).map(|(_, v)| *v).unwrap();
+            assert_eq!(get("M"), 64);
+            assert_eq!(get("N"), 64);
+            assert!(get("NNZP") >= 1);
+            // Regenerating stages the same NNZP the binds promised.
+            let (a, x) = demo_problem(4, 8);
+            let st = stage(variant_of(kernel).unwrap(), &a, &x, 4, 4).unwrap();
+            assert_eq!(st.nnzp, get("NNZP"));
+        }
+        assert!(demo_binds("gemv", 4, 8).is_err());
+    }
+
+    #[test]
+    fn estimates_are_monotone_in_critical_path() {
+        let sparse9 = generate(64, 64, Profile::Uniform { nnz_per_row: 2 }, 2);
+        let dense9 = generate(64, 64, Profile::Uniform { nnz_per_row: 8 }, 2);
+        for v in Variant::ALL {
+            assert!(
+                estimate(v, &dense9, 4, 4) > estimate(v, &sparse9, 4, 4),
+                "{v:?}: more nonzeros must never estimate cheaper"
+            );
+        }
+    }
+}

@@ -16,15 +16,18 @@
 //!    sizes and inputs).
 //! 3. **Output preservation under backpressure.** With eager consumers
 //!    a tight capacity only delays words, never reorders or drops
-//!    them: all six library kernels produce bit-identical *outputs*
-//!    under an 8-word cap (cycles may grow; that is the point).
+//!    them: every library kernel either produces bit-identical
+//!    *outputs* under an 8-word cap (cycles may grow; that is the
+//!    point) or — for the buffer-hungry sparse dataflows — wedges
+//!    with a *classified* buffer deadlock naming the endpoint, never
+//!    silent corruption.
 
-use spada::harness::common::{output_words, scaled_binds, stage_random_inputs};
+use spada::harness::common::{output_words, scaled_binds, stage_kernel_inputs, stage_random_inputs};
 use spada::kernels;
 use spada::machine::{
     DirSet, Direction, DsdKind, DsdOp, DsdRef, Dtype, FieldAlloc, IoBinding, IoDir,
     MachineConfig, MachineProgram, MOp, PeClass, PortMap, RouteRule, RunReport, SExpr, SimError,
-    Simulator, TaskDef, TaskKind,
+    SimOptions, Simulator, TaskDef, TaskKind,
 };
 use spada::passes::Options;
 use spada::ptest::run_prop;
@@ -202,8 +205,9 @@ fn fixture_deadlocks_at_small_capacity_and_static_agrees() {
 /// at 1 and 4 worker threads.
 #[test]
 fn prop_finite_cap_at_peak_depth_is_bit_identical() {
-    const KERNELS: [&str; 6] =
-        ["chain_reduce", "broadcast", "tree_reduce", "two_phase_reduce", "gemv", "gemv_tree"];
+    // The whole registry, sparse SpMV variants included: the
+    // cap-at-peak guarantee is engine-level and kernel-agnostic.
+    let all = kernels::names();
 
     fn run_at(
         kernel: &str,
@@ -217,9 +221,10 @@ fn prop_finite_cap_at_peak_depth_is_bit_identical() {
         let cfg = cfg_with_cap(w, h, cap);
         let ck = kernels::compile(kernel, &binds, &cfg, &Options::default())
             .unwrap_or_else(|e| panic!("{kernel} g={g}: {e:#}"));
-        let mut sim = ck.simulator().unwrap();
-        sim.set_threads(threads);
-        stage_random_inputs(&mut sim, seed);
+        // Explicit options: an ambient SPADA_BUF_CAP must not fill the
+        // deliberately-unbounded baseline config.
+        let mut sim = ck.simulator_with(&SimOptions::default().threads(threads)).unwrap();
+        stage_kernel_inputs(&mut sim, kernel, g, k, seed).expect("staging the registry workload");
         let report = sim
             .run()
             .unwrap_or_else(|e| panic!("{kernel} g={g} cap={cap:?} threads={threads}: {e}"));
@@ -233,7 +238,7 @@ fn prop_finite_cap_at_peak_depth_is_bit_identical() {
         5,
         |r| {
             (
-                KERNELS[r.below(KERNELS.len() as u64) as usize],
+                all[r.below(all.len() as u64) as usize],
                 1 + r.below(16) as i64, // K
                 4i64,                   // grid dimension (tree kernels need a power of two)
                 r.next_u64(),
@@ -264,40 +269,59 @@ fn prop_finite_cap_at_peak_depth_is_bit_identical() {
     );
 }
 
-/// Backpressure preserves values: every library kernel completes under
-/// a tight 8-word endpoint cap with outputs bit-identical to the
-/// unbounded run (cycles may grow — consumers gate on delayed words —
-/// but nothing reorders or drops).
+/// Backpressure preserves values: every registry kernel under a tight
+/// 8-word endpoint cap either completes with outputs bit-identical to
+/// the unbounded run (cycles may grow — consumers gate on delayed
+/// words — but nothing reorders or drops) or, for the buffer-hungry
+/// sparse dataflows, wedges with a *classified* buffer deadlock that
+/// names a blocked endpoint — never a silent wrong answer.
 #[test]
 fn all_kernels_outputs_identical_under_backpressure() {
-    const KERNELS: [&str; 6] =
-        ["chain_reduce", "broadcast", "tree_reduce", "two_phase_reduce", "gemv", "gemv_tree"];
-    for kernel in KERNELS {
+    for kernel in kernels::names() {
         let (binds, w, h) = scaled_binds(kernel, 4, 16).expect("library kernel");
         let run = |cap: Option<u64>| {
             let cfg = cfg_with_cap(w, h, cap);
             let ck = kernels::compile(kernel, &binds, &cfg, &Options::default())
                 .unwrap_or_else(|e| panic!("{kernel}: {e:#}"));
-            let mut sim = ck.simulator().unwrap();
-            sim.set_threads(1);
-            stage_random_inputs(&mut sim, 0xCAB);
-            let report =
-                sim.run().unwrap_or_else(|e| panic!("{kernel} cap={cap:?}: {e}"));
-            (report, output_words(&sim))
+            // Explicit options: an ambient SPADA_BUF_CAP must not fill
+            // the deliberately-unbounded baseline config.
+            let mut sim = ck.simulator_with(&SimOptions::default().threads(1)).unwrap();
+            stage_kernel_inputs(&mut sim, kernel, 4, 16, 0xCAB).expect("staging");
+            let result = sim.run();
+            let outs = output_words(&sim);
+            (result, outs)
         };
         let (base, base_outs) = run(None);
-        let (capped, outs) = run(Some(8));
-        assert_eq!(outs, base_outs, "{kernel}: outputs must survive backpressure");
-        assert_eq!(
-            capped.metrics.wavelets, base.metrics.wavelets,
-            "{kernel}: traffic volume is capacity-independent"
-        );
-        assert!(
-            capped.cycles >= base.cycles,
-            "{kernel}: backpressure can only delay ({} < {})",
-            capped.cycles,
-            base.cycles
-        );
+        let base = base.unwrap_or_else(|e| panic!("{kernel} unbounded: {e}"));
+        match run(Some(8)) {
+            (Ok(capped), outs) => {
+                assert_eq!(outs, base_outs, "{kernel}: outputs must survive backpressure");
+                assert_eq!(
+                    capped.metrics.wavelets, base.metrics.wavelets,
+                    "{kernel}: traffic volume is capacity-independent"
+                );
+                assert!(
+                    capped.cycles >= base.cycles,
+                    "{kernel}: backpressure can only delay ({} < {})",
+                    capped.cycles,
+                    base.cycles
+                );
+            }
+            (Err(SimError::Deadlock(msg)), _) => {
+                // An under-provisioned cap may legitimately wedge a
+                // sparse dataflow — but only as a classified buffer
+                // deadlock naming the blocked endpoint.
+                assert!(
+                    msg.contains("endpoint full"),
+                    "{kernel}: capped wedge must be classified as a buffer deadlock: {msg}"
+                );
+                assert!(
+                    msg.contains("PE ("),
+                    "{kernel}: buffer-deadlock report must name an endpoint: {msg}"
+                );
+            }
+            (Err(e), _) => panic!("{kernel} cap=8: unexpected failure class: {e}"),
+        }
     }
 }
 

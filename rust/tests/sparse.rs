@@ -1,0 +1,312 @@
+//! Sparse subsystem, end to end: the seeded CSR generator, per-PE
+//! staging, the three SpMV dataflow variants against the CPU oracle,
+//! engine-equivalence (threads × vectorization), tight-buffer
+//! behaviour, and the adaptive selector's decision function.
+//!
+//! The simulator legs run the same 64×64-on-4×4 geometry as
+//! `spada bench --exp sparse`; the selector legs are pure unit tests
+//! on hand-built matrices whose partition criticals are computed by
+//! hand in the assertions.
+
+use spada::harness::common::output_words;
+use spada::kernels;
+use spada::machine::{MachineConfig, RunReport, SimError, SimOptions};
+use spada::passes::Options;
+use spada::sparse::{
+    self, estimate, features, outer_critical, rows_critical, seeded_x, select, spmv_ref,
+    variant_of, CsrMatrix, Profile, Variant,
+};
+
+/// Grid side and matrix size — the bench corpus geometry.
+const G: usize = 4;
+const SIZE: usize = 64;
+
+/// Seeded matrices covering every generator profile (the three bench
+/// classes plus two off-bench seeds, so tests don't only exercise the
+/// exact corpus the baseline was blessed on).
+fn matrices() -> Vec<(Profile, u64)> {
+    vec![
+        (Profile::Uniform { nnz_per_row: 8 }, 0xA11CE),
+        (Profile::PowerLaw { max_row: SIZE }, 0xB0B),
+        (Profile::Banded { half_width: 2 }, 0xC0FFEE),
+        (Profile::Uniform { nnz_per_row: 3 }, 0xD1CE),
+        (Profile::PowerLaw { max_row: SIZE / 2 }, 0xFACE),
+    ]
+}
+
+/// Stage, compile and run one variant under explicit [`SimOptions`]
+/// (never the ambient environment), returning the run result and the
+/// raw output words — captured even on failure, so deadlock legs can
+/// still inspect them.
+fn run_sparse(
+    v: Variant,
+    a: &CsrMatrix,
+    x: &[f32],
+    opts: &SimOptions,
+) -> (Result<RunReport, SimError>, Vec<(String, Vec<u32>)>) {
+    let staged = sparse::stage(v, a, x, G, G).expect("staging");
+    let cfg = MachineConfig::with_grid(G as i64, G as i64);
+    let ck = kernels::compile(v.kernel(), &staged.binds, &cfg, &Options::default())
+        .unwrap_or_else(|e| panic!("{}: {e:#}", v.kernel()));
+    let mut sim = ck.simulator_with(opts).unwrap();
+    staged.apply(&mut sim).unwrap();
+    let result = sim.run();
+    let outs = output_words(&sim);
+    (result, outs)
+}
+
+/// Decode the `y_out` words back to the result vector.
+fn y_of(outs: &[(String, Vec<u32>)]) -> Vec<f32> {
+    let (_, words) = outs.iter().find(|(n, _)| n == "y_out").expect("y_out staged");
+    words.iter().map(|&w| f32::from_bits(w)).collect()
+}
+
+/// Oracle comparison with the harness tolerance — the fabric
+/// accumulates partials in a different order than the f64 reference.
+fn assert_close(y: &[f32], want: &[f32], tag: &str) {
+    assert_eq!(y.len(), want.len(), "{tag}: output length");
+    for (r, (got, exp)) in y.iter().zip(want.iter()).enumerate() {
+        assert!(
+            (got - exp).abs() <= 1e-3 * (1.0 + exp.abs()),
+            "{tag}: y[{r}] = {got}, oracle {exp}"
+        );
+    }
+}
+
+/// Every variant reproduces the CPU CSR oracle on every generator
+/// profile.
+#[test]
+fn every_variant_matches_the_csr_oracle() {
+    for (profile, seed) in matrices() {
+        let a = sparse::generate(SIZE, SIZE, profile, seed);
+        let x = seeded_x(SIZE, seed ^ 0x5EED);
+        let want = spmv_ref(&a, &x);
+        for v in Variant::ALL {
+            let tag = format!("{}:{}", v.kernel(), profile.name());
+            let (res, outs) = run_sparse(v, &a, &x, &SimOptions::default().threads(1));
+            res.unwrap_or_else(|e| panic!("{tag}: {e}"));
+            assert_close(&y_of(&outs), &want, &tag);
+        }
+    }
+}
+
+/// Cross-engine bit-identity: the epoch-parallel engine (4 threads)
+/// and the per-element DSD interpreter (`vectorize(false)`) must both
+/// reproduce the classic 1-thread vectorized run exactly — full
+/// `RunReport` and raw output words, on every variant and class.
+#[test]
+fn engines_agree_across_threads_and_vectorization() {
+    for (profile, seed) in matrices() {
+        let a = sparse::generate(SIZE, SIZE, profile, seed);
+        let x = seeded_x(SIZE, seed ^ 0x5EED);
+        for v in Variant::ALL {
+            let tag = format!("{}:{}", v.kernel(), profile.name());
+            let (base, base_outs) = run_sparse(v, &a, &x, &SimOptions::default().threads(1));
+            let base = base.unwrap_or_else(|e| panic!("{tag}: {e}"));
+            for (threads, vec) in [(4, true), (1, false), (4, false)] {
+                let opts = SimOptions::default().threads(threads).vectorize(vec);
+                let (res, outs) = run_sparse(v, &a, &x, &opts);
+                let report = res
+                    .unwrap_or_else(|e| panic!("{tag} threads={threads} vec={vec}: {e}"));
+                assert_eq!(
+                    report, base,
+                    "{tag}: report diverged at threads={threads} vectorize={vec}"
+                );
+                assert_eq!(
+                    outs, base_outs,
+                    "{tag}: outputs diverged at threads={threads} vectorize={vec}"
+                );
+            }
+        }
+    }
+}
+
+/// A tight 8-word endpoint cap either completes with outputs
+/// bit-identical to the unbounded run, or wedges as a *classified*
+/// buffer deadlock naming the blocked endpoint — never a silent wrong
+/// answer. (Sparse partials are long, so sparse dataflows are exactly
+/// where an under-provisioned cap may legitimately wedge.)
+#[test]
+fn tight_buffer_cap_completes_bit_identical_or_classifies_the_wedge() {
+    for (profile, seed) in
+        [(Profile::Uniform { nnz_per_row: 8 }, 0xA11CE), (Profile::Banded { half_width: 2 }, 0xC0FFEE)]
+    {
+        let a = sparse::generate(SIZE, SIZE, profile, seed);
+        let x = seeded_x(SIZE, seed ^ 0x5EED);
+        for v in Variant::ALL {
+            let tag = format!("{}:{}", v.kernel(), profile.name());
+            let (base, base_outs) = run_sparse(v, &a, &x, &SimOptions::default().threads(1));
+            base.unwrap_or_else(|e| panic!("{tag} unbounded: {e}"));
+            let capped = SimOptions::default().threads(1).buf_cap(8);
+            match run_sparse(v, &a, &x, &capped) {
+                (Ok(_), outs) => {
+                    assert_eq!(outs, base_outs, "{tag}: outputs must survive backpressure");
+                }
+                (Err(SimError::Deadlock(msg)), _) => {
+                    assert!(
+                        msg.contains("endpoint full"),
+                        "{tag}: wedge must be classified as a buffer deadlock: {msg}"
+                    );
+                    assert!(
+                        msg.contains("PE ("),
+                        "{tag}: the report must name the blocked endpoint: {msg}"
+                    );
+                }
+                (Err(e), _) => panic!("{tag} cap=8: unexpected failure class: {e}"),
+            }
+        }
+    }
+}
+
+/// The generator is a pure function of `(dims, profile, seed)` and
+/// always emits well-formed CSR: monotone row pointers, strictly
+/// ascending in-range column indices.
+#[test]
+fn generator_is_deterministic_and_well_formed() {
+    for (profile, seed) in matrices() {
+        let a = sparse::generate(SIZE, SIZE, profile, seed);
+        let b = sparse::generate(SIZE, SIZE, profile, seed);
+        assert_eq!(a, b, "{}: same seed must be bit-identical", profile.name());
+        assert_eq!(a.rp.len(), SIZE + 1);
+        assert_eq!(a.rp[0], 0);
+        assert_eq!(*a.rp.last().unwrap() as usize, a.nnz());
+        assert_eq!(a.av.len(), a.nnz());
+        for r in 0..a.rows {
+            assert!(a.rp[r] <= a.rp[r + 1], "{}: rp monotone", profile.name());
+            let row = &a.ci[a.rp[r] as usize..a.rp[r + 1] as usize];
+            for w in row.windows(2) {
+                assert!(w[0] < w[1], "{}: row {r} columns strictly ascending", profile.name());
+            }
+            for &c in row {
+                assert!((c as usize) < a.cols, "{}: row {r} column in range", profile.name());
+            }
+        }
+    }
+    let c = sparse::generate(SIZE, SIZE, Profile::Uniform { nnz_per_row: 8 }, 1);
+    let d = sparse::generate(SIZE, SIZE, Profile::Uniform { nnz_per_row: 8 }, 2);
+    assert_ne!(c, d, "different seeds must differ");
+    assert_eq!(seeded_x(SIZE, 7), seeded_x(SIZE, 7));
+    assert_ne!(seeded_x(SIZE, 7), seeded_x(SIZE, 8));
+}
+
+/// Feature extraction on a hand-built 4×4 matrix with row lengths
+/// `[3, 1, 1, 1]` — every field is computed by hand here.
+#[test]
+fn features_of_a_hand_built_matrix() {
+    let a = CsrMatrix {
+        rows: 4,
+        cols: 4,
+        rp: vec![0, 3, 4, 5, 6],
+        ci: vec![0, 1, 3, 1, 2, 3],
+        av: vec![1.0; 6],
+    };
+    let f = features(&a);
+    assert_eq!(f.nnz, 6);
+    assert!((f.mean - 1.5).abs() < 1e-12);
+    // Population variance of [3, 1, 1, 1] around 1.5.
+    assert!((f.variance - 0.75).abs() < 1e-12);
+    // Max row length 3 over mean 1.5.
+    assert!((f.skew - 2.0).abs() < 1e-12);
+    // Row 0 holds column 3: |3 - 0|.
+    assert_eq!(f.bandwidth, 3);
+    // The generated classes order as documented: power-law is the most
+    // skewed, uniform the least.
+    let u = features(&sparse::generate(SIZE, SIZE, Profile::Uniform { nnz_per_row: 8 }, 0xA11CE));
+    let p = features(&sparse::generate(SIZE, SIZE, Profile::PowerLaw { max_row: SIZE }, 0xB0B));
+    assert!(p.skew > u.skew, "power-law skew {} must exceed uniform {}", p.skew, u.skew);
+}
+
+/// Partition criticals on the same hand-built matrix, 2×2 grid:
+/// row-stationary blocks put 3 nonzeros on PE (0,0) (rows 0–1 ×
+/// cols 0–1), while contiguous column slices peak at 2.
+#[test]
+fn partition_criticals_match_hand_computation() {
+    let a = CsrMatrix {
+        rows: 4,
+        cols: 4,
+        rp: vec![0, 3, 4, 5, 6],
+        ci: vec![0, 1, 3, 1, 2, 3],
+        av: vec![1.0; 6],
+    };
+    assert_eq!(rows_critical(&a, 2, 2), 3);
+    assert_eq!(outer_critical(&a, 2, 2), 2);
+}
+
+/// `select` is exactly the argmin of the closed-form estimates, in
+/// `Variant::ALL` order with first-wins ties.
+#[test]
+fn select_is_the_argmin_of_the_estimates() {
+    for (profile, seed) in matrices() {
+        let a = sparse::generate(SIZE, SIZE, profile, seed);
+        let (pick, ests) = select(&a, G, G);
+        let want: Vec<u64> = Variant::ALL.iter().map(|&v| estimate(v, &a, G, G)).collect();
+        assert_eq!(ests.to_vec(), want, "{}: reported estimates", profile.name());
+        let min = *ests.iter().min().unwrap();
+        assert_eq!(
+            estimate(pick, &a, G, G),
+            min,
+            "{}: pick must carry the smallest estimate",
+            profile.name()
+        );
+        let first = Variant::ALL[ests.iter().position(|&e| e == min).unwrap()];
+        assert_eq!(pick, first, "{}: ties resolve in Variant::ALL order", profile.name());
+    }
+}
+
+/// The selector's structural preference, on matrices whose criticals
+/// are trivial to compute by hand: a diagonal matrix keeps row blocks
+/// perfectly balanced (row-stationary wins), while an arrowhead
+/// concentrates a full row on one block PE (column slices win).
+#[test]
+fn selector_prefers_rows_on_balanced_and_outer_on_skewed_structure() {
+    let n = 16;
+    let diag = CsrMatrix {
+        rows: n,
+        cols: n,
+        rp: (0..=n as u32).collect(),
+        ci: (0..n as u32).collect(),
+        av: vec![1.0; n],
+    };
+    assert_eq!(select(&diag, 2, 2).0, Variant::Rows);
+
+    // Row 0 dense, rows 1.. diagonal: 15 of 31 nonzeros land on one
+    // row-partition PE, but column slices stay near-balanced.
+    let mut rp = vec![0u32, n as u32];
+    let mut ci: Vec<u32> = (0..n as u32).collect();
+    for r in 1..n {
+        ci.push(r as u32);
+        rp.push(ci.len() as u32);
+    }
+    let arrow = CsrMatrix { rows: n, cols: n, rp, ci, av: vec![1.0; 2 * n - 1] };
+    assert_eq!(rows_critical(&arrow, 2, 2), 15, "dense row + its quadrant's diagonal");
+    assert_eq!(outer_critical(&arrow, 2, 2), 8, "4-column slices stay near-balanced");
+    assert_eq!(select(&arrow, 2, 2).0, Variant::Outer);
+}
+
+/// Kernel-name mapping round-trips and rejects dense kernels.
+#[test]
+fn variant_names_round_trip() {
+    for v in Variant::ALL {
+        assert_eq!(variant_of(v.kernel()).unwrap(), v);
+    }
+    assert!(variant_of("gemv").is_err());
+    assert!(variant_of("spmv_nope").is_err());
+}
+
+/// The registry knows the sparse kernels: they compile from their
+/// `scaled_binds` recipes and are marked sparse, so every
+/// registry-driven suite (trace, buffers, properties, faults) covers
+/// them.
+#[test]
+fn registry_covers_the_sparse_kernels() {
+    for v in Variant::ALL {
+        let spec = kernels::spec(v.kernel()).expect("sparse kernel registered");
+        assert!(spec.sparse, "{} must be flagged sparse", v.kernel());
+        assert!(spec.grid_pow2, "{} instantiates on power-of-two grids", v.kernel());
+        let (binds, w, h) = spec.scaled_binds(4, 8).expect("registry recipe");
+        let cfg = MachineConfig::with_grid(w, h);
+        kernels::compile(v.kernel(), &binds, &cfg, &Options::default())
+            .unwrap_or_else(|e| panic!("{}: {e:#}", v.kernel()));
+    }
+    assert!(!kernels::dense_names().iter().any(|n| n.starts_with("spmv_")));
+}
